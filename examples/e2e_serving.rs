@@ -1,0 +1,78 @@
+//! End-to-end validation (DESIGN.md §6): load the real TinyQwen PJRT
+//! artifacts, register a multi-agent application, and serve batched
+//! requests through the full TokenCake stack — frontend graph → pressure
+//! snapshot → spatial reservations → temporal offload/upload → real
+//! prefill/decode on the AOT-compiled model — reporting latency and
+//! throughput.
+//!
+//!     make artifacts && cargo run --release --example e2e_serving
+//!
+//! All three layers execute for real: L1 Pallas kernels (inside the HLO),
+//! L2 TinyQwen, L3 the Rust coordinator. Python is not running.
+
+use tokencake::config::Mode;
+use tokencake::engine::real::{real_engine_config, RealEngine};
+use tokencake::graph::{CallSpec, FuncKind, GraphBuilder};
+
+fn small_pipeline() -> tokencake::graph::AppGraph {
+    // A compact 3-agent pipeline with one function call, sized so each
+    // agent fits a 256-token TinyQwen slot.
+    let mut gb = GraphBuilder::new("e2e-pipeline");
+    let planner = gb.agent("planner", "planner", 24, &[16]);
+    // Critical branch: heavy worker with a long web-search stall.
+    let worker = gb.agent_with_call(
+        "worker",
+        "worker",
+        32,
+        &[24, 16],
+        CallSpec::new(FuncKind::WebSearch).with_predict_time_us(2_500_000),
+    );
+    // Non-critical side branch: its stalled cache is the offload target.
+    let logger = gb.agent_with_call(
+        "logger",
+        "logger",
+        16,
+        &[8, 8],
+        CallSpec::new(FuncKind::UserConfirm).with_predict_time_us(6_000_000),
+    );
+    gb.tune_last(|s| s.static_priority = 0.1);
+    let summarizer = gb.agent("summarizer", "summarizer", 24, &[24]);
+    gb.edge(planner, worker);
+    gb.edge(planner, logger);
+    gb.edge(worker, summarizer);
+    gb.edge(logger, summarizer);
+    gb.build().unwrap()
+}
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = tokencake::runtime::artifacts_dir();
+    if !artifacts.join("manifest.txt").exists() {
+        eprintln!("artifacts not built — run `make artifacts` first");
+        std::process::exit(1);
+    }
+
+    let graph = small_pipeline();
+    println!("=== TokenCake end-to-end serving (real PJRT TinyQwen) ===");
+    println!(
+        "app '{}': {} agents, critical path {:?}",
+        graph.name,
+        graph.len(),
+        graph
+            .nodes()
+            .filter(|n| graph.is_critical(n.id))
+            .map(|n| n.name.as_str())
+            .collect::<Vec<_>>()
+    );
+
+    for mode in [Mode::Vllm, Mode::TokenCake] {
+        let cfg = real_engine_config(mode, 42);
+        let mut engine = RealEngine::new(cfg, &artifacts)?;
+        // 12 apps → 48 agents over 8 slots: real contention.
+        let report = engine.serve(&graph, 12, 400_000)?;
+        println!("[{}] {}", mode.name(), report.summary());
+        assert_eq!(report.metrics.apps_completed, 12);
+        assert!(report.tokens_generated > 0);
+    }
+    println!("e2e OK — all layers composed");
+    Ok(())
+}

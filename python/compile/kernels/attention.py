@@ -1,0 +1,279 @@
+"""Layer-1 Pallas attention kernels for TokenCake's TinyQwen substrate.
+
+Three kernels cover the serving hot path:
+
+  * ``flash_prefill``   — blocked causal attention with online softmax
+                          (flash-attention schedule), used in the prefill
+                          artifact.
+  * ``masked_decode``   — single-token decode attention over a dense KV cache
+                          with per-sequence valid lengths, used in the decode
+                          artifact.
+  * ``paged_decode``    — the paper-faithful layout: KV lives in 16-token
+                          pages indexed via a per-sequence block table
+                          (vLLM/TokenCake PagedAttention), with the block
+                          table delivered through scalar prefetch so the
+                          BlockSpec index_map performs the page gather.
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): the CUDA formulation assigns
+a threadblock per (sequence, head) and stages KV tiles through shared memory.
+Here each grid step owns a (q-tile | sequence, head) and BlockSpec stages KV
+tiles through VMEM; online-softmax accumulators live in VMEM scratch. Shapes
+are padded to lane multiples (last dim 64/128) so the MXU sees aligned
+matmuls. ``interpret=True`` is mandatory on CPU PJRT — real TPU lowering
+emits Mosaic custom-calls the CPU plugin cannot execute.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# flash_prefill
+# ---------------------------------------------------------------------------
+
+
+def _flash_prefill_kernel(q_ref, k_ref, v_ref, o_ref, *, block_q, block_k,
+                          seq_len, scale):
+    """One grid step handles one (batch*head, q-tile) pair.
+
+    q_ref: [block_q, D]; k_ref, v_ref: [seq_len, D] (whole KV row staged —
+    small for the tile sizes we compile); o_ref: [block_q, D]. Online softmax
+    over k-tiles with causal masking; tiles strictly above the diagonal are
+    skipped entirely.
+    """
+    q_tile = pl.program_id(1)
+    q = q_ref[...].astype(jnp.float32) * scale
+    D = q.shape[-1]
+
+    m0 = jnp.full((block_q,), NEG_INF, dtype=jnp.float32)
+    l0 = jnp.zeros((block_q,), dtype=jnp.float32)
+    acc0 = jnp.zeros((block_q, D), dtype=jnp.float32)
+
+    q_pos = q_tile * block_q + jax.lax.iota(jnp.int32, block_q)
+    num_k_tiles = seq_len // block_k
+
+    def body(i, carry):
+        m, l, acc = carry
+        k = jax.lax.dynamic_slice_in_dim(k_ref[...], i * block_k, block_k,
+                                         axis=0).astype(jnp.float32)
+        v = jax.lax.dynamic_slice_in_dim(v_ref[...], i * block_k, block_k,
+                                         axis=0).astype(jnp.float32)
+        s = q @ k.T  # [block_q, block_k]
+        k_pos = i * block_k + jax.lax.iota(jnp.int32, block_k)
+        causal = q_pos[:, None] >= k_pos[None, :]
+        s = jnp.where(causal, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[:, None] + p @ v
+        return m_new, l_new, acc_new
+
+    # Last KV tile that can contain in-range keys for this q-tile.
+    last = jnp.minimum(((q_tile + 1) * block_q + block_k - 1) // block_k,
+                       num_k_tiles)
+    m, l, acc = jax.lax.fori_loop(0, last, body, (m0, l0, acc0))
+    o_ref[...] = (acc / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_prefill(q, k, v, *, block_q=64, block_k=64, scale=None,
+                  interpret=True):
+    """Causal flash attention. q, k, v: [B, H, T, D] -> [B, H, T, D]."""
+    B, H, T, D = q.shape
+    scale = scale if scale is not None else 1.0 / (D**0.5)
+    block_q = min(block_q, T)
+    block_k = min(block_k, T)
+    assert T % block_q == 0 and T % block_k == 0, (T, block_q, block_k)
+
+    qf = q.reshape(B * H, T, D)
+    kf = k.reshape(B * H, T, D)
+    vf = v.reshape(B * H, T, D)
+
+    out = pl.pallas_call(
+        functools.partial(_flash_prefill_kernel, block_q=block_q,
+                          block_k=block_k, seq_len=T, scale=scale),
+        grid=(B * H, T // block_q),
+        in_specs=[
+            pl.BlockSpec((None, block_q, D), lambda bh, qt: (bh, qt, 0)),
+            pl.BlockSpec((None, T, D), lambda bh, qt: (bh, 0, 0)),
+            pl.BlockSpec((None, T, D), lambda bh, qt: (bh, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, block_q, D), lambda bh, qt: (bh, qt, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, T, D), q.dtype),
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(B, H, T, D)
+
+
+# ---------------------------------------------------------------------------
+# masked_decode
+# ---------------------------------------------------------------------------
+
+
+def _masked_decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, *, seq_len,
+                          block_k, scale):
+    """One grid step handles one (batch, head).
+
+    q_ref: [D]; k_ref, v_ref: [seq_len, D]; len_ref: [1] int32 (valid length);
+    o_ref: [D]. Online softmax over KV tiles with a length mask.
+    """
+    q = q_ref[...].astype(jnp.float32) * scale
+    valid = len_ref[0]
+    D = q.shape[-1]
+
+    m0 = jnp.float32(NEG_INF)
+    l0 = jnp.float32(0.0)
+    acc0 = jnp.zeros((D,), dtype=jnp.float32)
+
+    def body(i, carry):
+        m, l, acc = carry
+        k = jax.lax.dynamic_slice_in_dim(k_ref[...], i * block_k, block_k,
+                                         axis=0).astype(jnp.float32)
+        v = jax.lax.dynamic_slice_in_dim(v_ref[...], i * block_k, block_k,
+                                         axis=0).astype(jnp.float32)
+        s = k @ q  # [block_k]
+        pos = i * block_k + jax.lax.iota(jnp.int32, block_k)
+        s = jnp.where(pos < valid, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max())
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum()
+        acc_new = acc * corr + p @ v
+        return m_new, l_new, acc_new
+
+    m, l, acc = jax.lax.fori_loop(0, seq_len // block_k, body, (m0, l0, acc0))
+    o_ref[...] = (acc / l).astype(o_ref.dtype)
+
+
+def masked_decode(q, k_cache, v_cache, lens, *, block_k=64, scale=None,
+                  interpret=True):
+    """Single-token decode attention over a dense cache.
+
+    q: [B, H, D]; k_cache, v_cache: [B, S, H, D]; lens: [B] int32.
+    Returns [B, H, D].
+    """
+    B, S, H, D = k_cache.shape
+    scale = scale if scale is not None else 1.0 / (D**0.5)
+    block_k = min(block_k, S)
+    assert S % block_k == 0, (S, block_k)
+
+    # [B, H, S, D] so a (b, h) grid step owns a contiguous KV row.
+    kt = k_cache.transpose(0, 2, 1, 3)
+    vt = v_cache.transpose(0, 2, 1, 3)
+
+    out = pl.pallas_call(
+        functools.partial(_masked_decode_kernel, seq_len=S, block_k=block_k,
+                          scale=scale),
+        grid=(B, H),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, h: (b,)),
+            pl.BlockSpec((None, None, D), lambda b, h: (b, h, 0)),
+            pl.BlockSpec((None, None, S, D), lambda b, h: (b, h, 0, 0)),
+            pl.BlockSpec((None, None, S, D), lambda b, h: (b, h, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, None, D), lambda b, h: (b, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, D), q.dtype),
+        interpret=interpret,
+    )(lens.astype(jnp.int32), q, kt, vt)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# paged_decode
+# ---------------------------------------------------------------------------
+
+
+def _paged_decode_kernel(table_ref, len_ref, q_ref, kp_ref, vp_ref, o_ref,
+                         m_ref, l_ref, acc_ref, *, page, pages_per_seq,
+                         scale):
+    """Grid (B, H, pages_per_seq); the page axis accumulates online softmax.
+
+    table_ref/len_ref are scalar-prefetch refs (whole arrays); kp_ref/vp_ref
+    are the [page, D] tile of the page chosen by the block-table index_map.
+    Scratch m/l/acc carry softmax state across page steps of one (b, h).
+    """
+    b = pl.program_id(0)
+    p = pl.program_id(2)
+
+    @pl.when(p == 0)
+    def _init():
+        m_ref[0] = NEG_INF
+        l_ref[0] = 0.0
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[...].astype(jnp.float32) * scale  # [D]
+    k = kp_ref[...].astype(jnp.float32)  # [page, D]
+    v = vp_ref[...].astype(jnp.float32)
+    valid = len_ref[b]
+
+    s = k @ q  # [page]
+    pos = p * page + jax.lax.iota(jnp.int32, page)
+    s = jnp.where(pos < valid, s, NEG_INF)
+
+    m_prev = m_ref[0]
+    m_new = jnp.maximum(m_prev, s.max())
+    pexp = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    m_ref[0] = m_new
+    l_ref[0] = l_ref[0] * corr + pexp.sum()
+    acc_ref[...] = acc_ref[...] * corr + pexp @ v
+
+    @pl.when(p == pages_per_seq - 1)
+    def _finalize():
+        o_ref[...] = (acc_ref[...] / l_ref[0]).astype(o_ref.dtype)
+
+
+def paged_decode(q, k_pages, v_pages, block_table, lens, *, scale=None,
+                 interpret=True):
+    """PagedAttention-style decode: KV in fixed pages + per-seq block table.
+
+    The block table is fed through scalar prefetch so the KV BlockSpec
+    index_map resolves ``table[b, p]`` — the page gather happens in the
+    HBM→VMEM pipeline, exactly how the threadblock-indirection works on GPU.
+
+    q: [B, H, D]; k_pages, v_pages: [P, page, H, D];
+    block_table: [B, pages_per_seq] int32; lens: [B] int32. Returns [B, H, D].
+    """
+    B, H, D = q.shape
+    P, page, Hk, Dk = k_pages.shape
+    assert (H, D) == (Hk, Dk), (q.shape, k_pages.shape)
+    _, pages_per_seq = block_table.shape
+    scale = scale if scale is not None else 1.0 / (D**0.5)
+
+    # [P, H, page, D] so one (page-index, head) pair is a contiguous tile.
+    kp = k_pages.transpose(0, 2, 1, 3)
+    vp = v_pages.transpose(0, 2, 1, 3)
+
+    def kv_map(b, h, p, table, lens):
+        return (table[b, p], h, 0, 0)
+
+    out = pl.pallas_call(
+        functools.partial(_paged_decode_kernel, page=page,
+                          pages_per_seq=pages_per_seq, scale=scale),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(B, H, pages_per_seq),
+            in_specs=[
+                pl.BlockSpec((None, None, D),
+                             lambda b, h, p, table, lens: (b, h, 0)),
+                pl.BlockSpec((None, None, page, D), kv_map),
+                pl.BlockSpec((None, None, page, D), kv_map),
+            ],
+            out_specs=pl.BlockSpec((None, None, D),
+                                   lambda b, h, p, table, lens: (b, h, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((1,), jnp.float32),
+                pltpu.VMEM((1,), jnp.float32),
+                pltpu.VMEM((D,), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, H, D), q.dtype),
+        interpret=interpret,
+    )(block_table.astype(jnp.int32), lens.astype(jnp.int32), q, kp, vp)
+    return out

@@ -1,0 +1,61 @@
+"""Pure-jnp reference oracles for the Pallas kernels (Layer 1 correctness).
+
+Every kernel in this package has a reference implementation here; pytest
+(python/tests/test_kernels.py) sweeps shapes/dtypes with hypothesis and
+asserts allclose between the Pallas output (interpret=True) and these.
+"""
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def ref_flash_prefill(q, k, v, scale=None):
+    """Causal self-attention.
+
+    q, k, v: [B, H, T, D] -> out [B, H, T, D]
+    """
+    B, H, T, D = q.shape
+    scale = scale if scale is not None else 1.0 / (D**0.5)
+    scores = jnp.einsum("bhtd,bhsd->bhts", q, k) * scale
+    causal = jnp.tril(jnp.ones((T, T), dtype=bool))
+    scores = jnp.where(causal[None, None], scores, NEG_INF)
+    w = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    w = w / w.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bhts,bhsd->bhtd", w, v).astype(q.dtype)
+
+
+def ref_masked_decode(q, k_cache, v_cache, lens, scale=None):
+    """Single-token decode attention against a dense cache with valid lengths.
+
+    q: [B, H, D]; k_cache, v_cache: [B, S, H, D]; lens: [B] int32 — number of
+    valid cache entries per sequence (the query attends to positions < lens[b]).
+    Returns [B, H, D].
+    """
+    B, S, H, D = k_cache.shape
+    scale = scale if scale is not None else 1.0 / (D**0.5)
+    scores = jnp.einsum("bhd,bshd->bhs", q, k_cache) * scale
+    mask = jnp.arange(S)[None, :] < lens[:, None]  # [B, S]
+    scores = jnp.where(mask[:, None, :], scores, NEG_INF)
+    w = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    w = w / w.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bhs,bshd->bhd", w, v_cache).astype(q.dtype)
+
+
+def ref_paged_decode(q, k_pages, v_pages, block_table, lens, scale=None):
+    """Paged single-token decode attention (the paper's KV layout: 16-token
+    blocks indexed through a per-sequence block table).
+
+    q: [B, H, D]; k_pages, v_pages: [P, page, H, D];
+    block_table: [B, pages_per_seq] int32; lens: [B] int32.
+    Returns [B, H, D].
+    """
+    B, H, D = q.shape
+    _, page, _, _ = k_pages.shape
+    # Gather each sequence's pages into a dense cache, then reuse the dense ref.
+    k_dense = k_pages[block_table]  # [B, pages_per_seq, page, H, D]
+    v_dense = v_pages[block_table]
+    B_, n, p, H_, D_ = k_dense.shape
+    k_dense = k_dense.reshape(B_, n * p, H_, D_)
+    v_dense = v_dense.reshape(B_, n * p, H_, D_)
+    return ref_masked_decode(q, k_dense, v_dense, lens, scale)

@@ -1,0 +1,262 @@
+"""Layer-2 JAX model: TinyQwen — a Qwen2-style decoder substrate.
+
+This is the serving substrate for TokenCake's end-to-end path: a small
+transformer (RMSNorm → attention(+RoPE) → SwiGLU MLP) whose attention hot
+spots are the Layer-1 Pallas kernels in ``kernels/attention.py``.
+
+Two entry points get AOT-lowered by ``aot.py``:
+
+  * ``prefill(params, tokens[1,T], true_len[1])``
+        -> (last_logits[1,V], k_cache[L,T,H,D], v_cache[L,T,H,D])
+  * ``decode_step(params, tokens[B], k_cache[L,B,S,H,D], v_cache, lens[B])``
+        -> (logits[B,V], k_cache', v_cache')
+
+Shapes are static (one compiled executable per variant); the Rust
+coordinator pads prompts to T and manages per-slot ``lens``. Python never
+runs at serve time.
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.attention import flash_prefill, masked_decode
+
+
+class ModelConfig:
+    """TinyQwen hyperparameters. Mirrored in artifacts/manifest.txt."""
+
+    def __init__(self, vocab=512, d_model=128, n_layers=2, n_heads=2,
+                 head_dim=64, d_ff=256, max_len=256, rope_theta=10000.0,
+                 norm_eps=1e-6):
+        self.vocab = vocab
+        self.d_model = d_model
+        self.n_layers = n_layers
+        self.n_heads = n_heads
+        self.head_dim = head_dim
+        self.d_ff = d_ff
+        self.max_len = max_len
+        self.rope_theta = rope_theta
+        self.norm_eps = norm_eps
+
+    @property
+    def d_attn(self):
+        return self.n_heads * self.head_dim
+
+
+DEFAULT_CONFIG = ModelConfig()
+
+
+# ---------------------------------------------------------------------------
+# Parameters — a flat, ordered list of (name, array) so the AOT manifest and
+# the Rust loader agree on input ordering without a pytree protocol.
+# ---------------------------------------------------------------------------
+
+
+def param_spec(cfg: ModelConfig):
+    """Ordered [(name, shape)] for every weight tensor."""
+    spec = [("embed", (cfg.vocab, cfg.d_model))]
+    for i in range(cfg.n_layers):
+        p = f"layer{i}."
+        spec += [
+            (p + "attn_norm", (cfg.d_model,)),
+            (p + "wq", (cfg.d_model, cfg.d_attn)),
+            (p + "wk", (cfg.d_model, cfg.d_attn)),
+            (p + "wv", (cfg.d_model, cfg.d_attn)),
+            (p + "wo", (cfg.d_attn, cfg.d_model)),
+            (p + "mlp_norm", (cfg.d_model,)),
+            (p + "w_gate", (cfg.d_model, cfg.d_ff)),
+            (p + "w_up", (cfg.d_model, cfg.d_ff)),
+            (p + "w_down", (cfg.d_ff, cfg.d_model)),
+        ]
+    spec += [("final_norm", (cfg.d_model,)),
+             ("lm_head", (cfg.d_model, cfg.vocab))]
+    return spec
+
+
+def init_params(cfg: ModelConfig, seed=0):
+    """Deterministic scaled-normal init; list of arrays in param_spec order."""
+    key = jax.random.PRNGKey(seed)
+    params = []
+    for idx, (name, shape) in enumerate(param_spec(cfg)):
+        k = jax.random.fold_in(key, idx)
+        if len(shape) == 1:
+            params.append(jnp.ones(shape, jnp.float32))
+        else:
+            scale = 1.0 / math.sqrt(shape[0])
+            params.append(jax.random.normal(k, shape, jnp.float32) * scale)
+    return params
+
+
+def params_by_name(cfg: ModelConfig, params):
+    return {name: p for (name, _), p in zip(param_spec(cfg), params)}
+
+
+# ---------------------------------------------------------------------------
+# Building blocks
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x, w, eps):
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * w
+
+
+def rope_freqs(cfg: ModelConfig, positions):
+    """positions: [...]; returns (cos, sin) of shape [..., head_dim//2]."""
+    half = cfg.head_dim // 2
+    inv = 1.0 / (cfg.rope_theta
+                 ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions[..., None].astype(jnp.float32) * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x: [..., head_dim]; cos/sin broadcastable to [..., head_dim//2]."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos],
+                           axis=-1)
+
+
+def swiglu(x, wg, wu, wd):
+    return (jax.nn.silu(x @ wg) * (x @ wu)) @ wd
+
+
+# ---------------------------------------------------------------------------
+# Prefill
+# ---------------------------------------------------------------------------
+
+
+def prefill(params, tokens, true_len, cfg: ModelConfig = DEFAULT_CONFIG,
+            interpret=True):
+    """Process a full (padded) prompt; return last valid logits + KV cache.
+
+    tokens: [1, T] int32 padded to T; true_len: [1] int32 — number of valid
+    prompt tokens. Causality makes tail padding inert for positions
+    < true_len. Returns (logits[1, V], k_cache[L, T, H, D], v_cache[...]).
+    """
+    P = params_by_name(cfg, params)
+    B, T = tokens.shape
+    H, D = cfg.n_heads, cfg.head_dim
+
+    x = P["embed"][tokens]  # [1, T, d_model]
+    pos = jnp.arange(T, dtype=jnp.int32)
+    cos, sin = rope_freqs(cfg, pos)  # [T, D/2]
+
+    k_layers, v_layers = [], []
+    for i in range(cfg.n_layers):
+        p = f"layer{i}."
+        h = rmsnorm(x, P[p + "attn_norm"], cfg.norm_eps)
+        q = (h @ P[p + "wq"]).reshape(B, T, H, D)
+        k = (h @ P[p + "wk"]).reshape(B, T, H, D)
+        v = (h @ P[p + "wv"]).reshape(B, T, H, D)
+        q = apply_rope(q, cos[None, :, None, :], sin[None, :, None, :])
+        k = apply_rope(k, cos[None, :, None, :], sin[None, :, None, :])
+        # Layer-1 kernel: [B, H, T, D] layout.
+        attn = flash_prefill(q.transpose(0, 2, 1, 3),
+                             k.transpose(0, 2, 1, 3),
+                             v.transpose(0, 2, 1, 3), interpret=interpret)
+        attn = attn.transpose(0, 2, 1, 3).reshape(B, T, H * D)
+        x = x + attn @ P[p + "wo"]
+        h = rmsnorm(x, P[p + "mlp_norm"], cfg.norm_eps)
+        x = x + swiglu(h, P[p + "w_gate"], P[p + "w_up"], P[p + "w_down"])
+        k_layers.append(k[0])  # [T, H, D]
+        v_layers.append(v[0])
+
+    x = rmsnorm(x, P["final_norm"], cfg.norm_eps)
+    logits = x @ P["lm_head"]  # [1, T, V]
+    last = jax.lax.dynamic_slice_in_dim(logits, true_len[0] - 1, 1, axis=1)
+    return (last[:, 0, :], jnp.stack(k_layers), jnp.stack(v_layers))
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+
+def decode_step(params, tokens, k_cache, v_cache, lens,
+                cfg: ModelConfig = DEFAULT_CONFIG, interpret=True):
+    """One batched decode step against a dense per-slot KV cache.
+
+    tokens: [B] int32 (the previously sampled token per slot);
+    k_cache, v_cache: [L, B, S, H, D]; lens: [B] int32 — tokens already in
+    the cache (the new token is written at position lens[b]).
+    Returns (logits[B, V], k_cache', v_cache'). Inactive slots produce
+    garbage logits that the coordinator ignores.
+    """
+    P = params_by_name(cfg, params)
+    B = tokens.shape[0]
+    L, _, S, H, D = k_cache.shape
+
+    x = P["embed"][tokens]  # [B, d_model]
+    cos, sin = rope_freqs(cfg, lens)  # [B, D/2]
+
+    new_k, new_v = [], []
+    for i in range(cfg.n_layers):
+        p = f"layer{i}."
+        h = rmsnorm(x, P[p + "attn_norm"], cfg.norm_eps)
+        q = (h @ P[p + "wq"]).reshape(B, H, D)
+        k = (h @ P[p + "wk"]).reshape(B, H, D)
+        v = (h @ P[p + "wv"]).reshape(B, H, D)
+        q = apply_rope(q, cos[:, None, :], sin[:, None, :])
+        k = apply_rope(k, cos[:, None, :], sin[:, None, :])
+
+        # Write the new K/V at position lens[b] for each slot (overwriting
+        # any stale value so slot reuse is safe).
+        write = jnp.arange(S)[None, :] == lens[:, None]  # [B, S]
+        kc = jnp.where(write[:, :, None, None], k[:, None, :, :], k_cache[i])
+        vc = jnp.where(write[:, :, None, None], v[:, None, :, :], v_cache[i])
+
+        # Layer-1 kernel over the updated cache; query sees lens[b]+1 keys.
+        attn = masked_decode(q, kc, vc, lens + 1, interpret=interpret)
+        x = x + attn.reshape(B, H * D) @ P[p + "wo"]
+        h = rmsnorm(x, P[p + "mlp_norm"], cfg.norm_eps)
+        x = x + swiglu(h, P[p + "w_gate"], P[p + "w_up"], P[p + "w_down"])
+        new_k.append(kc)
+        new_v.append(vc)
+
+    x = rmsnorm(x, P["final_norm"], cfg.norm_eps)
+    logits = x @ P["lm_head"]  # [B, V]
+    return logits, jnp.stack(new_k), jnp.stack(new_v)
+
+
+# ---------------------------------------------------------------------------
+# Reference full-context forward (oracle for prefill/decode equivalence)
+# ---------------------------------------------------------------------------
+
+
+def full_forward_ref(params, tokens, cfg: ModelConfig = DEFAULT_CONFIG):
+    """Dense causal forward over [1, T] tokens -> logits [1, T, V].
+
+    Pure jnp (no Pallas): the oracle that prefill+decode must match.
+    """
+    from .kernels.ref import ref_flash_prefill
+
+    P = params_by_name(cfg, params)
+    B, T = tokens.shape
+    H, D = cfg.n_heads, cfg.head_dim
+
+    x = P["embed"][tokens]
+    pos = jnp.arange(T, dtype=jnp.int32)
+    cos, sin = rope_freqs(cfg, pos)
+
+    for i in range(cfg.n_layers):
+        p = f"layer{i}."
+        h = rmsnorm(x, P[p + "attn_norm"], cfg.norm_eps)
+        q = (h @ P[p + "wq"]).reshape(B, T, H, D)
+        k = (h @ P[p + "wk"]).reshape(B, T, H, D)
+        v = (h @ P[p + "wv"]).reshape(B, T, H, D)
+        q = apply_rope(q, cos[None, :, None, :], sin[None, :, None, :])
+        k = apply_rope(k, cos[None, :, None, :], sin[None, :, None, :])
+        attn = ref_flash_prefill(q.transpose(0, 2, 1, 3),
+                                 k.transpose(0, 2, 1, 3),
+                                 v.transpose(0, 2, 1, 3))
+        attn = attn.transpose(0, 2, 1, 3).reshape(B, T, H * D)
+        x = x + attn @ P[p + "wo"]
+        h = rmsnorm(x, P[p + "mlp_norm"], cfg.norm_eps)
+        x = x + swiglu(h, P[p + "w_gate"], P[p + "w_up"], P[p + "w_down"])
+
+    x = rmsnorm(x, P["final_norm"], cfg.norm_eps)
+    return x @ P["lm_head"]

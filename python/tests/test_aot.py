@@ -1,0 +1,95 @@
+"""AOT pipeline sanity: manifest/params consistency and HLO-text validity.
+
+These run against the generated artifacts when present (`make artifacts`),
+and regenerate the manifest pieces in-memory otherwise.
+"""
+
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from compile import aot, model as M
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+CFG = M.DEFAULT_CONFIG
+
+
+def test_param_manifest_roundtrip(tmp_path):
+    params = M.init_params(CFG, seed=0)
+    entries = aot.write_params(CFG, params, str(tmp_path))
+    aot.write_manifest(CFG, entries, str(tmp_path))
+
+    data = open(tmp_path / "params.bin", "rb").read()
+    total = sum(int(np.prod(s)) for _, s in M.param_spec(CFG))
+    assert len(data) == total * 4
+
+    # Re-read each tensor at its manifest offset and compare.
+    for (name, shape, offset), arr in zip(entries, params):
+        n = int(np.prod(shape))
+        back = np.frombuffer(data, dtype="<f4", count=n, offset=offset)
+        np.testing.assert_array_equal(back, np.asarray(arr).ravel())
+
+    manifest = open(tmp_path / "manifest.txt").read()
+    assert "config vocab=512" in manifest
+    assert manifest.count("param ") == len(entries)
+    assert "artifact prefill" in manifest
+    assert "artifact decode" in manifest
+
+
+def test_params_deterministic():
+    a = M.init_params(CFG, seed=0)
+    b = M.init_params(CFG, seed=0)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x, y)
+
+
+def _hlo_or_skip(name):
+    path = os.path.join(ART, name)
+    if not os.path.exists(path):
+        pytest.skip(f"{name} not built (run `make artifacts`)")
+    return open(path).read()
+
+
+@pytest.mark.parametrize("name,n_inputs", [
+    ("prefill_t128.hlo.txt", len(M.param_spec(CFG)) + 2),
+    ("decode_b8.hlo.txt", len(M.param_spec(CFG)) + 4),
+    ("paged_attn.hlo.txt", 5),
+])
+def test_hlo_text_entry_signature(name, n_inputs):
+    text = _hlo_or_skip(name)
+    assert "ENTRY" in text
+    # Every parameter appears as parameter(k) exactly once.
+    for k in range(n_inputs):
+        assert f"parameter({k})" in text, f"missing parameter({k}) in {name}"
+    assert f"parameter({n_inputs})" not in text
+    # Tuple-rooted (lowered with return_tuple=True).
+    assert "ROOT" in text
+
+
+def test_hlo_no_custom_calls():
+    """interpret=True must lower Pallas to plain HLO — a Mosaic custom-call
+    would be unloadable by the CPU PJRT client."""
+    for name in ("prefill_t128.hlo.txt", "decode_b8.hlo.txt",
+                 "paged_attn.hlo.txt"):
+        text = _hlo_or_skip(name)
+        assert "mosaic" not in text.lower(), name
+
+
+def test_manifest_matches_artifacts():
+    path = os.path.join(ART, "manifest.txt")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built")
+    lines = open(path).read().splitlines()
+    cfg_line = [l for l in lines if l.startswith("config ")][0]
+    kv = dict(p.split("=") for p in cfg_line.split()[1:])
+    assert int(kv["vocab"]) == CFG.vocab
+    assert int(kv["n_layers"]) == CFG.n_layers
+    assert int(kv["decode_batch"]) == aot.DECODE_BATCH
+    n_params = len([l for l in lines if l.startswith("param ")])
+    assert n_params == len(M.param_spec(CFG))
+    size = os.path.getsize(os.path.join(ART, "params.bin"))
+    total = sum(int(np.prod(s)) for _, s in M.param_spec(CFG))
+    assert size == total * 4

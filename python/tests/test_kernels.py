@@ -1,0 +1,210 @@
+"""Layer-1 correctness: Pallas kernels (interpret=True) vs pure-jnp oracles.
+
+Hypothesis sweeps shapes/dtypes; every property asserts allclose against
+ref.py. This is the core numeric signal for the whole stack — the AOT
+artifacts embed exactly these kernels.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention as A
+from compile.kernels import ref as R
+
+jax.config.update("jax_platform_name", "cpu")
+
+SETTINGS = dict(max_examples=8, deadline=None)
+
+
+def rand(key, shape, dtype):
+    x = jax.random.normal(key, shape, jnp.float32)
+    return x.astype(dtype)
+
+
+def tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else \
+        dict(rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# flash_prefill
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.sampled_from([1, 2]),
+    h=st.sampled_from([1, 2, 4]),
+    t=st.sampled_from([64, 128, 256]),
+    d=st.sampled_from([32, 64]),
+    block_q=st.sampled_from([32, 64]),
+    block_k=st.sampled_from([32, 64]),
+    dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+    seed=st.integers(0, 2**16),
+)
+def test_flash_prefill_matches_ref(b, h, t, d, block_q, block_k, dtype, seed):
+    key = jax.random.PRNGKey(seed)
+    q = rand(jax.random.fold_in(key, 0), (b, h, t, d), dtype)
+    k = rand(jax.random.fold_in(key, 1), (b, h, t, d), dtype)
+    v = rand(jax.random.fold_in(key, 2), (b, h, t, d), dtype)
+    out = A.flash_prefill(q, k, v, block_q=block_q, block_k=block_k)
+    ref = R.ref_flash_prefill(q.astype(jnp.float32), k.astype(jnp.float32),
+                              v.astype(jnp.float32))
+    np.testing.assert_allclose(out.astype(jnp.float32), ref, **tol(dtype))
+
+
+def test_flash_prefill_is_causal():
+    """Perturbing future keys/values must not change earlier outputs."""
+    key = jax.random.PRNGKey(3)
+    b, h, t, d = 1, 2, 128, 64
+    q = rand(jax.random.fold_in(key, 0), (b, h, t, d), jnp.float32)
+    k = rand(jax.random.fold_in(key, 1), (b, h, t, d), jnp.float32)
+    v = rand(jax.random.fold_in(key, 2), (b, h, t, d), jnp.float32)
+    out1 = A.flash_prefill(q, k, v)
+    k2 = k.at[:, :, t // 2:, :].set(99.0)
+    v2 = v.at[:, :, t // 2:, :].set(-99.0)
+    out2 = A.flash_prefill(q, k2, v2)
+    np.testing.assert_allclose(out1[:, :, : t // 2], out2[:, :, : t // 2],
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_flash_prefill_single_tile():
+    """T == block covers the degenerate single-tile path."""
+    key = jax.random.PRNGKey(4)
+    q = rand(jax.random.fold_in(key, 0), (1, 1, 64, 32), jnp.float32)
+    k = rand(jax.random.fold_in(key, 1), (1, 1, 64, 32), jnp.float32)
+    v = rand(jax.random.fold_in(key, 2), (1, 1, 64, 32), jnp.float32)
+    out = A.flash_prefill(q, k, v, block_q=64, block_k=64)
+    ref = R.ref_flash_prefill(q, k, v)
+    np.testing.assert_allclose(out, ref, rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# masked_decode
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.sampled_from([1, 2, 4, 8]),
+    h=st.sampled_from([1, 2]),
+    s=st.sampled_from([64, 128, 256]),
+    d=st.sampled_from([32, 64]),
+    dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+    seed=st.integers(0, 2**16),
+)
+def test_masked_decode_matches_ref(b, h, s, d, dtype, seed):
+    key = jax.random.PRNGKey(seed)
+    q = rand(jax.random.fold_in(key, 0), (b, h, d), dtype)
+    kc = rand(jax.random.fold_in(key, 1), (b, s, h, d), dtype)
+    vc = rand(jax.random.fold_in(key, 2), (b, s, h, d), dtype)
+    lens = jax.random.randint(jax.random.fold_in(key, 3), (b,), 1, s + 1)
+    out = A.masked_decode(q, kc, vc, lens)
+    ref = R.ref_masked_decode(q.astype(jnp.float32),
+                              kc.astype(jnp.float32),
+                              vc.astype(jnp.float32), lens)
+    np.testing.assert_allclose(out.astype(jnp.float32), ref, **tol(dtype))
+
+
+def test_masked_decode_ignores_tail():
+    """Entries at positions >= lens must not affect the output."""
+    key = jax.random.PRNGKey(5)
+    b, h, s, d = 2, 2, 128, 64
+    q = rand(jax.random.fold_in(key, 0), (b, h, d), jnp.float32)
+    kc = rand(jax.random.fold_in(key, 1), (b, s, h, d), jnp.float32)
+    vc = rand(jax.random.fold_in(key, 2), (b, s, h, d), jnp.float32)
+    lens = jnp.array([50, 100], jnp.int32)
+    out1 = A.masked_decode(q, kc, vc, lens)
+    kc2 = kc.at[:, 100:, :, :].set(1e4)
+    vc2 = vc.at[:, 100:, :, :].set(-1e4)
+    out2 = A.masked_decode(q, kc2, vc2, lens)
+    np.testing.assert_allclose(out1, out2, rtol=1e-6, atol=1e-6)
+
+
+def test_masked_decode_len_one():
+    """lens=1 attends only to position 0 -> output equals v[0]."""
+    key = jax.random.PRNGKey(6)
+    b, h, s, d = 1, 2, 64, 32
+    q = rand(jax.random.fold_in(key, 0), (b, h, d), jnp.float32)
+    kc = rand(jax.random.fold_in(key, 1), (b, s, h, d), jnp.float32)
+    vc = rand(jax.random.fold_in(key, 2), (b, s, h, d), jnp.float32)
+    out = A.masked_decode(q, kc, vc, jnp.array([1], jnp.int32))
+    np.testing.assert_allclose(out[0], vc[0, 0], rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# paged_decode
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.sampled_from([1, 2, 4]),
+    h=st.sampled_from([1, 2]),
+    page=st.sampled_from([8, 16]),
+    pps=st.sampled_from([4, 8]),
+    d=st.sampled_from([32, 64]),
+    dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+    seed=st.integers(0, 2**16),
+)
+def test_paged_decode_matches_ref(b, h, page, pps, d, dtype, seed):
+    key = jax.random.PRNGKey(seed)
+    n_pages = b * pps + 3  # a few spare pages never referenced
+    q = rand(jax.random.fold_in(key, 0), (b, h, d), dtype)
+    kp = rand(jax.random.fold_in(key, 1), (n_pages, page, h, d), dtype)
+    vp = rand(jax.random.fold_in(key, 2), (n_pages, page, h, d), dtype)
+    # Random permutation table: distinct pages per sequence.
+    perm = jax.random.permutation(jax.random.fold_in(key, 3),
+                                  np.arange(n_pages))[: b * pps]
+    table = perm.reshape(b, pps).astype(jnp.int32)
+    lens = jax.random.randint(jax.random.fold_in(key, 4), (b,), 1,
+                              page * pps + 1)
+    out = A.paged_decode(q, kp, vp, table, lens)
+    ref = R.ref_paged_decode(q.astype(jnp.float32), kp.astype(jnp.float32),
+                             vp.astype(jnp.float32), table, lens)
+    np.testing.assert_allclose(out.astype(jnp.float32), ref, **tol(dtype))
+
+
+def test_paged_decode_equals_dense():
+    """Paged layout with an identity block table == dense masked decode."""
+    key = jax.random.PRNGKey(7)
+    b, h, d, page, pps = 2, 2, 64, 16, 8
+    s = page * pps
+    q = rand(jax.random.fold_in(key, 0), (b, h, d), jnp.float32)
+    kc = rand(jax.random.fold_in(key, 1), (b, s, h, d), jnp.float32)
+    vc = rand(jax.random.fold_in(key, 2), (b, s, h, d), jnp.float32)
+    lens = jnp.array([77, 128], jnp.int32)
+    kp = kc.reshape(b * pps, page, h, d)
+    vp = vc.reshape(b * pps, page, h, d)
+    table = jnp.arange(b * pps, dtype=jnp.int32).reshape(b, pps)
+    out_paged = A.paged_decode(q, kp, vp, table, lens)
+    out_dense = A.masked_decode(q, kc, vc, lens)
+    np.testing.assert_allclose(out_paged, out_dense, rtol=1e-6, atol=1e-6)
+
+
+def test_paged_decode_scattered_table():
+    """Pages placed at arbitrary physical indices — the vLLM/TokenCake case:
+    logical order comes entirely from the block table."""
+    key = jax.random.PRNGKey(8)
+    b, h, d, page, pps = 1, 2, 32, 16, 4
+    s = page * pps
+    q = rand(jax.random.fold_in(key, 0), (b, h, d), jnp.float32)
+    kc = rand(jax.random.fold_in(key, 1), (b, s, h, d), jnp.float32)
+    vc = rand(jax.random.fold_in(key, 2), (b, s, h, d), jnp.float32)
+    lens = jnp.array([s], jnp.int32)
+    # Scatter logical pages to physical slots [5, 2, 7, 0] in a pool of 8.
+    phys = [5, 2, 7, 0]
+    kp = jnp.zeros((8, page, h, d), jnp.float32)
+    vp = jnp.zeros((8, page, h, d), jnp.float32)
+    for logical, physical in enumerate(phys):
+        kp = kp.at[physical].set(
+            kc[0, logical * page:(logical + 1) * page])
+        vp = vp.at[physical].set(
+            vc[0, logical * page:(logical + 1) * page])
+    table = jnp.array([phys], jnp.int32)
+    out_paged = A.paged_decode(q, kp, vp, table, lens)
+    out_dense = A.masked_decode(q, kc, vc, lens)
+    np.testing.assert_allclose(out_paged, out_dense, rtol=1e-6, atol=1e-6)

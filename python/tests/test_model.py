@@ -1,0 +1,154 @@
+"""Layer-2 correctness: TinyQwen prefill/decode vs the dense full-context
+oracle, plus unit properties of the building blocks."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = M.ModelConfig()  # default TinyQwen
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(CFG, seed=0)
+
+
+def test_param_spec_matches_init(params):
+    spec = M.param_spec(CFG)
+    assert len(spec) == len(params)
+    for (name, shape), arr in zip(spec, params):
+        assert tuple(arr.shape) == tuple(shape), name
+
+
+def test_rmsnorm_unit_scale():
+    x = jnp.ones((4, CFG.d_model))
+    out = M.rmsnorm(x, jnp.ones(CFG.d_model), 1e-6)
+    np.testing.assert_allclose(out, x, rtol=1e-5)
+
+
+def test_rmsnorm_scale_invariant_direction():
+    """RMSNorm output is invariant to positive rescaling of the input."""
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (3, CFG.d_model))
+    w = jnp.ones(CFG.d_model)
+    a = M.rmsnorm(x, w, 1e-9)
+    b = M.rmsnorm(x * 7.5, w, 1e-9)
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5)
+
+
+def test_rope_preserves_norm():
+    key = jax.random.PRNGKey(1)
+    x = jax.random.normal(key, (5, CFG.head_dim))
+    cos, sin = M.rope_freqs(CFG, jnp.arange(5))
+    y = M.apply_rope(x, cos, sin)
+    np.testing.assert_allclose(jnp.linalg.norm(x, axis=-1),
+                               jnp.linalg.norm(y, axis=-1), rtol=1e-5)
+
+
+def test_rope_position_zero_is_identity():
+    key = jax.random.PRNGKey(2)
+    x = jax.random.normal(key, (1, CFG.head_dim))
+    cos, sin = M.rope_freqs(CFG, jnp.zeros((1,), jnp.int32))
+    y = M.apply_rope(x, cos, sin)
+    np.testing.assert_allclose(x, y, rtol=1e-6, atol=1e-6)
+
+
+def test_rope_relative_property():
+    """<rope(q,m), rope(k,n)> depends only on m-n (RoPE's defining property)."""
+    key = jax.random.PRNGKey(3)
+    q = jax.random.normal(jax.random.fold_in(key, 0), (CFG.head_dim,))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (CFG.head_dim,))
+
+    def dot_at(m, n):
+        cm, sm = M.rope_freqs(CFG, jnp.array([m]))
+        cn, sn = M.rope_freqs(CFG, jnp.array([n]))
+        return jnp.dot(M.apply_rope(q[None], cm, sm)[0],
+                       M.apply_rope(k[None], cn, sn)[0])
+
+    np.testing.assert_allclose(dot_at(3, 1), dot_at(12, 10), rtol=1e-4)
+    np.testing.assert_allclose(dot_at(7, 7), dot_at(0, 0), rtol=1e-4)
+
+
+def test_prefill_matches_full_forward(params):
+    """Prefill's last-token logits equal the dense oracle at true_len-1."""
+    key = jax.random.PRNGKey(4)
+    T = 128
+    tokens = jax.random.randint(key, (1, T), 0, CFG.vocab)
+    for true_len in (5, 64, T):
+        logits, k_cache, v_cache = M.prefill(
+            params, tokens, jnp.array([true_len], jnp.int32), CFG)
+        ref = M.full_forward_ref(params, tokens, CFG)
+        np.testing.assert_allclose(logits[0], ref[0, true_len - 1],
+                                   rtol=2e-4, atol=2e-4)
+        assert k_cache.shape == (CFG.n_layers, T, CFG.n_heads, CFG.head_dim)
+        assert v_cache.shape == k_cache.shape
+
+
+def test_prefill_padding_inert(params):
+    """Changing pad tokens after true_len must not change the logits."""
+    key = jax.random.PRNGKey(5)
+    T, true_len = 128, 40
+    tokens = jax.random.randint(key, (1, T), 0, CFG.vocab)
+    tl = jnp.array([true_len], jnp.int32)
+    a, _, _ = M.prefill(params, tokens, tl, CFG)
+    tokens2 = tokens.at[0, true_len:].set(0)
+    b, _, _ = M.prefill(params, tokens2, tl, CFG)
+    np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+
+
+def test_prefill_then_decode_matches_oracle(params):
+    """The serving path: prefill a prompt, then decode several steps; each
+    step's logits must match the dense full-context forward."""
+    key = jax.random.PRNGKey(6)
+    T, S, B = 128, CFG.max_len, 8
+    prompt_len, n_decode = 17, 5
+    full = jax.random.randint(key, (1, prompt_len + n_decode), 0, CFG.vocab)
+
+    # Prefill the prompt (padded to T).
+    padded = jnp.zeros((1, T), jnp.int32).at[:, :prompt_len].set(
+        full[:, :prompt_len])
+    logits, k_pre, v_pre = M.prefill(
+        params, padded, jnp.array([prompt_len], jnp.int32), CFG)
+    ref = M.full_forward_ref(params, full, CFG)
+    np.testing.assert_allclose(logits[0], ref[0, prompt_len - 1],
+                               rtol=2e-4, atol=2e-4)
+
+    # Scatter prefill cache into decode slot 3 of a B-slot cache.
+    slot = 3
+    k_cache = jnp.zeros((CFG.n_layers, B, S, CFG.n_heads, CFG.head_dim))
+    v_cache = jnp.zeros_like(k_cache)
+    k_cache = k_cache.at[:, slot, :prompt_len].set(k_pre[:, :prompt_len])
+    v_cache = v_cache.at[:, slot, :prompt_len].set(v_pre[:, :prompt_len])
+
+    lens_val = prompt_len
+    for step in range(n_decode):
+        tok = full[0, lens_val]  # teacher-forced next token
+        tokens_b = jnp.zeros((B,), jnp.int32).at[slot].set(tok)
+        lens_b = jnp.zeros((B,), jnp.int32).at[slot].set(lens_val)
+        logits_b, k_cache, v_cache = M.decode_step(
+            params, tokens_b, k_cache, v_cache, lens_b, CFG)
+        np.testing.assert_allclose(logits_b[slot], ref[0, lens_val],
+                                   rtol=5e-4, atol=5e-4)
+        lens_val += 1
+
+
+def test_decode_slots_independent(params):
+    """Other slots' contents must not leak into a slot's logits."""
+    key = jax.random.PRNGKey(7)
+    B, S = 8, CFG.max_len
+    k_cache = jnp.zeros((CFG.n_layers, B, S, CFG.n_heads, CFG.head_dim))
+    v_cache = jnp.zeros_like(k_cache)
+    tokens = jax.random.randint(key, (B,), 0, CFG.vocab)
+    lens = jnp.zeros((B,), jnp.int32)
+
+    out1, _, _ = M.decode_step(params, tokens, k_cache, v_cache, lens, CFG)
+    # Garbage in other slots' caches:
+    k2 = k_cache.at[:, 1:].set(123.0)
+    v2 = v_cache.at[:, 1:].set(-321.0)
+    out2, _, _ = M.decode_step(params, tokens, k2, v2, lens, CFG)
+    np.testing.assert_allclose(out1[0], out2[0], rtol=1e-5, atol=1e-5)

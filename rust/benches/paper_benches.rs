@@ -1,0 +1,631 @@
+//! Paper-exhibit benchmark harness: regenerates every table and figure of
+//! the TokenCake evaluation (§7) on the calibrated discrete-event
+//! substrate, plus the §Perf microbenchmarks.
+//!
+//!     cargo bench                 # everything
+//!     cargo bench -- fig9         # one exhibit (substring match)
+//!     cargo bench -- quick        # the fast subset (skips the fig9 grid)
+//!
+//! Absolute numbers differ from the paper's A100/H20 testbed; the *shape*
+//! (who wins, by what factor, where crossovers happen) is the
+//! reproduction target. EXPERIMENTS.md records paper-vs-measured.
+
+use std::time::Instant;
+
+use tokencake::config::{Mode, ModelProfile, SelectionPolicy, ServeConfig};
+use tokencake::engine::sim::{RunReport, SimEngine};
+use tokencake::graph::{templates, AppGraph, FuncKind};
+use tokencake::metrics::TimeSeries;
+use tokencake::sim::Rng;
+use tokencake::workload::{Dataset, ToolSim, WorkloadSpec};
+
+// ---------------------------------------------------------------------
+// Shared runner
+// ---------------------------------------------------------------------
+
+#[derive(Clone)]
+struct Exp {
+    mode: Mode,
+    app: &'static str,
+    dataset: Dataset,
+    qps: f64,
+    apps: usize,
+    frac: f64,
+    profile: ModelProfile,
+    seed: u64,
+    noise: f64,
+    watermark: Option<f64>,
+    selection: Option<SelectionPolicy>,
+}
+
+impl Exp {
+    fn new(mode: Mode, qps: f64) -> Self {
+        Self {
+            mode,
+            app: "code-writer",
+            dataset: Dataset::D1,
+            qps,
+            apps: 20,
+            frac: 0.08,
+            profile: ModelProfile::qwen14b_a100(),
+            seed: 0xBEEF,
+            noise: 0.0,
+            watermark: None,
+            selection: None,
+        }
+    }
+
+    fn graph(&self) -> AppGraph {
+        match self.app {
+            "code-writer" => templates::code_writer(),
+            "deep-research" => templates::deep_research(),
+            other => panic!("unknown app {other}"),
+        }
+    }
+
+    fn run(&self) -> RunReport {
+        let mut cfg = ServeConfig::default()
+            .with_mode(self.mode)
+            .with_seed(self.seed)
+            .with_gpu_mem_frac(self.frac);
+        cfg.profile = self.profile.clone();
+        if let Some(w) = self.watermark {
+            cfg.policy.pressure_watermark = w;
+        }
+        if let Some(s) = self.selection {
+            cfg.policy.selection = s;
+        }
+        let graph = self.graph();
+        let spec = WorkloadSpec::poisson(&graph, self.qps, self.apps)
+            .with_dataset(self.dataset)
+            .with_tool_noise(self.noise);
+        SimEngine::new(cfg).run_workload(&spec)
+    }
+}
+
+fn hdr(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+// ---------------------------------------------------------------------
+// Fig 2a — temporal underutilization: idle (stalled) KV fraction
+// ---------------------------------------------------------------------
+
+fn fig2_motivation() {
+    hdr("Fig 2a — idle KV-cache blocks due to function calls (vLLM)");
+    let rep = Exp::new(Mode::Vllm, 0.5).run();
+    let s: &TimeSeries = &rep.metrics.stalled_fraction;
+    println!("| metric | value |");
+    println!("|---|---|");
+    println!("| peak stalled fraction | {:.1}% |", s.max() * 100.0);
+    println!(
+        "| mean stalled fraction | {:.1}% |",
+        s.time_weighted_mean() * 100.0
+    );
+    println!(
+        "| paper (Fig 2a peak)   | 18.5% |"
+    );
+    // Time series sample for plotting.
+    println!("t_s,stalled_frac");
+    for (t, v) in s.downsample(20) {
+        println!("{:.0},{:.3}", t as f64 / 1e6, v);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Fig 3a — spatial contention: preemption events over time (vLLM FCFS)
+// ---------------------------------------------------------------------
+
+fn fig3_inversion() {
+    hdr("Fig 3a — critical-inversion preemptions over time (vLLM)");
+    let rep = Exp::new(Mode::Vllm, 1.0).run();
+    println!(
+        "preemptions={} critical_inversions={} recompute_tokens={}",
+        rep.metrics.counters.preemptions,
+        rep.metrics.counters.critical_inversions,
+        rep.metrics.counters.recompute_tokens
+    );
+    assert!(
+        rep.metrics.counters.preemptions > 0,
+        "FCFS under pressure must preempt (the Fig 3a phenomenon)"
+    );
+    // TokenCake comparison: reservation should cut inversions.
+    let tc = Exp::new(Mode::TokenCake, 1.0).run();
+    println!(
+        "tokencake: preemptions={} critical_inversions={}",
+        tc.metrics.counters.preemptions,
+        tc.metrics.counters.critical_inversions
+    );
+}
+
+// ---------------------------------------------------------------------
+// Table 1 — tool latency models
+// ---------------------------------------------------------------------
+
+fn tab1_tools() {
+    hdr("Table 1 — MCP tool latency models (sampled)");
+    let mut rng = Rng::new(7);
+    let sim = ToolSim::new(0.0);
+    println!("| tool | mean | p95 | paper band |");
+    println!("|---|---|---|---|");
+    for (kind, band) in [
+        (FuncKind::FileRead, "100ms ±50ms"),
+        (FuncKind::Git, "100ms–1s"),
+        (FuncKind::Database, "100–1000ms"),
+        (FuncKind::WebSearch, "1–5s (tail 10s)"),
+        (FuncKind::AiGeneration, "5–30s (tail 60s)"),
+    ] {
+        let call = tokencake::graph::CallSpec::new(kind.clone());
+        let mut xs: Vec<f64> = (0..2000)
+            .map(|_| sim.sample(&call, &mut rng).duration_us as f64 / 1e3)
+            .collect();
+        xs.sort_by(|a, b| a.total_cmp(b));
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        println!(
+            "| {} | {:.0}ms | {:.0}ms | {} |",
+            kind.name(),
+            mean,
+            xs[(xs.len() * 95) / 100],
+            band
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+// Table 2 — policy capability matrix (behavioural assertions)
+// ---------------------------------------------------------------------
+
+fn tab2_policy_matrix() {
+    hdr("Table 2 — offload/prefetch policy matrix");
+    println!("| system | FC-aware | offload | trigger | prefetch |");
+    println!("|---|---|---|---|---|");
+    for (mode, trigger, prefetch) in [
+        (Mode::TokenCake, "FC start (proactive)", "predictive"),
+        (Mode::Mooncake, "pool pressure (reactive)", "on-resume"),
+        (Mode::Infercept, "interception (reactive)", "FCFS"),
+        (Mode::Vllm, "never", "n/a"),
+    ] {
+        println!(
+            "| {} | {} | {} | {} | {} |",
+            mode.name(),
+            mode.fc_offload(),
+            mode.fc_offload() || mode.reactive_offload(),
+            trigger,
+            prefetch
+        );
+    }
+    // Behavioural check at one pressured load point.
+    let tc = Exp::new(Mode::TokenCake, 1.0).run();
+    let mc = Exp::new(Mode::Mooncake, 1.0).run();
+    let vl = Exp::new(Mode::Vllm, 1.0).run();
+    println!(
+        "offload counts under identical load: tokencake={} mooncake={} vllm={}",
+        tc.metrics.offload_count, mc.metrics.offload_count,
+        vl.metrics.offload_count
+    );
+    assert_eq!(vl.metrics.offload_count, 0);
+}
+
+// ---------------------------------------------------------------------
+// Fig 9 — end-to-end latency vs QPS grid
+// ---------------------------------------------------------------------
+
+fn fig9_latency_qps() {
+    hdr("Fig 9 — avg end-to-end latency (s) vs QPS");
+    let systems = [Mode::Vllm, Mode::VllmPrefix, Mode::Mooncake,
+                   Mode::TokenCake];
+    let qps_points = [0.05, 0.2, 0.5, 1.0];
+    let grid: &[(&str, &str, Dataset, ModelProfile)] = &[
+        ("qwen14b", "code-writer", Dataset::D1,
+         ModelProfile::qwen14b_a100()),
+        ("qwen14b", "code-writer", Dataset::D2,
+         ModelProfile::qwen14b_a100()),
+        ("qwen14b", "deep-research", Dataset::D1,
+         ModelProfile::qwen14b_a100()),
+        ("qwen32b", "code-writer", Dataset::D1,
+         ModelProfile::qwen32b_h20()),
+        ("qwen72b", "code-writer", Dataset::D2,
+         ModelProfile::qwen72b_h20x2()),
+        ("qwen72b", "deep-research", Dataset::D2,
+         ModelProfile::qwen72b_h20x2()),
+    ];
+    for (model, app, dataset, profile) in grid {
+        println!("\n-- {model} {app} {} --", dataset.name());
+        println!(
+            "| qps | {} |",
+            systems
+                .iter()
+                .map(|m| m.name().to_string())
+                .collect::<Vec<_>>()
+                .join(" | ")
+        );
+        println!("|---|{}|", "---|".repeat(systems.len()));
+        let mut last_row: Vec<f64> = Vec::new();
+        for &qps in &qps_points {
+            let mut row = format!("| {qps} |");
+            last_row.clear();
+            for mode in systems {
+                let mut e = Exp::new(mode, qps);
+                e.app = app;
+                e.dataset = *dataset;
+                e.profile = profile.clone();
+                let rep = e.run();
+                row.push_str(&format!(
+                    " {:.1} |",
+                    rep.metrics.latency.mean_s()
+                ));
+                last_row.push(rep.metrics.latency.mean_s());
+            }
+            println!("{row}");
+        }
+        // Shape check at the highest load: TokenCake wins.
+        let tc = last_row[3];
+        let vl = last_row[0];
+        println!(
+            "reduction vs vLLM at 1.0 QPS: {:.1}% (paper: 47.06% on \
+             14B-CW-D1, >30% on 72B-CW-D2)",
+            (1.0 - tc / vl) * 100.0
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+// Fig 10 — GPU KV utilization under varying load
+// ---------------------------------------------------------------------
+
+fn fig10_utilization() {
+    hdr("Fig 10 — effective GPU KV utilization (steady state, 14B CW)");
+    println!("| qps | vllm total | vllm effective | tokencake total | tokencake effective |");
+    println!("|---|---|---|---|---|");
+    for qps in [0.2, 0.5, 1.0] {
+        let v = Exp::new(Mode::Vllm, qps).run();
+        let t = Exp::new(Mode::TokenCake, qps).run();
+        println!(
+            "| {} | {:.1}% | {:.1}% | {:.1}% | {:.1}% |",
+            qps,
+            v.metrics.gpu_usage.steady_state_mean(0.15) * 100.0,
+            v.metrics.effective_usage.steady_state_mean(0.15) * 100.0,
+            t.metrics.gpu_usage.steady_state_mean(0.15) * 100.0,
+            t.metrics.effective_usage.steady_state_mean(0.15) * 100.0,
+        );
+    }
+    println!("paper: tokencake 85.8–87.0% vs vllm 69.9–74.1% (effective)");
+}
+
+// ---------------------------------------------------------------------
+// Fig 11 + §7.3 — component ablation
+// ---------------------------------------------------------------------
+
+fn fig11_ablation() {
+    hdr("Fig 11 / §7.3 — component ablation (20 apps, frac=0.5·pool)");
+    println!(
+        "| qps | mode | total(s) | avg(s) | p90(s) | thpt | offloads | swap_blocks |"
+    );
+    println!("|---|---|---|---|---|---|---|---|");
+    for qps in [0.2, 0.5, 1.0] {
+        for mode in [Mode::Vllm, Mode::AgentOnly, Mode::OffloadOnly,
+                     Mode::TokenCake] {
+            let mut e = Exp::new(mode, qps);
+            e.frac = 0.04; // paper's "0.5 GPU memory utilization" analogue
+            let rep = e.run();
+            println!(
+                "| {} | {} | {:.1} | {:.1} | {:.1} | {:.4} | {} | {} |",
+                qps,
+                mode.name(),
+                rep.metrics.latency.sum_s(),
+                rep.metrics.latency.mean_s(),
+                rep.metrics.latency.percentile_s(90.0),
+                rep.metrics.throughput(),
+                rep.metrics.offload_count,
+                rep.metrics.swap_volume_blocks,
+            );
+        }
+    }
+    println!(
+        "paper @1.0qps: baseline 502.2 / agent 424.8 / offload 403.1 \
+         (11339 offloads, 2× swap) / full 344.6 total; full cuts swap 51%"
+    );
+}
+
+// ---------------------------------------------------------------------
+// Fig 12 — Mooncake comparison
+// ---------------------------------------------------------------------
+
+fn fig12_mooncake() {
+    hdr("Fig 12 — remote-KV baseline (Mooncake) at 0.2 / 0.5 QPS");
+    println!("| qps | mode | avg(s) | thpt(req/s) |");
+    println!("|---|---|---|---|");
+    for qps in [0.2, 0.5] {
+        for mode in [Mode::Vllm, Mode::Mooncake, Mode::OffloadOnly,
+                     Mode::TokenCake] {
+            let mut e = Exp::new(mode, qps);
+            e.frac = 0.05;
+            let rep = e.run();
+            println!(
+                "| {} | {} | {:.1} | {:.4} |",
+                qps,
+                mode.name(),
+                rep.metrics.latency.mean_s(),
+                rep.metrics.throughput()
+            );
+        }
+    }
+    println!(
+        "paper @0.5: baseline 610 / mooncake 533 / offload 552 / tokencake 384"
+    );
+}
+
+// ---------------------------------------------------------------------
+// Fig 13 — Parrot comparison
+// ---------------------------------------------------------------------
+
+fn fig13_parrot() {
+    hdr("Fig 13 — Parrot (agent-aware, compute-centric) vs TokenCake");
+    println!("| app | qps | parrot avg(s) | tokencake avg(s) | gap |");
+    println!("|---|---|---|---|---|");
+    for app in ["code-writer", "deep-research"] {
+        for qps in [0.1, 0.2, 1.0] {
+            let mut p = Exp::new(Mode::Parrot, qps);
+            p.app = app;
+            p.frac = 0.05;
+            let mut t = Exp::new(Mode::TokenCake, qps);
+            t.app = app;
+            t.frac = 0.05;
+            let rp = p.run();
+            let rt = t.run();
+            let (a, b) = (
+                rp.metrics.latency.mean_s(),
+                rt.metrics.latency.mean_s(),
+            );
+            println!(
+                "| {} | {} | {:.1} | {:.1} | {:.1}x |",
+                app, qps, a, b, a / b
+            );
+        }
+    }
+    println!("paper: 6.8–8.9x on Code-Writer, 6.5–7.1x on Deep-Research");
+}
+
+// ---------------------------------------------------------------------
+// Fig 14 — tool-time noise sensitivity
+// ---------------------------------------------------------------------
+
+fn fig14_noise() {
+    hdr("Fig 14 — latency delta of TokenCake vs agent-only under noise");
+    println!("| noise s | agent-only avg(s) | tokencake avg(s) | delta |");
+    println!("|---|---|---|---|");
+    for noise in [0.0, 0.25, 0.5] {
+        // Average over seeds to tame variance.
+        let mut a_sum = 0.0;
+        let mut t_sum = 0.0;
+        let seeds = [1u64, 2, 3];
+        for &seed in &seeds {
+            let mut a = Exp::new(Mode::AgentOnly, 0.5);
+            a.noise = noise;
+            a.frac = 0.05;
+            a.seed = seed;
+            let mut t = Exp::new(Mode::TokenCake, 0.5);
+            t.noise = noise;
+            t.frac = 0.05;
+            t.seed = seed;
+            a_sum += a.run().metrics.latency.mean_s();
+            t_sum += t.run().metrics.latency.mean_s();
+        }
+        let (a, t) = (a_sum / seeds.len() as f64,
+                      t_sum / seeds.len() as f64);
+        println!(
+            "| {} | {:.1} | {:.1} | {:+.1}% |",
+            noise,
+            a,
+            t,
+            (t / a - 1.0) * 100.0
+        );
+    }
+    println!("paper: -14.8% @0 / +8.3% @0.25 / -3.4% @0.5 (non-monotonic)");
+}
+
+// ---------------------------------------------------------------------
+// Fig 15 — request-selection policy
+// ---------------------------------------------------------------------
+
+fn fig15_selection() {
+    hdr("Fig 15 — opportunistic-gate request selection policy");
+    println!("| policy | avg(s) | p95(s) | thpt | offloads |");
+    println!("|---|---|---|---|---|");
+    for sel in [SelectionPolicy::FirstFit, SelectionPolicy::BestFit,
+                SelectionPolicy::PriorityFirst] {
+        // Deeper queue (higher load, tighter pool) so the three policies
+        // actually face multi-candidate choices; averaged over seeds.
+        let (mut avg, mut p95, mut thpt, mut offs) = (0.0, 0.0, 0.0, 0);
+        let seeds = [1u64, 2, 3, 4];
+        for &seed in &seeds {
+            let mut e = Exp::new(Mode::TokenCake, 1.0);
+            e.frac = 0.04;
+            e.apps = 24;
+            e.seed = seed;
+            e.selection = Some(sel);
+            let rep = e.run();
+            avg += rep.metrics.latency.mean_s();
+            p95 += rep.metrics.latency.percentile_s(95.0);
+            thpt += rep.metrics.throughput();
+            offs += rep.metrics.offload_count;
+        }
+        let n = seeds.len() as f64;
+        println!(
+            "| {} | {:.1} | {:.1} | {:.4} | {} |",
+            sel.name(),
+            avg / n,
+            p95 / n,
+            thpt / n,
+            offs / seeds.len() as u64
+        );
+    }
+    println!(
+        "paper: first_fit 152.6/164.7 best; best_fit worst (187.0); \
+         priority_first lowest mean but fat tail"
+    );
+}
+
+// ---------------------------------------------------------------------
+// Fig 16 — spatial pressure watermark
+// ---------------------------------------------------------------------
+
+fn fig16_watermark() {
+    hdr("Fig 16 — spatial pressure watermark sweep");
+    println!("| watermark | avg(s) | offloads | rejected |");
+    println!("|---|---|---|---|");
+    // Sweep across the regime where the watermark actually pivots: from
+    // permissive to reject-everything (the paper's 0.08 point at its load).
+    for w in [0.05, 0.2, 0.4, 0.8, 2.0] {
+        let (mut avg, mut offs, mut rej) = (0.0, 0u64, 0u64);
+        let seeds = [1u64, 2, 3];
+        for &seed in &seeds {
+            let mut e = Exp::new(Mode::TokenCake, 0.5);
+            e.frac = 0.05;
+            e.seed = seed;
+            e.watermark = Some(w);
+            let rep = e.run();
+            avg += rep.metrics.latency.mean_s();
+            offs += rep.metrics.offload_count;
+            rej += rep.metrics.counters.offloads_rejected;
+        }
+        println!(
+            "| {} | {:.1} | {} | {} |",
+            w,
+            avg / seeds.len() as f64,
+            offs / seeds.len() as u64,
+            rej / seeds.len() as u64
+        );
+    }
+    println!(
+        "paper: 0.05/0.06 similar (~157s); 0.08 rejects all and wins \
+         (107.5s) at that load — selectivity principle"
+    );
+}
+
+// ---------------------------------------------------------------------
+// Fig 17 — transfer vs recompute microbenchmark
+// ---------------------------------------------------------------------
+
+fn fig17_transfer() {
+    hdr("Fig 17 — D2H/H2D vs recompute (calibrated model + real memcpy)");
+    let p = ModelProfile::qwen14b_a100();
+    println!(
+        "| tokens | blocks | offload(ms) | upload(ms) | recompute(ms) | ratio | host memcpy rt(ms) |"
+    );
+    println!("|---|---|---|---|---|---|---|");
+    for tokens in [1024u32, 2048, 3072, 4096, 5120] {
+        let blocks = p.blocks_for_tokens(tokens);
+        let off = p.offload_us(blocks) as f64 / 1e3;
+        let up = p.upload_us(blocks) as f64 / 1e3;
+        let rc = p.prefill_us(tokens) as f64 / 1e3;
+
+        // Real host memcpy of the same byte volume (block-granular), both
+        // directions — the physical operation our CPU substrate performs.
+        let bytes = blocks as usize * p.block_bytes as usize;
+        let src = vec![1u8; bytes];
+        let mut dst = vec![0u8; bytes];
+        let t0 = Instant::now();
+        let reps = 5;
+        for _ in 0..reps {
+            dst.copy_from_slice(&src);
+            std::hint::black_box(&dst);
+            let dst2 = &mut dst[..];
+            dst2.copy_from_slice(&src); // "upload" back
+        }
+        let rt_ms =
+            t0.elapsed().as_secs_f64() * 1e3 / reps as f64;
+
+        println!(
+            "| {} | {} | {:.1} | {:.1} | {:.0} | {:.1}x | {:.1} |",
+            tokens,
+            blocks,
+            off,
+            up,
+            rc,
+            rc / (off + up),
+            rt_ms
+        );
+    }
+    println!(
+        "paper @4096: 32.0/31.7/1815ms, 28.5x; band 26.8–37.5x across \
+         lengths"
+    );
+}
+
+// ---------------------------------------------------------------------
+// §Perf — L3 hot-path microbenchmarks
+// ---------------------------------------------------------------------
+
+fn perf_scheduler() {
+    hdr("Perf — scheduler hot paths (L3)");
+    // Scheduling-step latency on a loaded state.
+    let mut cfg = ServeConfig::default().with_gpu_mem_frac(0.08);
+    cfg.mode = Mode::TokenCake;
+    let graph = templates::code_writer();
+    let spec = WorkloadSpec::poisson(&graph, 1.0, 20);
+    let mut engine = SimEngine::new(cfg);
+    let t0 = Instant::now();
+    let rep = engine.run_workload(&spec);
+    let wall = t0.elapsed();
+    let steps = rep.metrics.counters.sched_steps;
+    let iters = rep.metrics.counters.decode_iterations;
+    println!(
+        "full run: wall={:.2}s sched_steps={} decode_iters={} \
+         sim_makespan={:.0}s",
+        wall.as_secs_f64(),
+        steps,
+        iters,
+        rep.metrics.makespan_us as f64 / 1e6
+    );
+    println!(
+        "per-step cost: {:.1}µs wall (budget: ≪ decode iteration {:.0}µs sim)",
+        wall.as_secs_f64() * 1e6 / steps.max(1) as f64,
+        ModelProfile::qwen14b_a100().decode_iter_us(32) as f64
+    );
+    println!(
+        "event throughput: {:.0} sim-iterations/s",
+        iters as f64 / wall.as_secs_f64()
+    );
+}
+
+// ---------------------------------------------------------------------
+// Registry
+// ---------------------------------------------------------------------
+
+fn main() {
+    let filter: Vec<String> = std::env::args()
+        .skip(1)
+        .filter(|a| !a.starts_with("--"))
+        .collect();
+    let want = |name: &str| {
+        filter.is_empty()
+            || filter.iter().any(|f| name.contains(f.as_str()))
+            || (filter.iter().any(|f| f == "quick") && name != "fig9")
+    };
+    let t0 = Instant::now();
+    let benches: &[(&str, fn())] = &[
+        ("fig2", fig2_motivation),
+        ("fig3", fig3_inversion),
+        ("tab1", tab1_tools),
+        ("tab2", tab2_policy_matrix),
+        ("fig9", fig9_latency_qps),
+        ("fig10", fig10_utilization),
+        ("fig11", fig11_ablation),
+        ("fig12", fig12_mooncake),
+        ("fig13", fig13_parrot),
+        ("fig14", fig14_noise),
+        ("fig15", fig15_selection),
+        ("fig16", fig16_watermark),
+        ("fig17", fig17_transfer),
+        ("perf", perf_scheduler),
+    ];
+    for (name, f) in benches {
+        if want(name) {
+            let t = Instant::now();
+            f();
+            eprintln!("[{name} took {:.1}s]", t.elapsed().as_secs_f64());
+        }
+    }
+    eprintln!("\ntotal bench time: {:.1}s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,182 @@
+//! Baseline serving policies reproduced for §7 (Table 2's comparison).
+//!
+//! The baselines share TokenCake's engine and block pools — only the
+//! *policies* differ (see `config::Mode` for the capability matrix):
+//!
+//! * **vLLM** — FCFS continuous batching, paged blocks, recompute-on-evict.
+//!   Entirely expressed by `Mode::Vllm` flags in `spatial::admit` and the
+//!   engine's eviction path; no code here.
+//! * **vLLM-Prefix** — + prefix-cache reuse (`Mode::VllmPrefix`).
+//! * **Mooncake** — remote/CPU KV store with *reactive* offload: pressure-
+//!   triggered, LRU victims, reactive upload on resumption
+//!   ([`mooncake_reactive_phase`]).
+//! * **Parrot** — agent-aware priority scheduling, compute-centric: no
+//!   reservation, no offload, worst-case up-front allocation (its own
+//!   engine predates paged growth) — see `spatial::admission_alloc_blocks`.
+//! * **InferCept** — FC-triggered reactive swap without the cost model
+//!   (gate shortcut in `temporal::gate`).
+
+use crate::coordination::{PressureSnapshot, ReqState, RequestId, ServeState};
+use crate::temporal::{issue_offload, try_immediate_upload};
+
+/// Mooncake-style reactive memory management (phase 3 replacement).
+///
+/// * Upload: retried every step for any CPU-resident cache whose tool has
+///   returned (no prediction, no gradual reservation — the request simply
+///   stalls until blocks appear).
+/// * Offload: triggered only when GPU usage exceeds the reactive
+///   threshold; victims are stalled requests in LRU order (oldest
+///   `call_start` first), enough to bring usage back under the line.
+pub fn mooncake_reactive_phase(
+    st: &mut ServeState,
+    snap: &PressureSnapshot,
+    now_us: u64,
+) {
+    // ---- Reactive uploads (session resumption). ----
+    let ready: Vec<RequestId> = st
+        .reqs
+        .values()
+        .filter(|r| {
+            r.state == ReqState::Offloaded
+                && r.fc.as_ref().map(|f| f.tool_done).unwrap_or(false)
+        })
+        .map(|r| r.id)
+        .collect();
+    for rid in ready {
+        // May fail under pressure; retried next step.
+        let _ = try_immediate_upload(st, rid, now_us);
+    }
+
+    // ---- Reactive offload under memory pressure. ----
+    let threshold = st.cfg.policy.reactive_usage_threshold;
+    if snap.usage < threshold {
+        return;
+    }
+    let excess_blocks = ((snap.usage - threshold)
+        * st.gpu.total() as f64)
+        .ceil() as u32;
+
+    // LRU victims: stalled the longest.
+    let mut victims: Vec<(RequestId, u64, u32)> = st
+        .reqs
+        .values()
+        .filter(|r| r.state == ReqState::Stalled)
+        .map(|r| {
+            (
+                r.id,
+                r.fc.as_ref().map(|f| f.started_us).unwrap_or(0),
+                r.blocks.len() as u32,
+            )
+        })
+        .collect();
+    victims.sort_by_key(|&(_, started, _)| started);
+
+    let mut freed = 0u32;
+    for (rid, _, blocks) in victims {
+        if freed >= excess_blocks {
+            break;
+        }
+        if st.cpu.free_blocks() < blocks {
+            break;
+        }
+        issue_offload(st, rid, now_us);
+        freed += blocks;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Mode, ServeConfig};
+    use crate::coordination::FcRt;
+    use crate::graph::templates;
+    use crate::kvcache::{AllocOutcome, Route};
+    use crate::workload::SampledLengths;
+
+    fn mooncake_state() -> ServeState {
+        let mut cfg = ServeConfig::default();
+        cfg.mode = Mode::Mooncake;
+        let mut st = ServeState::new(cfg);
+        let g = templates::code_writer();
+        st.register_graph(&g);
+        st
+    }
+
+    fn stall_request(st: &mut ServeState, started_us: u64, blocks: u32)
+        -> RequestId {
+        let scales = SampledLengths {
+            prompt_scale: 1.0,
+            gen_scale: 1.0,
+        };
+        let (app, _) = st.spawn_app(0, scales, 0);
+        let rid = st.apps[&app].node_req[0].unwrap();
+        st.waiting.retain(|&x| x != rid);
+        let AllocOutcome::Granted { blocks, .. } =
+            st.gpu.alloc(blocks, Route::Shared)
+        else {
+            panic!()
+        };
+        let r = st.reqs.get_mut(&rid).unwrap();
+        r.state = ReqState::Stalled;
+        r.blocks = blocks;
+        r.fc = Some(FcRt {
+            name: "web_search".into(),
+            started_us,
+            predicted_end_us: started_us + 5_000_000,
+            tool_done: false,
+            finished_us: 0,
+            result_tokens: 480,
+            user_estimate_us: None,
+        });
+        rid
+    }
+
+    #[test]
+    fn no_offload_below_threshold() {
+        let mut st = mooncake_state();
+        stall_request(&mut st, 0, 100);
+        let snap = st.snapshot();
+        mooncake_reactive_phase(&mut st, &snap, 1000);
+        assert_eq!(st.metrics.offload_count, 0);
+    }
+
+    #[test]
+    fn offloads_lru_victim_under_pressure() {
+        let mut st = mooncake_state();
+        let old = stall_request(&mut st, 0, 400);
+        let new = stall_request(&mut st, 9_999, 400);
+        // Fill to ~93%: excess over the 0.90 threshold is ~390 blocks,
+        // covered by offloading the single oldest victim (400 blocks).
+        let fill = (st.gpu.total() as f64 * 0.93) as u32 - 800;
+        st.gpu.alloc(fill, Route::Shared);
+        let snap = st.snapshot();
+        mooncake_reactive_phase(&mut st, &snap, 10_000);
+        assert!(st.metrics.offload_count >= 1);
+        // The OLDER stall goes first (LRU).
+        assert_eq!(st.reqs[&old].state, ReqState::PendingOffload);
+        // The newer one only if needed — one victim covered the excess.
+        assert_eq!(st.reqs[&new].state, ReqState::Stalled);
+    }
+
+    #[test]
+    fn reactive_upload_on_tool_done() {
+        let mut st = mooncake_state();
+        let rid = stall_request(&mut st, 0, 50);
+        // Manually park it on CPU with the tool finished.
+        {
+            let blocks = {
+                let r = st.reqs.get_mut(&rid).unwrap();
+                std::mem::take(&mut r.blocks)
+            };
+            st.gpu.free(blocks, 0, None);
+            let cpu = st.cpu.alloc(50).unwrap();
+            let r = st.reqs.get_mut(&rid).unwrap();
+            r.cpu_blocks = cpu;
+            r.state = ReqState::Offloaded;
+            r.fc.as_mut().unwrap().tool_done = true;
+        }
+        let snap = st.snapshot();
+        mooncake_reactive_phase(&mut st, &snap, 1000);
+        assert_eq!(st.reqs[&rid].state, ReqState::PendingUpload);
+    }
+}

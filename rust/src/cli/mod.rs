@@ -1,0 +1,109 @@
+//! Hand-rolled argument parsing (clap is not vendored offline).
+//!
+//! Grammar: `tokencake <command> [--flag value]... [--switch]...`
+
+use std::collections::HashMap;
+
+/// Parsed command line: one subcommand + flags.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub command: String,
+    flags: HashMap<String, String>,
+    switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(
+        args: I,
+    ) -> Result<Args, String> {
+        let mut it = args.into_iter().peekable();
+        let command = it.next().unwrap_or_else(|| "help".to_string());
+        if command.starts_with('-') {
+            return Err(format!("expected a command, got flag {command}"));
+        }
+        let mut out = Args {
+            command,
+            ..Default::default()
+        };
+        while let Some(a) = it.next() {
+            let Some(name) = a.strip_prefix("--") else {
+                return Err(format!("unexpected positional argument {a:?}"));
+            };
+            match it.peek() {
+                Some(v) if !v.starts_with("--") => {
+                    out.flags.insert(name.to_string(), it.next().unwrap());
+                }
+                _ => out.switches.push(name.to_string()),
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{name}: bad number {v:?}")),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{name}: bad integer {v:?}")),
+        }
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name)
+            || self.flags.contains_key(name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Result<Args, String> {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn parses_command_flags_switches() {
+        let a = parse("bench --qps 0.5 --apps 20 --verbose").unwrap();
+        assert_eq!(a.command, "bench");
+        assert_eq!(a.get("qps"), Some("0.5"));
+        assert_eq!(a.get_u64("apps", 0).unwrap(), 20);
+        assert!(a.has("verbose"));
+        assert!(!a.has("quiet"));
+        assert_eq!(a.get_f64("missing", 1.5).unwrap(), 1.5);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(parse("--qps 1").is_err());
+        assert!(parse("bench positional").is_err());
+        assert!(parse("bench --qps notanumber")
+            .unwrap()
+            .get_f64("qps", 0.0)
+            .is_err());
+    }
+
+    #[test]
+    fn empty_defaults_to_help() {
+        let a = Args::parse(Vec::<String>::new()).unwrap();
+        assert_eq!(a.command, "help");
+    }
+}

@@ -1,0 +1,444 @@
+//! Configuration system: serving mode, hardware/model calibration profiles,
+//! and every scheduler constant from the paper, plus a dependency-free
+//! TOML-subset parser so deployments are file-configurable.
+
+mod parse;
+mod profile;
+
+pub use parse::{parse_kv_file, ParseError};
+pub use profile::ModelProfile;
+
+/// Serving mode: TokenCake proper, its ablation components, and the
+/// baseline systems reproduced for §7 (see `baselines` module).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Mode {
+    /// Full TokenCake: Spatial + Temporal schedulers, coordinated (§3.2).
+    TokenCake,
+    /// vLLM v0.8.6-style baseline: FCFS continuous batching, paged blocks,
+    /// recompute-on-evict, no offload, agent-agnostic.
+    Vllm,
+    /// vLLM + prefix caching (shared prompt reuse).
+    VllmPrefix,
+    /// Mooncake-style remote/CPU KV store: *reactive* offload under memory
+    /// pressure (LRU victims), prefix reuse, agent-agnostic (Table 2).
+    Mooncake,
+    /// Parrot-style agent-aware, compute-centric scheduling: DAG priorities
+    /// order the queue but memory is unmanaged (§7.4).
+    Parrot,
+    /// Ablation: Spatial Scheduler only (§7.3 "agent").
+    AgentOnly,
+    /// Ablation: Temporal Scheduler only, agent-blind (§7.3 "offload").
+    OffloadOnly,
+    /// InferCept-style: reactive swap on every function-call interception,
+    /// FCFS upload (Table 2 comparison row).
+    Infercept,
+}
+
+impl Mode {
+    pub fn parse(s: &str) -> Option<Mode> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "tokencake" | "full" => Mode::TokenCake,
+            "vllm" | "baseline" => Mode::Vllm,
+            "vllm-prefix" | "vllmprefix" => Mode::VllmPrefix,
+            "mooncake" => Mode::Mooncake,
+            "parrot" => Mode::Parrot,
+            "agent" | "agent-only" => Mode::AgentOnly,
+            "offload" | "offload-only" => Mode::OffloadOnly,
+            "infercept" => Mode::Infercept,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Mode::TokenCake => "tokencake",
+            Mode::Vllm => "vllm",
+            Mode::VllmPrefix => "vllm-prefix",
+            Mode::Mooncake => "mooncake",
+            Mode::Parrot => "parrot",
+            Mode::AgentOnly => "agent",
+            Mode::OffloadOnly => "offload",
+            Mode::Infercept => "infercept",
+        }
+    }
+
+    /// Does this mode run the Spatial Scheduler (agent-aware priorities +
+    /// dynamic reservation)?
+    pub fn agent_aware(&self) -> bool {
+        matches!(self, Mode::TokenCake | Mode::AgentOnly | Mode::Parrot)
+    }
+
+    /// Does this mode reserve memory for critical agents? (Parrot is
+    /// agent-aware but compute-centric: schedules, never reserves.)
+    pub fn reserves_memory(&self) -> bool {
+        matches!(self, Mode::TokenCake | Mode::AgentOnly)
+    }
+
+    /// Does this mode proactively offload on function-call events?
+    pub fn fc_offload(&self) -> bool {
+        matches!(
+            self,
+            Mode::TokenCake | Mode::OffloadOnly | Mode::Infercept
+        )
+    }
+
+    /// Does this mode offload reactively under memory pressure?
+    pub fn reactive_offload(&self) -> bool {
+        matches!(self, Mode::Mooncake)
+    }
+
+    /// Does this mode reuse cached prefixes across requests?
+    pub fn prefix_cache(&self) -> bool {
+        matches!(self, Mode::VllmPrefix | Mode::Mooncake | Mode::TokenCake)
+    }
+}
+
+/// Waiting-request selection policy for the opportunistic gate (§4.2, Fig 15).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SelectionPolicy {
+    /// First request in queue order that fits (paper default: preserves the
+    /// order the Spatial Scheduler already optimized).
+    FirstFit,
+    /// Request whose demand best matches the freed capacity.
+    BestFit,
+    /// Highest-priority request that fits.
+    PriorityFirst,
+}
+
+impl SelectionPolicy {
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "first_fit" | "first-fit" | "first" => SelectionPolicy::FirstFit,
+            "best_fit" | "best-fit" | "best" => SelectionPolicy::BestFit,
+            "priority_first" | "priority" => SelectionPolicy::PriorityFirst,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SelectionPolicy::FirstFit => "first_fit",
+            SelectionPolicy::BestFit => "best_fit",
+            SelectionPolicy::PriorityFirst => "priority_first",
+        }
+    }
+}
+
+/// Every tunable of the two schedulers, defaulting to the paper's published
+/// constants (§5.1, §4.2, §4.3).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PolicyConfig {
+    // ---- Spatial Scheduler: dynamic partitioning (Algorithm 2) ----
+    /// Initial reserved-pool fraction ρ.
+    pub reserve_init: f64,
+    /// ρ adjustment step per window.
+    pub reserve_step: f64,
+    /// Clamp bounds for ρ.
+    pub reserve_min: f64,
+    pub reserve_max: f64,
+    /// GPU-usage watermarks driving ρ up/down.
+    pub high_watermark: f64,
+    pub low_watermark: f64,
+    /// Fraction of active agent types designated critical (top by S_a).
+    pub critical_ratio: f64,
+    /// Reservation-plan adjustment window (µs).
+    pub adjust_window_us: u64,
+    /// Minimum per-type quota worth reserving (blocks); smaller shares are
+    /// pure fragmentation and stay in the shared pool.
+    pub min_quota_blocks: u32,
+
+    // ---- Per-request priority (Eq. 5) ----
+    pub alpha_struct: f64,
+    pub alpha_sync: f64,
+    pub alpha_aging: f64,
+
+    // ---- Agent-type score (Eq. 6) ----
+    pub w_structural: f64,
+    pub w_urgency: f64,
+    pub w_recompute: f64,
+    pub w_graph: f64,
+    /// Preemption counts weigh more than waiting counts inside U_a —
+    /// preemption directly signals KV-capacity loss (§5.2).
+    pub urgency_preempt_coef: f64,
+    pub urgency_wait_coef: f64,
+
+    // ---- Temporal Scheduler (§4) ----
+    /// Eq. 1 blend weight on the user-supplied estimate.
+    pub forecast_alpha_user: f64,
+    /// EWMA smoothing for observed tool durations.
+    pub forecast_ewma: f64,
+    /// Conservative system-wide default when no estimate exists (µs).
+    pub forecast_default_us: u64,
+    /// Waiting-request selection policy for the opportunistic gate.
+    pub selection: SelectionPolicy,
+    /// Gate: GPU free-fraction must be *below* (1 - this) — i.e. usage above
+    /// this — before offload is considered. Fig 16's "spatial pressure
+    /// watermark" sweeps the waiting-demand threshold below.
+    pub offload_usage_threshold: f64,
+    /// Gate: waiting demand (blocks / total) that makes freed blocks useful.
+    pub pressure_watermark: f64,
+    /// Soft-score acceptance threshold.
+    pub score_threshold: f64,
+    /// Penalty weight for offloading critical agents.
+    pub critical_penalty: f64,
+    /// Penalty for requests close to completion.
+    pub near_completion_penalty: f64,
+    /// Penalty per prior migration (churn).
+    pub churn_penalty: f64,
+    /// Emergency override: GPU usage above this allows offloading even
+    /// high-importance requests when the stall margin is large.
+    pub emergency_usage: f64,
+    /// Stall/transfer ratio considered a "large margin".
+    pub emergency_margin: f64,
+    /// Predictive upload: start gradual reservation this early (fraction of
+    /// predicted remaining stall).
+    pub upload_lead_frac: f64,
+
+    // ---- Mooncake-style reactive policy ----
+    /// Reactive offload triggers when GPU usage exceeds this.
+    pub reactive_usage_threshold: f64,
+}
+
+impl Default for PolicyConfig {
+    fn default() -> Self {
+        Self {
+            reserve_init: 0.05,
+            reserve_step: 0.05,
+            reserve_min: 0.05,
+            reserve_max: 0.30,
+            high_watermark: 0.75,
+            low_watermark: 0.40,
+            critical_ratio: 0.75,
+            adjust_window_us: 1_000_000,
+            min_quota_blocks: 8,
+
+            alpha_struct: 0.5,
+            alpha_sync: 0.3,
+            alpha_aging: 0.2,
+
+            w_structural: 0.35,
+            w_urgency: 0.30,
+            w_recompute: 0.20,
+            w_graph: 0.15,
+            urgency_preempt_coef: 3.0,
+            urgency_wait_coef: 1.0,
+
+            forecast_alpha_user: 0.4,
+            forecast_ewma: 0.3,
+            forecast_default_us: 2_000_000,
+            selection: SelectionPolicy::FirstFit,
+            offload_usage_threshold: 0.50,
+            pressure_watermark: 0.05,
+            score_threshold: 0.35,
+            critical_penalty: 0.60,
+            near_completion_penalty: 0.25,
+            churn_penalty: 0.15,
+            emergency_usage: 0.95,
+            emergency_margin: 4.0,
+            upload_lead_frac: 0.35,
+
+            reactive_usage_threshold: 0.90,
+        }
+    }
+}
+
+/// Top-level serving configuration.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    pub mode: Mode,
+    pub profile: ModelProfile,
+    pub policy: PolicyConfig,
+    /// Maximum sequences batched per decode iteration.
+    pub max_batch: usize,
+    /// Maximum prefill tokens admitted per iteration (chunked prefill).
+    pub max_prefill_tokens: u32,
+    /// Master RNG seed (workload, tools, corpus).
+    pub seed: u64,
+    /// Fraction of GPU KV pool available (paper §7.3 uses 0.5 for the
+    /// ablation study to induce pressure).
+    pub gpu_mem_frac: f64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            mode: Mode::TokenCake,
+            profile: ModelProfile::qwen14b_a100(),
+            policy: PolicyConfig::default(),
+            max_batch: 64,
+            max_prefill_tokens: 2048,
+            seed: 0xC0FFEE,
+            gpu_mem_frac: 1.0,
+        }
+    }
+}
+
+impl ServeConfig {
+    pub fn with_mode(mut self, mode: Mode) -> Self {
+        self.mode = mode;
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn with_gpu_mem_frac(mut self, frac: f64) -> Self {
+        assert!(frac > 0.0 && frac <= 1.0);
+        self.gpu_mem_frac = frac;
+        self
+    }
+
+    /// Effective GPU KV blocks after the memory fraction.
+    pub fn gpu_blocks(&self) -> u32 {
+        ((self.profile.gpu_blocks as f64) * self.gpu_mem_frac) as u32
+    }
+
+    /// Load overrides from a TOML-subset file (see `parse_kv_file`).
+    pub fn apply_file(&mut self, path: &str) -> Result<(), ParseError> {
+        let kv = parse_kv_file(path)?;
+        for ((section, key), value) in kv.iter() {
+            self.apply_kv(section, key, value)?;
+        }
+        Ok(())
+    }
+
+    /// Apply one (section, key, value) override.
+    pub fn apply_kv(
+        &mut self,
+        section: &str,
+        key: &str,
+        value: &str,
+    ) -> Result<(), ParseError> {
+        let bad = || ParseError::BadValue {
+            section: section.to_string(),
+            key: key.to_string(),
+            value: value.to_string(),
+        };
+        let f = |v: &str| v.parse::<f64>().map_err(|_| bad());
+        let u = |v: &str| v.parse::<u64>().map_err(|_| bad());
+        match (section, key) {
+            ("serve", "mode") => self.mode = Mode::parse(value).ok_or_else(bad)?,
+            ("serve", "profile") => {
+                self.profile =
+                    ModelProfile::by_name(value).ok_or_else(bad)?
+            }
+            ("serve", "max_batch") => self.max_batch = u(value)? as usize,
+            ("serve", "max_prefill_tokens") => {
+                self.max_prefill_tokens = u(value)? as u32
+            }
+            ("serve", "seed") => self.seed = u(value)?,
+            ("serve", "gpu_mem_frac") => self.gpu_mem_frac = f(value)?,
+            ("policy", "reserve_init") => self.policy.reserve_init = f(value)?,
+            ("policy", "reserve_step") => self.policy.reserve_step = f(value)?,
+            ("policy", "reserve_min") => self.policy.reserve_min = f(value)?,
+            ("policy", "reserve_max") => self.policy.reserve_max = f(value)?,
+            ("policy", "high_watermark") => {
+                self.policy.high_watermark = f(value)?
+            }
+            ("policy", "low_watermark") => {
+                self.policy.low_watermark = f(value)?
+            }
+            ("policy", "critical_ratio") => {
+                self.policy.critical_ratio = f(value)?
+            }
+            ("policy", "adjust_window_us") => {
+                self.policy.adjust_window_us = u(value)?
+            }
+            ("policy", "selection") => {
+                self.policy.selection =
+                    SelectionPolicy::parse(value).ok_or_else(bad)?
+            }
+            ("policy", "pressure_watermark") => {
+                self.policy.pressure_watermark = f(value)?
+            }
+            ("policy", "score_threshold") => {
+                self.policy.score_threshold = f(value)?
+            }
+            ("policy", "forecast_alpha_user") => {
+                self.policy.forecast_alpha_user = f(value)?
+            }
+            ("policy", "forecast_ewma") => {
+                self.policy.forecast_ewma = f(value)?
+            }
+            _ => {
+                return Err(ParseError::UnknownKey {
+                    section: section.to_string(),
+                    key: key.to_string(),
+                })
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mode_parse_roundtrip() {
+        for m in [
+            Mode::TokenCake,
+            Mode::Vllm,
+            Mode::VllmPrefix,
+            Mode::Mooncake,
+            Mode::Parrot,
+            Mode::AgentOnly,
+            Mode::OffloadOnly,
+            Mode::Infercept,
+        ] {
+            assert_eq!(Mode::parse(m.name()), Some(m));
+        }
+        assert_eq!(Mode::parse("nonsense"), None);
+    }
+
+    #[test]
+    fn mode_capability_matrix_matches_table2() {
+        // Table 2: TokenCake proactive FC-triggered; Mooncake reactive
+        // pressure-triggered; Parrot schedules but never reserves/offloads.
+        assert!(Mode::TokenCake.fc_offload());
+        assert!(Mode::TokenCake.reserves_memory());
+        assert!(!Mode::Mooncake.fc_offload());
+        assert!(Mode::Mooncake.reactive_offload());
+        assert!(Mode::Parrot.agent_aware());
+        assert!(!Mode::Parrot.reserves_memory());
+        assert!(!Mode::Vllm.fc_offload());
+        assert!(Mode::Infercept.fc_offload());
+        assert!(!Mode::OffloadOnly.agent_aware());
+        assert!(Mode::AgentOnly.reserves_memory());
+        assert!(!Mode::AgentOnly.fc_offload());
+    }
+
+    #[test]
+    fn defaults_match_paper_constants() {
+        let p = PolicyConfig::default();
+        assert_eq!(p.reserve_init, 0.05);
+        assert_eq!(p.reserve_step, 0.05);
+        assert_eq!(p.reserve_max, 0.30);
+        assert_eq!(p.high_watermark, 0.75);
+        assert_eq!(p.low_watermark, 0.40);
+        assert_eq!(p.critical_ratio, 0.75);
+        assert_eq!(p.selection, SelectionPolicy::FirstFit);
+    }
+
+    #[test]
+    fn apply_kv_overrides() {
+        let mut c = ServeConfig::default();
+        c.apply_kv("serve", "mode", "mooncake").unwrap();
+        c.apply_kv("policy", "pressure_watermark", "0.08").unwrap();
+        c.apply_kv("policy", "selection", "best_fit").unwrap();
+        assert_eq!(c.mode, Mode::Mooncake);
+        assert_eq!(c.policy.pressure_watermark, 0.08);
+        assert_eq!(c.policy.selection, SelectionPolicy::BestFit);
+        assert!(c.apply_kv("serve", "mode", "bogus").is_err());
+        assert!(c.apply_kv("nope", "x", "1").is_err());
+    }
+
+    #[test]
+    fn gpu_mem_frac_scales_blocks() {
+        let c = ServeConfig::default().with_gpu_mem_frac(0.5);
+        assert_eq!(c.gpu_blocks(), c.profile.gpu_blocks / 2);
+    }
+}

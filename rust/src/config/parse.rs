@@ -1,0 +1,126 @@
+//! A dependency-free TOML-subset parser: `[section]` headers and
+//! `key = value` lines, `#` comments, quoted or bare values. Enough to make
+//! deployments file-configurable without serde (not vendored offline).
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ParseError {
+    Io(String),
+    Syntax { line: usize, text: String },
+    UnknownKey { section: String, key: String },
+    BadValue { section: String, key: String, value: String },
+}
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ParseError::Io(e) => write!(f, "io error: {e}"),
+            ParseError::Syntax { line, text } => {
+                write!(f, "syntax error at line {line}: {text:?}")
+            }
+            ParseError::UnknownKey { section, key } => {
+                write!(f, "unknown key [{section}] {key}")
+            }
+            ParseError::BadValue { section, key, value } => {
+                write!(f, "bad value for [{section}] {key}: {value:?}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+/// Parse file contents into ((section, key) -> value), last write wins.
+pub fn parse_kv_str(
+    content: &str,
+) -> Result<BTreeMap<(String, String), String>, ParseError> {
+    let mut out = BTreeMap::new();
+    let mut section = String::from("serve");
+    for (idx, raw) in content.lines().enumerate() {
+        let line = match raw.find('#') {
+            Some(i) => &raw[..i],
+            None => raw,
+        }
+        .trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(name) = line.strip_prefix('[') {
+            let name = name.strip_suffix(']').ok_or(ParseError::Syntax {
+                line: idx + 1,
+                text: raw.to_string(),
+            })?;
+            section = name.trim().to_string();
+            continue;
+        }
+        let (k, v) = line.split_once('=').ok_or(ParseError::Syntax {
+            line: idx + 1,
+            text: raw.to_string(),
+        })?;
+        let key = k.trim().to_string();
+        let mut value = v.trim();
+        if value.len() >= 2
+            && ((value.starts_with('"') && value.ends_with('"'))
+                || (value.starts_with('\'') && value.ends_with('\'')))
+        {
+            value = &value[1..value.len() - 1];
+        }
+        if key.is_empty() {
+            return Err(ParseError::Syntax {
+                line: idx + 1,
+                text: raw.to_string(),
+            });
+        }
+        out.insert((section.clone(), key), value.to_string());
+    }
+    Ok(out)
+}
+
+/// Parse a file from disk.
+pub fn parse_kv_file(
+    path: &str,
+) -> Result<BTreeMap<(String, String), String>, ParseError> {
+    let content = std::fs::read_to_string(path)
+        .map_err(|e| ParseError::Io(format!("{path}: {e}")))?;
+    parse_kv_str(&content)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_comments_quotes() {
+        let text = r#"
+# a comment
+mode = tokencake   # trailing comment
+[policy]
+pressure_watermark = 0.06
+selection = "best_fit"
+[serve]
+seed = 42
+"#;
+        let kv = parse_kv_str(text).unwrap();
+        assert_eq!(
+            kv[&("serve".into(), "mode".into())],
+            "tokencake".to_string()
+        );
+        assert_eq!(kv[&("policy".into(), "selection".into())], "best_fit");
+        assert_eq!(kv[&("serve".into(), "seed".into())], "42");
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse_kv_str("just words").is_err());
+        assert!(parse_kv_str("[unclosed").is_err());
+        assert!(parse_kv_str("= novalue").is_err());
+    }
+
+    #[test]
+    fn last_write_wins() {
+        let kv = parse_kv_str("a = 1\na = 2").unwrap();
+        assert_eq!(kv[&("serve".into(), "a".into())], "2");
+    }
+}

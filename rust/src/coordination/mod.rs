@@ -1,0 +1,136 @@
+//! Shared coordination layer (§3.2).
+//!
+//! The Temporal and Spatial Schedulers optimize different dimensions but
+//! compete for the same GPU memory. They coordinate through (a) a shared
+//! [`PressureSnapshot`] so both act on one notion of pressure, and (b) a
+//! fixed four-phase execution order within each scheduling step:
+//!
+//! 1. refresh application metadata, build the pressure snapshot;
+//! 2. update the Spatial Scheduler's reservation plan (window expiry);
+//! 3. Temporal Scheduler: reserve blocks for imminent uploads, start
+//!    ready uploads, evaluate newly stalled requests for offload;
+//! 4. Spatial Scheduler: form the next batch under agent-aware admission
+//!    control (shared / reserved / defer).
+//!
+//! [`ServeState`] owns every piece of state both schedulers read or write;
+//! the schedulers themselves are free functions over it (`temporal::*`,
+//! `spatial::*`), and both engines (sim and PJRT-real) drive the same
+//! [`step`] entry point.
+
+mod request;
+mod state;
+
+pub use request::{
+    AppId, AppInst, FcRt, PhaseRt, ReqState, Request, RequestId,
+};
+pub use state::{ServeState, ThroughputEstimator, TypeRegistry};
+
+use crate::kvcache::TransferId;
+
+/// Side effects the schedulers emit for the engine to realize (the engine
+/// owns the event clock; schedulers stay engine-agnostic).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Action {
+    /// A block migration was issued; fire `TransferDone(xfer)` at
+    /// `completes_us`.
+    TransferIssued {
+        xfer: TransferId,
+        completes_us: u64,
+    },
+}
+
+use crate::config::Mode;
+
+/// The shared pressure snapshot (§3.2): "GPU and CPU block availability,
+/// per-agent-type reserved capacity, waiting demand, offloadable stalled
+/// blocks, and pending upload debt."
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct PressureSnapshot {
+    pub gpu_total: u32,
+    pub gpu_free: u32,
+    pub gpu_pending_free: u32,
+    pub shared_free: u32,
+    pub reserved_outstanding: u32,
+    pub cpu_free: u32,
+    /// Blocks demanded by all waiting requests.
+    pub waiting_demand: u32,
+    /// Blocks demanded by waiting requests of critical types (D_critical).
+    pub critical_demand: u32,
+    /// Blocks held by stalled (offloadable) requests.
+    pub offloadable_stalled: u32,
+    /// Blocks of in-flight H2D uploads (upload debt).
+    pub upload_debt: u32,
+    /// Number of waiting requests.
+    pub waiting_count: u32,
+    /// GPU occupancy in [0,1] (pending-free counts as occupied).
+    pub usage: f64,
+}
+
+impl PressureSnapshot {
+    /// Waiting demand as a fraction of the pool — the quantity the
+    /// Fig 16 "spatial pressure watermark" gates on.
+    pub fn waiting_pressure(&self) -> f64 {
+        if self.gpu_total == 0 {
+            return 0.0;
+        }
+        self.waiting_demand as f64 / self.gpu_total as f64
+    }
+}
+
+/// One full scheduling step (the §3.2 fixed order). Both engines call this
+/// once per engine iteration.
+pub fn step(st: &mut ServeState, now_us: u64) {
+    st.metrics.counters.sched_steps += 1;
+
+    // Phase 1: refresh metadata + snapshot.
+    st.refresh_priorities(now_us);
+    let snap = st.snapshot();
+
+    // Phase 2: reservation plan (TokenCake / agent-only).
+    if st.cfg.mode.reserves_memory() {
+        crate::spatial::maybe_update_reservations(st, now_us);
+    }
+
+    // Phase 3: temporal scheduler.
+    match st.cfg.mode {
+        Mode::TokenCake | Mode::OffloadOnly | Mode::Infercept => {
+            crate::temporal::run_phase(st, &snap, now_us);
+        }
+        Mode::Mooncake => {
+            crate::baselines::mooncake_reactive_phase(st, &snap, now_us);
+        }
+        _ => {}
+    }
+
+    // Phase 4: admission control.
+    crate::spatial::admit(st, now_us);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ServeConfig;
+    use crate::graph::templates;
+
+    #[test]
+    fn snapshot_reflects_pool_state() {
+        let cfg = ServeConfig::default();
+        let mut st = ServeState::new(cfg);
+        let g = templates::code_writer();
+        st.register_graph(&g);
+        let snap = st.snapshot();
+        assert_eq!(snap.gpu_free, snap.gpu_total);
+        assert_eq!(snap.waiting_demand, 0);
+        assert_eq!(snap.usage, 0.0);
+        assert_eq!(snap.waiting_pressure(), 0.0);
+    }
+
+    #[test]
+    fn step_runs_all_phases_without_work() {
+        let mut st = ServeState::new(ServeConfig::default());
+        let g = templates::rag();
+        st.register_graph(&g);
+        step(&mut st, 1000);
+        assert_eq!(st.metrics.counters.sched_steps, 1);
+    }
+}

@@ -1,0 +1,324 @@
+//! Request and application-instance lifecycle state.
+//!
+//! A *request* is one agent-node execution: prefill its prompt, then
+//! alternate generation phases and function calls (`LLM1 → FC → LLM2`,
+//! Fig 2b), all against one growing KV cache. An *application instance*
+//! tracks a DAG of such requests plus standalone function nodes.
+
+use crate::graph::{CallSpec, FuncKind, NodeId};
+use crate::kvcache::{AgentTypeId, BlockId, CpuBlockId};
+use crate::workload::SampledLengths;
+
+/// Unique request id.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct RequestId(pub u64);
+
+/// Unique application-instance id.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct AppId(pub u64);
+
+/// Request lifecycle. The function-call sub-states are exactly the
+/// MCPManager's five states (§6.2): running, pending-offload, offloaded,
+/// pending-upload, uploaded — plus the queue states around them.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReqState {
+    /// In the waiting queue (new, preempted-for-recompute, or resumed).
+    Waiting,
+    /// Admitted; prompt prefill in progress (chunked).
+    Prefilling,
+    /// In the decode batch, generating.
+    Running,
+    /// Function call in flight; KV cache resident on GPU.
+    Stalled,
+    /// Function call in flight; D2H offload transfer in progress.
+    PendingOffload,
+    /// KV cache on CPU (function call may or may not have finished).
+    Offloaded,
+    /// H2D upload transfer in progress.
+    PendingUpload,
+    /// KV cache back on GPU after upload; awaiting tool finish and/or
+    /// re-admission to the batch.
+    Uploaded,
+    /// All phases complete.
+    Finished,
+}
+
+impl ReqState {
+    /// Is the request currently stalled on a function call (any residency)?
+    pub fn is_fc_stalled(&self) -> bool {
+        matches!(
+            self,
+            ReqState::Stalled
+                | ReqState::PendingOffload
+                | ReqState::Offloaded
+                | ReqState::PendingUpload
+                | ReqState::Uploaded
+        )
+    }
+
+    /// Does the request occupy GPU blocks in this state?
+    pub fn holds_gpu(&self) -> bool {
+        matches!(
+            self,
+            ReqState::Prefilling
+                | ReqState::Running
+                | ReqState::Stalled
+                | ReqState::Uploaded
+        )
+    }
+}
+
+/// One generation phase at runtime (token counts already corpus-scaled).
+#[derive(Debug, Clone)]
+pub struct PhaseRt {
+    pub gen_tokens: u32,
+    pub call: Option<CallSpec>,
+    /// Tokens the tool's result appends to the context before the next
+    /// phase (drives post-FC block growth — the resume contention source).
+    pub result_tokens: u32,
+}
+
+/// In-flight function call bookkeeping.
+#[derive(Debug, Clone)]
+pub struct FcRt {
+    /// Function type name (forecasting model key, §4.1).
+    pub name: String,
+    pub started_us: u64,
+    /// The Temporal Scheduler's prediction of completion (Eq. 1 based).
+    pub predicted_end_us: u64,
+    /// Set true by the call_finish event.
+    pub tool_done: bool,
+    /// When the tool actually finished (valid once `tool_done`).
+    pub finished_us: u64,
+    pub result_tokens: u32,
+    /// User-supplied estimate carried for forecaster feedback.
+    pub user_estimate_us: Option<u64>,
+}
+
+/// Result size each tool kind appends to the agent's context.
+pub fn result_tokens(kind: &FuncKind) -> u32 {
+    match kind {
+        FuncKind::FileRead => 320,
+        FuncKind::FileWrite => 48,
+        FuncKind::WebSearch => 480,
+        FuncKind::FileQuery => 256,
+        FuncKind::DataAnalysis => 384,
+        FuncKind::UserConfirm => 32,
+        FuncKind::ExternalTest => 320,
+        FuncKind::Git => 96,
+        FuncKind::Database => 256,
+        FuncKind::AiGeneration => 512,
+        FuncKind::Custom { .. } => 128,
+    }
+}
+
+/// One agent-node execution.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: RequestId,
+    pub app_id: AppId,
+    pub node: NodeId,
+    pub type_id: AgentTypeId,
+    pub critical_path: bool,
+    pub static_priority: f64,
+    /// Structural importance from the DAG (cached at creation).
+    pub f_struct: f64,
+    /// When the node's dependencies were satisfied.
+    pub created_us: u64,
+    /// Last time the request (re-)entered the waiting queue.
+    pub queue_enter_us: u64,
+    /// Prompt length (incl. inherited parent output and shared prefix).
+    pub prompt_tokens: u32,
+    /// Shared-prefix tokens eligible for prefix-cache reuse.
+    pub shared_prefix_tokens: u32,
+    pub phases: Vec<PhaseRt>,
+    pub cur_phase: usize,
+    pub gen_in_phase: u32,
+    /// Tokens currently represented in the KV cache.
+    pub context_tokens: u32,
+    pub state: ReqState,
+    /// GPU blocks held (valid when `state.holds_gpu()` or pending offload).
+    pub blocks: Vec<BlockId>,
+    /// How many of `blocks` are charged against the type's reserved quota.
+    pub reserved_charged: u32,
+    /// CPU blocks holding the offloaded cache.
+    pub cpu_blocks: Vec<CpuBlockId>,
+    /// Prefill tokens still owed before decode can start.
+    pub remaining_prefill: u32,
+    pub fc: Option<FcRt>,
+    /// Has the opportunistic gate already ruled on this stall? (The gate
+    /// evaluates *newly* stalled requests once per function call, §3.2.)
+    pub offload_evaluated: bool,
+    /// Completed offload+upload round trips (churn signal for the gate).
+    pub migrations: u32,
+    pub preempt_count: u32,
+    /// Set after a self-preemption: this request already hit the growth
+    /// wall once, so re-admission must reserve its full worst-case need
+    /// (prevents admit→grow→fail→self-preempt cycles).
+    pub admit_full: bool,
+    /// Selected as an offload beneficiary (§4.2): admission considers it
+    /// first so the freed blocks become scheduled work. Cleared on admit.
+    pub pulled: bool,
+    /// Refreshed per-request priority P_req (Eq. 5).
+    pub priority: f64,
+    /// Blocks gradually pre-reserved for the predictive upload (Eq. 4).
+    pub upload_reserved: Vec<BlockId>,
+    pub upload_reserved_charged: u32,
+    pub finished_us: Option<u64>,
+    pub tokens_generated: u32,
+    /// Cumulative time spent waiting in queue (µs).
+    pub wait_time_us: u64,
+    /// Total execution time spent running/prefilling (µs) — H_a input.
+    pub exec_time_us: u64,
+}
+
+impl Request {
+    /// Total tokens this request will generate across all phases.
+    pub fn total_gen_target(&self) -> u32 {
+        self.phases.iter().map(|p| p.gen_tokens).sum()
+    }
+
+    /// Completion fraction (0 at start, → 1 near finish).
+    pub fn progress(&self) -> f64 {
+        let t = self.total_gen_target();
+        if t == 0 {
+            return 1.0;
+        }
+        self.tokens_generated as f64 / t as f64
+    }
+
+    /// Tokens the context will hold when fully resumed (for upload sizing).
+    pub fn blocks_held(&self) -> u32 {
+        self.blocks.len() as u32
+    }
+
+    /// Does the current phase end with a function call?
+    pub fn current_call(&self) -> Option<&CallSpec> {
+        self.phases.get(self.cur_phase)?.call.as_ref()
+    }
+
+    /// Is this the last phase?
+    pub fn on_last_phase(&self) -> bool {
+        self.cur_phase + 1 >= self.phases.len()
+    }
+}
+
+/// A live application instance: DAG progress tracking.
+#[derive(Debug, Clone)]
+pub struct AppInst {
+    pub id: AppId,
+    pub arrival_us: u64,
+    /// Unsatisfied parent count per node.
+    pub pending_parents: Vec<u32>,
+    pub node_done: Vec<bool>,
+    pub nodes_remaining: u32,
+    pub scales: SampledLengths,
+    pub finished_us: Option<u64>,
+    /// Request spawned per node (None for standalone func nodes or
+    /// not-yet-ready nodes).
+    pub node_req: Vec<Option<RequestId>>,
+}
+
+impl AppInst {
+    /// Fraction of the graph still unfinished (f_aging input).
+    pub fn fraction_remaining(&self) -> f64 {
+        if self.node_done.is_empty() {
+            return 0.0;
+        }
+        self.nodes_remaining as f64 / self.node_done.len() as f64
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.nodes_remaining == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk_request() -> Request {
+        Request {
+            id: RequestId(1),
+            app_id: AppId(1),
+            node: NodeId(0),
+            type_id: 0,
+            critical_path: false,
+            static_priority: 0.5,
+            f_struct: 0.5,
+            created_us: 0,
+            queue_enter_us: 0,
+            prompt_tokens: 100,
+            shared_prefix_tokens: 0,
+            phases: vec![
+                PhaseRt {
+                    gen_tokens: 50,
+                    call: Some(CallSpec::new(FuncKind::Git)),
+                    result_tokens: 96,
+                },
+                PhaseRt {
+                    gen_tokens: 30,
+                    call: None,
+                    result_tokens: 0,
+                },
+            ],
+            cur_phase: 0,
+            gen_in_phase: 0,
+            context_tokens: 100,
+            state: ReqState::Waiting,
+            blocks: Vec::new(),
+            reserved_charged: 0,
+            cpu_blocks: Vec::new(),
+            remaining_prefill: 100,
+            fc: None,
+            offload_evaluated: false,
+            migrations: 0,
+            preempt_count: 0,
+            admit_full: false,
+            pulled: false,
+            priority: 0.0,
+            upload_reserved: Vec::new(),
+            upload_reserved_charged: 0,
+            finished_us: None,
+            tokens_generated: 0,
+            wait_time_us: 0,
+            exec_time_us: 0,
+        }
+    }
+
+    #[test]
+    fn progress_and_targets() {
+        let mut r = mk_request();
+        assert_eq!(r.total_gen_target(), 80);
+        assert_eq!(r.progress(), 0.0);
+        r.tokens_generated = 40;
+        assert!((r.progress() - 0.5).abs() < 1e-9);
+        assert!(r.current_call().is_some());
+        assert!(!r.on_last_phase());
+        r.cur_phase = 1;
+        assert!(r.on_last_phase());
+        assert!(r.current_call().is_none());
+    }
+
+    #[test]
+    fn state_predicates() {
+        assert!(ReqState::Stalled.is_fc_stalled());
+        assert!(ReqState::Offloaded.is_fc_stalled());
+        assert!(!ReqState::Running.is_fc_stalled());
+        assert!(ReqState::Running.holds_gpu());
+        assert!(ReqState::Stalled.holds_gpu());
+        assert!(!ReqState::Offloaded.holds_gpu());
+        assert!(!ReqState::PendingOffload.holds_gpu(), "pending-free");
+    }
+
+    #[test]
+    fn result_tokens_cover_all_kinds() {
+        for k in [
+            FuncKind::FileRead,
+            FuncKind::WebSearch,
+            FuncKind::AiGeneration,
+        ] {
+            assert!(result_tokens(&k) > 0);
+        }
+    }
+}

@@ -1,0 +1,691 @@
+//! [`ServeState`]: the single source of truth both schedulers and both
+//! engines operate on — pools, queues, request/app tables, forecaster,
+//! throughput estimate, reservation state, metrics.
+
+use std::collections::HashMap;
+use std::collections::VecDeque;
+
+use super::request::{
+    result_tokens, AppId, AppInst, PhaseRt, ReqState, Request, RequestId,
+};
+use super::PressureSnapshot;
+use crate::config::ServeConfig;
+use crate::graph::{AppGraph, NodeId, NodeKind};
+use crate::kvcache::{
+    AgentTypeId, CpuBlockPool, GpuPool, MigrationLedger, PrefixIndex,
+};
+use crate::metrics::MetricsBundle;
+use crate::temporal::Forecaster;
+use crate::workload::SampledLengths;
+
+/// Interns agent-type names and accumulates per-type counters used by the
+/// agent-type score S_a (Eq. 6): preemptions weigh KV-capacity loss,
+/// waiting counts weigh unserved demand.
+#[derive(Debug, Clone, Default)]
+pub struct TypeRegistry {
+    names: Vec<String>,
+    by_name: HashMap<String, AgentTypeId>,
+    pub preempts: Vec<f64>,
+    pub waits: Vec<f64>,
+}
+
+impl TypeRegistry {
+    pub fn intern(&mut self, name: &str) -> AgentTypeId {
+        if let Some(&id) = self.by_name.get(name) {
+            return id;
+        }
+        let id = self.names.len() as AgentTypeId;
+        self.names.push(name.to_string());
+        self.by_name.insert(name.to_string(), id);
+        self.preempts.push(0.0);
+        self.waits.push(0.0);
+        id
+    }
+
+    pub fn name(&self, id: AgentTypeId) -> &str {
+        &self.names[id as usize]
+    }
+
+    pub fn len(&self) -> usize {
+        self.names.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.names.is_empty()
+    }
+
+    pub fn note_preempt(&mut self, id: AgentTypeId) {
+        self.preempts[id as usize] += 1.0;
+    }
+
+    pub fn note_wait(&mut self, id: AgentTypeId) {
+        self.waits[id as usize] += 1.0;
+    }
+
+    /// Exponential decay so urgency reflects *recent* failures to serve.
+    pub fn decay(&mut self, factor: f64) {
+        for v in self.preempts.iter_mut().chain(self.waits.iter_mut()) {
+            *v *= factor;
+        }
+    }
+}
+
+/// Observed decode throughput v_throughput (Algorithm 1) as an EWMA of
+/// tokens/second across engine iterations.
+#[derive(Debug, Clone)]
+pub struct ThroughputEstimator {
+    tokens_per_sec: f64,
+    seeded: bool,
+}
+
+impl Default for ThroughputEstimator {
+    fn default() -> Self {
+        Self {
+            // Conservative prior until the first iteration lands.
+            tokens_per_sec: 500.0,
+            seeded: false,
+        }
+    }
+}
+
+impl ThroughputEstimator {
+    pub fn record_iteration(&mut self, tokens: u32, dt_us: u64) {
+        if dt_us == 0 {
+            return;
+        }
+        let inst = tokens as f64 / (dt_us as f64 / 1e6);
+        if self.seeded {
+            self.tokens_per_sec = 0.9 * self.tokens_per_sec + 0.1 * inst;
+        } else {
+            self.tokens_per_sec = inst;
+            self.seeded = true;
+        }
+    }
+
+    pub fn tokens_per_sec(&self) -> f64 {
+        self.tokens_per_sec.max(1.0)
+    }
+}
+
+/// Spatial Scheduler mutable state (ρ, critical set, adjustment window).
+#[derive(Debug, Clone)]
+pub struct SpatialState {
+    /// Current reserved-pool fraction ρ (Algorithm 2 step 1).
+    pub rho: f64,
+    pub last_adjust_us: u64,
+    /// Currently designated critical agent types (Algorithm 2 step 2).
+    pub critical_types: Vec<AgentTypeId>,
+}
+
+/// The complete serving state shared by schedulers and engines.
+pub struct ServeState {
+    pub cfg: ServeConfig,
+    pub gpu: GpuPool,
+    pub cpu: CpuBlockPool,
+    pub prefix: PrefixIndex,
+    pub ledger: MigrationLedger,
+    pub graphs: Vec<AppGraph>,
+    pub reqs: HashMap<RequestId, Request>,
+    pub apps: HashMap<AppId, AppInst>,
+    /// App → graph template index.
+    pub app_template: HashMap<AppId, usize>,
+    /// Waiting queue in arrival order (schedulers may scan by priority).
+    pub waiting: VecDeque<RequestId>,
+    /// Requests currently in the decode batch.
+    pub running: Vec<RequestId>,
+    /// Requests admitted but still prefilling (chunked).
+    pub prefilling: Vec<RequestId>,
+    pub types: TypeRegistry,
+    pub forecaster: Forecaster,
+    pub throughput: ThroughputEstimator,
+    pub spatial: SpatialState,
+    pub metrics: MetricsBundle,
+    /// Scheduler-emitted side effects the engine drains each step.
+    pub outbox: Vec<super::Action>,
+    next_req: u64,
+    next_app: u64,
+}
+
+impl ServeState {
+    pub fn new(cfg: ServeConfig) -> Self {
+        let gpu = GpuPool::new(cfg.gpu_blocks());
+        let cpu = CpuBlockPool::new(cfg.profile.cpu_blocks);
+        let forecaster = Forecaster::new(
+            cfg.policy.forecast_alpha_user,
+            cfg.policy.forecast_ewma,
+            cfg.policy.forecast_default_us,
+        );
+        let rho = cfg.policy.reserve_init;
+        Self {
+            cfg,
+            gpu,
+            cpu,
+            prefix: PrefixIndex::new(),
+            ledger: MigrationLedger::new(),
+            graphs: Vec::new(),
+            reqs: HashMap::new(),
+            apps: HashMap::new(),
+            app_template: HashMap::new(),
+            waiting: VecDeque::new(),
+            running: Vec::new(),
+            prefilling: Vec::new(),
+            types: TypeRegistry::default(),
+            forecaster,
+            throughput: ThroughputEstimator::default(),
+            spatial: SpatialState {
+                rho,
+                last_adjust_us: 0,
+                critical_types: Vec::new(),
+            },
+            metrics: MetricsBundle::default(),
+            outbox: Vec::new(),
+            next_req: 0,
+            next_app: 0,
+        }
+    }
+
+    /// Register an application template; interns its agent types.
+    pub fn register_graph(&mut self, g: &AppGraph) -> usize {
+        for node in g.nodes() {
+            if let NodeKind::Agent(a) = &node.kind {
+                self.types.intern(&a.agent_type);
+            }
+        }
+        self.graphs.push(g.clone());
+        self.graphs.len() - 1
+    }
+
+    pub fn graph_of(&self, app: AppId) -> &AppGraph {
+        &self.graphs[self.app_template[&app]]
+    }
+
+    /// Create an application instance; roots with zero parents become
+    /// ready immediately (agent roots spawn requests into the waiting
+    /// queue; standalone func roots are returned for the engine to
+    /// schedule as delays).
+    pub fn spawn_app(
+        &mut self,
+        template: usize,
+        scales: SampledLengths,
+        now_us: u64,
+    ) -> (AppId, Vec<NodeId>) {
+        let id = AppId(self.next_app);
+        self.next_app += 1;
+        let g = &self.graphs[template];
+        let n = g.len();
+        let pending: Vec<u32> =
+            (0..n).map(|i| g.in_degree(NodeId(i as u32)) as u32).collect();
+        let app = AppInst {
+            id,
+            arrival_us: now_us,
+            pending_parents: pending,
+            node_done: vec![false; n],
+            nodes_remaining: n as u32,
+            scales,
+            finished_us: None,
+            node_req: vec![None; n],
+        };
+        self.apps.insert(id, app);
+        self.app_template.insert(id, template);
+        let ready: Vec<NodeId> = self.graphs[template]
+            .roots()
+            .into_iter()
+            .collect();
+        let mut func_nodes = Vec::new();
+        for node in ready {
+            match &self.graphs[template].node(node).kind {
+                NodeKind::Agent(_) => {
+                    self.spawn_request(id, node, now_us);
+                }
+                NodeKind::Func(_) => func_nodes.push(node),
+            }
+        }
+        (id, func_nodes)
+    }
+
+    /// Create the request for a ready agent node and enqueue it.
+    pub fn spawn_request(
+        &mut self,
+        app_id: AppId,
+        node: NodeId,
+        now_us: u64,
+    ) -> RequestId {
+        let template = self.app_template[&app_id];
+        let g = &self.graphs[template];
+        let spec = match &g.node(node).kind {
+            NodeKind::Agent(a) => a.clone(),
+            NodeKind::Func(_) => panic!("spawn_request on func node"),
+        };
+        let scales = self.apps[&app_id].scales;
+
+        // Prompt = shared prefix + own base + inherited parent output.
+        let mut inherited = 0u32;
+        for &p in g.parents(node) {
+            let contrib = match &g.node(p).kind {
+                NodeKind::Agent(_) => {
+                    let parent_req = self.apps[&app_id].node_req
+                        [p.0 as usize]
+                        .and_then(|rid| self.reqs.get(&rid));
+                    parent_req.map(|r| r.tokens_generated).unwrap_or(0)
+                }
+                NodeKind::Func(c) => result_tokens(&c.kind),
+            };
+            inherited += (contrib as f64 * spec.inherit_frac) as u32;
+        }
+        let prompt_tokens = (spec.shared_prefix
+            + scales.scale_prompt(spec.prompt_base)
+            + inherited)
+            .max(1);
+
+        let phases: Vec<PhaseRt> = spec
+            .phases
+            .iter()
+            .map(|p| PhaseRt {
+                gen_tokens: scales.scale_gen(p.gen_tokens),
+                call: p.call.clone(),
+                result_tokens: p
+                    .call
+                    .as_ref()
+                    .map(|c| result_tokens(&c.kind))
+                    .unwrap_or(0),
+            })
+            .collect();
+
+        let type_id = self.types.intern(&spec.agent_type);
+        let id = RequestId(self.next_req);
+        self.next_req += 1;
+        let req = Request {
+            id,
+            app_id,
+            node,
+            type_id,
+            critical_path: g.is_critical(node),
+            static_priority: spec.static_priority,
+            f_struct: g.f_struct(node),
+            created_us: now_us,
+            queue_enter_us: now_us,
+            prompt_tokens,
+            shared_prefix_tokens: spec.shared_prefix,
+            phases,
+            cur_phase: 0,
+            gen_in_phase: 0,
+            context_tokens: prompt_tokens,
+            state: ReqState::Waiting,
+            blocks: Vec::new(),
+            reserved_charged: 0,
+            cpu_blocks: Vec::new(),
+            remaining_prefill: prompt_tokens,
+            fc: None,
+            offload_evaluated: false,
+            migrations: 0,
+            preempt_count: 0,
+            admit_full: false,
+            pulled: false,
+            priority: 0.0,
+            upload_reserved: Vec::new(),
+            upload_reserved_charged: 0,
+            finished_us: None,
+            tokens_generated: 0,
+            wait_time_us: 0,
+            exec_time_us: 0,
+        };
+        self.apps.get_mut(&app_id).unwrap().node_req[node.0 as usize] =
+            Some(id);
+        self.reqs.insert(id, req);
+        self.waiting.push_back(id);
+        id
+    }
+
+    /// Mark a node done; returns newly ready agent nodes (spawned
+    /// automatically) and func nodes (caller schedules their delay), plus
+    /// whether the whole app just completed.
+    pub fn complete_node(
+        &mut self,
+        app_id: AppId,
+        node: NodeId,
+        now_us: u64,
+    ) -> (Vec<NodeId>, bool) {
+        let template = self.app_template[&app_id];
+        let app = self.apps.get_mut(&app_id).unwrap();
+        let ni = node.0 as usize;
+        assert!(!app.node_done[ni], "node completed twice");
+        app.node_done[ni] = true;
+        app.nodes_remaining -= 1;
+
+        let mut ready_funcs = Vec::new();
+        let children: Vec<NodeId> =
+            self.graphs[template].children(node).to_vec();
+        for c in children {
+            let app = self.apps.get_mut(&app_id).unwrap();
+            app.pending_parents[c.0 as usize] -= 1;
+            if app.pending_parents[c.0 as usize] == 0 {
+                match &self.graphs[template].node(c).kind {
+                    NodeKind::Agent(_) => {
+                        self.spawn_request(app_id, c, now_us);
+                    }
+                    NodeKind::Func(_) => ready_funcs.push(c),
+                }
+            }
+        }
+
+        let app = self.apps.get_mut(&app_id).unwrap();
+        let done = app.is_done();
+        if done {
+            app.finished_us = Some(now_us);
+            self.metrics.apps_completed += 1;
+            self.metrics
+                .latency
+                .record_us(now_us - app.arrival_us);
+        }
+        (ready_funcs, done)
+    }
+
+    // ------------------------------------------------------------------
+    // Pressure snapshot (§3.2)
+    // ------------------------------------------------------------------
+
+    /// Blocks a waiting request needs to be admitted right now.
+    pub fn admission_demand(&self, r: &Request) -> u32 {
+        if r.state == ReqState::Waiting && !r.blocks.is_empty() {
+            // Resumed with KV intact: only needs growth for the result.
+            let target = r.context_tokens;
+            let have = r.blocks.len() as u32 * self.cfg.profile.block_tokens;
+            self.cfg
+                .profile
+                .blocks_for_tokens(target.saturating_sub(have))
+        } else {
+            self.cfg.profile.blocks_for_tokens(r.context_tokens)
+        }
+    }
+
+    pub fn snapshot(&self) -> PressureSnapshot {
+        let mut waiting_demand = 0u32;
+        let mut critical_demand = 0u32;
+        let mut waiting_count = 0u32;
+        for &rid in &self.waiting {
+            let r = &self.reqs[&rid];
+            let d = self.admission_demand(r);
+            waiting_demand += d;
+            if self.spatial.critical_types.contains(&r.type_id)
+                || r.critical_path
+            {
+                critical_demand += d;
+            }
+            waiting_count += 1;
+        }
+        let offloadable_stalled = self
+            .reqs
+            .values()
+            .filter(|r| r.state == ReqState::Stalled)
+            .map(|r| r.blocks.len() as u32)
+            .sum();
+        PressureSnapshot {
+            gpu_total: self.gpu.total(),
+            gpu_free: self.gpu.free_blocks(),
+            gpu_pending_free: self.gpu.pending_free_blocks(),
+            shared_free: self.gpu.shared_free(),
+            reserved_outstanding: self.gpu.outstanding_reserved(),
+            cpu_free: self.cpu.free_blocks(),
+            waiting_demand,
+            critical_demand,
+            offloadable_stalled,
+            upload_debt: self.ledger.inflight_upload_blocks(),
+            waiting_count,
+            usage: self.gpu.usage(),
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Per-request priority P_req (Eq. 5)
+    // ------------------------------------------------------------------
+
+    /// Synchronization pressure f_sync: at a join point, a lagging branch
+    /// is boosted in proportion to how many sibling branches already
+    /// completed (prevents the merge node from bottlenecking).
+    fn f_sync(&self, r: &Request) -> f64 {
+        let g = self.graph_of(r.app_id);
+        let app = &self.apps[&r.app_id];
+        let mut best: f64 = 0.0;
+        for &c in g.children(r.node) {
+            let parents = g.parents(c);
+            if parents.len() < 2 {
+                continue;
+            }
+            let siblings_done = parents
+                .iter()
+                .filter(|&&p| p != r.node && app.node_done[p.0 as usize])
+                .count();
+            let frac =
+                siblings_done as f64 / (parents.len() - 1) as f64;
+            best = best.max(frac);
+        }
+        best
+    }
+
+    /// Temporal aging f_aging: starvation protection + completion push.
+    fn f_aging(&self, r: &Request, now_us: u64) -> f64 {
+        let app = &self.apps[&r.app_id];
+        let waited = now_us.saturating_sub(r.queue_enter_us) as f64;
+        let wait_norm = (waited / 60e6).min(1.0); // saturate at 60 s
+        let graph_progress = 1.0 - app.fraction_remaining();
+        let completion_pressure = graph_progress * graph_progress;
+        0.4 * wait_norm + 0.3 * graph_progress + 0.3 * completion_pressure
+    }
+
+    /// Refresh P_req for all live requests (called in step phase 1).
+    pub fn refresh_priorities(&mut self, now_us: u64) {
+        let ids: Vec<RequestId> = self
+            .reqs
+            .iter()
+            .filter(|(_, r)| r.state != ReqState::Finished)
+            .map(|(&id, _)| id)
+            .collect();
+        let p = &self.cfg.policy;
+        let (a_s, a_y, a_a) = (p.alpha_struct, p.alpha_sync, p.alpha_aging);
+        for id in ids {
+            let r = &self.reqs[&id];
+            let fs = r.f_struct;
+            let fy = self.f_sync(r);
+            let fa = self.f_aging(r, now_us);
+            let base = a_s * fs + a_y * fy + a_a * fa;
+            // Static priority hints shift the structural term; the
+            // preemption ladder guarantees progress under thrash — every
+            // eviction raises the victim until it becomes unpreemptable.
+            let r = &self.reqs[&id];
+            let pr = base
+                + 0.15 * r.static_priority
+                + (0.25 * r.preempt_count as f64).min(5.0);
+            self.reqs.get_mut(&id).unwrap().priority = pr;
+        }
+    }
+
+    /// Normalized request importance I ∈ [0,1] for upload ranking (§4.3),
+    /// derived from the same priority metric admission uses.
+    pub fn importance(&self, r: &Request) -> f64 {
+        let crit_boost = if r.critical_path { 0.25 } else { 0.0 };
+        (r.priority + crit_boost).clamp(0.0, 1.5) / 1.5
+    }
+
+    // ------------------------------------------------------------------
+    // Block release helpers
+    // ------------------------------------------------------------------
+
+    /// Release all GPU blocks a request holds (eviction or completion).
+    pub fn release_gpu(&mut self, rid: RequestId) {
+        let r = self.reqs.get_mut(&rid).unwrap();
+        let blocks = std::mem::take(&mut r.blocks);
+        let charged = std::mem::take(&mut r.reserved_charged);
+        let t = r.type_id;
+        if !blocks.is_empty() || charged > 0 {
+            self.gpu.free(blocks, charged, Some(t));
+        }
+        // Any gradually reserved upload destination is returned too.
+        let ur = std::mem::take(&mut r.upload_reserved);
+        let uc = std::mem::take(&mut r.upload_reserved_charged);
+        let r = self.reqs.get_mut(&rid).unwrap();
+        let t = r.type_id;
+        if !ur.is_empty() || uc > 0 {
+            self.gpu.free(ur, uc, Some(t));
+        }
+    }
+
+    /// Release CPU-side blocks (after upload completes or on abandonment).
+    pub fn release_cpu(&mut self, rid: RequestId) {
+        let r = self.reqs.get_mut(&rid).unwrap();
+        let blocks = std::mem::take(&mut r.cpu_blocks);
+        if !blocks.is_empty() {
+            self.cpu.release(blocks);
+        }
+    }
+
+    /// Blocks held by requests stalled on function calls — the Fig 2a
+    /// "idle KV" measure, including in-flight offloads (still on GPU).
+    pub fn stalled_gpu_blocks(&self) -> u32 {
+        self.reqs
+            .values()
+            .filter(|r| r.state.is_fc_stalled())
+            .map(|r| {
+                if r.state.holds_gpu() {
+                    r.blocks.len() as u32
+                } else {
+                    0
+                }
+            })
+            .sum()
+    }
+
+    /// Sample the utilization time-series (engine calls periodically).
+    pub fn sample_metrics(&mut self, now_us: u64) {
+        let total = self.gpu.total().max(1) as f64;
+        let used = (self.gpu.total() - self.gpu.free_blocks()) as f64;
+        let stalled = self.stalled_gpu_blocks() as f64
+            + self.gpu.pending_free_blocks() as f64;
+        self.metrics.gpu_usage.record(now_us, used / total);
+        self.metrics
+            .stalled_fraction
+            .record(now_us, stalled / total);
+        self.metrics
+            .effective_usage
+            .record(now_us, (used - stalled).max(0.0) / total);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::templates;
+
+    fn setup() -> (ServeState, usize) {
+        let mut st = ServeState::new(ServeConfig::default());
+        let g = templates::code_writer();
+        let t = st.register_graph(&g);
+        (st, t)
+    }
+
+    fn scales() -> SampledLengths {
+        SampledLengths {
+            prompt_scale: 1.0,
+            gen_scale: 1.0,
+        }
+    }
+
+    #[test]
+    fn spawn_app_enqueues_roots() {
+        let (mut st, t) = setup();
+        let (app, funcs) = st.spawn_app(t, scales(), 0);
+        assert!(funcs.is_empty());
+        assert_eq!(st.waiting.len(), 1); // planner is the single root
+        let rid = *st.waiting.front().unwrap();
+        let r = &st.reqs[&rid];
+        assert_eq!(r.app_id, app);
+        assert!(r.prompt_tokens > 0);
+        assert_eq!(r.state, ReqState::Waiting);
+    }
+
+    #[test]
+    fn complete_node_unlocks_children_with_inherited_prompt() {
+        let (mut st, t) = setup();
+        let (app, _) = st.spawn_app(t, scales(), 0);
+        let root = st.graphs[t].roots()[0];
+        // Simulate the root generating 180 tokens then finishing.
+        let rid = st.apps[&app].node_req[root.0 as usize].unwrap();
+        st.reqs.get_mut(&rid).unwrap().tokens_generated = 180;
+        st.reqs.get_mut(&rid).unwrap().state = ReqState::Finished;
+        let before = st.waiting.len();
+        let (funcs, done) = st.complete_node(app, root, 1000);
+        assert!(funcs.is_empty());
+        assert!(!done);
+        assert_eq!(st.waiting.len(), before + 1); // architect ready
+        let arch_req = st
+            .waiting
+            .back()
+            .map(|rid| &st.reqs[rid])
+            .unwrap();
+        // Inherited = 180 * 0.5 = 90 extra prompt tokens.
+        assert!(arch_req.prompt_tokens >= 90);
+    }
+
+    #[test]
+    fn app_completes_when_all_nodes_done() {
+        let mut st = ServeState::new(ServeConfig::default());
+        let g = templates::rag();
+        let t = st.register_graph(&g);
+        let (app, _) = st.spawn_app(t, scales(), 0);
+        let order: Vec<NodeId> = st.graphs[t].topo_order().to_vec();
+        let mut done = false;
+        for n in order {
+            let (_, d) = st.complete_node(app, n, 500);
+            done = d;
+        }
+        assert!(done);
+        assert_eq!(st.metrics.apps_completed, 1);
+        assert_eq!(st.apps[&app].finished_us, Some(500));
+    }
+
+    #[test]
+    fn snapshot_counts_waiting_demand() {
+        let (mut st, t) = setup();
+        st.spawn_app(t, scales(), 0);
+        let snap = st.snapshot();
+        assert!(snap.waiting_demand > 0);
+        assert_eq!(snap.waiting_count, 1);
+    }
+
+    #[test]
+    fn priorities_increase_with_waiting() {
+        let (mut st, t) = setup();
+        st.spawn_app(t, scales(), 0);
+        st.refresh_priorities(0);
+        let rid = *st.waiting.front().unwrap();
+        let p0 = st.reqs[&rid].priority;
+        st.refresh_priorities(30_000_000); // 30 s later
+        let p1 = st.reqs[&rid].priority;
+        assert!(p1 > p0, "aging must raise priority: {p0} -> {p1}");
+    }
+
+    #[test]
+    fn throughput_estimator_ewma() {
+        let mut t = ThroughputEstimator::default();
+        t.record_iteration(100, 100_000); // 1000 tok/s
+        assert!((t.tokens_per_sec() - 1000.0).abs() < 1e-6);
+        t.record_iteration(0, 100_000);
+        assert!(t.tokens_per_sec() < 1000.0);
+        assert!(t.tokens_per_sec() > 1.0);
+    }
+
+    #[test]
+    fn type_registry_interning() {
+        let mut tr = TypeRegistry::default();
+        let a = tr.intern("programmer");
+        let b = tr.intern("programmer");
+        let c = tr.intern("reviewer");
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        assert_eq!(tr.name(a), "programmer");
+        tr.note_preempt(a);
+        tr.note_wait(c);
+        assert_eq!(tr.preempts[a as usize], 1.0);
+        tr.decay(0.5);
+        assert_eq!(tr.preempts[a as usize], 0.5);
+    }
+}

@@ -1,0 +1,13 @@
+//! Execution engines.
+//!
+//! Two engines drive the same coordinator ([`crate::coordination`]):
+//!
+//! * [`sim::SimEngine`] — the discrete-event engine the paper-scale
+//!   experiments run on: calibrated iteration/transfer/tool timings with
+//!   exact block-level KV accounting (DESIGN.md §3).
+//! * [`real::RealEngine`] — the wall-clock engine for the end-to-end
+//!   example: drives the TinyQwen PJRT artifacts through the same
+//!   scheduling step, with real tokens and real host-memory offload.
+
+pub mod real;
+pub mod sim;

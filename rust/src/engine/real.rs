@@ -1,0 +1,610 @@
+//! The wall-clock serving engine over the real TinyQwen PJRT executables.
+//!
+//! Proves the three layers compose end to end: the same coordinator
+//! (pressure snapshot → reservations → temporal phase → admission) that
+//! drives the simulator here schedules *real* prefill/decode executions of
+//! the AOT artifacts, real host-memory offload (the slot's KV image is
+//! copied out of the batched cache and back), and tool calls that elapse
+//! in real time.
+//!
+//! Mapping: one KV block = one decode slot (see
+//! `ModelProfile::tinyqwen_cpu`), so `BlockId(s)` *is* slot `s` of the
+//! batched cache and the coordinator's block accounting is exact.
+
+use std::collections::{HashMap, VecDeque};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::config::{Mode, ServeConfig};
+use crate::coordination::{
+    self, Action, AppId, ReqState, RequestId, ServeState,
+};
+use crate::graph::{AppGraph, NodeId, NodeKind};
+use crate::metrics::MetricsBundle;
+use crate::runtime::TinyQwen;
+use crate::sim::Rng;
+use crate::temporal;
+use crate::workload::{Dataset, ToolSim};
+
+/// An offloaded slot image in host memory (the "CPU block pool" payload).
+struct HostImage {
+    k: Vec<f32>,
+    v: Vec<f32>,
+    len: usize,
+}
+
+/// Per-request generation bookkeeping the coordinator doesn't track.
+#[derive(Default)]
+struct GenState {
+    /// Tokens queued for teacher-forced injection (pending last generated
+    /// token + tool results after an FC resume).
+    forced: VecDeque<i32>,
+    /// Next decode input token.
+    next_input: i32,
+    /// All generated token ids (the actual output).
+    output: Vec<i32>,
+    /// Tokens actually present in the slot's KV cache.
+    cache_len: usize,
+}
+
+/// Report from a real-engine run.
+pub struct RealRunReport {
+    pub metrics: MetricsBundle,
+    pub wall_s: f64,
+    pub decode_steps: u64,
+    pub tokens_generated: u64,
+    /// Per-app generated token counts (for verification).
+    pub outputs: Vec<(RequestId, usize)>,
+}
+
+impl RealRunReport {
+    pub fn summary(&self) -> String {
+        format!(
+            "wall={:.1}s apps={} avg_lat={:.2}s p90={:.2}s steps={} \
+             tokens={} tok/s={:.1} offloads={} uploads={}",
+            self.wall_s,
+            self.metrics.apps_completed,
+            self.metrics.latency.mean_s(),
+            self.metrics.latency.percentile_s(90.0),
+            self.decode_steps,
+            self.tokens_generated,
+            self.tokens_generated as f64 / self.wall_s.max(1e-9),
+            self.metrics.offload_count,
+            self.metrics.upload_count,
+        )
+    }
+}
+
+/// Wall-clock engine: TinyQwen + coordinator.
+pub struct RealEngine {
+    pub st: ServeState,
+    model: TinyQwen,
+    /// slot → owning request (slot s == BlockId(s)).
+    slots: Vec<Option<RequestId>>,
+    /// Host-side image of the batched KV cache fed to each decode step.
+    k: Vec<f32>,
+    v: Vec<f32>,
+    host_store: HashMap<RequestId, HostImage>,
+    gen: HashMap<RequestId, GenState>,
+    tool_deadlines: Vec<(u64, RequestId)>,
+    func_deadlines: Vec<(u64, AppId, NodeId)>,
+    start: Instant,
+    rng: Rng,
+    tool_sim: ToolSim,
+    decode_steps: u64,
+    /// Scale factor applied to sampled tool durations (to keep examples
+    /// fast while preserving relative magnitudes).
+    pub tool_time_scale: f64,
+}
+
+impl RealEngine {
+    pub fn new(mut cfg: ServeConfig, artifacts: &std::path::Path) -> Result<Self> {
+        cfg.profile = crate::config::ModelProfile::tinyqwen_cpu();
+        let model = TinyQwen::load(artifacts)
+            .context("loading TinyQwen artifacts")?;
+        cfg.max_batch = model.decode_batch;
+        let seed = cfg.seed;
+        let n_slots = model.decode_batch;
+        let cache_len = model.cache_len();
+        Ok(Self {
+            st: ServeState::new(cfg),
+            model,
+            slots: vec![None; n_slots],
+            k: vec![0f32; cache_len],
+            v: vec![0f32; cache_len],
+            host_store: HashMap::new(),
+            gen: HashMap::new(),
+            tool_deadlines: Vec::new(),
+            func_deadlines: Vec::new(),
+            start: Instant::now(),
+            rng: Rng::new(seed),
+            tool_sim: ToolSim::new(0.0),
+            decode_steps: 0,
+            tool_time_scale: 1.0,
+        })
+    }
+
+    fn now_us(&self) -> u64 {
+        self.start.elapsed().as_micros() as u64
+    }
+
+    /// Serve `num_apps` instances of `graph` arriving `gap_us` apart.
+    /// Token counts are clamped so every agent fits one 256-token slot.
+    pub fn serve(
+        &mut self,
+        graph: &AppGraph,
+        num_apps: usize,
+        gap_us: u64,
+    ) -> Result<RealRunReport> {
+        let template = self.st.register_graph(graph);
+        let mut next_arrival: u64 = 0;
+        let mut submitted = 0usize;
+
+        loop {
+            let now = self.now_us();
+
+            // ---- Arrivals. ----
+            while submitted < num_apps && now >= next_arrival {
+                let mut rng = self.rng.fold(7_000 + submitted as u64);
+                let mut scales = Dataset::D1.sample(&mut rng);
+                // Keep contexts inside one slot.
+                scales.prompt_scale = scales.prompt_scale.min(1.0);
+                scales.gen_scale = scales.gen_scale.min(1.0);
+                let (app, funcs) =
+                    self.st.spawn_app(template, scales, now);
+                self.clamp_new_requests();
+                for node in funcs {
+                    self.schedule_func_node(app, node);
+                }
+                submitted += 1;
+                next_arrival += gap_us;
+            }
+
+            // ---- Tool / func-node completions. ----
+            self.fire_deadlines(now);
+            // Children spawned by completed nodes need clamping too.
+            self.clamp_new_requests();
+
+            if self.st.metrics.apps_completed as usize >= num_apps {
+                break;
+            }
+
+            // ---- Scheduling step (same §3.2 four phases as the sim). ----
+            coordination::step(&mut self.st, now);
+            self.assign_slots_to_admitted();
+            self.realize_transfers(now)?;
+
+            // ---- Real execution. ----
+            let did_prefill = self.run_prefills()?;
+            let did_decode = self.run_decode_step()?;
+
+            if !did_prefill && !did_decode {
+                // Idle: wait for the next deadline or arrival.
+                std::thread::sleep(std::time::Duration::from_millis(2));
+            }
+            self.st.sample_metrics(self.now_us());
+        }
+
+        self.st.metrics.makespan_us = self.now_us();
+        self.st.metrics.swap_volume_blocks =
+            self.st.ledger.swap_volume_blocks();
+        let outputs = self
+            .gen
+            .iter()
+            .map(|(&rid, g)| (rid, g.output.len()))
+            .collect();
+        Ok(RealRunReport {
+            metrics: self.st.metrics.clone(),
+            wall_s: self.start.elapsed().as_secs_f64(),
+            decode_steps: self.decode_steps,
+            tokens_generated: self.st.metrics.counters.tokens_generated,
+            outputs,
+        })
+    }
+
+    /// Shrink any newly spawned request so prompt + generation + results
+    /// fit one slot (≤ max_len tokens) and the prompt fits prefill_len.
+    fn clamp_new_requests(&mut self) {
+        let max_prompt = self.model.prefill_len as u32;
+        let budget = self.model.max_len as u32 - 2;
+        for r in self.st.reqs.values_mut() {
+            if r.state != ReqState::Waiting || !r.blocks.is_empty() {
+                continue;
+            }
+            if r.prompt_tokens > max_prompt {
+                r.prompt_tokens = max_prompt;
+                r.context_tokens = max_prompt;
+                r.remaining_prefill = max_prompt;
+            }
+            // Scale generation phases into the remaining budget.
+            let mut used = r.prompt_tokens;
+            for p in r.phases.iter_mut() {
+                p.result_tokens = p.result_tokens.min(8);
+                let remaining = budget.saturating_sub(used + p.result_tokens);
+                p.gen_tokens = p.gen_tokens.clamp(1, remaining.max(1) / 2);
+                used += p.gen_tokens + p.result_tokens;
+            }
+        }
+    }
+
+    fn fire_deadlines(&mut self, now: u64) {
+        let due_tools: Vec<RequestId> = {
+            let (due, rest): (Vec<_>, Vec<_>) = self
+                .tool_deadlines
+                .drain(..)
+                .partition(|&(t, _)| t <= now);
+            self.tool_deadlines = rest;
+            due.into_iter().map(|(_, rid)| rid).collect()
+        };
+        for rid in due_tools {
+            if self
+                .st
+                .reqs
+                .get(&rid)
+                .map(|r| r.state.is_fc_stalled())
+                .unwrap_or(false)
+            {
+                temporal::call_finish(&mut self.st, rid, now);
+            }
+        }
+        let due_funcs: Vec<(AppId, NodeId)> = {
+            let (due, rest): (Vec<_>, Vec<_>) = self
+                .func_deadlines
+                .drain(..)
+                .partition(|&(t, _, _)| t <= now);
+            self.func_deadlines = rest;
+            due.into_iter().map(|(_, a, n)| (a, n)).collect()
+        };
+        for (app, node) in due_funcs {
+            let (funcs, _) = self.st.complete_node(app, node, now);
+            for n in funcs {
+                self.schedule_func_node(app, n);
+            }
+        }
+    }
+
+    fn schedule_func_node(&mut self, app: AppId, node: NodeId) {
+        let template = *self.st.app_template.get(&app).unwrap();
+        let call = match &self.st.graphs[template].node(node).kind {
+            NodeKind::Func(c) => c.clone(),
+            NodeKind::Agent(_) => unreachable!(),
+        };
+        let mut rng = self.rng.fold(0xF00D ^ (app.0 << 8) ^ node.0 as u64);
+        let exec = self.tool_sim.sample(&call, &mut rng);
+        let dur = (exec.duration_us as f64 * self.tool_time_scale) as u64;
+        self.func_deadlines.push((self.now_us() + dur, app, node));
+    }
+
+    /// Newly admitted requests hold BlockIds; mirror that in the slot map.
+    fn assign_slots_to_admitted(&mut self) {
+        let ids: Vec<RequestId> = self
+            .st
+            .prefilling
+            .iter()
+            .chain(self.st.running.iter())
+            .copied()
+            .collect();
+        for rid in ids {
+            let r = &self.st.reqs[&rid];
+            debug_assert_eq!(r.blocks.len(), 1, "one block == one slot");
+            let slot = r.blocks[0].0 as usize;
+            if self.slots[slot] != Some(rid) {
+                self.slots[slot] = Some(rid);
+            }
+        }
+    }
+
+    /// Perform the actual memcpys for transfers the temporal scheduler
+    /// issued, then complete them (host copies are microseconds — no
+    /// asynchrony needed for correctness).
+    fn realize_transfers(&mut self, now: u64) -> Result<()> {
+        let actions = std::mem::take(&mut self.st.outbox);
+        for a in actions {
+            let Action::TransferIssued { xfer, .. } = a;
+            let t = self
+                .st
+                .ledger
+                .get(xfer)
+                .context("unknown transfer")?
+                .clone();
+            let rid = RequestId(t.req_id);
+            match t.dir {
+                crate::kvcache::Direction::D2H => {
+                    let slot = t.gpu_blocks[0].0 as usize;
+                    let img = self.extract_slot(slot, &rid);
+                    self.host_store.insert(rid, img);
+                    self.slots[slot] = None;
+                }
+                crate::kvcache::Direction::H2D => {
+                    let slot = t.gpu_blocks[0].0 as usize;
+                    let img = self
+                        .host_store
+                        .remove(&rid)
+                        .context("upload without host image")?;
+                    self.restore_slot(slot, &img);
+                    self.slots[slot] = Some(rid);
+                }
+            }
+            temporal::on_transfer_done(&mut self.st, xfer, now);
+        }
+        Ok(())
+    }
+
+    fn extract_slot(&mut self, slot: usize, rid: &RequestId) -> HostImage {
+        let stride = self.model.slot_stride();
+        let b = self.model.decode_batch;
+        let len = self.st.reqs[rid].context_tokens as usize;
+        let mut k = vec![0f32; self.model.n_layers * stride];
+        let mut v = vec![0f32; self.model.n_layers * stride];
+        for l in 0..self.model.n_layers {
+            let src = (l * b + slot) * stride;
+            let dst = l * stride;
+            k[dst..dst + stride]
+                .copy_from_slice(&self.k[src..src + stride]);
+            v[dst..dst + stride]
+                .copy_from_slice(&self.v[src..src + stride]);
+            // Zero the vacated slot (slot reuse hygiene).
+            self.k[src..src + stride].fill(0.0);
+            self.v[src..src + stride].fill(0.0);
+        }
+        HostImage { k, v, len }
+    }
+
+    fn restore_slot(&mut self, slot: usize, img: &HostImage) {
+        let stride = self.model.slot_stride();
+        let b = self.model.decode_batch;
+        for l in 0..self.model.n_layers {
+            let dst = (l * b + slot) * stride;
+            let src = l * stride;
+            self.k[dst..dst + stride]
+                .copy_from_slice(&img.k[src..src + stride]);
+            self.v[dst..dst + stride]
+                .copy_from_slice(&img.v[src..src + stride]);
+        }
+        let _ = img.len;
+    }
+
+    /// Run real prefills for freshly admitted requests (whole prompt in
+    /// one shot — TinyQwen's prefill artifact covers ≤128 tokens).
+    fn run_prefills(&mut self) -> Result<bool> {
+        // Fresh = never executed here (no generation state yet). A resumed
+        // request keeps its GenState across FC/offload round trips.
+        let fresh: Vec<RequestId> = self
+            .st
+            .prefilling
+            .iter()
+            .copied()
+            .filter(|rid| !self.gen.contains_key(rid))
+            .collect();
+        let mut any = false;
+        for rid in fresh {
+            any = true;
+            let (slot, prompt) = {
+                let r = &self.st.reqs[&rid];
+                let slot = r.blocks[0].0 as usize;
+                // Deterministic synthetic prompt token ids.
+                let mut rng = self.rng.fold(0xBEEF ^ rid.0);
+                let prompt: Vec<i32> = (0..r.prompt_tokens)
+                    .map(|_| {
+                        rng.range_u64(1, self.model.vocab as u64 - 1) as i32
+                    })
+                    .collect();
+                (slot, prompt)
+            };
+            let out = self.model.prefill(&prompt)?;
+            // Scatter prompt KV into the slot.
+            let stride = self.model.slot_stride();
+            let b = self.model.decode_batch;
+            let row = self.model.n_heads * self.model.head_dim;
+            for l in 0..self.model.n_layers {
+                for t in 0..prompt.len() {
+                    let src = (l * self.model.prefill_len + t) * row;
+                    let dst = (l * b + slot) * stride + t * row;
+                    self.k[dst..dst + row]
+                        .copy_from_slice(&out.k[src..src + row]);
+                    self.v[dst..dst + row]
+                        .copy_from_slice(&out.v[src..src + row]);
+                }
+            }
+            let first = self.model.argmax(&out.logits);
+            let n_prompt = prompt.len();
+            let g = self.gen.entry(rid).or_default();
+            g.next_input = first;
+            g.cache_len = n_prompt;
+            let r = self.st.reqs.get_mut(&rid).unwrap();
+            r.remaining_prefill = 0;
+            r.state = ReqState::Running;
+        }
+        // Resumed-from-FC requests: their "prefill debt" is the tool
+        // result, injected via teacher forcing in the decode loop.
+        let resumed: Vec<RequestId> = self
+            .st
+            .prefilling
+            .iter()
+            .copied()
+            .filter(|rid| self.st.reqs[rid].state == ReqState::Prefilling)
+            .collect();
+        for rid in resumed {
+            let (n_forced, seedmix) = {
+                let r = &self.st.reqs[&rid];
+                (r.remaining_prefill, rid.0 ^ 0xA11CE)
+            };
+            let mut rng = self.rng.fold(seedmix);
+            let g = self.gen.entry(rid).or_default();
+            // The phase's final sampled token never entered the cache
+            // before the FC; feed it first, then the tool result tokens.
+            g.forced.push_back(g.next_input);
+            for _ in 0..n_forced {
+                g.forced.push_back(
+                    rng.range_u64(1, self.model.vocab as u64 - 1) as i32,
+                );
+            }
+            let r = self.st.reqs.get_mut(&rid).unwrap();
+            // The forced tokens are consumed by decode; account now.
+            r.remaining_prefill = 0;
+            r.state = ReqState::Running;
+        }
+        // Promote into the running list.
+        let promoted: Vec<RequestId> = self
+            .st
+            .prefilling
+            .iter()
+            .copied()
+            .filter(|rid| self.st.reqs[rid].state == ReqState::Running)
+            .collect();
+        self.st
+            .prefilling
+            .retain(|rid| self.st.reqs[rid].state == ReqState::Prefilling);
+        self.st.running.extend(promoted);
+        Ok(any)
+    }
+
+    /// One real batched decode step across all running slots.
+    fn run_decode_step(&mut self) -> Result<bool> {
+        let batch: Vec<RequestId> = self.st.running.clone();
+        if batch.is_empty() {
+            return Ok(false);
+        }
+        let b = self.model.decode_batch;
+        let max_len = self.model.max_len;
+        let mut tokens = vec![0i32; b];
+        let mut lens = vec![0i32; b];
+        let mut active: Vec<(usize, RequestId, bool)> = Vec::new();
+        let mut overflow: Vec<RequestId> = Vec::new();
+        for rid in batch {
+            let r = &self.st.reqs[&rid];
+            let slot = r.blocks[0].0 as usize;
+            let g = self.gen.entry(rid).or_default();
+            if g.cache_len + 1 >= max_len {
+                overflow.push(rid); // slot exhausted: finish early
+                continue;
+            }
+            let forced = !g.forced.is_empty();
+            let tok = if forced {
+                *g.forced.front().unwrap()
+            } else {
+                g.next_input
+            };
+            tokens[slot] = tok;
+            lens[slot] = g.cache_len as i32;
+            active.push((slot, rid, forced));
+        }
+        let now = self.now_us();
+        for rid in overflow {
+            self.finish_request(rid, now);
+        }
+        if active.is_empty() {
+            return Ok(false);
+        }
+
+        let out = self.model.decode(&tokens, &self.k, &self.v, &lens)?;
+        self.k = out.k;
+        self.v = out.v;
+        self.decode_steps += 1;
+        self.st.metrics.counters.decode_iterations += 1;
+
+        let now = self.now_us();
+        for (slot, rid, forced) in active {
+            let logits = &out.logits
+                [slot * self.model.vocab..(slot + 1) * self.model.vocab];
+            let next = self.model.argmax(logits);
+            let g = self.gen.get_mut(&rid).unwrap();
+            g.cache_len += 1; // the input token entered the cache
+            if forced {
+                g.forced.pop_front();
+                if g.forced.is_empty() {
+                    // Last injected token: its logits start the next phase.
+                    g.next_input = next;
+                }
+                continue; // injection consumes the step; no generation
+            }
+            g.output.push(next);
+            g.next_input = next;
+            self.st.metrics.counters.tokens_generated += 1;
+            let (phase_done, has_call, is_last) = {
+                let r = self.st.reqs.get_mut(&rid).unwrap();
+                r.tokens_generated += 1;
+                r.gen_in_phase += 1;
+                let p = &r.phases[r.cur_phase];
+                (
+                    r.gen_in_phase >= p.gen_tokens,
+                    p.call.is_some(),
+                    r.cur_phase + 1 >= r.phases.len(),
+                )
+            };
+            if !phase_done {
+                continue;
+            }
+            if has_call {
+                self.start_function_call(rid, now);
+            } else if is_last {
+                self.finish_request(rid, now);
+            } else {
+                let r = self.st.reqs.get_mut(&rid).unwrap();
+                r.cur_phase += 1;
+                r.gen_in_phase = 0;
+            }
+        }
+        Ok(true)
+    }
+
+    fn start_function_call(&mut self, rid: RequestId, now: u64) {
+        let (call, result_tokens) = {
+            let r = &self.st.reqs[&rid];
+            (
+                r.phases[r.cur_phase].call.clone().unwrap(),
+                r.phases[r.cur_phase].result_tokens,
+            )
+        };
+        self.st.running.retain(|&x| x != rid);
+        temporal::call_start(
+            &mut self.st,
+            rid,
+            call.kind.name(),
+            call.predict_time_us
+                .map(|t| (t as f64 * self.tool_time_scale) as u64),
+            result_tokens,
+            now,
+        );
+        let mut rng = self.rng.fold(0x7001 ^ rid.0.wrapping_mul(31));
+        let exec = self.tool_sim.sample(&call, &mut rng);
+        let dur = (exec.duration_us as f64 * self.tool_time_scale) as u64;
+        self.tool_deadlines.push((now + dur, rid));
+    }
+
+    fn finish_request(&mut self, rid: RequestId, now: u64) {
+        crate::spatial::record_prefix(&mut self.st, rid, now);
+        // Clear the slot.
+        if let Some(&crate::kvcache::BlockId(s)) =
+            self.st.reqs[&rid].blocks.first()
+        {
+            self.slots[s as usize] = None;
+        }
+        self.st.release_gpu(rid);
+        self.st.release_cpu(rid);
+        self.host_store.remove(&rid);
+        let (app, node, created) = {
+            let r = self.st.reqs.get_mut(&rid).unwrap();
+            r.state = ReqState::Finished;
+            r.finished_us = Some(now);
+            (r.app_id, r.node, r.created_us)
+        };
+        self.st.metrics.request_latency.record_us(now - created);
+        self.st.running.retain(|&x| x != rid);
+        let (funcs, _) = self.st.complete_node(app, node, now);
+        for n in funcs {
+            self.schedule_func_node(app, n);
+        }
+    }
+}
+
+/// Convenience: default config for the real engine.
+pub fn real_engine_config(mode: Mode, seed: u64) -> ServeConfig {
+    let mut cfg = ServeConfig::default().with_mode(mode).with_seed(seed);
+    cfg.profile = crate::config::ModelProfile::tinyqwen_cpu();
+    // Small pool: pressure appears with > 8 concurrent agents.
+    cfg.policy.offload_usage_threshold = 0.5;
+    cfg.policy.pressure_watermark = 0.05;
+    cfg
+}

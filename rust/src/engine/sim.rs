@@ -1,0 +1,674 @@
+//! The discrete-event serving engine.
+//!
+//! Mirrors a vLLM-style continuous-batching loop: each engine iteration
+//! runs one scheduling step (§3.2's four phases), then executes chunked
+//! prefill plus one decode token for every running sequence, advancing the
+//! simulated clock by the calibrated iteration time. Arrivals, tool
+//! completions, standalone func-node delays, and block transfers are
+//! events; everything the schedulers decide flows through the exact same
+//! code paths the real PJRT engine uses.
+
+use crate::config::ServeConfig;
+use crate::coordination::{
+    self, Action, AppId, ReqState, RequestId, ServeState,
+};
+use crate::graph::{NodeId, NodeKind};
+use crate::kvcache::{AllocOutcome, TransferId};
+use crate::metrics::MetricsBundle;
+use crate::sim::{Clock, EventQueue, Rng};
+use crate::spatial;
+use crate::temporal;
+use crate::workload::{ToolSim, WorkloadSpec};
+
+/// Engine event alphabet.
+#[derive(Debug, Clone, PartialEq, Eq)]
+enum Ev {
+    AppArrival { seq: u32 },
+    ToolFinish { rid: RequestId },
+    NodeDelayDone { app: AppId, node: NodeId },
+    TransferDone { xfer: TransferId },
+}
+
+/// Result of a workload run.
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    pub mode: &'static str,
+    pub metrics: MetricsBundle,
+    /// True if the engine hit the safety iteration cap before finishing.
+    pub truncated: bool,
+}
+
+impl RunReport {
+    /// Re-export the headline numbers (see `MetricsBundle::summary`).
+    pub fn summary(&self) -> String {
+        format!("[{}] {}", self.mode, self.metrics.summary())
+    }
+}
+
+/// Discrete-event serving engine over [`ServeState`].
+pub struct SimEngine {
+    pub st: ServeState,
+    clock: Clock,
+    events: EventQueue<Ev>,
+    rng: Rng,
+    /// Safety valve against policy deadlocks in experimental configs.
+    max_iterations: u64,
+}
+
+impl SimEngine {
+    pub fn new(cfg: ServeConfig) -> Self {
+        let seed = cfg.seed;
+        Self {
+            st: ServeState::new(cfg),
+            clock: Clock::new(),
+            events: EventQueue::new(),
+            rng: Rng::new(seed),
+            max_iterations: 3_000_000,
+        }
+    }
+
+    /// Current simulated time (µs).
+    pub fn now_us(&self) -> u64 {
+        self.clock.now_us()
+    }
+
+    /// Run a complete workload to completion; returns the metric bundle.
+    pub fn run_workload(&mut self, spec: &WorkloadSpec) -> RunReport {
+        let template = self.st.register_graph(&spec.graph);
+        let mut arr_rng = self.rng.fold(1);
+        let arrivals = spec.arrivals(&mut arr_rng);
+        for (i, t) in arrivals.iter().enumerate() {
+            self.events.push(*t, Ev::AppArrival { seq: i as u32 });
+        }
+        let tool_sim = ToolSim::new(spec.tool_noise);
+        let total_apps = spec.num_apps as u64;
+
+        let mut iters: u64 = 0;
+        let mut truncated = false;
+        loop {
+            // 1. Apply all events due at the current time.
+            while let Some(ev) = self.events.pop_due(self.clock.now_us()) {
+                self.apply_event(ev.payload, template, spec, &tool_sim);
+            }
+
+            if self.st.metrics.apps_completed >= total_apps {
+                break;
+            }
+
+            // 2. One scheduling step (§3.2 four phases).
+            coordination::step(&mut self.st, self.clock.now_us());
+            self.drain_outbox();
+
+            // 3. Execute an iteration, or idle-skip to the next event.
+            if !self.st.prefilling.is_empty() || !self.st.running.is_empty()
+            {
+                let dt = self.execute_iteration(&tool_sim);
+                self.clock.advance_by(dt);
+            } else {
+                match self.events.peek_time() {
+                    Some(t) => self.clock.advance_to(t.max(self.clock.now_us())),
+                    None => {
+                        // No events, no batch: either done or deadlocked
+                        // (e.g. waiting-with-KV requests hold all blocks
+                        // while offloaded ones can't reserve an upload).
+                        if self.rescue_deadlock() {
+                            continue;
+                        }
+                        truncated = !self.st.waiting.is_empty();
+                        break;
+                    }
+                }
+            }
+
+            self.st.sample_metrics(self.clock.now_us());
+            iters += 1;
+            if iters % 500_000 == 0
+                && std::env::var_os("TOKENCAKE_TRACE").is_some()
+            {
+                eprintln!(
+                    "[trace] iter={} t={:.0}s apps={}/{} run={} wait={} \
+                     preempt={} free={}",
+                    iters,
+                    self.clock.now_s(),
+                    self.st.metrics.apps_completed,
+                    self.st.apps.len(),
+                    self.st.running.len(),
+                    self.st.waiting.len(),
+                    self.st.metrics.counters.preemptions,
+                    self.st.gpu.free_blocks(),
+                );
+            }
+            if iters >= self.max_iterations {
+                truncated = true;
+                break;
+            }
+        }
+
+        self.st.metrics.makespan_us = self.clock.now_us();
+        self.st.metrics.swap_volume_blocks =
+            self.st.ledger.swap_volume_blocks();
+        RunReport {
+            mode: self.st.cfg.mode.name(),
+            metrics: self.st.metrics.clone(),
+            truncated,
+        }
+    }
+
+    fn drain_outbox(&mut self) {
+        let actions = std::mem::take(&mut self.st.outbox);
+        for a in actions {
+            match a {
+                Action::TransferIssued { xfer, completes_us } => {
+                    self.events
+                        .push(completes_us, Ev::TransferDone { xfer });
+                }
+            }
+        }
+    }
+
+    fn apply_event(
+        &mut self,
+        ev: Ev,
+        template: usize,
+        spec: &WorkloadSpec,
+        tool_sim: &ToolSim,
+    ) {
+        let now = self.clock.now_us();
+        match ev {
+            Ev::AppArrival { seq } => {
+                let mut rng = self.rng.fold(1000 + seq as u64);
+                let scales = spec.dataset.sample(&mut rng);
+                let (app, funcs) =
+                    self.st.spawn_app(template, scales, now);
+                for node in funcs {
+                    self.schedule_func_node(app, node, tool_sim);
+                }
+            }
+            Ev::ToolFinish { rid } => {
+                // The request may have been preempted/restructured; only
+                // FC-stalled requests receive the event.
+                if self
+                    .st
+                    .reqs
+                    .get(&rid)
+                    .map(|r| r.state.is_fc_stalled())
+                    .unwrap_or(false)
+                {
+                    temporal::call_finish(&mut self.st, rid, now);
+                    self.drain_outbox();
+                }
+            }
+            Ev::NodeDelayDone { app, node } => {
+                let (funcs, _) = self.st.complete_node(app, node, now);
+                for n in funcs {
+                    self.schedule_func_node(app, n, tool_sim);
+                }
+            }
+            Ev::TransferDone { xfer } => {
+                temporal::on_transfer_done(&mut self.st, xfer, now);
+                self.drain_outbox();
+            }
+        }
+    }
+
+    /// Standalone (non-LLM) func node: a pure delay.
+    fn schedule_func_node(
+        &mut self,
+        app: AppId,
+        node: NodeId,
+        tool_sim: &ToolSim,
+    ) {
+        let template = *self.st.app_template.get(&app).unwrap();
+        let call = match &self.st.graphs[template].node(node).kind {
+            NodeKind::Func(c) => c.clone(),
+            NodeKind::Agent(_) => unreachable!("agent scheduled as func"),
+        };
+        let mut rng = self.rng.fold(0x5EED ^ (app.0 << 8) ^ node.0 as u64);
+        let exec = tool_sim.sample(&call, &mut rng);
+        self.events.push(
+            self.clock.now_us() + exec.duration_us,
+            Ev::NodeDelayDone { app, node },
+        );
+    }
+
+    /// One engine iteration: chunked prefill + one decode token per
+    /// running sequence. Returns the iteration duration (µs).
+    fn execute_iteration(&mut self, tool_sim: &ToolSim) -> u64 {
+        let now = self.clock.now_us();
+        let profile = self.st.cfg.profile.clone();
+
+        // ---- Chunked prefill. ----
+        let mut prefill_budget = self.st.cfg.max_prefill_tokens;
+        let mut prefill_tokens: u32 = 0;
+        let prefill_list: Vec<RequestId> = self.st.prefilling.clone();
+        for rid in prefill_list {
+            if prefill_budget == 0 {
+                break;
+            }
+            let r = self.st.reqs.get_mut(&rid).unwrap();
+            let chunk = r.remaining_prefill.min(prefill_budget);
+            r.remaining_prefill -= chunk;
+            prefill_budget -= chunk;
+            prefill_tokens += chunk;
+            if r.remaining_prefill == 0 {
+                r.state = ReqState::Running;
+            }
+        }
+        // Promote finished prefills into the decode batch.
+        let promoted: Vec<RequestId> = self
+            .st
+            .prefilling
+            .iter()
+            .copied()
+            .filter(|rid| self.st.reqs[rid].state == ReqState::Running)
+            .collect();
+        self.st
+            .prefilling
+            .retain(|rid| self.st.reqs[rid].state == ReqState::Prefilling);
+        self.st.running.extend(promoted);
+
+        // ---- Decode one token per running sequence. ----
+        let batch: Vec<RequestId> = self.st.running.clone();
+        let mut decoded: u32 = 0;
+        for rid in batch {
+            // May have been preempted by an earlier grower this iteration.
+            if self.st.reqs.get(&rid).map(|r| r.state)
+                != Some(ReqState::Running)
+            {
+                continue;
+            }
+            if !self.ensure_growth_block(rid) {
+                continue; // self-preempted
+            }
+            decoded += 1;
+            let (phase_done, has_call, is_last) = {
+                let r = self.st.reqs.get_mut(&rid).unwrap();
+                r.context_tokens += 1;
+                r.tokens_generated += 1;
+                r.gen_in_phase += 1;
+                let p = &r.phases[r.cur_phase];
+                (
+                    r.gen_in_phase >= p.gen_tokens,
+                    p.call.is_some(),
+                    r.cur_phase + 1 >= r.phases.len(),
+                )
+            };
+            if !phase_done {
+                continue;
+            }
+            if has_call {
+                self.start_function_call(rid, tool_sim);
+            } else if is_last {
+                self.finish_request(rid, tool_sim);
+            } else {
+                let r = self.st.reqs.get_mut(&rid).unwrap();
+                r.cur_phase += 1;
+                r.gen_in_phase = 0;
+            }
+        }
+
+        // ---- Iteration timing. ----
+        let prefill_us =
+            (profile.prefill_us_per_token * prefill_tokens as f64) as u64;
+        let decode_us = profile.decode_iter_us(decoded as usize);
+        // A zero-progress iteration (pure preemption churn) still burns a
+        // full iteration's time on real hardware.
+        let floor = if decoded == 0 && prefill_tokens == 0 {
+            profile.decode_base_us as u64
+        } else {
+            0
+        };
+        let dt = (prefill_us + decode_us).max(floor).max(1_000);
+        self.st
+            .throughput
+            .record_iteration(decoded, dt.max(1));
+        self.st.metrics.counters.decode_iterations += 1;
+        self.st.metrics.counters.tokens_generated += decoded as u64;
+        // Charge execution time (H_a input).
+        let charged: Vec<RequestId> = self
+            .st
+            .running
+            .iter()
+            .chain(self.st.prefilling.iter())
+            .copied()
+            .collect();
+        for rid in charged {
+            if let Some(r) = self.st.reqs.get_mut(&rid) {
+                r.exec_time_us += dt;
+            }
+        }
+        let _ = now;
+        dt
+    }
+
+    /// Ensure the request has a block for its next token, preempting if
+    /// necessary. Returns false if the request itself got preempted.
+    fn ensure_growth_block(&mut self, rid: RequestId) -> bool {
+        let profile = &self.st.cfg.profile;
+        let (needs, route) = {
+            let r = &self.st.reqs[&rid];
+            let capacity = r.blocks.len() as u32 * profile.block_tokens;
+            (
+                r.context_tokens + 1 > capacity,
+                spatial::route_for(&self.st, rid),
+            )
+        };
+        if !needs {
+            return true;
+        }
+        loop {
+            match self.st.gpu.alloc(1, route) {
+                AllocOutcome::Granted {
+                    blocks,
+                    reserved_charged,
+                } => {
+                    let r = self.st.reqs.get_mut(&rid).unwrap();
+                    r.blocks.extend(blocks);
+                    r.reserved_charged += reserved_charged;
+                    return true;
+                }
+                AllocOutcome::Deferred => {
+                    let Some(victim) = self.pick_preemption_victim(rid)
+                    else {
+                        // Nothing to preempt but self.
+                        self.preempt(rid, rid);
+                        return false;
+                    };
+                    self.preempt(victim, rid);
+                    if victim == rid {
+                        return false;
+                    }
+                }
+            }
+        }
+    }
+
+    /// vLLM preempts the most recently arrived running sequence; the
+    /// agent-aware modes preempt the lowest-priority one. Only *running /
+    /// prefilling* requests are candidates — stalled caches are invisible
+    /// to the engine-level preemption exactly as in vLLM (that blindness
+    /// is the temporal-underutilization problem).
+    fn pick_preemption_victim(&self, grower: RequestId) -> Option<RequestId> {
+        let cands = self
+            .st
+            .running
+            .iter()
+            .chain(self.st.prefilling.iter())
+            .copied()
+            .filter(|&rid| !self.st.reqs[&rid].blocks.is_empty());
+        if self.st.cfg.mode.agent_aware() {
+            // Strict-priority preemption: only victims with strictly lower
+            // priority than the grower are eligible (otherwise the grower
+            // self-preempts). Combined with the preemption ladder this
+            // guarantees convergence — the top-priority request is never
+            // evicted and runs to completion. Non-critical victims first.
+            let g_prio = self.st.reqs[&grower].priority;
+            let cands: Vec<RequestId> = cands
+                .filter(|rid| {
+                    *rid != grower && self.st.reqs[rid].priority < g_prio
+                })
+                .collect();
+            let pick = |pool: &[RequestId]| {
+                pool.iter()
+                    .copied()
+                    .min_by(|a, b| {
+                        let ra = &self.st.reqs[a];
+                        let rb = &self.st.reqs[b];
+                        ra.priority
+                            .total_cmp(&rb.priority)
+                            .then(ra.context_tokens.cmp(&rb.context_tokens))
+                    })
+            };
+            let non_critical: Vec<RequestId> = cands
+                .iter()
+                .copied()
+                .filter(|rid| !self.st.reqs[rid].critical_path)
+                .collect();
+            pick(&non_critical).or_else(|| pick(&cands))
+        } else {
+            // FCFS: evict the most recent arrival (vLLM recompute policy).
+            // LIFO victims give the oldest request a progress guarantee.
+            cands.max_by_key(|&rid| self.st.reqs[&rid].created_us)
+        }
+    }
+
+    /// Memory deadlock resolution (mirrors vLLM's demote-to-recompute):
+    /// when nothing can run and no event is pending, (1) demote the
+    /// lowest-priority waiting request that still holds KV blocks to a
+    /// full recompute, or (2) release a partial upload reservation so the
+    /// blocks can serve admission. Returns true if it made progress.
+    fn rescue_deadlock(&mut self) -> bool {
+        // (1) Waiting-with-KV demotion.
+        let victim = self
+            .st
+            .waiting
+            .iter()
+            .copied()
+            .filter(|rid| !self.st.reqs[rid].blocks.is_empty())
+            .min_by(|a, b| {
+                self.st.reqs[a]
+                    .priority
+                    .total_cmp(&self.st.reqs[b].priority)
+            });
+        if let Some(rid) = victim {
+            self.st.release_gpu(rid);
+            let r = self.st.reqs.get_mut(&rid).unwrap();
+            r.remaining_prefill = r.context_tokens;
+            self.st.metrics.counters.recomputes += 1;
+            self.st.metrics.counters.recompute_tokens +=
+                self.st.reqs[&rid].context_tokens as u64;
+            return true;
+        }
+        // (2) Strand-breaking: release a partial upload reservation.
+        let stranded = self
+            .st
+            .reqs
+            .values()
+            .filter(|r| {
+                r.state == ReqState::Offloaded
+                    && !r.upload_reserved.is_empty()
+            })
+            .map(|r| r.id)
+            .min_by(|a, b| {
+                self.st.reqs[a]
+                    .priority
+                    .total_cmp(&self.st.reqs[b].priority)
+            });
+        if let Some(rid) = stranded {
+            let r = self.st.reqs.get_mut(&rid).unwrap();
+            let blocks = std::mem::take(&mut r.upload_reserved);
+            let charged = std::mem::take(&mut r.upload_reserved_charged);
+            let t = r.type_id;
+            self.st.gpu.free(blocks, charged, Some(t));
+            return true;
+        }
+        false
+    }
+
+    /// Evict a request: free its blocks, schedule a full recompute.
+    fn preempt(&mut self, victim: RequestId, grower: RequestId) {
+        let now = self.clock.now_us();
+        let (v_critical, v_type) = {
+            let r = &self.st.reqs[&victim];
+            (r.critical_path, r.type_id)
+        };
+        let g_critical = self.st.reqs[&grower].critical_path;
+        self.st.metrics.counters.preemptions += 1;
+        if v_critical && !g_critical && victim != grower {
+            self.st.metrics.counters.critical_inversions += 1;
+        }
+        self.st.types.note_preempt(v_type);
+        if victim == grower {
+            // Hit the growth wall with no eligible victim: next admission
+            // must be all-or-nothing.
+            self.st.reqs.get_mut(&victim).unwrap().admit_full = true;
+        }
+
+        self.st.release_gpu(victim);
+        let r = self.st.reqs.get_mut(&victim).unwrap();
+        r.state = ReqState::Waiting;
+        r.remaining_prefill = r.context_tokens; // full recompute
+        r.queue_enter_us = now;
+        r.preempt_count += 1;
+        self.st.metrics.counters.recomputes += 1;
+        self.st.metrics.counters.recompute_tokens +=
+            r.context_tokens as u64;
+        self.st.running.retain(|&x| x != victim);
+        self.st.prefilling.retain(|&x| x != victim);
+        self.st.waiting.push_back(victim);
+    }
+
+    /// Phase boundary with a call: fire `call_start` and schedule the
+    /// tool's completion.
+    fn start_function_call(&mut self, rid: RequestId, tool_sim: &ToolSim) {
+        let now = self.clock.now_us();
+        let (call, result_tokens) = {
+            let r = &self.st.reqs[&rid];
+            let call = r.phases[r.cur_phase].call.clone().unwrap();
+            (call, r.phases[r.cur_phase].result_tokens)
+        };
+        self.st.running.retain(|&x| x != rid);
+        temporal::call_start(
+            &mut self.st,
+            rid,
+            &call.kind.name().to_string(),
+            call.predict_time_us,
+            result_tokens,
+            now,
+        );
+        // Sample the *actual* tool duration (the scheduler only sees the
+        // prediction).
+        let mut rng = self.rng.fold(0x70_01 ^ rid.0.wrapping_mul(0x9E37));
+        let exec = tool_sim.sample(&call, &mut rng);
+        self.events
+            .push(now + exec.duration_us, Ev::ToolFinish { rid });
+    }
+
+    /// Final phase complete: release memory, advance the DAG.
+    fn finish_request(&mut self, rid: RequestId, tool_sim: &ToolSim) {
+        let now = self.clock.now_us();
+        spatial::record_prefix(&mut self.st, rid, now);
+        self.st.release_gpu(rid);
+        self.st.release_cpu(rid);
+        let (app, node, created) = {
+            let r = self.st.reqs.get_mut(&rid).unwrap();
+            r.state = ReqState::Finished;
+            r.finished_us = Some(now);
+            (r.app_id, r.node, r.created_us)
+        };
+        self.st
+            .metrics
+            .request_latency
+            .record_us(now - created);
+        self.st.running.retain(|&x| x != rid);
+        let (funcs, _done) = self.st.complete_node(app, node, now);
+        for n in funcs {
+            self.schedule_func_node(app, n, tool_sim);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Mode;
+    use crate::graph::templates;
+
+    fn run(mode: Mode, qps: f64, apps: usize, frac: f64) -> RunReport {
+        let cfg = ServeConfig::default()
+            .with_mode(mode)
+            .with_seed(7)
+            .with_gpu_mem_frac(frac);
+        let g = templates::code_writer();
+        let spec = WorkloadSpec::poisson(&g, qps, apps);
+        SimEngine::new(cfg).run_workload(&spec)
+    }
+
+    #[test]
+    fn completes_small_workload_all_modes() {
+        for mode in [
+            Mode::TokenCake,
+            Mode::Vllm,
+            Mode::VllmPrefix,
+            Mode::Mooncake,
+            Mode::Parrot,
+            Mode::AgentOnly,
+            Mode::OffloadOnly,
+            Mode::Infercept,
+        ] {
+            let rep = run(mode, 0.5, 3, 1.0);
+            assert!(!rep.truncated, "{mode:?} truncated");
+            assert_eq!(rep.metrics.apps_completed, 3, "{mode:?}");
+            assert!(rep.metrics.latency.mean_s() > 0.0);
+            assert!(rep.metrics.counters.tokens_generated > 0);
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = run(Mode::TokenCake, 0.5, 4, 1.0);
+        let b = run(Mode::TokenCake, 0.5, 4, 1.0);
+        assert_eq!(
+            a.metrics.latency.mean_us(),
+            b.metrics.latency.mean_us()
+        );
+        assert_eq!(a.metrics.offload_count, b.metrics.offload_count);
+        assert_eq!(
+            a.metrics.counters.preemptions,
+            b.metrics.counters.preemptions
+        );
+    }
+
+    #[test]
+    fn memory_pressure_causes_preemptions_in_vllm() {
+        // A small pool + several concurrent apps must trigger evictions
+        // under FCFS (the Fig 3a phenomenon).
+        let rep = run(Mode::Vllm, 2.0, 10, 0.02);
+        assert!(
+            rep.metrics.counters.preemptions > 0,
+            "expected preemptions, got {:?}",
+            rep.metrics.counters
+        );
+    }
+
+    #[test]
+    fn tokencake_offloads_under_pressure() {
+        let rep = run(Mode::TokenCake, 2.0, 10, 0.02);
+        assert!(
+            rep.metrics.offload_count > 0,
+            "temporal scheduler never offloaded: {}",
+            rep.summary()
+        );
+        assert_eq!(rep.metrics.offload_count, rep.metrics.upload_count);
+    }
+
+    #[test]
+    fn vllm_never_offloads() {
+        let rep = run(Mode::Vllm, 2.0, 8, 0.02);
+        assert_eq!(rep.metrics.offload_count, 0);
+        assert_eq!(rep.metrics.swap_volume_blocks, 0);
+    }
+
+    #[test]
+    fn block_accounting_conserves() {
+        let cfg = ServeConfig::default()
+            .with_mode(Mode::TokenCake)
+            .with_gpu_mem_frac(0.05);
+        let g = templates::deep_research();
+        let spec = WorkloadSpec::poisson(&g, 1.0, 5);
+        let mut e = SimEngine::new(cfg);
+        let _ = e.run_workload(&spec);
+        // After the run everything is freed.
+        assert_eq!(e.st.gpu.free_blocks(), e.st.gpu.total());
+        assert_eq!(e.st.gpu.pending_free_blocks(), 0);
+        assert_eq!(e.st.cpu.used_blocks(), 0);
+    }
+
+    #[test]
+    fn utilization_series_populated() {
+        let rep = run(Mode::TokenCake, 1.0, 4, 0.05);
+        assert!(rep.metrics.gpu_usage.len() > 2);
+        assert!(rep.metrics.gpu_usage.max() <= 1.0 + 1e-9);
+        assert!(rep.metrics.effective_usage.time_weighted_mean() >= 0.0);
+    }
+}

@@ -1,0 +1,214 @@
+//! Fluent builder for [`AppGraph`] — the Rust equivalent of the Python
+//! frontend in Fig 5 of the paper.
+//!
+//! ```no_run
+//! use tokencake::graph::{GraphBuilder, CallSpec, FuncKind};
+//!
+//! let mut gb = GraphBuilder::new("rag");
+//! let retriever = gb.agent_with_call(
+//!     "retriever", "retriever", 256, &[64, 128],
+//!     CallSpec::new(FuncKind::WebSearch).with_predict_time_us(3_000_000),
+//! );
+//! let synthesizer = gb.agent("synthesizer", "synthesizer", 128, &[512]);
+//! gb.edge(retriever, synthesizer);
+//! let graph = gb.build().unwrap();
+//! assert_eq!(graph.len(), 2);
+//! ```
+
+use super::{AgentSpec, AppGraph, CallSpec, Node, NodeId, NodeKind, Phase};
+
+/// Incrementally assembles a validated [`AppGraph`].
+pub struct GraphBuilder {
+    name: String,
+    nodes: Vec<Node>,
+    edges: Vec<(NodeId, NodeId)>,
+}
+
+impl GraphBuilder {
+    pub fn new(name: &str) -> Self {
+        Self {
+            name: name.to_string(),
+            nodes: Vec::new(),
+            edges: Vec::new(),
+        }
+    }
+
+    fn push(&mut self, name: &str, kind: NodeKind) -> NodeId {
+        let id = NodeId(self.nodes.len() as u32);
+        self.nodes.push(Node {
+            id,
+            name: name.to_string(),
+            kind,
+        });
+        id
+    }
+
+    /// Add an agent with one generation phase per entry of `gen_tokens`
+    /// (no function calls between phases).
+    pub fn agent(
+        &mut self,
+        name: &str,
+        agent_type: &str,
+        prompt_base: u32,
+        gen_tokens: &[u32],
+    ) -> NodeId {
+        let phases = gen_tokens
+            .iter()
+            .map(|&g| Phase {
+                gen_tokens: g,
+                call: None,
+            })
+            .collect();
+        self.push(
+            name,
+            NodeKind::Agent(AgentSpec {
+                agent_type: agent_type.to_string(),
+                prompt_base,
+                shared_prefix: 0,
+                inherit_frac: 0.5,
+                phases,
+                static_priority: 0.5,
+            }),
+        )
+    }
+
+    /// Add an agent whose phases are separated by one function call: the
+    /// call fires after every phase except the last (the paper's
+    /// `LLM1 → FC → LLM2` lifecycle when `gen_tokens.len() == 2`).
+    pub fn agent_with_call(
+        &mut self,
+        name: &str,
+        agent_type: &str,
+        prompt_base: u32,
+        gen_tokens: &[u32],
+        call: CallSpec,
+    ) -> NodeId {
+        assert!(
+            gen_tokens.len() >= 2,
+            "agent_with_call needs >= 2 phases to embed a call"
+        );
+        let last = gen_tokens.len() - 1;
+        let phases = gen_tokens
+            .iter()
+            .enumerate()
+            .map(|(i, &g)| Phase {
+                gen_tokens: g,
+                call: if i < last { Some(call.clone()) } else { None },
+            })
+            .collect();
+        self.push(
+            name,
+            NodeKind::Agent(AgentSpec {
+                agent_type: agent_type.to_string(),
+                prompt_base,
+                shared_prefix: 0,
+                inherit_frac: 0.5,
+                phases,
+                static_priority: 0.5,
+            }),
+        )
+    }
+
+    /// Add a fully specified agent.
+    pub fn agent_spec(&mut self, name: &str, spec: AgentSpec) -> NodeId {
+        self.push(name, NodeKind::Agent(spec))
+    }
+
+    /// Add a standalone (non-LLM) function node.
+    pub fn func(&mut self, name: &str, call: CallSpec) -> NodeId {
+        self.push(name, NodeKind::Func(call))
+    }
+
+    /// Declare a dependency `from → to`.
+    pub fn edge(&mut self, from: NodeId, to: NodeId) {
+        self.edges.push((from, to));
+    }
+
+    /// Chain a sequence of nodes with edges.
+    pub fn chain(&mut self, nodes: &[NodeId]) {
+        for w in nodes.windows(2) {
+            self.edge(w[0], w[1]);
+        }
+    }
+
+    /// Mutate the most recently added agent spec (set prefix, priority, …).
+    pub fn tune_last(&mut self, f: impl FnOnce(&mut AgentSpec)) {
+        if let Some(Node {
+            kind: NodeKind::Agent(spec),
+            ..
+        }) = self.nodes.last_mut()
+        {
+            f(spec);
+        } else {
+            panic!("tune_last: last node is not an agent");
+        }
+    }
+
+    /// Validate and build.
+    pub fn build(self) -> Result<AppGraph, String> {
+        if self.nodes.is_empty() {
+            return Err("empty graph".to_string());
+        }
+        AppGraph::new(self.name, self.nodes, self.edges)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::FuncKind;
+
+    #[test]
+    fn chain_builds_linear_graph() {
+        let mut gb = GraphBuilder::new("chain");
+        let ids: Vec<NodeId> = (0..4)
+            .map(|i| gb.agent(&format!("n{i}"), "t", 10, &[5]))
+            .collect();
+        gb.chain(&ids);
+        let g = gb.build().unwrap();
+        assert_eq!(g.max_depth(), 3);
+        assert_eq!(g.roots(), vec![ids[0]]);
+    }
+
+    #[test]
+    fn empty_rejected() {
+        assert!(GraphBuilder::new("e").build().is_err());
+    }
+
+    #[test]
+    fn tune_last_sets_prefix() {
+        let mut gb = GraphBuilder::new("t");
+        gb.agent("a", "t", 10, &[5]);
+        gb.tune_last(|s| {
+            s.shared_prefix = 123;
+            s.static_priority = 0.9;
+        });
+        let g = gb.build().unwrap();
+        match &g.node(NodeId(0)).kind {
+            NodeKind::Agent(a) => {
+                assert_eq!(a.shared_prefix, 123);
+                assert_eq!(a.static_priority, 0.9);
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn call_embeds_between_phases() {
+        let mut gb = GraphBuilder::new("c");
+        gb.agent_with_call("a", "t", 10, &[5, 7, 9],
+                           CallSpec::new(FuncKind::Git));
+        let g = gb.build().unwrap();
+        match &g.node(NodeId(0)).kind {
+            NodeKind::Agent(a) => {
+                assert_eq!(a.phases.len(), 3);
+                assert!(a.phases[0].call.is_some());
+                assert!(a.phases[1].call.is_some());
+                assert!(a.phases[2].call.is_none());
+                assert_eq!(a.call_count(), 2);
+                assert_eq!(a.total_gen_tokens(), 21);
+            }
+            _ => panic!(),
+        }
+    }
+}

@@ -1,0 +1,176 @@
+//! Pre-built function-call node types (Table 3) with the MCP tool latency
+//! characteristics of Table 1.
+
+use crate::sim::{Dist, LogNormal};
+
+/// Table 3's pre-built `FuncNode` types plus a custom escape hatch.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FuncKind {
+    /// Read the contents of a specified file.
+    FileRead,
+    /// Write content to a specified file.
+    FileWrite,
+    /// Perform a web search query.
+    WebSearch,
+    /// Query files under a specified path.
+    FileQuery,
+    /// Multi-stage analysis of large datasets.
+    DataAnalysis,
+    /// Request user confirmation.
+    UserConfirm,
+    /// Use external test tools.
+    ExternalTest,
+    /// Git operations (Table 1).
+    Git,
+    /// SQLite-style database query (Table 1).
+    Database,
+    /// GPU-side AI generation (Table 1's heaviest tool).
+    AiGeneration,
+    /// User-defined tool with an explicit latency distribution.
+    Custom { name: String, latency_us: Dist },
+}
+
+/// Latency model of a tool: a distribution in microseconds (Table 1) and a
+/// default user estimate used when the graph supplies none.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ToolLatency {
+    pub dist: Dist,
+}
+
+impl ToolLatency {
+    pub fn mean_us(&self) -> f64 {
+        self.dist.mean()
+    }
+}
+
+impl FuncKind {
+    /// Stable name (keys the per-function-type forecasting model, §4.1).
+    pub fn name(&self) -> &str {
+        match self {
+            FuncKind::FileRead => "file_read",
+            FuncKind::FileWrite => "file_write",
+            FuncKind::WebSearch => "web_search",
+            FuncKind::FileQuery => "file_query",
+            FuncKind::DataAnalysis => "data_analysis",
+            FuncKind::UserConfirm => "user_confirm",
+            FuncKind::ExternalTest => "external_test",
+            FuncKind::Git => "git",
+            FuncKind::Database => "database",
+            FuncKind::AiGeneration => "ai_generation",
+            FuncKind::Custom { name, .. } => name,
+        }
+    }
+
+    /// Table 1 latency models (µs). "Latency" column is the center,
+    /// "Variability" column sets the spread.
+    pub fn latency(&self) -> ToolLatency {
+        let dist = match self {
+            // File System: 100 ms ± 50 ms.
+            FuncKind::FileRead | FuncKind::FileWrite | FuncKind::FileQuery => {
+                Dist::Uniform(50_000.0, 150_000.0)
+            }
+            // Git: 100 ms, variability 100 ms–1 s (heavy tail).
+            FuncKind::Git => Dist::LogNormal(LogNormal {
+                median: 150_000.0,
+                sigma: 0.9,
+            }),
+            // Database: 100–1000 ms, variability 500 ms.
+            FuncKind::Database => Dist::Uniform(100_000.0, 1_000_000.0),
+            // Web Search: 1–5 s, variability 1–10 s.
+            FuncKind::WebSearch => Dist::LogNormal(LogNormal {
+                median: 2_500_000.0,
+                sigma: 0.7,
+            }),
+            // Multi-stage data analysis: seconds-scale.
+            FuncKind::DataAnalysis => Dist::Uniform(2_000_000.0, 8_000_000.0),
+            // User confirmation: human in the loop, seconds to tens of s.
+            FuncKind::UserConfirm => Dist::LogNormal(LogNormal {
+                median: 5_000_000.0,
+                sigma: 0.8,
+            }),
+            // External test tools: compile+run, seconds.
+            FuncKind::ExternalTest => Dist::Uniform(1_000_000.0, 6_000_000.0),
+            // AI Generation: 5–30 s, variability 10–60 s.
+            FuncKind::AiGeneration => Dist::LogNormal(LogNormal {
+                median: 12_000_000.0,
+                sigma: 0.8,
+            }),
+            FuncKind::Custom { latency_us, .. } => latency_us.clone(),
+        };
+        ToolLatency { dist }
+    }
+
+    /// Default internal stage decomposition (Table 3: each pre-built type
+    /// bundles a stage count; DataAnalysis is explicitly multi-stage).
+    pub fn default_stages(&self) -> u32 {
+        match self {
+            FuncKind::DataAnalysis => 4,
+            FuncKind::WebSearch => 2,
+            FuncKind::AiGeneration => 3,
+            FuncKind::ExternalTest => 2,
+            _ => 1,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::Rng;
+
+    #[test]
+    fn names_unique() {
+        let kinds = [
+            FuncKind::FileRead,
+            FuncKind::FileWrite,
+            FuncKind::WebSearch,
+            FuncKind::FileQuery,
+            FuncKind::DataAnalysis,
+            FuncKind::UserConfirm,
+            FuncKind::ExternalTest,
+            FuncKind::Git,
+            FuncKind::Database,
+            FuncKind::AiGeneration,
+        ];
+        let mut names: Vec<&str> = kinds.iter().map(|k| k.name()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), kinds.len());
+    }
+
+    #[test]
+    fn table1_latency_bands() {
+        // File system ~100ms; web search seconds; AI generation 10s-scale.
+        let mut rng = Rng::new(1);
+        let fs_mean = FuncKind::FileRead.latency().mean_us();
+        assert!((90_000.0..110_000.0).contains(&fs_mean), "{fs_mean}");
+        let ws = FuncKind::WebSearch.latency();
+        let mean_ws = ws.mean_us();
+        assert!(
+            (1_000_000.0..5_000_000.0).contains(&mean_ws),
+            "{mean_ws}"
+        );
+        let ai = FuncKind::AiGeneration.latency().mean_us();
+        assert!(ai > 5_000_000.0, "{ai}");
+        // Samples stay positive.
+        for _ in 0..100 {
+            assert!(ws.dist.sample(&mut rng) > 0.0);
+        }
+    }
+
+    #[test]
+    fn stage_defaults() {
+        assert_eq!(FuncKind::DataAnalysis.default_stages(), 4);
+        assert_eq!(FuncKind::FileRead.default_stages(), 1);
+    }
+
+    #[test]
+    fn custom_tool() {
+        let k = FuncKind::Custom {
+            name: "my_tool".into(),
+            latency_us: Dist::Constant(42.0),
+        };
+        assert_eq!(k.name(), "my_tool");
+        assert_eq!(k.latency().mean_us(), 42.0);
+    }
+}

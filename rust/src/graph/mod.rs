@@ -1,0 +1,492 @@
+//! Frontend API (§3.1): multi-agent applications as annotated DAGs.
+//!
+//! Users describe an application as a graph whose nodes are **agents**
+//! (LLM inference with optional embedded function calls — the
+//! `LLM1 → FC → LLM2` lifecycle of Fig 2b) or standalone **function nodes**
+//! (non-LLM stages between agents). Edges are data dependencies. The graph
+//! carries the three kinds of information the paper says serving systems
+//! lack: structure, fine-grained function-call stages, and performance
+//! metadata (`predict_time`).
+//!
+//! [`templates`] builds the two benchmark applications: Code-Writer
+//! (11 agent types, §7.1) and Deep-Research.
+
+mod builder;
+mod func;
+pub mod templates;
+
+pub use builder::GraphBuilder;
+pub use func::{FuncKind, ToolLatency};
+
+use crate::sim::Dist;
+
+/// Node identifier within one [`AppGraph`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct NodeId(pub u32);
+
+/// A function call embedded in an agent's generation (the `FuncNode`
+/// decomposition of §3.1: `stages` gives the Temporal Scheduler a
+/// progress view; `predict_time_us` is the user's estimate for Eq. 1).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CallSpec {
+    pub kind: FuncKind,
+    /// User-supplied execution-time estimate (t_user in Eq. 1), if any.
+    pub predict_time_us: Option<u64>,
+    /// Sequential stage count (≥1). More stages → finer progress signal.
+    pub stages: u32,
+}
+
+impl CallSpec {
+    pub fn new(kind: FuncKind) -> Self {
+        Self {
+            kind,
+            predict_time_us: None,
+            stages: 1,
+        }
+    }
+
+    pub fn with_predict_time_us(mut self, us: u64) -> Self {
+        self.predict_time_us = Some(us);
+        self
+    }
+
+    pub fn with_stages(mut self, stages: u32) -> Self {
+        assert!(stages >= 1);
+        self.stages = stages;
+        self
+    }
+}
+
+/// One generation phase of an agent: decode `gen_tokens` tokens, then
+/// (optionally) issue a function call before the next phase.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Phase {
+    pub gen_tokens: u32,
+    pub call: Option<CallSpec>,
+}
+
+/// An LLM agent node.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AgentSpec {
+    /// Agent type name ("programmer", "reviewer", …). Reservation (Eq. 6)
+    /// operates per type.
+    pub agent_type: String,
+    /// Prompt tokens owned by this agent (instructions etc.).
+    pub prompt_base: u32,
+    /// Shared system-prefix tokens (prefix-cache reusable across instances
+    /// of the same type).
+    pub shared_prefix: u32,
+    /// Fraction of each parent's produced tokens appended to the prompt.
+    pub inherit_frac: f64,
+    /// Generation phases, separated by function calls.
+    pub phases: Vec<Phase>,
+    /// Static priority hint (P_a's structural component).
+    pub static_priority: f64,
+}
+
+impl AgentSpec {
+    pub fn total_gen_tokens(&self) -> u32 {
+        self.phases.iter().map(|p| p.gen_tokens).sum()
+    }
+
+    pub fn call_count(&self) -> usize {
+        self.phases.iter().filter(|p| p.call.is_some()).count()
+    }
+}
+
+/// Node payload.
+#[derive(Debug, Clone, PartialEq)]
+pub enum NodeKind {
+    Agent(AgentSpec),
+    /// A standalone non-LLM stage between agents (no KV cache).
+    Func(CallSpec),
+}
+
+/// One node of an application DAG.
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub id: NodeId,
+    pub name: String,
+    pub kind: NodeKind,
+}
+
+/// A validated multi-agent application DAG.
+#[derive(Debug, Clone)]
+pub struct AppGraph {
+    pub name: String,
+    nodes: Vec<Node>,
+    /// Adjacency: children[i] = nodes that depend on node i.
+    children: Vec<Vec<NodeId>>,
+    parents: Vec<Vec<NodeId>>,
+    topo: Vec<NodeId>,
+    depth: Vec<u32>,
+    /// Longest-expected-time path membership (critical path).
+    on_critical_path: Vec<bool>,
+    max_depth: u32,
+}
+
+impl AppGraph {
+    /// Construct and validate; panics on cycles (builder returns Result).
+    pub(crate) fn new(
+        name: String,
+        nodes: Vec<Node>,
+        edges: Vec<(NodeId, NodeId)>,
+    ) -> Result<Self, String> {
+        let n = nodes.len();
+        let mut children = vec![Vec::new(); n];
+        let mut parents = vec![Vec::new(); n];
+        for &(a, b) in &edges {
+            if a.0 as usize >= n || b.0 as usize >= n {
+                return Err(format!("edge ({},{}) out of range", a.0, b.0));
+            }
+            if a == b {
+                return Err(format!("self-loop at node {}", a.0));
+            }
+            children[a.0 as usize].push(b);
+            parents[b.0 as usize].push(a);
+        }
+
+        // Kahn's algorithm: topo order + cycle detection.
+        let mut indeg: Vec<usize> =
+            parents.iter().map(|p| p.len()).collect();
+        let mut queue: Vec<NodeId> = (0..n as u32)
+            .filter(|&i| indeg[i as usize] == 0)
+            .map(NodeId)
+            .collect();
+        let mut topo = Vec::with_capacity(n);
+        let mut head = 0;
+        while head < queue.len() {
+            let u = queue[head];
+            head += 1;
+            topo.push(u);
+            for &v in &children[u.0 as usize] {
+                indeg[v.0 as usize] -= 1;
+                if indeg[v.0 as usize] == 0 {
+                    queue.push(v);
+                }
+            }
+        }
+        if topo.len() != n {
+            return Err("graph has a cycle".to_string());
+        }
+
+        // Depth = longest edge-count path from any root.
+        let mut depth = vec![0u32; n];
+        for &u in &topo {
+            for &v in &children[u.0 as usize] {
+                depth[v.0 as usize] =
+                    depth[v.0 as usize].max(depth[u.0 as usize] + 1);
+            }
+        }
+        let max_depth = depth.iter().copied().max().unwrap_or(0);
+
+        let mut g = Self {
+            name,
+            nodes,
+            children,
+            parents,
+            topo,
+            depth,
+            on_critical_path: vec![false; n],
+            max_depth,
+        };
+        g.compute_critical_path();
+        Ok(g)
+    }
+
+    /// Expected wall time of a node (for critical-path analysis): LLM work
+    /// approximated by token counts, calls by their latency means.
+    fn expected_node_time(&self, id: NodeId) -> f64 {
+        match &self.nodes[id.0 as usize].kind {
+            NodeKind::Agent(a) => {
+                let gen = a.total_gen_tokens() as f64 * 50_000.0; // ~50ms/tok
+                let prompt = (a.prompt_base + a.shared_prefix) as f64 * 500.0;
+                let calls: f64 = a
+                    .phases
+                    .iter()
+                    .filter_map(|p| p.call.as_ref())
+                    .map(|c| {
+                        c.predict_time_us
+                            .map(|t| t as f64)
+                            .unwrap_or_else(|| c.kind.latency().mean_us())
+                    })
+                    .sum();
+                gen + prompt + calls
+            }
+            NodeKind::Func(c) => c
+                .predict_time_us
+                .map(|t| t as f64)
+                .unwrap_or_else(|| c.kind.latency().mean_us()),
+        }
+    }
+
+    /// Mark nodes on the longest expected-time root→leaf path.
+    fn compute_critical_path(&mut self) {
+        let n = self.nodes.len();
+        if n == 0 {
+            return;
+        }
+        // dist[i] = longest expected time of a path ending at i (inclusive).
+        let mut dist = vec![0f64; n];
+        let mut pred: Vec<Option<NodeId>> = vec![None; n];
+        for &u in &self.topo {
+            let ui = u.0 as usize;
+            dist[ui] += self.expected_node_time(u);
+            for &v in &self.children[ui] {
+                let vi = v.0 as usize;
+                if dist[ui] > dist[vi] {
+                    dist[vi] = dist[ui];
+                    pred[vi] = Some(u);
+                }
+            }
+        }
+        let mut cur = NodeId(
+            (0..n).max_by(|&a, &b| dist[a].total_cmp(&dist[b])).unwrap()
+                as u32,
+        );
+        loop {
+            self.on_critical_path[cur.0 as usize] = true;
+            match pred[cur.0 as usize] {
+                Some(p) => cur = p,
+                None => break,
+            }
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    pub fn node(&self, id: NodeId) -> &Node {
+        &self.nodes[id.0 as usize]
+    }
+
+    pub fn nodes(&self) -> impl Iterator<Item = &Node> {
+        self.nodes.iter()
+    }
+
+    pub fn children(&self, id: NodeId) -> &[NodeId] {
+        &self.children[id.0 as usize]
+    }
+
+    pub fn parents(&self, id: NodeId) -> &[NodeId] {
+        &self.parents[id.0 as usize]
+    }
+
+    /// Topological order (roots first).
+    pub fn topo_order(&self) -> &[NodeId] {
+        &self.topo
+    }
+
+    pub fn depth(&self, id: NodeId) -> u32 {
+        self.depth[id.0 as usize]
+    }
+
+    pub fn max_depth(&self) -> u32 {
+        self.max_depth
+    }
+
+    pub fn in_degree(&self, id: NodeId) -> usize {
+        self.parents[id.0 as usize].len()
+    }
+
+    pub fn out_degree(&self, id: NodeId) -> usize {
+        self.children[id.0 as usize].len()
+    }
+
+    /// Is this node on the longest-expected-time (critical) path?
+    pub fn is_critical(&self, id: NodeId) -> bool {
+        self.on_critical_path[id.0 as usize]
+    }
+
+    /// Roots (no parents).
+    pub fn roots(&self) -> Vec<NodeId> {
+        (0..self.nodes.len() as u32)
+            .map(NodeId)
+            .filter(|&i| self.parents[i.0 as usize].is_empty())
+            .collect()
+    }
+
+    /// Structural importance f_struct (Eq. 5): how much downstream work a
+    /// node unlocks, from depth-remaining and fan-out, normalized to [0,1].
+    pub fn f_struct(&self, id: NodeId) -> f64 {
+        let d = self.depth(id) as f64;
+        let maxd = self.max_depth.max(1) as f64;
+        let depth_remaining = (maxd - d) / maxd;
+        let fan = self.out_degree(id) as f64;
+        let max_fan = (0..self.nodes.len() as u32)
+            .map(|i| self.children[i as usize].len())
+            .max()
+            .unwrap_or(1)
+            .max(1) as f64;
+        0.6 * depth_remaining + 0.4 * (fan / max_fan)
+    }
+
+    /// Number of downstream (transitively reachable) nodes.
+    pub fn downstream_count(&self, id: NodeId) -> usize {
+        let mut seen = vec![false; self.nodes.len()];
+        let mut stack = vec![id];
+        let mut count = 0;
+        while let Some(u) = stack.pop() {
+            for &v in &self.children[u.0 as usize] {
+                if !seen[v.0 as usize] {
+                    seen[v.0 as usize] = true;
+                    count += 1;
+                    stack.push(v);
+                }
+            }
+        }
+        count
+    }
+
+    /// Distinct agent type names in the graph.
+    pub fn agent_types(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self
+            .nodes
+            .iter()
+            .filter_map(|n| match &n.kind {
+                NodeKind::Agent(a) => Some(a.agent_type.as_str()),
+                NodeKind::Func(_) => None,
+            })
+            .collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
+    /// Mean expected tool latency annotation (used as default Dist).
+    pub fn expected_latency(&self) -> Dist {
+        Dist::Constant(
+            self.topo
+                .iter()
+                .map(|&u| self.expected_node_time(u))
+                .sum::<f64>(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::templates;
+    use super::*;
+
+    fn diamond() -> AppGraph {
+        // a -> b, a -> c, b -> d, c -> d ; b is heavier than c.
+        let mut gb = GraphBuilder::new("diamond");
+        let a = gb.agent("a", "root", 100, &[50]);
+        let b = gb.agent_with_call(
+            "b",
+            "heavy",
+            100,
+            &[200, 100],
+            CallSpec::new(FuncKind::WebSearch),
+        );
+        let c = gb.agent("c", "light", 50, &[20]);
+        let d = gb.agent("d", "join", 100, &[50]);
+        gb.edge(a, b);
+        gb.edge(a, c);
+        gb.edge(b, d);
+        gb.edge(c, d);
+        gb.build().unwrap()
+    }
+
+    #[test]
+    fn topo_respects_edges() {
+        let g = diamond();
+        let pos: Vec<usize> = (0..4)
+            .map(|i| {
+                g.topo_order()
+                    .iter()
+                    .position(|&n| n == NodeId(i))
+                    .unwrap()
+            })
+            .collect();
+        assert!(pos[0] < pos[1] && pos[0] < pos[2]);
+        assert!(pos[1] < pos[3] && pos[2] < pos[3]);
+    }
+
+    #[test]
+    fn cycle_rejected() {
+        let mut gb = GraphBuilder::new("cyc");
+        let a = gb.agent("a", "t", 10, &[5]);
+        let b = gb.agent("b", "t", 10, &[5]);
+        gb.edge(a, b);
+        gb.edge(b, a);
+        assert!(gb.build().is_err());
+    }
+
+    #[test]
+    fn self_loop_rejected() {
+        let mut gb = GraphBuilder::new("loop");
+        let a = gb.agent("a", "t", 10, &[5]);
+        gb.edge(a, a);
+        assert!(gb.build().is_err());
+    }
+
+    #[test]
+    fn depth_and_degree() {
+        let g = diamond();
+        assert_eq!(g.depth(NodeId(0)), 0);
+        assert_eq!(g.depth(NodeId(1)), 1);
+        assert_eq!(g.depth(NodeId(3)), 2);
+        assert_eq!(g.out_degree(NodeId(0)), 2);
+        assert_eq!(g.in_degree(NodeId(3)), 2);
+        assert_eq!(g.max_depth(), 2);
+    }
+
+    #[test]
+    fn critical_path_takes_heavy_branch() {
+        let g = diamond();
+        assert!(g.is_critical(NodeId(0)));
+        assert!(g.is_critical(NodeId(1)), "heavy branch b must be critical");
+        assert!(!g.is_critical(NodeId(2)), "light branch c must not be");
+        assert!(g.is_critical(NodeId(3)));
+    }
+
+    #[test]
+    fn f_struct_root_exceeds_leaf() {
+        let g = diamond();
+        assert!(g.f_struct(NodeId(0)) > g.f_struct(NodeId(3)));
+    }
+
+    #[test]
+    fn downstream_count() {
+        let g = diamond();
+        assert_eq!(g.downstream_count(NodeId(0)), 3);
+        assert_eq!(g.downstream_count(NodeId(3)), 0);
+    }
+
+    #[test]
+    fn code_writer_template_shape() {
+        let g = templates::code_writer();
+        // §7.1: 11 agent types with frequent function calls.
+        assert_eq!(g.agent_types().len(), 11);
+        let call_count: usize = g
+            .nodes()
+            .filter_map(|n| match &n.kind {
+                NodeKind::Agent(a) => Some(a.call_count()),
+                _ => None,
+            })
+            .sum();
+        assert!(call_count >= 8, "Code-Writer must be call-heavy");
+        assert!(g.max_depth() >= 4);
+    }
+
+    #[test]
+    fn deep_research_template_shape() {
+        let g = templates::deep_research();
+        // Fewer agents, deeper chains (§7.1).
+        assert!(g.agent_types().len() < 11);
+        assert!(g.max_depth() >= 5, "depth={}", g.max_depth());
+    }
+
+    #[test]
+    fn roots_found() {
+        let g = diamond();
+        assert_eq!(g.roots(), vec![NodeId(0)]);
+    }
+}

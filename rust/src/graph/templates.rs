@@ -1,0 +1,294 @@
+//! The paper's two benchmark applications (Fig 1, §7.1) as graph templates.
+//!
+//! * [`code_writer`] — 11 agent types orchestrating plan → implement →
+//!   review → test → debug → document → release, with frequent function
+//!   calls to file I/O, git, search and external test tools. High memory
+//!   pressure from many concurrent KV states.
+//! * [`deep_research`] — fewer agents but deeper dependency chains
+//!   (plan → search → summarize → verify → synthesize → edit), stressing
+//!   critical-path optimization.
+
+use super::{CallSpec, FuncKind, GraphBuilder, AppGraph};
+
+/// Code-Writer: 11 agent types, call-heavy, wide then joining (Fig 1a).
+pub fn code_writer() -> AppGraph {
+    let mut gb = GraphBuilder::new("code-writer");
+
+    let planner = gb.agent("planner", "planner", 420, &[180]);
+    gb.tune_last(|s| {
+        s.shared_prefix = 256;
+        s.static_priority = 0.9;
+    });
+
+    let architect = gb.agent_with_call(
+        "architect",
+        "architect",
+        380,
+        &[160, 120],
+        CallSpec::new(FuncKind::FileQuery).with_predict_time_us(100_000),
+    );
+    gb.tune_last(|s| {
+        s.shared_prefix = 256;
+        s.static_priority = 0.85;
+    });
+
+    // Two parallel programmers — the critical implementation work.
+    let prog_core = gb.agent_with_call(
+        "programmer-core",
+        "programmer",
+        520,
+        &[420, 260],
+        CallSpec::new(FuncKind::FileWrite).with_predict_time_us(120_000),
+    );
+    gb.tune_last(|s| {
+        s.shared_prefix = 384;
+        s.static_priority = 0.95;
+    });
+    // Copilot-style codegen subcall: Table 1's heaviest tool class.
+    let prog_aux = gb.agent_with_call(
+        "programmer-aux",
+        "programmer-aux",
+        480,
+        &[360, 200],
+        CallSpec::new(FuncKind::AiGeneration)
+            .with_predict_time_us(12_000_000)
+            .with_stages(3),
+    );
+    gb.tune_last(|s| s.shared_prefix = 384);
+
+    let searcher = gb.agent_with_call(
+        "api-searcher",
+        "searcher",
+        300,
+        &[90, 140],
+        CallSpec::new(FuncKind::WebSearch)
+            .with_predict_time_us(2_500_000)
+            .with_stages(2),
+    );
+
+    // Review sign-off waits on a human (UserConfirm, Table 3).
+    let reviewer = gb.agent_with_call(
+        "code-reviewer",
+        "reviewer",
+        440,
+        &[150, 180],
+        CallSpec::new(FuncKind::UserConfirm).with_predict_time_us(5_000_000),
+    );
+    gb.tune_last(|s| {
+        s.shared_prefix = 256;
+        s.static_priority = 0.8;
+    });
+
+    let test_writer = gb.agent_with_call(
+        "test-writer",
+        "test-writer",
+        400,
+        &[240, 120],
+        CallSpec::new(FuncKind::FileWrite).with_predict_time_us(120_000),
+    );
+
+    let test_runner = gb.agent_with_call(
+        "test-runner",
+        "test-runner",
+        260,
+        &[60, 150],
+        CallSpec::new(FuncKind::ExternalTest)
+            .with_predict_time_us(3_500_000)
+            .with_stages(2),
+    );
+    gb.tune_last(|s| s.static_priority = 0.85);
+
+    let debugger = gb.agent_with_call(
+        "debugger",
+        "debugger",
+        460,
+        &[200, 220],
+        CallSpec::new(FuncKind::ExternalTest).with_predict_time_us(3_500_000),
+    );
+    gb.tune_last(|s| s.static_priority = 0.9);
+
+    let doc_writer = gb.agent_with_call(
+        "doc-writer",
+        "doc-writer",
+        340,
+        &[280, 80],
+        CallSpec::new(FuncKind::FileWrite).with_predict_time_us(120_000),
+    );
+    gb.tune_last(|s| s.static_priority = 0.3);
+
+    let release = gb.agent_with_call(
+        "release-manager",
+        "release-manager",
+        300,
+        &[120, 100],
+        CallSpec::new(FuncKind::Git).with_predict_time_us(400_000),
+    );
+    gb.tune_last(|s| s.static_priority = 0.8);
+
+    gb.edge(planner, architect);
+    gb.edge(architect, prog_core);
+    gb.edge(architect, prog_aux);
+    gb.edge(architect, searcher);
+    gb.edge(searcher, prog_core);
+    gb.edge(prog_core, reviewer);
+    gb.edge(prog_aux, reviewer);
+    gb.edge(architect, test_writer);
+    gb.edge(reviewer, test_runner);
+    gb.edge(test_writer, test_runner);
+    gb.edge(test_runner, debugger);
+    gb.edge(prog_core, doc_writer);
+    gb.edge(debugger, release);
+    gb.edge(doc_writer, release);
+
+    gb.build().expect("code_writer template is valid")
+}
+
+/// Deep-Research: a deep chain with a parallel search fan (Fig 1b).
+pub fn deep_research() -> AppGraph {
+    let mut gb = GraphBuilder::new("deep-research");
+
+    let planner = gb.agent("query-planner", "planner", 380, &[160]);
+    gb.tune_last(|s| {
+        s.shared_prefix = 256;
+        s.static_priority = 0.9;
+    });
+
+    // Parallel searchers hitting the web-search tool (long, variable).
+    let search_a = gb.agent_with_call(
+        "searcher-a",
+        "searcher",
+        320,
+        &[80, 200],
+        CallSpec::new(FuncKind::WebSearch)
+            .with_predict_time_us(2_500_000)
+            .with_stages(2),
+    );
+    let search_b = gb.agent_with_call(
+        "searcher-b",
+        "searcher",
+        320,
+        &[80, 200],
+        CallSpec::new(FuncKind::WebSearch)
+            .with_predict_time_us(2_500_000)
+            .with_stages(2),
+    );
+
+    let summarizer = gb.agent("summarizer", "summarizer", 520, &[420]);
+    gb.tune_last(|s| s.static_priority = 0.75);
+
+    let fact_checker = gb.agent_with_call(
+        "fact-checker",
+        "fact-checker",
+        420,
+        &[120, 180],
+        CallSpec::new(FuncKind::Database).with_predict_time_us(600_000),
+    );
+    gb.tune_last(|s| s.static_priority = 0.8);
+
+    let analyst = gb.agent_with_call(
+        "analyst",
+        "analyst",
+        460,
+        &[180, 260],
+        CallSpec::new(FuncKind::DataAnalysis)
+            .with_predict_time_us(5_000_000)
+            .with_stages(4),
+    );
+    gb.tune_last(|s| s.static_priority = 0.85);
+
+    let synthesizer = gb.agent("synthesizer", "synthesizer", 620, &[560]);
+    gb.tune_last(|s| s.static_priority = 0.95);
+
+    let editor = gb.agent("editor", "editor", 380, &[260]);
+    gb.tune_last(|s| s.static_priority = 0.7);
+
+    gb.edge(planner, search_a);
+    gb.edge(planner, search_b);
+    gb.edge(search_a, summarizer);
+    gb.edge(search_b, summarizer);
+    gb.edge(summarizer, fact_checker);
+    gb.edge(fact_checker, analyst);
+    gb.edge(analyst, synthesizer);
+    gb.edge(synthesizer, editor);
+
+    gb.build().expect("deep_research template is valid")
+}
+
+/// A minimal RAG app — the Fig 5 example, used by quickstart/docs.
+pub fn rag() -> AppGraph {
+    let mut gb = GraphBuilder::new("rag");
+    let retriever = gb.agent_with_call(
+        "retriever",
+        "retriever",
+        256,
+        &[48, 96],
+        CallSpec::new(FuncKind::WebSearch)
+            .with_predict_time_us(3_000_000)
+            .with_stages(2),
+    );
+    let generator = gb.agent("generator", "generator", 192, &[384]);
+    gb.tune_last(|s| s.static_priority = 0.9);
+    gb.edge(retriever, generator);
+    gb.build().expect("rag template is valid")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::NodeKind;
+
+    #[test]
+    fn templates_are_acyclic_and_connected() {
+        for g in [code_writer(), deep_research(), rag()] {
+            assert!(!g.is_empty());
+            assert_eq!(g.topo_order().len(), g.len());
+            // Single root component: every non-root node reachable.
+            let roots = g.roots();
+            assert_eq!(roots.len(), 1, "{} roots", g.name);
+            assert_eq!(
+                g.downstream_count(roots[0]),
+                g.len() - 1,
+                "{} disconnected",
+                g.name
+            );
+        }
+    }
+
+    #[test]
+    fn deep_research_deeper_than_wide() {
+        // §7.1: Deep-Research has fewer agents but *relatively* deeper
+        // chains — nearly every node sits on one long dependency path.
+        let dr = deep_research();
+        let cw = code_writer();
+        assert!(dr.len() < cw.len());
+        let dr_ratio = dr.max_depth() as f64 / dr.len() as f64;
+        let cw_ratio = cw.max_depth() as f64 / cw.len() as f64;
+        assert!(dr_ratio > cw_ratio, "{dr_ratio} vs {cw_ratio}");
+    }
+
+    #[test]
+    fn code_writer_has_parallel_programmers() {
+        let g = code_writer();
+        // The architect fans out to >= 3 children.
+        let architect = g
+            .nodes()
+            .find(|n| n.name == "architect")
+            .unwrap()
+            .id;
+        assert!(g.out_degree(architect) >= 3);
+    }
+
+    #[test]
+    fn rag_matches_fig5() {
+        let g = rag();
+        assert_eq!(g.len(), 2);
+        match &g.node(g.roots()[0]).kind {
+            NodeKind::Agent(a) => {
+                assert_eq!(a.call_count(), 1);
+                let call = a.phases[0].call.as_ref().unwrap();
+                assert_eq!(call.predict_time_us, Some(3_000_000));
+            }
+            _ => panic!(),
+        }
+    }
+}

@@ -1,0 +1,354 @@
+//! GPU KV block pool with dynamic shared/reserved partitioning (§5.1).
+//!
+//! Reservation is *accounting*, not physical partitioning: any free block
+//! can serve any request, but the pool guarantees that the unused part of
+//! each critical agent type's quota is never handed to shared allocations.
+//! This matches the paper: non-critical work cannot exhaust the blocks the
+//! Spatial Scheduler set aside for critical-path agents.
+
+use std::collections::HashMap;
+
+use super::{AgentTypeId, BlockId};
+
+/// Which capacity region an allocation is charged to (§3.2 phase 4:
+/// "routing each waiting request to shared capacity, reserved capacity,
+/// or deferral").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Route {
+    /// Charge the globally shared pool only.
+    Shared,
+    /// Allow drawing from this type's reserved quota (then shared).
+    Reserved(AgentTypeId),
+}
+
+/// Result of an allocation attempt.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum AllocOutcome {
+    /// Blocks granted; `reserved_charged` of them count against the type's
+    /// quota and must be reported back on free.
+    Granted {
+        blocks: Vec<BlockId>,
+        reserved_charged: u32,
+    },
+    /// Not enough capacity on the requested route.
+    Deferred,
+}
+
+/// The GPU KV block pool.
+#[derive(Debug, Clone)]
+pub struct GpuPool {
+    total: u32,
+    free: Vec<BlockId>,
+    /// Blocks released by their owner but still being read by an in-flight
+    /// D2H transfer (§6.3 pending-free protocol).
+    pending_free: u32,
+    /// Reserved quota per critical agent type (blocks).
+    quotas: HashMap<AgentTypeId, u32>,
+    /// Blocks currently allocated under each type's quota.
+    quota_used: HashMap<AgentTypeId, u32>,
+}
+
+impl GpuPool {
+    pub fn new(total: u32) -> Self {
+        Self {
+            total,
+            free: (0..total).rev().map(BlockId).collect(),
+            pending_free: 0,
+            quotas: HashMap::new(),
+            quota_used: HashMap::new(),
+        }
+    }
+
+    pub fn total(&self) -> u32 {
+        self.total
+    }
+
+    /// Physically free blocks (includes reserved headroom; excludes
+    /// pending-free).
+    pub fn free_blocks(&self) -> u32 {
+        self.free.len() as u32
+    }
+
+    /// Blocks in pending-free limbo (unreusable until transfer completes).
+    pub fn pending_free_blocks(&self) -> u32 {
+        self.pending_free
+    }
+
+    /// Blocks currently allocated to live requests (excludes pending-free).
+    pub fn used_blocks(&self) -> u32 {
+        self.total - self.free_blocks() - self.pending_free
+    }
+
+    /// Occupancy fraction counting pending-free as occupied (they are).
+    pub fn usage(&self) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        1.0 - self.free_blocks() as f64 / self.total as f64
+    }
+
+    /// Unused reserved headroom across all types.
+    pub fn outstanding_reserved(&self) -> u32 {
+        self.quotas
+            .iter()
+            .map(|(t, q)| q.saturating_sub(self.quota_used(*t)))
+            .sum()
+    }
+
+    /// Free blocks available to *shared* allocations.
+    pub fn shared_free(&self) -> u32 {
+        self.free_blocks().saturating_sub(self.outstanding_reserved())
+    }
+
+    pub fn quota(&self, t: AgentTypeId) -> u32 {
+        self.quotas.get(&t).copied().unwrap_or(0)
+    }
+
+    pub fn quota_used(&self, t: AgentTypeId) -> u32 {
+        self.quota_used.get(&t).copied().unwrap_or(0)
+    }
+
+    /// Reserved headroom for a type.
+    pub fn headroom(&self, t: AgentTypeId) -> u32 {
+        self.quota(t).saturating_sub(self.quota_used(t))
+    }
+
+    /// Total reserved quota across all types.
+    pub fn total_quota(&self) -> u32 {
+        self.quotas.values().sum()
+    }
+
+    /// Install a new reservation plan (Algorithm 2, step 3 output).
+    /// Quotas are clamped so outstanding headroom never exceeds what the
+    /// pool could actually deliver.
+    pub fn set_quotas(&mut self, plan: &[(AgentTypeId, u32)]) {
+        self.quotas.clear();
+        for &(t, q) in plan {
+            if q > 0 {
+                self.quotas.insert(t, q);
+            }
+        }
+        // Drop stale usage entries for types no longer reserved (their
+        // in-flight blocks keep counting until freed, tracked separately).
+        self.quota_used.retain(|_, used| *used > 0);
+    }
+
+    /// Capacity visible to a request on the given route.
+    pub fn available_for(&self, route: Route) -> u32 {
+        match route {
+            Route::Shared => self.shared_free(),
+            Route::Reserved(t) => {
+                // Own headroom is usable in addition to the shared region,
+                // but never more than physically free.
+                (self.shared_free() + self.headroom(t))
+                    .min(self.free_blocks())
+            }
+        }
+    }
+
+    /// Try to allocate `n` blocks on a route.
+    pub fn alloc(&mut self, n: u32, route: Route) -> AllocOutcome {
+        if n == 0 {
+            return AllocOutcome::Granted {
+                blocks: Vec::new(),
+                reserved_charged: 0,
+            };
+        }
+        if self.available_for(route) < n || self.free_blocks() < n {
+            return AllocOutcome::Deferred;
+        }
+        let reserved_charged = match route {
+            Route::Shared => 0,
+            Route::Reserved(t) => {
+                let charge = n.min(self.headroom(t));
+                *self.quota_used.entry(t).or_insert(0) += charge;
+                charge
+            }
+        };
+        let blocks = self.pop_n(n);
+        AllocOutcome::Granted {
+            blocks,
+            reserved_charged,
+        }
+    }
+
+    fn pop_n(&mut self, n: u32) -> Vec<BlockId> {
+        let at = self.free.len() - n as usize;
+        self.free.split_off(at)
+    }
+
+    /// Return blocks to the pool, un-charging any reserved accounting.
+    pub fn free(
+        &mut self,
+        blocks: Vec<BlockId>,
+        charged: u32,
+        t: Option<AgentTypeId>,
+    ) {
+        if charged > 0 {
+            let t = t.expect("reserved charge without a type");
+            let used = self.quota_used.entry(t).or_insert(0);
+            *used = used.saturating_sub(charged);
+        }
+        self.free.extend(blocks);
+        debug_assert!(
+            self.free.len() as u32 + self.pending_free + self.used_blocks()
+                == self.total
+        );
+    }
+
+    /// Move blocks into pending-free: owner released them, but an in-flight
+    /// D2H copy still reads them. Reserved accounting is released now (the
+    /// request no longer occupies quota) but the physical blocks return to
+    /// the free list only via [`Self::complete_pending`].
+    pub fn mark_pending_free(
+        &mut self,
+        blocks: &[BlockId],
+        charged: u32,
+        t: Option<AgentTypeId>,
+    ) {
+        if charged > 0 {
+            let t = t.expect("reserved charge without a type");
+            let used = self.quota_used.entry(t).or_insert(0);
+            *used = used.saturating_sub(charged);
+        }
+        self.pending_free += blocks.len() as u32;
+    }
+
+    /// Transfer finished: pending-free blocks become reusable.
+    pub fn complete_pending(&mut self, blocks: Vec<BlockId>) {
+        self.pending_free -= blocks.len() as u32;
+        self.free.extend(blocks);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_free_roundtrip() {
+        let mut p = GpuPool::new(100);
+        assert_eq!(p.free_blocks(), 100);
+        let out = p.alloc(10, Route::Shared);
+        let AllocOutcome::Granted {
+            blocks,
+            reserved_charged,
+        } = out
+        else {
+            panic!()
+        };
+        assert_eq!(blocks.len(), 10);
+        assert_eq!(reserved_charged, 0);
+        assert_eq!(p.used_blocks(), 10);
+        p.free(blocks, 0, None);
+        assert_eq!(p.free_blocks(), 100);
+    }
+
+    #[test]
+    fn shared_cannot_touch_reserved_headroom() {
+        let mut p = GpuPool::new(100);
+        p.set_quotas(&[(1, 30)]);
+        assert_eq!(p.shared_free(), 70);
+        // 71 shared blocks must be refused even though 100 are free.
+        assert_eq!(p.alloc(71, Route::Shared), AllocOutcome::Deferred);
+        // 70 succeed.
+        assert!(matches!(
+            p.alloc(70, Route::Shared),
+            AllocOutcome::Granted { .. }
+        ));
+        // Critical type can still take its 30.
+        assert!(matches!(
+            p.alloc(30, Route::Reserved(1)),
+            AllocOutcome::Granted {
+                reserved_charged: 30,
+                ..
+            }
+        ));
+        assert_eq!(p.free_blocks(), 0);
+    }
+
+    #[test]
+    fn reserved_route_draws_quota_then_shared() {
+        let mut p = GpuPool::new(100);
+        p.set_quotas(&[(1, 20)]);
+        // Type 1 asks for 50: 20 charged to quota, 30 from shared.
+        let AllocOutcome::Granted {
+            reserved_charged, ..
+        } = p.alloc(50, Route::Reserved(1))
+        else {
+            panic!()
+        };
+        assert_eq!(reserved_charged, 20);
+        assert_eq!(p.headroom(1), 0);
+        assert_eq!(p.shared_free(), 50);
+    }
+
+    #[test]
+    fn other_types_cannot_use_foreign_quota() {
+        let mut p = GpuPool::new(50);
+        p.set_quotas(&[(1, 30)]);
+        // Type 2 has no quota: behaves like shared.
+        assert_eq!(p.available_for(Route::Reserved(2)), 20);
+        assert_eq!(p.alloc(25, Route::Reserved(2)), AllocOutcome::Deferred);
+    }
+
+    #[test]
+    fn free_releases_quota_charge() {
+        let mut p = GpuPool::new(40);
+        p.set_quotas(&[(7, 10)]);
+        let AllocOutcome::Granted {
+            blocks,
+            reserved_charged,
+        } = p.alloc(10, Route::Reserved(7))
+        else {
+            panic!()
+        };
+        assert_eq!(p.headroom(7), 0);
+        p.free(blocks, reserved_charged, Some(7));
+        assert_eq!(p.headroom(7), 10);
+    }
+
+    #[test]
+    fn pending_free_blocks_not_reusable_until_complete() {
+        let mut p = GpuPool::new(20);
+        let AllocOutcome::Granted { blocks, .. } = p.alloc(15, Route::Shared)
+        else {
+            panic!()
+        };
+        p.mark_pending_free(&blocks, 0, None);
+        assert_eq!(p.free_blocks(), 5);
+        assert_eq!(p.pending_free_blocks(), 15);
+        assert_eq!(p.usage(), 1.0 - 5.0 / 20.0);
+        assert_eq!(p.alloc(10, Route::Shared), AllocOutcome::Deferred);
+        p.complete_pending(blocks);
+        assert_eq!(p.free_blocks(), 20);
+        assert!(matches!(
+            p.alloc(10, Route::Shared),
+            AllocOutcome::Granted { .. }
+        ));
+    }
+
+    #[test]
+    fn quota_update_respects_inflight_usage() {
+        let mut p = GpuPool::new(100);
+        p.set_quotas(&[(1, 30)]);
+        let AllocOutcome::Granted { .. } = p.alloc(30, Route::Reserved(1))
+        else {
+            panic!()
+        };
+        // Quota shrinks below current use: headroom clamps to zero, no
+        // underflow.
+        p.set_quotas(&[(1, 10)]);
+        assert_eq!(p.headroom(1), 0);
+        assert_eq!(p.outstanding_reserved(), 0);
+    }
+
+    #[test]
+    fn zero_alloc_is_trivially_granted() {
+        let mut p = GpuPool::new(1);
+        assert!(matches!(
+            p.alloc(0, Route::Shared),
+            AllocOutcome::Granted { .. }
+        ));
+    }
+}

@@ -1,0 +1,183 @@
+//! Migration ledger: in-flight D2H/H2D transfers with pending-free
+//! semantics (§6.3 "CPU Migration Infrastructure").
+//!
+//! All migration is issued asynchronously on a dedicated stream; source GPU
+//! blocks are marked pending-free immediately and return to the free pool
+//! only when the copy completes. The ledger owns that bookkeeping plus the
+//! swap-volume statistics the ablation study reports (§7.3).
+
+use std::collections::HashMap;
+
+use super::{BlockId, CpuBlockId};
+
+/// Transfer identifier.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct TransferId(pub u64);
+
+/// Transfer direction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Direction {
+    /// GPU → CPU (offload).
+    D2H,
+    /// CPU → GPU (upload).
+    H2D,
+}
+
+/// One in-flight block migration.
+#[derive(Debug, Clone)]
+pub struct Transfer {
+    pub id: TransferId,
+    pub req_id: u64,
+    pub dir: Direction,
+    pub gpu_blocks: Vec<BlockId>,
+    pub cpu_blocks: Vec<CpuBlockId>,
+    pub issued_us: u64,
+    pub completes_us: u64,
+}
+
+impl Transfer {
+    pub fn blocks(&self) -> u32 {
+        self.gpu_blocks.len() as u32
+    }
+}
+
+/// Ledger of in-flight transfers + lifetime statistics.
+#[derive(Debug, Default)]
+pub struct MigrationLedger {
+    next_id: u64,
+    inflight: HashMap<TransferId, Transfer>,
+    // ---- lifetime stats ----
+    pub offload_count: u64,
+    pub upload_count: u64,
+    pub offload_blocks: u64,
+    pub upload_blocks: u64,
+}
+
+impl MigrationLedger {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register a new transfer; returns its id.
+    #[allow(clippy::too_many_arguments)]
+    pub fn issue(
+        &mut self,
+        req_id: u64,
+        dir: Direction,
+        gpu_blocks: Vec<BlockId>,
+        cpu_blocks: Vec<CpuBlockId>,
+        issued_us: u64,
+        completes_us: u64,
+    ) -> TransferId {
+        let id = TransferId(self.next_id);
+        self.next_id += 1;
+        let n = gpu_blocks.len() as u64;
+        match dir {
+            Direction::D2H => {
+                self.offload_count += 1;
+                self.offload_blocks += n;
+            }
+            Direction::H2D => {
+                self.upload_count += 1;
+                self.upload_blocks += n;
+            }
+        }
+        self.inflight.insert(
+            id,
+            Transfer {
+                id,
+                req_id,
+                dir,
+                gpu_blocks,
+                cpu_blocks,
+                issued_us,
+                completes_us,
+            },
+        );
+        id
+    }
+
+    /// Complete a transfer, removing it from the in-flight set.
+    pub fn complete(&mut self, id: TransferId) -> Option<Transfer> {
+        self.inflight.remove(&id)
+    }
+
+    pub fn get(&self, id: TransferId) -> Option<&Transfer> {
+        self.inflight.get(&id)
+    }
+
+    pub fn inflight_count(&self) -> usize {
+        self.inflight.len()
+    }
+
+    /// Total blocks currently being uploaded for a request (upload debt in
+    /// the pressure snapshot).
+    pub fn inflight_upload_blocks(&self) -> u32 {
+        self.inflight
+            .values()
+            .filter(|t| t.dir == Direction::H2D)
+            .map(|t| t.blocks())
+            .sum()
+    }
+
+    /// Total swap volume in blocks, both directions (§7.3's metric).
+    pub fn swap_volume_blocks(&self) -> u64 {
+        self.offload_blocks + self.upload_blocks
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn issue_complete_roundtrip() {
+        let mut l = MigrationLedger::new();
+        let id = l.issue(
+            7,
+            Direction::D2H,
+            vec![BlockId(1), BlockId(2)],
+            vec![CpuBlockId(0), CpuBlockId(1)],
+            100,
+            300,
+        );
+        assert_eq!(l.inflight_count(), 1);
+        let t = l.complete(id).unwrap();
+        assert_eq!(t.req_id, 7);
+        assert_eq!(t.blocks(), 2);
+        assert_eq!(t.completes_us, 300);
+        assert_eq!(l.inflight_count(), 0);
+        assert!(l.complete(id).is_none());
+    }
+
+    #[test]
+    fn stats_accumulate() {
+        let mut l = MigrationLedger::new();
+        let a = l.issue(1, Direction::D2H, vec![BlockId(0)], vec![], 0, 1);
+        let b = l.issue(
+            1,
+            Direction::H2D,
+            vec![BlockId(0)],
+            vec![CpuBlockId(9)],
+            2,
+            3,
+        );
+        assert_eq!(l.offload_count, 1);
+        assert_eq!(l.upload_count, 1);
+        assert_eq!(l.swap_volume_blocks(), 2);
+        assert_eq!(l.inflight_upload_blocks(), 1);
+        l.complete(a);
+        l.complete(b);
+        // Stats survive completion.
+        assert_eq!(l.swap_volume_blocks(), 2);
+        assert_eq!(l.inflight_upload_blocks(), 0);
+    }
+
+    #[test]
+    fn ids_unique() {
+        let mut l = MigrationLedger::new();
+        let a = l.issue(1, Direction::D2H, vec![], vec![], 0, 1);
+        let b = l.issue(2, Direction::D2H, vec![], vec![], 0, 1);
+        assert_ne!(a, b);
+    }
+}

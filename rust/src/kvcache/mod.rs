@@ -1,0 +1,30 @@
+//! KV-cache block management: the paper's PagedAttention-style GPU block
+//! pool with TokenCake's two-region (shared + reserved) partitioning, the
+//! re-introduced CPU block pool (§6.3), the CPU prefix-cache index, and the
+//! migration ledger implementing pending-free semantics.
+//!
+//! All pools deal in fixed-size blocks of `block_tokens` tokens
+//! (16 by default, 3 MiB each for Qwen2.5-14B bf16).
+
+mod cpu;
+mod gpu;
+mod migrate;
+mod multi;
+mod prefix;
+
+pub use cpu::CpuBlockPool;
+pub use gpu::{AllocOutcome, GpuPool, Route};
+pub use migrate::{Direction, MigrationLedger, Transfer, TransferId};
+pub use multi::{DevicePressure, MultiGpuPool, ShardedAlloc};
+pub use prefix::{PrefixIndex, PrefixKey, PrefixLocation};
+
+/// Physical GPU block identifier.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct BlockId(pub u32);
+
+/// Physical CPU block identifier.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct CpuBlockId(pub u32);
+
+/// Interned agent-type id (registry lives in the engine state).
+pub type AgentTypeId = u16;

@@ -1,0 +1,190 @@
+//! Prefix-cache index (§6.3).
+//!
+//! Maps a token-prefix hash to cached KV blocks and their residency. The
+//! standard lookup path is extended with CPU entries: a CPU hit avoids
+//! recomputation but creates an H2D transfer debt that must complete
+//! before the request can run.
+
+use std::collections::HashMap;
+
+/// Hash key of a token prefix. The engines key shared system prompts by
+/// (graph template, agent type, prefix length); a real tokenizer path would
+//  hash the token ids per block.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct PrefixKey(pub u64);
+
+impl PrefixKey {
+    /// FNV-1a over an arbitrary byte string.
+    pub fn of_bytes(bytes: &[u8]) -> Self {
+        let mut h: u64 = 0xcbf29ce484222325;
+        for &b in bytes {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        PrefixKey(h)
+    }
+
+    pub fn of_parts(template: &str, agent_type: &str, len: u32) -> Self {
+        let mut buf = Vec::with_capacity(template.len() + agent_type.len() + 8);
+        buf.extend_from_slice(template.as_bytes());
+        buf.push(0);
+        buf.extend_from_slice(agent_type.as_bytes());
+        buf.push(0);
+        buf.extend_from_slice(&len.to_le_bytes());
+        Self::of_bytes(&buf)
+    }
+}
+
+/// Where a cached prefix currently lives.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PrefixLocation {
+    Gpu,
+    Cpu,
+}
+
+#[derive(Debug, Clone)]
+struct Entry {
+    blocks: u32,
+    tokens: u32,
+    location: PrefixLocation,
+    last_use_us: u64,
+    hits: u64,
+}
+
+/// The index itself: key → (blocks, residency, recency).
+#[derive(Debug, Clone, Default)]
+pub struct PrefixIndex {
+    entries: HashMap<PrefixKey, Entry>,
+}
+
+/// Result of a lookup.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PrefixHit {
+    pub blocks: u32,
+    pub tokens: u32,
+    pub location: PrefixLocation,
+}
+
+impl PrefixIndex {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record (or refresh) a cached prefix.
+    pub fn insert(
+        &mut self,
+        key: PrefixKey,
+        blocks: u32,
+        tokens: u32,
+        location: PrefixLocation,
+        now_us: u64,
+    ) {
+        let e = self.entries.entry(key).or_insert(Entry {
+            blocks,
+            tokens,
+            location,
+            last_use_us: now_us,
+            hits: 0,
+        });
+        e.blocks = blocks;
+        e.tokens = tokens;
+        e.location = location;
+        e.last_use_us = now_us;
+    }
+
+    /// Look up a prefix; refreshes recency and counts the hit.
+    pub fn lookup(&mut self, key: PrefixKey, now_us: u64) -> Option<PrefixHit> {
+        let e = self.entries.get_mut(&key)?;
+        e.last_use_us = now_us;
+        e.hits += 1;
+        Some(PrefixHit {
+            blocks: e.blocks,
+            tokens: e.tokens,
+            location: e.location,
+        })
+    }
+
+    /// Change residency after an offload/upload of the backing blocks.
+    pub fn set_location(&mut self, key: PrefixKey, location: PrefixLocation) {
+        if let Some(e) = self.entries.get_mut(&key) {
+            e.location = location;
+        }
+    }
+
+    /// Drop an entry (blocks evicted entirely).
+    pub fn remove(&mut self, key: PrefixKey) {
+        self.entries.remove(&key);
+    }
+
+    /// Evict the least-recently-used entry, returning its key and size.
+    pub fn evict_lru(&mut self) -> Option<(PrefixKey, u32)> {
+        let key = self
+            .entries
+            .iter()
+            .min_by_key(|(_, e)| e.last_use_us)
+            .map(|(k, _)| *k)?;
+        let blocks = self.entries.remove(&key).map(|e| e.blocks)?;
+        Some((key, blocks))
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn total_hits(&self) -> u64 {
+        self.entries.values().map(|e| e.hits).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn key_is_stable_and_distinct() {
+        let a = PrefixKey::of_parts("code-writer", "programmer", 384);
+        let b = PrefixKey::of_parts("code-writer", "programmer", 384);
+        let c = PrefixKey::of_parts("code-writer", "reviewer", 384);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn lookup_hits_and_misses() {
+        let mut ix = PrefixIndex::new();
+        let k = PrefixKey::of_bytes(b"hello");
+        assert!(ix.lookup(k, 0).is_none());
+        ix.insert(k, 4, 64, PrefixLocation::Gpu, 10);
+        let hit = ix.lookup(k, 20).unwrap();
+        assert_eq!(hit.blocks, 4);
+        assert_eq!(hit.location, PrefixLocation::Gpu);
+        assert_eq!(ix.total_hits(), 1);
+    }
+
+    #[test]
+    fn cpu_residency_transition() {
+        let mut ix = PrefixIndex::new();
+        let k = PrefixKey::of_bytes(b"x");
+        ix.insert(k, 2, 32, PrefixLocation::Gpu, 0);
+        ix.set_location(k, PrefixLocation::Cpu);
+        assert_eq!(ix.lookup(k, 1).unwrap().location, PrefixLocation::Cpu);
+    }
+
+    #[test]
+    fn lru_eviction_order() {
+        let mut ix = PrefixIndex::new();
+        let k1 = PrefixKey::of_bytes(b"1");
+        let k2 = PrefixKey::of_bytes(b"2");
+        ix.insert(k1, 1, 16, PrefixLocation::Cpu, 100);
+        ix.insert(k2, 2, 32, PrefixLocation::Cpu, 200);
+        ix.lookup(k1, 300); // refresh k1; k2 is now LRU
+        let (evicted, blocks) = ix.evict_lru().unwrap();
+        assert_eq!(evicted, k2);
+        assert_eq!(blocks, 2);
+        assert_eq!(ix.len(), 1);
+    }
+}

@@ -1,0 +1,73 @@
+//! # TokenCake
+//!
+//! A KV-Cache-centric serving framework for LLM-based multi-agent
+//! applications — a faithful reproduction of the CS.DC 2025 paper.
+//!
+//! Multi-agent LLM applications interleave *LLM inference* with *external
+//! function calls* inside a dependency DAG. This creates two KV-cache
+//! pathologies that request-level schedulers cannot fix:
+//!
+//! * **temporal underutilization** — a stalled agent's KV cache idles in
+//!   GPU memory for the whole duration of its function call;
+//! * **spatial contention** — non-critical agents evict critical-path
+//!   agents' caches (*critical inversion*), stalling the whole workflow.
+//!
+//! TokenCake co-optimizes scheduling and memory through two cooperating
+//! schedulers that share a pressure-aware coordination protocol:
+//!
+//! * [`temporal`] — event-driven (`call_start`/`call_finish`) proactive
+//!   offload of stalled caches to a CPU block pool, gated by an
+//!   opportunistic cost/benefit policy, plus predictive upload that hides
+//!   the H2D transfer behind the tail of the function call;
+//! * [`spatial`] — dynamic partitioning of the GPU block pool into shared
+//!   and reserved regions, guided by a hybrid priority metric over the
+//!   application DAG and runtime state.
+//!
+//! ## Architecture (three layers)
+//!
+//! ```text
+//! L3  rust coordinator (this crate): graph API, schedulers, block pools,
+//!     engines, baselines, metrics, HTTP server
+//! L2  JAX TinyQwen model  — python/compile/model.py, AOT → artifacts/
+//! L1  Pallas attention kernels — python/compile/kernels/attention.py
+//! RT  runtime::PjrtModel loads artifacts/*.hlo.txt via the PJRT C API
+//! ```
+//!
+//! Python never runs on the request path: `make artifacts` lowers the model
+//! once; the rust binary is self-contained afterwards.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use tokencake::prelude::*;
+//!
+//! let cfg = ServeConfig::default();
+//! let graph = templates::code_writer();
+//! let mut engine = SimEngine::new(cfg);
+//! let report = engine.run_workload(&WorkloadSpec::poisson(&graph, 0.2, 20));
+//! println!("avg latency: {:.1}s", report.metrics.latency.mean_s());
+//! ```
+
+pub mod baselines;
+pub mod cli;
+pub mod config;
+pub mod coordination;
+pub mod engine;
+pub mod graph;
+pub mod kvcache;
+pub mod metrics;
+pub mod runtime;
+pub mod server;
+pub mod sim;
+pub mod spatial;
+pub mod temporal;
+pub mod workload;
+
+/// Convenience re-exports for examples and downstream users.
+pub mod prelude {
+    pub use crate::config::{Mode, ModelProfile, PolicyConfig, ServeConfig};
+    pub use crate::engine::sim::{RunReport, SimEngine};
+    pub use crate::graph::templates;
+    pub use crate::graph::{AppGraph, FuncKind, NodeKind};
+    pub use crate::workload::WorkloadSpec;
+}

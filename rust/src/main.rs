@@ -1,0 +1,164 @@
+//! TokenCake leader binary.
+//!
+//! ```text
+//! tokencake bench   --app code-writer --mode tokencake --qps 0.5 --apps 20
+//!                   [--frac 0.05] [--dataset d1|d2] [--noise 0.25]
+//!                   [--seed N] [--config file.toml]
+//! tokencake compare --app code-writer --qps 0.5 --apps 20 [--frac 0.05]
+//! tokencake serve   [--port 8080]
+//! tokencake graph   --app deep-research
+//! tokencake help
+//! ```
+
+use tokencake::cli::Args;
+use tokencake::config::{Mode, ServeConfig};
+use tokencake::engine::sim::SimEngine;
+use tokencake::graph::{templates, AppGraph};
+use tokencake::server::Server;
+use tokencake::workload::{Dataset, WorkloadSpec};
+
+fn app_by_name(name: &str) -> Result<AppGraph, String> {
+    Ok(match name {
+        "code-writer" | "cw" => templates::code_writer(),
+        "deep-research" | "dr" => templates::deep_research(),
+        "rag" => templates::rag(),
+        other => return Err(format!("unknown app {other:?}")),
+    })
+}
+
+fn build_config(args: &Args) -> Result<ServeConfig, String> {
+    let mut cfg = ServeConfig::default();
+    if let Some(path) = args.get("config") {
+        cfg.apply_file(path).map_err(|e| e.to_string())?;
+    }
+    if let Some(m) = args.get("mode") {
+        cfg.mode = Mode::parse(m).ok_or(format!("unknown mode {m:?}"))?;
+    }
+    cfg.gpu_mem_frac = args.get_f64("frac", cfg.gpu_mem_frac)?;
+    cfg.seed = args.get_u64("seed", cfg.seed)?;
+    if let Some(p) = args.get("profile") {
+        cfg.profile = tokencake::config::ModelProfile::by_name(p)
+            .ok_or(format!("unknown profile {p:?}"))?;
+    }
+    Ok(cfg)
+}
+
+fn build_spec(args: &Args, graph: &AppGraph) -> Result<WorkloadSpec, String> {
+    let qps = args.get_f64("qps", 0.5)?;
+    let apps = args.get_u64("apps", 20)? as usize;
+    let dataset = match args.get_or("dataset", "d1") {
+        "d1" | "D1" => Dataset::D1,
+        "d2" | "D2" => Dataset::D2,
+        other => return Err(format!("unknown dataset {other:?}")),
+    };
+    let noise = args.get_f64("noise", 0.0)?;
+    Ok(WorkloadSpec::poisson(graph, qps, apps)
+        .with_dataset(dataset)
+        .with_tool_noise(noise))
+}
+
+fn cmd_bench(args: &Args) -> Result<(), String> {
+    let graph = app_by_name(args.get_or("app", "code-writer"))?;
+    let cfg = build_config(args)?;
+    let spec = build_spec(args, &graph)?;
+    let report = SimEngine::new(cfg).run_workload(&spec);
+    println!("{}", report.summary());
+    if report.truncated {
+        eprintln!("warning: run truncated before completion");
+    }
+    Ok(())
+}
+
+fn cmd_compare(args: &Args) -> Result<(), String> {
+    let graph = app_by_name(args.get_or("app", "code-writer"))?;
+    let spec = build_spec(args, &graph)?;
+    println!(
+        "app={} qps={} apps={} dataset={}",
+        graph.name,
+        spec.qps,
+        spec.num_apps,
+        spec.dataset.name()
+    );
+    for mode in [
+        Mode::Vllm,
+        Mode::VllmPrefix,
+        Mode::Mooncake,
+        Mode::Parrot,
+        Mode::AgentOnly,
+        Mode::OffloadOnly,
+        Mode::TokenCake,
+    ] {
+        let mut cfg = build_config(args)?;
+        cfg.mode = mode;
+        let report = SimEngine::new(cfg).run_workload(&spec);
+        println!("{}", report.summary());
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<(), String> {
+    let port = args.get_u64("port", 8080)? as u16;
+    let server = Server::start(port).map_err(|e| e.to_string())?;
+    println!("tokencake frontend listening on http://{}", server.addr);
+    println!("endpoints: POST /graphs /apps /call_start /call_finish; GET /state /healthz");
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn cmd_graph(args: &Args) -> Result<(), String> {
+    let graph = app_by_name(args.get_or("app", "code-writer"))?;
+    println!("graph {} ({} nodes, depth {})", graph.name, graph.len(),
+             graph.max_depth());
+    for node in graph.nodes() {
+        let crit = if graph.is_critical(node.id) { "*" } else { " " };
+        println!(
+            "  {crit} [{:>2}] {:<20} depth={} out={} f_struct={:.2}",
+            node.id.0,
+            node.name,
+            graph.depth(node.id),
+            graph.out_degree(node.id),
+            graph.f_struct(node.id),
+        );
+    }
+    Ok(())
+}
+
+const HELP: &str = "\
+TokenCake — KV-cache-centric serving for LLM multi-agent applications
+
+USAGE: tokencake <command> [--flag value]...
+
+COMMANDS:
+  bench    run one workload:  --app --mode --qps --apps --frac --dataset
+           --noise --seed --profile --config
+  compare  run all modes on one workload (same flags, no --mode)
+  serve    start the frontend HTTP server:  --port
+  graph    inspect a built-in app template:  --app
+  help     this text
+";
+
+fn main() {
+    let args = match Args::parse(std::env::args().skip(1)) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n{HELP}");
+            std::process::exit(2);
+        }
+    };
+    let result = match args.command.as_str() {
+        "bench" => cmd_bench(&args),
+        "compare" => cmd_compare(&args),
+        "serve" => cmd_serve(&args),
+        "graph" => cmd_graph(&args),
+        "help" | "--help" | "-h" => {
+            println!("{HELP}");
+            Ok(())
+        }
+        other => Err(format!("unknown command {other:?}\n{HELP}")),
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}

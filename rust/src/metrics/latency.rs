@@ -1,0 +1,121 @@
+//! Latency sample recorder with percentile queries.
+
+/// Collects latency samples (µs) and answers mean / percentile queries.
+///
+/// Percentiles sort lazily with a dirty flag — recording is O(1), queries
+/// amortize the sort.
+#[derive(Debug, Clone, Default)]
+pub struct LatencyRecorder {
+    samples_us: Vec<u64>,
+    sorted: Vec<u64>,
+    dirty: bool,
+}
+
+impl LatencyRecorder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_us(&mut self, us: u64) {
+        self.samples_us.push(us);
+        self.dirty = true;
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples_us.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples_us.is_empty()
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.samples_us.is_empty() {
+            return 0.0;
+        }
+        self.samples_us.iter().sum::<u64>() as f64
+            / self.samples_us.len() as f64
+    }
+
+    pub fn mean_s(&self) -> f64 {
+        self.mean_us() / 1e6
+    }
+
+    pub fn sum_s(&self) -> f64 {
+        self.samples_us.iter().sum::<u64>() as f64 / 1e6
+    }
+
+    pub fn max_us(&self) -> u64 {
+        self.samples_us.iter().copied().max().unwrap_or(0)
+    }
+
+    fn ensure_sorted(&mut self) {
+        if self.dirty {
+            self.sorted = self.samples_us.clone();
+            self.sorted.sort_unstable();
+            self.dirty = false;
+        }
+    }
+
+    /// Nearest-rank percentile, p ∈ (0, 100].
+    pub fn percentile_us(&mut self, p: f64) -> u64 {
+        if self.samples_us.is_empty() {
+            return 0;
+        }
+        self.ensure_sorted();
+        let n = self.sorted.len();
+        let rank = ((p / 100.0) * n as f64).ceil() as usize;
+        self.sorted[rank.clamp(1, n) - 1]
+    }
+
+    /// Percentile in seconds (non-mutating convenience for reports — sorts
+    /// a copy if needed).
+    pub fn percentile_s(&self, p: f64) -> f64 {
+        if self.samples_us.is_empty() {
+            return 0.0;
+        }
+        let mut sorted = self.samples_us.clone();
+        sorted.sort_unstable();
+        let n = sorted.len();
+        let rank = ((p / 100.0) * n as f64).ceil() as usize;
+        sorted[rank.clamp(1, n) - 1] as f64 / 1e6
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_recorder_is_zero() {
+        let mut r = LatencyRecorder::new();
+        assert_eq!(r.mean_us(), 0.0);
+        assert_eq!(r.percentile_us(99.0), 0);
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn mean_and_percentiles() {
+        let mut r = LatencyRecorder::new();
+        for v in 1..=100u64 {
+            r.record_us(v);
+        }
+        assert_eq!(r.mean_us(), 50.5);
+        assert_eq!(r.percentile_us(50.0), 50);
+        assert_eq!(r.percentile_us(90.0), 90);
+        assert_eq!(r.percentile_us(100.0), 100);
+        assert_eq!(r.percentile_us(1.0), 1);
+        assert_eq!(r.max_us(), 100);
+    }
+
+    #[test]
+    fn percentile_after_interleaved_records() {
+        let mut r = LatencyRecorder::new();
+        r.record_us(10);
+        assert_eq!(r.percentile_us(50.0), 10);
+        r.record_us(20);
+        r.record_us(30);
+        assert_eq!(r.percentile_us(100.0), 30);
+        assert!((r.percentile_s(100.0) - 30e-6).abs() < 1e-12);
+    }
+}

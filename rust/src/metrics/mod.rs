@@ -1,0 +1,121 @@
+//! Metrics: latency distributions, utilization time-series, and event
+//! counters — everything §7 reports (avg/P90/P95 latency, GPU KV-cache
+//! utilization, preemption / critical-inversion / offload counts, swap
+//! volume).
+
+mod latency;
+mod series;
+
+pub use latency::LatencyRecorder;
+pub use series::TimeSeries;
+
+/// Event counters accumulated over a run.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Counters {
+    /// Requests preempted (evicted while running) — Fig 3a.
+    pub preemptions: u64,
+    /// Preemptions where a non-critical request displaced a critical one
+    /// ("critical inversion", §5).
+    pub critical_inversions: u64,
+    /// Contexts recomputed after eviction.
+    pub recomputes: u64,
+    /// Tokens re-prefilled due to recomputation.
+    pub recompute_tokens: u64,
+    /// Offloads vetoed by the opportunistic gate.
+    pub offloads_rejected: u64,
+    /// Uploads triggered early because a tool returned before prediction.
+    pub early_returns: u64,
+    /// Prefix-cache hits (GPU- and CPU-resident).
+    pub prefix_hits_gpu: u64,
+    pub prefix_hits_cpu: u64,
+    /// Requests admitted through the reserved pool.
+    pub reserved_admissions: u64,
+    /// Requests deferred by admission control.
+    pub deferrals: u64,
+    /// Decode iterations executed.
+    pub decode_iterations: u64,
+    /// Total tokens generated.
+    pub tokens_generated: u64,
+    /// Scheduling steps run.
+    pub sched_steps: u64,
+    /// Requests aborted because their demand can never fit the pool.
+    pub aborted: u64,
+}
+
+/// A complete run's metric bundle.
+#[derive(Debug, Clone, Default)]
+pub struct MetricsBundle {
+    /// End-to-end application latency (submission → final response).
+    pub latency: LatencyRecorder,
+    /// Per-request latency (for tail analysis).
+    pub request_latency: LatencyRecorder,
+    /// GPU KV pool occupancy over time ∈ [0,1].
+    pub gpu_usage: TimeSeries,
+    /// Fraction of occupied blocks belonging to *stalled* agents (Fig 2a).
+    pub stalled_fraction: TimeSeries,
+    /// Effective utilization: occupied ∧ owned by active requests (Fig 10).
+    pub effective_usage: TimeSeries,
+    pub counters: Counters,
+    /// Swap volume in blocks (both directions), from the ledger.
+    pub swap_volume_blocks: u64,
+    pub offload_count: u64,
+    pub upload_count: u64,
+    /// Apps completed.
+    pub apps_completed: u64,
+    /// Wall-clock span of the run (µs, simulated).
+    pub makespan_us: u64,
+}
+
+impl MetricsBundle {
+    /// Throughput in completed apps per second.
+    pub fn throughput(&self) -> f64 {
+        if self.makespan_us == 0 {
+            return 0.0;
+        }
+        self.apps_completed as f64 / (self.makespan_us as f64 / 1e6)
+    }
+
+    /// One-line summary used by examples and benches.
+    pub fn summary(&self) -> String {
+        format!(
+            "apps={} avg={:.1}s p90={:.1}s p95={:.1}s total={:.1}s \
+             thpt={:.4}req/s gpu_util={:.1}% eff_util={:.1}% \
+             offloads={} swap_blocks={} preempt={} inversions={}",
+            self.apps_completed,
+            self.latency.mean_s(),
+            self.latency.percentile_s(90.0),
+            self.latency.percentile_s(95.0),
+            self.makespan_us as f64 / 1e6,
+            self.throughput(),
+            self.gpu_usage.time_weighted_mean() * 100.0,
+            self.effective_usage.time_weighted_mean() * 100.0,
+            self.offload_count,
+            self.swap_volume_blocks,
+            self.counters.preemptions,
+            self.counters.critical_inversions,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn throughput_computes() {
+        let m = MetricsBundle {
+            apps_completed: 10,
+            makespan_us: 5_000_000,
+            ..Default::default()
+        };
+        assert!((m.throughput() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn summary_contains_key_fields() {
+        let m = MetricsBundle::default();
+        let s = m.summary();
+        assert!(s.contains("apps=0"));
+        assert!(s.contains("inversions=0"));
+    }
+}

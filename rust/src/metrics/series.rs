@@ -1,0 +1,212 @@
+//! Step-function time series for utilization tracking (Fig 2a, Fig 10).
+
+/// A right-continuous step function sampled at irregular times: the value
+/// holds from each sample until the next. Supports time-weighted averages —
+/// the correct way to report "utilization over a run".
+#[derive(Debug, Clone, Default)]
+pub struct TimeSeries {
+    points: Vec<(u64, f64)>,
+}
+
+impl TimeSeries {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record the value from `t_us` onward. Out-of-order samples are
+    /// rejected (engine bug) — equal timestamps overwrite.
+    pub fn record(&mut self, t_us: u64, value: f64) {
+        if let Some(&mut (last_t, ref mut last_v)) = self.points.last_mut() {
+            assert!(t_us >= last_t, "time series going backwards");
+            if t_us == last_t {
+                *last_v = value;
+                return;
+            }
+            // Skip redundant points to bound memory on long runs.
+            if (*last_v - value).abs() < 1e-12 {
+                return;
+            }
+        }
+        self.points.push((t_us, value));
+    }
+
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    pub fn last_value(&self) -> f64 {
+        self.points.last().map(|&(_, v)| v).unwrap_or(0.0)
+    }
+
+    /// Time-weighted mean over the recorded span.
+    pub fn time_weighted_mean(&self) -> f64 {
+        if self.points.len() < 2 {
+            return self.last_value();
+        }
+        let mut acc = 0.0;
+        let mut span = 0.0;
+        for w in self.points.windows(2) {
+            let dt = (w[1].0 - w[0].0) as f64;
+            acc += w[0].1 * dt;
+            span += dt;
+        }
+        if span == 0.0 {
+            self.last_value()
+        } else {
+            acc / span
+        }
+    }
+
+    /// Time-weighted mean restricted to [t0, t1] — used to report
+    /// steady-state utilization excluding ramp-up/drain (Fig 10).
+    pub fn time_weighted_mean_between(&self, t0: u64, t1: u64) -> f64 {
+        if self.points.is_empty() || t1 <= t0 {
+            return 0.0;
+        }
+        let mut acc = 0.0;
+        let mut span = 0.0;
+        for w in self.points.windows(2) {
+            let (a, va) = w[0];
+            let (b, _) = w[1];
+            let lo = a.max(t0);
+            let hi = b.min(t1);
+            if hi > lo {
+                let dt = (hi - lo) as f64;
+                acc += va * dt;
+                span += dt;
+            }
+        }
+        // Tail segment: last value holds to t1.
+        if let Some(&(last_t, last_v)) = self.points.last() {
+            let lo = last_t.max(t0);
+            if t1 > lo {
+                let dt = (t1 - lo) as f64;
+                acc += last_v * dt;
+                span += dt;
+            }
+        }
+        if span == 0.0 {
+            0.0
+        } else {
+            acc / span
+        }
+    }
+
+    /// Middle-window mean: drops the first and last `trim` fraction of the
+    /// recorded span (steady-state view).
+    pub fn steady_state_mean(&self, trim: f64) -> f64 {
+        if self.points.len() < 2 {
+            return self.last_value();
+        }
+        let t0 = self.points[0].0;
+        let t1 = self.points.last().unwrap().0;
+        let span = (t1 - t0) as f64;
+        let lo = t0 + (span * trim) as u64;
+        let hi = t1 - (span * trim) as u64;
+        self.time_weighted_mean_between(lo, hi)
+    }
+
+    /// Maximum recorded value.
+    pub fn max(&self) -> f64 {
+        self.points
+            .iter()
+            .map(|&(_, v)| v)
+            .fold(f64::NEG_INFINITY, f64::max)
+            .max(0.0)
+    }
+
+    /// Raw points (for CSV dumps / plotting).
+    pub fn points(&self) -> &[(u64, f64)] {
+        &self.points
+    }
+
+    /// Downsample to at most `n` evenly spaced points (for reports).
+    pub fn downsample(&self, n: usize) -> Vec<(u64, f64)> {
+        if self.points.len() <= n || n == 0 {
+            return self.points.clone();
+        }
+        let stride = self.points.len() as f64 / n as f64;
+        (0..n)
+            .map(|i| self.points[(i as f64 * stride) as usize])
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_weighted_mean_steps() {
+        let mut s = TimeSeries::new();
+        s.record(0, 0.0);
+        s.record(10, 1.0); // value 0.0 held for 10
+        s.record(20, 1.0); // value 1.0 held for 10 (skipped as redundant)
+        s.record(30, 0.5);
+        // spans: [0,10)=0.0, [10,30)=1.0 -> mean = (0*10 + 1*20)/30
+        let m = s.time_weighted_mean();
+        assert!((m - 20.0 / 30.0).abs() < 1e-9, "{m}");
+    }
+
+    #[test]
+    fn equal_timestamp_overwrites() {
+        let mut s = TimeSeries::new();
+        s.record(5, 0.3);
+        s.record(5, 0.7);
+        assert_eq!(s.last_value(), 0.7);
+        assert_eq!(s.len(), 1);
+    }
+
+    #[test]
+    fn max_and_empty() {
+        let mut s = TimeSeries::new();
+        assert_eq!(s.time_weighted_mean(), 0.0);
+        assert_eq!(s.max(), 0.0);
+        s.record(0, 0.2);
+        s.record(1, 0.9);
+        s.record(2, 0.1);
+        assert_eq!(s.max(), 0.9);
+    }
+
+    #[test]
+    fn downsample_bounds() {
+        let mut s = TimeSeries::new();
+        for i in 0..100 {
+            s.record(i, (i % 7) as f64); // avoid redundant skips
+        }
+        let d = s.downsample(10);
+        assert_eq!(d.len(), 10);
+        assert_eq!(d[0].0, 0);
+    }
+
+    #[test]
+    fn windowed_mean() {
+        let mut s = TimeSeries::new();
+        s.record(0, 0.0);
+        s.record(100, 1.0);
+        s.record(200, 0.0);
+        // Whole span: 0 for [0,100), 1 for [100,200), 0 after.
+        assert!((s.time_weighted_mean_between(0, 200) - 0.5).abs() < 1e-9);
+        // Only the middle.
+        assert!(
+            (s.time_weighted_mean_between(100, 200) - 1.0).abs() < 1e-9
+        );
+        // Tail extension: value 0 holds beyond 200.
+        assert!(s.time_weighted_mean_between(200, 400) < 1e-9);
+        assert_eq!(s.time_weighted_mean_between(50, 50), 0.0);
+        // Steady-state trim: [90,110] straddles the step at 100 → 0.5.
+        assert!((s.steady_state_mean(0.45) - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic(expected = "backwards")]
+    fn rejects_backwards_time() {
+        let mut s = TimeSeries::new();
+        s.record(10, 1.0);
+        s.record(5, 1.0);
+    }
+}

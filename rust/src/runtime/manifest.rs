@@ -1,0 +1,166 @@
+//! Parser for `artifacts/manifest.txt` — the contract between the Python
+//! AOT path and the Rust loader (param ordering, shapes, offsets, model
+//! hyperparameters).
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// One weight tensor's location in `params.bin`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ParamEntry {
+    pub name: String,
+    pub dims: Vec<usize>,
+    pub offset_bytes: u64,
+}
+
+impl ParamEntry {
+    pub fn element_count(&self) -> usize {
+        self.dims.iter().product()
+    }
+}
+
+/// Parsed manifest: model config + ordered parameter table + artifacts.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub config: HashMap<String, i64>,
+    pub params: Vec<ParamEntry>,
+    /// logical name → file name (e.g. "prefill" → "prefill_t128.hlo.txt").
+    pub artifacts: HashMap<String, String>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut config = HashMap::new();
+        let mut params = Vec::new();
+        let mut artifacts = HashMap::new();
+        for (i, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut it = line.split_whitespace();
+            match it.next() {
+                Some("config") => {
+                    for kv in it {
+                        let (k, v) = kv
+                            .split_once('=')
+                            .with_context(|| format!("line {}: {kv}", i + 1))?;
+                        config.insert(k.to_string(), v.parse::<i64>()?);
+                    }
+                }
+                Some("param") => {
+                    let name = it.next().context("param name")?.to_string();
+                    let dims_s = it.next().context("param dims")?;
+                    let dtype = it.next().context("param dtype")?;
+                    if dtype != "f32" {
+                        bail!("unsupported dtype {dtype}");
+                    }
+                    let offset_bytes =
+                        it.next().context("param offset")?.parse()?;
+                    let dims = dims_s
+                        .split('x')
+                        .map(|d| d.parse::<usize>())
+                        .collect::<Result<Vec<_>, _>>()?;
+                    params.push(ParamEntry {
+                        name,
+                        dims,
+                        offset_bytes,
+                    });
+                }
+                Some("artifact") => {
+                    let name = it.next().context("artifact name")?;
+                    let file = it.next().context("artifact file")?;
+                    artifacts.insert(name.to_string(), file.to_string());
+                }
+                Some(other) => bail!("line {}: unknown entry {other}", i + 1),
+                None => {}
+            }
+        }
+        if params.is_empty() {
+            bail!("manifest has no params");
+        }
+        Ok(Self {
+            config,
+            params,
+            artifacts,
+        })
+    }
+
+    pub fn cfg(&self, key: &str) -> Result<i64> {
+        self.config
+            .get(key)
+            .copied()
+            .with_context(|| format!("manifest missing config key {key}"))
+    }
+
+    /// Read all parameter tensors from `params.bin` as f32 vectors,
+    /// verifying offsets and total size.
+    pub fn read_params(&self, dir: &Path) -> Result<Vec<Vec<f32>>> {
+        let bin = std::fs::read(dir.join("params.bin"))?;
+        let mut out = Vec::with_capacity(self.params.len());
+        for p in &self.params {
+            let n = p.element_count();
+            let start = p.offset_bytes as usize;
+            let end = start + n * 4;
+            if end > bin.len() {
+                bail!(
+                    "param {} [{start}, {end}) beyond params.bin ({})",
+                    p.name,
+                    bin.len()
+                );
+            }
+            let mut v = Vec::with_capacity(n);
+            for chunk in bin[start..end].chunks_exact(4) {
+                v.push(f32::from_le_bytes(chunk.try_into().unwrap()));
+            }
+            out.push(v);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# comment
+config vocab=512 n_layers=2 decode_batch=8
+param embed 512x128 f32 0
+param layer0.wq 128x128 f32 262144
+artifact prefill prefill_t128.hlo.txt
+";
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.cfg("vocab").unwrap(), 512);
+        assert_eq!(m.params.len(), 2);
+        assert_eq!(m.params[0].dims, vec![512, 128]);
+        assert_eq!(m.params[0].element_count(), 65536);
+        assert_eq!(m.params[1].offset_bytes, 262144);
+        assert_eq!(m.artifacts["prefill"], "prefill_t128.hlo.txt");
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Manifest::parse("bogus line").is_err());
+        assert!(Manifest::parse("param x 2x2 f64 0").is_err());
+        assert!(Manifest::parse("# only comments").is_err());
+    }
+
+    #[test]
+    fn missing_key_errors() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert!(m.cfg("nope").is_err());
+    }
+}

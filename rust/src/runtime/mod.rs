@@ -1,0 +1,31 @@
+//! PJRT runtime: load the AOT artifacts produced by `python/compile/aot.py`
+//! and execute them from Rust — no Python anywhere near the request path.
+//!
+//! Interchange is HLO **text** (xla_extension 0.5.1 rejects jax≥0.5's
+//! 64-bit-id protos; the text parser reassigns ids). See
+//! /opt/xla-example/README.md and DESIGN.md §7.
+
+mod manifest;
+mod tinyqwen;
+
+pub use manifest::{Manifest, ParamEntry};
+pub use tinyqwen::{DecodeOut, PrefillOut, TinyQwen};
+
+use anyhow::Result;
+
+/// Load an HLO-text artifact and compile it on a PJRT client.
+pub fn compile_hlo_text(
+    client: &xla::PjRtClient,
+    path: &std::path::Path,
+) -> Result<xla::PjRtLoadedExecutable> {
+    let proto = xla::HloModuleProto::from_text_file(path)?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    Ok(client.compile(&comp)?)
+}
+
+/// Default artifacts directory: `$TOKENCAKE_ARTIFACTS` or `./artifacts`.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    std::env::var_os("TOKENCAKE_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|| std::path::PathBuf::from("artifacts"))
+}

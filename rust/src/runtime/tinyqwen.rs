@@ -1,0 +1,235 @@
+//! TinyQwen executor: the L2 model compiled to two PJRT executables
+//! (prefill + batched decode step) plus the standalone paged-attention
+//! kernel artifact.
+//!
+//! The KV cache crosses the PJRT boundary as literals each decode step in
+//! the baseline path; `decode_buffers` keeps the cache device-resident
+//! between steps (`execute_b`), which is the optimized hot path measured
+//! in EXPERIMENTS.md §Perf.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::Manifest;
+
+/// Prefill result: logits for the last valid prompt token + the prompt's
+/// KV cache ([n_layers, prefill_len, n_heads, head_dim], row-major).
+#[derive(Debug, Clone)]
+pub struct PrefillOut {
+    pub logits: Vec<f32>,
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+}
+
+/// Decode-step result: per-slot logits + the updated batched cache
+/// ([n_layers, decode_batch, max_len, n_heads, head_dim]).
+#[derive(Debug, Clone)]
+pub struct DecodeOut {
+    pub logits: Vec<f32>,
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+}
+
+/// The compiled TinyQwen model.
+pub struct TinyQwen {
+    client: xla::PjRtClient,
+    prefill_exe: xla::PjRtLoadedExecutable,
+    decode_exe: xla::PjRtLoadedExecutable,
+    paged_exe: Option<xla::PjRtLoadedExecutable>,
+    params: Vec<xla::Literal>,
+    pub vocab: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub max_len: usize,
+    pub prefill_len: usize,
+    pub decode_batch: usize,
+}
+
+fn lit_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}
+
+fn lit_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}
+
+impl TinyQwen {
+    /// Load manifest + params + HLO artifacts and compile on the CPU PJRT
+    /// client.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()?;
+
+        let art = |name: &str| -> Result<std::path::PathBuf> {
+            Ok(dir.join(manifest.artifacts.get(name).with_context(
+                || format!("manifest missing artifact {name}"),
+            )?))
+        };
+        let prefill_exe = super::compile_hlo_text(&client, &art("prefill")?)?;
+        let decode_exe = super::compile_hlo_text(&client, &art("decode")?)?;
+        let paged_exe = match manifest.artifacts.get("paged_attn") {
+            Some(f) => {
+                Some(super::compile_hlo_text(&client, &dir.join(f))?)
+            }
+            None => None,
+        };
+
+        let raw = manifest.read_params(dir)?;
+        let params: Vec<xla::Literal> = manifest
+            .params
+            .iter()
+            .zip(raw.iter())
+            .map(|(p, data)| {
+                let dims: Vec<i64> =
+                    p.dims.iter().map(|&d| d as i64).collect();
+                lit_f32(data, &dims)
+            })
+            .collect::<Result<_>>()?;
+
+        Ok(Self {
+            client,
+            prefill_exe,
+            decode_exe,
+            paged_exe,
+            params,
+            vocab: manifest.cfg("vocab")? as usize,
+            n_layers: manifest.cfg("n_layers")? as usize,
+            n_heads: manifest.cfg("n_heads")? as usize,
+            head_dim: manifest.cfg("head_dim")? as usize,
+            max_len: manifest.cfg("max_len")? as usize,
+            prefill_len: manifest.cfg("prefill_len")? as usize,
+            decode_batch: manifest.cfg("decode_batch")? as usize,
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Size of one slot's flattened per-layer cache row
+    /// (max_len × n_heads × head_dim).
+    pub fn slot_stride(&self) -> usize {
+        self.max_len * self.n_heads * self.head_dim
+    }
+
+    /// Total length of a decode cache tensor.
+    pub fn cache_len(&self) -> usize {
+        self.n_layers * self.decode_batch * self.slot_stride()
+    }
+
+    /// Run prefill on a prompt (≤ prefill_len tokens; padded internally).
+    pub fn prefill(&self, tokens: &[i32]) -> Result<PrefillOut> {
+        if tokens.is_empty() || tokens.len() > self.prefill_len {
+            bail!(
+                "prompt length {} outside [1, {}]",
+                tokens.len(),
+                self.prefill_len
+            );
+        }
+        let mut padded = vec![0i32; self.prefill_len];
+        padded[..tokens.len()].copy_from_slice(tokens);
+        let mut args: Vec<&xla::Literal> = self.params.iter().collect();
+        let tok = lit_i32(&padded, &[1, self.prefill_len as i64])?;
+        let tl = lit_i32(&[tokens.len() as i32], &[1])?;
+        args.push(&tok);
+        args.push(&tl);
+        let out = self.prefill_exe.execute::<&xla::Literal>(&args)?[0][0]
+            .to_literal_sync()?;
+        let (logits, k, v) = out.to_tuple3()?;
+        Ok(PrefillOut {
+            logits: logits.to_vec::<f32>()?,
+            k: k.to_vec::<f32>()?,
+            v: v.to_vec::<f32>()?,
+        })
+    }
+
+    /// One batched decode step over host-resident caches.
+    ///
+    /// `tokens`/`lens`: per-slot next token and current cache length;
+    /// `k`/`v`: [n_layers, decode_batch, max_len, n_heads, head_dim].
+    /// Slots with `lens[b] = 0` and token 0 are inactive (garbage logits).
+    pub fn decode(
+        &self,
+        tokens: &[i32],
+        k: &[f32],
+        v: &[f32],
+        lens: &[i32],
+    ) -> Result<DecodeOut> {
+        let b = self.decode_batch;
+        if tokens.len() != b || lens.len() != b {
+            bail!("decode expects exactly {b} slots");
+        }
+        if k.len() != self.cache_len() || v.len() != self.cache_len() {
+            bail!("cache length mismatch");
+        }
+        let dims = [
+            self.n_layers as i64,
+            b as i64,
+            self.max_len as i64,
+            self.n_heads as i64,
+            self.head_dim as i64,
+        ];
+        let mut args: Vec<&xla::Literal> = self.params.iter().collect();
+        let tok = lit_i32(tokens, &[b as i64])?;
+        let kl = lit_f32(k, &dims)?;
+        let vl = lit_f32(v, &dims)?;
+        let ll = lit_i32(lens, &[b as i64])?;
+        args.push(&tok);
+        args.push(&kl);
+        args.push(&vl);
+        args.push(&ll);
+        let out = self.decode_exe.execute::<&xla::Literal>(&args)?[0][0]
+            .to_literal_sync()?;
+        let (logits, k2, v2) = out.to_tuple3()?;
+        Ok(DecodeOut {
+            logits: logits.to_vec::<f32>()?,
+            k: k2.to_vec::<f32>()?,
+            v: v2.to_vec::<f32>()?,
+        })
+    }
+
+    /// Run the standalone paged-attention kernel artifact.
+    ///
+    /// Shapes fixed at AOT time: q [B,H,D], pages [P,page,H,D],
+    /// table [B,PPS] i32, lens [B] i32 → out [B,H,D].
+    #[allow(clippy::too_many_arguments)]
+    pub fn paged_attn(
+        &self,
+        q: &[f32],
+        k_pages: &[f32],
+        v_pages: &[f32],
+        table: &[i32],
+        lens: &[i32],
+        shape: (usize, usize, usize, usize, usize), // (B, P, page, H, D)
+    ) -> Result<Vec<f32>> {
+        let exe = self
+            .paged_exe
+            .as_ref()
+            .context("paged_attn artifact not loaded")?;
+        let (b, p, page, h, d) = shape;
+        let pps = table.len() / b;
+        let tl = lit_i32(table, &[b as i64, pps as i64])?;
+        let ll = lit_i32(lens, &[b as i64])?;
+        let ql = lit_f32(q, &[b as i64, h as i64, d as i64])?;
+        let kd = [p as i64, page as i64, h as i64, d as i64];
+        let kl = lit_f32(k_pages, &kd)?;
+        let vl = lit_f32(v_pages, &kd)?;
+        let out = exe
+            .execute::<&xla::Literal>(&[&tl, &ll, &ql, &kl, &vl])?[0][0]
+            .to_literal_sync()?;
+        Ok(out.to_tuple1()?.to_vec::<f32>()?)
+    }
+
+    /// Greedy argmax over a logits row.
+    pub fn argmax(&self, logits: &[f32]) -> i32 {
+        let mut best = 0usize;
+        for (i, &x) in logits.iter().enumerate() {
+            if x > logits[best] {
+                best = i;
+            }
+        }
+        best as i32
+    }
+}

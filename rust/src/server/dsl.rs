@@ -1,0 +1,195 @@
+//! Line-oriented graph DSL for the `/graphs` endpoint — the wire form of
+//! the §3.1 frontend API (Fig 5's Python builder maps 1:1 onto this).
+//!
+//! ```text
+//! graph <name>
+//! agent <node-name> <agent-type> <prompt_base> <gen1,gen2,...> [<func> [<predict_us> [<stages>]]]
+//! func  <node-name> <func-kind> [<predict_us> [<stages>]]
+//! edge  <from-name> <to-name>
+//! prefix <node-name> <shared_prefix_tokens>
+//! priority <node-name> <static_priority>
+//! ```
+
+use std::collections::HashMap;
+
+use crate::graph::{AppGraph, CallSpec, FuncKind, GraphBuilder, NodeId};
+use crate::sim::Dist;
+
+fn func_kind(name: &str) -> FuncKind {
+    match name {
+        "file_read" => FuncKind::FileRead,
+        "file_write" => FuncKind::FileWrite,
+        "web_search" => FuncKind::WebSearch,
+        "file_query" => FuncKind::FileQuery,
+        "data_analysis" => FuncKind::DataAnalysis,
+        "user_confirm" => FuncKind::UserConfirm,
+        "external_test" => FuncKind::ExternalTest,
+        "git" => FuncKind::Git,
+        "database" => FuncKind::Database,
+        "ai_generation" => FuncKind::AiGeneration,
+        other => FuncKind::Custom {
+            name: other.to_string(),
+            latency_us: Dist::Constant(500_000.0),
+        },
+    }
+}
+
+fn parse_call(parts: &[&str]) -> Result<CallSpec, String> {
+    let mut call = CallSpec::new(func_kind(parts[0]));
+    if let Some(t) = parts.get(1) {
+        call = call.with_predict_time_us(
+            t.parse().map_err(|_| format!("bad predict_us {t}"))?,
+        );
+    }
+    if let Some(s) = parts.get(2) {
+        call = call.with_stages(
+            s.parse().map_err(|_| format!("bad stages {s}"))?,
+        );
+    }
+    Ok(call)
+}
+
+/// Parse the DSL into a validated [`AppGraph`].
+pub fn parse_graph_dsl(text: &str) -> Result<AppGraph, String> {
+    #[allow(unused_assignments)]
+    let mut name = String::new();
+    let mut gb: Option<GraphBuilder> = None;
+    let mut ids: HashMap<String, NodeId> = HashMap::new();
+
+    for (i, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let parts: Vec<&str> = line.split_whitespace().collect();
+        let err = |m: &str| format!("line {}: {m}", i + 1);
+        match parts[0] {
+            "graph" => {
+                name = parts.get(1).ok_or(err("graph needs a name"))?
+                    .to_string();
+                gb = Some(GraphBuilder::new(&name));
+            }
+            "agent" => {
+                let gb = gb.as_mut().ok_or(err("graph line must come first"))?;
+                if parts.len() < 5 {
+                    return Err(err("agent <name> <type> <prompt> <gens>"));
+                }
+                let prompt: u32 = parts[3]
+                    .parse()
+                    .map_err(|_| err("bad prompt tokens"))?;
+                let gens: Vec<u32> = parts[4]
+                    .split(',')
+                    .map(|g| g.parse().map_err(|_| err("bad gen tokens")))
+                    .collect::<Result<_, _>>()?;
+                let id = if parts.len() > 5 {
+                    if gens.len() < 2 {
+                        return Err(err(
+                            "agent with a call needs >= 2 gen phases",
+                        ));
+                    }
+                    let call = parse_call(&parts[5..])?;
+                    gb.agent_with_call(parts[1], parts[2], prompt, &gens,
+                                       call)
+                } else {
+                    gb.agent(parts[1], parts[2], prompt, &gens)
+                };
+                ids.insert(parts[1].to_string(), id);
+            }
+            "func" => {
+                let gb = gb.as_mut().ok_or(err("graph line must come first"))?;
+                if parts.len() < 3 {
+                    return Err(err("func <name> <kind>"));
+                }
+                let call = parse_call(&parts[2..])?;
+                let id = gb.func(parts[1], call);
+                ids.insert(parts[1].to_string(), id);
+            }
+            "edge" => {
+                let gb = gb.as_mut().ok_or(err("graph line must come first"))?;
+                let a = *ids
+                    .get(parts.get(1).copied().unwrap_or(""))
+                    .ok_or(err("unknown edge source"))?;
+                let b = *ids
+                    .get(parts.get(2).copied().unwrap_or(""))
+                    .ok_or(err("unknown edge target"))?;
+                gb.edge(a, b);
+            }
+            "prefix" | "priority" => {
+                // Tuning lines apply to the named node; for simplicity the
+                // builder only supports tuning the most recent agent, so
+                // we accept and ignore mismatches explicitly.
+                let gb = gb.as_mut().ok_or(err("graph line must come first"))?;
+                let val: f64 = parts
+                    .get(2)
+                    .and_then(|v| v.parse().ok())
+                    .ok_or(err("bad tuning value"))?;
+                let is_prefix = parts[0] == "prefix";
+                gb.tune_last(|s| {
+                    if is_prefix {
+                        s.shared_prefix = val as u32;
+                    } else {
+                        s.static_priority = val;
+                    }
+                });
+            }
+            other => return Err(err(&format!("unknown directive {other}"))),
+        }
+    }
+    gb.ok_or_else(|| "empty graph description".to_string())?
+        .build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::NodeKind;
+
+    #[test]
+    fn parses_fig5_rag() {
+        let g = parse_graph_dsl(
+            "graph rag\n\
+             agent retriever retriever 256 48,96 web_search 3000000 2\n\
+             agent generator generator 192 384\n\
+             edge retriever generator\n",
+        )
+        .unwrap();
+        assert_eq!(g.name, "rag");
+        assert_eq!(g.len(), 2);
+        let root = g.roots()[0];
+        match &g.node(root).kind {
+            NodeKind::Agent(a) => {
+                let c = a.phases[0].call.as_ref().unwrap();
+                assert_eq!(c.predict_time_us, Some(3_000_000));
+                assert_eq!(c.stages, 2);
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn parses_func_nodes_and_tuning() {
+        let g = parse_graph_dsl(
+            "graph t\n\
+             agent a t1 10 5\n\
+             priority a 0.9\n\
+             func search web_search 2000000\n\
+             agent b t2 10 5\n\
+             edge a search\nedge search b\n",
+        )
+        .unwrap();
+        assert_eq!(g.len(), 3);
+        assert_eq!(g.max_depth(), 2);
+    }
+
+    #[test]
+    fn rejects_bad_input() {
+        assert!(parse_graph_dsl("").is_err());
+        assert!(parse_graph_dsl("agent x t 1 1\n").is_err());
+        assert!(parse_graph_dsl("graph g\nedge a b\n").is_err());
+        assert!(parse_graph_dsl("graph g\nbogus\n").is_err());
+        assert!(
+            parse_graph_dsl("graph g\nagent a t 1 5 web_search\n").is_err(),
+            "call with single phase must be rejected"
+        );
+    }
+}

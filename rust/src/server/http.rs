@@ -1,0 +1,118 @@
+//! Minimal HTTP/1.1 request/response handling — just enough for the
+//! frontend endpoints (no chunked encoding, no keep-alive).
+
+use std::io::{BufRead, BufReader, Read};
+use std::net::TcpStream;
+
+/// A parsed request.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    pub body: String,
+}
+
+/// A response under construction.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Response {
+    pub status: u16,
+    pub body: String,
+}
+
+impl Response {
+    pub fn ok(body: &str) -> Self {
+        Self {
+            status: 200,
+            body: body.to_string(),
+        }
+    }
+
+    pub fn bad_request(body: &str) -> Self {
+        Self {
+            status: 400,
+            body: body.to_string(),
+        }
+    }
+
+    pub fn not_found() -> Self {
+        Self {
+            status: 404,
+            body: "not found\n".to_string(),
+        }
+    }
+
+    fn reason(&self) -> &'static str {
+        match self.status {
+            200 => "OK",
+            400 => "Bad Request",
+            404 => "Not Found",
+            _ => "Internal Server Error",
+        }
+    }
+
+    pub fn to_bytes(&self) -> Vec<u8> {
+        format!(
+            "HTTP/1.1 {} {}\r\ncontent-type: text/plain\r\n\
+             content-length: {}\r\nconnection: close\r\n\r\n{}",
+            self.status,
+            self.reason(),
+            self.body.len(),
+            self.body
+        )
+        .into_bytes()
+    }
+}
+
+/// Parse one request from a stream.
+pub fn read_request(stream: &mut TcpStream) -> std::io::Result<Request> {
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    let mut parts = line.split_whitespace();
+    let method = parts.next().unwrap_or("").to_string();
+    let path = parts.next().unwrap_or("").to_string();
+
+    let mut content_length = 0usize;
+    loop {
+        let mut h = String::new();
+        reader.read_line(&mut h)?;
+        let h = h.trim();
+        if h.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = h.split_once(':') {
+            if k.trim().eq_ignore_ascii_case("content-length") {
+                content_length = v.trim().parse().unwrap_or(0);
+            }
+        }
+    }
+    let mut body = vec![0u8; content_length.min(1 << 20)];
+    if content_length > 0 {
+        reader.read_exact(&mut body)?;
+    }
+    Ok(Request {
+        method,
+        path,
+        body: String::from_utf8_lossy(&body).to_string(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn response_bytes_wellformed() {
+        let b = Response::ok("hello").to_bytes();
+        let s = String::from_utf8(b).unwrap();
+        assert!(s.starts_with("HTTP/1.1 200 OK\r\n"));
+        assert!(s.contains("content-length: 5"));
+        assert!(s.ends_with("hello"));
+    }
+
+    #[test]
+    fn status_reasons() {
+        assert_eq!(Response::not_found().status, 404);
+        assert_eq!(Response::bad_request("x").status, 400);
+    }
+}

@@ -1,0 +1,153 @@
+//! The unified MCPManager (§6.2): per-request function-call lifecycle
+//! state behind the `call_start`/`call_finish` endpoints. State moves
+//! through the paper's five stages: running → pending-offload → offloaded
+//! → pending-upload → uploaded.
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+/// The five MCP lifecycle states plus the stalled entry state.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum McpState {
+    /// FC in flight, cache resident (pre-offload-decision).
+    Stalled,
+    PendingOffload,
+    Offloaded,
+    PendingUpload,
+    Uploaded,
+}
+
+#[derive(Debug, Clone)]
+struct Entry {
+    func: String,
+    state: McpState,
+    started: Instant,
+    predicted_us: u64,
+}
+
+/// Tracks every in-flight function call by request id.
+pub struct McpManager {
+    entries: HashMap<u64, Entry>,
+    running: u64,
+    completed: u64,
+}
+
+impl McpManager {
+    pub fn new() -> Self {
+        Self {
+            entries: HashMap::new(),
+            running: 0,
+            completed: 0,
+        }
+    }
+
+    /// A request announced a function call.
+    pub fn call_start(
+        &mut self,
+        req: u64,
+        func: &str,
+        predicted_us: u64,
+    ) -> Result<(), String> {
+        if self.entries.contains_key(&req) {
+            return Err(format!("request {req} already in a call"));
+        }
+        self.entries.insert(
+            req,
+            Entry {
+                func: func.to_string(),
+                state: McpState::Stalled,
+                started: Instant::now(),
+                predicted_us,
+            },
+        );
+        Ok(())
+    }
+
+    /// The tool returned; yields (func name, measured elapsed µs).
+    pub fn call_finish(&mut self, req: u64) -> Result<(String, u64), String> {
+        let e = self
+            .entries
+            .remove(&req)
+            .ok_or_else(|| format!("request {req} has no open call"))?;
+        self.completed += 1;
+        Ok((e.func, e.started.elapsed().as_micros() as u64))
+    }
+
+    /// Scheduler feedback: the cache's residency changed.
+    pub fn set_state(&mut self, req: u64, state: McpState) -> Result<(), String> {
+        let e = self
+            .entries
+            .get_mut(&req)
+            .ok_or_else(|| format!("request {req} has no open call"))?;
+        e.state = state;
+        Ok(())
+    }
+
+    pub fn state_of(&self, req: u64) -> Option<McpState> {
+        self.entries.get(&req).map(|e| e.state)
+    }
+
+    pub fn predicted_us(&self, req: u64) -> Option<u64> {
+        self.entries.get(&req).map(|e| e.predicted_us)
+    }
+
+    pub fn note_running(&mut self, n: u64) {
+        self.running = n;
+    }
+
+    /// Lifecycle counts for the /state endpoint.
+    pub fn render_counts(&self) -> String {
+        let count = |s: McpState| {
+            self.entries.values().filter(|e| e.state == s).count()
+        };
+        format!(
+            "running={}\nstalled={}\npending_offload={}\noffloaded={}\n\
+             pending_upload={}\nuploaded={}\ncompleted_calls={}\n",
+            self.running,
+            count(McpState::Stalled),
+            count(McpState::PendingOffload),
+            count(McpState::Offloaded),
+            count(McpState::PendingUpload),
+            count(McpState::Uploaded),
+            self.completed,
+        )
+    }
+}
+
+impl Default for McpManager {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lifecycle_transitions() {
+        let mut m = McpManager::new();
+        m.call_start(1, "git", 500_000).unwrap();
+        assert_eq!(m.state_of(1), Some(McpState::Stalled));
+        assert!(m.call_start(1, "git", 1).is_err());
+        m.set_state(1, McpState::PendingOffload).unwrap();
+        m.set_state(1, McpState::Offloaded).unwrap();
+        assert_eq!(m.state_of(1), Some(McpState::Offloaded));
+        let (func, elapsed) = m.call_finish(1).unwrap();
+        assert_eq!(func, "git");
+        assert!(elapsed < 5_000_000);
+        assert!(m.call_finish(1).is_err());
+        assert!(m.set_state(1, McpState::Uploaded).is_err());
+    }
+
+    #[test]
+    fn counts_render() {
+        let mut m = McpManager::new();
+        m.call_start(1, "a", 1).unwrap();
+        m.call_start(2, "b", 1).unwrap();
+        m.set_state(2, McpState::Offloaded).unwrap();
+        let s = m.render_counts();
+        assert!(s.contains("stalled=1"));
+        assert!(s.contains("offloaded=1"));
+    }
+}

@@ -1,0 +1,291 @@
+//! The serving frontend (§6.1–§6.2): graph registration plus the
+//! `call_start` / `call_finish` endpoints that drive the Temporal
+//! Scheduler, served over a dependency-free HTTP/1.1 implementation
+//! (tokio is not vendored offline; std::net + threads carry the same
+//! architecture: a dedicated acceptor with per-connection workers).
+//!
+//! Endpoints (bodies are `key=value` lines, responses likewise):
+//!
+//! | Method/path        | Body                          | Effect |
+//! |--------------------|-------------------------------|--------|
+//! | `POST /graphs`     | graph DSL (see [`parse_graph_dsl`]) | register a DAG |
+//! | `POST /apps`       | `graph=<id>`                  | instantiate an app |
+//! | `POST /call_start` | `req=<id>` `estimate_us=<n>` `func=<name>` | request stalls on an FC |
+//! | `POST /call_finish`| `req=<id>` `elapsed_us=<n>`   | tool returned |
+//! | `GET  /state`      | —                             | MCP lifecycle counts |
+//! | `GET  /healthz`    | —                             | liveness |
+
+mod dsl;
+mod http;
+mod mcp;
+
+pub use dsl::parse_graph_dsl;
+pub use http::{Request, Response};
+pub use mcp::{McpManager, McpState};
+
+use std::collections::HashMap;
+use std::io::Write;
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::graph::AppGraph;
+use crate::temporal::Forecaster;
+
+/// Shared server state behind the endpoints.
+pub struct ServerCore {
+    pub graphs: Vec<AppGraph>,
+    pub mcp: McpManager,
+    pub forecaster: Forecaster,
+    next_app: u64,
+    pub apps: HashMap<u64, usize>,
+}
+
+impl ServerCore {
+    pub fn new() -> Self {
+        Self {
+            graphs: Vec::new(),
+            mcp: McpManager::new(),
+            forecaster: Forecaster::new(0.4, 0.3, 2_000_000),
+            next_app: 0,
+            apps: HashMap::new(),
+        }
+    }
+
+    /// Dispatch one parsed request (also used directly by tests).
+    pub fn handle(&mut self, req: &Request) -> Response {
+        match (req.method.as_str(), req.path.as_str()) {
+            ("GET", "/healthz") => Response::ok("ok\n"),
+            ("POST", "/graphs") => match parse_graph_dsl(&req.body) {
+                Ok(g) => {
+                    self.graphs.push(g);
+                    Response::ok(&format!("graph={}\n", self.graphs.len() - 1))
+                }
+                Err(e) => Response::bad_request(&format!("error={e}\n")),
+            },
+            ("POST", "/apps") => {
+                let kv = body_kv(&req.body);
+                let Some(gid) = kv.get("graph").and_then(|v| v.parse().ok())
+                else {
+                    return Response::bad_request("error=missing graph\n");
+                };
+                if gid >= self.graphs.len() {
+                    return Response::bad_request("error=unknown graph\n");
+                }
+                let id = self.next_app;
+                self.next_app += 1;
+                self.apps.insert(id, gid);
+                Response::ok(&format!("app={id}\n"))
+            }
+            ("POST", "/call_start") => {
+                let kv = body_kv(&req.body);
+                let Some(rid) = kv.get("req").and_then(|v| v.parse().ok())
+                else {
+                    return Response::bad_request("error=missing req\n");
+                };
+                let func = kv
+                    .get("func")
+                    .cloned()
+                    .unwrap_or_else(|| "unknown".to_string());
+                let est = kv.get("estimate_us").and_then(|v| v.parse().ok());
+                let predicted =
+                    self.forecaster.predict_us(&func, est);
+                match self.mcp.call_start(rid, &func, predicted) {
+                    Ok(()) => {
+                        Response::ok(&format!("predicted_us={predicted}\n"))
+                    }
+                    Err(e) => Response::bad_request(&format!("error={e}\n")),
+                }
+            }
+            ("POST", "/call_finish") => {
+                let kv = body_kv(&req.body);
+                let Some(rid) = kv.get("req").and_then(|v| v.parse().ok())
+                else {
+                    return Response::bad_request("error=missing req\n");
+                };
+                match self.mcp.call_finish(rid) {
+                    Ok((func, elapsed)) => {
+                        // Feed the per-function-type forecasting model
+                        // (Eq. 1) exactly as §6.2 describes.
+                        let observed = kv
+                            .get("elapsed_us")
+                            .and_then(|v| v.parse().ok())
+                            .unwrap_or(elapsed);
+                        self.forecaster.observe_us(&func, observed);
+                        Response::ok(&format!("observed_us={observed}\n"))
+                    }
+                    Err(e) => Response::bad_request(&format!("error={e}\n")),
+                }
+            }
+            ("GET", "/state") => Response::ok(&self.mcp.render_counts()),
+            _ => Response::not_found(),
+        }
+    }
+}
+
+impl Default for ServerCore {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+fn body_kv(body: &str) -> HashMap<String, String> {
+    body.lines()
+        .filter_map(|l| {
+            let (k, v) = l.split_once('=')?;
+            Some((k.trim().to_string(), v.trim().to_string()))
+        })
+        .collect()
+}
+
+/// A running HTTP server (thread-per-connection on std::net).
+pub struct Server {
+    pub addr: std::net::SocketAddr,
+    core: Arc<Mutex<ServerCore>>,
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind and start serving on `127.0.0.1:port` (0 = ephemeral).
+    pub fn start(port: u16) -> std::io::Result<Self> {
+        let listener = TcpListener::bind(("127.0.0.1", port))?;
+        listener.set_nonblocking(true)?;
+        let addr = listener.local_addr()?;
+        let core = Arc::new(Mutex::new(ServerCore::new()));
+        let stop = Arc::new(AtomicBool::new(false));
+        let (core2, stop2) = (core.clone(), stop.clone());
+        let handle = std::thread::spawn(move || {
+            while !stop2.load(Ordering::Relaxed) {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        let core3 = core2.clone();
+                        std::thread::spawn(move || {
+                            let _ = serve_conn(stream, core3);
+                        });
+                    }
+                    Err(ref e)
+                        if e.kind() == std::io::ErrorKind::WouldBlock =>
+                    {
+                        std::thread::sleep(
+                            std::time::Duration::from_millis(5),
+                        );
+                    }
+                    Err(_) => break,
+                }
+            }
+        });
+        Ok(Self {
+            addr,
+            core,
+            stop,
+            handle: Some(handle),
+        })
+    }
+
+    pub fn core(&self) -> Arc<Mutex<ServerCore>> {
+        self.core.clone()
+    }
+
+    pub fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn serve_conn(
+    mut stream: TcpStream,
+    core: Arc<Mutex<ServerCore>>,
+) -> std::io::Result<()> {
+    stream.set_read_timeout(Some(std::time::Duration::from_secs(5)))?;
+    let req = http::read_request(&mut stream)?;
+    let resp = core.lock().unwrap().handle(&req);
+    stream.write_all(resp.to_bytes().as_slice())?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn post(path: &str, body: &str) -> Request {
+        Request {
+            method: "POST".into(),
+            path: path.into(),
+            body: body.into(),
+        }
+    }
+
+    #[test]
+    fn register_graph_and_app() {
+        let mut core = ServerCore::new();
+        let dsl = "\
+graph rag
+agent retriever retriever 256 48,96 web_search 3000000
+agent generator generator 192 384
+edge retriever generator
+";
+        let r = core.handle(&post("/graphs", dsl));
+        assert_eq!(r.status, 200, "{}", r.body);
+        assert!(r.body.contains("graph=0"));
+        let r = core.handle(&post("/apps", "graph=0"));
+        assert!(r.body.contains("app=0"));
+        let r = core.handle(&post("/apps", "graph=9"));
+        assert_eq!(r.status, 400);
+    }
+
+    #[test]
+    fn call_lifecycle_feeds_forecaster() {
+        let mut core = ServerCore::new();
+        let r = core.handle(&post(
+            "/call_start",
+            "req=7\nfunc=web_search\nestimate_us=1000000",
+        ));
+        assert_eq!(r.status, 200);
+        assert!(r.body.contains("predicted_us=1000000"));
+        let r = core.handle(&post(
+            "/call_finish",
+            "req=7\nelapsed_us=2000000",
+        ));
+        assert_eq!(r.status, 200);
+        // Second call: EWMA history (2 s) now blends with the estimate:
+        // 0.4·1 s + 0.6·2 s = 1.6 s.
+        let r = core.handle(&post(
+            "/call_start",
+            "req=8\nfunc=web_search\nestimate_us=1000000",
+        ));
+        assert!(r.body.contains("predicted_us=1600000"), "{}", r.body);
+    }
+
+    #[test]
+    fn state_reports_lifecycle_counts() {
+        let mut core = ServerCore::new();
+        core.handle(&post("/call_start", "req=1\nfunc=git"));
+        let r = core.handle(&Request {
+            method: "GET".into(),
+            path: "/state".into(),
+            body: String::new(),
+        });
+        assert!(r.body.contains("running=0"));
+        assert!(r.body.contains("stalled=1"), "{}", r.body);
+    }
+
+    #[test]
+    fn unknown_route_404s() {
+        let mut core = ServerCore::new();
+        let r = core.handle(&Request {
+            method: "GET".into(),
+            path: "/nope".into(),
+            body: String::new(),
+        });
+        assert_eq!(r.status, 404);
+    }
+}

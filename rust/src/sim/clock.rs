@@ -1,0 +1,71 @@
+//! Simulation clock: monotonically advancing microsecond time.
+
+/// Microseconds per second (all sim time is `u64` µs).
+pub const MICROS_PER_SEC: u64 = 1_000_000;
+
+/// A monotonically advancing simulation clock.
+///
+/// The engine owns the clock and advances it to the timestamp of each event
+/// it dequeues; schedulers only ever read it. Attempting to move time
+/// backwards panics — that is always an engine bug.
+#[derive(Debug, Clone, Default)]
+pub struct Clock {
+    now_us: u64,
+}
+
+impl Clock {
+    pub fn new() -> Self {
+        Self { now_us: 0 }
+    }
+
+    /// Current simulation time in microseconds.
+    #[inline]
+    pub fn now_us(&self) -> u64 {
+        self.now_us
+    }
+
+    /// Current simulation time in seconds (for reporting only).
+    #[inline]
+    pub fn now_s(&self) -> f64 {
+        self.now_us as f64 / MICROS_PER_SEC as f64
+    }
+
+    /// Advance to an absolute timestamp. Panics on time travel.
+    pub fn advance_to(&mut self, t_us: u64) {
+        assert!(
+            t_us >= self.now_us,
+            "clock moved backwards: {} -> {}",
+            self.now_us,
+            t_us
+        );
+        self.now_us = t_us;
+    }
+
+    /// Advance by a relative duration.
+    pub fn advance_by(&mut self, dt_us: u64) {
+        self.now_us += dt_us;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn advances_monotonically() {
+        let mut c = Clock::new();
+        assert_eq!(c.now_us(), 0);
+        c.advance_to(10);
+        c.advance_by(5);
+        assert_eq!(c.now_us(), 15);
+        assert!((c.now_s() - 15e-6).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "clock moved backwards")]
+    fn rejects_time_travel() {
+        let mut c = Clock::new();
+        c.advance_to(10);
+        c.advance_to(9);
+    }
+}

@@ -1,0 +1,136 @@
+//! Latency / arrival distributions used by the workload generator and the
+//! tool simulator (Table 1 of the paper).
+
+use super::rng::Rng;
+
+/// A sampleable duration/interval distribution (microseconds or abstract).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Dist {
+    /// Always the same value.
+    Constant(f64),
+    /// Uniform in [lo, hi).
+    Uniform(f64, f64),
+    /// Lognormal parameterized by the *target* median and sigma (of the
+    /// underlying normal). Heavy-tailed — matches web-search / AI-generation
+    /// tool latencies in Table 1.
+    LogNormal(LogNormal),
+    /// Exponential with the given mean (Poisson inter-arrival times).
+    Exp(f64),
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct LogNormal {
+    pub median: f64,
+    pub sigma: f64,
+}
+
+impl Dist {
+    pub fn sample(&self, rng: &mut Rng) -> f64 {
+        match self {
+            Dist::Constant(v) => *v,
+            Dist::Uniform(lo, hi) => rng.range_f64(*lo, *hi),
+            Dist::LogNormal(LogNormal { median, sigma }) => {
+                (median.ln() + sigma * rng.normal()).exp()
+            }
+            Dist::Exp(mean) => -mean * (1.0 - rng.next_f64()).ln(),
+        }
+    }
+
+    /// Expected value (used by forecasting defaults and tests).
+    pub fn mean(&self) -> f64 {
+        match self {
+            Dist::Constant(v) => *v,
+            Dist::Uniform(lo, hi) => 0.5 * (lo + hi),
+            Dist::LogNormal(LogNormal { median, sigma }) => {
+                median * (sigma * sigma / 2.0).exp()
+            }
+            Dist::Exp(mean) => *mean,
+        }
+    }
+}
+
+/// Poisson arrival process at `rate` events per second; yields successive
+/// arrival timestamps in microseconds.
+#[derive(Debug, Clone)]
+pub struct Poisson {
+    inter: Dist,
+    next_us: f64,
+}
+
+impl Poisson {
+    pub fn new(rate_per_s: f64) -> Self {
+        assert!(rate_per_s > 0.0);
+        Self {
+            inter: Dist::Exp(1e6 / rate_per_s),
+            next_us: 0.0,
+        }
+    }
+
+    pub fn next_arrival_us(&mut self, rng: &mut Rng) -> u64 {
+        self.next_us += self.inter.sample(rng);
+        self.next_us as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_is_constant() {
+        let mut rng = Rng::new(1);
+        let d = Dist::Constant(42.0);
+        assert_eq!(d.sample(&mut rng), 42.0);
+        assert_eq!(d.mean(), 42.0);
+    }
+
+    #[test]
+    fn uniform_within_bounds_and_mean() {
+        let mut rng = Rng::new(2);
+        let d = Dist::Uniform(10.0, 20.0);
+        let n = 20_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let x = d.sample(&mut rng);
+            assert!((10.0..20.0).contains(&x));
+            sum += x;
+        }
+        assert!((sum / n as f64 - 15.0).abs() < 0.1);
+    }
+
+    #[test]
+    fn lognormal_median_close() {
+        let mut rng = Rng::new(3);
+        let d = Dist::LogNormal(LogNormal {
+            median: 100.0,
+            sigma: 0.5,
+        });
+        let mut xs: Vec<f64> = (0..10_001).map(|_| d.sample(&mut rng)).collect();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let med = xs[5000];
+        assert!((med / 100.0 - 1.0).abs() < 0.1, "median={med}");
+    }
+
+    #[test]
+    fn exp_mean_close() {
+        let mut rng = Rng::new(4);
+        let d = Dist::Exp(50.0);
+        let n = 50_000;
+        let mean: f64 =
+            (0..n).map(|_| d.sample(&mut rng)).sum::<f64>() / n as f64;
+        assert!((mean - 50.0).abs() < 1.5, "mean={mean}");
+    }
+
+    #[test]
+    fn poisson_rate_close() {
+        let mut rng = Rng::new(5);
+        let mut p = Poisson::new(2.0); // 2 arrivals/s
+        let mut last = 0;
+        let n = 10_000;
+        for _ in 0..n {
+            last = p.next_arrival_us(&mut rng);
+        }
+        let rate = n as f64 / (last as f64 / 1e6);
+        assert!((rate - 2.0).abs() < 0.1, "rate={rate}");
+    }
+}

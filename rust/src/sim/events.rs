@@ -1,0 +1,163 @@
+//! Time-ordered event queue for the discrete-event engine.
+//!
+//! Generic over the payload so the engine defines its own event alphabet
+//! (arrivals, tool completions, transfer completions) without circular
+//! module dependencies. Ties are broken by insertion order (FIFO), which
+//! keeps runs deterministic.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// An event scheduled at an absolute simulation time.
+#[derive(Debug, Clone)]
+pub struct Event<T> {
+    pub at_us: u64,
+    pub seq: u64,
+    pub payload: T,
+}
+
+/// Engine event alphabet used by the sim engine (re-exported for tests).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum EventKind {
+    /// A new application instance arrives.
+    AppArrival { app_idx: u32 },
+    /// A function call (tool) completes for a request.
+    ToolFinish { req_id: u64 },
+    /// A D2H/H2D block transfer completes.
+    TransferDone { xfer_id: u64 },
+}
+
+struct HeapEntry<T> {
+    at_us: u64,
+    seq: u64,
+    payload: T,
+}
+
+impl<T> PartialEq for HeapEntry<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.at_us == other.at_us && self.seq == other.seq
+    }
+}
+impl<T> Eq for HeapEntry<T> {}
+impl<T> PartialOrd for HeapEntry<T> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<T> Ord for HeapEntry<T> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Reversed: BinaryHeap is a max-heap, we want earliest-first.
+        other
+            .at_us
+            .cmp(&self.at_us)
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+
+/// Min-heap of events ordered by (time, insertion sequence).
+pub struct EventQueue<T> {
+    heap: BinaryHeap<HeapEntry<T>>,
+    next_seq: u64,
+}
+
+impl<T> Default for EventQueue<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> EventQueue<T> {
+    pub fn new() -> Self {
+        Self {
+            heap: BinaryHeap::new(),
+            next_seq: 0,
+        }
+    }
+
+    pub fn push(&mut self, at_us: u64, payload: T) {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.heap.push(HeapEntry {
+            at_us,
+            seq,
+            payload,
+        });
+    }
+
+    /// Timestamp of the earliest pending event.
+    pub fn peek_time(&self) -> Option<u64> {
+        self.heap.peek().map(|e| e.at_us)
+    }
+
+    /// Pop the earliest event if its time is <= `now_us`.
+    pub fn pop_due(&mut self, now_us: u64) -> Option<Event<T>> {
+        if self.peek_time()? <= now_us {
+            let e = self.heap.pop().unwrap();
+            Some(Event {
+                at_us: e.at_us,
+                seq: e.seq,
+                payload: e.payload,
+            })
+        } else {
+            None
+        }
+    }
+
+    /// Pop the earliest event unconditionally.
+    pub fn pop(&mut self) -> Option<Event<T>> {
+        self.heap.pop().map(|e| Event {
+            at_us: e.at_us,
+            seq: e.seq,
+            payload: e.payload,
+        })
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn orders_by_time_then_fifo() {
+        let mut q = EventQueue::new();
+        q.push(20, "b");
+        q.push(10, "a1");
+        q.push(10, "a2");
+        q.push(30, "c");
+        assert_eq!(q.pop().unwrap().payload, "a1");
+        assert_eq!(q.pop().unwrap().payload, "a2");
+        assert_eq!(q.pop().unwrap().payload, "b");
+        assert_eq!(q.pop().unwrap().payload, "c");
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn pop_due_respects_now() {
+        let mut q = EventQueue::new();
+        q.push(100, 1u32);
+        q.push(200, 2u32);
+        assert!(q.pop_due(50).is_none());
+        assert_eq!(q.pop_due(150).unwrap().payload, 1);
+        assert!(q.pop_due(150).is_none());
+        assert_eq!(q.peek_time(), Some(200));
+    }
+
+    #[test]
+    fn len_tracks() {
+        let mut q: EventQueue<()> = EventQueue::new();
+        assert!(q.is_empty());
+        q.push(1, ());
+        q.push(2, ());
+        assert_eq!(q.len(), 2);
+        q.pop();
+        assert_eq!(q.len(), 1);
+    }
+}

@@ -1,0 +1,20 @@
+//! Discrete-event simulation core.
+//!
+//! The paper's experiments run on A100/H20 GPUs; this environment has none,
+//! so the evaluation substrate is a discrete-event simulator with faithful
+//! block-level KV-cache accounting (DESIGN.md §3). Everything the schedulers
+//! observe — time, transfer completions, tool completions, decode iteration
+//! boundaries — flows through this module.
+//!
+//! Time is `u64` microseconds. All randomness is an explicitly seeded
+//! xorshift generator so every experiment is reproducible bit-for-bit.
+
+mod clock;
+mod dist;
+mod events;
+mod rng;
+
+pub use clock::{Clock, MICROS_PER_SEC};
+pub use dist::{Dist, LogNormal, Poisson};
+pub use events::{Event, EventKind, EventQueue};
+pub use rng::Rng;

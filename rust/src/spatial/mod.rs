@@ -1,0 +1,488 @@
+//! The Spatial Scheduler (§5): dynamic memory partitioning + agent-aware
+//! admission control.
+//!
+//! Solves *critical inversion* at the memory level: the GPU block pool is
+//! split into a shared region and per-type reserved quotas that only
+//! critical agent types may draw from. The partition adapts through the
+//! Algorithm 2 feedback loop; which requests enter the batch is decided by
+//! the hybrid per-request priority P_req (Eq. 5), and which *types* get
+//! reservations by the agent-type score S_a (Eq. 6).
+
+mod score;
+
+pub use score::{agent_type_scores, TypeStats};
+
+use crate::config::Mode;
+use crate::coordination::{ReqState, RequestId, ServeState};
+use crate::kvcache::{AgentTypeId, AllocOutcome, PrefixKey, PrefixLocation, Route};
+
+/// Algorithm 2: periodically re-evaluate ρ, the critical set, and the
+/// per-type quota distribution. No-op until the adjustment window expires.
+pub fn maybe_update_reservations(st: &mut ServeState, now_us: u64) {
+    if now_us < st.spatial.last_adjust_us + st.cfg.policy.adjust_window_us
+        && st.spatial.last_adjust_us != 0
+    {
+        return;
+    }
+    st.spatial.last_adjust_us = now_us.max(1);
+    update_reservations(st);
+}
+
+/// The three-step reservation update (Algorithm 2), runnable on demand.
+pub fn update_reservations(st: &mut ServeState) {
+    let p = st.cfg.policy.clone();
+    let n = st.gpu.total();
+    let usage = st.gpu.usage();
+
+    // ---- Step 1: adjust the total reserved pool fraction ρ. ----
+    let mut rho = st.spatial.rho;
+    if usage >= p.high_watermark {
+        rho += p.reserve_step;
+    } else if usage <= p.low_watermark {
+        rho -= p.reserve_step;
+    }
+    rho = rho.clamp(p.reserve_min, p.reserve_max);
+    st.spatial.rho = rho;
+
+    // ---- Step 2: select critical agent types via S_a (Eq. 6). ----
+    let scores = agent_type_scores(st);
+    if scores.is_empty() {
+        st.spatial.critical_types.clear();
+        st.gpu.set_quotas(&[]);
+        return;
+    }
+    let mut ranked: Vec<(AgentTypeId, f64, u32)> = scores
+        .iter()
+        .map(|s| (s.type_id, s.score, s.gpu_blocks))
+        .collect();
+    ranked.sort_by(|a, b| b.1.total_cmp(&a.1));
+    let k = ((ranked.len() as f64 * p.critical_ratio).ceil() as usize)
+        .clamp(1, ranked.len());
+    let critical = &ranked[..k];
+    st.spatial.critical_types =
+        critical.iter().map(|&(t, _, _)| t).collect();
+
+    // ---- Step 3: distribute reserved capacity among critical types:
+    // share_a = ½·(GpuUsage(a)/N + S_a / Σ S_{a'}). ----
+    let sum_s: f64 = critical.iter().map(|&(_, s, _)| s.max(1e-9)).sum();
+    let reserved_total = rho * n as f64;
+    let mut plan: Vec<(AgentTypeId, u32)> = Vec::with_capacity(k);
+    for &(t, s, used_blocks) in critical {
+        let share = 0.5
+            * (used_blocks as f64 / n.max(1) as f64
+                + s.max(1e-9) / sum_s);
+        let quota = (share * reserved_total) as u32;
+        // A quota smaller than a typical request is pure fragmentation:
+        // it blocks shared admissions without ever admitting anyone.
+        if quota >= p.min_quota_blocks {
+            plan.push((t, quota));
+        }
+    }
+    st.gpu.set_quotas(&plan);
+}
+
+/// Admission route for a request under the current mode + critical set.
+pub fn route_for(st: &ServeState, rid: RequestId) -> Route {
+    let r = &st.reqs[&rid];
+    if st.cfg.mode.reserves_memory()
+        && st.spatial.critical_types.contains(&r.type_id)
+    {
+        Route::Reserved(r.type_id)
+    } else {
+        Route::Shared
+    }
+}
+
+/// Blocks to allocate at admission. Parrot (compute-centric, own engine)
+/// reserves worst-case context up front — no paged growth — which is the
+/// structural reason it collapses under memory pressure (§7.4, Fig 13).
+fn admission_alloc_blocks(st: &ServeState, rid: RequestId) -> u32 {
+    let r = &st.reqs[&rid];
+    if st.cfg.mode == Mode::Parrot || r.admit_full {
+        // Worst-case reservation: Parrot always (its engine predates
+        // paged growth); everyone else only after a self-preemption
+        // proved that incremental growth cannot complete (admit_full).
+        let worst = r.context_tokens
+            + (r.total_gen_target() - r.tokens_generated)
+            + r.phases[r.cur_phase.min(r.phases.len() - 1)..]
+                .iter()
+                .map(|p| p.result_tokens)
+                .sum::<u32>();
+        let need = st.cfg.profile.blocks_for_tokens(worst);
+        need.saturating_sub(r.blocks.len() as u32)
+    } else {
+        st.admission_demand(r)
+    }
+}
+
+/// Phase 4: form the next batch under agent-aware admission control.
+///
+/// TokenCake / agent-aware modes scan the queue in priority order and may
+/// skip requests that don't fit (no head-of-line blocking); FCFS baselines
+/// (vLLM, Mooncake) stop at the first request that doesn't fit — classic
+/// continuous batching.
+pub fn admit(st: &mut ServeState, now_us: u64) {
+    let batch_now = st.running.len() + st.prefilling.len();
+    if batch_now >= st.cfg.max_batch {
+        return;
+    }
+    let mut slots = st.cfg.max_batch - batch_now;
+
+    // Candidate order: requests that already hold their KV (resumed after
+    // a function call / upload) come first — they are continuations of the
+    // decode batch, exactly as vLLM's running queue takes precedence over
+    // waiting admissions. Fresh requests follow in mode-dependent order.
+    let (mut resumed, mut fresh): (Vec<RequestId>, Vec<RequestId>) = st
+        .waiting
+        .iter()
+        .copied()
+        .partition(|rid| !st.reqs[rid].blocks.is_empty());
+    if st.cfg.mode.agent_aware() {
+        // Offload beneficiaries jump the line (the freed blocks were
+        // justified by their admission); otherwise priority order.
+        let by_prio = |a: &RequestId, b: &RequestId| {
+            let ra = &st.reqs[a];
+            let rb = &st.reqs[b];
+            rb.pulled
+                .cmp(&ra.pulled)
+                .then(rb.priority.total_cmp(&ra.priority))
+        };
+        resumed.sort_by(by_prio);
+        fresh.sort_by(by_prio);
+    }
+    let mut order = resumed;
+    order.extend(fresh);
+    let fcfs_hol = matches!(
+        st.cfg.mode,
+        Mode::Vllm | Mode::VllmPrefix | Mode::Mooncake | Mode::OffloadOnly
+            | Mode::Infercept
+    );
+
+    // Growth headroom (vLLM's admission watermark): a fresh admission must
+    // leave one spare block per active sequence *that can still grow*, or
+    // decode-time growth immediately triggers preemption thrash. Requests
+    // whose blocks already cover their worst-case context (e.g. the real
+    // engine's one-block-per-slot layout) need no headroom.
+    let block_tokens = st.cfg.profile.block_tokens;
+    fn needs_growth(
+        r: &crate::coordination::Request,
+        block_tokens: u32,
+    ) -> bool {
+        let capacity = r.blocks.len() as u32 * block_tokens;
+        let worst = r.context_tokens
+            + (r.total_gen_target() - r.tokens_generated)
+            + r.phases[r.cur_phase.min(r.phases.len() - 1)..]
+                .iter()
+                .map(|p| p.result_tokens)
+                .sum::<u32>();
+        capacity < worst
+    }
+    let mut margin = st
+        .running
+        .iter()
+        .chain(st.prefilling.iter())
+        .filter(|rid| needs_growth(&st.reqs[rid], block_tokens))
+        .count() as u32;
+
+    let mut admitted: Vec<RequestId> = Vec::new();
+    for rid in order {
+        if slots == 0 {
+            break;
+        }
+        // Prefix-cache lookup for fresh admissions.
+        maybe_apply_prefix_cache(st, rid, now_us);
+
+        let need = admission_alloc_blocks(st, rid);
+        let route = route_for(st, rid);
+        let fresh = st.reqs[&rid].blocks.is_empty();
+        if fresh && st.gpu.available_for(route) < need.saturating_add(margin)
+        {
+            st.metrics.counters.deferrals += 1;
+            let t = st.reqs[&rid].type_id;
+            st.types.note_wait(t);
+            if fcfs_hol {
+                break;
+            }
+            continue;
+        }
+        match st.gpu.alloc(need, route) {
+            AllocOutcome::Granted {
+                blocks,
+                reserved_charged,
+            } => {
+                let r = st.reqs.get_mut(&rid).unwrap();
+                r.blocks.extend(blocks);
+                r.reserved_charged += reserved_charged;
+                r.pulled = false;
+                r.wait_time_us += now_us.saturating_sub(r.queue_enter_us);
+                r.state = if r.remaining_prefill > 0 {
+                    ReqState::Prefilling
+                } else {
+                    ReqState::Running
+                };
+                if reserved_charged > 0 {
+                    st.metrics.counters.reserved_admissions += 1;
+                }
+                match r.state {
+                    ReqState::Prefilling => st.prefilling.push(rid),
+                    _ => st.running.push(rid),
+                }
+                admitted.push(rid);
+                slots -= 1;
+                if needs_growth(&st.reqs[&rid], block_tokens) {
+                    margin += 1;
+                }
+            }
+            AllocOutcome::Deferred => {
+                st.metrics.counters.deferrals += 1;
+                let t = st.reqs[&rid].type_id;
+                st.types.note_wait(t);
+                if fcfs_hol {
+                    break;
+                }
+            }
+        }
+    }
+    st.waiting.retain(|rid| !admitted.contains(rid));
+}
+
+/// Prefix-cache reuse at admission (vLLM-Prefix / Mooncake / TokenCake):
+/// a hit on the shared system prefix removes those tokens from the prefill
+/// debt. CPU-resident hits count separately (they imply an H2D transfer
+/// that the engine charges as extra prefill-equivalent time).
+fn maybe_apply_prefix_cache(
+    st: &mut ServeState,
+    rid: RequestId,
+    now_us: u64,
+) {
+    if !st.cfg.mode.prefix_cache() {
+        return;
+    }
+    let (fresh, prefix_tokens, key) = {
+        let r = &st.reqs[&rid];
+        let fresh = r.remaining_prefill == r.context_tokens
+            && r.tokens_generated == 0
+            && r.blocks.is_empty();
+        let g = st.graph_of(r.app_id);
+        let key = PrefixKey::of_parts(
+            &g.name,
+            st.types.name(r.type_id),
+            r.shared_prefix_tokens,
+        );
+        (fresh, r.shared_prefix_tokens, key)
+    };
+    if !fresh || prefix_tokens == 0 {
+        return;
+    }
+    if let Some(hit) = st.prefix.lookup(key, now_us) {
+        let r = st.reqs.get_mut(&rid).unwrap();
+        let saved = hit.tokens.min(r.remaining_prefill);
+        r.remaining_prefill -= saved;
+        match hit.location {
+            PrefixLocation::Gpu => {
+                st.metrics.counters.prefix_hits_gpu += 1
+            }
+            PrefixLocation::Cpu => {
+                st.metrics.counters.prefix_hits_cpu += 1
+            }
+        }
+    }
+}
+
+/// Record a finished request's shared prefix in the index so later
+/// instances of the same agent type hit it.
+pub fn record_prefix(st: &mut ServeState, rid: RequestId, now_us: u64) {
+    if !st.cfg.mode.prefix_cache() {
+        return;
+    }
+    let r = &st.reqs[&rid];
+    if r.shared_prefix_tokens == 0 {
+        return;
+    }
+    let g = st.graph_of(r.app_id);
+    let key = PrefixKey::of_parts(
+        &g.name,
+        st.types.name(r.type_id),
+        r.shared_prefix_tokens,
+    );
+    let blocks = st.cfg.profile.blocks_for_tokens(r.shared_prefix_tokens);
+    st.prefix.insert(
+        key,
+        blocks,
+        r.shared_prefix_tokens,
+        PrefixLocation::Gpu,
+        now_us,
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Mode as M, ServeConfig};
+    use crate::graph::templates;
+    use crate::workload::SampledLengths;
+
+    fn scales() -> SampledLengths {
+        SampledLengths {
+            prompt_scale: 1.0,
+            gen_scale: 1.0,
+        }
+    }
+
+    fn state(mode: M) -> ServeState {
+        let mut cfg = ServeConfig::default();
+        cfg.mode = mode;
+        let mut st = ServeState::new(cfg);
+        let g = templates::code_writer();
+        st.register_graph(&g);
+        st
+    }
+
+    #[test]
+    fn rho_follows_watermarks() {
+        let mut st = state(M::TokenCake);
+        // Low usage → ρ decreases to min.
+        update_reservations(&mut st);
+        assert!((st.spatial.rho - st.cfg.policy.reserve_min).abs() < 1e-9);
+        // Fill above high watermark → ρ climbs by one step per update.
+        let fill = (st.gpu.total() as f64 * 0.8) as u32;
+        let AllocOutcome::Granted { .. } = st.gpu.alloc(fill, Route::Shared)
+        else {
+            panic!()
+        };
+        st.spawn_app(0, scales(), 0); // need active types for step 2/3
+        let r0 = st.spatial.rho;
+        update_reservations(&mut st);
+        assert!((st.spatial.rho - (r0 + 0.05)).abs() < 1e-9);
+        for _ in 0..10 {
+            update_reservations(&mut st);
+        }
+        assert!(st.spatial.rho <= st.cfg.policy.reserve_max + 1e-9);
+    }
+
+    #[test]
+    fn critical_set_is_top_fraction() {
+        let mut st = state(M::TokenCake);
+        // Spawn a couple of apps so several types are active.
+        st.spawn_app(0, scales(), 0);
+        st.spawn_app(0, scales(), 0);
+        // Force memory pressure so quotas are meaningful.
+        let fill = (st.gpu.total() as f64 * 0.8) as u32;
+        st.gpu.alloc(fill, Route::Shared);
+        update_reservations(&mut st);
+        let n_active = agent_type_scores(&st).len();
+        let expect = ((n_active as f64 * 0.75).ceil() as usize).max(1);
+        assert_eq!(st.spatial.critical_types.len(), expect);
+        assert!(st.gpu.total_quota() > 0);
+        // Reserved pool bounded by ρ_max·N.
+        assert!(
+            st.gpu.total_quota()
+                <= (st.cfg.policy.reserve_max * st.gpu.total() as f64) as u32
+                    + 1
+        );
+    }
+
+    #[test]
+    fn admit_grants_and_transitions_state() {
+        let mut st = state(M::TokenCake);
+        st.spawn_app(0, scales(), 0);
+        st.refresh_priorities(0);
+        admit(&mut st, 0);
+        assert!(st.waiting.is_empty());
+        assert_eq!(st.prefilling.len(), 1);
+        let rid = st.prefilling[0];
+        let r = &st.reqs[&rid];
+        assert_eq!(r.state, ReqState::Prefilling);
+        assert!(!r.blocks.is_empty());
+        assert_eq!(
+            r.blocks.len() as u32,
+            st.cfg.profile.blocks_for_tokens(r.context_tokens)
+        );
+    }
+
+    #[test]
+    fn fcfs_hol_blocks_vllm_but_not_tokencake() {
+        // Two waiting requests; pool only fits the second (smaller) one.
+        for (mode, expect_admitted) in
+            [(M::Vllm, 0usize), (M::TokenCake, 1usize)]
+        {
+            let mut cfg = ServeConfig::default();
+            cfg.mode = mode;
+            cfg.gpu_mem_frac = 0.005; // 65 blocks → 1040 tokens
+            let mut st = ServeState::new(cfg);
+            let g = templates::code_writer();
+            st.register_graph(&g);
+            st.spawn_app(0, scales(), 0);
+            st.spawn_app(0, scales(), 0);
+            // Make the head request huge so it can't fit.
+            let head = *st.waiting.front().unwrap();
+            {
+                let r = st.reqs.get_mut(&head).unwrap();
+                r.context_tokens = 10_000;
+                r.remaining_prefill = 10_000;
+                r.priority = 10.0; // highest priority, still won't fit
+            }
+            let tail = *st.waiting.back().unwrap();
+            st.reqs.get_mut(&tail).unwrap().priority = 1.0;
+            admit(&mut st, 0);
+            let admitted =
+                st.prefilling.len() + st.running.len();
+            assert_eq!(admitted, expect_admitted, "{mode:?}");
+        }
+    }
+
+    #[test]
+    fn critical_type_uses_reserved_route() {
+        let mut st = state(M::TokenCake);
+        st.spawn_app(0, scales(), 0);
+        let rid = *st.waiting.front().unwrap();
+        let t = st.reqs[&rid].type_id;
+        st.spatial.critical_types = vec![t];
+        assert_eq!(route_for(&st, rid), Route::Reserved(t));
+        st.cfg.mode = M::Parrot; // agent-aware but never reserves
+        assert_eq!(route_for(&st, rid), Route::Shared);
+    }
+
+    #[test]
+    fn parrot_allocates_worst_case() {
+        let mut st = state(M::Parrot);
+        st.spawn_app(0, scales(), 0);
+        let rid = *st.waiting.front().unwrap();
+        let paged = st.admission_demand(&st.reqs[&rid]);
+        let parrot = admission_alloc_blocks(&st, rid);
+        assert!(
+            parrot > paged,
+            "worst-case reservation {parrot} must exceed paged {paged}"
+        );
+    }
+
+    #[test]
+    fn prefix_cache_saves_prefill_on_second_instance() {
+        let mut st = state(M::VllmPrefix);
+        st.spawn_app(0, scales(), 0);
+        st.refresh_priorities(0);
+        admit(&mut st, 0);
+        let first = st.prefilling[0];
+        // Finish the first request and record its prefix.
+        record_prefix(&mut st, first, 1000);
+        // Second instance of the same root agent type.
+        st.spawn_app(0, scales(), 2000);
+        let second = *st.waiting.front().unwrap();
+        let before = st.reqs[&second].remaining_prefill;
+        admit(&mut st, 2000);
+        let after = st.reqs[&second].remaining_prefill;
+        let prefix = st.reqs[&second].shared_prefix_tokens;
+        assert_eq!(before - after, prefix);
+        assert_eq!(st.metrics.counters.prefix_hits_gpu, 1);
+    }
+
+    #[test]
+    fn plain_vllm_ignores_prefix_cache() {
+        let mut st = state(M::Vllm);
+        st.spawn_app(0, scales(), 0);
+        admit(&mut st, 0);
+        let first = st.prefilling[0];
+        record_prefix(&mut st, first, 1000);
+        assert!(st.prefix.is_empty(), "vllm mode must not populate index");
+    }
+}

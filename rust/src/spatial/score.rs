@@ -1,0 +1,207 @@
+//! The agent-type score S_a (Eq. 6) — which agent *classes* deserve
+//! reserved KV-cache capacity.
+//!
+//!   S_a = w1·P_a + w2·U_a + w3·H_a + w4·G_a
+//!
+//! * P_a — structural priority: the *maximum* static priority among active
+//!   instances, so a single high-criticality instance protects the type;
+//! * U_a — runtime urgency: how much the system failed to serve the type,
+//!   with preemptions weighted above waits (they signal capacity loss);
+//! * H_a — recomputation cost: log-compressed average context size and
+//!   execution time (types whose caches are expensive to rebuild);
+//! * G_a — graph context: average structural position (depth, fan) of the
+//!   type's active requests.
+//!
+//! Each dimension is normalized to [0,1] across active types before the
+//! weighted sum so no single raw scale dominates.
+
+use crate::coordination::{ReqState, ServeState};
+use crate::kvcache::AgentTypeId;
+use std::collections::HashMap;
+
+/// Aggregated per-type statistics + final score.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TypeStats {
+    pub type_id: AgentTypeId,
+    pub active: u32,
+    pub gpu_blocks: u32,
+    pub p_structural: f64,
+    pub u_urgency: f64,
+    pub h_recompute: f64,
+    pub g_graph: f64,
+    pub score: f64,
+}
+
+/// Compute S_a for every *active* agent type (types with at least one
+/// unfinished request).
+pub fn agent_type_scores(st: &ServeState) -> Vec<TypeStats> {
+    struct Acc {
+        active: u32,
+        gpu_blocks: u32,
+        p_max: f64,
+        ctx_sum: f64,
+        exec_sum: f64,
+        g_sum: f64,
+    }
+    let mut accs: HashMap<AgentTypeId, Acc> = HashMap::new();
+    for r in st.reqs.values() {
+        if r.state == ReqState::Finished {
+            continue;
+        }
+        let a = accs.entry(r.type_id).or_insert(Acc {
+            active: 0,
+            gpu_blocks: 0,
+            p_max: 0.0,
+            ctx_sum: 0.0,
+            exec_sum: 0.0,
+            g_sum: 0.0,
+        });
+        a.active += 1;
+        a.gpu_blocks += if r.state.holds_gpu() {
+            r.blocks.len() as u32
+        } else {
+            0
+        };
+        let stat = r.static_priority
+            + if r.critical_path { 0.3 } else { 0.0 };
+        a.p_max = a.p_max.max(stat);
+        a.ctx_sum += r.context_tokens as f64;
+        a.exec_sum += r.exec_time_us as f64;
+        a.g_sum += r.f_struct;
+    }
+    if accs.is_empty() {
+        return Vec::new();
+    }
+
+    let p = &st.cfg.policy;
+    let mut rows: Vec<TypeStats> = accs
+        .into_iter()
+        .map(|(t, a)| {
+            let n = a.active.max(1) as f64;
+            let u_raw = p.urgency_preempt_coef
+                * st.types.preempts[t as usize]
+                + p.urgency_wait_coef * st.types.waits[t as usize];
+            // Log-compress token count and execution time (§5.2).
+            let avg_ctx = a.ctx_sum / n;
+            let avg_exec_s = a.exec_sum / n / 1e6;
+            let h_raw = (1.0 + avg_ctx).ln() * (1.0 + avg_exec_s).ln().max(0.1);
+            TypeStats {
+                type_id: t,
+                active: a.active,
+                gpu_blocks: a.gpu_blocks,
+                p_structural: a.p_max,
+                u_urgency: u_raw,
+                h_recompute: h_raw,
+                g_graph: a.g_sum / n,
+                score: 0.0,
+            }
+        })
+        .collect();
+
+    // Normalize each dimension across types, then weight.
+    let max_of = |f: fn(&TypeStats) -> f64, rows: &[TypeStats]| {
+        rows.iter().map(f).fold(0.0f64, f64::max).max(1e-9)
+    };
+    let (pm, um, hm, gm) = (
+        max_of(|r| r.p_structural, &rows),
+        max_of(|r| r.u_urgency, &rows),
+        max_of(|r| r.h_recompute, &rows),
+        max_of(|r| r.g_graph, &rows),
+    );
+    for r in rows.iter_mut() {
+        r.score = p.w_structural * (r.p_structural / pm)
+            + p.w_urgency * (r.u_urgency / um)
+            + p.w_recompute * (r.h_recompute / hm)
+            + p.w_graph * (r.g_graph / gm);
+    }
+    rows.sort_by_key(|r| r.type_id);
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ServeConfig;
+    use crate::graph::templates;
+    use crate::workload::SampledLengths;
+
+    fn state_with_apps(n: usize) -> ServeState {
+        let mut st = ServeState::new(ServeConfig::default());
+        let g = templates::code_writer();
+        let t = st.register_graph(&g);
+        let scales = SampledLengths {
+            prompt_scale: 1.0,
+            gen_scale: 1.0,
+        };
+        for _ in 0..n {
+            st.spawn_app(t, scales, 0);
+        }
+        st
+    }
+
+    #[test]
+    fn empty_state_no_scores() {
+        let st = ServeState::new(ServeConfig::default());
+        assert!(agent_type_scores(&st).is_empty());
+    }
+
+    #[test]
+    fn scores_bounded_and_per_active_type() {
+        let st = state_with_apps(3);
+        let scores = agent_type_scores(&st);
+        // Only the root type (planner) has live requests so far.
+        assert_eq!(scores.len(), 1);
+        for s in &scores {
+            assert!(s.score > 0.0 && s.score <= 1.0 + 1e-9, "{s:?}");
+            assert_eq!(s.active, 3);
+        }
+    }
+
+    #[test]
+    fn preemptions_raise_urgency_and_score() {
+        let mut st = state_with_apps(2);
+        let base = agent_type_scores(&st)[0].score;
+        let t = agent_type_scores(&st)[0].type_id;
+        for _ in 0..5 {
+            st.types.note_preempt(t);
+        }
+        let bumped = agent_type_scores(&st)[0].score;
+        assert!(bumped >= base, "{base} -> {bumped}");
+        // Preemptions weigh more than the same number of waits.
+        let mut st2 = state_with_apps(2);
+        for _ in 0..5 {
+            st2.types.note_wait(t);
+        }
+        let s_preempt = {
+            let r = &agent_type_scores(&st)[0];
+            r.u_urgency
+        };
+        let s_wait = {
+            let r = &agent_type_scores(&st2)[0];
+            r.u_urgency
+        };
+        assert!(s_preempt > s_wait);
+    }
+
+    #[test]
+    fn single_critical_instance_protects_type() {
+        let mut st = state_with_apps(2);
+        // Degrade one instance's static priority; P_a should use the max.
+        let ids: Vec<_> = st.reqs.keys().copied().collect();
+        st.reqs.get_mut(&ids[0]).unwrap().static_priority = 0.1;
+        let s = &agent_type_scores(&st)[0];
+        assert!(s.p_structural >= 0.9, "max static+crit = {}", s.p_structural);
+    }
+
+    #[test]
+    fn larger_contexts_raise_recompute_cost() {
+        let mut st = state_with_apps(1);
+        let low = agent_type_scores(&st)[0].h_recompute;
+        for r in st.reqs.values_mut() {
+            r.context_tokens *= 20;
+            r.exec_time_us = 10_000_000;
+        }
+        let high = agent_type_scores(&st)[0].h_recompute;
+        assert!(high > low);
+    }
+}

@@ -1,0 +1,107 @@
+//! Dynamic tool-time forecasting (§4.1, Eq. 1).
+//!
+//! Per-function-type estimate lifecycle:
+//! 1. no history, no user estimate → conservative system default;
+//! 2. no history, user estimate → the user estimate;
+//! 3. history only → EWMA of observed durations;
+//! 4. both → blend: t = α·t_user + (1−α)·t_history  (Eq. 1).
+
+use std::collections::HashMap;
+
+/// Per-function-type execution time model.
+#[derive(Debug, Clone)]
+pub struct Forecaster {
+    /// Eq. 1 blend weight α on the user estimate.
+    alpha_user: f64,
+    /// EWMA smoothing factor for new observations.
+    ewma: f64,
+    /// System-wide conservative default (µs).
+    default_us: u64,
+    /// name → smoothed observed duration (µs).
+    history: HashMap<String, f64>,
+    /// name → observation count.
+    counts: HashMap<String, u64>,
+}
+
+impl Forecaster {
+    pub fn new(alpha_user: f64, ewma: f64, default_us: u64) -> Self {
+        assert!((0.0..=1.0).contains(&alpha_user));
+        assert!((0.0..=1.0).contains(&ewma));
+        Self {
+            alpha_user,
+            ewma,
+            default_us,
+            history: HashMap::new(),
+            counts: HashMap::new(),
+        }
+    }
+
+    /// Predict the duration of a call of type `name` with an optional
+    /// user-supplied estimate.
+    pub fn predict_us(&self, name: &str, user_estimate_us: Option<u64>) -> u64 {
+        match (self.history.get(name), user_estimate_us) {
+            (Some(&h), Some(u)) => {
+                (self.alpha_user * u as f64 + (1.0 - self.alpha_user) * h)
+                    as u64
+            }
+            (Some(&h), None) => h as u64,
+            (None, Some(u)) => u,
+            (None, None) => self.default_us,
+        }
+    }
+
+    /// Feed back an observed execution (call_finish → Eq. 1 refinement).
+    pub fn observe_us(&mut self, name: &str, actual_us: u64) {
+        let c = self.counts.entry(name.to_string()).or_insert(0);
+        *c += 1;
+        let h = self.history.entry(name.to_string()).or_insert(0.0);
+        if *c == 1 {
+            *h = actual_us as f64;
+        } else {
+            *h = (1.0 - self.ewma) * *h + self.ewma * actual_us as f64;
+        }
+    }
+
+    pub fn observations(&self, name: &str) -> u64 {
+        self.counts.get(name).copied().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_then_user_then_history() {
+        let mut f = Forecaster::new(0.4, 0.3, 2_000_000);
+        // No info at all → default.
+        assert_eq!(f.predict_us("git", None), 2_000_000);
+        // User estimate wins when no history.
+        assert_eq!(f.predict_us("git", Some(500_000)), 500_000);
+        // First observation seeds the EWMA directly.
+        f.observe_us("git", 100_000);
+        assert_eq!(f.predict_us("git", None), 100_000);
+        // Eq. 1 blend once both exist: 0.4*500k + 0.6*100k = 260k.
+        assert_eq!(f.predict_us("git", Some(500_000)), 260_000);
+    }
+
+    #[test]
+    fn ewma_converges_toward_observations() {
+        let mut f = Forecaster::new(0.4, 0.3, 1_000);
+        f.observe_us("t", 100);
+        for _ in 0..50 {
+            f.observe_us("t", 1_000);
+        }
+        let p = f.predict_us("t", None);
+        assert!((900..=1_000).contains(&p), "p={p}");
+        assert_eq!(f.observations("t"), 51);
+    }
+
+    #[test]
+    fn types_are_independent_streams() {
+        let mut f = Forecaster::new(0.5, 0.5, 7);
+        f.observe_us("a", 100);
+        assert_eq!(f.predict_us("b", None), 7);
+        assert_eq!(f.predict_us("a", None), 100);
+    }
+}

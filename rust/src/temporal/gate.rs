@@ -1,0 +1,385 @@
+//! The opportunistic offload policy (§4.2, Algorithm 1).
+//!
+//! Offloading a stalled agent's KV cache is worthwhile only when (a) the
+//! predicted stall covers a round-trip transfer, (b) a waiting request can
+//! actually use the freed blocks, and (c) the later upload can be prepared
+//! without displacing more important work. Four hard rejections run before
+//! any scoring; survivors get a composite soft score.
+
+use crate::config::{Mode, SelectionPolicy};
+use crate::coordination::{PressureSnapshot, ReqState, RequestId, ServeState};
+
+/// Why the gate rejected an offload (observability + tests + Fig 16).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RejectReason {
+    /// CPU pool cannot hold the cache.
+    CpuCapacity,
+    /// Predicted stall shorter than the round-trip transfer (Alg 1 line 4).
+    StallTooShort,
+    /// No waiting request fits the freed blocks / token capacity.
+    NoWaitingFit,
+    /// GPU pressure below the configured watermark — freed blocks would
+    /// just sit idle (Fig 16's selectivity principle).
+    PressureBelowWatermark,
+    /// Composite score under threshold (critical / near-done / churny).
+    ScoreTooLow,
+}
+
+/// Gate verdict.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum OffloadDecision {
+    Accept {
+        score: f64,
+        /// The waiting request the freed blocks would admit.
+        beneficiary: RequestId,
+    },
+    Reject(RejectReason),
+}
+
+impl OffloadDecision {
+    pub fn accepted(&self) -> bool {
+        matches!(self, OffloadDecision::Accept { .. })
+    }
+}
+
+/// Search the waiting queue for a request whose admission demand fits in
+/// `freed_blocks` and whose total remaining work fits `token_capacity`
+/// (Algorithm 1's FindFirstFitRequest, generalized to the three §7.5
+/// policies).
+pub fn find_fit(
+    st: &ServeState,
+    freed_blocks: u32,
+    token_capacity: u64,
+    policy: SelectionPolicy,
+) -> Option<RequestId> {
+    let fits = |rid: &RequestId| -> Option<(RequestId, u32, f64)> {
+        let r = st.reqs.get(rid)?;
+        if r.state != ReqState::Waiting {
+            return None;
+        }
+        let demand = st.admission_demand(r);
+        if demand == 0 || demand > freed_blocks {
+            return None;
+        }
+        let remaining_work = r.remaining_prefill as u64
+            + (r.total_gen_target() - r.tokens_generated) as u64;
+        if remaining_work > token_capacity {
+            return None;
+        }
+        Some((*rid, demand, r.priority))
+    };
+
+    match policy {
+        SelectionPolicy::FirstFit => {
+            st.waiting.iter().find_map(|rid| fits(rid).map(|f| f.0))
+        }
+        SelectionPolicy::BestFit => st
+            .waiting
+            .iter()
+            .filter_map(fits)
+            .min_by_key(|&(_, demand, _)| freed_blocks - demand)
+            .map(|f| f.0),
+        SelectionPolicy::PriorityFirst => st
+            .waiting
+            .iter()
+            .filter_map(fits)
+            .max_by(|a, b| a.2.total_cmp(&b.2))
+            .map(|f| f.0),
+    }
+}
+
+/// Evaluate whether to offload the stalled request `rid` (Algorithm 1 +
+/// the hard-rejection / soft-scoring pipeline of §4.2).
+pub fn evaluate_offload(
+    st: &ServeState,
+    snap: &PressureSnapshot,
+    rid: RequestId,
+    now_us: u64,
+) -> OffloadDecision {
+    let r = &st.reqs[&rid];
+    debug_assert_eq!(r.state, ReqState::Stalled);
+    let p = &st.cfg.policy;
+    let profile = &st.cfg.profile;
+    let n_blocks = r.blocks.len() as u32;
+
+    // InferCept baseline: intercept-and-swap, no cost model — offload
+    // whenever CPU space exists (Table 2's "Min-Waste" reduced to a
+    // capacity check; it has no FC duration prediction).
+    if st.cfg.mode == Mode::Infercept {
+        if snap.cpu_free < n_blocks {
+            return OffloadDecision::Reject(RejectReason::CpuCapacity);
+        }
+        // Still needs *some* beneficiary to be meaningful for admission,
+        // but InferCept swaps regardless; use self as placeholder.
+        return OffloadDecision::Accept {
+            score: 1.0,
+            beneficiary: rid,
+        };
+    }
+
+    // ---- Hard rejection 1: CPU capacity. ----
+    if snap.cpu_free < n_blocks {
+        return OffloadDecision::Reject(RejectReason::CpuCapacity);
+    }
+
+    // ---- Hard rejection 2: stall too short (Alg 1 lines 2–5). ----
+    let t_transfer = profile.round_trip_us(n_blocks);
+    let fc = r.fc.as_ref().expect("stalled without fc");
+    let t_fc_remaining = fc.predicted_end_us.saturating_sub(now_us);
+    if t_fc_remaining <= t_transfer {
+        return OffloadDecision::Reject(RejectReason::StallTooShort);
+    }
+    let t_window = t_fc_remaining - t_transfer;
+
+    // ---- Hard rejection 3: waiting-request fit (Alg 1 lines 7–10). ----
+    // Token capacity from the *system's* observed decode throughput (the
+    // paper's formulation): within the window the freed blocks can host
+    // that much useful work. A discounted share (÷ sqrt(batch)) tempers
+    // the batch-wide optimism that §7.3 identifies as migration churn,
+    // without collapsing to the overly pessimistic per-sequence rate.
+    let active = (st.running.len() + st.prefilling.len()).max(1) as f64;
+    let discounted_tps = st.throughput.tokens_per_sec() / active.sqrt();
+    let n_capacity = (t_window as f64 / 1e6 * discounted_tps) as u64;
+    let Some(beneficiary) =
+        find_fit(st, n_blocks + snap.gpu_free, n_capacity, p.selection)
+    else {
+        return OffloadDecision::Reject(RejectReason::NoWaitingFit);
+    };
+
+    // ---- Hard rejection 4: pressure watermark (Fig 16). ----
+    // Freed blocks are useful only when someone is waiting for memory:
+    // demand from the waiting queue must exceed the watermark fraction,
+    // and the pool must actually be under usage pressure.
+    if snap.waiting_pressure() < p.pressure_watermark
+        || snap.usage < p.offload_usage_threshold
+    {
+        return OffloadDecision::Reject(RejectReason::PressureBelowWatermark);
+    }
+
+    // ---- Soft scoring. ----
+    let stall_ratio = t_fc_remaining as f64 / t_transfer.max(1) as f64;
+    // Dominant positive term: stalls long relative to transfer.
+    let margin_term = ((stall_ratio - 1.0) / 4.0).clamp(0.0, 1.0);
+    let pressure_term = snap.usage.clamp(0.0, 1.0);
+    let fit_quality = {
+        let demand = st.admission_demand(&st.reqs[&beneficiary]);
+        (demand as f64 / n_blocks.max(1) as f64).clamp(0.0, 1.0)
+    };
+    let cpu_term =
+        (snap.cpu_free as f64 / st.cpu.total().max(1) as f64).clamp(0.0, 1.0);
+
+    let mut score = 0.40 * margin_term
+        + 0.30 * pressure_term
+        + 0.20 * fit_quality
+        + 0.10 * cpu_term;
+
+    // Penalties — only when the mode is agent-aware (the §7.3 "offload"
+    // ablation runs the temporal scheduler *without* agent context).
+    if st.cfg.mode.agent_aware() {
+        let is_critical = r.critical_path
+            || st.spatial.critical_types.contains(&r.type_id);
+        if is_critical {
+            score -= p.critical_penalty * st.importance(r);
+        }
+    }
+    if r.progress() > 0.8 {
+        score -= p.near_completion_penalty;
+    }
+    score -= p.churn_penalty * r.migrations as f64;
+
+    // Emergency exception: severe GPU pressure + large stall margin
+    // overrides even a high-importance penalty.
+    let emergency = snap.usage >= p.emergency_usage
+        && stall_ratio >= p.emergency_margin;
+
+    if score >= p.score_threshold || emergency {
+        OffloadDecision::Accept { score, beneficiary }
+    } else {
+        OffloadDecision::Reject(RejectReason::ScoreTooLow)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Mode, ServeConfig};
+    use crate::coordination::FcRt;
+    use crate::graph::templates;
+    use crate::kvcache::{AllocOutcome, Route};
+    use crate::workload::SampledLengths;
+
+    /// Build a state with one stalled request holding `blocks` blocks and
+    /// one waiting request, under controllable pressure.
+    fn setup(gpu_fill: f64) -> (ServeState, RequestId) {
+        let mut cfg = ServeConfig::default();
+        cfg.mode = Mode::TokenCake;
+        // Small pool so a single waiting request constitutes real pressure.
+        cfg.gpu_mem_frac = 0.01; // 130 blocks
+        let mut st = ServeState::new(cfg);
+        let g = templates::code_writer();
+        let t = st.register_graph(&g);
+        let scales = SampledLengths {
+            prompt_scale: 1.0,
+            gen_scale: 1.0,
+        };
+        // Waiting request (beneficiary candidate).
+        st.spawn_app(t, scales, 0);
+        // Stalled request: spawn a second app and hand-place its root.
+        let (app2, _) = st.spawn_app(t, scales, 0);
+        let rid = st.apps[&app2].node_req[0].unwrap();
+        st.waiting.retain(|&x| x != rid);
+        // Fill the pool to the requested usage.
+        let total = st.gpu.total();
+        let fill = (total as f64 * gpu_fill) as u32;
+        let AllocOutcome::Granted { blocks, .. } =
+            st.gpu.alloc(fill, Route::Shared)
+        else {
+            panic!()
+        };
+        // Give the stalled request 64 of those blocks.
+        let r = st.reqs.get_mut(&rid).unwrap();
+        r.state = ReqState::Stalled;
+        r.blocks = blocks[..64.min(blocks.len())].to_vec();
+        r.fc = Some(FcRt {
+            name: "web_search".into(),
+            started_us: 0,
+            predicted_end_us: 5_000_000, // 5 s stall
+            tool_done: false,
+            finished_us: 0,
+            result_tokens: 480,
+            user_estimate_us: None,
+        });
+        st.refresh_priorities(0);
+        (st, rid)
+    }
+
+    #[test]
+    fn accepts_long_stall_under_pressure() {
+        let (mut st, rid) = setup(0.9);
+        st.reqs.get_mut(&rid).unwrap().critical_path = false;
+        let snap = st.snapshot();
+        let d = evaluate_offload(&st, &snap, rid, 0);
+        assert!(d.accepted(), "{d:?}");
+    }
+
+    #[test]
+    fn rejects_short_stall() {
+        let (mut st, rid) = setup(0.9);
+        st.reqs.get_mut(&rid).unwrap().fc.as_mut().unwrap()
+            .predicted_end_us = 10_000; // 10 ms << round trip
+        let snap = st.snapshot();
+        assert_eq!(
+            evaluate_offload(&st, &snap, rid, 0),
+            OffloadDecision::Reject(RejectReason::StallTooShort)
+        );
+    }
+
+    #[test]
+    fn rejects_when_pressure_low() {
+        let (st, rid) = setup(0.1); // pool nearly empty
+        let snap = st.snapshot();
+        assert_eq!(
+            evaluate_offload(&st, &snap, rid, 0),
+            OffloadDecision::Reject(RejectReason::PressureBelowWatermark)
+        );
+    }
+
+    #[test]
+    fn rejects_without_waiting_requests() {
+        let (mut st, rid) = setup(0.9);
+        st.waiting.clear();
+        let snap = st.snapshot();
+        assert_eq!(
+            evaluate_offload(&st, &snap, rid, 0),
+            OffloadDecision::Reject(RejectReason::NoWaitingFit)
+        );
+    }
+
+    #[test]
+    fn rejects_when_cpu_full() {
+        let (mut st, rid) = setup(0.9);
+        let all = st.cpu.free_blocks();
+        st.cpu.alloc(all).unwrap();
+        let snap = st.snapshot();
+        assert_eq!(
+            evaluate_offload(&st, &snap, rid, 0),
+            OffloadDecision::Reject(RejectReason::CpuCapacity)
+        );
+    }
+
+    #[test]
+    fn churn_penalty_blocks_repeat_migrators() {
+        let (mut st, rid) = setup(0.9);
+        {
+            let r = st.reqs.get_mut(&rid).unwrap();
+            r.critical_path = false;
+            r.migrations = 5;
+        }
+        let snap = st.snapshot();
+        assert_eq!(
+            evaluate_offload(&st, &snap, rid, 0),
+            OffloadDecision::Reject(RejectReason::ScoreTooLow)
+        );
+    }
+
+    #[test]
+    fn critical_penalty_requires_agent_awareness() {
+        // Same critical request: rejected under TokenCake, accepted under
+        // OffloadOnly (agent-blind), matching §7.3's ablation semantics.
+        let (mut st, rid) = setup(0.85);
+        {
+            let r = st.reqs.get_mut(&rid).unwrap();
+            r.critical_path = true;
+            r.priority = 1.2; // high importance
+        }
+        let snap = st.snapshot();
+        let d_tc = evaluate_offload(&st, &snap, rid, 0);
+        st.cfg.mode = Mode::OffloadOnly;
+        let d_ob = evaluate_offload(&st, &snap, rid, 0);
+        assert!(!d_tc.accepted(), "critical agent must be protected");
+        assert!(d_ob.accepted(), "agent-blind mode offloads it anyway");
+    }
+
+    #[test]
+    fn emergency_overrides_critical_penalty() {
+        let (mut st, rid) = setup(0.99);
+        {
+            let r = st.reqs.get_mut(&rid).unwrap();
+            r.critical_path = true;
+            r.priority = 1.2;
+            // Very long stall → large margin.
+            r.fc.as_mut().unwrap().predicted_end_us = 60_000_000;
+        }
+        let snap = st.snapshot();
+        assert!(evaluate_offload(&st, &snap, rid, 0).accepted());
+    }
+
+    #[test]
+    fn infercept_skips_cost_model() {
+        let (mut st, rid) = setup(0.1); // no pressure at all
+        st.cfg.mode = Mode::Infercept;
+        st.reqs.get_mut(&rid).unwrap().fc.as_mut().unwrap()
+            .predicted_end_us = 10_000; // even short stalls
+        let snap = st.snapshot();
+        assert!(evaluate_offload(&st, &snap, rid, 0).accepted());
+    }
+
+    #[test]
+    fn find_fit_policies_differ() {
+        let (st, _) = setup(0.5);
+        // One waiting request exists; all policies find it.
+        let cap = u64::MAX;
+        let free = st.gpu.total();
+        for pol in [
+            SelectionPolicy::FirstFit,
+            SelectionPolicy::BestFit,
+            SelectionPolicy::PriorityFirst,
+        ] {
+            assert!(find_fit(&st, free, cap, pol).is_some(), "{pol:?}");
+        }
+        // Nothing fits in zero blocks.
+        assert!(find_fit(&st, 0, cap, SelectionPolicy::FirstFit).is_none());
+        // Nothing fits in zero token capacity.
+        assert!(find_fit(&st, free, 0, SelectionPolicy::FirstFit).is_none());
+    }
+}

@@ -1,0 +1,386 @@
+//! The Temporal Scheduler (§4): event-driven offload and predictive upload.
+//!
+//! A function call makes both the idle interval *and* the resume point of a
+//! KV cache explicitly visible. This module converts that signal into
+//! memory decisions:
+//!
+//! * [`call_start`] / [`call_finish`] — the two runtime events (§4.1,
+//!   mirrored by the HTTP endpoints in `server`);
+//! * [`Forecaster`] — the Eq. 1 estimate blending user hints with an EWMA
+//!   of observed durations;
+//! * [`gate`] — the opportunistic offload policy (Algorithm 1 + scoring);
+//! * [`upload`] — Eq. 3/Eq. 4 budgeted gradual reservation + transfer;
+//! * [`on_transfer_done`] — completion of either transfer direction.
+
+mod forecast;
+pub mod gate;
+pub mod upload;
+
+pub use forecast::Forecaster;
+pub use gate::{evaluate_offload, find_fit, OffloadDecision, RejectReason};
+pub use upload::{try_immediate_upload, upload_budget, upload_phase};
+
+
+use crate::coordination::{
+    Action, FcRt, PressureSnapshot, ReqState, RequestId, ServeState,
+};
+use crate::kvcache::{Direction, TransferId};
+
+/// What the engine should do after a `call_finish` event.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FinishDisposition {
+    /// KV is on GPU — the request re-enters the waiting queue immediately.
+    ResumeNow,
+    /// KV is on CPU or in flight — resume happens when the upload lands.
+    AwaitUpload,
+}
+
+/// `call_start` (§6.2): the request stalls on a function call. Predicts
+/// the duration (Eq. 1), records the lifecycle state, and leaves the KV
+/// resident — the offload decision happens in the next scheduling step.
+pub fn call_start(
+    st: &mut ServeState,
+    rid: RequestId,
+    name: &str,
+    user_estimate_us: Option<u64>,
+    result_tokens: u32,
+    now_us: u64,
+) {
+    let predicted =
+        st.forecaster.predict_us(name, user_estimate_us);
+    let r = st.reqs.get_mut(&rid).unwrap();
+    debug_assert!(matches!(r.state, ReqState::Running));
+    r.state = ReqState::Stalled;
+    r.offload_evaluated = false;
+    r.fc = Some(FcRt {
+        name: name.to_string(),
+        started_us: now_us,
+        predicted_end_us: now_us + predicted,
+        tool_done: false,
+        finished_us: 0,
+        result_tokens,
+        user_estimate_us,
+    });
+}
+
+/// `call_finish` (§6.2): the tool returned. Feeds the forecaster and
+/// resolves the request's residency.
+pub fn call_finish(
+    st: &mut ServeState,
+    rid: RequestId,
+    now_us: u64,
+) -> FinishDisposition {
+    let (name, started, predicted_end, state) = {
+        let r = st.reqs.get_mut(&rid).unwrap();
+        let fc = r.fc.as_mut().expect("call_finish without call_start");
+        fc.tool_done = true;
+        fc.finished_us = now_us;
+        (
+            fc.name.clone(),
+            fc.started_us,
+            fc.predicted_end_us,
+            r.state,
+        )
+    };
+    st.forecaster.observe_us(&name, now_us - started);
+
+    match state {
+        ReqState::Stalled => {
+            resume_from_fc(st, rid, now_us);
+            FinishDisposition::ResumeNow
+        }
+        ReqState::Uploaded => {
+            resume_from_fc(st, rid, now_us);
+            FinishDisposition::ResumeNow
+        }
+        ReqState::Offloaded => {
+            // Tool returned earlier than predicted → immediate upload to
+            // ensure correctness (§4.1).
+            if now_us < predicted_end {
+                st.metrics.counters.early_returns += 1;
+            }
+            try_immediate_upload(st, rid, now_us);
+            FinishDisposition::AwaitUpload
+        }
+        ReqState::PendingOffload | ReqState::PendingUpload => {
+            // Transfer in flight; the completion handler will chain the
+            // upload / resume.
+            FinishDisposition::AwaitUpload
+        }
+        other => unreachable!("call_finish in state {other:?}"),
+    }
+}
+
+/// Move a finished function call's request back into the waiting queue:
+/// the next generation phase begins, with the tool result appended to the
+/// context (tokens that must be prefilled and may need new blocks — the
+/// resume-time contention the Spatial Scheduler manages).
+pub fn resume_from_fc(st: &mut ServeState, rid: RequestId, now_us: u64) {
+    let r = st.reqs.get_mut(&rid).unwrap();
+    let fc = r.fc.take().expect("resume without fc");
+    debug_assert!(fc.tool_done);
+    r.cur_phase += 1;
+    r.gen_in_phase = 0;
+    r.context_tokens += fc.result_tokens;
+    r.remaining_prefill += fc.result_tokens;
+    r.state = ReqState::Waiting;
+    r.queue_enter_us = now_us;
+    st.waiting.push_back(rid);
+}
+
+/// Phase 3 of the scheduling step (§3.2): uploads first (they have
+/// deadlines), then offload evaluation for newly stalled requests.
+pub fn run_phase(
+    st: &mut ServeState,
+    snap: &PressureSnapshot,
+    now_us: u64,
+) {
+    upload_phase(st, snap, now_us);
+
+    // Evaluate newly stalled requests for offload.
+    let newly_stalled: Vec<RequestId> = st
+        .reqs
+        .values()
+        .filter(|r| r.state == ReqState::Stalled && !r.offload_evaluated)
+        .map(|r| r.id)
+        .collect();
+    for rid in newly_stalled {
+        let decision = evaluate_offload(st, snap, rid, now_us);
+        st.reqs.get_mut(&rid).unwrap().offload_evaluated = true;
+        match decision {
+            OffloadDecision::Accept { beneficiary, .. } => {
+                issue_offload(st, rid, now_us);
+                // The freed blocks exist *for* this waiting request: pull
+                // it to the head of the queue so admission converts the
+                // offload into scheduled work. (This is exactly where
+                // best_fit's reordering disrupts the Spatial Scheduler's
+                // order — the §7.5 finding.)
+                if beneficiary != rid {
+                    st.waiting.retain(|&x| x != beneficiary);
+                    st.waiting.push_front(beneficiary);
+                    if let Some(b) = st.reqs.get_mut(&beneficiary) {
+                        b.pulled = true;
+                    }
+                }
+            }
+            OffloadDecision::Reject(_) => {
+                st.metrics.counters.offloads_rejected += 1;
+            }
+        }
+    }
+}
+
+/// Fire the D2H transfer: CPU blocks allocated, GPU blocks pending-free.
+pub fn issue_offload(st: &mut ServeState, rid: RequestId, now_us: u64) {
+    let n = st.reqs[&rid].blocks.len() as u32;
+    let Some(cpu_blocks) = st.cpu.alloc(n) else {
+        // CPU filled up between gate and issue — abandon.
+        st.metrics.counters.offloads_rejected += 1;
+        return;
+    };
+    let (gpu_blocks, charged, type_id) = {
+        let r = st.reqs.get_mut(&rid).unwrap();
+        debug_assert_eq!(r.state, ReqState::Stalled);
+        r.state = ReqState::PendingOffload;
+        r.cpu_blocks = cpu_blocks.clone();
+        (
+            std::mem::take(&mut r.blocks),
+            std::mem::take(&mut r.reserved_charged),
+            r.type_id,
+        )
+    };
+    st.gpu.mark_pending_free(&gpu_blocks, charged, Some(type_id));
+    let completes = now_us + st.cfg.profile.offload_us(n);
+    let xfer = st.ledger.issue(
+        rid.0,
+        Direction::D2H,
+        gpu_blocks,
+        cpu_blocks,
+        now_us,
+        completes,
+    );
+    st.metrics.offload_count += 1;
+    st.outbox.push(Action::TransferIssued {
+        xfer,
+        completes_us: completes,
+    });
+}
+
+/// Handle a completed transfer (engine event). Returns a request that
+/// became ready to resume, if any.
+pub fn on_transfer_done(
+    st: &mut ServeState,
+    xfer: TransferId,
+    now_us: u64,
+) -> Option<RequestId> {
+    let t = st.ledger.complete(xfer)?;
+    let rid = RequestId(t.req_id);
+    match t.dir {
+        Direction::D2H => {
+            // Blocks become physically reusable.
+            st.gpu.complete_pending(t.gpu_blocks);
+            let tool_done = {
+                let r = st.reqs.get_mut(&rid).unwrap();
+                debug_assert_eq!(r.state, ReqState::PendingOffload);
+                r.state = ReqState::Offloaded;
+                r.fc.as_ref().map(|f| f.tool_done).unwrap_or(false)
+            };
+            if tool_done {
+                // Tool already returned — immediate turnaround.
+                try_immediate_upload(st, rid, now_us);
+            }
+            None
+        }
+        Direction::H2D => {
+            // Destination blocks become the request's live KV.
+            let tool_done = {
+                let r = st.reqs.get_mut(&rid).unwrap();
+                debug_assert_eq!(r.state, ReqState::PendingUpload);
+                r.blocks = t.gpu_blocks;
+                r.reserved_charged = r.upload_reserved_charged;
+                r.upload_reserved_charged = 0;
+                r.state = ReqState::Uploaded;
+                r.migrations += 1;
+                r.fc.as_ref().map(|f| f.tool_done).unwrap_or(false)
+            };
+            st.release_cpu(rid);
+            if tool_done {
+                resume_from_fc(st, rid, now_us);
+                Some(rid)
+            } else {
+                None
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Mode as M, ServeConfig};
+    use crate::graph::templates;
+    use crate::kvcache::{AllocOutcome, Route};
+    use crate::workload::SampledLengths;
+
+    fn running_state() -> (ServeState, RequestId) {
+        let mut cfg = ServeConfig::default();
+        cfg.mode = M::TokenCake;
+        let mut st = ServeState::new(cfg);
+        let g = templates::rag();
+        let t = st.register_graph(&g);
+        let scales = SampledLengths {
+            prompt_scale: 1.0,
+            gen_scale: 1.0,
+        };
+        let (app, _) = st.spawn_app(t, scales, 0);
+        let rid = st.apps[&app].node_req[0].unwrap();
+        st.waiting.retain(|&x| x != rid);
+        // Simulate prior admission: allocate blocks, mark running.
+        let n = st.cfg.profile.blocks_for_tokens(
+            st.reqs[&rid].context_tokens,
+        );
+        let AllocOutcome::Granted { blocks, .. } =
+            st.gpu.alloc(n, Route::Shared)
+        else {
+            panic!()
+        };
+        let r = st.reqs.get_mut(&rid).unwrap();
+        r.blocks = blocks;
+        r.remaining_prefill = 0;
+        r.state = ReqState::Running;
+        st.running.push(rid);
+        (st, rid)
+    }
+
+    #[test]
+    fn full_fc_lifecycle_without_offload() {
+        let (mut st, rid) = running_state();
+        st.running.retain(|&x| x != rid);
+        call_start(&mut st, rid, "web_search", Some(3_000_000), 480, 1000);
+        assert_eq!(st.reqs[&rid].state, ReqState::Stalled);
+        assert_eq!(
+            st.reqs[&rid].fc.as_ref().unwrap().predicted_end_us,
+            3_001_000
+        );
+        let d = call_finish(&mut st, rid, 2_500_000);
+        assert_eq!(d, FinishDisposition::ResumeNow);
+        let r = &st.reqs[&rid];
+        assert_eq!(r.state, ReqState::Waiting);
+        assert_eq!(r.cur_phase, 1);
+        assert_eq!(r.remaining_prefill, 480);
+        assert!(st.waiting.contains(&rid));
+        // Forecaster learned the observation.
+        assert_eq!(st.forecaster.observations("web_search"), 1);
+    }
+
+    #[test]
+    fn offload_then_upload_roundtrip() {
+        let (mut st, rid) = running_state();
+        st.running.retain(|&x| x != rid);
+        call_start(&mut st, rid, "web_search", Some(30_000_000), 480, 0);
+        let n_before = st.reqs[&rid].blocks.len();
+        issue_offload(&mut st, rid, 0);
+        assert_eq!(st.reqs[&rid].state, ReqState::PendingOffload);
+        assert_eq!(st.gpu.pending_free_blocks() as usize, n_before);
+        // D2H completes.
+        let xfer = match st.outbox.pop().unwrap() {
+            Action::TransferIssued { xfer, .. } => xfer,
+        };
+        assert!(on_transfer_done(&mut st, xfer, 10_000).is_none());
+        assert_eq!(st.reqs[&rid].state, ReqState::Offloaded);
+        assert_eq!(st.gpu.pending_free_blocks(), 0);
+        assert_eq!(st.cpu.used_blocks() as usize, n_before);
+        // Tool returns early → immediate upload.
+        let d = call_finish(&mut st, rid, 20_000);
+        assert_eq!(d, FinishDisposition::AwaitUpload);
+        assert_eq!(st.metrics.counters.early_returns, 1);
+        assert_eq!(st.reqs[&rid].state, ReqState::PendingUpload);
+        // H2D completes → resume.
+        let xfer = match st.outbox.pop().unwrap() {
+            Action::TransferIssued { xfer, .. } => xfer,
+        };
+        let resumed = on_transfer_done(&mut st, xfer, 30_000);
+        assert_eq!(resumed, Some(rid));
+        let r = &st.reqs[&rid];
+        assert_eq!(r.state, ReqState::Waiting);
+        assert_eq!(r.blocks.len(), n_before);
+        assert_eq!(r.migrations, 1);
+        assert_eq!(st.cpu.used_blocks(), 0);
+        assert_eq!(st.metrics.offload_count, 1);
+        assert_eq!(st.metrics.upload_count, 1);
+    }
+
+    #[test]
+    fn tool_finish_during_offload_chains_upload() {
+        let (mut st, rid) = running_state();
+        st.running.retain(|&x| x != rid);
+        call_start(&mut st, rid, "git", Some(30_000_000), 96, 0);
+        issue_offload(&mut st, rid, 0);
+        // Tool returns while D2H still in flight.
+        let d = call_finish(&mut st, rid, 5_000);
+        assert_eq!(d, FinishDisposition::AwaitUpload);
+        assert_eq!(st.reqs[&rid].state, ReqState::PendingOffload);
+        // D2H lands → upload fires automatically.
+        let xfer = match st.outbox.remove(0) {
+            Action::TransferIssued { xfer, .. } => xfer,
+        };
+        on_transfer_done(&mut st, xfer, 10_000);
+        assert_eq!(st.reqs[&rid].state, ReqState::PendingUpload);
+    }
+
+    #[test]
+    fn run_phase_rejects_and_counts() {
+        // Newly stalled under zero pressure → gate rejects, counted once.
+        let (mut st, rid) = running_state();
+        st.running.retain(|&x| x != rid);
+        call_start(&mut st, rid, "web_search", Some(30_000_000), 480, 0);
+        let snap = st.snapshot();
+        run_phase(&mut st, &snap, 0);
+        assert_eq!(st.metrics.counters.offloads_rejected, 1);
+        assert!(st.reqs[&rid].offload_evaluated);
+        // Second phase does not re-evaluate.
+        let snap = st.snapshot();
+        run_phase(&mut st, &snap, 1);
+        assert_eq!(st.metrics.counters.offloads_rejected, 1);
+    }
+}

@@ -1,0 +1,353 @@
+//! Predictive upload (§4.3).
+//!
+//! If the upload starts only when the tool returns, the resumed request
+//! stalls on the H2D transfer; if destination blocks are all grabbed up
+//! front, active requests lose memory too early. The resolution is a
+//! budgeted, gradual reservation:
+//!
+//! * candidates ranked by `P_upload = I + U` (importance from the Spatial
+//!   Scheduler's metric + urgency from proximity to predicted completion);
+//! * per-step budget  B_upload = max(0, B_gpu_free − max(0, D_critical −
+//!   B_shared_free))   (Eq. 3) so uploads never consume blocks critical
+//!   waiting requests need;
+//! * per-candidate reservation  B_reserve = min(B_remain, ⌈B_deficit/2⌉,
+//!   B_upload)   (Eq. 4) — at most half the remaining deficit per step,
+//!   amortizing allocation over several cycles.
+
+use crate::coordination::{
+    Action, PressureSnapshot, ReqState, RequestId, ServeState,
+};
+use crate::kvcache::{AllocOutcome, Direction, Route};
+
+/// Upload urgency U: 0 far from the predicted completion, →1 as it
+/// approaches, >1 once the tool has already returned (overdue).
+fn urgency(st: &ServeState, rid: RequestId, now_us: u64) -> f64 {
+    let r = &st.reqs[&rid];
+    let Some(fc) = &r.fc else { return 0.0 };
+    if fc.tool_done {
+        return 1.5;
+    }
+    let n_blocks = r.cpu_blocks.len() as u32;
+    let lead = lead_time_us(st, n_blocks, fc.predicted_end_us, fc.started_us);
+    let remaining = fc.predicted_end_us.saturating_sub(now_us);
+    if remaining >= lead {
+        0.0
+    } else if lead == 0 {
+        1.0
+    } else {
+        1.0 - remaining as f64 / lead as f64
+    }
+}
+
+/// How early to begin preparing the upload: enough to cover the transfer
+/// several times over, or the configured fraction of the whole stall.
+fn lead_time_us(
+    st: &ServeState,
+    n_blocks: u32,
+    predicted_end_us: u64,
+    started_us: u64,
+) -> u64 {
+    let transfer = st.cfg.profile.upload_us(n_blocks);
+    let stall = predicted_end_us.saturating_sub(started_us);
+    (3 * transfer).max((st.cfg.policy.upload_lead_frac * stall as f64) as u64)
+}
+
+/// Eq. 3: this step's upload budget.
+pub fn upload_budget(snap: &PressureSnapshot) -> u32 {
+    let critical_unmet =
+        snap.critical_demand.saturating_sub(snap.shared_free);
+    snap.gpu_free.saturating_sub(critical_unmet)
+}
+
+/// Phase-3a: advance gradual reservations and fire ready uploads.
+///
+/// Convoy-deadlock discipline: at most one request system-wide may hold an
+/// *incomplete* reservation. Multiple half-reserved uploads would strand
+/// blocks none of them can use (each blocks the others' completion *and*
+/// all admissions) — the gradual schedule of Eq. 4 applies to the focused
+/// candidate; everyone else starts only once the pool has no partials.
+pub fn upload_phase(st: &mut ServeState, snap: &PressureSnapshot, now_us: u64) {
+    // Collect candidates: CPU-resident caches whose urgency is positive,
+    // plus anyone already holding a partial reservation (must finish).
+    let mut cands: Vec<(RequestId, f64, bool)> = st
+        .reqs
+        .values()
+        .filter(|r| r.state == ReqState::Offloaded)
+        .map(|r| {
+            let u = urgency(st, r.id, now_us);
+            let partial = !r.upload_reserved.is_empty();
+            (r.id, st.importance(r) + u, partial)
+        })
+        .filter(|&(rid, _, partial)| {
+            partial || urgency(st, rid, now_us) > 0.0
+        })
+        .collect();
+    // Partial holders first (finish what we started), then P_upload = I+U.
+    cands.sort_by(|a, b| b.2.cmp(&a.2).then(b.1.total_cmp(&a.1)));
+    let mut partial_outstanding =
+        cands.iter().filter(|c| c.2).count() as u32;
+
+    // Eq. 3 budget protects critical *waiting* demand — but an overdue
+    // upload (tool already returned) is itself the most urgent waiting
+    // work, so it draws on the full free pool instead of starving behind
+    // fresh admissions.
+    let mut budget = upload_budget(snap);
+    let mut overdue_budget = snap.gpu_free;
+    for (rid, _, had_partial) in cands {
+        let overdue = st.reqs[&rid]
+            .fc
+            .as_ref()
+            .map(|f| f.tool_done)
+            .unwrap_or(false);
+        if (overdue && overdue_budget == 0)
+            || (!overdue && budget == 0)
+        {
+            continue;
+        }
+        // Only one incomplete reservation at a time: new candidates wait
+        // until no partials are outstanding.
+        if !had_partial && partial_outstanding > 0 {
+            continue;
+        }
+        let (needed, deficit, type_id, is_critical) = {
+            let r = &st.reqs[&rid];
+            let needed = r.cpu_blocks.len() as u32;
+            let deficit =
+                needed.saturating_sub(r.upload_reserved.len() as u32);
+            let crit = r.critical_path
+                || st.spatial.critical_types.contains(&r.type_id);
+            (needed, deficit, r.type_id, crit)
+        };
+        if needed == 0 {
+            continue;
+        }
+        if deficit > 0 {
+            // Eq. 4: at most half the remaining deficit, within budget.
+            let avail = if overdue { overdue_budget } else { budget };
+            let reserve = deficit.div_ceil(2).min(avail);
+            if reserve == 0 {
+                continue;
+            }
+            let route = if is_critical && st.cfg.mode.reserves_memory() {
+                Route::Reserved(type_id)
+            } else {
+                Route::Shared
+            };
+            if let AllocOutcome::Granted {
+                blocks,
+                reserved_charged,
+            } = st.gpu.alloc(reserve, route)
+            {
+                if overdue {
+                    overdue_budget = overdue_budget.saturating_sub(reserve);
+                } else {
+                    budget = budget.saturating_sub(reserve);
+                }
+                let r = st.reqs.get_mut(&rid).unwrap();
+                r.upload_reserved.extend(blocks);
+                r.upload_reserved_charged += reserved_charged;
+            }
+        }
+        // Fully reserved → fire the transfer.
+        let ready = {
+            let r = &st.reqs[&rid];
+            r.upload_reserved.len() as u32 >= needed
+        };
+        if ready {
+            issue_upload(st, rid, now_us);
+            if had_partial {
+                partial_outstanding -= 1;
+            }
+        } else if !had_partial {
+            partial_outstanding += 1;
+        }
+    }
+}
+
+/// Fire the H2D transfer for a fully reserved (or force-allocated) upload.
+pub fn issue_upload(st: &mut ServeState, rid: RequestId, now_us: u64) {
+    let (gpu_blocks, cpu_blocks, n) = {
+        let r = st.reqs.get_mut(&rid).unwrap();
+        debug_assert_eq!(r.state, ReqState::Offloaded);
+        let gpu_blocks = std::mem::take(&mut r.upload_reserved);
+        let n = gpu_blocks.len() as u32;
+        debug_assert_eq!(n as usize, r.cpu_blocks.len());
+        r.state = ReqState::PendingUpload;
+        (gpu_blocks, r.cpu_blocks.clone(), n)
+    };
+    let completes = now_us + st.cfg.profile.upload_us(n);
+    let xfer = st.ledger.issue(
+        rid.0,
+        Direction::H2D,
+        gpu_blocks,
+        cpu_blocks,
+        now_us,
+        completes,
+    );
+    st.metrics.upload_count += 1;
+    st.outbox.push(Action::TransferIssued {
+        xfer,
+        completes_us: completes,
+    });
+}
+
+/// Attempt an *immediate* full reservation + upload (early tool return or
+/// reactive baselines). Returns false if blocks are unavailable — the
+/// request stays Offloaded and upload_phase retries with urgency 1.5.
+pub fn try_immediate_upload(
+    st: &mut ServeState,
+    rid: RequestId,
+    now_us: u64,
+) -> bool {
+    let (deficit, type_id, is_critical) = {
+        let r = &st.reqs[&rid];
+        let needed = r.cpu_blocks.len() as u32;
+        (
+            needed.saturating_sub(r.upload_reserved.len() as u32),
+            r.type_id,
+            r.critical_path
+                || st.spatial.critical_types.contains(&r.type_id),
+        )
+    };
+    if deficit > 0 {
+        let route = if is_critical && st.cfg.mode.reserves_memory() {
+            Route::Reserved(type_id)
+        } else {
+            Route::Shared
+        };
+        match st.gpu.alloc(deficit, route) {
+            AllocOutcome::Granted {
+                blocks,
+                reserved_charged,
+            } => {
+                let r = st.reqs.get_mut(&rid).unwrap();
+                r.upload_reserved.extend(blocks);
+                r.upload_reserved_charged += reserved_charged;
+            }
+            AllocOutcome::Deferred => return false,
+        }
+    }
+    issue_upload(st, rid, now_us);
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ServeConfig;
+    use crate::coordination::FcRt;
+    use crate::graph::templates;
+    use crate::workload::SampledLengths;
+
+    fn offloaded_state(n_cpu_blocks: u32) -> (ServeState, RequestId) {
+        let mut st = ServeState::new(ServeConfig::default());
+        let g = templates::rag();
+        let t = st.register_graph(&g);
+        let scales = SampledLengths {
+            prompt_scale: 1.0,
+            gen_scale: 1.0,
+        };
+        let (app, _) = st.spawn_app(t, scales, 0);
+        let rid = st.apps[&app].node_req[0].unwrap();
+        st.waiting.retain(|&x| x != rid);
+        let cpu = st.cpu.alloc(n_cpu_blocks).unwrap();
+        let r = st.reqs.get_mut(&rid).unwrap();
+        r.state = ReqState::Offloaded;
+        r.cpu_blocks = cpu;
+        r.fc = Some(FcRt {
+            name: "web_search".into(),
+            started_us: 0,
+            predicted_end_us: 3_000_000,
+            tool_done: false,
+            finished_us: 0,
+            result_tokens: 480,
+            user_estimate_us: None,
+        });
+        (st, rid)
+    }
+
+    #[test]
+    fn eq3_budget_protects_critical_demand() {
+        let snap = PressureSnapshot {
+            gpu_free: 100,
+            shared_free: 60,
+            critical_demand: 80,
+            ..Default::default()
+        };
+        // unmet critical = 80-60 = 20 → budget = 100-20 = 80.
+        assert_eq!(upload_budget(&snap), 80);
+        let snap2 = PressureSnapshot {
+            gpu_free: 10,
+            shared_free: 0,
+            critical_demand: 50,
+            ..Default::default()
+        };
+        assert_eq!(upload_budget(&snap2), 0);
+    }
+
+    #[test]
+    fn gradual_reservation_halves_deficit() {
+        let (mut st, rid) = offloaded_state(32);
+        // Make upload urgent: predicted end now.
+        st.reqs.get_mut(&rid).unwrap().fc.as_mut().unwrap()
+            .predicted_end_us = 1_000;
+        let snap = st.snapshot();
+        upload_phase(&mut st, &snap, 900);
+        let r = &st.reqs[&rid];
+        // First step reserves ceil(32/2) = 16.
+        assert_eq!(r.upload_reserved.len(), 16);
+        assert_eq!(r.state, ReqState::Offloaded);
+        // Second step: 8, then 4, 2, 1, 1 → issue on the step reaching 32.
+        let mut steps = 1;
+        while st.reqs[&rid].state == ReqState::Offloaded && steps < 10 {
+            let snap = st.snapshot();
+            upload_phase(&mut st, &snap, 900 + steps);
+            steps += 1;
+        }
+        assert_eq!(st.reqs[&rid].state, ReqState::PendingUpload);
+        assert_eq!(st.ledger.inflight_count(), 1);
+        assert_eq!(st.metrics.upload_count, 1);
+        assert!(!st.outbox.is_empty());
+    }
+
+    #[test]
+    fn no_reservation_before_lead_window() {
+        let (mut st, rid) = offloaded_state(16);
+        // Predicted end far in the future → urgency 0 → untouched.
+        st.reqs.get_mut(&rid).unwrap().fc.as_mut().unwrap()
+            .predicted_end_us = 3_600_000_000;
+        let snap = st.snapshot();
+        upload_phase(&mut st, &snap, 0);
+        assert!(st.reqs[&rid].upload_reserved.is_empty());
+    }
+
+    #[test]
+    fn immediate_upload_on_early_return() {
+        let (mut st, rid) = offloaded_state(16);
+        st.reqs.get_mut(&rid).unwrap().fc.as_mut().unwrap().tool_done =
+            true;
+        assert!(try_immediate_upload(&mut st, rid, 100));
+        assert_eq!(st.reqs[&rid].state, ReqState::PendingUpload);
+    }
+
+    #[test]
+    fn immediate_upload_fails_gracefully_when_full() {
+        let (mut st, rid) = offloaded_state(16);
+        let all = st.gpu.free_blocks();
+        let crate::kvcache::AllocOutcome::Granted { .. } =
+            st.gpu.alloc(all, Route::Shared)
+        else {
+            panic!()
+        };
+        assert!(!try_immediate_upload(&mut st, rid, 100));
+        assert_eq!(st.reqs[&rid].state, ReqState::Offloaded);
+    }
+
+    #[test]
+    fn overdue_tool_maxes_urgency() {
+        let (mut st, rid) = offloaded_state(8);
+        st.reqs.get_mut(&rid).unwrap().fc.as_mut().unwrap().tool_done =
+            true;
+        assert!(urgency(&st, rid, 0) > 1.0);
+    }
+}

@@ -1,0 +1,125 @@
+//! Synthetic corpora (DESIGN.md §3 substitution).
+//!
+//! The paper synthesizes user requests from ShareGPT (D1) and AgentCode
+//! (D2). The schedulers consume only *lengths*, so we reproduce the length
+//! marginals: ShareGPT-like conversational prompts are shortish and
+//! heavy-tailed; AgentCode-like coding contexts are longer in both prompt
+//! and completion. Each app instance draws per-instance scale factors that
+//! multiply the template's per-node token counts, preserving the graph's
+//! relative structure while matching the corpus distribution.
+
+use crate::sim::{Dist, LogNormal, Rng};
+
+/// Which corpus the workload draws lengths from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dataset {
+    /// ShareGPT-like: conversational. Median prompt ≈ 220 tokens,
+    /// completions a few hundred tokens, heavy tail.
+    D1,
+    /// AgentCode-like: code contexts. Longer prompts (median ≈ 600) and
+    /// longer completions.
+    D2,
+}
+
+impl Dataset {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Dataset::D1 => "D1-sharegpt",
+            Dataset::D2 => "D2-agentcode",
+        }
+    }
+
+    fn prompt_scale_dist(&self) -> Dist {
+        match self {
+            Dataset::D1 => Dist::LogNormal(LogNormal {
+                median: 1.0,
+                sigma: 0.45,
+            }),
+            Dataset::D2 => Dist::LogNormal(LogNormal {
+                median: 1.6,
+                sigma: 0.55,
+            }),
+        }
+    }
+
+    fn gen_scale_dist(&self) -> Dist {
+        match self {
+            Dataset::D1 => Dist::LogNormal(LogNormal {
+                median: 1.0,
+                sigma: 0.35,
+            }),
+            Dataset::D2 => Dist::LogNormal(LogNormal {
+                median: 1.35,
+                sigma: 0.45,
+            }),
+        }
+    }
+
+    /// Draw per-instance scale factors.
+    pub fn sample(&self, rng: &mut Rng) -> SampledLengths {
+        let clamp = |x: f64| x.clamp(0.25, 6.0);
+        SampledLengths {
+            prompt_scale: clamp(self.prompt_scale_dist().sample(rng)),
+            gen_scale: clamp(self.gen_scale_dist().sample(rng)),
+        }
+    }
+}
+
+/// Per-app-instance length multipliers.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SampledLengths {
+    pub prompt_scale: f64,
+    pub gen_scale: f64,
+}
+
+impl SampledLengths {
+    pub fn scale_prompt(&self, tokens: u32) -> u32 {
+        ((tokens as f64 * self.prompt_scale) as u32).max(1)
+    }
+
+    pub fn scale_gen(&self, tokens: u32) -> u32 {
+        ((tokens as f64 * self.gen_scale) as u32).max(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn d2_longer_than_d1_on_average() {
+        let mut rng = Rng::new(42);
+        let n = 5000;
+        let mean = |d: Dataset, rng: &mut Rng| {
+            (0..n)
+                .map(|_| d.sample(rng).prompt_scale)
+                .sum::<f64>()
+                / n as f64
+        };
+        let m1 = mean(Dataset::D1, &mut rng);
+        let m2 = mean(Dataset::D2, &mut rng);
+        assert!(m2 > m1 * 1.3, "D2 {m2} vs D1 {m1}");
+    }
+
+    #[test]
+    fn scales_clamped_and_positive() {
+        let mut rng = Rng::new(7);
+        for _ in 0..2000 {
+            let s = Dataset::D2.sample(&mut rng);
+            assert!(s.prompt_scale >= 0.25 && s.prompt_scale <= 6.0);
+            assert!(s.scale_prompt(100) >= 1);
+            assert!(s.scale_gen(0) >= 1); // never zero-length
+        }
+    }
+
+    #[test]
+    fn median_prompt_scale_near_nominal() {
+        let mut rng = Rng::new(3);
+        let mut xs: Vec<f64> = (0..4001)
+            .map(|_| Dataset::D1.sample(&mut rng).prompt_scale)
+            .collect();
+        xs.sort_by(|a, b| a.total_cmp(b));
+        let med = xs[2000];
+        assert!((med - 1.0).abs() < 0.1, "median={med}");
+    }
+}

@@ -1,0 +1,94 @@
+//! Workload generation (§7.1): Poisson application arrivals, synthetic
+//! corpora standing in for ShareGPT (D1) and AgentCode (D2), and the
+//! simulated MCP tool endpoints with Table 1 latency ranges plus the
+//! multiplicative noise injection of §7.5.
+
+mod corpus;
+mod tools;
+
+pub use corpus::{Dataset, SampledLengths};
+pub use tools::ToolSim;
+
+use crate::graph::AppGraph;
+use crate::sim::{Poisson, Rng};
+
+/// A complete workload specification: which app, how often, how many, on
+/// which corpus, with how much tool-time noise.
+#[derive(Debug, Clone)]
+pub struct WorkloadSpec {
+    pub graph: AppGraph,
+    /// Application arrival rate (queries per second, Poisson).
+    pub qps: f64,
+    /// Number of application instances to submit.
+    pub num_apps: usize,
+    /// Length-distribution corpus (D1 = ShareGPT-like, D2 = AgentCode-like).
+    pub dataset: Dataset,
+    /// Multiplicative tool-time noise scale s (§7.5): actual time is drawn
+    /// from [t·(1−s), t·(1+s)].
+    pub tool_noise: f64,
+}
+
+impl WorkloadSpec {
+    pub fn poisson(graph: &AppGraph, qps: f64, num_apps: usize) -> Self {
+        Self {
+            graph: graph.clone(),
+            qps,
+            num_apps,
+            dataset: Dataset::D1,
+            tool_noise: 0.0,
+        }
+    }
+
+    pub fn with_dataset(mut self, d: Dataset) -> Self {
+        self.dataset = d;
+        self
+    }
+
+    pub fn with_tool_noise(mut self, s: f64) -> Self {
+        assert!((0.0..1.0).contains(&s), "noise scale in [0,1)");
+        self.tool_noise = s;
+        self
+    }
+
+    /// Generate the arrival schedule: `num_apps` timestamps (µs).
+    pub fn arrivals(&self, rng: &mut Rng) -> Vec<u64> {
+        let mut p = Poisson::new(self.qps);
+        (0..self.num_apps)
+            .map(|_| p.next_arrival_us(rng))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::templates;
+
+    #[test]
+    fn arrivals_monotone_and_rate_close() {
+        let g = templates::code_writer();
+        let spec = WorkloadSpec::poisson(&g, 0.5, 2000);
+        let mut rng = Rng::new(9);
+        let arr = spec.arrivals(&mut rng);
+        assert_eq!(arr.len(), 2000);
+        assert!(arr.windows(2).all(|w| w[0] <= w[1]));
+        let rate = arr.len() as f64 / (*arr.last().unwrap() as f64 / 1e6);
+        assert!((rate - 0.5).abs() < 0.05, "rate={rate}");
+    }
+
+    #[test]
+    fn arrivals_deterministic_per_seed() {
+        let g = templates::rag();
+        let spec = WorkloadSpec::poisson(&g, 1.0, 50);
+        let a = spec.arrivals(&mut Rng::new(1));
+        let b = spec.arrivals(&mut Rng::new(1));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_bad_noise() {
+        let g = templates::rag();
+        let _ = WorkloadSpec::poisson(&g, 1.0, 1).with_tool_noise(1.5);
+    }
+}

@@ -1,0 +1,135 @@
+//! Simulated MCP tool endpoints.
+//!
+//! The paper deploys real tool servers matching Table 1's latency ranges;
+//! here each tool invocation samples its kind's latency distribution, then
+//! applies the §7.5 multiplicative noise: at noise scale *s* the actual
+//! execution time is drawn from [t·(1−s), t·(1+s)].
+//!
+//! Stage decomposition (§3.1 FuncNode): a call with k stages reports
+//! progress at k−1 intermediate points; the Temporal Scheduler can use the
+//! stage boundaries as refined progress signals for upload timing.
+
+use crate::graph::CallSpec;
+#[cfg(test)]
+use crate::graph::FuncKind;
+use crate::sim::Rng;
+
+/// Stateless sampler for tool execution times.
+#[derive(Debug, Clone)]
+pub struct ToolSim {
+    /// §7.5 noise scale s ∈ [0, 1).
+    pub noise: f64,
+}
+
+/// A sampled tool execution: the true duration and its stage boundaries.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ToolExecution {
+    pub duration_us: u64,
+    /// Elapsed-time offsets (µs) at which each stage completes; the last
+    /// equals `duration_us`.
+    pub stage_ends_us: Vec<u64>,
+}
+
+impl ToolSim {
+    pub fn new(noise: f64) -> Self {
+        assert!((0.0..1.0).contains(&noise));
+        Self { noise }
+    }
+
+    /// Sample the actual execution time for one call.
+    pub fn sample(&self, call: &CallSpec, rng: &mut Rng) -> ToolExecution {
+        let base = call.kind.latency().dist.sample(rng).max(1_000.0);
+        let noisy = if self.noise > 0.0 {
+            base * rng.range_f64(1.0 - self.noise, 1.0 + self.noise)
+        } else {
+            base
+        };
+        let duration_us = noisy.max(1_000.0) as u64;
+        let stages = call.stages.max(1) as u64;
+        let stage_ends_us = (1..=stages)
+            .map(|i| duration_us * i / stages)
+            .collect();
+        ToolExecution {
+            duration_us,
+            stage_ends_us,
+        }
+    }
+
+    /// The estimate the scheduler would use *before* any history exists:
+    /// the user's `predict_time` if present, else the tool-kind mean.
+    pub fn prior_estimate_us(call: &CallSpec) -> u64 {
+        call.predict_time_us
+            .unwrap_or_else(|| call.kind.latency().mean_us() as u64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn call(kind: FuncKind) -> CallSpec {
+        CallSpec::new(kind)
+    }
+
+    #[test]
+    fn zero_noise_tracks_distribution() {
+        let sim = ToolSim::new(0.0);
+        let mut rng = Rng::new(1);
+        let c = call(FuncKind::FileRead);
+        let n = 4000;
+        let mean: f64 = (0..n)
+            .map(|_| sim.sample(&c, &mut rng).duration_us as f64)
+            .sum::<f64>()
+            / n as f64;
+        // File system: uniform 50–150 ms → mean ≈ 100 ms.
+        assert!((mean - 100_000.0).abs() < 3_000.0, "mean={mean}");
+    }
+
+    #[test]
+    fn noise_widens_spread() {
+        let mut rng = Rng::new(2);
+        let c = call(FuncKind::Database);
+        let spread = |s: f64, rng: &mut Rng| {
+            let sim = ToolSim::new(s);
+            let xs: Vec<f64> = (0..3000)
+                .map(|_| sim.sample(&c, rng).duration_us as f64)
+                .collect();
+            let m = xs.iter().sum::<f64>() / xs.len() as f64;
+            (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>()
+                / xs.len() as f64)
+                .sqrt()
+        };
+        let s0 = spread(0.0, &mut rng);
+        let s5 = spread(0.5, &mut rng);
+        assert!(s5 > s0 * 1.05, "s0={s0} s5={s5}");
+    }
+
+    #[test]
+    fn stages_partition_duration() {
+        let sim = ToolSim::new(0.0);
+        let mut rng = Rng::new(3);
+        let c = call(FuncKind::DataAnalysis).with_stages(4);
+        let e = sim.sample(&c, &mut rng);
+        assert_eq!(e.stage_ends_us.len(), 4);
+        assert_eq!(*e.stage_ends_us.last().unwrap(), e.duration_us);
+        assert!(e.stage_ends_us.windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    #[test]
+    fn prior_estimate_prefers_user_hint() {
+        let c = call(FuncKind::WebSearch).with_predict_time_us(42);
+        assert_eq!(ToolSim::prior_estimate_us(&c), 42);
+        let c2 = call(FuncKind::WebSearch);
+        assert!(ToolSim::prior_estimate_us(&c2) > 1_000_000);
+    }
+
+    #[test]
+    fn durations_never_zero() {
+        let sim = ToolSim::new(0.9);
+        let mut rng = Rng::new(4);
+        let c = call(FuncKind::FileRead);
+        for _ in 0..500 {
+            assert!(sim.sample(&c, &mut rng).duration_us >= 1_000);
+        }
+    }
+}

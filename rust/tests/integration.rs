@@ -1,0 +1,230 @@
+//! Cross-module integration tests: full scheduling pipeline, baselines'
+//! relative ordering, coordination-protocol properties, and the HTTP
+//! frontend over a real socket.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+
+use tokencake::config::{Mode, ServeConfig};
+use tokencake::coordination::ReqState;
+use tokencake::engine::sim::SimEngine;
+use tokencake::graph::templates;
+use tokencake::server::Server;
+use tokencake::workload::{Dataset, WorkloadSpec};
+
+fn run(mode: Mode, qps: f64, apps: usize, frac: f64, seed: u64)
+    -> tokencake::engine::sim::RunReport {
+    let cfg = ServeConfig::default()
+        .with_mode(mode)
+        .with_seed(seed)
+        .with_gpu_mem_frac(frac);
+    let g = templates::code_writer();
+    let spec =
+        WorkloadSpec::poisson(&g, qps, apps).with_dataset(Dataset::D1);
+    SimEngine::new(cfg).run_workload(&spec)
+}
+
+/// The paper's headline ordering under memory pressure (§7.2/§7.3):
+/// TokenCake < agent-only < vLLM on average latency, with offload-only
+/// also beating vLLM but losing to agent-only standalone.
+#[test]
+fn headline_ordering_under_pressure() {
+    let mut avg = std::collections::HashMap::new();
+    for mode in [Mode::Vllm, Mode::AgentOnly, Mode::OffloadOnly,
+                 Mode::TokenCake] {
+        let mut total = 0.0;
+        for seed in [1u64, 2, 3] {
+            let rep = run(mode, 0.5, 20, 0.05, seed);
+            assert!(!rep.truncated, "{mode:?}");
+            assert_eq!(rep.metrics.apps_completed, 20, "{mode:?}");
+            total += rep.metrics.latency.mean_s();
+        }
+        avg.insert(mode.name(), total / 3.0);
+    }
+    let (tc, ag, of, vl) = (
+        avg["tokencake"],
+        avg["agent"],
+        avg["offload"],
+        avg["vllm"],
+    );
+    assert!(tc < vl * 0.9, "TokenCake {tc} must beat vLLM {vl} by >10%");
+    assert!(ag < vl, "agent-only {ag} must beat vLLM {vl}");
+    assert!(of < vl, "offload-only {of} must beat vLLM {vl}");
+    assert!(
+        tc <= ag + 1.0,
+        "full TokenCake {tc} must not lose to agent-only {ag}"
+    );
+}
+
+/// Effective-utilization gap (Fig 10's mechanism): vLLM's occupied blocks
+/// are partly idle stalled caches; TokenCake keeps occupancy productive.
+#[test]
+fn effective_utilization_gap() {
+    let v = run(Mode::Vllm, 0.5, 20, 0.08, 7);
+    let t = run(Mode::TokenCake, 0.5, 20, 0.08, 7);
+    let v_eff = v.metrics.effective_usage.steady_state_mean(0.15);
+    let t_eff = t.metrics.effective_usage.steady_state_mean(0.15);
+    assert!(
+        t_eff > v_eff + 0.05,
+        "TokenCake effective {t_eff:.2} must exceed vLLM {v_eff:.2}"
+    );
+    // And vLLM's stalled fraction is substantial (Fig 2a).
+    assert!(
+        v.metrics.stalled_fraction.max() > 0.10,
+        "stalled peak {:.2}",
+        v.metrics.stalled_fraction.max()
+    );
+}
+
+/// Critical inversion protection (Fig 3 / §5): reservation cuts
+/// critical-path evictions relative to FCFS.
+#[test]
+fn reservation_reduces_critical_inversions() {
+    let mut v_inv = 0;
+    let mut t_inv = 0;
+    for seed in [11u64, 12, 13] {
+        v_inv += run(Mode::Vllm, 1.0, 20, 0.08, seed)
+            .metrics
+            .counters
+            .critical_inversions;
+        t_inv += run(Mode::TokenCake, 1.0, 20, 0.08, seed)
+            .metrics
+            .counters
+            .critical_inversions;
+    }
+    assert!(
+        t_inv < v_inv,
+        "TokenCake inversions {t_inv} must be below vLLM {v_inv}"
+    );
+}
+
+/// Offload pairing and CPU hygiene across a long multi-seed campaign.
+#[test]
+fn migration_accounting_closed() {
+    for seed in 0..5u64 {
+        let cfg = ServeConfig::default()
+            .with_mode(Mode::TokenCake)
+            .with_seed(seed)
+            .with_gpu_mem_frac(0.05);
+        let g = templates::deep_research();
+        let spec = WorkloadSpec::poisson(&g, 1.0, 10);
+        let mut e = SimEngine::new(cfg);
+        let rep = e.run_workload(&spec);
+        assert_eq!(rep.metrics.offload_count, rep.metrics.upload_count);
+        assert_eq!(e.st.cpu.used_blocks(), 0);
+        assert_eq!(e.st.gpu.free_blocks(), e.st.gpu.total());
+        // No request left in a transfer state.
+        assert!(e
+            .st
+            .reqs
+            .values()
+            .all(|r| r.state == ReqState::Finished));
+    }
+}
+
+/// Forecaster learns through the engine: after a run, per-function-type
+/// observations exist for every tool the workload used.
+#[test]
+fn forecaster_learns_tool_types() {
+    let cfg = ServeConfig::default()
+        .with_mode(Mode::TokenCake)
+        .with_seed(3)
+        .with_gpu_mem_frac(0.2);
+    let g = templates::code_writer();
+    let spec = WorkloadSpec::poisson(&g, 0.5, 5);
+    let mut e = SimEngine::new(cfg);
+    let _ = e.run_workload(&spec);
+    for tool in ["web_search", "external_test", "git", "file_write"] {
+        assert!(
+            e.st.forecaster.observations(tool) > 0,
+            "no observations for {tool}"
+        );
+    }
+}
+
+/// Tool-noise degrades or preserves — never corrupts — the run.
+#[test]
+fn noise_injection_is_stable() {
+    for noise in [0.0, 0.25, 0.5, 0.9] {
+        let cfg = ServeConfig::default()
+            .with_mode(Mode::TokenCake)
+            .with_seed(5)
+            .with_gpu_mem_frac(0.1);
+        let g = templates::rag();
+        let spec = WorkloadSpec::poisson(&g, 1.0, 8)
+            .with_tool_noise(noise);
+        let rep = SimEngine::new(cfg).run_workload(&spec);
+        assert_eq!(rep.metrics.apps_completed, 8, "noise={noise}");
+    }
+}
+
+// -----------------------------------------------------------------------
+// HTTP frontend over a real socket
+// -----------------------------------------------------------------------
+
+fn http_post(addr: std::net::SocketAddr, path: &str, body: &str) -> String {
+    let mut s = TcpStream::connect(addr).unwrap();
+    let req = format!(
+        "POST {path} HTTP/1.1\r\nhost: test\r\ncontent-length: {}\r\n\r\n{body}",
+        body.len()
+    );
+    s.write_all(req.as_bytes()).unwrap();
+    let mut out = String::new();
+    s.read_to_string(&mut out).unwrap();
+    out
+}
+
+fn http_get(addr: std::net::SocketAddr, path: &str) -> String {
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.write_all(format!("GET {path} HTTP/1.1\r\n\r\n").as_bytes())
+        .unwrap();
+    let mut out = String::new();
+    s.read_to_string(&mut out).unwrap();
+    out
+}
+
+#[test]
+fn http_frontend_full_lifecycle() {
+    let server = Server::start(0).unwrap();
+    let addr = server.addr;
+
+    assert!(http_get(addr, "/healthz").contains("200 OK"));
+
+    // Register the Fig 5 RAG graph over the wire.
+    let dsl = "graph rag\n\
+               agent retriever retriever 256 48,96 web_search 3000000 2\n\
+               agent generator generator 192 384\n\
+               edge retriever generator\n";
+    let resp = http_post(addr, "/graphs", dsl);
+    assert!(resp.contains("200 OK"), "{resp}");
+    assert!(resp.contains("graph=0"));
+
+    // Instantiate an app.
+    let resp = http_post(addr, "/apps", "graph=0");
+    assert!(resp.contains("app=0"));
+
+    // call_start → /state shows the stalled call → call_finish feeds the
+    // forecaster (visible through the next prediction).
+    let resp = http_post(
+        addr,
+        "/call_start",
+        "req=1\nfunc=web_search\nestimate_us=3000000",
+    );
+    assert!(resp.contains("predicted_us=3000000"), "{resp}");
+    assert!(http_get(addr, "/state").contains("stalled=1"));
+    let resp =
+        http_post(addr, "/call_finish", "req=1\nelapsed_us=1000000");
+    assert!(resp.contains("observed_us=1000000"));
+    // Eq. 1 blend: 0.4·3s + 0.6·1s = 1.8s.
+    let resp = http_post(
+        addr,
+        "/call_start",
+        "req=2\nfunc=web_search\nestimate_us=3000000",
+    );
+    assert!(resp.contains("predicted_us=1800000"), "{resp}");
+
+    // Bad requests are rejected, not crashed.
+    assert!(http_post(addr, "/apps", "graph=99").contains("400"));
+    assert!(http_post(addr, "/call_finish", "req=777").contains("400"));
+    assert!(http_get(addr, "/nope").contains("404"));
+}

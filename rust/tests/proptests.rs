@@ -1,0 +1,418 @@
+//! Property-based tests over coordinator invariants.
+//!
+//! proptest is not vendored in this offline environment, so these use a
+//! seeded-random harness of the same shape: generate hundreds of random
+//! operation sequences / graphs / workloads, assert invariants on every
+//! step, and print the failing seed on violation (re-run with that seed to
+//! reproduce — everything is deterministic).
+
+use tokencake::config::{Mode, ServeConfig};
+use tokencake::engine::sim::SimEngine;
+use tokencake::graph::{CallSpec, FuncKind, GraphBuilder};
+use tokencake::kvcache::{AllocOutcome, CpuBlockPool, GpuPool, Route};
+use tokencake::sim::Rng;
+use tokencake::workload::{Dataset, WorkloadSpec};
+
+// ---------------------------------------------------------------------
+// GPU pool invariants under random alloc/free/pending/quota traffic
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_gpu_pool_conservation() {
+    for seed in 0..300u64 {
+        let mut rng = Rng::new(seed + 1);
+        let total = rng.range_u64(8, 300) as u32;
+        let mut pool = GpuPool::new(total);
+        // live allocations: (blocks, charged, type)
+        let mut live: Vec<(Vec<tokencake::kvcache::BlockId>, u32, u16)> =
+            Vec::new();
+        let mut pending: Vec<Vec<tokencake::kvcache::BlockId>> = Vec::new();
+
+        for _step in 0..200 {
+            let op = rng.range_u64(0, 100);
+            match op {
+                0..=39 => {
+                    let t = rng.range_u64(0, 4) as u16;
+                    let n = rng.range_u64(0, 20) as u32;
+                    let route = if rng.next_f64() < 0.5 {
+                        Route::Shared
+                    } else {
+                        Route::Reserved(t)
+                    };
+                    if let AllocOutcome::Granted {
+                        blocks,
+                        reserved_charged,
+                    } = pool.alloc(n, route)
+                    {
+                        assert_eq!(blocks.len() as u32, n, "seed {seed}");
+                        live.push((blocks, reserved_charged, t));
+                    }
+                }
+                40..=64 => {
+                    if !live.is_empty() {
+                        let i = rng.range_u64(0, live.len() as u64) as usize;
+                        let (b, c, t) = live.swap_remove(i);
+                        pool.free(b, c, Some(t));
+                    }
+                }
+                65..=79 => {
+                    if !live.is_empty() {
+                        let i = rng.range_u64(0, live.len() as u64) as usize;
+                        let (b, c, t) = live.swap_remove(i);
+                        pool.mark_pending_free(&b, c, Some(t));
+                        pending.push(b);
+                    }
+                }
+                80..=89 => {
+                    if !pending.is_empty() {
+                        let i =
+                            rng.range_u64(0, pending.len() as u64) as usize;
+                        let b = pending.swap_remove(i);
+                        pool.complete_pending(b);
+                    }
+                }
+                _ => {
+                    // Random quota plan.
+                    let plan: Vec<(u16, u32)> = (0..rng.range_u64(0, 4))
+                        .map(|t| {
+                            (t as u16, rng.range_u64(0, total as u64 / 2)
+                                as u32)
+                        })
+                        .collect();
+                    pool.set_quotas(&plan);
+                }
+            }
+            // ---- Invariants ----
+            let held: u32 =
+                live.iter().map(|(b, _, _)| b.len() as u32).sum();
+            let pend: u32 = pending.iter().map(|b| b.len() as u32).sum();
+            assert_eq!(
+                pool.free_blocks() + held + pend,
+                total,
+                "conservation violated at seed {seed}"
+            );
+            assert_eq!(pool.pending_free_blocks(), pend, "seed {seed}");
+            assert!(
+                pool.shared_free() <= pool.free_blocks(),
+                "seed {seed}"
+            );
+            assert!(
+                pool.outstanding_reserved()
+                    <= pool.total_quota(),
+                "seed {seed}"
+            );
+            assert!(pool.usage() >= 0.0 && pool.usage() <= 1.0);
+        }
+    }
+}
+
+#[test]
+fn prop_shared_never_starves_reserved_headroom() {
+    // Whatever sequence of shared allocations happens, a critical type
+    // must always be able to claim its unused quota.
+    for seed in 0..200u64 {
+        let mut rng = Rng::new(seed + 77);
+        let total = rng.range_u64(50, 400) as u32;
+        let quota = rng.range_u64(1, (total / 2) as u64) as u32;
+        let mut pool = GpuPool::new(total);
+        pool.set_quotas(&[(9, quota)]);
+        // Greedy shared allocation until refusal.
+        loop {
+            let n = rng.range_u64(1, 16) as u32;
+            match pool.alloc(n, Route::Shared) {
+                AllocOutcome::Granted { .. } => {}
+                AllocOutcome::Deferred => break,
+            }
+        }
+        // The full quota must still be available to type 9.
+        assert!(
+            matches!(
+                pool.alloc(quota, Route::Reserved(9)),
+                AllocOutcome::Granted { .. }
+            ),
+            "seed {seed}: reserved headroom was eaten by shared traffic"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+// CPU pool: ids never double-allocated
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_cpu_pool_unique_ids() {
+    for seed in 0..200u64 {
+        let mut rng = Rng::new(seed + 11);
+        let total = rng.range_u64(4, 200) as u32;
+        let mut pool = CpuBlockPool::new(total);
+        let mut live: Vec<Vec<tokencake::kvcache::CpuBlockId>> = Vec::new();
+        for _ in 0..150 {
+            if rng.next_f64() < 0.6 {
+                let n = rng.range_u64(0, 12) as u32;
+                if let Some(b) = pool.alloc(n) {
+                    live.push(b);
+                }
+            } else if !live.is_empty() {
+                let i = rng.range_u64(0, live.len() as u64) as usize;
+                pool.release(live.swap_remove(i));
+            }
+            // No id appears twice across live allocations.
+            let mut all: Vec<u32> = live
+                .iter()
+                .flatten()
+                .map(|b| b.0)
+                .collect();
+            let n_all = all.len();
+            all.sort_unstable();
+            all.dedup();
+            assert_eq!(all.len(), n_all, "duplicate id at seed {seed}");
+            assert_eq!(
+                pool.used_blocks() as usize, n_all,
+                "accounting at seed {seed}"
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Random DAGs: topo order, critical path, f_struct bounds
+// ---------------------------------------------------------------------
+
+fn random_dag(rng: &mut Rng) -> tokencake::graph::AppGraph {
+    let n = rng.range_u64(2, 14) as usize;
+    let mut gb = GraphBuilder::new("random");
+    let ids: Vec<_> = (0..n)
+        .map(|i| {
+            let gens: Vec<u32> = (0..rng.range_u64(1, 4))
+                .map(|_| rng.range_u64(5, 200) as u32)
+                .collect();
+            if gens.len() >= 2 && rng.next_f64() < 0.5 {
+                gb.agent_with_call(
+                    &format!("n{i}"),
+                    &format!("t{}", rng.range_u64(0, 5)),
+                    rng.range_u64(10, 400) as u32,
+                    &gens,
+                    CallSpec::new(FuncKind::WebSearch),
+                )
+            } else {
+                gb.agent(
+                    &format!("n{i}"),
+                    &format!("t{}", rng.range_u64(0, 5)),
+                    rng.range_u64(10, 400) as u32,
+                    &gens,
+                )
+            }
+        })
+        .collect();
+    // Forward edges only → acyclic by construction.
+    for j in 1..n {
+        let parents = rng.range_u64(1, 3.min(j as u64) + 1) as usize;
+        for _ in 0..parents.min(j) {
+            let p = rng.range_u64(0, j as u64) as usize;
+            gb.edge(ids[p], ids[j]);
+        }
+    }
+    gb.build().expect("forward-edge graph is a DAG")
+}
+
+#[test]
+fn prop_dag_invariants() {
+    for seed in 0..300u64 {
+        let mut rng = Rng::new(seed + 31);
+        let g = random_dag(&mut rng);
+        // Topo order respects every edge.
+        let pos: std::collections::HashMap<_, _> = g
+            .topo_order()
+            .iter()
+            .enumerate()
+            .map(|(i, &n)| (n, i))
+            .collect();
+        for node in g.nodes() {
+            for &c in g.children(node.id) {
+                assert!(pos[&node.id] < pos[&c], "seed {seed}");
+                assert!(
+                    g.depth(c) > g.depth(node.id),
+                    "child depth must exceed parent (seed {seed})"
+                );
+            }
+            assert!(
+                (0.0..=1.0).contains(&g.f_struct(node.id)),
+                "f_struct out of range (seed {seed})"
+            );
+        }
+        // Exactly one connected critical path from a root to a leaf.
+        let crit: Vec<_> = g
+            .nodes()
+            .filter(|n| g.is_critical(n.id))
+            .map(|n| n.id)
+            .collect();
+        assert!(!crit.is_empty(), "seed {seed}");
+        let roots_on_path = crit
+            .iter()
+            .filter(|&&c| g.parents(c).is_empty())
+            .count();
+        assert!(roots_on_path >= 1, "critical path must reach a root");
+        // Every non-root critical node has a critical parent.
+        for &c in &crit {
+            if !g.parents(c).is_empty() {
+                assert!(
+                    g.parents(c).iter().any(|&p| g.is_critical(p)),
+                    "critical path disconnected (seed {seed})"
+                );
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// End-to-end workload invariants on random configurations
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_engine_conservation_random_workloads() {
+    let modes = [
+        Mode::TokenCake,
+        Mode::Vllm,
+        Mode::Mooncake,
+        Mode::AgentOnly,
+        Mode::OffloadOnly,
+        Mode::Parrot,
+        Mode::Infercept,
+        Mode::VllmPrefix,
+    ];
+    for seed in 0..24u64 {
+        let mut rng = Rng::new(seed + 101);
+        let mode = modes[rng.range_u64(0, modes.len() as u64) as usize];
+        let qps = rng.range_f64(0.2, 2.0);
+        let apps = rng.range_u64(2, 8) as usize;
+        let frac = rng.range_f64(0.02, 0.2);
+        let cfg = ServeConfig::default()
+            .with_mode(mode)
+            .with_seed(seed * 7 + 1)
+            .with_gpu_mem_frac(frac);
+        let g = random_dag(&mut rng);
+        let spec = WorkloadSpec::poisson(&g, qps, apps)
+            .with_dataset(if rng.next_f64() < 0.5 {
+                Dataset::D1
+            } else {
+                Dataset::D2
+            })
+            .with_tool_noise(rng.range_f64(0.0, 0.5));
+        let mut engine = SimEngine::new(cfg);
+        let rep = engine.run_workload(&spec);
+
+        // Every app completes (no silent drops).
+        assert!(
+            !rep.truncated,
+            "seed {seed}: {mode:?} truncated ({})",
+            rep.summary()
+        );
+        assert_eq!(
+            rep.metrics.apps_completed as usize, apps,
+            "seed {seed} {mode:?}"
+        );
+        // All memory returned.
+        assert_eq!(
+            engine.st.gpu.free_blocks(),
+            engine.st.gpu.total(),
+            "seed {seed} {mode:?}: gpu leak"
+        );
+        assert_eq!(engine.st.gpu.pending_free_blocks(), 0);
+        assert_eq!(
+            engine.st.cpu.used_blocks(),
+            0,
+            "seed {seed} {mode:?}: cpu leak"
+        );
+        // Offloads and uploads pair up by completion.
+        assert_eq!(
+            rep.metrics.offload_count, rep.metrics.upload_count,
+            "seed {seed} {mode:?}"
+        );
+        // Latency sanity.
+        assert!(rep.metrics.latency.mean_us() > 0.0);
+        assert!(
+            rep.metrics.latency.percentile_s(90.0)
+                >= rep.metrics.latency.percentile_s(50.0)
+        );
+    }
+}
+
+#[test]
+fn prop_non_offload_modes_never_touch_cpu() {
+    for seed in 0..12u64 {
+        for mode in [Mode::Vllm, Mode::VllmPrefix, Mode::Parrot,
+                     Mode::AgentOnly] {
+            let mut rng = Rng::new(seed + 900);
+            let g = random_dag(&mut rng);
+            let cfg = ServeConfig::default()
+                .with_mode(mode)
+                .with_seed(seed)
+                .with_gpu_mem_frac(0.05);
+            let spec = WorkloadSpec::poisson(&g, 1.0, 4);
+            let mut engine = SimEngine::new(cfg);
+            let rep = engine.run_workload(&spec);
+            assert_eq!(rep.metrics.offload_count, 0, "{mode:?}");
+            assert_eq!(engine.st.cpu.peak_used(), 0, "{mode:?}");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Multi-GPU pool (§5 Multi-GPU Support): lockstep conservation
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_multi_gpu_lockstep_conservation() {
+    use tokencake::kvcache::{MultiGpuPool, Route, ShardedAlloc};
+    for seed in 0..150u64 {
+        let mut rng = Rng::new(seed + 501);
+        let tp = rng.range_u64(1, 5) as usize;
+        let per_dev = rng.range_u64(8, 120) as u32;
+        let mut m = MultiGpuPool::new(tp, per_dev);
+        let mut live: Vec<ShardedAlloc> = Vec::new();
+        for _ in 0..120 {
+            match rng.range_u64(0, 10) {
+                0..=4 => {
+                    let n = rng.range_u64(0, 16) as u32;
+                    let t = rng.range_u64(0, 3) as u16;
+                    let route = if rng.next_f64() < 0.5 {
+                        Route::Shared
+                    } else {
+                        Route::Reserved(t)
+                    };
+                    if let Some(a) = m.alloc(n, route) {
+                        assert_eq!(a.blocks.len(), tp, "seed {seed}");
+                        assert!(a
+                            .blocks
+                            .iter()
+                            .all(|b| b.len() == n as usize));
+                        live.push(a);
+                    }
+                }
+                5..=7 => {
+                    if !live.is_empty() {
+                        let i =
+                            rng.range_u64(0, live.len() as u64) as usize;
+                        let a = live.swap_remove(i);
+                        let charged = a.reserved_charged;
+                        m.free(a, if charged > 0 { Some(0) } else { None });
+                    }
+                }
+                _ => {
+                    let q = rng.range_u64(0, per_dev as u64 / 2) as u32;
+                    m.set_quotas(&[(0, q)]);
+                }
+            }
+            // Lockstep invariant: identical free counts on every device.
+            let rows = m.pressure();
+            let f0 = rows[0].free;
+            assert!(
+                rows.iter().all(|r| r.free == f0),
+                "device divergence at seed {seed}"
+            );
+            let held: u32 =
+                live.iter().map(|a| a.len() as u32).sum();
+            assert_eq!(f0 + held, per_dev, "conservation seed {seed}");
+        }
+    }
+}

@@ -1,0 +1,259 @@
+//! Cross-language integration: the Python-AOT artifacts loaded and
+//! executed from Rust via PJRT, with numeric checks implemented
+//! independently in Rust.
+//!
+//! Skips (passes trivially) when `artifacts/` hasn't been built — run
+//! `make artifacts` first.
+
+use std::path::PathBuf;
+
+use tokencake::runtime::TinyQwen;
+
+fn artifacts() -> Option<PathBuf> {
+    let dir = tokencake::runtime::artifacts_dir();
+    if dir.join("manifest.txt").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn loads_and_reports_config() {
+    let Some(dir) = artifacts() else { return };
+    let m = TinyQwen::load(&dir).expect("load artifacts");
+    assert_eq!(m.vocab, 512);
+    assert_eq!(m.n_layers, 2);
+    assert_eq!(m.decode_batch, 8);
+    assert!(m.platform().to_lowercase().contains("cpu")
+        || m.platform().to_lowercase().contains("host"));
+}
+
+#[test]
+fn prefill_shapes_and_finiteness() {
+    let Some(dir) = artifacts() else { return };
+    let m = TinyQwen::load(&dir).unwrap();
+    let prompt: Vec<i32> = (1..=17).collect();
+    let out = m.prefill(&prompt).unwrap();
+    assert_eq!(out.logits.len(), m.vocab);
+    assert_eq!(
+        out.k.len(),
+        m.n_layers * m.prefill_len * m.n_heads * m.head_dim
+    );
+    assert!(out.logits.iter().all(|x| x.is_finite()));
+    assert!(out.k.iter().all(|x| x.is_finite()));
+    // Prompt too long / empty must error.
+    assert!(m.prefill(&[]).is_err());
+    assert!(m.prefill(&vec![1; m.prefill_len + 1]).is_err());
+}
+
+#[test]
+fn prefill_deterministic() {
+    let Some(dir) = artifacts() else { return };
+    let m = TinyQwen::load(&dir).unwrap();
+    let prompt: Vec<i32> = (10..40).collect();
+    let a = m.prefill(&prompt).unwrap();
+    let b = m.prefill(&prompt).unwrap();
+    assert_eq!(a.logits, b.logits);
+}
+
+/// The core serving-path consistency check: prefill(prompt) followed by
+/// teacher-forced decode steps must reproduce the logits that a fresh
+/// prefill over the extended prompt yields.
+#[test]
+fn decode_matches_extended_prefill() {
+    let Some(dir) = artifacts() else { return };
+    let m = TinyQwen::load(&dir).unwrap();
+    let b = m.decode_batch;
+    let slot = 3usize;
+    let prompt: Vec<i32> = vec![11, 45, 3, 200, 77, 150, 9];
+    let n = prompt.len();
+
+    // Prefill, scatter into slot `slot` of the batched cache.
+    let pre = m.prefill(&prompt).unwrap();
+    let stride = m.slot_stride(); // max_len*H*D per (layer, slot)
+    let row = m.n_heads * m.head_dim;
+    let mut k = vec![0f32; m.cache_len()];
+    let mut v = vec![0f32; m.cache_len()];
+    for l in 0..m.n_layers {
+        for t in 0..n {
+            let src = (l * m.prefill_len + t) * row;
+            let dst = (l * b + slot) * stride + t * row;
+            k[dst..dst + row].copy_from_slice(&pre.k[src..src + row]);
+            v[dst..dst + row].copy_from_slice(&pre.v[src..src + row]);
+        }
+    }
+
+    // Decode three teacher-forced continuation tokens.
+    let continuation = [400i32, 31, 256];
+    let mut logits_after = Vec::new();
+    let mut len = n;
+    let (mut kc, mut vc) = (k, v);
+    for &tok in &continuation {
+        let mut tokens = vec![0i32; b];
+        let mut lens = vec![0i32; b];
+        tokens[slot] = tok;
+        lens[slot] = len as i32;
+        let out = m.decode(&tokens, &kc, &vc, &lens).unwrap();
+        logits_after =
+            out.logits[slot * m.vocab..(slot + 1) * m.vocab].to_vec();
+        kc = out.k;
+        vc = out.v;
+        len += 1;
+    }
+
+    // Fresh prefill over prompt ++ continuation must match the last
+    // decode step's logits.
+    let mut full = prompt.clone();
+    full.extend_from_slice(&continuation);
+    let re = m.prefill(&full).unwrap();
+    let max_err = re
+        .logits
+        .iter()
+        .zip(logits_after.iter())
+        .map(|(a, b)| (a - b).abs())
+        .fold(0f32, f32::max);
+    assert!(
+        max_err < 2e-3,
+        "decode path diverges from full prefill: max_err={max_err}"
+    );
+}
+
+#[test]
+fn decode_slots_are_independent() {
+    let Some(dir) = artifacts() else { return };
+    let m = TinyQwen::load(&dir).unwrap();
+    let b = m.decode_batch;
+    let zeros_k = vec![0f32; m.cache_len()];
+    let zeros_v = vec![0f32; m.cache_len()];
+    let mut tokens = vec![0i32; b];
+    tokens[0] = 42;
+    let lens = vec![0i32; b];
+    let a = m.decode(&tokens, &zeros_k, &zeros_v, &lens).unwrap();
+    // Garbage in other slots' caches must not leak into slot 0.
+    let mut dirty_k = zeros_k.clone();
+    let stride = m.slot_stride();
+    for l in 0..m.n_layers {
+        for s in 1..b {
+            let at = (l * b + s) * stride;
+            for x in dirty_k[at..at + stride].iter_mut() {
+                *x = 123.0;
+            }
+        }
+    }
+    let c = m.decode(&tokens, &dirty_k, &zeros_v, &lens).unwrap();
+    let a0 = &a.logits[..m.vocab];
+    let c0 = &c.logits[..m.vocab];
+    let max_err = a0
+        .iter()
+        .zip(c0)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0f32, f32::max);
+    assert!(max_err < 1e-5, "slot leakage: {max_err}");
+}
+
+/// Paged attention artifact vs an independent Rust implementation.
+#[test]
+fn paged_attention_matches_rust_reference() {
+    let Some(dir) = artifacts() else { return };
+    let m = TinyQwen::load(&dir).unwrap();
+    // Shapes fixed by aot.py: B=4, P=64, page=16, PPS=16, H/D from model.
+    let (b, p, page, pps) = (4usize, 64usize, 16usize, 16usize);
+    let (h, d) = (m.n_heads, m.head_dim);
+
+    // Deterministic pseudo-random inputs.
+    let mut seed = 0x12345678u64;
+    let mut rnd = || {
+        seed ^= seed << 13;
+        seed ^= seed >> 7;
+        seed ^= seed << 17;
+        ((seed >> 11) as f64 / (1u64 << 53) as f64) as f32 - 0.5
+    };
+    let q: Vec<f32> = (0..b * h * d).map(|_| rnd()).collect();
+    let kp: Vec<f32> = (0..p * page * h * d).map(|_| rnd()).collect();
+    let vp: Vec<f32> = (0..p * page * h * d).map(|_| rnd()).collect();
+    // Block table: sequence s uses pages [s*pps .. (s+1)*pps).
+    let table: Vec<i32> = (0..b * pps).map(|i| i as i32).collect();
+    let lens: Vec<i32> = vec![37, 128, 1, 256];
+
+    let got = m
+        .paged_attn(&q, &kp, &vp, &table, &lens, (b, p, page, h, d))
+        .unwrap();
+
+    // Independent reference: gather pages, masked softmax attention.
+    let scale = 1.0 / (d as f32).sqrt();
+    let mut want = vec![0f32; b * h * d];
+    for s in 0..b {
+        let valid = lens[s] as usize;
+        for hh in 0..h {
+            let qv = &q[(s * h + hh) * d..(s * h + hh + 1) * d];
+            let mut scores = Vec::with_capacity(valid);
+            for pos in 0..valid {
+                let pg = table[s * pps + pos / page] as usize;
+                let off = ((pg * page + pos % page) * h + hh) * d;
+                let kv = &kp[off..off + d];
+                let dot: f32 = qv.iter().zip(kv).map(|(a, b)| a * b).sum();
+                scores.push(dot * scale);
+            }
+            let mx = scores.iter().copied().fold(f32::MIN, f32::max);
+            let exps: Vec<f32> =
+                scores.iter().map(|x| (x - mx).exp()).collect();
+            let denom: f32 = exps.iter().sum();
+            let out = &mut want[(s * h + hh) * d..(s * h + hh + 1) * d];
+            for (pos, &w) in exps.iter().enumerate() {
+                let pg = table[s * pps + pos / page] as usize;
+                let off = ((pg * page + pos % page) * h + hh) * d;
+                for i in 0..d {
+                    out[i] += w / denom * vp[off + i];
+                }
+            }
+        }
+    }
+    let max_err = got
+        .iter()
+        .zip(want.iter())
+        .map(|(a, b)| (a - b).abs())
+        .fold(0f32, f32::max);
+    assert!(
+        max_err < 1e-4,
+        "paged attention artifact diverges from rust ref: {max_err}"
+    );
+}
+
+/// Real-engine smoke: the full coordinator over the compiled model with a
+/// small pipeline — every app completes, memory closes, offloads pair.
+#[test]
+fn real_engine_serves_small_workload() {
+    use tokencake::config::Mode;
+    use tokencake::engine::real::{real_engine_config, RealEngine};
+    use tokencake::graph::{CallSpec, FuncKind, GraphBuilder};
+
+    let Some(dir) = artifacts() else { return };
+    let mut gb = GraphBuilder::new("itest");
+    let a = gb.agent("a", "planner", 16, &[8]);
+    let b = gb.agent_with_call(
+        "b",
+        "worker",
+        16,
+        &[8, 8],
+        CallSpec::new(FuncKind::FileRead).with_predict_time_us(100_000),
+    );
+    gb.edge(a, b);
+    let g = gb.build().unwrap();
+
+    let cfg = real_engine_config(Mode::TokenCake, 11);
+    let mut engine = RealEngine::new(cfg, &dir).unwrap();
+    let report = engine.serve(&g, 4, 150_000).unwrap();
+    assert_eq!(report.metrics.apps_completed, 4);
+    assert!(report.tokens_generated >= 4 * 10);
+    assert_eq!(
+        report.metrics.offload_count,
+        report.metrics.upload_count
+    );
+    assert_eq!(engine.st.cpu.used_blocks(), 0);
+    assert_eq!(
+        engine.st.gpu.free_blocks(),
+        engine.st.gpu.total()
+    );
+}
