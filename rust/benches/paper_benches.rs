@@ -12,12 +12,16 @@
 
 use std::time::Instant;
 
-use tokencake::config::{Mode, ModelProfile, SelectionPolicy, ServeConfig};
+use tokencake::cluster::ClusterEngine;
+use tokencake::config::{
+    ClusterConfig, Mode, ModelProfile, PlacementPolicy, SelectionPolicy,
+    ServeConfig,
+};
 use tokencake::engine::sim::{RunReport, SimEngine};
 use tokencake::graph::{templates, AppGraph, FuncKind};
 use tokencake::metrics::TimeSeries;
 use tokencake::sim::Rng;
-use tokencake::workload::{Dataset, ToolSim, WorkloadSpec};
+use tokencake::workload::{ClusterWorkload, Dataset, ToolSim, WorkloadSpec};
 
 // ---------------------------------------------------------------------
 // Shared runner
@@ -554,6 +558,100 @@ fn fig17_transfer() {
 }
 
 // ---------------------------------------------------------------------
+// Cluster scaling — sharded multi-worker serving
+// ---------------------------------------------------------------------
+
+fn cluster_scaling() {
+    hdr("Cluster scaling — 1/2/4/8 shards, fixed offered load");
+    // Per-shard pools are tight and the aggregate offered load saturates
+    // one worker, so shard count and placement policy both matter. The
+    // same heterogeneous mix (2:1 code-writer : deep-research) is offered
+    // at every scale.
+    let qps = 2.0;
+    let apps = 48;
+    let frac = 0.05;
+    let seeds = [1u64, 2, 3];
+    let policies = [
+        PlacementPolicy::RoundRobin,
+        PlacementPolicy::LeastLoaded,
+        PlacementPolicy::AgentAffinity,
+    ];
+    println!(
+        "| shards | policy | avg(s) | p99(s) | thpt(req/s) | \
+         eff_util | migrations |"
+    );
+    println!("|---|---|---|---|---|---|---|");
+    let mut means: Vec<Vec<f64>> = Vec::new(); // [shards][policy]
+    for &shards in &[1usize, 2, 4, 8] {
+        let mut row_means = Vec::new();
+        for &policy in &policies {
+            let (mut avg, mut p99, mut thpt, mut util) =
+                (0.0, 0.0, 0.0, 0.0);
+            let mut migs = 0u64;
+            for &seed in &seeds {
+                let serve = ServeConfig::default()
+                    .with_mode(Mode::TokenCake)
+                    .with_seed(seed)
+                    .with_gpu_mem_frac(frac);
+                let cfg = ClusterConfig::default()
+                    .with_serve(serve)
+                    .with_shards(shards)
+                    .with_placement(policy);
+                let mix = [
+                    (templates::code_writer(), 2.0),
+                    (templates::deep_research(), 1.0),
+                ];
+                let w = ClusterWorkload::mixed(&mix, qps, apps)
+                    .with_dataset(Dataset::D1);
+                let rep = ClusterEngine::new(cfg).run(&w);
+                assert!(
+                    !rep.truncated,
+                    "{shards} shards {policy:?} seed {seed} truncated"
+                );
+                avg += rep.aggregate.latency.mean_s();
+                p99 += rep.aggregate.latency.percentile_s(99.0);
+                thpt += rep.aggregate.throughput();
+                util += rep.effective_util();
+                migs += rep.migrations;
+            }
+            let n = seeds.len() as f64;
+            println!(
+                "| {} | {} | {:.1} | {:.1} | {:.4} | {:.1}% | {} |",
+                shards,
+                policy.name(),
+                avg / n,
+                p99 / n,
+                thpt / n,
+                util / n * 100.0,
+                migs / seeds.len() as u64,
+            );
+            row_means.push(avg / n);
+        }
+        means.push(row_means);
+    }
+    // The headline claim: KV-aware placement beats agent-oblivious
+    // round robin on mean end-to-end latency once there is more than one
+    // shard to choose between.
+    for (i, &shards) in [1usize, 2, 4, 8].iter().enumerate() {
+        if shards < 2 {
+            continue;
+        }
+        let rr = means[i][0];
+        let aff = means[i][2];
+        println!(
+            "{shards} shards: affinity {aff:.1}s vs round-robin {rr:.1}s \
+             ({:+.1}%)",
+            (aff / rr - 1.0) * 100.0
+        );
+        assert!(
+            aff < rr,
+            "AgentAffinity must beat RoundRobin at {shards} shards: \
+             {aff:.2}s vs {rr:.2}s"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
 // §Perf — L3 hot-path microbenchmarks
 // ---------------------------------------------------------------------
 
@@ -618,6 +716,7 @@ fn main() {
         ("fig15", fig15_selection),
         ("fig16", fig16_watermark),
         ("fig17", fig17_transfer),
+        ("cluster_scaling", cluster_scaling),
         ("perf", perf_scheduler),
     ];
     for (name, f) in benches {

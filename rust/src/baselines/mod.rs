@@ -33,7 +33,8 @@ pub fn mooncake_reactive_phase(
     now_us: u64,
 ) {
     // ---- Reactive uploads (session resumption). ----
-    let ready: Vec<RequestId> = st
+    // Sorted by id so HashMap iteration order never decides upload order.
+    let mut ready: Vec<RequestId> = st
         .reqs
         .values()
         .filter(|r| {
@@ -42,6 +43,7 @@ pub fn mooncake_reactive_phase(
         })
         .map(|r| r.id)
         .collect();
+    ready.sort_unstable();
     for rid in ready {
         // May fail under pressure; retried next step.
         let _ = try_immediate_upload(st, rid, now_us);
@@ -69,7 +71,7 @@ pub fn mooncake_reactive_phase(
             )
         })
         .collect();
-    victims.sort_by_key(|&(_, started, _)| started);
+    victims.sort_by_key(|&(rid, started, _)| (started, rid));
 
     let mut freed = 0u32;
     for (rid, _, blocks) in victims {

@@ -1,0 +1,750 @@
+//! The cluster engine: N worker shards on one shared event clock.
+//!
+//! Each shard is a full single-worker [`SimEngine`] — its own GPU/CPU
+//! block pools, schedulers, forecaster, and migration ledger. The cluster
+//! engine owns what no shard can see alone:
+//!
+//! * the **shared clock** and the global event queue (arrivals, per-shard
+//!   iteration completions, cross-worker migrations) — FIFO tie-breaking
+//!   makes whole-cluster runs bit-for-bit reproducible;
+//! * the **router** (`super::Router`) deciding which shard serves each
+//!   arriving application;
+//! * the **migration planner**: when a shard saturates while another has
+//!   headroom, a *stalled* application (its sole live agent is blocked on
+//!   a function call) is moved — KV blocks leave the source through the
+//!   same pending-free + [`MigrationLedger`] path a local D2H offload
+//!   uses, travel for `interconnect_factor × (D2H + H2D)` on the shared
+//!   clock, and land as a fresh allocation on the destination. A tool
+//!   that returns mid-flight is buffered and re-delivered on landing;
+//!   tool finishes that fire on the old home after the move are forwarded
+//!   to the new one.
+//!
+//! [`MigrationLedger`]: crate::kvcache::MigrationLedger
+
+use std::collections::HashMap;
+
+use crate::config::ClusterConfig;
+use crate::coordination::{AppId, PressureSnapshot, ReqState, RequestId};
+use crate::engine::sim::{OrphanedToolFinish, SimEngine};
+use crate::graph::NodeKind;
+use crate::kvcache::{AllocOutcome, Direction, Route, TransferId};
+use crate::metrics::MetricsBundle;
+use crate::sim::{Clock, EventQueue, Rng};
+use crate::temporal;
+use crate::workload::{ClusterWorkload, ToolSim};
+
+use super::router::Router;
+
+/// Shard id spacing for request/app ids: shard `i` issues ids from
+/// `i << 40`, so ids stay globally unique across the cluster and survive
+/// cross-worker migration without collisions.
+const ID_STRIDE: u64 = 1 << 40;
+
+/// Cluster-level events on the shared clock.
+#[derive(Debug, Clone, PartialEq, Eq)]
+enum CEv {
+    /// The `seq`-th application of the workload arrives.
+    Arrival { seq: u32 },
+    /// A shard's in-flight engine iteration completes.
+    IterDone { shard: usize },
+    /// A cross-worker KV migration transfer lands.
+    MigrationDone { id: u64 },
+}
+
+/// Where a migrated request currently answers tool finishes.
+#[derive(Debug, Clone, Copy)]
+enum Forward {
+    /// Mid-transfer: buffered in the in-flight migration record.
+    InFlight(u64),
+    /// Landed on this shard.
+    Landed(usize),
+}
+
+/// A migration whose transfer is still on the wire.
+struct InFlightMigration {
+    src: usize,
+    dst: usize,
+    /// The D2H leg on the source shard's ledger (pending-free blocks).
+    xfer: TransferId,
+    app: crate::coordination::MigratedApp,
+    /// The stalled request whose KV is being moved.
+    rid: RequestId,
+    /// Blocks in flight.
+    blocks: u32,
+}
+
+/// Result of a cluster run: per-shard bundles plus the cluster rollup.
+#[derive(Debug, Clone)]
+pub struct ClusterReport {
+    pub policy: &'static str,
+    pub num_shards: usize,
+    /// One metric bundle per worker shard (utilization series live here).
+    pub shards: Vec<MetricsBundle>,
+    /// Cluster-wide rollup (latency samples merged, counters summed).
+    pub aggregate: MetricsBundle,
+    /// Cross-worker migrations started / blocks moved / landings that
+    /// found no GPU room and dropped to recompute.
+    pub migrations: u64,
+    pub migration_blocks: u64,
+    pub migration_drops: u64,
+    pub truncated: bool,
+}
+
+impl ClusterReport {
+    /// Mean effective GPU utilization across shards (time-weighted per
+    /// shard, then averaged — every shard models one worker GPU).
+    pub fn effective_util(&self) -> f64 {
+        if self.shards.is_empty() {
+            return 0.0;
+        }
+        self.shards
+            .iter()
+            .map(|m| m.effective_usage.time_weighted_mean())
+            .sum::<f64>()
+            / self.shards.len() as f64
+    }
+
+    /// One-line cluster summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "[cluster x{} {}] apps={} avg={:.1}s p99={:.1}s total={:.1}s \
+             thpt={:.4}req/s eff_util={:.1}% migrations={} \
+             migrated_blocks={} drops={}",
+            self.num_shards,
+            self.policy,
+            self.aggregate.apps_completed,
+            self.aggregate.latency.mean_s(),
+            self.aggregate.latency.percentile_s(99.0),
+            self.aggregate.makespan_us as f64 / 1e6,
+            self.aggregate.throughput(),
+            self.effective_util() * 100.0,
+            self.migrations,
+            self.migration_blocks,
+            self.migration_drops,
+        )
+    }
+
+    /// One line per shard (index, apps, mean latency, utilization, swap).
+    pub fn shard_lines(&self) -> Vec<String> {
+        self.shards
+            .iter()
+            .enumerate()
+            .map(|(i, m)| {
+                format!(
+                    "  shard {i}: apps={} avg={:.1}s gpu_util={:.1}% \
+                     eff_util={:.1}% offloads={} swap_blocks={} \
+                     preempt={}",
+                    m.apps_completed,
+                    m.latency.mean_s(),
+                    m.gpu_usage.time_weighted_mean() * 100.0,
+                    m.effective_usage.time_weighted_mean() * 100.0,
+                    m.offload_count,
+                    m.swap_volume_blocks,
+                    m.counters.preemptions,
+                )
+            })
+            .collect()
+    }
+
+    /// Canonical integer-only serialization of everything the scheduler
+    /// decided — two runs with the same seed and config must produce
+    /// byte-identical digests (the cluster determinism contract).
+    pub fn digest(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "policy={} shards={} truncated={} migrations={} \
+             migration_blocks={} migration_drops={}\n",
+            self.policy,
+            self.num_shards,
+            self.truncated,
+            self.migrations,
+            self.migration_blocks,
+            self.migration_drops,
+        ));
+        let mut line = |tag: &str, m: &MetricsBundle| {
+            out.push_str(&format!(
+                "{tag}: apps={} lat_sum={} lat_n={} req_sum={} req_n={} \
+                 makespan={} swap={} off={} up={} preempt={} inv={} \
+                 recomp={} recomp_tok={} rej={} early={} pfx_gpu={} \
+                 pfx_cpu={} resv={} defer={} iters={} toks={} aborts={}\n",
+                m.apps_completed,
+                m.latency.total_us(),
+                m.latency.len(),
+                m.request_latency.total_us(),
+                m.request_latency.len(),
+                m.makespan_us,
+                m.swap_volume_blocks,
+                m.offload_count,
+                m.upload_count,
+                m.counters.preemptions,
+                m.counters.critical_inversions,
+                m.counters.recomputes,
+                m.counters.recompute_tokens,
+                m.counters.offloads_rejected,
+                m.counters.early_returns,
+                m.counters.prefix_hits_gpu,
+                m.counters.prefix_hits_cpu,
+                m.counters.reserved_admissions,
+                m.counters.deferrals,
+                m.counters.decode_iterations,
+                m.counters.tokens_generated,
+                m.counters.aborted,
+            ));
+        };
+        for (i, m) in self.shards.iter().enumerate() {
+            line(&format!("shard{i}"), m);
+        }
+        line("aggregate", &self.aggregate);
+        out
+    }
+}
+
+/// N sharded workers behind an agent-affinity router, on one event clock.
+pub struct ClusterEngine {
+    pub cfg: ClusterConfig,
+    shards: Vec<SimEngine>,
+    clock: Clock,
+    events: EventQueue<CEv>,
+    rng: Rng,
+    router: Router,
+    /// `busy[i]` — shard `i` has an IterDone event in flight.
+    busy: Vec<bool>,
+    /// Tool-finish forwarding table for migrated requests.
+    forward: HashMap<RequestId, Forward>,
+    inflight: HashMap<u64, InFlightMigration>,
+    next_migration: u64,
+    last_rebalance_us: u64,
+    migrations: u64,
+    migration_blocks: u64,
+    migration_drops: u64,
+    /// Safety valve against policy livelock across the whole cluster.
+    max_iterations: u64,
+}
+
+impl ClusterEngine {
+    pub fn new(cfg: ClusterConfig) -> Self {
+        assert!(cfg.shards >= 1, "cluster needs at least one shard");
+        let seed = cfg.serve.seed;
+        let shards: Vec<SimEngine> = (0..cfg.shards)
+            .map(|i| {
+                let mut sc = cfg.serve.clone();
+                // Decorrelated per-shard RNG stream, derived from the
+                // master seed so the whole cluster keys off one number.
+                sc.seed = Rng::new(seed).fold(0xC1A5 + i as u64).next_u64();
+                let mut e = SimEngine::new(sc);
+                e.set_id_base(i as u64 * ID_STRIDE);
+                e
+            })
+            .collect();
+        let n = shards.len();
+        Self {
+            router: Router::new(
+                cfg.placement,
+                n,
+                0, // grown when templates register in `run`
+                cfg.affinity_spill_load,
+            ),
+            shards,
+            clock: Clock::new(),
+            events: EventQueue::new(),
+            rng: Rng::new(seed),
+            busy: vec![false; n],
+            forward: HashMap::new(),
+            inflight: HashMap::new(),
+            next_migration: 0,
+            last_rebalance_us: 0,
+            migrations: 0,
+            migration_blocks: 0,
+            migration_drops: 0,
+            max_iterations: 3_000_000 * n as u64,
+            cfg,
+        }
+    }
+
+    /// Current simulated time (µs) on the shared clock.
+    pub fn now_us(&self) -> u64 {
+        self.clock.now_us()
+    }
+
+    /// Borrow one shard's engine (tests, inspection).
+    pub fn shard(&self, i: usize) -> &SimEngine {
+        &self.shards[i]
+    }
+
+    fn apps_completed(&self) -> u64 {
+        self.shards
+            .iter()
+            .map(|s| s.st.metrics.apps_completed)
+            .sum()
+    }
+
+    fn snapshots(&self) -> Vec<PressureSnapshot> {
+        self.shards.iter().map(|s| s.st.snapshot()).collect()
+    }
+
+    /// Run a heterogeneous workload across the cluster to completion.
+    /// One run per engine: the clock, ledgers, and router state are not
+    /// reset — build a fresh `ClusterEngine` for each experiment.
+    // Index loops are deliberate: the bodies re-borrow `self` (forwarding,
+    // event pushes), which an iterator over `self.shards` would forbid.
+    #[allow(clippy::needless_range_loop)]
+    pub fn run(&mut self, w: &ClusterWorkload) -> ClusterReport {
+        // Identical template registration on every shard: template
+        // indices and interned agent-type ids agree cluster-wide, which
+        // is what makes `MigratedApp` portable.
+        for e in &w.entries {
+            for shard in self.shards.iter_mut() {
+                shard.register_template(&e.graph);
+            }
+        }
+        self.router = Router::new(
+            self.cfg.placement,
+            self.shards.len(),
+            w.entries.len(),
+            self.cfg.affinity_spill_load,
+        );
+
+        let mut arr_rng = self.rng.fold(1);
+        let arrivals = w.arrivals(&mut arr_rng);
+        for (i, (t, _)) in arrivals.iter().enumerate() {
+            self.events.push(*t, CEv::Arrival { seq: i as u32 });
+        }
+        let tool_sim = ToolSim::new(w.tool_noise);
+        let total_apps = w.num_apps as u64;
+
+        let mut iters: u64 = 0;
+        let mut truncated = false;
+        loop {
+            let now = self.clock.now_us();
+
+            // (a) Per-shard local events due now; forward any tool
+            // finishes whose requests migrated away.
+            for i in 0..self.shards.len() {
+                let orphans =
+                    self.shards[i].advance_shard_to(now, &tool_sim);
+                for o in orphans {
+                    self.forward_tool_finish(o, &tool_sim);
+                }
+            }
+
+            // (b) Global events due now.
+            while let Some(ev) = self.events.pop_due(now) {
+                match ev.payload {
+                    CEv::Arrival { seq } => {
+                        let (_, template) = arrivals[seq as usize];
+                        let snaps = self.snapshots();
+                        let shard = self.router.route(template, &snaps);
+                        let mut rng =
+                            self.rng.fold(1000 + seq as u64);
+                        let scales = w.dataset.sample(&mut rng);
+                        self.shards[shard]
+                            .inject_app(template, scales, &tool_sim);
+                    }
+                    CEv::IterDone { shard } => self.busy[shard] = false,
+                    CEv::MigrationDone { id } => self.land_migration(id),
+                }
+            }
+
+            if self.apps_completed() >= total_apps {
+                break;
+            }
+
+            // (c) Migration planner (windowed).
+            if self.cfg.migration
+                && self.shards.len() > 1
+                && now
+                    >= self.last_rebalance_us
+                        + self.cfg.rebalance_interval_us
+            {
+                self.last_rebalance_us = now;
+                self.plan_migration(now);
+            }
+
+            // (d) Kick every idle shard: scheduling step, and an
+            // iteration if a batch formed.
+            for i in 0..self.shards.len() {
+                if self.busy[i] {
+                    continue;
+                }
+                if let Some(dt) = self.shards[i].step_once(&tool_sim) {
+                    self.busy[i] = true;
+                    self.events.push(now + dt, CEv::IterDone { shard: i });
+                }
+            }
+
+            // (e) Advance the shared clock to the next event anywhere.
+            let mut t_next = self.events.peek_time();
+            for s in &self.shards {
+                t_next = match (t_next, s.next_local_event_us()) {
+                    (None, t) => t,
+                    (t, None) => t,
+                    (Some(a), Some(b)) => Some(a.min(b)),
+                };
+            }
+            match t_next {
+                Some(t) => self.clock.advance_to(t.max(now)),
+                None => {
+                    // Fully idle with work left: per-shard deadlock
+                    // rescue (demote a waiting-with-KV request, break a
+                    // stranded upload reservation).
+                    let progressed = self
+                        .shards
+                        .iter_mut()
+                        .any(|s| s.try_rescue());
+                    if progressed {
+                        continue;
+                    }
+                    truncated = true;
+                    break;
+                }
+            }
+
+            iters += 1;
+            if iters >= self.max_iterations {
+                truncated = true;
+                break;
+            }
+        }
+
+        let end = self.clock.now_us();
+        let shard_metrics: Vec<MetricsBundle> = self
+            .shards
+            .iter_mut()
+            .map(|s| s.finalize_metrics(end))
+            .collect();
+        let mut aggregate = MetricsBundle::default();
+        for m in &shard_metrics {
+            aggregate.absorb(m);
+        }
+        ClusterReport {
+            policy: self.cfg.placement.name(),
+            num_shards: self.shards.len(),
+            shards: shard_metrics,
+            aggregate,
+            migrations: self.migrations,
+            migration_blocks: self.migration_blocks,
+            migration_drops: self.migration_drops,
+            truncated,
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Tool-finish forwarding
+    // ------------------------------------------------------------------
+
+    fn forward_tool_finish(
+        &mut self,
+        o: OrphanedToolFinish,
+        tool_sim: &ToolSim,
+    ) {
+        match self.forward.get(&o.rid).copied() {
+            Some(Forward::InFlight(mid)) => {
+                // Tool returned while the KV is on the wire: buffer the
+                // completion; landing resumes the request immediately.
+                if let Some(m) = self.inflight.get_mut(&mid) {
+                    if let Some(r) = m
+                        .app
+                        .requests
+                        .iter_mut()
+                        .find(|r| r.id == o.rid)
+                    {
+                        if let Some(fc) = r.fc.as_mut() {
+                            fc.tool_done = true;
+                            fc.finished_us = o.at_us;
+                        }
+                    }
+                }
+            }
+            Some(Forward::Landed(dst)) => {
+                let now = self.clock.now_us();
+                let nested =
+                    self.shards[dst].advance_shard_to(now, tool_sim);
+                for o2 in nested {
+                    self.forward_tool_finish(o2, tool_sim);
+                }
+                self.shards[dst].deliver_tool_finish(o.rid);
+            }
+            None => {
+                debug_assert!(
+                    false,
+                    "orphaned tool finish for unknown request {:?}",
+                    o.rid
+                );
+            }
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Cross-worker KV migration
+    // ------------------------------------------------------------------
+
+    /// One migration per planning window: move the most-profitable
+    /// stalled app from the most-saturated shard to the least-loaded one.
+    fn plan_migration(&mut self, now: u64) {
+        let usages: Vec<f64> =
+            self.shards.iter().map(|s| s.st.gpu.usage()).collect();
+        let mut src: Option<(f64, usize)> = None;
+        let mut dst: Option<(f64, usize)> = None;
+        for (i, &u) in usages.iter().enumerate() {
+            if u >= self.cfg.migrate_src_usage
+                && src.map(|(b, _)| u > b).unwrap_or(true)
+            {
+                src = Some((u, i));
+            }
+            if u < self.cfg.migrate_dst_usage
+                && dst.map(|(b, _)| u < b).unwrap_or(true)
+            {
+                dst = Some((u, i));
+            }
+        }
+        let (Some((_, src)), Some((_, dst))) = (src, dst) else {
+            return;
+        };
+        if src == dst {
+            return;
+        }
+        let Some((app_id, rid, blocks, predicted_end)) =
+            self.pick_candidate(src)
+        else {
+            return;
+        };
+        // The move must pay for itself: predicted remaining stall must
+        // exceed `migrate_payback ×` the cross-worker transfer time.
+        let profile = &self.shards[src].st.cfg.profile;
+        let cost_us = ((profile.offload_us(blocks)
+            + profile.upload_us(blocks)) as f64
+            * self.cfg.interconnect_factor) as u64;
+        let remaining = predicted_end.saturating_sub(now);
+        if (remaining as f64) < self.cfg.migrate_payback * cost_us as f64 {
+            return;
+        }
+        // Destination must have room for the blocks on arrival (best
+        // effort — it may still fill up mid-flight, see `land_migration`).
+        if self.shards[dst].st.gpu.available_for(Route::Shared) < blocks {
+            return;
+        }
+        self.start_migration(src, dst, app_id, rid, blocks, cost_us, now);
+    }
+
+    /// A migratable app on `shard`: every request finished or waiting
+    /// without KV, except exactly one agent stalled on an unfinished
+    /// function call with GPU-resident blocks, and no standalone func
+    /// node mid-delay. Returns the one with the longest predicted
+    /// remaining stall.
+    fn pick_candidate(
+        &self,
+        shard: usize,
+    ) -> Option<(AppId, RequestId, u32, u64)> {
+        let st = &self.shards[shard].st;
+        let mut app_ids: Vec<AppId> = st.apps.keys().copied().collect();
+        app_ids.sort_unstable();
+        let mut best: Option<(u64, AppId, RequestId, u32)> = None;
+        'apps: for app_id in app_ids {
+            let app = &st.apps[&app_id];
+            if app.finished_us.is_some() {
+                continue;
+            }
+            let template = st.app_template[&app_id];
+            let g = &st.graphs[template];
+            // A standalone func node mid-delay pins the app here (its
+            // completion event lives in this shard's queue).
+            for node in g.nodes() {
+                let i = node.id.0 as usize;
+                if matches!(node.kind, NodeKind::Func(_))
+                    && !app.node_done[i]
+                    && app.pending_parents[i] == 0
+                {
+                    continue 'apps;
+                }
+            }
+            let mut stalled: Option<(RequestId, u32, u64)> = None;
+            for rid in app.node_req.iter().flatten() {
+                let r = &st.reqs[rid];
+                match r.state {
+                    ReqState::Finished => {}
+                    ReqState::Waiting
+                        if r.blocks.is_empty()
+                            && r.upload_reserved.is_empty() => {}
+                    ReqState::Stalled => {
+                        let Some(fc) = &r.fc else { continue 'apps };
+                        if fc.tool_done
+                            || r.blocks.is_empty()
+                            || !r.upload_reserved.is_empty()
+                        {
+                            continue 'apps;
+                        }
+                        if stalled.is_some() {
+                            continue 'apps;
+                        }
+                        stalled = Some((
+                            *rid,
+                            r.blocks.len() as u32,
+                            fc.predicted_end_us,
+                        ));
+                    }
+                    _ => continue 'apps,
+                }
+            }
+            if let Some((rid, blocks, end)) = stalled {
+                if best.map(|(b, ..)| end > b).unwrap_or(true) {
+                    best = Some((end, app_id, rid, blocks));
+                }
+            }
+        }
+        best.map(|(end, app_id, rid, blocks)| (app_id, rid, blocks, end))
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn start_migration(
+        &mut self,
+        src: usize,
+        dst: usize,
+        app_id: AppId,
+        rid: RequestId,
+        blocks_n: u32,
+        cost_us: u64,
+        now: u64,
+    ) {
+        let shard = &mut self.shards[src];
+        // The blocks leave through the exact D2H path a local offload
+        // uses: pending-free on the pool, a ledger entry until the copy
+        // lands.
+        let (blocks, charged, tid) = {
+            let r = shard.st.reqs.get_mut(&rid).unwrap();
+            (
+                std::mem::take(&mut r.blocks),
+                std::mem::take(&mut r.reserved_charged),
+                r.type_id,
+            )
+        };
+        shard.st.gpu.mark_pending_free(&blocks, charged, Some(tid));
+        let completes = now + cost_us;
+        let xfer = shard.st.ledger.issue(
+            rid.0,
+            Direction::D2H,
+            blocks,
+            Vec::new(),
+            now,
+            completes,
+        );
+        let app = shard.st.extract_app(app_id);
+        let template = app.template;
+        let id = self.next_migration;
+        self.next_migration += 1;
+        for r in &app.requests {
+            self.forward.insert(r.id, Forward::InFlight(id));
+        }
+        self.inflight.insert(
+            id,
+            InFlightMigration {
+                src,
+                dst,
+                xfer,
+                app,
+                rid,
+                blocks: blocks_n,
+            },
+        );
+        self.router.mark_warm(dst, template);
+        self.events.push(completes, CEv::MigrationDone { id });
+        self.migrations += 1;
+        self.migration_blocks += blocks_n as u64;
+    }
+
+    fn land_migration(&mut self, id: u64) {
+        let now = self.clock.now_us();
+        let Some(mut m) = self.inflight.remove(&id) else {
+            return;
+        };
+        // Source side: the D2H leg completes, blocks become reusable.
+        if let Some(t) = self.shards[m.src].st.ledger.complete(m.xfer) {
+            self.shards[m.src].st.gpu.complete_pending(t.gpu_blocks);
+        }
+        // Destination side: materialize the KV. If the pool filled up
+        // mid-flight the cache is dropped and the agent recomputes on
+        // resume — the honest failure mode of a saturating cluster.
+        let dst_idx = m.dst;
+        let granted;
+        {
+            let dst = &mut self.shards[dst_idx];
+            let r = m
+                .app
+                .requests
+                .iter_mut()
+                .find(|r| r.id == m.rid)
+                .expect("migrated request missing from payload");
+            match dst.st.gpu.alloc(m.blocks, Route::Shared) {
+                AllocOutcome::Granted { blocks, .. } => {
+                    r.blocks = blocks;
+                    r.migrations += 1;
+                    granted = true;
+                }
+                AllocOutcome::Deferred => {
+                    // The dropped cache is a real recompute, accounted
+                    // like every other recompute path (preemption,
+                    // deadlock rescue) — on the shard that will pay it.
+                    r.remaining_prefill = r.context_tokens;
+                    dst.st.metrics.counters.recomputes += 1;
+                    dst.st.metrics.counters.recompute_tokens +=
+                        r.context_tokens as u64;
+                    granted = false;
+                }
+            }
+            if granted {
+                // H2D accounting on the destination ledger; the wire time
+                // was already served on the shared clock, so the entry
+                // completes immediately.
+                let xfer = dst.st.ledger.issue(
+                    m.rid.0,
+                    Direction::H2D,
+                    r.blocks.clone(),
+                    Vec::new(),
+                    now,
+                    now,
+                );
+                let _ = dst.st.ledger.complete(xfer);
+            }
+        }
+        if !granted {
+            self.migration_drops += 1;
+        }
+        let tool_done = m
+            .app
+            .requests
+            .iter()
+            .find(|r| r.id == m.rid)
+            .and_then(|r| r.fc.as_ref())
+            .map(|f| f.tool_done)
+            .unwrap_or(false);
+        for r in &m.app.requests {
+            self.forward.insert(r.id, Forward::Landed(dst_idx));
+        }
+        let rid = m.rid;
+        self.shards[dst_idx].st.implant_app(m.app);
+        if tool_done {
+            // The tool returned mid-flight (buffered by
+            // `forward_tool_finish`). Replay what `call_finish` would
+            // have done — feed the forecaster on the request's new home
+            // and count an early return — then resume immediately.
+            let st = &mut self.shards[dst_idx].st;
+            let (name, started, finished, predicted_end) = {
+                let fc = st.reqs[&rid]
+                    .fc
+                    .as_ref()
+                    .expect("buffered finish without fc");
+                (
+                    fc.name.clone(),
+                    fc.started_us,
+                    fc.finished_us,
+                    fc.predicted_end_us,
+                )
+            };
+            st.forecaster
+                .observe_us(&name, finished.saturating_sub(started));
+            if finished < predicted_end {
+                st.metrics.counters.early_returns += 1;
+            }
+            temporal::resume_from_fc(st, rid, now);
+        }
+    }
+}

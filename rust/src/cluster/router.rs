@@ -1,0 +1,223 @@
+//! Placement router: which worker shard serves a newly arrived
+//! application.
+//!
+//! Three policies, all reading the same per-shard [`PressureSnapshot`]s:
+//!
+//! * **RoundRobin** — the agent-oblivious multi-worker baseline: shard
+//!   `k mod N`, blind to load and to where an agent type's KV state lives.
+//! * **LeastLoaded** — lowest pressure score wins. The score blends GPU
+//!   occupancy with queued-but-unadmitted demand so two arrivals in the
+//!   same scheduling window don't pile onto one shard whose occupancy
+//!   hasn't moved yet.
+//! * **AgentAffinity** — the KV-centric policy: an application prefers the
+//!   shard that already holds its agent types' cached state (warm shared
+//!   prefixes, trained tool forecaster, reserved-quota history). Warmth is
+//!   a bounded credit on the pressure score — a home shard may carry
+//!   [`AFFINITY_BONUS`] more load than a cold one before losing the app,
+//!   and the credit is withdrawn entirely once the home crosses the spill
+//!   threshold. The shard that wins becomes warm for the template.
+
+use crate::config::PlacementPolicy;
+use crate::coordination::PressureSnapshot;
+
+/// Load-score credit a warm shard gets under `AgentAffinity` — how much
+/// extra pressure a template's home may carry before a cold shard wins.
+const AFFINITY_BONUS: f64 = 0.25;
+
+/// Pluggable placement router over N shards.
+#[derive(Debug, Clone)]
+pub struct Router {
+    policy: PlacementPolicy,
+    shards: usize,
+    /// RoundRobin cursor.
+    rr_next: usize,
+    /// AgentAffinity: spill to a cold shard at/above this pressure score.
+    spill_load: f64,
+    /// `warm[s]` — templates whose agents' KV state is hot on shard `s`
+    /// (indexed by template id; templates are registered identically on
+    /// every shard).
+    warm: Vec<Vec<bool>>,
+}
+
+impl Router {
+    pub fn new(
+        policy: PlacementPolicy,
+        shards: usize,
+        templates: usize,
+        spill_load: f64,
+    ) -> Self {
+        assert!(shards >= 1);
+        Self {
+            policy,
+            shards,
+            rr_next: 0,
+            spill_load,
+            warm: vec![vec![false; templates]; shards],
+        }
+    }
+
+    pub fn policy(&self) -> PlacementPolicy {
+        self.policy
+    }
+
+    /// Pressure score of one shard: GPU occupancy plus waiting demand
+    /// (as a fraction of the pool) plus a small per-queued-request term so
+    /// back-to-back arrivals spread before occupancy reacts.
+    pub fn load_score(snap: &PressureSnapshot) -> f64 {
+        snap.usage + snap.waiting_pressure() + 0.02 * snap.waiting_count as f64
+    }
+
+    /// Lowest-score shard; ties break to the lowest index (determinism).
+    fn least_loaded(snaps: &[PressureSnapshot]) -> usize {
+        let mut best = 0usize;
+        let mut best_score = f64::INFINITY;
+        for (i, s) in snaps.iter().enumerate() {
+            let score = Self::load_score(s);
+            if score < best_score {
+                best_score = score;
+                best = i;
+            }
+        }
+        best
+    }
+
+    /// Route one application of `template`, given the current per-shard
+    /// pressure snapshots. Updates the policy's internal state (cursor /
+    /// warm sets).
+    pub fn route(
+        &mut self,
+        template: usize,
+        snaps: &[PressureSnapshot],
+    ) -> usize {
+        debug_assert_eq!(snaps.len(), self.shards);
+        let pick = match self.policy {
+            PlacementPolicy::RoundRobin => {
+                let s = self.rr_next % self.shards;
+                self.rr_next += 1;
+                s
+            }
+            PlacementPolicy::LeastLoaded => Self::least_loaded(snaps),
+            PlacementPolicy::AgentAffinity => {
+                // Pressure-aware affinity: least-loaded scoring with a
+                // warmth bonus for shards already holding this
+                // template's KV state. The bonus keeps a template on its
+                // home while loads are comparable (KV reuse wins) but
+                // never pins it to a saturated shard: the bonus is
+                // withdrawn at the spill threshold, and a sufficiently
+                // large load gap always overrides warmth.
+                let mut best = 0usize;
+                let mut best_score = f64::INFINITY;
+                for (i, s) in snaps.iter().enumerate() {
+                    let load = Self::load_score(s);
+                    let warm = self.warm[i]
+                        .get(template)
+                        .copied()
+                        .unwrap_or(false);
+                    let bonus = if warm && load < self.spill_load {
+                        AFFINITY_BONUS
+                    } else {
+                        0.0
+                    };
+                    let score = load - bonus;
+                    if score < best_score {
+                        best_score = score;
+                        best = i;
+                    }
+                }
+                best
+            }
+        };
+        self.mark_warm(pick, template);
+        pick
+    }
+
+    /// A shard becomes warm for a template once it hosts an app of it
+    /// (routing or cross-worker migration).
+    pub fn mark_warm(&mut self, shard: usize, template: usize) {
+        if let Some(row) = self.warm.get_mut(shard) {
+            if template < row.len() {
+                row[template] = true;
+            }
+        }
+    }
+
+    #[cfg(test)]
+    fn is_warm(&self, shard: usize, template: usize) -> bool {
+        self.warm[shard][template]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn snap(usage: f64, waiting_demand: u32, waiting_count: u32)
+        -> PressureSnapshot {
+        PressureSnapshot {
+            gpu_total: 1000,
+            gpu_free: ((1.0 - usage) * 1000.0) as u32,
+            usage,
+            waiting_demand,
+            waiting_count,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let mut r = Router::new(PlacementPolicy::RoundRobin, 3, 2, 0.8);
+        let snaps = vec![snap(0.9, 0, 0), snap(0.0, 0, 0), snap(0.0, 0, 0)];
+        let picks: Vec<usize> =
+            (0..6).map(|_| r.route(0, &snaps)).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn least_loaded_picks_min_and_counts_queued_demand() {
+        let mut r = Router::new(PlacementPolicy::LeastLoaded, 3, 1, 0.8);
+        // Shard 1 has lower occupancy but a deep queue; shard 2 wins.
+        let snaps =
+            vec![snap(0.7, 0, 0), snap(0.2, 600, 9), snap(0.3, 0, 0)];
+        assert_eq!(r.route(0, &snaps), 2);
+        // Ties break to the lowest index.
+        let even = vec![snap(0.5, 0, 0), snap(0.5, 0, 0)];
+        let mut r2 = Router::new(PlacementPolicy::LeastLoaded, 2, 1, 0.8);
+        assert_eq!(r2.route(0, &even), 0);
+    }
+
+    #[test]
+    fn affinity_sticks_until_spill_then_falls_back() {
+        let mut r = Router::new(PlacementPolicy::AgentAffinity, 2, 1, 0.8);
+        let cold = vec![snap(0.1, 0, 0), snap(0.0, 0, 0)];
+        // First arrival: nothing warm — least-loaded shard 1 gets it and
+        // becomes the template's home.
+        assert_eq!(r.route(0, &cold), 1);
+        assert!(r.is_warm(1, 0));
+        // While loads are comparable, the warmth bonus keeps the home
+        // shard winning even when the other shard is emptier.
+        let busy_home = vec![snap(0.2, 0, 0), snap(0.4, 0, 0)];
+        assert_eq!(r.route(0, &busy_home), 1);
+        // A large load gap overrides warmth...
+        let lopsided = vec![snap(0.0, 0, 0), snap(0.6, 0, 0)];
+        assert_eq!(r.route(0, &lopsided), 0);
+        assert!(r.is_warm(0, 0));
+        // ...and at/above the spill threshold the bonus is withdrawn
+        // entirely.
+        let mut r2 = Router::new(PlacementPolicy::AgentAffinity, 2, 1, 0.8);
+        r2.mark_warm(1, 0);
+        let saturated = vec![snap(0.7, 0, 0), snap(0.85, 0, 0)];
+        assert_eq!(r2.route(0, &saturated), 0);
+    }
+
+    #[test]
+    fn affinity_separates_templates() {
+        let mut r = Router::new(PlacementPolicy::AgentAffinity, 2, 2, 0.8);
+        let snaps = vec![snap(0.0, 0, 0), snap(0.0, 0, 0)];
+        let home0 = r.route(0, &snaps);
+        // Template 0's home now carries load; template 1 lands elsewhere.
+        let after = vec![snap(0.3, 0, 0), snap(0.0, 0, 0)];
+        let home1 = r.route(1, &after);
+        assert_eq!(home0, 0);
+        assert_eq!(home1, 1);
+    }
+}

@@ -242,6 +242,196 @@ impl Default for PolicyConfig {
     }
 }
 
+/// Request-placement policy for the cluster router (see
+/// `cluster::Router`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlacementPolicy {
+    /// Agent-oblivious round robin — the multi-worker baseline.
+    RoundRobin,
+    /// Pick the shard with the lowest pressure score.
+    LeastLoaded,
+    /// Route an application to the shard already holding its agent types'
+    /// KV state (warm prefixes, hot forecaster); fall back to the
+    /// pressure score when the affinity target is saturated.
+    AgentAffinity,
+}
+
+impl PlacementPolicy {
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "round-robin" | "roundrobin" | "rr" => {
+                PlacementPolicy::RoundRobin
+            }
+            "least-loaded" | "leastloaded" | "least" => {
+                PlacementPolicy::LeastLoaded
+            }
+            "agent-affinity" | "affinity" | "aff" => {
+                PlacementPolicy::AgentAffinity
+            }
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PlacementPolicy::RoundRobin => "round-robin",
+            PlacementPolicy::LeastLoaded => "least-loaded",
+            PlacementPolicy::AgentAffinity => "agent-affinity",
+        }
+    }
+}
+
+/// Multi-worker cluster configuration: N shards, each an independent
+/// worker with its own GPU/CPU block pools and scheduler state, fed by a
+/// placement router and (optionally) rebalanced through cross-worker KV
+/// migration.
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    /// Per-shard serving configuration (each shard models one worker GPU;
+    /// `gpu_mem_frac` applies per shard). Shard RNGs derive from
+    /// `serve.seed` by folding the shard index.
+    pub serve: ServeConfig,
+    /// Number of worker shards.
+    pub shards: usize,
+    pub placement: PlacementPolicy,
+    /// Enable cross-worker migration of stalled agents' KV blocks.
+    pub migration: bool,
+    /// A shard is a migration *source* when its GPU usage is at or above
+    /// this.
+    pub migrate_src_usage: f64,
+    /// A shard is a migration *destination* when its GPU usage is below
+    /// this.
+    pub migrate_dst_usage: f64,
+    /// Migrate only when the predicted remaining stall exceeds this
+    /// multiple of the cross-worker transfer time (the move must pay for
+    /// itself).
+    pub migrate_payback: f64,
+    /// Cross-worker interconnect slowdown vs. the local PCIe D2H+H2D
+    /// round trip (NIC hop + remote write).
+    pub interconnect_factor: f64,
+    /// How often the migration planner runs (µs of simulated time).
+    pub rebalance_interval_us: u64,
+    /// AgentAffinity spills to a cold shard once the warm shard's
+    /// pressure score is at or above this.
+    pub affinity_spill_load: f64,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        Self {
+            serve: ServeConfig::default(),
+            shards: 2,
+            placement: PlacementPolicy::AgentAffinity,
+            migration: true,
+            migrate_src_usage: 0.90,
+            migrate_dst_usage: 0.60,
+            migrate_payback: 2.0,
+            interconnect_factor: 2.0,
+            rebalance_interval_us: 250_000,
+            affinity_spill_load: 0.80,
+        }
+    }
+}
+
+impl ClusterConfig {
+    pub fn with_shards(mut self, n: usize) -> Self {
+        assert!(n >= 1, "cluster needs at least one shard");
+        self.shards = n;
+        self
+    }
+
+    pub fn with_placement(mut self, p: PlacementPolicy) -> Self {
+        self.placement = p;
+        self
+    }
+
+    pub fn with_migration(mut self, on: bool) -> Self {
+        self.migration = on;
+        self
+    }
+
+    pub fn with_serve(mut self, serve: ServeConfig) -> Self {
+        self.serve = serve;
+        self
+    }
+
+    /// Apply one (section, key, value) override; `cluster` keys are
+    /// handled here, everything else falls through to the per-shard
+    /// [`ServeConfig`].
+    pub fn apply_kv(
+        &mut self,
+        section: &str,
+        key: &str,
+        value: &str,
+    ) -> Result<(), ParseError> {
+        let bad = || ParseError::BadValue {
+            section: section.to_string(),
+            key: key.to_string(),
+            value: value.to_string(),
+        };
+        if section != "cluster" {
+            return self.serve.apply_kv(section, key, value);
+        }
+        match key {
+            "shards" => {
+                self.shards =
+                    value.parse::<usize>().map_err(|_| bad())?.max(1)
+            }
+            "placement" => {
+                self.placement =
+                    PlacementPolicy::parse(value).ok_or_else(bad)?
+            }
+            "migration" => {
+                self.migration = match value {
+                    "true" | "on" | "1" => true,
+                    "false" | "off" | "0" => false,
+                    _ => return Err(bad()),
+                }
+            }
+            "migrate_src_usage" => {
+                self.migrate_src_usage =
+                    value.parse().map_err(|_| bad())?
+            }
+            "migrate_dst_usage" => {
+                self.migrate_dst_usage =
+                    value.parse().map_err(|_| bad())?
+            }
+            "migrate_payback" => {
+                self.migrate_payback = value.parse().map_err(|_| bad())?
+            }
+            "interconnect_factor" => {
+                self.interconnect_factor =
+                    value.parse().map_err(|_| bad())?
+            }
+            "rebalance_interval_us" => {
+                self.rebalance_interval_us =
+                    value.parse().map_err(|_| bad())?
+            }
+            "affinity_spill_load" => {
+                self.affinity_spill_load =
+                    value.parse().map_err(|_| bad())?
+            }
+            _ => {
+                return Err(ParseError::UnknownKey {
+                    section: section.to_string(),
+                    key: key.to_string(),
+                })
+            }
+        }
+        Ok(())
+    }
+
+    /// Load overrides from a TOML-subset file (shared parser with
+    /// [`ServeConfig::apply_file`]).
+    pub fn apply_file(&mut self, path: &str) -> Result<(), ParseError> {
+        let kv = parse_kv_file(path)?;
+        for ((section, key), value) in kv.iter() {
+            self.apply_kv(section, key, value)?;
+        }
+        Ok(())
+    }
+}
+
 /// Top-level serving configuration.
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
@@ -440,5 +630,49 @@ mod tests {
     fn gpu_mem_frac_scales_blocks() {
         let c = ServeConfig::default().with_gpu_mem_frac(0.5);
         assert_eq!(c.gpu_blocks(), c.profile.gpu_blocks / 2);
+    }
+
+    #[test]
+    fn placement_policy_parse_roundtrip() {
+        for p in [
+            PlacementPolicy::RoundRobin,
+            PlacementPolicy::LeastLoaded,
+            PlacementPolicy::AgentAffinity,
+        ] {
+            assert_eq!(PlacementPolicy::parse(p.name()), Some(p));
+        }
+        assert_eq!(PlacementPolicy::parse("rr"),
+                   Some(PlacementPolicy::RoundRobin));
+        assert_eq!(PlacementPolicy::parse("affinity"),
+                   Some(PlacementPolicy::AgentAffinity));
+        assert_eq!(PlacementPolicy::parse("bogus"), None);
+    }
+
+    #[test]
+    fn cluster_config_kv_overrides() {
+        let mut c = ClusterConfig::default();
+        c.apply_kv("cluster", "shards", "4").unwrap();
+        c.apply_kv("cluster", "placement", "least-loaded").unwrap();
+        c.apply_kv("cluster", "migration", "off").unwrap();
+        c.apply_kv("cluster", "interconnect_factor", "3.5").unwrap();
+        // Non-cluster sections fall through to the per-shard config.
+        c.apply_kv("serve", "mode", "vllm").unwrap();
+        assert_eq!(c.shards, 4);
+        assert_eq!(c.placement, PlacementPolicy::LeastLoaded);
+        assert!(!c.migration);
+        assert_eq!(c.interconnect_factor, 3.5);
+        assert_eq!(c.serve.mode, Mode::Vllm);
+        assert!(c.apply_kv("cluster", "shards", "x").is_err());
+        assert!(c.apply_kv("cluster", "nope", "1").is_err());
+    }
+
+    #[test]
+    fn cluster_defaults_sane() {
+        let c = ClusterConfig::default();
+        assert!(c.shards >= 1);
+        assert_eq!(c.placement, PlacementPolicy::AgentAffinity);
+        assert!(c.migration);
+        assert!(c.migrate_src_usage > c.migrate_dst_usage);
+        assert!(c.interconnect_factor >= 1.0);
     }
 }

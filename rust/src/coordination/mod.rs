@@ -23,7 +23,9 @@ mod state;
 pub use request::{
     AppId, AppInst, FcRt, PhaseRt, ReqState, Request, RequestId,
 };
-pub use state::{ServeState, ThroughputEstimator, TypeRegistry};
+pub use state::{
+    MigratedApp, ServeState, ThroughputEstimator, TypeRegistry,
+};
 
 use crate::kvcache::TransferId;
 

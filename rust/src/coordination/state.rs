@@ -107,6 +107,22 @@ impl ThroughputEstimator {
     }
 }
 
+/// An application lifted out of one worker's [`ServeState`] for
+/// cross-worker migration (see `cluster::ClusterEngine`). Carries the DAG
+/// progress plus every request the app ever spawned — finished requests
+/// included, because child prompt inheritance reads the parent request's
+/// `tokens_generated` at spawn time.
+#[derive(Debug, Clone)]
+pub struct MigratedApp {
+    /// Graph template index — only valid when source and destination
+    /// registered the same templates in the same order (the cluster layer
+    /// guarantees this at startup).
+    pub template: usize,
+    pub app: AppInst,
+    /// All requests of the app, in id order.
+    pub requests: Vec<Request>,
+}
+
 /// Spatial Scheduler mutable state (ρ, critical set, adjustment window).
 #[derive(Debug, Clone)]
 pub struct SpatialState {
@@ -181,6 +197,84 @@ impl ServeState {
             outbox: Vec::new(),
             next_req: 0,
             next_app: 0,
+        }
+    }
+
+    /// Offset the app/request id counters. Cluster deployments give every
+    /// worker a disjoint id range so requests stay uniquely addressable
+    /// after cross-worker migration. Panics if ids were already handed out
+    /// past the new base.
+    pub fn set_id_base(&mut self, base: u64) {
+        assert!(
+            self.next_req <= base && self.next_app <= base,
+            "id base {base} below already-issued ids"
+        );
+        self.next_req = base;
+        self.next_app = base;
+    }
+
+    /// Lift an application (DAG progress + all of its requests) out of
+    /// this state for cross-worker migration. The caller is responsible
+    /// for having released or transferred any GPU/CPU blocks the requests
+    /// still reference — this method only moves bookkeeping.
+    pub fn extract_app(&mut self, app_id: AppId) -> MigratedApp {
+        let template = self
+            .app_template
+            .remove(&app_id)
+            .expect("extract_app: unknown app");
+        let app = self.apps.remove(&app_id).expect("extract_app: no inst");
+        let mut requests: Vec<Request> = app
+            .node_req
+            .iter()
+            .flatten()
+            .filter_map(|rid| self.reqs.remove(rid))
+            .collect();
+        requests.sort_by_key(|r| r.id);
+        self.waiting
+            .retain(|rid| !requests.iter().any(|r| r.id == *rid));
+        // Live batch membership would mean the app was not quiescent —
+        // the migration policy only picks stalled apps, so this is a
+        // coordinator bug, not a recoverable condition.
+        for r in &requests {
+            debug_assert!(
+                !self.running.contains(&r.id)
+                    && !self.prefilling.contains(&r.id),
+                "extract_app: request {:?} still in the batch",
+                r.id
+            );
+        }
+        MigratedApp {
+            template,
+            app,
+            requests,
+        }
+    }
+
+    /// Install a migrated application into this state. Requests in
+    /// `Waiting` state re-enter the waiting queue in id order (arrival
+    /// order on the source worker). Block ownership must already point at
+    /// this worker's pools.
+    pub fn implant_app(&mut self, m: MigratedApp) {
+        debug_assert!(
+            m.template < self.graphs.len(),
+            "implant_app: template {} not registered",
+            m.template
+        );
+        let app_id = m.app.id;
+        self.app_template.insert(app_id, m.template);
+        self.apps.insert(app_id, m.app);
+        for r in m.requests {
+            debug_assert!(
+                (r.type_id as usize) < self.types.len(),
+                "implant_app: unknown agent type {}",
+                r.type_id
+            );
+            let id = r.id;
+            let waiting = r.state == ReqState::Waiting;
+            self.reqs.insert(id, r);
+            if waiting {
+                self.waiting.push_back(id);
+            }
         }
     }
 

@@ -9,5 +9,6 @@
 //!   example: drives the TinyQwen PJRT artifacts through the same
 //!   scheduling step, with real tokens and real host-memory offload.
 
+#[cfg(feature = "pjrt")]
 pub mod real;
 pub mod sim;

@@ -12,13 +12,13 @@ use crate::config::ServeConfig;
 use crate::coordination::{
     self, Action, AppId, ReqState, RequestId, ServeState,
 };
-use crate::graph::{NodeId, NodeKind};
+use crate::graph::{AppGraph, NodeId, NodeKind};
 use crate::kvcache::{AllocOutcome, TransferId};
 use crate::metrics::MetricsBundle;
 use crate::sim::{Clock, EventQueue, Rng};
 use crate::spatial;
 use crate::temporal;
-use crate::workload::{ToolSim, WorkloadSpec};
+use crate::workload::{SampledLengths, ToolSim, WorkloadSpec};
 
 /// Engine event alphabet.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -27,6 +27,16 @@ enum Ev {
     ToolFinish { rid: RequestId },
     NodeDelayDone { app: AppId, node: NodeId },
     TransferDone { xfer: TransferId },
+}
+
+/// A `ToolFinish` whose request no longer lives on this worker — it was
+/// migrated to another shard while the tool was running. The cluster
+/// driver re-delivers it to the request's new home; standalone runs never
+/// produce one.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct OrphanedToolFinish {
+    pub rid: RequestId,
+    pub at_us: u64,
 }
 
 /// Result of a workload run.
@@ -88,7 +98,20 @@ impl SimEngine {
         loop {
             // 1. Apply all events due at the current time.
             while let Some(ev) = self.events.pop_due(self.clock.now_us()) {
-                self.apply_event(ev.payload, template, spec, &tool_sim);
+                match ev.payload {
+                    Ev::AppArrival { seq } => {
+                        let mut rng = self.rng.fold(1000 + seq as u64);
+                        let scales = spec.dataset.sample(&mut rng);
+                        self.inject_app(template, scales, &tool_sim);
+                    }
+                    other => {
+                        // Standalone runs never migrate requests away, so
+                        // an orphaned tool finish here is impossible.
+                        let orphan =
+                            self.apply_runtime_event(other, &tool_sim);
+                        debug_assert!(orphan.is_none());
+                    }
+                }
             }
 
             if self.st.metrics.apps_completed >= total_apps {
@@ -166,36 +189,34 @@ impl SimEngine {
         }
     }
 
-    fn apply_event(
+    /// Apply a non-arrival event at the current clock time. Returns the
+    /// event back as an orphan when it is a `ToolFinish` for a request
+    /// that left this worker (cluster migration).
+    fn apply_runtime_event(
         &mut self,
         ev: Ev,
-        template: usize,
-        spec: &WorkloadSpec,
         tool_sim: &ToolSim,
-    ) {
+    ) -> Option<OrphanedToolFinish> {
         let now = self.clock.now_us();
         match ev {
-            Ev::AppArrival { seq } => {
-                let mut rng = self.rng.fold(1000 + seq as u64);
-                let scales = spec.dataset.sample(&mut rng);
-                let (app, funcs) =
-                    self.st.spawn_app(template, scales, now);
-                for node in funcs {
-                    self.schedule_func_node(app, node, tool_sim);
-                }
+            Ev::AppArrival { .. } => {
+                unreachable!("arrivals are owned by the workload driver")
             }
             Ev::ToolFinish { rid } => {
                 // The request may have been preempted/restructured; only
-                // FC-stalled requests receive the event.
-                if self
-                    .st
-                    .reqs
-                    .get(&rid)
-                    .map(|r| r.state.is_fc_stalled())
-                    .unwrap_or(false)
+                // FC-stalled requests receive the event. A request that
+                // is *gone* migrated to another worker — hand the event
+                // back for forwarding.
+                match self.st.reqs.get(&rid).map(|r| r.state.is_fc_stalled())
                 {
-                    temporal::call_finish(&mut self.st, rid, now);
-                    self.drain_outbox();
+                    Some(true) => {
+                        temporal::call_finish(&mut self.st, rid, now);
+                        self.drain_outbox();
+                    }
+                    Some(false) => {}
+                    None => {
+                        return Some(OrphanedToolFinish { rid, at_us: now })
+                    }
                 }
             }
             Ev::NodeDelayDone { app, node } => {
@@ -209,6 +230,126 @@ impl SimEngine {
                 self.drain_outbox();
             }
         }
+        None
+    }
+
+    // ------------------------------------------------------------------
+    // Cluster-driver API: a `cluster::ClusterEngine` owns the arrival
+    // schedule and a shared clock, and drives each worker shard through
+    // these methods instead of `run_workload`.
+    // ------------------------------------------------------------------
+
+    /// Register a graph template on this worker. Cluster deployments must
+    /// register the same templates in the same order on every shard so
+    /// template indices and agent-type ids agree across workers.
+    pub fn register_template(&mut self, g: &AppGraph) -> usize {
+        self.st.register_graph(g)
+    }
+
+    /// Give this worker a disjoint id range (see
+    /// [`ServeState::set_id_base`]).
+    pub fn set_id_base(&mut self, base: u64) {
+        self.st.set_id_base(base);
+    }
+
+    /// Spawn an application instance at the current clock time, scheduling
+    /// any standalone func-node roots.
+    pub fn inject_app(
+        &mut self,
+        template: usize,
+        scales: SampledLengths,
+        tool_sim: &ToolSim,
+    ) -> AppId {
+        let now = self.clock.now_us();
+        let (app, funcs) = self.st.spawn_app(template, scales, now);
+        for node in funcs {
+            self.schedule_func_node(app, node, tool_sim);
+        }
+        app
+    }
+
+    /// Earliest pending local event (tool finishes, func-node delays,
+    /// transfer completions), if any.
+    pub fn next_local_event_us(&self) -> Option<u64> {
+        self.events.peek_time()
+    }
+
+    /// Advance this worker's clock to the (global) time `t_us` and apply
+    /// every local event that came due. Returns tool finishes addressed to
+    /// requests that migrated away — the caller forwards them.
+    pub fn advance_shard_to(
+        &mut self,
+        t_us: u64,
+        tool_sim: &ToolSim,
+    ) -> Vec<OrphanedToolFinish> {
+        if t_us > self.clock.now_us() {
+            self.clock.advance_to(t_us);
+        }
+        let mut orphans = Vec::new();
+        while let Some(ev) = self.events.pop_due(self.clock.now_us()) {
+            if let Some(o) = self.apply_runtime_event(ev.payload, tool_sim)
+            {
+                orphans.push(o);
+            }
+        }
+        orphans
+    }
+
+    /// Deliver a forwarded tool finish to a request now living on this
+    /// worker (or buffered here after a migration landed).
+    pub fn deliver_tool_finish(&mut self, rid: RequestId) {
+        let now = self.clock.now_us();
+        if self
+            .st
+            .reqs
+            .get(&rid)
+            .map(|r| r.state.is_fc_stalled())
+            .unwrap_or(false)
+        {
+            temporal::call_finish(&mut self.st, rid, now);
+            self.drain_outbox();
+        }
+    }
+
+    /// Does this worker currently have admitted work to iterate on?
+    pub fn has_batch(&self) -> bool {
+        !self.st.prefilling.is_empty() || !self.st.running.is_empty()
+    }
+
+    /// One cluster-driven engine step at the current clock time: run the
+    /// §3.2 scheduling step, then — if a batch formed — execute one
+    /// iteration and return its duration (µs). The caller advances the
+    /// shared clock and re-enters when the iteration completes.
+    pub fn step_once(&mut self, tool_sim: &ToolSim) -> Option<u64> {
+        coordination::step(&mut self.st, self.clock.now_us());
+        self.drain_outbox();
+        if !self.has_batch() {
+            return None;
+        }
+        let dt = self.execute_iteration(tool_sim);
+        self.st.sample_metrics(self.clock.now_us());
+        Some(dt)
+    }
+
+    /// Expose deadlock rescue to the cluster driver (a fully idle cluster
+    /// with waiting work left applies the same demotion rules per shard).
+    pub fn try_rescue(&mut self) -> bool {
+        self.rescue_deadlock()
+    }
+
+    /// Finalize this worker's metric bundle at the end of a cluster run.
+    /// Swap volume comes from the migration ledger, so cross-worker
+    /// migration traffic is included alongside D2H/H2D offload traffic.
+    pub fn finalize_metrics(&mut self, end_us: u64) -> MetricsBundle {
+        // Close the utilization time series at the cluster end time:
+        // cluster shards sample only on executed iterations, so without
+        // this a shard that went idle early would report its busy-window
+        // utilization as if it held for the whole run.
+        self.st.sample_metrics(end_us);
+        self.st.metrics.makespan_us = end_us;
+        self.st.metrics.swap_volume_blocks =
+            self.st.ledger.swap_volume_blocks();
+        self.st.metrics.clone()
     }
 
     /// Standalone (non-LLM) func node: a pure delay.
@@ -460,6 +601,8 @@ impl SimEngine {
             return true;
         }
         // (2) Strand-breaking: release a partial upload reservation.
+        // Request id breaks priority ties — HashMap iteration order must
+        // not pick the victim.
         let stranded = self
             .st
             .reqs
@@ -473,6 +616,7 @@ impl SimEngine {
                 self.st.reqs[a]
                     .priority
                     .total_cmp(&self.st.reqs[b].priority)
+                    .then(a.cmp(b))
             });
         if let Some(rid) = stranded {
             let r = self.st.reqs.get_mut(&rid).unwrap();

@@ -23,14 +23,18 @@
 //!   and reserved regions, guided by a hybrid priority metric over the
 //!   application DAG and runtime state.
 //!
-//! ## Architecture (three layers)
+//! ## Architecture (four layers)
 //!
 //! ```text
+//! L4  cluster layer — N worker shards on one shared event clock:
+//!     agent-affinity router, pressure-aware placement, cross-worker
+//!     KV migration of stalled agents (cluster::ClusterEngine)
 //! L3  rust coordinator (this crate): graph API, schedulers, block pools,
-//!     engines, baselines, metrics, HTTP server
+//!     engines, baselines, metrics, HTTP server — one worker = one shard
 //! L2  JAX TinyQwen model  — python/compile/model.py, AOT → artifacts/
 //! L1  Pallas attention kernels — python/compile/kernels/attention.py
 //! RT  runtime::PjrtModel loads artifacts/*.hlo.txt via the PJRT C API
+//!     (feature `pjrt`; the default build is dependency-free)
 //! ```
 //!
 //! Python never runs on the request path: `make artifacts` lowers the model
@@ -47,15 +51,34 @@
 //! let report = engine.run_workload(&WorkloadSpec::poisson(&graph, 0.2, 20));
 //! println!("avg latency: {:.1}s", report.metrics.latency.mean_s());
 //! ```
+//!
+//! ## Cluster serving
+//!
+//! ```no_run
+//! use tokencake::prelude::*;
+//!
+//! let cluster = ClusterConfig::default()
+//!     .with_shards(4)
+//!     .with_placement(PlacementPolicy::AgentAffinity);
+//! let workload = ClusterWorkload::mixed(
+//!     &[(templates::code_writer(), 2.0), (templates::deep_research(), 1.0)],
+//!     1.0,
+//!     40,
+//! );
+//! let report = ClusterEngine::new(cluster).run(&workload);
+//! println!("{}", report.summary());
+//! ```
 
 pub mod baselines;
 pub mod cli;
+pub mod cluster;
 pub mod config;
 pub mod coordination;
 pub mod engine;
 pub mod graph;
 pub mod kvcache;
 pub mod metrics;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod server;
 pub mod sim;
@@ -65,9 +88,13 @@ pub mod workload;
 
 /// Convenience re-exports for examples and downstream users.
 pub mod prelude {
-    pub use crate::config::{Mode, ModelProfile, PolicyConfig, ServeConfig};
+    pub use crate::cluster::{ClusterEngine, ClusterReport};
+    pub use crate::config::{
+        ClusterConfig, Mode, ModelProfile, PlacementPolicy, PolicyConfig,
+        ServeConfig,
+    };
     pub use crate::engine::sim::{RunReport, SimEngine};
     pub use crate::graph::templates;
     pub use crate::graph::{AppGraph, FuncKind, NodeKind};
-    pub use crate::workload::WorkloadSpec;
+    pub use crate::workload::{ClusterWorkload, WorkloadSpec};
 }

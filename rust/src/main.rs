@@ -3,19 +3,25 @@
 //! ```text
 //! tokencake bench   --app code-writer --mode tokencake --qps 0.5 --apps 20
 //!                   [--frac 0.05] [--dataset d1|d2] [--noise 0.25]
-//!                   [--seed N] [--config file.toml]
+//!                   [--seed N] [--config file.toml] [--json BENCH_1.json]
 //! tokencake compare --app code-writer --qps 0.5 --apps 20 [--frac 0.05]
+//! tokencake cluster --shards 4 [--policy affinity|least|rr]
+//!                   [--mix cw:2,dr:1] [--qps 1.0] [--apps 40]
+//!                   [--frac 0.08] [--no-migrate] [--seed N]
 //! tokencake serve   [--port 8080]
 //! tokencake graph   --app deep-research
 //! tokencake help
 //! ```
 
 use tokencake::cli::Args;
-use tokencake::config::{Mode, ServeConfig};
+use tokencake::cluster::{ClusterEngine, ClusterReport};
+use tokencake::config::{
+    ClusterConfig, Mode, PlacementPolicy, ServeConfig,
+};
 use tokencake::engine::sim::SimEngine;
 use tokencake::graph::{templates, AppGraph};
 use tokencake::server::Server;
-use tokencake::workload::{Dataset, WorkloadSpec};
+use tokencake::workload::{ClusterWorkload, Dataset, WorkloadSpec};
 
 fn app_by_name(name: &str) -> Result<AppGraph, String> {
     Ok(match name {
@@ -26,11 +32,12 @@ fn app_by_name(name: &str) -> Result<AppGraph, String> {
     })
 }
 
-fn build_config(args: &Args) -> Result<ServeConfig, String> {
-    let mut cfg = ServeConfig::default();
-    if let Some(path) = args.get("config") {
-        cfg.apply_file(path).map_err(|e| e.to_string())?;
-    }
+/// Apply serve-level CLI flags (mode/frac/seed/profile) onto a config;
+/// flags always override whatever a `--config` file set.
+fn apply_serve_flags(
+    args: &Args,
+    cfg: &mut ServeConfig,
+) -> Result<(), String> {
     if let Some(m) = args.get("mode") {
         cfg.mode = Mode::parse(m).ok_or(format!("unknown mode {m:?}"))?;
     }
@@ -40,6 +47,15 @@ fn build_config(args: &Args) -> Result<ServeConfig, String> {
         cfg.profile = tokencake::config::ModelProfile::by_name(p)
             .ok_or(format!("unknown profile {p:?}"))?;
     }
+    Ok(())
+}
+
+fn build_config(args: &Args) -> Result<ServeConfig, String> {
+    let mut cfg = ServeConfig::default();
+    if let Some(path) = args.get("config") {
+        cfg.apply_file(path).map_err(|e| e.to_string())?;
+    }
+    apply_serve_flags(args, &mut cfg)?;
     Ok(cfg)
 }
 
@@ -61,10 +77,164 @@ fn cmd_bench(args: &Args) -> Result<(), String> {
     let graph = app_by_name(args.get_or("app", "code-writer"))?;
     let cfg = build_config(args)?;
     let spec = build_spec(args, &graph)?;
-    let report = SimEngine::new(cfg).run_workload(&spec);
+    let report = SimEngine::new(cfg.clone()).run_workload(&spec);
     println!("{}", report.summary());
     if report.truncated {
         eprintln!("warning: run truncated before completion");
+    }
+    if let Some(path) = args.get("json") {
+        write_bench_trajectory(path, args, &cfg)?;
+        println!("wrote benchmark trajectory to {path}");
+    }
+    Ok(())
+}
+
+/// Machine-readable benchmark trajectory: single-worker vs a 4-shard
+/// agent-affinity cluster under the same offered load (throughput,
+/// mean/p99 latency, effective GPU utilization). The app mix is always
+/// the standard 2:1 code-writer:deep-research cluster workload
+/// (independent of `--app`); dataset and noise follow the flags and are
+/// recorded in the output.
+fn write_bench_trajectory(
+    path: &str,
+    args: &Args,
+    cfg: &ServeConfig,
+) -> Result<(), String> {
+    let qps = args.get_f64("qps", 0.5)?;
+    let apps = args.get_u64("apps", 20)? as usize;
+    let dataset = match args.get_or("dataset", "d1") {
+        "d1" | "D1" => Dataset::D1,
+        "d2" | "D2" => Dataset::D2,
+        other => return Err(format!("unknown dataset {other:?}")),
+    };
+    let noise = args.get_f64("noise", 0.0)?;
+    let mix = [
+        (templates::code_writer(), 2.0),
+        (templates::deep_research(), 1.0),
+    ];
+    let workload = ClusterWorkload::mixed(&mix, qps, apps)
+        .with_dataset(dataset)
+        .with_tool_noise(noise);
+
+    let mut rows: Vec<String> = Vec::new();
+    let mut row = |name: &str, rep: &ClusterReport| {
+        rows.push(format!(
+            "    {{\"name\": \"{name}\", \"shards\": {}, \
+             \"policy\": \"{}\", \"apps\": {}, \
+             \"throughput_apps_per_s\": {:.6}, \
+             \"mean_latency_s\": {:.3}, \"p99_latency_s\": {:.3}, \
+             \"effective_gpu_util\": {:.4}, \"migrations\": {}, \
+             \"truncated\": {}}}",
+            rep.num_shards,
+            rep.policy,
+            rep.aggregate.apps_completed,
+            rep.aggregate.throughput(),
+            rep.aggregate.latency.mean_s(),
+            rep.aggregate.latency.percentile_s(99.0),
+            rep.effective_util(),
+            rep.migrations,
+            rep.truncated,
+        ));
+    };
+
+    let single = ClusterConfig::default()
+        .with_serve(cfg.clone())
+        .with_shards(1)
+        .with_placement(PlacementPolicy::RoundRobin);
+    row("single-worker", &ClusterEngine::new(single).run(&workload));
+
+    let quad = ClusterConfig::default()
+        .with_serve(cfg.clone())
+        .with_shards(4)
+        .with_placement(PlacementPolicy::AgentAffinity);
+    row(
+        "cluster-4-affinity",
+        &ClusterEngine::new(quad).run(&workload),
+    );
+
+    let json = format!(
+        "{{\n  \"benchmark\": \"tokencake_trajectory\",\n  \
+         \"qps\": {qps},\n  \"apps\": {apps},\n  \
+         \"dataset\": \"{}\",\n  \"tool_noise\": {noise},\n  \
+         \"mix\": \"code-writer:2,deep-research:1\",\n  \
+         \"runs\": [\n{}\n  ]\n}}\n",
+        dataset.name(),
+        rows.join(",\n")
+    );
+    std::fs::write(path, json).map_err(|e| e.to_string())
+}
+
+/// Parse `--mix cw:2,dr:1` into weighted graph templates.
+fn parse_mix(spec: &str) -> Result<Vec<(AppGraph, f64)>, String> {
+    let mut out = Vec::new();
+    for part in spec.split(',') {
+        let (name, weight) = match part.split_once(':') {
+            Some((n, w)) => (
+                n,
+                w.parse::<f64>()
+                    .map_err(|_| format!("bad mix weight {w:?}"))?,
+            ),
+            None => (part, 1.0),
+        };
+        if weight <= 0.0 {
+            return Err(format!("mix weight must be > 0: {part:?}"));
+        }
+        out.push((app_by_name(name)?, weight));
+    }
+    if out.is_empty() {
+        return Err("empty --mix".into());
+    }
+    Ok(out)
+}
+
+fn cmd_cluster(args: &Args) -> Result<(), String> {
+    // File first (both [serve]/[policy] and [cluster] sections land via
+    // the cluster-aware parser), then CLI flags override.
+    let mut cluster = ClusterConfig::default();
+    if let Some(path) = args.get("config") {
+        cluster.apply_file(path).map_err(|e| e.to_string())?;
+    }
+    apply_serve_flags(args, &mut cluster.serve)?;
+    cluster.shards = args.get_u64("shards", cluster.shards as u64)? as usize;
+    if cluster.shards == 0 {
+        return Err("--shards must be >= 1".into());
+    }
+    if let Some(p) = args.get("policy") {
+        cluster.placement = PlacementPolicy::parse(p)
+            .ok_or("unknown --policy (rr | least | affinity)")?;
+    }
+    if args.has("no-migrate") {
+        cluster.migration = false;
+    }
+    let (shards, policy) = (cluster.shards, cluster.placement);
+
+    let qps = args.get_f64("qps", 1.0)?;
+    let apps = args.get_u64("apps", 40)? as usize;
+    let mix = parse_mix(args.get_or("mix", "cw:2,dr:1"))?;
+    let dataset = match args.get_or("dataset", "d1") {
+        "d1" | "D1" => Dataset::D1,
+        "d2" | "D2" => Dataset::D2,
+        other => return Err(format!("unknown dataset {other:?}")),
+    };
+    let noise = args.get_f64("noise", 0.0)?;
+    let workload = ClusterWorkload::mixed(&mix, qps, apps)
+        .with_dataset(dataset)
+        .with_tool_noise(noise);
+
+    println!(
+        "cluster: {shards} shard(s), policy={}, migration={}, \
+         qps={qps}, apps={apps}, mix={}",
+        policy.name(),
+        cluster.migration,
+        args.get_or("mix", "cw:2,dr:1"),
+    );
+    let report = ClusterEngine::new(cluster).run(&workload);
+    for line in report.shard_lines() {
+        println!("{line}");
+    }
+    println!("{}", report.summary());
+    if report.truncated {
+        eprintln!("warning: cluster run truncated before completion");
     }
     Ok(())
 }
@@ -132,7 +302,12 @@ USAGE: tokencake <command> [--flag value]...
 COMMANDS:
   bench    run one workload:  --app --mode --qps --apps --frac --dataset
            --noise --seed --profile --config
+           --json FILE  also write a single-worker vs 4-shard cluster
+           trajectory (throughput, mean/p99 latency, effective GPU util)
   compare  run all modes on one workload (same flags, no --mode)
+  cluster  sharded multi-worker serving:  --shards N
+           --policy rr|least|affinity  --mix cw:2,dr:1  --qps --apps
+           --frac --dataset --noise --seed --config  --no-migrate
   serve    start the frontend HTTP server:  --port
   graph    inspect a built-in app template:  --app
   help     this text
@@ -149,6 +324,7 @@ fn main() {
     let result = match args.command.as_str() {
         "bench" => cmd_bench(&args),
         "compare" => cmd_compare(&args),
+        "cluster" => cmd_cluster(&args),
         "serve" => cmd_serve(&args),
         "graph" => cmd_graph(&args),
         "help" | "--help" | "-h" => {

@@ -49,6 +49,17 @@ impl LatencyRecorder {
         self.samples_us.iter().copied().max().unwrap_or(0)
     }
 
+    /// Sum of all samples in µs (integer — digest-friendly).
+    pub fn total_us(&self) -> u64 {
+        self.samples_us.iter().sum()
+    }
+
+    /// Fold another recorder's samples into this one (cluster rollups).
+    pub fn merge(&mut self, other: &LatencyRecorder) {
+        self.samples_us.extend_from_slice(&other.samples_us);
+        self.dirty = true;
+    }
+
     fn ensure_sorted(&mut self) {
         if self.dirty {
             self.sorted = self.samples_us.clone();

@@ -42,6 +42,26 @@ pub struct Counters {
     pub aborted: u64,
 }
 
+impl Counters {
+    /// Field-wise accumulation (cluster rollups).
+    pub fn absorb(&mut self, o: &Counters) {
+        self.preemptions += o.preemptions;
+        self.critical_inversions += o.critical_inversions;
+        self.recomputes += o.recomputes;
+        self.recompute_tokens += o.recompute_tokens;
+        self.offloads_rejected += o.offloads_rejected;
+        self.early_returns += o.early_returns;
+        self.prefix_hits_gpu += o.prefix_hits_gpu;
+        self.prefix_hits_cpu += o.prefix_hits_cpu;
+        self.reserved_admissions += o.reserved_admissions;
+        self.deferrals += o.deferrals;
+        self.decode_iterations += o.decode_iterations;
+        self.tokens_generated += o.tokens_generated;
+        self.sched_steps += o.sched_steps;
+        self.aborted += o.aborted;
+    }
+}
+
 /// A complete run's metric bundle.
 #[derive(Debug, Clone, Default)]
 pub struct MetricsBundle {
@@ -67,6 +87,22 @@ pub struct MetricsBundle {
 }
 
 impl MetricsBundle {
+    /// Fold one worker shard's bundle into a cluster-wide aggregate:
+    /// latency samples merge, counters and volumes add, makespan takes
+    /// the max. Per-shard utilization *time series* are deliberately not
+    /// merged — occupancy fractions of different pools don't concatenate;
+    /// read them per shard (the cluster report keeps every shard bundle).
+    pub fn absorb(&mut self, o: &MetricsBundle) {
+        self.latency.merge(&o.latency);
+        self.request_latency.merge(&o.request_latency);
+        self.counters.absorb(&o.counters);
+        self.swap_volume_blocks += o.swap_volume_blocks;
+        self.offload_count += o.offload_count;
+        self.upload_count += o.upload_count;
+        self.apps_completed += o.apps_completed;
+        self.makespan_us = self.makespan_us.max(o.makespan_us);
+    }
+
     /// Throughput in completed apps per second.
     pub fn throughput(&self) -> f64 {
         if self.makespan_us == 0 {
@@ -117,5 +153,29 @@ mod tests {
         let s = m.summary();
         assert!(s.contains("apps=0"));
         assert!(s.contains("inversions=0"));
+    }
+
+    #[test]
+    fn absorb_accumulates_across_shards() {
+        let mut a = MetricsBundle::default();
+        a.latency.record_us(1_000_000);
+        a.apps_completed = 1;
+        a.makespan_us = 5_000_000;
+        a.counters.preemptions = 2;
+        a.swap_volume_blocks = 10;
+        let mut b = MetricsBundle::default();
+        b.latency.record_us(3_000_000);
+        b.apps_completed = 2;
+        b.makespan_us = 9_000_000;
+        b.counters.preemptions = 1;
+        b.swap_volume_blocks = 5;
+        a.absorb(&b);
+        assert_eq!(a.apps_completed, 3);
+        assert_eq!(a.makespan_us, 9_000_000);
+        assert_eq!(a.counters.preemptions, 3);
+        assert_eq!(a.swap_volume_blocks, 15);
+        assert_eq!(a.latency.len(), 2);
+        assert!((a.latency.mean_s() - 2.0).abs() < 1e-9);
+        assert_eq!(a.latency.total_us(), 4_000_000);
     }
 }

@@ -137,13 +137,17 @@ pub fn run_phase(
 ) {
     upload_phase(st, snap, now_us);
 
-    // Evaluate newly stalled requests for offload.
-    let newly_stalled: Vec<RequestId> = st
+    // Evaluate newly stalled requests for offload. Sorted by id: HashMap
+    // iteration order must never reach a scheduling decision (bit-exact
+    // reproducibility is a system invariant the cluster layer also relies
+    // on).
+    let mut newly_stalled: Vec<RequestId> = st
         .reqs
         .values()
         .filter(|r| r.state == ReqState::Stalled && !r.offload_evaluated)
         .map(|r| r.id)
         .collect();
+    newly_stalled.sort_unstable();
     for rid in newly_stalled {
         let decision = evaluate_offload(st, snap, rid, now_us);
         st.reqs.get_mut(&rid).unwrap().offload_evaluated = true;

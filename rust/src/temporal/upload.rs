@@ -82,8 +82,14 @@ pub fn upload_phase(st: &mut ServeState, snap: &PressureSnapshot, now_us: u64) {
             partial || urgency(st, rid, now_us) > 0.0
         })
         .collect();
-    // Partial holders first (finish what we started), then P_upload = I+U.
-    cands.sort_by(|a, b| b.2.cmp(&a.2).then(b.1.total_cmp(&a.1)));
+    // Partial holders first (finish what we started), then P_upload = I+U;
+    // request id breaks exact-score ties so HashMap iteration order never
+    // decides who uploads first.
+    cands.sort_by(|a, b| {
+        b.2.cmp(&a.2)
+            .then(b.1.total_cmp(&a.1))
+            .then(a.0.cmp(&b.0))
+    });
     let mut partial_outstanding =
         cands.iter().filter(|c| c.2).count() as u32;
 

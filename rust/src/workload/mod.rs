@@ -59,6 +59,82 @@ impl WorkloadSpec {
     }
 }
 
+/// One application template in a cluster mix with its arrival weight.
+#[derive(Debug, Clone)]
+pub struct MixEntry {
+    pub graph: AppGraph,
+    /// Relative arrival weight (unnormalized, > 0).
+    pub weight: f64,
+}
+
+/// A heterogeneous cluster workload: Poisson application arrivals whose
+/// template is drawn from a weighted mix (e.g. 2:1 code-writer to
+/// deep-research). This is the offered load a `cluster::ClusterEngine`
+/// routes across its worker shards.
+#[derive(Debug, Clone)]
+pub struct ClusterWorkload {
+    pub entries: Vec<MixEntry>,
+    /// Aggregate application arrival rate across the whole cluster (QPS).
+    pub qps: f64,
+    pub num_apps: usize,
+    pub dataset: Dataset,
+    pub tool_noise: f64,
+}
+
+impl ClusterWorkload {
+    /// Build from `(graph, weight)` pairs.
+    pub fn mixed(mix: &[(AppGraph, f64)], qps: f64, num_apps: usize) -> Self {
+        assert!(!mix.is_empty(), "cluster workload needs >= 1 template");
+        assert!(
+            mix.iter().all(|(_, w)| *w > 0.0),
+            "mix weights must be positive"
+        );
+        Self {
+            entries: mix
+                .iter()
+                .map(|(g, w)| MixEntry {
+                    graph: g.clone(),
+                    weight: *w,
+                })
+                .collect(),
+            qps,
+            num_apps,
+            dataset: Dataset::D1,
+            tool_noise: 0.0,
+        }
+    }
+
+    /// Single-template convenience (the cluster analogue of
+    /// [`WorkloadSpec::poisson`]).
+    pub fn uniform(graph: &AppGraph, qps: f64, num_apps: usize) -> Self {
+        Self::mixed(&[(graph.clone(), 1.0)], qps, num_apps)
+    }
+
+    pub fn with_dataset(mut self, d: Dataset) -> Self {
+        self.dataset = d;
+        self
+    }
+
+    pub fn with_tool_noise(mut self, s: f64) -> Self {
+        assert!((0.0..1.0).contains(&s), "noise scale in [0,1)");
+        self.tool_noise = s;
+        self
+    }
+
+    /// Generate the arrival schedule: `(timestamp µs, template index)`
+    /// per application, template drawn by mix weight.
+    pub fn arrivals(&self, rng: &mut Rng) -> Vec<(u64, usize)> {
+        let weights: Vec<f64> =
+            self.entries.iter().map(|e| e.weight).collect();
+        let mut p = Poisson::new(self.qps);
+        (0..self.num_apps)
+            .map(|_| {
+                (p.next_arrival_us(rng), rng.weighted_index(&weights))
+            })
+            .collect()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -90,5 +166,39 @@ mod tests {
     fn rejects_bad_noise() {
         let g = templates::rag();
         let _ = WorkloadSpec::poisson(&g, 1.0, 1).with_tool_noise(1.5);
+    }
+
+    #[test]
+    fn cluster_mix_respects_weights() {
+        let mix = [
+            (templates::code_writer(), 3.0),
+            (templates::deep_research(), 1.0),
+        ];
+        let w = ClusterWorkload::mixed(&mix, 1.0, 4000);
+        let arr = w.arrivals(&mut Rng::new(5));
+        assert_eq!(arr.len(), 4000);
+        assert!(arr.windows(2).all(|a| a[0].0 <= a[1].0));
+        let cw = arr.iter().filter(|(_, t)| *t == 0).count() as f64;
+        let dr = arr.iter().filter(|(_, t)| *t == 1).count() as f64;
+        let ratio = cw / dr;
+        assert!((2.4..3.6).contains(&ratio), "mix ratio {ratio}");
+    }
+
+    #[test]
+    fn cluster_arrivals_deterministic_per_seed() {
+        let mix = [
+            (templates::code_writer(), 1.0),
+            (templates::rag(), 1.0),
+        ];
+        let w = ClusterWorkload::mixed(&mix, 0.5, 100);
+        let a = w.arrivals(&mut Rng::new(9));
+        let b = w.arrivals(&mut Rng::new(9));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    #[should_panic]
+    fn cluster_rejects_empty_mix() {
+        let _ = ClusterWorkload::mixed(&[], 1.0, 1);
     }
 }
