@@ -685,6 +685,55 @@ fn perf_scheduler() {
         "event throughput: {:.0} sim-iterations/s",
         iters as f64 / wall.as_secs_f64()
     );
+    println!(
+        "sim_throughput: events/s={:.0} ticks/s={:.0}",
+        (steps + iters) as f64 / wall.as_secs_f64(),
+        steps as f64 / wall.as_secs_f64()
+    );
+}
+
+// ---------------------------------------------------------------------
+// §Perf — cluster hot path (the BENCH_2.json workload)
+// ---------------------------------------------------------------------
+
+/// Wall-clock events/sec on the large 4-shard cluster workload — the
+/// headline number for the arena/extent/scratch hot-path refactor.
+/// Regenerate BENCH_2.json with:
+///   cargo run --release -- bench --qps 2.0 --apps 48 --frac 0.05 \
+///       --json BENCH_2.json
+fn perf_cluster() {
+    hdr("Perf — cluster hot path (4 shards, qps=2, 48 apps, frac=0.05)");
+    for shards in [1usize, 4] {
+        let serve = ServeConfig::default()
+            .with_mode(Mode::TokenCake)
+            .with_seed(1)
+            .with_gpu_mem_frac(0.05);
+        let cfg = ClusterConfig::default()
+            .with_serve(serve)
+            .with_shards(shards)
+            .with_placement(PlacementPolicy::AgentAffinity);
+        let mix = [
+            (templates::code_writer(), 2.0),
+            (templates::deep_research(), 1.0),
+        ];
+        let w = ClusterWorkload::mixed(&mix, 2.0, 48)
+            .with_dataset(Dataset::D1);
+        let t0 = Instant::now();
+        let rep = ClusterEngine::new(cfg).run(&w);
+        let wall = t0.elapsed().as_secs_f64().max(1e-9);
+        let ticks = rep.aggregate.counters.sched_steps;
+        let events = ticks + rep.aggregate.counters.decode_iterations;
+        println!(
+            "{} shard(s): wall={:.2}s sim_events/s={:.0} ticks/s={:.0} \
+             apps={} truncated={}",
+            shards,
+            wall,
+            events as f64 / wall,
+            ticks as f64 / wall,
+            rep.aggregate.apps_completed,
+            rep.truncated,
+        );
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -718,6 +767,7 @@ fn main() {
         ("fig17", fig17_transfer),
         ("cluster_scaling", cluster_scaling),
         ("perf", perf_scheduler),
+        ("perf_cluster", perf_cluster),
     ];
     for (name, f) in benches {
         if want(name) {

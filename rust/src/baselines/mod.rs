@@ -33,17 +33,18 @@ pub fn mooncake_reactive_phase(
     now_us: u64,
 ) {
     // ---- Reactive uploads (session resumption). ----
-    // Sorted by id so HashMap iteration order never decides upload order.
-    let mut ready: Vec<RequestId> = st
-        .reqs
-        .values()
-        .filter(|r| {
+    // The offloaded index iterates in id order, so upload order is
+    // deterministic without a per-step full-table scan + sort.
+    let ready: Vec<RequestId> = st
+        .offloaded_ids
+        .iter()
+        .copied()
+        .filter(|rid| {
+            let r = &st.reqs[rid];
             r.state == ReqState::Offloaded
                 && r.fc.as_ref().map(|f| f.tool_done).unwrap_or(false)
         })
-        .map(|r| r.id)
         .collect();
-    ready.sort_unstable();
     for rid in ready {
         // May fail under pressure; retried next step.
         let _ = try_immediate_upload(st, rid, now_us);
@@ -58,17 +59,21 @@ pub fn mooncake_reactive_phase(
         * st.gpu.total() as f64)
         .ceil() as u32;
 
-    // LRU victims: stalled the longest.
+    // LRU victims: stalled the longest (walked off the stalled index,
+    // O(stalled) instead of O(all requests)).
     let mut victims: Vec<(RequestId, u64, u32)> = st
-        .reqs
-        .values()
-        .filter(|r| r.state == ReqState::Stalled)
-        .map(|r| {
-            (
+        .stalled_ids
+        .iter()
+        .filter_map(|rid| {
+            let r = &st.reqs[rid];
+            if r.state != ReqState::Stalled {
+                return None;
+            }
+            Some((
                 r.id,
                 r.fc.as_ref().map(|f| f.started_us).unwrap_or(0),
-                r.blocks.len() as u32,
-            )
+                r.blocks.len(),
+            ))
         })
         .collect();
     victims.sort_by_key(|&(rid, started, _)| (started, rid));
@@ -118,18 +123,20 @@ mod tests {
         else {
             panic!()
         };
-        let r = st.reqs.get_mut(&rid).unwrap();
-        r.state = ReqState::Stalled;
-        r.blocks = blocks;
-        r.fc = Some(FcRt {
-            name: "web_search".into(),
-            started_us,
-            predicted_end_us: started_us + 5_000_000,
-            tool_done: false,
-            finished_us: 0,
-            result_tokens: 480,
-            user_estimate_us: None,
-        });
+        {
+            let r = st.reqs.get_mut(&rid).unwrap();
+            r.blocks = blocks;
+            r.fc = Some(FcRt {
+                name: "web_search".into(),
+                started_us,
+                predicted_end_us: started_us + 5_000_000,
+                tool_done: false,
+                finished_us: 0,
+                result_tokens: 480,
+                user_estimate_us: None,
+            });
+        }
+        st.set_req_state(rid, ReqState::Stalled);
         rid
     }
 
@@ -168,15 +175,15 @@ mod tests {
         {
             let blocks = {
                 let r = st.reqs.get_mut(&rid).unwrap();
-                std::mem::take(&mut r.blocks)
+                r.blocks.take()
             };
             st.gpu.free(blocks, 0, None);
             let cpu = st.cpu.alloc(50).unwrap();
             let r = st.reqs.get_mut(&rid).unwrap();
             r.cpu_blocks = cpu;
-            r.state = ReqState::Offloaded;
             r.fc.as_mut().unwrap().tool_done = true;
         }
+        st.set_req_state(rid, ReqState::Offloaded);
         let snap = st.snapshot();
         mooncake_reactive_phase(&mut st, &snap, 1000);
         assert_eq!(st.reqs[&rid].state, ReqState::PendingUpload);

@@ -148,7 +148,8 @@ impl ClusterReport {
 
     /// Canonical integer-only serialization of everything the scheduler
     /// decided — two runs with the same seed and config must produce
-    /// byte-identical digests (the cluster determinism contract).
+    /// byte-identical digests (the cluster determinism contract). The
+    /// per-bundle line format lives in [`MetricsBundle::digest_line`].
     pub fn digest(&self) -> String {
         let mut out = String::new();
         out.push_str(&format!(
@@ -161,40 +162,10 @@ impl ClusterReport {
             self.migration_blocks,
             self.migration_drops,
         ));
-        let mut line = |tag: &str, m: &MetricsBundle| {
-            out.push_str(&format!(
-                "{tag}: apps={} lat_sum={} lat_n={} req_sum={} req_n={} \
-                 makespan={} swap={} off={} up={} preempt={} inv={} \
-                 recomp={} recomp_tok={} rej={} early={} pfx_gpu={} \
-                 pfx_cpu={} resv={} defer={} iters={} toks={} aborts={}\n",
-                m.apps_completed,
-                m.latency.total_us(),
-                m.latency.len(),
-                m.request_latency.total_us(),
-                m.request_latency.len(),
-                m.makespan_us,
-                m.swap_volume_blocks,
-                m.offload_count,
-                m.upload_count,
-                m.counters.preemptions,
-                m.counters.critical_inversions,
-                m.counters.recomputes,
-                m.counters.recompute_tokens,
-                m.counters.offloads_rejected,
-                m.counters.early_returns,
-                m.counters.prefix_hits_gpu,
-                m.counters.prefix_hits_cpu,
-                m.counters.reserved_admissions,
-                m.counters.deferrals,
-                m.counters.decode_iterations,
-                m.counters.tokens_generated,
-                m.counters.aborted,
-            ));
-        };
         for (i, m) in self.shards.iter().enumerate() {
-            line(&format!("shard{i}"), m);
+            out.push_str(&m.digest_line(&format!("shard{i}")));
         }
-        line("aggregate", &self.aggregate);
+        out.push_str(&self.aggregate.digest_line("aggregate"));
         out
     }
 }
@@ -536,7 +507,10 @@ impl ClusterEngine {
         shard: usize,
     ) -> Option<(AppId, RequestId, u32, u64)> {
         let st = &self.shards[shard].st;
-        let mut app_ids: Vec<AppId> = st.apps.keys().copied().collect();
+        // Arena insertion order is deterministic but not id order after
+        // implants; sort to keep the scan order the cluster determinism
+        // contract was written against. Runs once per planning window.
+        let mut app_ids: Vec<AppId> = st.apps.ids().collect();
         app_ids.sort_unstable();
         let mut best: Option<(u64, AppId, RequestId, u32)> = None;
         'apps: for app_id in app_ids {
@@ -544,7 +518,7 @@ impl ClusterEngine {
             if app.finished_us.is_some() {
                 continue;
             }
-            let template = st.app_template[&app_id];
+            let template = st.apps.template_of(&app_id);
             let g = &st.graphs[template];
             // A standalone func node mid-delay pins the app here (its
             // completion event lives in this shard's queue).
@@ -578,7 +552,7 @@ impl ClusterEngine {
                         }
                         stalled = Some((
                             *rid,
-                            r.blocks.len() as u32,
+                            r.blocks.len(),
                             fc.predicted_end_us,
                         ));
                     }
@@ -612,7 +586,7 @@ impl ClusterEngine {
         let (blocks, charged, tid) = {
             let r = shard.st.reqs.get_mut(&rid).unwrap();
             (
-                std::mem::take(&mut r.blocks),
+                r.blocks.take(),
                 std::mem::take(&mut r.reserved_charged),
                 r.type_id,
             )
@@ -724,26 +698,22 @@ impl ClusterEngine {
         if tool_done {
             // The tool returned mid-flight (buffered by
             // `forward_tool_finish`). Replay what `call_finish` would
-            // have done — feed the forecaster on the request's new home
-            // and count an early return — then resume immediately.
+            // have done for a GPU-resident (Stalled-path) request — feed
+            // the forecaster on the request's new home, then resume.
+            // No `early_returns` bump: the local Stalled arm of
+            // `call_finish` never counts one (that counter tracks
+            // uploads forced early on *offloaded* caches), so migrated
+            // requests must not inflate it either.
             let st = &mut self.shards[dst_idx].st;
-            let (name, started, finished, predicted_end) = {
+            let (name, started, finished) = {
                 let fc = st.reqs[&rid]
                     .fc
                     .as_ref()
                     .expect("buffered finish without fc");
-                (
-                    fc.name.clone(),
-                    fc.started_us,
-                    fc.finished_us,
-                    fc.predicted_end_us,
-                )
+                (fc.name.clone(), fc.started_us, fc.finished_us)
             };
             st.forecaster
                 .observe_us(&name, finished.saturating_sub(started));
-            if finished < predicted_end {
-                st.metrics.counters.early_returns += 1;
-            }
             temporal::resume_from_fc(st, rid, now);
         }
     }

@@ -1,0 +1,555 @@
+//! Dense arenas and O(1) membership structures for the serving hot path.
+//!
+//! The scheduler loop runs millions of times per simulated run; the seed
+//! implementation kept requests and app instances in `HashMap`s, which
+//! meant (a) SipHash on every id lookup, (b) nondeterministic iteration
+//! order that every scan had to sort away, and (c) per-tick scans over
+//! every request that *ever* existed (finished ones included). The types
+//! here make the loop deterministic by construction instead:
+//!
+//! * [`RequestArena`] / [`AppArena`] — slab storage with an
+//!   identity-hash id index. Iteration order is insertion order, which is
+//!   itself deterministic, so no scan needs a defensive sort.
+//! * The request arena additionally maintains a **live list** (slots of
+//!   non-finished requests) so per-tick scans are O(live), not
+//!   O(all-requests-ever).
+//! * [`BatchQueue`] — the running/prefilling batch membership structure:
+//!   O(1) insert/remove/contains with *order-preserving* iteration
+//!   (tombstones + amortized compaction), replacing the
+//!   `Vec::retain(|&x| x != victim)` pattern on every preemption, stall,
+//!   and completion.
+
+use std::hash::{BuildHasherDefault, Hasher};
+
+use super::request::{AppInst, AppId, ReqState, Request, RequestId};
+
+/// Identity-style hasher for internal u64 ids (request/app ids). The ids
+/// are engine-generated (sequential per shard), so there is nothing to
+/// defend against and SipHash is pure overhead; a single multiply by a
+/// large odd constant spreads the shard-base high bits well enough.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct IdHasher(u64);
+
+impl Hasher for IdHasher {
+    #[inline]
+    fn finish(&self) -> u64 {
+        self.0
+    }
+
+    #[inline]
+    fn write(&mut self, bytes: &[u8]) {
+        // Generic fallback (derived Hash on newtypes uses write_u64).
+        for &b in bytes {
+            self.0 = (self.0 ^ b as u64).wrapping_mul(0x100_0000_01B3);
+        }
+    }
+
+    #[inline]
+    fn write_u64(&mut self, v: u64) {
+        self.0 = v.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    }
+}
+
+/// HashMap keyed by a raw u64 id with the identity hasher.
+pub type IdMap<V> = std::collections::HashMap<u64, V, BuildHasherDefault<IdHasher>>;
+
+const NOT_LIVE: u32 = u32::MAX;
+
+/// Dense slab of [`Request`]s with an id index and a live (non-finished)
+/// slot list. Finished requests stay resident — child prompt inheritance
+/// reads the parent's `tokens_generated` at spawn time — but the hot-path
+/// scans iterate only the live list.
+#[derive(Debug, Clone, Default)]
+pub struct RequestArena {
+    slots: Vec<Request>,
+    /// id.0 → slot.
+    index: IdMap<u32>,
+    /// Slots of non-finished requests (deterministic order; `swap_remove`
+    /// on finish/extract).
+    live: Vec<u32>,
+    /// slot → position in `live` (NOT_LIVE when finished / absent).
+    live_pos: Vec<u32>,
+}
+
+impl RequestArena {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    pub fn contains(&self, id: &RequestId) -> bool {
+        self.index.contains_key(&id.0)
+    }
+
+    pub fn get(&self, id: &RequestId) -> Option<&Request> {
+        self.index
+            .get(&id.0)
+            .map(|&slot| &self.slots[slot as usize])
+    }
+
+    pub fn get_mut(&mut self, id: &RequestId) -> Option<&mut Request> {
+        match self.index.get(&id.0) {
+            Some(&slot) => Some(&mut self.slots[slot as usize]),
+            None => None,
+        }
+    }
+
+    /// Insert a request under its own id. Joins the live list unless it
+    /// arrives already `Finished` (migrated-app payloads carry those).
+    pub fn insert(&mut self, id: RequestId, req: Request) {
+        debug_assert_eq!(id, req.id, "arena insert under foreign id");
+        debug_assert!(
+            !self.index.contains_key(&id.0),
+            "duplicate request id {id:?}"
+        );
+        let slot = self.slots.len() as u32;
+        let is_live = req.state != ReqState::Finished;
+        self.slots.push(req);
+        self.index.insert(id.0, slot);
+        if is_live {
+            self.live_pos.push(self.live.len() as u32);
+            self.live.push(slot);
+        } else {
+            self.live_pos.push(NOT_LIVE);
+        }
+    }
+
+    /// Remove a request (cross-worker migration). The last slot is moved
+    /// into the vacated one; all bookkeeping follows.
+    pub fn remove(&mut self, id: &RequestId) -> Option<Request> {
+        let slot = self.index.remove(&id.0)? as usize;
+        self.unlive(slot as u32);
+        let req = self.slots.swap_remove(slot);
+        // Keep live_pos parallel to slots.
+        self.live_pos.swap_remove(slot);
+        if slot < self.slots.len() {
+            // The request formerly in the last slot now lives at `slot`.
+            let moved_id = self.slots[slot].id;
+            self.index.insert(moved_id.0, slot as u32);
+            let lp = self.live_pos[slot];
+            if lp != NOT_LIVE {
+                self.live[lp as usize] = slot as u32;
+            }
+        }
+        Some(req)
+    }
+
+    /// Drop a request from the live list (state reached `Finished`).
+    /// Idempotent; the request itself stays resident.
+    pub fn mark_finished(&mut self, id: RequestId) {
+        if let Some(&slot) = self.index.get(&id.0) {
+            self.unlive(slot);
+        }
+    }
+
+    fn unlive(&mut self, slot: u32) {
+        let pos = self.live_pos[slot as usize];
+        if pos == NOT_LIVE {
+            return;
+        }
+        let pos = pos as usize;
+        self.live.swap_remove(pos);
+        if pos < self.live.len() {
+            let moved_slot = self.live[pos] as usize;
+            self.live_pos[moved_slot] = pos as u32;
+        }
+        self.live_pos[slot as usize] = NOT_LIVE;
+    }
+
+    /// Number of live (non-finished) requests.
+    pub fn live_len(&self) -> usize {
+        self.live.len()
+    }
+
+    /// Slot number of the k-th live request (for split-borrow loops).
+    pub fn live_slot(&self, k: usize) -> u32 {
+        self.live[k]
+    }
+
+    /// The k-th live request.
+    pub fn live_ref(&self, k: usize) -> &Request {
+        &self.slots[self.live[k] as usize]
+    }
+
+    /// Direct slot access (pair with [`Self::live_slot`]).
+    pub fn slot_ref(&self, slot: u32) -> &Request {
+        &self.slots[slot as usize]
+    }
+
+    pub fn slot_mut(&mut self, slot: u32) -> &mut Request {
+        &mut self.slots[slot as usize]
+    }
+
+    /// All requests, finished included, in deterministic insertion order.
+    pub fn values(&self) -> impl Iterator<Item = &Request> {
+        self.slots.iter()
+    }
+
+    pub fn values_mut(&mut self) -> impl Iterator<Item = &mut Request> {
+        self.slots.iter_mut()
+    }
+}
+
+impl std::ops::Index<&RequestId> for RequestArena {
+    type Output = Request;
+
+    fn index(&self, id: &RequestId) -> &Request {
+        self.get(id).expect("unknown request id")
+    }
+}
+
+/// Dense slab of application instances plus their graph-template index
+/// (subsumes the seed's separate `app_template` map).
+#[derive(Debug, Clone, Default)]
+pub struct AppArena {
+    slots: Vec<(AppInst, usize)>,
+    index: IdMap<u32>,
+}
+
+impl AppArena {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    pub fn contains(&self, id: &AppId) -> bool {
+        self.index.contains_key(&id.0)
+    }
+
+    pub fn get(&self, id: &AppId) -> Option<&AppInst> {
+        self.index.get(&id.0).map(|&s| &self.slots[s as usize].0)
+    }
+
+    pub fn get_mut(&mut self, id: &AppId) -> Option<&mut AppInst> {
+        match self.index.get(&id.0) {
+            Some(&s) => Some(&mut self.slots[s as usize].0),
+            None => None,
+        }
+    }
+
+    /// Graph template index of an app (panics if unknown).
+    pub fn template_of(&self, id: &AppId) -> usize {
+        let slot = self.index.get(&id.0).expect("unknown app id");
+        self.slots[*slot as usize].1
+    }
+
+    pub fn insert(&mut self, id: AppId, app: AppInst, template: usize) {
+        debug_assert_eq!(id, app.id, "arena insert under foreign id");
+        debug_assert!(
+            !self.index.contains_key(&id.0),
+            "duplicate app id {id:?}"
+        );
+        let slot = self.slots.len() as u32;
+        self.slots.push((app, template));
+        self.index.insert(id.0, slot);
+    }
+
+    /// Remove an app (cross-worker migration); returns `(inst, template)`.
+    pub fn remove(&mut self, id: &AppId) -> Option<(AppInst, usize)> {
+        let slot = self.index.remove(&id.0)? as usize;
+        let entry = self.slots.swap_remove(slot);
+        if slot < self.slots.len() {
+            let moved_id = self.slots[slot].0.id;
+            self.index.insert(moved_id.0, slot as u32);
+        }
+        Some(entry)
+    }
+
+    /// App ids in deterministic insertion order.
+    pub fn ids(&self) -> impl Iterator<Item = AppId> + '_ {
+        self.slots.iter().map(|(a, _)| a.id)
+    }
+
+    /// All app instances in deterministic insertion order.
+    pub fn values(&self) -> impl Iterator<Item = &AppInst> {
+        self.slots.iter().map(|(a, _)| a)
+    }
+}
+
+impl std::ops::Index<&AppId> for AppArena {
+    type Output = AppInst;
+
+    fn index(&self, id: &AppId) -> &AppInst {
+        self.get(id).expect("unknown app id")
+    }
+}
+
+/// Batch membership (the engine's `running` / `prefilling` queues):
+/// O(1) push / remove / contains with order-preserving iteration.
+///
+/// Removal tombstones the slot instead of shifting (so the decode order
+/// every other request observes is unchanged — a `swap_remove` would
+/// reorder the batch and perturb scheduling); compaction runs amortized
+/// when tombstones outnumber live entries.
+#[derive(Debug, Clone, Default)]
+pub struct BatchQueue {
+    slots: Vec<Option<RequestId>>,
+    /// id.0 → slot.
+    pos: IdMap<u32>,
+    live: usize,
+}
+
+impl BatchQueue {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.live
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.live == 0
+    }
+
+    pub fn contains(&self, rid: RequestId) -> bool {
+        self.pos.contains_key(&rid.0)
+    }
+
+    pub fn push(&mut self, rid: RequestId) {
+        debug_assert!(!self.contains(rid), "batch double-insert {rid:?}");
+        self.pos.insert(rid.0, self.slots.len() as u32);
+        self.slots.push(Some(rid));
+        self.live += 1;
+    }
+
+    pub fn extend<I: IntoIterator<Item = RequestId>>(&mut self, it: I) {
+        for rid in it {
+            self.push(rid);
+        }
+    }
+
+    /// Remove by id; true if the request was present.
+    pub fn remove(&mut self, rid: RequestId) -> bool {
+        let Some(slot) = self.pos.remove(&rid.0) else {
+            return false;
+        };
+        self.slots[slot as usize] = None;
+        self.live -= 1;
+        if self.slots.len() >= 16 && self.live * 2 < self.slots.len() {
+            self.compact();
+        }
+        true
+    }
+
+    fn compact(&mut self) {
+        self.slots.retain(|s| s.is_some());
+        self.pos.clear();
+        for (i, s) in self.slots.iter().enumerate() {
+            self.pos.insert(s.unwrap().0, i as u32);
+        }
+    }
+
+    pub fn clear(&mut self) {
+        self.slots.clear();
+        self.pos.clear();
+        self.live = 0;
+    }
+
+    /// Live entries in insertion order.
+    pub fn iter(&self) -> impl Iterator<Item = RequestId> + '_ {
+        self.slots.iter().filter_map(|s| *s)
+    }
+
+    /// The k-th live entry (linear; tests / cold paths only).
+    pub fn get(&self, k: usize) -> Option<RequestId> {
+        self.iter().nth(k)
+    }
+
+    /// Raw slot count including tombstones (for index loops that must not
+    /// hold a borrow across mutation of other fields).
+    pub fn raw_len(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Raw slot access; `None` marks a tombstone.
+    pub fn raw_get(&self, i: usize) -> Option<RequestId> {
+        self.slots[i]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::NodeId;
+
+    fn req(id: u64) -> Request {
+        Request {
+            id: RequestId(id),
+            app_id: AppId(0),
+            node: NodeId(0),
+            type_id: 0,
+            critical_path: false,
+            static_priority: 0.0,
+            f_struct: 0.0,
+            created_us: 0,
+            queue_enter_us: 0,
+            prompt_tokens: 1,
+            shared_prefix_tokens: 0,
+            phases: Vec::new(),
+            cur_phase: 0,
+            gen_in_phase: 0,
+            context_tokens: 1,
+            state: ReqState::Waiting,
+            blocks: Default::default(),
+            reserved_charged: 0,
+            cpu_blocks: Vec::new(),
+            remaining_prefill: 1,
+            fc: None,
+            offload_evaluated: false,
+            migrations: 0,
+            preempt_count: 0,
+            admit_full: false,
+            pulled: false,
+            priority: 0.0,
+            upload_reserved: Default::default(),
+            upload_reserved_charged: 0,
+            finished_us: None,
+            tokens_generated: 0,
+            wait_time_us: 0,
+            exec_time_us: 0,
+        }
+    }
+
+    #[test]
+    fn arena_insert_lookup_remove() {
+        let mut a = RequestArena::new();
+        for i in 0..5u64 {
+            a.insert(RequestId(i), req(i));
+        }
+        assert_eq!(a.len(), 5);
+        assert_eq!(a.live_len(), 5);
+        assert_eq!(a[&RequestId(3)].id, RequestId(3));
+        let r = a.remove(&RequestId(1)).unwrap();
+        assert_eq!(r.id, RequestId(1));
+        assert!(a.get(&RequestId(1)).is_none());
+        assert_eq!(a.len(), 4);
+        assert_eq!(a.live_len(), 4);
+        // The moved (formerly last) request is still addressable.
+        assert_eq!(a[&RequestId(4)].id, RequestId(4));
+    }
+
+    #[test]
+    fn arena_live_list_tracks_finished() {
+        let mut a = RequestArena::new();
+        for i in 0..4u64 {
+            a.insert(RequestId(i), req(i));
+        }
+        a.get_mut(&RequestId(2)).unwrap().state = ReqState::Finished;
+        a.mark_finished(RequestId(2));
+        a.mark_finished(RequestId(2)); // idempotent
+        assert_eq!(a.live_len(), 3);
+        let live: Vec<u64> =
+            (0..a.live_len()).map(|k| a.live_ref(k).id.0).collect();
+        assert!(!live.contains(&2));
+        assert_eq!(live.len(), 3);
+        // Removing a finished request keeps live bookkeeping consistent.
+        a.remove(&RequestId(2));
+        assert_eq!(a.live_len(), 3);
+        assert_eq!(a.len(), 3);
+        // Inserting an already-finished request skips the live list.
+        let mut f = req(9);
+        f.state = ReqState::Finished;
+        a.insert(RequestId(9), f);
+        assert_eq!(a.live_len(), 3);
+        assert_eq!(a.len(), 4);
+    }
+
+    #[test]
+    fn arena_remove_fixes_moved_live_slot() {
+        let mut a = RequestArena::new();
+        for i in 0..6u64 {
+            a.insert(RequestId(i), req(i));
+        }
+        // Remove a middle element: the last slot (id 5) moves into it.
+        a.remove(&RequestId(2));
+        // Every remaining live entry must resolve to the right request.
+        let mut seen: Vec<u64> =
+            (0..a.live_len()).map(|k| a.live_ref(k).id.0).collect();
+        seen.sort_unstable();
+        assert_eq!(seen, vec![0, 1, 3, 4, 5]);
+        for &i in &[0u64, 1, 3, 4, 5] {
+            assert_eq!(a[&RequestId(i)].id.0, i);
+        }
+    }
+
+    #[test]
+    fn batch_queue_preserves_order_across_removal() {
+        let mut q = BatchQueue::new();
+        for i in 0..6u64 {
+            q.push(RequestId(i));
+        }
+        assert!(q.remove(RequestId(2)));
+        assert!(!q.remove(RequestId(2)));
+        assert!(q.remove(RequestId(4)));
+        let order: Vec<u64> = q.iter().map(|r| r.0).collect();
+        assert_eq!(order, vec![0, 1, 3, 5]);
+        assert_eq!(q.len(), 4);
+        assert!(q.contains(RequestId(3)));
+        assert!(!q.contains(RequestId(4)));
+        assert_eq!(q.get(2), Some(RequestId(3)));
+    }
+
+    #[test]
+    fn batch_queue_compacts_without_reordering() {
+        let mut q = BatchQueue::new();
+        for i in 0..64u64 {
+            q.push(RequestId(i));
+        }
+        for i in 0..48u64 {
+            q.remove(RequestId(i));
+        }
+        // Compaction must have fired (raw length shrunk) and preserved
+        // both order and addressability.
+        assert!(q.raw_len() < 64);
+        let order: Vec<u64> = q.iter().map(|r| r.0).collect();
+        assert_eq!(order, (48..64).collect::<Vec<u64>>());
+        for i in 48..64u64 {
+            assert!(q.contains(RequestId(i)));
+        }
+        q.push(RequestId(100));
+        assert_eq!(q.iter().last(), Some(RequestId(100)));
+    }
+
+    #[test]
+    fn app_arena_roundtrip() {
+        let mut a = AppArena::new();
+        let inst = |i: u64| AppInst {
+            id: AppId(i),
+            arrival_us: 0,
+            pending_parents: Vec::new(),
+            node_done: Vec::new(),
+            nodes_remaining: 0,
+            scales: crate::workload::SampledLengths {
+                prompt_scale: 1.0,
+                gen_scale: 1.0,
+            },
+            finished_us: None,
+            node_req: Vec::new(),
+        };
+        a.insert(AppId(7), inst(7), 0);
+        a.insert(AppId(9), inst(9), 3);
+        assert_eq!(a.template_of(&AppId(9)), 3);
+        assert_eq!(a[&AppId(7)].id, AppId(7));
+        let ids: Vec<AppId> = a.ids().collect();
+        assert_eq!(ids, vec![AppId(7), AppId(9)]);
+        let (inst7, t7) = a.remove(&AppId(7)).unwrap();
+        assert_eq!((inst7.id, t7), (AppId(7), 0));
+        assert_eq!(a.len(), 1);
+        assert_eq!(a[&AppId(9)].id, AppId(9));
+    }
+}

@@ -17,21 +17,25 @@
 //! `spatial::*`), and both engines (sim and PJRT-real) drive the same
 //! [`step`] entry point.
 
+mod arena;
 mod request;
 mod state;
 
+pub use arena::{AppArena, BatchQueue, IdHasher, IdMap, RequestArena};
 pub use request::{
     AppId, AppInst, FcRt, PhaseRt, ReqState, Request, RequestId,
 };
 pub use state::{
-    MigratedApp, ServeState, ThroughputEstimator, TypeRegistry,
+    MigratedApp, SchedScratch, ServeState, ThroughputEstimator,
+    TypeRegistry,
 };
 
 use crate::kvcache::TransferId;
 
 /// Side effects the schedulers emit for the engine to realize (the engine
-/// owns the event clock; schedulers stay engine-agnostic).
-#[derive(Debug, Clone, PartialEq, Eq)]
+/// owns the event clock; schedulers stay engine-agnostic). `Copy` so the
+/// engine's outbox drain never clones or reallocates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Action {
     /// A block migration was issued; fire `TransferDone(xfer)` at
     /// `completes_us`.

@@ -6,7 +6,7 @@
 //! tracks a DAG of such requests plus standalone function nodes.
 
 use crate::graph::{CallSpec, FuncKind, NodeId};
-use crate::kvcache::{AgentTypeId, BlockId, CpuBlockId};
+use crate::kvcache::{AgentTypeId, BlockSet, CpuBlockId};
 use crate::workload::SampledLengths;
 
 /// Unique request id.
@@ -137,8 +137,9 @@ pub struct Request {
     /// Tokens currently represented in the KV cache.
     pub context_tokens: u32,
     pub state: ReqState,
-    /// GPU blocks held (valid when `state.holds_gpu()` or pending offload).
-    pub blocks: Vec<BlockId>,
+    /// GPU blocks held (valid when `state.holds_gpu()` or pending
+    /// offload), as coalesced extents.
+    pub blocks: BlockSet,
     /// How many of `blocks` are charged against the type's reserved quota.
     pub reserved_charged: u32,
     /// CPU blocks holding the offloaded cache.
@@ -162,7 +163,7 @@ pub struct Request {
     /// Refreshed per-request priority P_req (Eq. 5).
     pub priority: f64,
     /// Blocks gradually pre-reserved for the predictive upload (Eq. 4).
-    pub upload_reserved: Vec<BlockId>,
+    pub upload_reserved: BlockSet,
     pub upload_reserved_charged: u32,
     pub finished_us: Option<u64>,
     pub tokens_generated: u32,
@@ -189,7 +190,7 @@ impl Request {
 
     /// Tokens the context will hold when fully resumed (for upload sizing).
     pub fn blocks_held(&self) -> u32 {
-        self.blocks.len() as u32
+        self.blocks.len()
     }
 
     /// Does the current phase end with a function call?
@@ -266,7 +267,7 @@ mod tests {
             gen_in_phase: 0,
             context_tokens: 100,
             state: ReqState::Waiting,
-            blocks: Vec::new(),
+            blocks: BlockSet::new(),
             reserved_charged: 0,
             cpu_blocks: Vec::new(),
             remaining_prefill: 100,
@@ -277,7 +278,7 @@ mod tests {
             admit_full: false,
             pulled: false,
             priority: 0.0,
-            upload_reserved: Vec::new(),
+            upload_reserved: BlockSet::new(),
             upload_reserved_charged: 0,
             finished_us: None,
             tokens_generated: 0,

@@ -1,10 +1,20 @@
 //! [`ServeState`]: the single source of truth both schedulers and both
 //! engines operate on — pools, queues, request/app tables, forecaster,
 //! throughput estimate, reservation state, metrics.
+//!
+//! Storage is deterministic by construction: requests and apps live in
+//! dense [`RequestArena`] / [`AppArena`] slabs (insertion-order
+//! iteration, identity-hash id index), batch membership is the O(1)
+//! [`BatchQueue`], and the function-call lifecycle maintains ordered
+//! incremental indices ([`ServeState::stalled_ids`] /
+//! [`ServeState::offloaded_ids`]) so no scheduler phase ever scans every
+//! request that existed or sorts a `HashMap`'s iteration order away.
 
+use std::collections::BTreeSet;
 use std::collections::HashMap;
 use std::collections::VecDeque;
 
+use super::arena::{AppArena, BatchQueue, RequestArena};
 use super::request::{
     result_tokens, AppId, AppInst, PhaseRt, ReqState, Request, RequestId,
 };
@@ -12,7 +22,8 @@ use super::PressureSnapshot;
 use crate::config::ServeConfig;
 use crate::graph::{AppGraph, NodeId, NodeKind};
 use crate::kvcache::{
-    AgentTypeId, CpuBlockPool, GpuPool, MigrationLedger, PrefixIndex,
+    AgentTypeId, BlockSet, CpuBlockPool, GpuPool, MigrationLedger,
+    PrefixIndex,
 };
 use crate::metrics::MetricsBundle;
 use crate::temporal::Forecaster;
@@ -133,6 +144,16 @@ pub struct SpatialState {
     pub critical_types: Vec<AgentTypeId>,
 }
 
+/// Reusable scheduler scratch buffers: the admission phase runs every
+/// engine tick and must not allocate on the steady state.
+#[derive(Debug, Default)]
+pub struct SchedScratch {
+    /// Admission candidate order (resumed segment, then fresh segment).
+    pub order: Vec<RequestId>,
+    /// Requests admitted this phase (drained back into the scratch).
+    pub admitted: Vec<RequestId>,
+}
+
 /// The complete serving state shared by schedulers and engines.
 pub struct ServeState {
     pub cfg: ServeConfig,
@@ -141,16 +162,23 @@ pub struct ServeState {
     pub prefix: PrefixIndex,
     pub ledger: MigrationLedger,
     pub graphs: Vec<AppGraph>,
-    pub reqs: HashMap<RequestId, Request>,
-    pub apps: HashMap<AppId, AppInst>,
-    /// App → graph template index.
-    pub app_template: HashMap<AppId, usize>,
+    /// Request slab: id-indexed, deterministic iteration, live list.
+    pub reqs: RequestArena,
+    /// App slab (owns each app's graph-template index).
+    pub apps: AppArena,
     /// Waiting queue in arrival order (schedulers may scan by priority).
     pub waiting: VecDeque<RequestId>,
     /// Requests currently in the decode batch.
-    pub running: Vec<RequestId>,
+    pub running: BatchQueue,
     /// Requests admitted but still prefilling (chunked).
-    pub prefilling: Vec<RequestId>,
+    pub prefilling: BatchQueue,
+    /// Ordered incremental index: requests in [`ReqState::Stalled`].
+    /// Maintained on lifecycle transitions (see
+    /// [`ServeState::reindex_request`]); iteration is id-ordered, which
+    /// is exactly the order the seed obtained by sorting per tick.
+    pub stalled_ids: BTreeSet<RequestId>,
+    /// Ordered incremental index: requests in [`ReqState::Offloaded`].
+    pub offloaded_ids: BTreeSet<RequestId>,
     pub types: TypeRegistry,
     pub forecaster: Forecaster,
     pub throughput: ThroughputEstimator,
@@ -158,6 +186,8 @@ pub struct ServeState {
     pub metrics: MetricsBundle,
     /// Scheduler-emitted side effects the engine drains each step.
     pub outbox: Vec<super::Action>,
+    /// Hot-path scratch buffers (admission ordering).
+    pub scratch: SchedScratch,
     next_req: u64,
     next_app: u64,
 }
@@ -179,12 +209,13 @@ impl ServeState {
             prefix: PrefixIndex::new(),
             ledger: MigrationLedger::new(),
             graphs: Vec::new(),
-            reqs: HashMap::new(),
-            apps: HashMap::new(),
-            app_template: HashMap::new(),
+            reqs: RequestArena::new(),
+            apps: AppArena::new(),
             waiting: VecDeque::new(),
-            running: Vec::new(),
-            prefilling: Vec::new(),
+            running: BatchQueue::new(),
+            prefilling: BatchQueue::new(),
+            stalled_ids: BTreeSet::new(),
+            offloaded_ids: BTreeSet::new(),
             types: TypeRegistry::default(),
             forecaster,
             throughput: ThroughputEstimator::default(),
@@ -195,6 +226,7 @@ impl ServeState {
             },
             metrics: MetricsBundle::default(),
             outbox: Vec::new(),
+            scratch: SchedScratch::default(),
             next_req: 0,
             next_app: 0,
         }
@@ -213,22 +245,57 @@ impl ServeState {
         self.next_app = base;
     }
 
+    // ------------------------------------------------------------------
+    // Lifecycle index maintenance
+    // ------------------------------------------------------------------
+
+    /// Set a request's lifecycle state *and* keep the scheduler indices
+    /// (live list, stalled/offloaded sets) consistent. Production code
+    /// and tests must route every transition involving
+    /// `Stalled`/`Offloaded`/`Finished` through this (or call
+    /// [`Self::reindex_request`] after a direct field write); transitions
+    /// between unindexed states may write the field directly.
+    pub fn set_req_state(&mut self, rid: RequestId, to: ReqState) {
+        self.reqs
+            .get_mut(&rid)
+            .expect("set_req_state: unknown request")
+            .state = to;
+        self.reindex_request(rid, to);
+    }
+
+    /// Re-register `rid` under its (already written) new state.
+    pub fn reindex_request(&mut self, rid: RequestId, to: ReqState) {
+        self.stalled_ids.remove(&rid);
+        self.offloaded_ids.remove(&rid);
+        match to {
+            ReqState::Stalled => {
+                self.stalled_ids.insert(rid);
+            }
+            ReqState::Offloaded => {
+                self.offloaded_ids.insert(rid);
+            }
+            ReqState::Finished => self.reqs.mark_finished(rid),
+            _ => {}
+        }
+    }
+
     /// Lift an application (DAG progress + all of its requests) out of
     /// this state for cross-worker migration. The caller is responsible
     /// for having released or transferred any GPU/CPU blocks the requests
     /// still reference — this method only moves bookkeeping.
     pub fn extract_app(&mut self, app_id: AppId) -> MigratedApp {
-        let template = self
-            .app_template
+        let (app, template) = self
+            .apps
             .remove(&app_id)
             .expect("extract_app: unknown app");
-        let app = self.apps.remove(&app_id).expect("extract_app: no inst");
-        let mut requests: Vec<Request> = app
-            .node_req
-            .iter()
-            .flatten()
-            .filter_map(|rid| self.reqs.remove(rid))
-            .collect();
+        let mut requests: Vec<Request> = Vec::new();
+        for rid in app.node_req.iter().flatten() {
+            if let Some(r) = self.reqs.remove(rid) {
+                self.stalled_ids.remove(rid);
+                self.offloaded_ids.remove(rid);
+                requests.push(r);
+            }
+        }
         requests.sort_by_key(|r| r.id);
         self.waiting
             .retain(|rid| !requests.iter().any(|r| r.id == *rid));
@@ -237,8 +304,8 @@ impl ServeState {
         // coordinator bug, not a recoverable condition.
         for r in &requests {
             debug_assert!(
-                !self.running.contains(&r.id)
-                    && !self.prefilling.contains(&r.id),
+                !self.running.contains(r.id)
+                    && !self.prefilling.contains(r.id),
                 "extract_app: request {:?} still in the batch",
                 r.id
             );
@@ -261,8 +328,7 @@ impl ServeState {
             m.template
         );
         let app_id = m.app.id;
-        self.app_template.insert(app_id, m.template);
-        self.apps.insert(app_id, m.app);
+        self.apps.insert(app_id, m.app, m.template);
         for r in m.requests {
             debug_assert!(
                 (r.type_id as usize) < self.types.len(),
@@ -270,10 +336,17 @@ impl ServeState {
                 r.type_id
             );
             let id = r.id;
-            let waiting = r.state == ReqState::Waiting;
+            let state = r.state;
             self.reqs.insert(id, r);
-            if waiting {
-                self.waiting.push_back(id);
+            match state {
+                ReqState::Stalled => {
+                    self.stalled_ids.insert(id);
+                }
+                ReqState::Offloaded => {
+                    self.offloaded_ids.insert(id);
+                }
+                ReqState::Waiting => self.waiting.push_back(id),
+                _ => {}
             }
         }
     }
@@ -290,7 +363,7 @@ impl ServeState {
     }
 
     pub fn graph_of(&self, app: AppId) -> &AppGraph {
-        &self.graphs[self.app_template[&app]]
+        &self.graphs[self.apps.template_of(&app)]
     }
 
     /// Create an application instance; roots with zero parents become
@@ -319,8 +392,7 @@ impl ServeState {
             finished_us: None,
             node_req: vec![None; n],
         };
-        self.apps.insert(id, app);
-        self.app_template.insert(id, template);
+        self.apps.insert(id, app, template);
         let ready: Vec<NodeId> = self.graphs[template]
             .roots()
             .into_iter()
@@ -344,7 +416,7 @@ impl ServeState {
         node: NodeId,
         now_us: u64,
     ) -> RequestId {
-        let template = self.app_template[&app_id];
+        let template = self.apps.template_of(&app_id);
         let g = &self.graphs[template];
         let spec = match &g.node(node).kind {
             NodeKind::Agent(a) => a.clone(),
@@ -405,7 +477,7 @@ impl ServeState {
             gen_in_phase: 0,
             context_tokens: prompt_tokens,
             state: ReqState::Waiting,
-            blocks: Vec::new(),
+            blocks: BlockSet::new(),
             reserved_charged: 0,
             cpu_blocks: Vec::new(),
             remaining_prefill: prompt_tokens,
@@ -416,7 +488,7 @@ impl ServeState {
             admit_full: false,
             pulled: false,
             priority: 0.0,
-            upload_reserved: Vec::new(),
+            upload_reserved: BlockSet::new(),
             upload_reserved_charged: 0,
             finished_us: None,
             tokens_generated: 0,
@@ -439,7 +511,7 @@ impl ServeState {
         node: NodeId,
         now_us: u64,
     ) -> (Vec<NodeId>, bool) {
-        let template = self.app_template[&app_id];
+        let template = self.apps.template_of(&app_id);
         let app = self.apps.get_mut(&app_id).unwrap();
         let ni = node.0 as usize;
         assert!(!app.node_done[ni], "node completed twice");
@@ -483,7 +555,7 @@ impl ServeState {
         if r.state == ReqState::Waiting && !r.blocks.is_empty() {
             // Resumed with KV intact: only needs growth for the result.
             let target = r.context_tokens;
-            let have = r.blocks.len() as u32 * self.cfg.profile.block_tokens;
+            let have = r.blocks.len() * self.cfg.profile.block_tokens;
             self.cfg
                 .profile
                 .blocks_for_tokens(target.saturating_sub(have))
@@ -507,12 +579,14 @@ impl ServeState {
             }
             waiting_count += 1;
         }
-        let offloadable_stalled = self
-            .reqs
-            .values()
-            .filter(|r| r.state == ReqState::Stalled)
-            .map(|r| r.blocks.len() as u32)
-            .sum();
+        // The stalled index makes this O(stalled), not O(all requests).
+        let mut offloadable_stalled = 0u32;
+        for rid in &self.stalled_ids {
+            let r = &self.reqs[rid];
+            if r.state == ReqState::Stalled {
+                offloadable_stalled += r.blocks.len();
+            }
+        }
         PressureSnapshot {
             gpu_total: self.gpu.total(),
             gpu_free: self.gpu.free_blocks(),
@@ -567,17 +641,20 @@ impl ServeState {
     }
 
     /// Refresh P_req for all live requests (called in step phase 1).
+    /// Iterates the arena's live list — O(live), allocation-free — where
+    /// the seed collected and walked every request ever created.
     pub fn refresh_priorities(&mut self, now_us: u64) {
-        let ids: Vec<RequestId> = self
-            .reqs
-            .iter()
-            .filter(|(_, r)| r.state != ReqState::Finished)
-            .map(|(&id, _)| id)
-            .collect();
-        let p = &self.cfg.policy;
-        let (a_s, a_y, a_a) = (p.alpha_struct, p.alpha_sync, p.alpha_aging);
-        for id in ids {
-            let r = &self.reqs[&id];
+        let (a_s, a_y, a_a) = (
+            self.cfg.policy.alpha_struct,
+            self.cfg.policy.alpha_sync,
+            self.cfg.policy.alpha_aging,
+        );
+        for k in 0..self.reqs.live_len() {
+            let slot = self.reqs.live_slot(k);
+            let r = self.reqs.slot_ref(slot);
+            if r.state == ReqState::Finished {
+                continue; // stale live entry (direct state write)
+            }
             let fs = r.f_struct;
             let fy = self.f_sync(r);
             let fa = self.f_aging(r, now_us);
@@ -585,11 +662,11 @@ impl ServeState {
             // Static priority hints shift the structural term; the
             // preemption ladder guarantees progress under thrash — every
             // eviction raises the victim until it becomes unpreemptable.
-            let r = &self.reqs[&id];
+            let r = self.reqs.slot_ref(slot);
             let pr = base
                 + 0.15 * r.static_priority
                 + (0.25 * r.preempt_count as f64).min(5.0);
-            self.reqs.get_mut(&id).unwrap().priority = pr;
+            self.reqs.slot_mut(slot).priority = pr;
         }
     }
 
@@ -607,16 +684,16 @@ impl ServeState {
     /// Release all GPU blocks a request holds (eviction or completion).
     pub fn release_gpu(&mut self, rid: RequestId) {
         let r = self.reqs.get_mut(&rid).unwrap();
-        let blocks = std::mem::take(&mut r.blocks);
+        let blocks = r.blocks.take();
         let charged = std::mem::take(&mut r.reserved_charged);
         let t = r.type_id;
         if !blocks.is_empty() || charged > 0 {
             self.gpu.free(blocks, charged, Some(t));
         }
         // Any gradually reserved upload destination is returned too.
-        let ur = std::mem::take(&mut r.upload_reserved);
-        let uc = std::mem::take(&mut r.upload_reserved_charged);
         let r = self.reqs.get_mut(&rid).unwrap();
+        let ur = r.upload_reserved.take();
+        let uc = std::mem::take(&mut r.upload_reserved_charged);
         let t = r.type_id;
         if !ur.is_empty() || uc > 0 {
             self.gpu.free(ur, uc, Some(t));
@@ -634,18 +711,16 @@ impl ServeState {
 
     /// Blocks held by requests stalled on function calls — the Fig 2a
     /// "idle KV" measure, including in-flight offloads (still on GPU).
+    /// O(live requests) via the arena's live list.
     pub fn stalled_gpu_blocks(&self) -> u32 {
-        self.reqs
-            .values()
-            .filter(|r| r.state.is_fc_stalled())
-            .map(|r| {
-                if r.state.holds_gpu() {
-                    r.blocks.len() as u32
-                } else {
-                    0
-                }
-            })
-            .sum()
+        let mut total = 0u32;
+        for k in 0..self.reqs.live_len() {
+            let r = self.reqs.live_ref(k);
+            if r.state.is_fc_stalled() && r.state.holds_gpu() {
+                total += r.blocks.len();
+            }
+        }
+        total
     }
 
     /// Sample the utilization time-series (engine calls periodically).
@@ -704,7 +779,7 @@ mod tests {
         // Simulate the root generating 180 tokens then finishing.
         let rid = st.apps[&app].node_req[root.0 as usize].unwrap();
         st.reqs.get_mut(&rid).unwrap().tokens_generated = 180;
-        st.reqs.get_mut(&rid).unwrap().state = ReqState::Finished;
+        st.set_req_state(rid, ReqState::Finished);
         let before = st.waiting.len();
         let (funcs, done) = st.complete_node(app, root, 1000);
         assert!(funcs.is_empty());
@@ -755,6 +830,37 @@ mod tests {
         st.refresh_priorities(30_000_000); // 30 s later
         let p1 = st.reqs[&rid].priority;
         assert!(p1 > p0, "aging must raise priority: {p0} -> {p1}");
+    }
+
+    #[test]
+    fn lifecycle_indices_follow_state() {
+        let (mut st, t) = setup();
+        st.spawn_app(t, scales(), 0);
+        let rid = *st.waiting.front().unwrap();
+        st.set_req_state(rid, ReqState::Stalled);
+        assert!(st.stalled_ids.contains(&rid));
+        st.set_req_state(rid, ReqState::Offloaded);
+        assert!(!st.stalled_ids.contains(&rid));
+        assert!(st.offloaded_ids.contains(&rid));
+        st.set_req_state(rid, ReqState::Finished);
+        assert!(st.offloaded_ids.is_empty());
+        assert_eq!(st.reqs.live_len(), 0);
+        assert_eq!(st.reqs.len(), 1);
+    }
+
+    #[test]
+    fn extract_implant_roundtrip_keeps_indices() {
+        let (mut st, t) = setup();
+        let (app, _) = st.spawn_app(t, scales(), 0);
+        let rid = *st.waiting.front().unwrap();
+        st.waiting.retain(|&x| x != rid);
+        st.set_req_state(rid, ReqState::Stalled);
+        let m = st.extract_app(app);
+        assert!(st.stalled_ids.is_empty());
+        assert!(st.reqs.get(&rid).is_none());
+        st.implant_app(m);
+        assert!(st.stalled_ids.contains(&rid));
+        assert_eq!(st.reqs[&rid].state, ReqState::Stalled);
     }
 
     #[test]

@@ -194,11 +194,14 @@ impl RealEngine {
             .iter()
             .map(|(&rid, g)| (rid, g.output.len()))
             .collect();
+        // Take-on-finalize (same contract as the sim engine): no clone of
+        // the latency samples / time series.
+        let metrics = std::mem::take(&mut self.st.metrics);
         Ok(RealRunReport {
-            metrics: self.st.metrics.clone(),
             wall_s: self.start.elapsed().as_secs_f64(),
             decode_steps: self.decode_steps,
-            tokens_generated: self.st.metrics.counters.tokens_generated,
+            tokens_generated: metrics.counters.tokens_generated,
+            metrics,
             outputs,
         })
     }
@@ -265,7 +268,7 @@ impl RealEngine {
     }
 
     fn schedule_func_node(&mut self, app: AppId, node: NodeId) {
-        let template = *self.st.app_template.get(&app).unwrap();
+        let template = self.st.apps.template_of(&app);
         let call = match &self.st.graphs[template].node(node).kind {
             NodeKind::Func(c) => c.clone(),
             NodeKind::Agent(_) => unreachable!(),
@@ -283,12 +286,11 @@ impl RealEngine {
             .prefilling
             .iter()
             .chain(self.st.running.iter())
-            .copied()
             .collect();
         for rid in ids {
             let r = &self.st.reqs[&rid];
             debug_assert_eq!(r.blocks.len(), 1, "one block == one slot");
-            let slot = r.blocks[0].0 as usize;
+            let slot = r.blocks.first().unwrap().0 as usize;
             if self.slots[slot] != Some(rid) {
                 self.slots[slot] = Some(rid);
             }
@@ -311,13 +313,13 @@ impl RealEngine {
             let rid = RequestId(t.req_id);
             match t.dir {
                 crate::kvcache::Direction::D2H => {
-                    let slot = t.gpu_blocks[0].0 as usize;
+                    let slot = t.gpu_blocks.first().unwrap().0 as usize;
                     let img = self.extract_slot(slot, &rid);
                     self.host_store.insert(rid, img);
                     self.slots[slot] = None;
                 }
                 crate::kvcache::Direction::H2D => {
-                    let slot = t.gpu_blocks[0].0 as usize;
+                    let slot = t.gpu_blocks.first().unwrap().0 as usize;
                     let img = self
                         .host_store
                         .remove(&rid)
@@ -374,7 +376,6 @@ impl RealEngine {
             .st
             .prefilling
             .iter()
-            .copied()
             .filter(|rid| !self.gen.contains_key(rid))
             .collect();
         let mut any = false;
@@ -382,7 +383,7 @@ impl RealEngine {
             any = true;
             let (slot, prompt) = {
                 let r = &self.st.reqs[&rid];
-                let slot = r.blocks[0].0 as usize;
+                let slot = r.blocks.first().unwrap().0 as usize;
                 // Deterministic synthetic prompt token ids.
                 let mut rng = self.rng.fold(0xBEEF ^ rid.0);
                 let prompt: Vec<i32> = (0..r.prompt_tokens)
@@ -422,7 +423,6 @@ impl RealEngine {
             .st
             .prefilling
             .iter()
-            .copied()
             .filter(|rid| self.st.reqs[rid].state == ReqState::Prefilling)
             .collect();
         for rid in resumed {
@@ -445,24 +445,23 @@ impl RealEngine {
             r.remaining_prefill = 0;
             r.state = ReqState::Running;
         }
-        // Promote into the running list.
+        // Promote into the running list (O(1) removals, order kept).
         let promoted: Vec<RequestId> = self
             .st
             .prefilling
             .iter()
-            .copied()
             .filter(|rid| self.st.reqs[rid].state == ReqState::Running)
             .collect();
-        self.st
-            .prefilling
-            .retain(|rid| self.st.reqs[rid].state == ReqState::Prefilling);
-        self.st.running.extend(promoted);
+        for &rid in &promoted {
+            self.st.prefilling.remove(rid);
+            self.st.running.push(rid);
+        }
         Ok(any)
     }
 
     /// One real batched decode step across all running slots.
     fn run_decode_step(&mut self) -> Result<bool> {
-        let batch: Vec<RequestId> = self.st.running.clone();
+        let batch: Vec<RequestId> = self.st.running.iter().collect();
         if batch.is_empty() {
             return Ok(false);
         }
@@ -474,7 +473,7 @@ impl RealEngine {
         let mut overflow: Vec<RequestId> = Vec::new();
         for rid in batch {
             let r = &self.st.reqs[&rid];
-            let slot = r.blocks[0].0 as usize;
+            let slot = r.blocks.first().unwrap().0 as usize;
             let g = self.gen.entry(rid).or_default();
             if g.cache_len + 1 >= max_len {
                 overflow.push(rid); // slot exhausted: finish early
@@ -557,7 +556,7 @@ impl RealEngine {
                 r.phases[r.cur_phase].result_tokens,
             )
         };
-        self.st.running.retain(|&x| x != rid);
+        self.st.running.remove(rid);
         temporal::call_start(
             &mut self.st,
             rid,
@@ -576,7 +575,7 @@ impl RealEngine {
     fn finish_request(&mut self, rid: RequestId, now: u64) {
         crate::spatial::record_prefix(&mut self.st, rid, now);
         // Clear the slot.
-        if let Some(&crate::kvcache::BlockId(s)) =
+        if let Some(crate::kvcache::BlockId(s)) =
             self.st.reqs[&rid].blocks.first()
         {
             self.slots[s as usize] = None;
@@ -590,8 +589,9 @@ impl RealEngine {
             r.finished_us = Some(now);
             (r.app_id, r.node, r.created_us)
         };
+        self.st.reindex_request(rid, ReqState::Finished);
         self.st.metrics.request_latency.record_us(now - created);
-        self.st.running.retain(|&x| x != rid);
+        self.st.running.remove(rid);
         let (funcs, _) = self.st.complete_node(app, node, now);
         for n in funcs {
             self.schedule_func_node(app, n);

@@ -7,6 +7,12 @@
 //! completions, standalone func-node delays, and block transfers are
 //! events; everything the schedulers decide flows through the exact same
 //! code paths the real PJRT engine uses.
+//!
+//! The inner loop is allocation-free on the steady state: the decode
+//! batch snapshot reuses a scratch buffer, batch membership updates are
+//! O(1) `BatchQueue` removals (never `Vec::retain` scans), and the
+//! scheduler phases iterate incremental indices instead of cloning lists
+//! or walking every request ever created.
 
 use crate::config::ServeConfig;
 use crate::coordination::{
@@ -53,6 +59,16 @@ impl RunReport {
     pub fn summary(&self) -> String {
         format!("[{}] {}", self.mode, self.metrics.summary())
     }
+
+    /// Canonical integer-only digest (determinism regression contract).
+    pub fn digest(&self) -> String {
+        format!(
+            "mode={} truncated={}\n{}",
+            self.mode,
+            self.truncated,
+            self.metrics.digest_line("run")
+        )
+    }
 }
 
 /// Discrete-event serving engine over [`ServeState`].
@@ -63,6 +79,10 @@ pub struct SimEngine {
     rng: Rng,
     /// Safety valve against policy deadlocks in experimental configs.
     max_iterations: u64,
+    /// Reusable decode-batch snapshot (the loop mutates `running`).
+    scratch_batch: Vec<RequestId>,
+    /// Reusable prefill-promotion list.
+    scratch_promoted: Vec<RequestId>,
 }
 
 impl SimEngine {
@@ -74,6 +94,8 @@ impl SimEngine {
             events: EventQueue::new(),
             rng: Rng::new(seed),
             max_iterations: 3_000_000,
+            scratch_batch: Vec::new(),
+            scratch_promoted: Vec::new(),
         }
     }
 
@@ -170,23 +192,25 @@ impl SimEngine {
         self.st.metrics.makespan_us = self.clock.now_us();
         self.st.metrics.swap_volume_blocks =
             self.st.ledger.swap_volume_blocks();
+        // Take-on-finalize: hand the bundle (latency samples + time
+        // series) to the report without cloning it; the engine keeps a
+        // fresh default in its place.
         RunReport {
             mode: self.st.cfg.mode.name(),
-            metrics: self.st.metrics.clone(),
+            metrics: std::mem::take(&mut self.st.metrics),
             truncated,
         }
     }
 
     fn drain_outbox(&mut self) {
-        let actions = std::mem::take(&mut self.st.outbox);
-        for a in actions {
-            match a {
-                Action::TransferIssued { xfer, completes_us } => {
-                    self.events
-                        .push(completes_us, Ev::TransferDone { xfer });
-                }
-            }
+        // In-place drain (Action is Copy): preserves issue order — the
+        // event queue breaks time ties FIFO — without reallocating.
+        for i in 0..self.st.outbox.len() {
+            let Action::TransferIssued { xfer, completes_us } =
+                self.st.outbox[i];
+            self.events.push(completes_us, Ev::TransferDone { xfer });
         }
+        self.st.outbox.clear();
     }
 
     /// Apply a non-arrival event at the current clock time. Returns the
@@ -337,9 +361,11 @@ impl SimEngine {
         self.rescue_deadlock()
     }
 
-    /// Finalize this worker's metric bundle at the end of a cluster run.
-    /// Swap volume comes from the migration ledger, so cross-worker
-    /// migration traffic is included alongside D2H/H2D offload traffic.
+    /// Finalize this worker's metric bundle at the end of a cluster run,
+    /// *taking* it out of the engine (no clone of latency samples / time
+    /// series; the engine keeps a fresh default). Swap volume comes from
+    /// the migration ledger, so cross-worker migration traffic is
+    /// included alongside D2H/H2D offload traffic.
     pub fn finalize_metrics(&mut self, end_us: u64) -> MetricsBundle {
         // Close the utilization time series at the cluster end time:
         // cluster shards sample only on executed iterations, so without
@@ -349,7 +375,7 @@ impl SimEngine {
         self.st.metrics.makespan_us = end_us;
         self.st.metrics.swap_volume_blocks =
             self.st.ledger.swap_volume_blocks();
-        self.st.metrics.clone()
+        std::mem::take(&mut self.st.metrics)
     }
 
     /// Standalone (non-LLM) func node: a pure delay.
@@ -359,7 +385,7 @@ impl SimEngine {
         node: NodeId,
         tool_sim: &ToolSim,
     ) {
-        let template = *self.st.app_template.get(&app).unwrap();
+        let template = self.st.apps.template_of(&app);
         let call = match &self.st.graphs[template].node(node).kind {
             NodeKind::Func(c) => c.clone(),
             NodeKind::Agent(_) => unreachable!("agent scheduled as func"),
@@ -376,42 +402,48 @@ impl SimEngine {
     /// running sequence. Returns the iteration duration (µs).
     fn execute_iteration(&mut self, tool_sim: &ToolSim) -> u64 {
         let now = self.clock.now_us();
-        let profile = self.st.cfg.profile.clone();
+        let prefill_us_per_token = self.st.cfg.profile.prefill_us_per_token;
+        let decode_base_us = self.st.cfg.profile.decode_base_us;
 
-        // ---- Chunked prefill. ----
+        // ---- Chunked prefill (the list itself is not mutated here). ----
         let mut prefill_budget = self.st.cfg.max_prefill_tokens;
         let mut prefill_tokens: u32 = 0;
-        let prefill_list: Vec<RequestId> = self.st.prefilling.clone();
-        for rid in prefill_list {
+        let mut promoted = std::mem::take(&mut self.scratch_promoted);
+        promoted.clear();
+        for i in 0..self.st.prefilling.raw_len() {
             if prefill_budget == 0 {
                 break;
             }
+            let Some(rid) = self.st.prefilling.raw_get(i) else {
+                continue;
+            };
             let r = self.st.reqs.get_mut(&rid).unwrap();
             let chunk = r.remaining_prefill.min(prefill_budget);
             r.remaining_prefill -= chunk;
             prefill_budget -= chunk;
             prefill_tokens += chunk;
             if r.remaining_prefill == 0 {
+                // Prefilling → Running: neither state is index-tracked.
                 r.state = ReqState::Running;
+                promoted.push(rid);
             }
         }
-        // Promote finished prefills into the decode batch.
-        let promoted: Vec<RequestId> = self
-            .st
-            .prefilling
-            .iter()
-            .copied()
-            .filter(|rid| self.st.reqs[rid].state == ReqState::Running)
-            .collect();
-        self.st
-            .prefilling
-            .retain(|rid| self.st.reqs[rid].state == ReqState::Prefilling);
-        self.st.running.extend(promoted);
+        // Promote finished prefills into the decode batch (queue order).
+        for &rid in &promoted {
+            self.st.prefilling.remove(rid);
+            self.st.running.push(rid);
+        }
+        promoted.clear();
+        self.scratch_promoted = promoted;
 
         // ---- Decode one token per running sequence. ----
-        let batch: Vec<RequestId> = self.st.running.clone();
+        // Snapshot into the reusable scratch: the loop body preempts /
+        // stalls / finishes entries of `running` while iterating.
+        let mut batch = std::mem::take(&mut self.scratch_batch);
+        batch.clear();
+        batch.extend(self.st.running.iter());
         let mut decoded: u32 = 0;
-        for rid in batch {
+        for &rid in &batch {
             // May have been preempted by an earlier grower this iteration.
             if self.st.reqs.get(&rid).map(|r| r.state)
                 != Some(ReqState::Running)
@@ -447,15 +479,18 @@ impl SimEngine {
                 r.gen_in_phase = 0;
             }
         }
+        batch.clear();
+        self.scratch_batch = batch;
 
         // ---- Iteration timing. ----
         let prefill_us =
-            (profile.prefill_us_per_token * prefill_tokens as f64) as u64;
-        let decode_us = profile.decode_iter_us(decoded as usize);
+            (prefill_us_per_token * prefill_tokens as f64) as u64;
+        let decode_us =
+            self.st.cfg.profile.decode_iter_us(decoded as usize);
         // A zero-progress iteration (pure preemption churn) still burns a
         // full iteration's time on real hardware.
         let floor = if decoded == 0 && prefill_tokens == 0 {
-            profile.decode_base_us as u64
+            decode_base_us as u64
         } else {
             0
         };
@@ -465,17 +500,19 @@ impl SimEngine {
             .record_iteration(decoded, dt.max(1));
         self.st.metrics.counters.decode_iterations += 1;
         self.st.metrics.counters.tokens_generated += decoded as u64;
-        // Charge execution time (H_a input).
-        let charged: Vec<RequestId> = self
-            .st
-            .running
-            .iter()
-            .chain(self.st.prefilling.iter())
-            .copied()
-            .collect();
-        for rid in charged {
-            if let Some(r) = self.st.reqs.get_mut(&rid) {
-                r.exec_time_us += dt;
+        // Charge execution time (H_a input) — in place, no list clone.
+        for i in 0..self.st.running.raw_len() {
+            if let Some(rid) = self.st.running.raw_get(i) {
+                if let Some(r) = self.st.reqs.get_mut(&rid) {
+                    r.exec_time_us += dt;
+                }
+            }
+        }
+        for i in 0..self.st.prefilling.raw_len() {
+            if let Some(rid) = self.st.prefilling.raw_get(i) {
+                if let Some(r) = self.st.reqs.get_mut(&rid) {
+                    r.exec_time_us += dt;
+                }
             }
         }
         let _ = now;
@@ -485,10 +522,10 @@ impl SimEngine {
     /// Ensure the request has a block for its next token, preempting if
     /// necessary. Returns false if the request itself got preempted.
     fn ensure_growth_block(&mut self, rid: RequestId) -> bool {
-        let profile = &self.st.cfg.profile;
+        let block_tokens = self.st.cfg.profile.block_tokens;
         let (needs, route) = {
             let r = &self.st.reqs[&rid];
-            let capacity = r.blocks.len() as u32 * profile.block_tokens;
+            let capacity = r.blocks.len() * block_tokens;
             (
                 r.context_tokens + 1 > capacity,
                 spatial::route_for(&self.st, rid),
@@ -504,7 +541,7 @@ impl SimEngine {
                     reserved_charged,
                 } => {
                     let r = self.st.reqs.get_mut(&rid).unwrap();
-                    r.blocks.extend(blocks);
+                    r.blocks.absorb(blocks);
                     r.reserved_charged += reserved_charged;
                     return true;
                 }
@@ -535,7 +572,6 @@ impl SimEngine {
             .running
             .iter()
             .chain(self.st.prefilling.iter())
-            .copied()
             .filter(|&rid| !self.st.reqs[&rid].blocks.is_empty());
         if self.st.cfg.mode.agent_aware() {
             // Strict-priority preemption: only victims with strictly lower
@@ -601,17 +637,19 @@ impl SimEngine {
             return true;
         }
         // (2) Strand-breaking: release a partial upload reservation.
-        // Request id breaks priority ties — HashMap iteration order must
-        // not pick the victim.
+        // The offloaded index iterates in id order, and the id also
+        // breaks priority ties, so the victim never depends on storage
+        // order.
         let stranded = self
             .st
-            .reqs
-            .values()
-            .filter(|r| {
+            .offloaded_ids
+            .iter()
+            .copied()
+            .filter(|rid| {
+                let r = &self.st.reqs[rid];
                 r.state == ReqState::Offloaded
                     && !r.upload_reserved.is_empty()
             })
-            .map(|r| r.id)
             .min_by(|a, b| {
                 self.st.reqs[a]
                     .priority
@@ -620,7 +658,7 @@ impl SimEngine {
             });
         if let Some(rid) = stranded {
             let r = self.st.reqs.get_mut(&rid).unwrap();
-            let blocks = std::mem::take(&mut r.upload_reserved);
+            let blocks = r.upload_reserved.take();
             let charged = std::mem::take(&mut r.upload_reserved_charged);
             let t = r.type_id;
             self.st.gpu.free(blocks, charged, Some(t));
@@ -650,6 +688,7 @@ impl SimEngine {
 
         self.st.release_gpu(victim);
         let r = self.st.reqs.get_mut(&victim).unwrap();
+        // Running/Prefilling → Waiting: neither end is index-tracked.
         r.state = ReqState::Waiting;
         r.remaining_prefill = r.context_tokens; // full recompute
         r.queue_enter_us = now;
@@ -657,8 +696,8 @@ impl SimEngine {
         self.st.metrics.counters.recomputes += 1;
         self.st.metrics.counters.recompute_tokens +=
             r.context_tokens as u64;
-        self.st.running.retain(|&x| x != victim);
-        self.st.prefilling.retain(|&x| x != victim);
+        self.st.running.remove(victim);
+        self.st.prefilling.remove(victim);
         self.st.waiting.push_back(victim);
     }
 
@@ -671,7 +710,7 @@ impl SimEngine {
             let call = r.phases[r.cur_phase].call.clone().unwrap();
             (call, r.phases[r.cur_phase].result_tokens)
         };
-        self.st.running.retain(|&x| x != rid);
+        self.st.running.remove(rid);
         temporal::call_start(
             &mut self.st,
             rid,
@@ -700,11 +739,12 @@ impl SimEngine {
             r.finished_us = Some(now);
             (r.app_id, r.node, r.created_us)
         };
+        self.st.reindex_request(rid, ReqState::Finished);
         self.st
             .metrics
             .request_latency
             .record_us(now - created);
-        self.st.running.retain(|&x| x != rid);
+        self.st.running.remove(rid);
         let (funcs, _done) = self.st.complete_node(app, node, now);
         for n in funcs {
             self.schedule_func_node(app, n, tool_sim);
@@ -761,6 +801,7 @@ mod tests {
             a.metrics.counters.preemptions,
             b.metrics.counters.preemptions
         );
+        assert_eq!(a.digest(), b.digest());
     }
 
     #[test]
@@ -802,10 +843,16 @@ mod tests {
         let spec = WorkloadSpec::poisson(&g, 1.0, 5);
         let mut e = SimEngine::new(cfg);
         let _ = e.run_workload(&spec);
-        // After the run everything is freed.
+        // After the run everything is freed — and the extent free list
+        // has coalesced back into a single run.
         assert_eq!(e.st.gpu.free_blocks(), e.st.gpu.total());
         assert_eq!(e.st.gpu.pending_free_blocks(), 0);
+        assert_eq!(e.st.gpu.free_extents().len(), 1);
         assert_eq!(e.st.cpu.used_blocks(), 0);
+        // Lifecycle indices drained with the requests.
+        assert!(e.st.stalled_ids.is_empty());
+        assert!(e.st.offloaded_ids.is_empty());
+        assert_eq!(e.st.reqs.live_len(), 0);
     }
 
     #[test]

@@ -1,0 +1,189 @@
+//! Extent-based block bookkeeping.
+//!
+//! The seed tracked GPU blocks as `Vec<BlockId>` — one entry per block —
+//! so allocating/freeing a k-block request was O(k) pushes and pops, and
+//! a long-context request's block list was k words of memory walked on
+//! every transfer. Block ids are opaque to every policy (only *counts*
+//! reach scheduling decisions), so the natural representation is a list
+//! of contiguous **extents** `[start, start+len)`: alloc/free become
+//! O(extents touched), and a request's whole KV footprint is typically
+//! one or two extents regardless of context length.
+
+use super::BlockId;
+
+/// A contiguous run of physical blocks `[start, start + len)`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Extent {
+    pub start: u32,
+    pub len: u32,
+}
+
+impl Extent {
+    #[inline]
+    pub fn end(&self) -> u32 {
+        self.start + self.len
+    }
+}
+
+/// A compact set of GPU blocks held as coalesced extents, in the order
+/// they were granted. Replaces per-block `Vec<BlockId>` lists on
+/// requests, upload reservations, and the migration ledger.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct BlockSet {
+    extents: Vec<Extent>,
+    total: u32,
+}
+
+impl BlockSet {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A set covering one contiguous run (tests, single-grant paths).
+    pub fn from_extent(start: u32, len: u32) -> Self {
+        let mut s = Self::new();
+        s.push(Extent { start, len });
+        s
+    }
+
+    /// Total blocks in the set.
+    #[inline]
+    pub fn len(&self) -> u32 {
+        self.total
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.total == 0
+    }
+
+    /// The coalesced extents, in grant order.
+    pub fn extents(&self) -> &[Extent] {
+        &self.extents
+    }
+
+    pub fn extent_count(&self) -> usize {
+        self.extents.len()
+    }
+
+    /// First block of the set (the real engine's block==slot mapping).
+    pub fn first(&self) -> Option<BlockId> {
+        self.extents.first().map(|e| BlockId(e.start))
+    }
+
+    /// Append an extent, merging with the tail when physically adjacent.
+    pub fn push(&mut self, e: Extent) {
+        if e.len == 0 {
+            return;
+        }
+        self.total += e.len;
+        if let Some(last) = self.extents.last_mut() {
+            if last.end() == e.start {
+                last.len += e.len;
+                return;
+            }
+        }
+        self.extents.push(e);
+    }
+
+    /// Append every extent of `other` (a later grant growing this set);
+    /// `push` merges at the seam when the runs are adjacent.
+    pub fn absorb(&mut self, other: BlockSet) {
+        for e in other.extents {
+            self.push(e);
+        }
+    }
+
+    /// Take the whole set, leaving this one empty.
+    pub fn take(&mut self) -> BlockSet {
+        std::mem::take(self)
+    }
+
+    /// Split off the first `n` blocks into a new set (n ≤ len).
+    pub fn take_prefix(&mut self, n: u32) -> BlockSet {
+        debug_assert!(n <= self.total, "take_prefix past end");
+        let mut out = BlockSet::new();
+        while out.total < n {
+            let need = n - out.total;
+            let e = self.extents[0];
+            if e.len <= need {
+                self.extents.remove(0);
+                self.total -= e.len;
+                out.push(e);
+            } else {
+                self.extents[0].start += need;
+                self.extents[0].len -= need;
+                self.total -= need;
+                out.push(Extent {
+                    start: e.start,
+                    len: need,
+                });
+            }
+        }
+        out
+    }
+
+    /// Iterate the individual block ids (tests, invariant checks).
+    pub fn iter_blocks(&self) -> impl Iterator<Item = BlockId> + '_ {
+        self.extents
+            .iter()
+            .flat_map(|e| (e.start..e.end()).map(BlockId))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_merges_adjacent() {
+        let mut s = BlockSet::new();
+        s.push(Extent { start: 0, len: 4 });
+        s.push(Extent { start: 4, len: 2 });
+        s.push(Extent { start: 10, len: 1 });
+        assert_eq!(s.len(), 7);
+        assert_eq!(s.extent_count(), 2);
+        assert_eq!(s.extents()[0], Extent { start: 0, len: 6 });
+        assert_eq!(s.first(), Some(BlockId(0)));
+    }
+
+    #[test]
+    fn absorb_merges_at_seam() {
+        let mut a = BlockSet::from_extent(0, 3);
+        let b = BlockSet::from_extent(3, 3);
+        a.absorb(b);
+        assert_eq!(a.len(), 6);
+        assert_eq!(a.extent_count(), 1);
+        let ids: Vec<u32> = a.iter_blocks().map(|b| b.0).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn take_prefix_splits_extents() {
+        let mut s = BlockSet::new();
+        s.push(Extent { start: 0, len: 4 });
+        s.push(Extent { start: 8, len: 4 });
+        let head = {
+            let mut s = s.clone();
+            s.take_prefix(6)
+        };
+        assert_eq!(head.len(), 6);
+        let ids: Vec<u32> = head.iter_blocks().map(|b| b.0).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3, 8, 9]);
+        let mut rest = s;
+        let head2 = rest.take_prefix(2);
+        assert_eq!(head2.len(), 2);
+        assert_eq!(rest.len(), 6);
+        let rest_ids: Vec<u32> = rest.iter_blocks().map(|b| b.0).collect();
+        assert_eq!(rest_ids, vec![2, 3, 8, 9, 10, 11]);
+    }
+
+    #[test]
+    fn take_leaves_empty() {
+        let mut s = BlockSet::from_extent(5, 5);
+        let t = s.take();
+        assert_eq!(t.len(), 5);
+        assert!(s.is_empty());
+        assert_eq!(s.extent_count(), 0);
+    }
+}

@@ -5,10 +5,15 @@
 //! each critical agent type's quota is never handed to shared allocations.
 //! This matches the paper: non-critical work cannot exhaust the blocks the
 //! Spatial Scheduler set aside for critical-path agents.
+//!
+//! The free list is an ordered **extent map** (start → run length,
+//! coalesced on free), so allocating or freeing a k-block request costs
+//! O(extents touched) instead of O(k) per-block pushes, and every grant
+//! comes back as a compact [`BlockSet`].
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 
-use super::{AgentTypeId, BlockId};
+use super::{AgentTypeId, BlockSet, Extent};
 
 /// Which capacity region an allocation is charged to (§3.2 phase 4:
 /// "routing each waiting request to shared capacity, reserved capacity,
@@ -27,7 +32,7 @@ pub enum AllocOutcome {
     /// Blocks granted; `reserved_charged` of them count against the type's
     /// quota and must be reported back on free.
     Granted {
-        blocks: Vec<BlockId>,
+        blocks: BlockSet,
         reserved_charged: u32,
     },
     /// Not enough capacity on the requested route.
@@ -38,7 +43,10 @@ pub enum AllocOutcome {
 #[derive(Debug, Clone)]
 pub struct GpuPool {
     total: u32,
-    free: Vec<BlockId>,
+    /// Free extents: start → length, sorted, coalesced, non-overlapping.
+    free: BTreeMap<u32, u32>,
+    /// Cached Σ lengths of `free` (kept exact by every mutation).
+    free_blocks: u32,
     /// Blocks released by their owner but still being read by an in-flight
     /// D2H transfer (§6.3 pending-free protocol).
     pending_free: u32,
@@ -50,9 +58,14 @@ pub struct GpuPool {
 
 impl GpuPool {
     pub fn new(total: u32) -> Self {
+        let mut free = BTreeMap::new();
+        if total > 0 {
+            free.insert(0, total);
+        }
         Self {
             total,
-            free: (0..total).rev().map(BlockId).collect(),
+            free,
+            free_blocks: total,
             pending_free: 0,
             quotas: HashMap::new(),
             quota_used: HashMap::new(),
@@ -66,7 +79,7 @@ impl GpuPool {
     /// Physically free blocks (includes reserved headroom; excludes
     /// pending-free).
     pub fn free_blocks(&self) -> u32 {
-        self.free.len() as u32
+        self.free_blocks
     }
 
     /// Blocks in pending-free limbo (unreusable until transfer completes).
@@ -150,7 +163,7 @@ impl GpuPool {
     pub fn alloc(&mut self, n: u32, route: Route) -> AllocOutcome {
         if n == 0 {
             return AllocOutcome::Granted {
-                blocks: Vec::new(),
+                blocks: BlockSet::new(),
                 reserved_charged: 0,
             };
         }
@@ -172,15 +185,66 @@ impl GpuPool {
         }
     }
 
-    fn pop_n(&mut self, n: u32) -> Vec<BlockId> {
-        let at = self.free.len() - n as usize;
-        self.free.split_off(at)
+    /// Take `n` blocks, carving from the LOW end of the highest-start
+    /// free extent: successive growth allocations of one request are
+    /// then handed ascending-adjacent runs, which [`BlockSet::absorb`]
+    /// merges — a context that grows k blocks stays a single extent
+    /// while the region is contiguous. O(extents consumed).
+    fn pop_n(&mut self, n: u32) -> BlockSet {
+        let mut out = BlockSet::new();
+        let mut need = n;
+        while need > 0 {
+            let (&start, &len) = self
+                .free
+                .iter()
+                .next_back()
+                .expect("pop_n: free list underflow");
+            if len <= need {
+                self.free.remove(&start);
+                out.push(Extent { start, len });
+                need -= len;
+            } else {
+                self.free.remove(&start);
+                self.free.insert(start + need, len - need);
+                out.push(Extent { start, len: need });
+                need = 0;
+            }
+        }
+        self.free_blocks -= n;
+        out
+    }
+
+    /// Insert one extent into the free map, coalescing with both
+    /// neighbors. Overlap (double free) trips the debug assertions.
+    fn insert_extent(&mut self, e: Extent) {
+        if e.len == 0 {
+            return;
+        }
+        let mut start = e.start;
+        let mut len = e.len;
+        if let Some((&ps, &pl)) = self.free.range(..=start).next_back() {
+            debug_assert!(ps + pl <= start, "double free below {start}");
+            if ps + pl == start {
+                self.free.remove(&ps);
+                start = ps;
+                len += pl;
+            }
+        }
+        if let Some((&ns, &nl)) = self.free.range(start..).next() {
+            debug_assert!(start + len <= ns, "double free above {start}");
+            if start + len == ns {
+                self.free.remove(&ns);
+                len += nl;
+            }
+        }
+        self.free.insert(start, len);
+        self.free_blocks += e.len;
     }
 
     /// Return blocks to the pool, un-charging any reserved accounting.
     pub fn free(
         &mut self,
-        blocks: Vec<BlockId>,
+        blocks: BlockSet,
         charged: u32,
         t: Option<AgentTypeId>,
     ) {
@@ -189,10 +253,13 @@ impl GpuPool {
             let used = self.quota_used.entry(t).or_insert(0);
             *used = used.saturating_sub(charged);
         }
-        self.free.extend(blocks);
-        debug_assert!(
-            self.free.len() as u32 + self.pending_free + self.used_blocks()
-                == self.total
+        for &e in blocks.extents() {
+            self.insert_extent(e);
+        }
+        debug_assert_eq!(
+            self.free.values().sum::<u32>(),
+            self.free_blocks,
+            "free-list accounting drift"
         );
     }
 
@@ -202,7 +269,7 @@ impl GpuPool {
     /// the free list only via [`Self::complete_pending`].
     pub fn mark_pending_free(
         &mut self,
-        blocks: &[BlockId],
+        blocks: &BlockSet,
         charged: u32,
         t: Option<AgentTypeId>,
     ) {
@@ -211,13 +278,23 @@ impl GpuPool {
             let used = self.quota_used.entry(t).or_insert(0);
             *used = used.saturating_sub(charged);
         }
-        self.pending_free += blocks.len() as u32;
+        self.pending_free += blocks.len();
     }
 
     /// Transfer finished: pending-free blocks become reusable.
-    pub fn complete_pending(&mut self, blocks: Vec<BlockId>) {
-        self.pending_free -= blocks.len() as u32;
-        self.free.extend(blocks);
+    pub fn complete_pending(&mut self, blocks: BlockSet) {
+        self.pending_free -= blocks.len();
+        for &e in blocks.extents() {
+            self.insert_extent(e);
+        }
+    }
+
+    /// Snapshot of the free extents (tests / invariant checks).
+    pub fn free_extents(&self) -> Vec<Extent> {
+        self.free
+            .iter()
+            .map(|(&start, &len)| Extent { start, len })
+            .collect()
     }
 }
 
@@ -242,6 +319,8 @@ mod tests {
         assert_eq!(p.used_blocks(), 10);
         p.free(blocks, 0, None);
         assert_eq!(p.free_blocks(), 100);
+        // Everything coalesced back into one extent.
+        assert_eq!(p.free_extents().len(), 1);
     }
 
     #[test]
@@ -350,5 +429,34 @@ mod tests {
             p.alloc(0, Route::Shared),
             AllocOutcome::Granted { .. }
         ));
+    }
+
+    #[test]
+    fn interleaved_free_coalesces_extents() {
+        let mut p = GpuPool::new(32);
+        let AllocOutcome::Granted { blocks: a, .. } =
+            p.alloc(8, Route::Shared)
+        else {
+            panic!()
+        };
+        let AllocOutcome::Granted { blocks: b, .. } =
+            p.alloc(8, Route::Shared)
+        else {
+            panic!()
+        };
+        let AllocOutcome::Granted { blocks: c, .. } =
+            p.alloc(8, Route::Shared)
+        else {
+            panic!()
+        };
+        // Free the middle slice first: no coalescing possible yet.
+        p.free(b, 0, None);
+        assert_eq!(p.free_extents().len(), 2);
+        // Freeing its neighbors merges everything back into one run.
+        p.free(a, 0, None);
+        p.free(c, 0, None);
+        assert_eq!(p.free_blocks(), 32);
+        assert_eq!(p.free_extents().len(), 1);
+        assert_eq!(p.free_extents()[0], Extent { start: 0, len: 32 });
     }
 }

@@ -4,11 +4,13 @@
 //! All migration is issued asynchronously on a dedicated stream; source GPU
 //! blocks are marked pending-free immediately and return to the free pool
 //! only when the copy completes. The ledger owns that bookkeeping plus the
-//! swap-volume statistics the ablation study reports (§7.3).
+//! swap-volume statistics the ablation study reports (§7.3). GPU blocks
+//! ride the ledger as compact [`BlockSet`] extents, so a transfer record
+//! is O(extents), not O(blocks).
 
 use std::collections::HashMap;
 
-use super::{BlockId, CpuBlockId};
+use super::{BlockSet, CpuBlockId};
 
 /// Transfer identifier.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -29,7 +31,7 @@ pub struct Transfer {
     pub id: TransferId,
     pub req_id: u64,
     pub dir: Direction,
-    pub gpu_blocks: Vec<BlockId>,
+    pub gpu_blocks: BlockSet,
     pub cpu_blocks: Vec<CpuBlockId>,
     pub issued_us: u64,
     pub completes_us: u64,
@@ -37,7 +39,7 @@ pub struct Transfer {
 
 impl Transfer {
     pub fn blocks(&self) -> u32 {
-        self.gpu_blocks.len() as u32
+        self.gpu_blocks.len()
     }
 }
 
@@ -64,7 +66,7 @@ impl MigrationLedger {
         &mut self,
         req_id: u64,
         dir: Direction,
-        gpu_blocks: Vec<BlockId>,
+        gpu_blocks: BlockSet,
         cpu_blocks: Vec<CpuBlockId>,
         issued_us: u64,
         completes_us: u64,
@@ -136,7 +138,7 @@ mod tests {
         let id = l.issue(
             7,
             Direction::D2H,
-            vec![BlockId(1), BlockId(2)],
+            BlockSet::from_extent(1, 2),
             vec![CpuBlockId(0), CpuBlockId(1)],
             100,
             300,
@@ -153,11 +155,18 @@ mod tests {
     #[test]
     fn stats_accumulate() {
         let mut l = MigrationLedger::new();
-        let a = l.issue(1, Direction::D2H, vec![BlockId(0)], vec![], 0, 1);
+        let a = l.issue(
+            1,
+            Direction::D2H,
+            BlockSet::from_extent(0, 1),
+            vec![],
+            0,
+            1,
+        );
         let b = l.issue(
             1,
             Direction::H2D,
-            vec![BlockId(0)],
+            BlockSet::from_extent(0, 1),
             vec![CpuBlockId(9)],
             2,
             3,
@@ -176,8 +185,8 @@ mod tests {
     #[test]
     fn ids_unique() {
         let mut l = MigrationLedger::new();
-        let a = l.issue(1, Direction::D2H, vec![], vec![], 0, 1);
-        let b = l.issue(2, Direction::D2H, vec![], vec![], 0, 1);
+        let a = l.issue(1, Direction::D2H, BlockSet::new(), vec![], 0, 1);
+        let b = l.issue(2, Direction::D2H, BlockSet::new(), vec![], 0, 1);
         assert_ne!(a, b);
     }
 }

@@ -7,12 +7,14 @@
 //! (16 by default, 3 MiB each for Qwen2.5-14B bf16).
 
 mod cpu;
+mod extent;
 mod gpu;
 mod migrate;
 mod multi;
 mod prefix;
 
 pub use cpu::CpuBlockPool;
+pub use extent::{BlockSet, Extent};
 pub use gpu::{AllocOutcome, GpuPool, Route};
 pub use migrate::{Direction, MigrationLedger, Transfer, TransferId};
 pub use multi::{DevicePressure, MultiGpuPool, ShardedAlloc};

@@ -15,7 +15,7 @@
 //! another tenant), and enforces the all-or-nothing admission rule.
 
 use super::gpu::{AllocOutcome, GpuPool, Route};
-use super::{AgentTypeId, BlockId};
+use super::{AgentTypeId, BlockSet};
 
 /// Per-device slice of the pressure snapshot (§5: "extends only the
 /// pressure snapshot with per-device free blocks, reserved blocks, and
@@ -40,14 +40,15 @@ pub struct MultiGpuPool {
 /// different physical ids per device.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ShardedAlloc {
-    /// blocks[d] = the blocks granted on device d.
-    pub blocks: Vec<Vec<BlockId>>,
+    /// blocks[d] = the block extents granted on device d.
+    pub blocks: Vec<BlockSet>,
     /// Reserved-quota charge (identical across devices by construction).
     pub reserved_charged: u32,
 }
 
 impl ShardedAlloc {
-    pub fn len(&self) -> usize {
+    /// Blocks per device (identical across devices by construction).
+    pub fn len(&self) -> u32 {
         self.blocks.first().map(|b| b.len()).unwrap_or(0)
     }
 

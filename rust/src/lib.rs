@@ -37,6 +37,24 @@
 //!     (feature `pjrt`; the default build is dependency-free)
 //! ```
 //!
+//! ## Hot-path storage (deterministic by construction)
+//!
+//! The inner serving loop never observes `HashMap` iteration order, so
+//! determinism needs no defensive per-tick sorts:
+//!
+//! * [`coordination::RequestArena`] / [`coordination::AppArena`] — slab
+//!   arenas with identity-hash id indices, insertion-order iteration,
+//!   and a live (non-finished) list so per-tick scans are O(live);
+//! * [`coordination::ServeState::stalled_ids`] /
+//!   [`coordination::ServeState::offloaded_ids`] — id-ordered
+//!   incremental indices maintained on function-call lifecycle
+//!   transitions (the ordered iteration *is* the seed's sorted order);
+//! * [`coordination::BatchQueue`] — O(1), order-preserving batch
+//!   membership for the running/prefilling queues;
+//! * [`kvcache::BlockSet`] + the extent-map free list in
+//!   [`kvcache::GpuPool`] — KV block ownership as coalesced extents,
+//!   O(extents) alloc/free instead of per-block list traffic.
+//!
 //! Python never runs on the request path: `make artifacts` lowers the model
 //! once; the rust binary is self-contained afterwards.
 //!

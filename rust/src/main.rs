@@ -91,8 +91,11 @@ fn cmd_bench(args: &Args) -> Result<(), String> {
 
 /// Machine-readable benchmark trajectory: single-worker vs a 4-shard
 /// agent-affinity cluster under the same offered load (throughput,
-/// mean/p99 latency, effective GPU utilization). The app mix is always
-/// the standard 2:1 code-writer:deep-research cluster workload
+/// mean/p99 latency, effective GPU utilization), plus the hot-path
+/// `sim_throughput` metric — wall-clock simulated-events/sec (scheduling
+/// steps + executed decode iterations) and ticks/sec (scheduling steps)
+/// — the number the arena/extent refactor is benchmarked on. The app mix
+/// is always the standard 2:1 code-writer:deep-research cluster workload
 /// (independent of `--app`); dataset and noise follow the flags and are
 /// recorded in the output.
 fn write_bench_trajectory(
@@ -117,14 +120,18 @@ fn write_bench_trajectory(
         .with_tool_noise(noise);
 
     let mut rows: Vec<String> = Vec::new();
-    let mut row = |name: &str, rep: &ClusterReport| {
+    let mut row = |name: &str, rep: &ClusterReport, wall_s: f64| {
+        let ticks = rep.aggregate.counters.sched_steps;
+        let events = ticks + rep.aggregate.counters.decode_iterations;
+        let wall = wall_s.max(1e-9);
         rows.push(format!(
             "    {{\"name\": \"{name}\", \"shards\": {}, \
              \"policy\": \"{}\", \"apps\": {}, \
              \"throughput_apps_per_s\": {:.6}, \
              \"mean_latency_s\": {:.3}, \"p99_latency_s\": {:.3}, \
              \"effective_gpu_util\": {:.4}, \"migrations\": {}, \
-             \"truncated\": {}}}",
+             \"wall_s\": {:.3}, \"sim_events_per_s\": {:.0}, \
+             \"sim_ticks_per_s\": {:.0}, \"truncated\": {}}}",
             rep.num_shards,
             rep.policy,
             rep.aggregate.apps_completed,
@@ -133,6 +140,9 @@ fn write_bench_trajectory(
             rep.aggregate.latency.percentile_s(99.0),
             rep.effective_util(),
             rep.migrations,
+            wall_s,
+            events as f64 / wall,
+            ticks as f64 / wall,
             rep.truncated,
         ));
     };
@@ -141,16 +151,17 @@ fn write_bench_trajectory(
         .with_serve(cfg.clone())
         .with_shards(1)
         .with_placement(PlacementPolicy::RoundRobin);
-    row("single-worker", &ClusterEngine::new(single).run(&workload));
+    let t0 = std::time::Instant::now();
+    let rep = ClusterEngine::new(single).run(&workload);
+    row("single-worker", &rep, t0.elapsed().as_secs_f64());
 
     let quad = ClusterConfig::default()
         .with_serve(cfg.clone())
         .with_shards(4)
         .with_placement(PlacementPolicy::AgentAffinity);
-    row(
-        "cluster-4-affinity",
-        &ClusterEngine::new(quad).run(&workload),
-    );
+    let t0 = std::time::Instant::now();
+    let rep = ClusterEngine::new(quad).run(&workload);
+    row("cluster-4-affinity", &rep, t0.elapsed().as_secs_f64());
 
     let json = format!(
         "{{\n  \"benchmark\": \"tokencake_trajectory\",\n  \

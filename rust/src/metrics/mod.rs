@@ -103,6 +103,41 @@ impl MetricsBundle {
         self.makespan_us = self.makespan_us.max(o.makespan_us);
     }
 
+    /// Canonical integer-only serialization of everything the scheduler
+    /// decided. Two runs with the same seed and config must produce
+    /// byte-identical lines — the determinism contract both the cluster
+    /// digest and the single-engine regression tests assert.
+    pub fn digest_line(&self, tag: &str) -> String {
+        format!(
+            "{tag}: apps={} lat_sum={} lat_n={} req_sum={} req_n={} \
+             makespan={} swap={} off={} up={} preempt={} inv={} \
+             recomp={} recomp_tok={} rej={} early={} pfx_gpu={} \
+             pfx_cpu={} resv={} defer={} iters={} toks={} aborts={}\n",
+            self.apps_completed,
+            self.latency.total_us(),
+            self.latency.len(),
+            self.request_latency.total_us(),
+            self.request_latency.len(),
+            self.makespan_us,
+            self.swap_volume_blocks,
+            self.offload_count,
+            self.upload_count,
+            self.counters.preemptions,
+            self.counters.critical_inversions,
+            self.counters.recomputes,
+            self.counters.recompute_tokens,
+            self.counters.offloads_rejected,
+            self.counters.early_returns,
+            self.counters.prefix_hits_gpu,
+            self.counters.prefix_hits_cpu,
+            self.counters.reserved_admissions,
+            self.counters.deferrals,
+            self.counters.decode_iterations,
+            self.counters.tokens_generated,
+            self.counters.aborted,
+        )
+    }
+
     /// Throughput in completed apps per second.
     pub fn throughput(&self) -> f64 {
         if self.makespan_us == 0 {
@@ -145,6 +180,17 @@ mod tests {
             ..Default::default()
         };
         assert!((m.throughput() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn digest_line_is_stable_and_tagged() {
+        let mut m = MetricsBundle::default();
+        m.apps_completed = 3;
+        m.counters.preemptions = 2;
+        let a = m.digest_line("shard0");
+        assert!(a.starts_with("shard0: apps=3"));
+        assert!(a.contains("preempt=2"));
+        assert_eq!(a, m.digest_line("shard0"));
     }
 
     #[test]

@@ -13,7 +13,7 @@ mod score;
 pub use score::{agent_type_scores, TypeStats};
 
 use crate::config::Mode;
-use crate::coordination::{ReqState, RequestId, ServeState};
+use crate::coordination::{ReqState, Request, RequestId, ServeState};
 use crate::kvcache::{AgentTypeId, AllocOutcome, PrefixKey, PrefixLocation, Route};
 
 /// Algorithm 2: periodically re-evaluate ρ, the critical set, and the
@@ -109,7 +109,7 @@ fn admission_alloc_blocks(st: &ServeState, rid: RequestId) -> u32 {
                 .map(|p| p.result_tokens)
                 .sum::<u32>();
         let need = st.cfg.profile.blocks_for_tokens(worst);
-        need.saturating_sub(r.blocks.len() as u32)
+        need.saturating_sub(r.blocks.len())
     } else {
         st.admission_demand(r)
     }
@@ -121,9 +121,16 @@ fn admission_alloc_blocks(st: &ServeState, rid: RequestId) -> u32 {
 /// skip requests that don't fit (no head-of-line blocking); FCFS baselines
 /// (vLLM, Mooncake) stop at the first request that doesn't fit — classic
 /// continuous batching.
+///
+/// This runs every engine tick: candidate ordering goes through the
+/// reusable [`crate::coordination::SchedScratch`] buffers (no per-tick
+/// allocation) and the resumed/fresh segments are stable-sorted in place.
 pub fn admit(st: &mut ServeState, now_us: u64) {
     let batch_now = st.running.len() + st.prefilling.len();
     if batch_now >= st.cfg.max_batch {
+        return;
+    }
+    if st.waiting.is_empty() {
         return;
     }
     let mut slots = st.cfg.max_batch - batch_now;
@@ -132,26 +139,36 @@ pub fn admit(st: &mut ServeState, now_us: u64) {
     // a function call / upload) come first — they are continuations of the
     // decode batch, exactly as vLLM's running queue takes precedence over
     // waiting admissions. Fresh requests follow in mode-dependent order.
-    let (mut resumed, mut fresh): (Vec<RequestId>, Vec<RequestId>) = st
-        .waiting
-        .iter()
-        .copied()
-        .partition(|rid| !st.reqs[rid].blocks.is_empty());
+    let mut order = std::mem::take(&mut st.scratch.order);
+    order.clear();
+    order.extend(
+        st.waiting
+            .iter()
+            .copied()
+            .filter(|rid| !st.reqs[rid].blocks.is_empty()),
+    );
+    let n_resumed = order.len();
+    order.extend(
+        st.waiting
+            .iter()
+            .copied()
+            .filter(|rid| st.reqs[rid].blocks.is_empty()),
+    );
     if st.cfg.mode.agent_aware() {
         // Offload beneficiaries jump the line (the freed blocks were
-        // justified by their admission); otherwise priority order.
-        let by_prio = |a: &RequestId, b: &RequestId| {
+        // justified by their admission); otherwise priority order. Both
+        // segments use the same stable comparator, so the order matches
+        // the seed's separate resumed/fresh sorts exactly.
+        let mut by_prio = |a: &RequestId, b: &RequestId| {
             let ra = &st.reqs[a];
             let rb = &st.reqs[b];
             rb.pulled
                 .cmp(&ra.pulled)
                 .then(rb.priority.total_cmp(&ra.priority))
         };
-        resumed.sort_by(by_prio);
-        fresh.sort_by(by_prio);
+        order[..n_resumed].sort_by(&mut by_prio);
+        order[n_resumed..].sort_by(&mut by_prio);
     }
-    let mut order = resumed;
-    order.extend(fresh);
     let fcfs_hol = matches!(
         st.cfg.mode,
         Mode::Vllm | Mode::VllmPrefix | Mode::Mooncake | Mode::OffloadOnly
@@ -164,11 +181,8 @@ pub fn admit(st: &mut ServeState, now_us: u64) {
     // whose blocks already cover their worst-case context (e.g. the real
     // engine's one-block-per-slot layout) need no headroom.
     let block_tokens = st.cfg.profile.block_tokens;
-    fn needs_growth(
-        r: &crate::coordination::Request,
-        block_tokens: u32,
-    ) -> bool {
-        let capacity = r.blocks.len() as u32 * block_tokens;
+    fn needs_growth(r: &Request, block_tokens: u32) -> bool {
+        let capacity = r.blocks.len() * block_tokens;
         let worst = r.context_tokens
             + (r.total_gen_target() - r.tokens_generated)
             + r.phases[r.cur_phase.min(r.phases.len() - 1)..]
@@ -184,8 +198,9 @@ pub fn admit(st: &mut ServeState, now_us: u64) {
         .filter(|rid| needs_growth(&st.reqs[rid], block_tokens))
         .count() as u32;
 
-    let mut admitted: Vec<RequestId> = Vec::new();
-    for rid in order {
+    let mut admitted = std::mem::take(&mut st.scratch.admitted);
+    admitted.clear();
+    for &rid in &order {
         if slots == 0 {
             break;
         }
@@ -211,10 +226,11 @@ pub fn admit(st: &mut ServeState, now_us: u64) {
                 reserved_charged,
             } => {
                 let r = st.reqs.get_mut(&rid).unwrap();
-                r.blocks.extend(blocks);
+                r.blocks.absorb(blocks);
                 r.reserved_charged += reserved_charged;
                 r.pulled = false;
                 r.wait_time_us += now_us.saturating_sub(r.queue_enter_us);
+                // Waiting → Prefilling/Running: unindexed transition.
                 r.state = if r.remaining_prefill > 0 {
                     ReqState::Prefilling
                 } else {
@@ -244,6 +260,10 @@ pub fn admit(st: &mut ServeState, now_us: u64) {
         }
     }
     st.waiting.retain(|rid| !admitted.contains(rid));
+    order.clear();
+    admitted.clear();
+    st.scratch.order = order;
+    st.scratch.admitted = admitted;
 }
 
 /// Prefix-cache reuse at admission (vLLM-Prefix / Mooncake / TokenCake):
@@ -390,12 +410,12 @@ mod tests {
         admit(&mut st, 0);
         assert!(st.waiting.is_empty());
         assert_eq!(st.prefilling.len(), 1);
-        let rid = st.prefilling[0];
+        let rid = st.prefilling.get(0).unwrap();
         let r = &st.reqs[&rid];
         assert_eq!(r.state, ReqState::Prefilling);
         assert!(!r.blocks.is_empty());
         assert_eq!(
-            r.blocks.len() as u32,
+            r.blocks.len(),
             st.cfg.profile.blocks_for_tokens(r.context_tokens)
         );
     }
@@ -462,7 +482,7 @@ mod tests {
         st.spawn_app(0, scales(), 0);
         st.refresh_priorities(0);
         admit(&mut st, 0);
-        let first = st.prefilling[0];
+        let first = st.prefilling.get(0).unwrap();
         // Finish the first request and record its prefix.
         record_prefix(&mut st, first, 1000);
         // Second instance of the same root agent type.
@@ -481,7 +501,7 @@ mod tests {
         let mut st = state(M::Vllm);
         st.spawn_app(0, scales(), 0);
         admit(&mut st, 0);
-        let first = st.prefilling[0];
+        let first = st.prefilling.get(0).unwrap();
         record_prefix(&mut st, first, 1000);
         assert!(st.prefix.is_empty(), "vllm mode must not populate index");
     }

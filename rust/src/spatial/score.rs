@@ -14,10 +14,14 @@
 //!
 //! Each dimension is normalized to [0,1] across active types before the
 //! weighted sum so no single raw scale dominates.
+//!
+//! Accumulation iterates the arena's live list (O(live), deterministic
+//! order) into a dense per-type table — the seed walked every request
+//! ever created in `HashMap` order, which made the floating-point sums
+//! (and thus the critical set) depend on nondeterministic iteration.
 
 use crate::coordination::{ReqState, ServeState};
 use crate::kvcache::AgentTypeId;
-use std::collections::HashMap;
 
 /// Aggregated per-type statistics + final score.
 #[derive(Debug, Clone, PartialEq)]
@@ -35,6 +39,7 @@ pub struct TypeStats {
 /// Compute S_a for every *active* agent type (types with at least one
 /// unfinished request).
 pub fn agent_type_scores(st: &ServeState) -> Vec<TypeStats> {
+    #[derive(Clone, Copy)]
     struct Acc {
         active: u32,
         gpu_blocks: u32,
@@ -43,12 +48,14 @@ pub fn agent_type_scores(st: &ServeState) -> Vec<TypeStats> {
         exec_sum: f64,
         g_sum: f64,
     }
-    let mut accs: HashMap<AgentTypeId, Acc> = HashMap::new();
-    for r in st.reqs.values() {
+    // Dense per-type table (type ids are interned, hence contiguous).
+    let mut accs: Vec<Option<Acc>> = vec![None; st.types.len()];
+    for k in 0..st.reqs.live_len() {
+        let r = st.reqs.live_ref(k);
         if r.state == ReqState::Finished {
             continue;
         }
-        let a = accs.entry(r.type_id).or_insert(Acc {
+        let a = accs[r.type_id as usize].get_or_insert(Acc {
             active: 0,
             gpu_blocks: 0,
             p_max: 0.0,
@@ -58,7 +65,7 @@ pub fn agent_type_scores(st: &ServeState) -> Vec<TypeStats> {
         });
         a.active += 1;
         a.gpu_blocks += if r.state.holds_gpu() {
-            r.blocks.len() as u32
+            r.blocks.len()
         } else {
             0
         };
@@ -69,36 +76,35 @@ pub fn agent_type_scores(st: &ServeState) -> Vec<TypeStats> {
         a.exec_sum += r.exec_time_us as f64;
         a.g_sum += r.f_struct;
     }
-    if accs.is_empty() {
-        return Vec::new();
-    }
 
     let p = &st.cfg.policy;
-    let mut rows: Vec<TypeStats> = accs
-        .into_iter()
-        .map(|(t, a)| {
-            let n = a.active.max(1) as f64;
-            let u_raw = p.urgency_preempt_coef
-                * st.types.preempts[t as usize]
-                + p.urgency_wait_coef * st.types.waits[t as usize];
-            // Log-compress token count and execution time (§5.2).
-            let avg_ctx = a.ctx_sum / n;
-            let avg_exec_s = a.exec_sum / n / 1e6;
-            let h_raw = (1.0 + avg_ctx).ln() * (1.0 + avg_exec_s).ln().max(0.1);
-            TypeStats {
-                type_id: t,
-                active: a.active,
-                gpu_blocks: a.gpu_blocks,
-                p_structural: a.p_max,
-                u_urgency: u_raw,
-                h_recompute: h_raw,
-                g_graph: a.g_sum / n,
-                score: 0.0,
-            }
-        })
-        .collect();
+    let mut rows: Vec<TypeStats> = Vec::new();
+    for (t, acc) in accs.into_iter().enumerate() {
+        let Some(a) = acc else { continue };
+        let n = a.active.max(1) as f64;
+        let u_raw = p.urgency_preempt_coef * st.types.preempts[t]
+            + p.urgency_wait_coef * st.types.waits[t];
+        // Log-compress token count and execution time (§5.2).
+        let avg_ctx = a.ctx_sum / n;
+        let avg_exec_s = a.exec_sum / n / 1e6;
+        let h_raw = (1.0 + avg_ctx).ln() * (1.0 + avg_exec_s).ln().max(0.1);
+        rows.push(TypeStats {
+            type_id: t as AgentTypeId,
+            active: a.active,
+            gpu_blocks: a.gpu_blocks,
+            p_structural: a.p_max,
+            u_urgency: u_raw,
+            h_recompute: h_raw,
+            g_graph: a.g_sum / n,
+            score: 0.0,
+        });
+    }
+    if rows.is_empty() {
+        return rows;
+    }
 
-    // Normalize each dimension across types, then weight.
+    // Normalize each dimension across types, then weight. Rows are
+    // already in type-id order by construction.
     let max_of = |f: fn(&TypeStats) -> f64, rows: &[TypeStats]| {
         rows.iter().map(f).fold(0.0f64, f64::max).max(1e-9)
     };
@@ -114,7 +120,6 @@ pub fn agent_type_scores(st: &ServeState) -> Vec<TypeStats> {
             + p.w_recompute * (r.h_recompute / hm)
             + p.w_graph * (r.g_graph / gm);
     }
-    rows.sort_by_key(|r| r.type_id);
     rows
 }
 
@@ -187,7 +192,7 @@ mod tests {
     fn single_critical_instance_protects_type() {
         let mut st = state_with_apps(2);
         // Degrade one instance's static priority; P_a should use the max.
-        let ids: Vec<_> = st.reqs.keys().copied().collect();
+        let ids: Vec<_> = st.reqs.values().map(|r| r.id).collect();
         st.reqs.get_mut(&ids[0]).unwrap().static_priority = 0.1;
         let s = &agent_type_scores(&st)[0];
         assert!(s.p_structural >= 0.9, "max static+crit = {}", s.p_structural);

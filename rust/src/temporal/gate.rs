@@ -100,7 +100,7 @@ pub fn evaluate_offload(
     debug_assert_eq!(r.state, ReqState::Stalled);
     let p = &st.cfg.policy;
     let profile = &st.cfg.profile;
-    let n_blocks = r.blocks.len() as u32;
+    let n_blocks = r.blocks.len();
 
     // InferCept baseline: intercept-and-swap, no cost model — offload
     // whenever CPU space exists (Table 2's "Min-Waste" reduced to a
@@ -231,24 +231,28 @@ mod tests {
         // Fill the pool to the requested usage.
         let total = st.gpu.total();
         let fill = (total as f64 * gpu_fill) as u32;
-        let AllocOutcome::Granted { blocks, .. } =
+        let AllocOutcome::Granted { mut blocks, .. } =
             st.gpu.alloc(fill, Route::Shared)
         else {
             panic!()
         };
-        // Give the stalled request 64 of those blocks.
-        let r = st.reqs.get_mut(&rid).unwrap();
-        r.state = ReqState::Stalled;
-        r.blocks = blocks[..64.min(blocks.len())].to_vec();
-        r.fc = Some(FcRt {
-            name: "web_search".into(),
-            started_us: 0,
-            predicted_end_us: 5_000_000, // 5 s stall
-            tool_done: false,
-            finished_us: 0,
-            result_tokens: 480,
-            user_estimate_us: None,
-        });
+        // Give the stalled request 64 of those blocks (the rest stay
+        // allocated to keep the pool under pressure).
+        let own = blocks.take_prefix(64.min(blocks.len()));
+        {
+            let r = st.reqs.get_mut(&rid).unwrap();
+            r.blocks = own;
+            r.fc = Some(FcRt {
+                name: "web_search".into(),
+                started_us: 0,
+                predicted_end_us: 5_000_000, // 5 s stall
+                tool_done: false,
+                finished_us: 0,
+                result_tokens: 480,
+                user_estimate_us: None,
+            });
+        }
+        st.set_req_state(rid, ReqState::Stalled);
         st.refresh_priorities(0);
         (st, rid)
     }

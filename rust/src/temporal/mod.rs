@@ -48,19 +48,22 @@ pub fn call_start(
 ) {
     let predicted =
         st.forecaster.predict_us(name, user_estimate_us);
-    let r = st.reqs.get_mut(&rid).unwrap();
-    debug_assert!(matches!(r.state, ReqState::Running));
-    r.state = ReqState::Stalled;
-    r.offload_evaluated = false;
-    r.fc = Some(FcRt {
-        name: name.to_string(),
-        started_us: now_us,
-        predicted_end_us: now_us + predicted,
-        tool_done: false,
-        finished_us: 0,
-        result_tokens,
-        user_estimate_us,
-    });
+    {
+        let r = st.reqs.get_mut(&rid).unwrap();
+        debug_assert!(matches!(r.state, ReqState::Running));
+        r.state = ReqState::Stalled;
+        r.offload_evaluated = false;
+        r.fc = Some(FcRt {
+            name: name.to_string(),
+            started_us: now_us,
+            predicted_end_us: now_us + predicted,
+            tool_done: false,
+            finished_us: 0,
+            result_tokens,
+            user_estimate_us,
+        });
+    }
+    st.reindex_request(rid, ReqState::Stalled);
 }
 
 /// `call_finish` (§6.2): the tool returned. Feeds the forecaster and
@@ -116,15 +119,18 @@ pub fn call_finish(
 /// context (tokens that must be prefilled and may need new blocks — the
 /// resume-time contention the Spatial Scheduler manages).
 pub fn resume_from_fc(st: &mut ServeState, rid: RequestId, now_us: u64) {
-    let r = st.reqs.get_mut(&rid).unwrap();
-    let fc = r.fc.take().expect("resume without fc");
-    debug_assert!(fc.tool_done);
-    r.cur_phase += 1;
-    r.gen_in_phase = 0;
-    r.context_tokens += fc.result_tokens;
-    r.remaining_prefill += fc.result_tokens;
-    r.state = ReqState::Waiting;
-    r.queue_enter_us = now_us;
+    {
+        let r = st.reqs.get_mut(&rid).unwrap();
+        let fc = r.fc.take().expect("resume without fc");
+        debug_assert!(fc.tool_done);
+        r.cur_phase += 1;
+        r.gen_in_phase = 0;
+        r.context_tokens += fc.result_tokens;
+        r.remaining_prefill += fc.result_tokens;
+        r.state = ReqState::Waiting;
+        r.queue_enter_us = now_us;
+    }
+    st.reindex_request(rid, ReqState::Waiting);
     st.waiting.push_back(rid);
 }
 
@@ -137,17 +143,20 @@ pub fn run_phase(
 ) {
     upload_phase(st, snap, now_us);
 
-    // Evaluate newly stalled requests for offload. Sorted by id: HashMap
-    // iteration order must never reach a scheduling decision (bit-exact
-    // reproducibility is a system invariant the cluster layer also relies
-    // on).
-    let mut newly_stalled: Vec<RequestId> = st
-        .reqs
-        .values()
-        .filter(|r| r.state == ReqState::Stalled && !r.offload_evaluated)
-        .map(|r| r.id)
+    // Evaluate newly stalled requests for offload. The incremental
+    // stalled index is ordered by id, so this replaces the seed's
+    // full-table scan + per-tick sort with an O(stalled) walk whose
+    // order is identical by construction (bit-exact reproducibility is a
+    // system invariant the cluster layer also relies on).
+    let newly_stalled: Vec<RequestId> = st
+        .stalled_ids
+        .iter()
+        .copied()
+        .filter(|rid| {
+            let r = &st.reqs[rid];
+            r.state == ReqState::Stalled && !r.offload_evaluated
+        })
         .collect();
-    newly_stalled.sort_unstable();
     for rid in newly_stalled {
         let decision = evaluate_offload(st, snap, rid, now_us);
         st.reqs.get_mut(&rid).unwrap().offload_evaluated = true;
@@ -176,7 +185,7 @@ pub fn run_phase(
 
 /// Fire the D2H transfer: CPU blocks allocated, GPU blocks pending-free.
 pub fn issue_offload(st: &mut ServeState, rid: RequestId, now_us: u64) {
-    let n = st.reqs[&rid].blocks.len() as u32;
+    let n = st.reqs[&rid].blocks.len();
     let Some(cpu_blocks) = st.cpu.alloc(n) else {
         // CPU filled up between gate and issue — abandon.
         st.metrics.counters.offloads_rejected += 1;
@@ -188,11 +197,12 @@ pub fn issue_offload(st: &mut ServeState, rid: RequestId, now_us: u64) {
         r.state = ReqState::PendingOffload;
         r.cpu_blocks = cpu_blocks.clone();
         (
-            std::mem::take(&mut r.blocks),
+            r.blocks.take(),
             std::mem::take(&mut r.reserved_charged),
             r.type_id,
         )
     };
+    st.reindex_request(rid, ReqState::PendingOffload);
     st.gpu.mark_pending_free(&gpu_blocks, charged, Some(type_id));
     let completes = now_us + st.cfg.profile.offload_us(n);
     let xfer = st.ledger.issue(
@@ -229,6 +239,7 @@ pub fn on_transfer_done(
                 r.state = ReqState::Offloaded;
                 r.fc.as_ref().map(|f| f.tool_done).unwrap_or(false)
             };
+            st.reindex_request(rid, ReqState::Offloaded);
             if tool_done {
                 // Tool already returned — immediate turnaround.
                 try_immediate_upload(st, rid, now_us);
@@ -247,6 +258,7 @@ pub fn on_transfer_done(
                 r.migrations += 1;
                 r.fc.as_ref().map(|f| f.tool_done).unwrap_or(false)
             };
+            st.reindex_request(rid, ReqState::Uploaded);
             st.release_cpu(rid);
             if tool_done {
                 resume_from_fc(st, rid, now_us);
@@ -299,7 +311,7 @@ mod tests {
     #[test]
     fn full_fc_lifecycle_without_offload() {
         let (mut st, rid) = running_state();
-        st.running.retain(|&x| x != rid);
+        st.running.remove(rid);
         call_start(&mut st, rid, "web_search", Some(3_000_000), 480, 1000);
         assert_eq!(st.reqs[&rid].state, ReqState::Stalled);
         assert_eq!(
@@ -320,20 +332,23 @@ mod tests {
     #[test]
     fn offload_then_upload_roundtrip() {
         let (mut st, rid) = running_state();
-        st.running.retain(|&x| x != rid);
+        st.running.remove(rid);
         call_start(&mut st, rid, "web_search", Some(30_000_000), 480, 0);
+        assert!(st.stalled_ids.contains(&rid));
         let n_before = st.reqs[&rid].blocks.len();
         issue_offload(&mut st, rid, 0);
         assert_eq!(st.reqs[&rid].state, ReqState::PendingOffload);
-        assert_eq!(st.gpu.pending_free_blocks() as usize, n_before);
+        assert!(st.stalled_ids.is_empty());
+        assert_eq!(st.gpu.pending_free_blocks(), n_before);
         // D2H completes.
         let xfer = match st.outbox.pop().unwrap() {
             Action::TransferIssued { xfer, .. } => xfer,
         };
         assert!(on_transfer_done(&mut st, xfer, 10_000).is_none());
         assert_eq!(st.reqs[&rid].state, ReqState::Offloaded);
+        assert!(st.offloaded_ids.contains(&rid));
         assert_eq!(st.gpu.pending_free_blocks(), 0);
-        assert_eq!(st.cpu.used_blocks() as usize, n_before);
+        assert_eq!(st.cpu.used_blocks(), n_before);
         // Tool returns early → immediate upload.
         let d = call_finish(&mut st, rid, 20_000);
         assert_eq!(d, FinishDisposition::AwaitUpload);
@@ -345,6 +360,7 @@ mod tests {
         };
         let resumed = on_transfer_done(&mut st, xfer, 30_000);
         assert_eq!(resumed, Some(rid));
+        assert!(st.offloaded_ids.is_empty());
         let r = &st.reqs[&rid];
         assert_eq!(r.state, ReqState::Waiting);
         assert_eq!(r.blocks.len(), n_before);
@@ -357,7 +373,7 @@ mod tests {
     #[test]
     fn tool_finish_during_offload_chains_upload() {
         let (mut st, rid) = running_state();
-        st.running.retain(|&x| x != rid);
+        st.running.remove(rid);
         call_start(&mut st, rid, "git", Some(30_000_000), 96, 0);
         issue_offload(&mut st, rid, 0);
         // Tool returns while D2H still in flight.
@@ -376,7 +392,7 @@ mod tests {
     fn run_phase_rejects_and_counts() {
         // Newly stalled under zero pressure → gate rejects, counted once.
         let (mut st, rid) = running_state();
-        st.running.retain(|&x| x != rid);
+        st.running.remove(rid);
         call_start(&mut st, rid, "web_search", Some(30_000_000), 480, 0);
         let snap = st.snapshot();
         run_phase(&mut st, &snap, 0);

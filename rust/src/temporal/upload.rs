@@ -67,24 +67,27 @@ pub fn upload_budget(snap: &PressureSnapshot) -> u32 {
 /// all admissions) — the gradual schedule of Eq. 4 applies to the focused
 /// candidate; everyone else starts only once the pool has no partials.
 pub fn upload_phase(st: &mut ServeState, snap: &PressureSnapshot, now_us: u64) {
-    // Collect candidates: CPU-resident caches whose urgency is positive,
-    // plus anyone already holding a partial reservation (must finish).
-    let mut cands: Vec<(RequestId, f64, bool)> = st
-        .reqs
-        .values()
-        .filter(|r| r.state == ReqState::Offloaded)
-        .map(|r| {
-            let u = urgency(st, r.id, now_us);
-            let partial = !r.upload_reserved.is_empty();
-            (r.id, st.importance(r) + u, partial)
-        })
-        .filter(|&(rid, _, partial)| {
-            partial || urgency(st, rid, now_us) > 0.0
-        })
-        .collect();
+    if st.offloaded_ids.is_empty() {
+        return; // common case: nothing CPU-resident, zero work
+    }
+    // Collect candidates off the incremental offloaded index (id order):
+    // CPU-resident caches whose urgency is positive, plus anyone already
+    // holding a partial reservation (must finish).
+    let mut cands: Vec<(RequestId, f64, bool)> = Vec::new();
+    for &rid in &st.offloaded_ids {
+        let r = &st.reqs[&rid];
+        if r.state != ReqState::Offloaded {
+            continue; // stale index entry (defensive)
+        }
+        let u = urgency(st, rid, now_us);
+        let partial = !r.upload_reserved.is_empty();
+        if partial || u > 0.0 {
+            cands.push((rid, st.importance(r) + u, partial));
+        }
+    }
     // Partial holders first (finish what we started), then P_upload = I+U;
-    // request id breaks exact-score ties so HashMap iteration order never
-    // decides who uploads first.
+    // request id breaks exact-score ties so storage order never decides
+    // who uploads first.
     cands.sort_by(|a, b| {
         b.2.cmp(&a.2)
             .then(b.1.total_cmp(&a.1))
@@ -119,7 +122,7 @@ pub fn upload_phase(st: &mut ServeState, snap: &PressureSnapshot, now_us: u64) {
             let r = &st.reqs[&rid];
             let needed = r.cpu_blocks.len() as u32;
             let deficit =
-                needed.saturating_sub(r.upload_reserved.len() as u32);
+                needed.saturating_sub(r.upload_reserved.len());
             let crit = r.critical_path
                 || st.spatial.critical_types.contains(&r.type_id);
             (needed, deficit, r.type_id, crit)
@@ -150,14 +153,14 @@ pub fn upload_phase(st: &mut ServeState, snap: &PressureSnapshot, now_us: u64) {
                     budget = budget.saturating_sub(reserve);
                 }
                 let r = st.reqs.get_mut(&rid).unwrap();
-                r.upload_reserved.extend(blocks);
+                r.upload_reserved.absorb(blocks);
                 r.upload_reserved_charged += reserved_charged;
             }
         }
         // Fully reserved → fire the transfer.
         let ready = {
             let r = &st.reqs[&rid];
-            r.upload_reserved.len() as u32 >= needed
+            r.upload_reserved.len() >= needed
         };
         if ready {
             issue_upload(st, rid, now_us);
@@ -175,12 +178,13 @@ pub fn issue_upload(st: &mut ServeState, rid: RequestId, now_us: u64) {
     let (gpu_blocks, cpu_blocks, n) = {
         let r = st.reqs.get_mut(&rid).unwrap();
         debug_assert_eq!(r.state, ReqState::Offloaded);
-        let gpu_blocks = std::mem::take(&mut r.upload_reserved);
-        let n = gpu_blocks.len() as u32;
-        debug_assert_eq!(n as usize, r.cpu_blocks.len());
+        let gpu_blocks = r.upload_reserved.take();
+        let n = gpu_blocks.len();
+        debug_assert_eq!(n, r.cpu_blocks.len() as u32);
         r.state = ReqState::PendingUpload;
         (gpu_blocks, r.cpu_blocks.clone(), n)
     };
+    st.reindex_request(rid, ReqState::PendingUpload);
     let completes = now_us + st.cfg.profile.upload_us(n);
     let xfer = st.ledger.issue(
         rid.0,
@@ -209,7 +213,7 @@ pub fn try_immediate_upload(
         let r = &st.reqs[&rid];
         let needed = r.cpu_blocks.len() as u32;
         (
-            needed.saturating_sub(r.upload_reserved.len() as u32),
+            needed.saturating_sub(r.upload_reserved.len()),
             r.type_id,
             r.critical_path
                 || st.spatial.critical_types.contains(&r.type_id),
@@ -227,7 +231,7 @@ pub fn try_immediate_upload(
                 reserved_charged,
             } => {
                 let r = st.reqs.get_mut(&rid).unwrap();
-                r.upload_reserved.extend(blocks);
+                r.upload_reserved.absorb(blocks);
                 r.upload_reserved_charged += reserved_charged;
             }
             AllocOutcome::Deferred => return false,
@@ -257,18 +261,21 @@ mod tests {
         let rid = st.apps[&app].node_req[0].unwrap();
         st.waiting.retain(|&x| x != rid);
         let cpu = st.cpu.alloc(n_cpu_blocks).unwrap();
-        let r = st.reqs.get_mut(&rid).unwrap();
-        r.state = ReqState::Offloaded;
-        r.cpu_blocks = cpu;
-        r.fc = Some(FcRt {
-            name: "web_search".into(),
-            started_us: 0,
-            predicted_end_us: 3_000_000,
-            tool_done: false,
-            finished_us: 0,
-            result_tokens: 480,
-            user_estimate_us: None,
-        });
+        {
+            let r = st.reqs.get_mut(&rid).unwrap();
+            r.cpu_blocks = cpu;
+            r.fc = Some(FcRt {
+                name: "web_search".into(),
+                started_us: 0,
+                predicted_end_us: 3_000_000,
+                tool_done: false,
+                finished_us: 0,
+                result_tokens: 480,
+                user_estimate_us: None,
+            });
+        }
+        // Through the index-maintaining setter, not a raw field write.
+        st.set_req_state(rid, ReqState::Offloaded);
         (st, rid)
     }
 

@@ -9,7 +9,9 @@
 use tokencake::config::{Mode, ServeConfig};
 use tokencake::engine::sim::SimEngine;
 use tokencake::graph::{CallSpec, FuncKind, GraphBuilder};
-use tokencake::kvcache::{AllocOutcome, CpuBlockPool, GpuPool, Route};
+use tokencake::kvcache::{
+    AllocOutcome, BlockSet, CpuBlockPool, GpuPool, Route,
+};
 use tokencake::sim::Rng;
 use tokencake::workload::{Dataset, WorkloadSpec};
 
@@ -24,9 +26,8 @@ fn prop_gpu_pool_conservation() {
         let total = rng.range_u64(8, 300) as u32;
         let mut pool = GpuPool::new(total);
         // live allocations: (blocks, charged, type)
-        let mut live: Vec<(Vec<tokencake::kvcache::BlockId>, u32, u16)> =
-            Vec::new();
-        let mut pending: Vec<Vec<tokencake::kvcache::BlockId>> = Vec::new();
+        let mut live: Vec<(BlockSet, u32, u16)> = Vec::new();
+        let mut pending: Vec<BlockSet> = Vec::new();
 
         for _step in 0..200 {
             let op = rng.range_u64(0, 100);
@@ -44,7 +45,7 @@ fn prop_gpu_pool_conservation() {
                         reserved_charged,
                     } = pool.alloc(n, route)
                     {
-                        assert_eq!(blocks.len() as u32, n, "seed {seed}");
+                        assert_eq!(blocks.len(), n, "seed {seed}");
                         live.push((blocks, reserved_charged, t));
                     }
                 }
@@ -83,9 +84,8 @@ fn prop_gpu_pool_conservation() {
                 }
             }
             // ---- Invariants ----
-            let held: u32 =
-                live.iter().map(|(b, _, _)| b.len() as u32).sum();
-            let pend: u32 = pending.iter().map(|b| b.len() as u32).sum();
+            let held: u32 = live.iter().map(|(b, _, _)| b.len()).sum();
+            let pend: u32 = pending.iter().map(|b| b.len()).sum();
             assert_eq!(
                 pool.free_blocks() + held + pend,
                 total,
@@ -103,6 +103,95 @@ fn prop_gpu_pool_conservation() {
             );
             assert!(pool.usage() >= 0.0 && pool.usage() <= 1.0);
         }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Extent allocator: conservation + coalescing + disjointness under
+// arbitrary alloc / free / pending-free / migration-style interleavings
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_extent_allocator_conserves_and_coalesces() {
+    for seed in 0..200u64 {
+        let mut rng = Rng::new(seed + 7_001);
+        let total = rng.range_u64(8, 256) as u32;
+        let mut pool = GpuPool::new(total);
+        let mut live: Vec<BlockSet> = Vec::new();
+        // Migration-style pending-free (blocks leaving through the
+        // ledger path: owner released, copy in flight).
+        let mut pending: Vec<BlockSet> = Vec::new();
+
+        for _step in 0..250 {
+            match rng.range_u64(0, 10) {
+                0..=3 => {
+                    let n = rng.range_u64(1, 24) as u32;
+                    if let AllocOutcome::Granted { blocks, .. } =
+                        pool.alloc(n, Route::Shared)
+                    {
+                        assert_eq!(blocks.len(), n);
+                        live.push(blocks);
+                    }
+                }
+                4..=6 => {
+                    if !live.is_empty() {
+                        let i =
+                            rng.range_u64(0, live.len() as u64) as usize;
+                        pool.free(live.swap_remove(i), 0, None);
+                    }
+                }
+                7..=8 => {
+                    // Migration leg: mark pending, complete later.
+                    if !live.is_empty() {
+                        let i =
+                            rng.range_u64(0, live.len() as u64) as usize;
+                        let b = live.swap_remove(i);
+                        pool.mark_pending_free(&b, 0, None);
+                        pending.push(b);
+                    }
+                }
+                _ => {
+                    if !pending.is_empty() {
+                        let i = rng.range_u64(0, pending.len() as u64)
+                            as usize;
+                        pool.complete_pending(pending.swap_remove(i));
+                    }
+                }
+            }
+            // ---- Extent-level invariants, every step. ----
+            let ext = pool.free_extents();
+            // Sorted, coalesced (strict gaps: adjacent runs must have
+            // merged), lengths sum to the reported free count.
+            for w in ext.windows(2) {
+                assert!(
+                    w[0].start + w[0].len < w[1].start,
+                    "uncoalesced/overlapping free extents at seed {seed}"
+                );
+            }
+            let free_sum: u32 = ext.iter().map(|e| e.len).sum();
+            assert_eq!(free_sum, pool.free_blocks(), "seed {seed}");
+            // Every block is in exactly one place: live ∪ pending ∪ free
+            // covers [0, total) with no duplicates.
+            let mut all: Vec<u32> = Vec::with_capacity(total as usize);
+            for b in live.iter().chain(pending.iter()) {
+                all.extend(b.iter_blocks().map(|id| id.0));
+            }
+            all.extend(ext.iter().flat_map(|e| e.start..e.start + e.len));
+            let n_all = all.len();
+            all.sort_unstable();
+            all.dedup();
+            assert_eq!(all.len(), n_all, "block owned twice, seed {seed}");
+            assert_eq!(n_all as u32, total, "block lost, seed {seed}");
+        }
+        // Drain everything: the free list must coalesce to one extent.
+        for b in live.drain(..) {
+            pool.free(b, 0, None);
+        }
+        for b in pending.drain(..) {
+            pool.complete_pending(b);
+        }
+        assert_eq!(pool.free_blocks(), total);
+        assert_eq!(pool.free_extents().len(), 1, "seed {seed}");
     }
 }
 
@@ -382,10 +471,7 @@ fn prop_multi_gpu_lockstep_conservation() {
                     };
                     if let Some(a) = m.alloc(n, route) {
                         assert_eq!(a.blocks.len(), tp, "seed {seed}");
-                        assert!(a
-                            .blocks
-                            .iter()
-                            .all(|b| b.len() == n as usize));
+                        assert!(a.blocks.iter().all(|b| b.len() == n));
                         live.push(a);
                     }
                 }
@@ -410,8 +496,7 @@ fn prop_multi_gpu_lockstep_conservation() {
                 rows.iter().all(|r| r.free == f0),
                 "device divergence at seed {seed}"
             );
-            let held: u32 =
-                live.iter().map(|a| a.len() as u32).sum();
+            let held: u32 = live.iter().map(|a| a.len()).sum();
             assert_eq!(f0 + held, per_dev, "conservation seed {seed}");
         }
     }
