@@ -19,6 +19,25 @@
 use crate::coordination::{PressureSnapshot, ReqState, RequestId, ServeState};
 use crate::temporal::{issue_offload, try_immediate_upload};
 
+/// Epoch-gated entry to the Mooncake reactive phase: skipped when no
+/// temporal event landed, nothing is CPU-resident, and GPU usage sits
+/// below the reactive threshold — exactly the ticks on which
+/// [`mooncake_reactive_phase`] is a no-op. Returns whether it ran.
+pub fn maybe_mooncake_phase(st: &mut ServeState, now_us: u64) -> bool {
+    let due = st.epochs.temporal != st.planned.temporal
+        || !st.offloaded_ids.is_empty()
+        || st.gpu.usage() >= st.cfg.policy.reactive_usage_threshold;
+    if !due {
+        st.metrics.counters.planner_skips += 1;
+        return false;
+    }
+    st.metrics.counters.planner_runs += 1;
+    let snap = st.snapshot();
+    mooncake_reactive_phase(st, &snap, now_us);
+    st.planned.temporal = st.epochs.temporal;
+    true
+}
+
 /// Mooncake-style reactive memory management (phase 3 replacement).
 ///
 /// * Upload: retried every step for any CPU-resident cache whose tool has
@@ -86,8 +105,9 @@ pub fn mooncake_reactive_phase(
         if st.cpu.free_blocks() < blocks {
             break;
         }
-        issue_offload(st, rid, now_us);
-        freed += blocks;
+        if issue_offload(st, rid, now_us) {
+            freed += blocks;
+        }
     }
 }
 

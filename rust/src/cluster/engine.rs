@@ -9,15 +9,21 @@
 //!   makes whole-cluster runs bit-for-bit reproducible;
 //! * the **router** (`super::Router`) deciding which shard serves each
 //!   arriving application;
-//! * the **migration planner**: when a shard saturates while another has
-//!   headroom, a *stalled* application (its sole live agent is blocked on
-//!   a function call) is moved — KV blocks leave the source through the
-//!   same pending-free + [`MigrationLedger`] path a local D2H offload
-//!   uses, travel for `interconnect_factor × (D2H + H2D)` on the shared
-//!   clock, and land as a fresh allocation on the destination. A tool
-//!   that returns mid-flight is buffered and re-delivered on landing;
-//!   tool finishes that fire on the old home after the move are forwarded
-//!   to the new one.
+//! * the **migration planner**: when shards saturate while others have
+//!   headroom, a planning event selects a *bandwidth-capped multi-victim
+//!   batch* of stalled applications (each one's sole live agent blocked
+//!   on a function call) — all candidates on every saturated shard are
+//!   scored once, longest-remaining-stall first, and issued to the
+//!   least-loaded destinations until the per-window interconnect budget
+//!   (`migrate_batch_budget_blocks`) runs out (partial-batch fallback),
+//!   so a pressure burst drains in one window instead of one victim per
+//!   window. KV blocks leave the source through the same pending-free +
+//!   [`MigrationLedger`] path a local D2H offload uses, travel for
+//!   `interconnect_factor × (D2H + H2D)` on the shared clock, and land
+//!   as fresh allocations on the destination. A tool that returns
+//!   mid-flight is buffered and re-delivered on landing; tool finishes
+//!   that fire on the old home after the move are forwarded to the new
+//!   one.
 //!
 //! [`MigrationLedger`]: crate::kvcache::MigrationLedger
 
@@ -87,6 +93,18 @@ pub struct ClusterReport {
     pub migrations: u64,
     pub migration_blocks: u64,
     pub migration_drops: u64,
+    /// Planning windows that issued at least one migration (mean batch
+    /// size = `migrations / migration_batches`).
+    pub migration_batches: u64,
+    /// Blocks that landed on a destination pool vs. blocks whose landing
+    /// found no room (dropped to recompute). Conservation:
+    /// `migration_blocks == migration_landed_blocks +
+    /// migration_drop_blocks` once no transfer is in flight.
+    pub migration_landed_blocks: u64,
+    pub migration_drop_blocks: u64,
+    /// Largest total block volume any single planning window issued —
+    /// never exceeds the configured interconnect budget.
+    pub max_window_migration_blocks: u64,
     pub truncated: bool,
 }
 
@@ -104,12 +122,20 @@ impl ClusterReport {
             / self.shards.len() as f64
     }
 
+    /// Mean victims per migration planning window (0 when none fired).
+    pub fn mean_migration_batch(&self) -> f64 {
+        if self.migration_batches == 0 {
+            return 0.0;
+        }
+        self.migrations as f64 / self.migration_batches as f64
+    }
+
     /// One-line cluster summary.
     pub fn summary(&self) -> String {
         format!(
             "[cluster x{} {}] apps={} avg={:.1}s p99={:.1}s total={:.1}s \
              thpt={:.4}req/s eff_util={:.1}% migrations={} \
-             migrated_blocks={} drops={}",
+             migrated_blocks={} drops={} batches={} planner={}/{}steps",
             self.num_shards,
             self.policy,
             self.aggregate.apps_completed,
@@ -121,6 +147,9 @@ impl ClusterReport {
             self.migrations,
             self.migration_blocks,
             self.migration_drops,
+            self.migration_batches,
+            self.aggregate.counters.planner_runs,
+            self.aggregate.counters.sched_steps,
         )
     }
 
@@ -154,13 +183,18 @@ impl ClusterReport {
         let mut out = String::new();
         out.push_str(&format!(
             "policy={} shards={} truncated={} migrations={} \
-             migration_blocks={} migration_drops={}\n",
+             migration_blocks={} migration_drops={} batches={} \
+             landed={} dropped_blocks={} max_window={}\n",
             self.policy,
             self.num_shards,
             self.truncated,
             self.migrations,
             self.migration_blocks,
             self.migration_drops,
+            self.migration_batches,
+            self.migration_landed_blocks,
+            self.migration_drop_blocks,
+            self.max_window_migration_blocks,
         ));
         for (i, m) in self.shards.iter().enumerate() {
             out.push_str(&m.digest_line(&format!("shard{i}")));
@@ -188,6 +222,10 @@ pub struct ClusterEngine {
     migrations: u64,
     migration_blocks: u64,
     migration_drops: u64,
+    migration_batches: u64,
+    migration_landed_blocks: u64,
+    migration_drop_blocks: u64,
+    max_window_migration_blocks: u64,
     /// Safety valve against policy livelock across the whole cluster.
     max_iterations: u64,
 }
@@ -227,6 +265,10 @@ impl ClusterEngine {
             migrations: 0,
             migration_blocks: 0,
             migration_drops: 0,
+            migration_batches: 0,
+            migration_landed_blocks: 0,
+            migration_drop_blocks: 0,
+            max_window_migration_blocks: 0,
             max_iterations: 3_000_000 * n as u64,
             cfg,
         }
@@ -240,6 +282,36 @@ impl ClusterEngine {
     /// Borrow one shard's engine (tests, inspection).
     pub fn shard(&self, i: usize) -> &SimEngine {
         &self.shards[i]
+    }
+
+    /// Mutably borrow one shard's engine (tests hand-build shard state
+    /// to unit-test the planner; production drives shards via `run`).
+    pub fn shard_mut(&mut self, i: usize) -> &mut SimEngine {
+        &mut self.shards[i]
+    }
+
+    /// Run one migration planning event at the current clock time,
+    /// bypassing the rebalance interval (tests). Returns how many
+    /// victims this window migrated.
+    pub fn rebalance_now(&mut self) -> u64 {
+        let before = self.migrations;
+        let now = self.clock.now_us();
+        self.plan_migration(now);
+        self.migrations - before
+    }
+
+    /// Lifetime migration statistics:
+    /// `(migrations, blocks, batches, landed_blocks, dropped_blocks,
+    /// max_window_blocks)`.
+    pub fn migration_stats(&self) -> (u64, u64, u64, u64, u64, u64) {
+        (
+            self.migrations,
+            self.migration_blocks,
+            self.migration_batches,
+            self.migration_landed_blocks,
+            self.migration_drop_blocks,
+            self.max_window_migration_blocks,
+        )
     }
 
     fn apps_completed(&self) -> u64 {
@@ -395,6 +467,10 @@ impl ClusterEngine {
             migrations: self.migrations,
             migration_blocks: self.migration_blocks,
             migration_drops: self.migration_drops,
+            migration_batches: self.migration_batches,
+            migration_landed_blocks: self.migration_landed_blocks,
+            migration_drop_blocks: self.migration_drop_blocks,
+            max_window_migration_blocks: self.max_window_migration_blocks,
             truncated,
         }
     }
@@ -449,70 +525,119 @@ impl ClusterEngine {
     // Cross-worker KV migration
     // ------------------------------------------------------------------
 
-    /// One migration per planning window: move the most-profitable
-    /// stalled app from the most-saturated shard to the least-loaded one.
+    /// One planning event moves a bandwidth-capped *batch* of victims:
+    /// every migratable stalled app on every saturated shard is scored
+    /// once, then issued longest-remaining-stall first to the
+    /// least-loaded destinations with room, until the per-window
+    /// interconnect budget runs out (partial-batch fallback — victims
+    /// that no longer fit wait for the next window). A burst of skew
+    /// drains in one window instead of one victim per window.
     fn plan_migration(&mut self, now: u64) {
         let usages: Vec<f64> =
             self.shards.iter().map(|s| s.st.gpu.usage()).collect();
-        let mut src: Option<(f64, usize)> = None;
-        let mut dst: Option<(f64, usize)> = None;
-        for (i, &u) in usages.iter().enumerate() {
-            if u >= self.cfg.migrate_src_usage
-                && src.map(|(b, _)| u > b).unwrap_or(true)
-            {
-                src = Some((u, i));
+        // Destination room, tracked logically as the batch is planned so
+        // two victims never count the same free blocks (landing may
+        // still find the pool fuller — see `land_migration`).
+        let mut room: Vec<u32> = self
+            .shards
+            .iter()
+            .enumerate()
+            .map(|(i, s)| {
+                if usages[i] < self.cfg.migrate_dst_usage {
+                    s.st.gpu.available_for(Route::Shared)
+                } else {
+                    0
+                }
+            })
+            .collect();
+        if room.iter().all(|&r| r == 0) {
+            return;
+        }
+        let mut sources: Vec<usize> = (0..self.shards.len())
+            .filter(|&i| usages[i] >= self.cfg.migrate_src_usage)
+            .collect();
+        if sources.is_empty() {
+            return;
+        }
+        // Hottest source first; the index breaks exact usage ties.
+        sources.sort_by(|&a, &b| {
+            usages[b].total_cmp(&usages[a]).then(a.cmp(&b))
+        });
+        let mut budget = self.cfg.migrate_batch_budget_blocks;
+        let mut victims = 0u64;
+        let mut window_blocks = 0u64;
+        for src in sources {
+            if budget == 0 {
+                break;
             }
-            if u < self.cfg.migrate_dst_usage
-                && dst.map(|(b, _)| u < b).unwrap_or(true)
+            for (app_id, rid, blocks, predicted_end) in
+                self.pick_candidates(src)
             {
-                dst = Some((u, i));
+                if budget == 0 {
+                    break;
+                }
+                if blocks > budget {
+                    // Partial-batch fallback: this victim no longer fits
+                    // the window's interconnect budget; smaller ones may
+                    // still pack into the remainder.
+                    continue;
+                }
+                // The move must pay for itself: predicted remaining
+                // stall must exceed `migrate_payback ×` the transfer.
+                let profile = &self.shards[src].st.cfg.profile;
+                let cost_us = ((profile.offload_us(blocks)
+                    + profile.upload_us(blocks))
+                    as f64
+                    * self.cfg.interconnect_factor)
+                    as u64;
+                let remaining = predicted_end.saturating_sub(now);
+                if (remaining as f64)
+                    < self.cfg.migrate_payback * cost_us as f64
+                {
+                    continue;
+                }
+                // Least-loaded destination with room (never the source).
+                let dst = (0..room.len())
+                    .filter(|&d| d != src && room[d] >= blocks)
+                    .min_by(|&a, &b| {
+                        usages[a].total_cmp(&usages[b]).then(a.cmp(&b))
+                    });
+                let Some(dst) = dst else {
+                    continue;
+                };
+                self.start_migration(
+                    src, dst, app_id, rid, blocks, cost_us, now,
+                );
+                room[dst] -= blocks;
+                budget -= blocks;
+                victims += 1;
+                window_blocks += blocks as u64;
             }
         }
-        let (Some((_, src)), Some((_, dst))) = (src, dst) else {
-            return;
-        };
-        if src == dst {
-            return;
+        if victims > 0 {
+            self.migration_batches += 1;
+            self.max_window_migration_blocks =
+                self.max_window_migration_blocks.max(window_blocks);
         }
-        let Some((app_id, rid, blocks, predicted_end)) =
-            self.pick_candidate(src)
-        else {
-            return;
-        };
-        // The move must pay for itself: predicted remaining stall must
-        // exceed `migrate_payback ×` the cross-worker transfer time.
-        let profile = &self.shards[src].st.cfg.profile;
-        let cost_us = ((profile.offload_us(blocks)
-            + profile.upload_us(blocks)) as f64
-            * self.cfg.interconnect_factor) as u64;
-        let remaining = predicted_end.saturating_sub(now);
-        if (remaining as f64) < self.cfg.migrate_payback * cost_us as f64 {
-            return;
-        }
-        // Destination must have room for the blocks on arrival (best
-        // effort — it may still fill up mid-flight, see `land_migration`).
-        if self.shards[dst].st.gpu.available_for(Route::Shared) < blocks {
-            return;
-        }
-        self.start_migration(src, dst, app_id, rid, blocks, cost_us, now);
     }
 
-    /// A migratable app on `shard`: every request finished or waiting
-    /// without KV, except exactly one agent stalled on an unfinished
-    /// function call with GPU-resident blocks, and no standalone func
-    /// node mid-delay. Returns the one with the longest predicted
-    /// remaining stall.
-    fn pick_candidate(
+    /// All migratable apps on `shard`, longest predicted remaining stall
+    /// first (app id breaks ties). A migratable app: every request
+    /// finished or waiting without KV, except exactly one agent stalled
+    /// on an unfinished function call with GPU-resident blocks, and no
+    /// standalone func node mid-delay. The batch planner consumes the
+    /// whole list; scoring happens once per planning event.
+    fn pick_candidates(
         &self,
         shard: usize,
-    ) -> Option<(AppId, RequestId, u32, u64)> {
+    ) -> Vec<(AppId, RequestId, u32, u64)> {
         let st = &self.shards[shard].st;
         // Arena insertion order is deterministic but not id order after
         // implants; sort to keep the scan order the cluster determinism
         // contract was written against. Runs once per planning window.
         let mut app_ids: Vec<AppId> = st.apps.ids().collect();
         app_ids.sort_unstable();
-        let mut best: Option<(u64, AppId, RequestId, u32)> = None;
+        let mut found: Vec<(AppId, RequestId, u32, u64)> = Vec::new();
         'apps: for app_id in app_ids {
             let app = &st.apps[&app_id];
             if app.finished_us.is_some() {
@@ -560,12 +685,13 @@ impl ClusterEngine {
                 }
             }
             if let Some((rid, blocks, end)) = stalled {
-                if best.map(|(b, ..)| end > b).unwrap_or(true) {
-                    best = Some((end, app_id, rid, blocks));
-                }
+                found.push((app_id, rid, blocks, end));
             }
         }
-        best.map(|(end, app_id, rid, blocks)| (app_id, rid, blocks, end))
+        // Longest remaining stall first (most payback headroom); app id
+        // breaks exact ties so order never depends on storage.
+        found.sort_by(|a, b| b.3.cmp(&a.3).then(a.0.cmp(&b.0)));
+        found
     }
 
     #[allow(clippy::too_many_arguments)]
@@ -631,8 +757,13 @@ impl ClusterEngine {
             return;
         };
         // Source side: the D2H leg completes, blocks become reusable.
+        // This is a transfer completion on that shard's ledger, so it
+        // bumps the temporal epoch exactly like a local D2H landing —
+        // it frees interconnect budget the batched offload planner may
+        // have deferred victims against.
         if let Some(t) = self.shards[m.src].st.ledger.complete(m.xfer) {
             self.shards[m.src].st.gpu.complete_pending(t.gpu_blocks);
+            self.shards[m.src].st.epochs.temporal += 1;
         }
         // Destination side: materialize the KV. If the pool filled up
         // mid-flight the cache is dropped and the agent recomputes on
@@ -679,8 +810,11 @@ impl ClusterEngine {
                 let _ = dst.st.ledger.complete(xfer);
             }
         }
-        if !granted {
+        if granted {
+            self.migration_landed_blocks += m.blocks as u64;
+        } else {
             self.migration_drops += 1;
+            self.migration_drop_blocks += m.blocks as u64;
         }
         let tool_done = m
             .app

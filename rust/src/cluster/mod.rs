@@ -35,9 +35,11 @@
 //! cache, trained tool forecaster), falling back to a pressure-aware
 //! score from each shard's [`PressureSnapshot`] when the affinity target
 //! saturates. When saturation persists, the migration planner moves a
-//! *stalled* application — its KV travels while the agent is blocked on
-//! a function call anyway, hiding the interconnect hop inside the stall,
-//! exactly the §4 insight lifted to cluster scope.
+//! bandwidth-capped *batch* of stalled applications per planning window
+//! — each one's KV travels while its agent is blocked on a function
+//! call anyway, hiding the interconnect hop inside the stall, exactly
+//! the §4 insight lifted to cluster scope; a burst of skew drains in
+//! one window instead of one victim per window.
 //!
 //! [`SimEngine`]: crate::engine::sim::SimEngine
 //! [`ClusterConfig`]: crate::config::ClusterConfig

@@ -193,6 +193,11 @@ pub struct PolicyConfig {
     /// Predictive upload: start gradual reservation this early (fraction of
     /// predicted remaining stall).
     pub upload_lead_frac: f64,
+    /// Bandwidth cap on the batched offload planner: at most this many
+    /// blocks may be in flight D2H at once; a planning event spends
+    /// `cap − inflight` on new victims and defers the rest of the batch
+    /// until transfers complete (partial-batch fallback).
+    pub offload_inflight_cap_blocks: u32,
 
     // ---- Mooncake-style reactive policy ----
     /// Reactive offload triggers when GPU usage exceeds this.
@@ -236,6 +241,7 @@ impl Default for PolicyConfig {
             emergency_usage: 0.95,
             emergency_margin: 4.0,
             upload_lead_frac: 0.35,
+            offload_inflight_cap_blocks: 4096,
 
             reactive_usage_threshold: 0.90,
         }
@@ -314,6 +320,10 @@ pub struct ClusterConfig {
     /// AgentAffinity spills to a cold shard once the warm shard's
     /// pressure score is at or above this.
     pub affinity_spill_load: f64,
+    /// Interconnect budget per planning window (blocks): one planning
+    /// event migrates a multi-victim batch up to this large, with a
+    /// partial-batch fallback when a victim no longer fits.
+    pub migrate_batch_budget_blocks: u32,
 }
 
 impl Default for ClusterConfig {
@@ -329,6 +339,7 @@ impl Default for ClusterConfig {
             interconnect_factor: 2.0,
             rebalance_interval_us: 250_000,
             affinity_spill_load: 0.80,
+            migrate_batch_budget_blocks: 2048,
         }
     }
 }
@@ -409,6 +420,10 @@ impl ClusterConfig {
             }
             "affinity_spill_load" => {
                 self.affinity_spill_load =
+                    value.parse().map_err(|_| bad())?
+            }
+            "migrate_batch_budget_blocks" => {
+                self.migrate_batch_budget_blocks =
                     value.parse().map_err(|_| bad())?
             }
             _ => {
@@ -545,6 +560,9 @@ impl ServeConfig {
             }
             ("policy", "score_threshold") => {
                 self.policy.score_threshold = f(value)?
+            }
+            ("policy", "offload_inflight_cap_blocks") => {
+                self.policy.offload_inflight_cap_blocks = u(value)? as u32
             }
             ("policy", "forecast_alpha_user") => {
                 self.policy.forecast_alpha_user = f(value)?

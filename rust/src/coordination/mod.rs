@@ -5,12 +5,24 @@
 //! [`PressureSnapshot`] so both act on one notion of pressure, and (b) a
 //! fixed four-phase execution order within each scheduling step:
 //!
-//! 1. refresh application metadata, build the pressure snapshot;
-//! 2. update the Spatial Scheduler's reservation plan (window expiry);
+//! 1. refresh application metadata, note the O(1) pressure-band delta;
+//! 2. update the Spatial Scheduler's reservation plan (window expiry,
+//!    replanned only when its inputs' epochs moved);
 //! 3. Temporal Scheduler: reserve blocks for imminent uploads, start
-//!    ready uploads, evaluate newly stalled requests for offload;
+//!    ready uploads, evaluate newly stalled requests for offload —
+//!    *epoch-gated*: skipped entirely unless a temporal event landed or
+//!    a predictive-upload deadline arrived since the last plan;
 //! 4. Spatial Scheduler: form the next batch under agent-aware admission
-//!    control (shared / reserved / defer).
+//!    control (shared / reserved / defer) — every tick.
+//!
+//! The scheduler is event-driven by construction: every mutation that can
+//! change a scheduling decision bumps a per-subsystem epoch in
+//! [`SchedEpochs`] (see its docs for the bump map), planners record the
+//! epochs they consumed, and a steady-state decode tick — no arrival, no
+//! stall, no tool return, no transfer, no pressure-band crossing — does
+//! only the snapshot delta plus admission. The full pressure snapshot is
+//! built lazily *inside* the planner gates, so skipped ticks never pay
+//! for it.
 //!
 //! [`ServeState`] owns every piece of state both schedulers read or write;
 //! the schedulers themselves are free functions over it (`temporal::*`,
@@ -26,8 +38,8 @@ pub use request::{
     AppId, AppInst, FcRt, PhaseRt, ReqState, Request, RequestId,
 };
 pub use state::{
-    MigratedApp, SchedScratch, ServeState, ThroughputEstimator,
-    TypeRegistry,
+    MigratedApp, SchedEpochs, SchedScratch, ServeState,
+    ThroughputEstimator, TypeRegistry,
 };
 
 use crate::kvcache::TransferId;
@@ -84,31 +96,37 @@ impl PressureSnapshot {
 }
 
 /// One full scheduling step (the §3.2 fixed order). Both engines call this
-/// once per engine iteration.
+/// once per engine iteration. Planner phases are epoch-gated: a tick on
+/// which no scheduling-relevant event landed runs only the O(1) pressure
+/// delta, the priority refresh, and admission.
 pub fn step(st: &mut ServeState, now_us: u64) {
     st.metrics.counters.sched_steps += 1;
 
-    // Phase 1: refresh metadata + snapshot.
-    st.refresh_priorities(now_us);
-    let snap = st.snapshot();
+    // Snapshot delta: crossing a pressure watermark band is an event.
+    st.note_pressure_band();
 
-    // Phase 2: reservation plan (TokenCake / agent-only).
+    // Phase 1: refresh metadata.
+    st.refresh_priorities(now_us);
+
+    // Phase 2: reservation plan (TokenCake / agent-only) — window plus
+    // epoch gated inside.
     if st.cfg.mode.reserves_memory() {
         crate::spatial::maybe_update_reservations(st, now_us);
     }
 
-    // Phase 3: temporal scheduler.
+    // Phase 3: temporal scheduler, behind the epoch/deadline gate. The
+    // pressure snapshot is built lazily inside the gate.
     match st.cfg.mode {
         Mode::TokenCake | Mode::OffloadOnly | Mode::Infercept => {
-            crate::temporal::run_phase(st, &snap, now_us);
+            crate::temporal::maybe_run_phase(st, now_us);
         }
         Mode::Mooncake => {
-            crate::baselines::mooncake_reactive_phase(st, &snap, now_us);
+            crate::baselines::maybe_mooncake_phase(st, now_us);
         }
         _ => {}
     }
 
-    // Phase 4: admission control.
+    // Phase 4: admission control — every tick.
     crate::spatial::admit(st, now_us);
 }
 
@@ -138,5 +156,46 @@ mod tests {
         st.register_graph(&g);
         step(&mut st, 1000);
         assert_eq!(st.metrics.counters.sched_steps, 1);
+    }
+
+    #[test]
+    fn steady_ticks_are_epoch_gated() {
+        // No arrival, no stall, no transfer, no pressure crossing: every
+        // tick after the first skips the temporal planner, and window
+        // expiries skip the spatial replan.
+        let mut st = ServeState::new(ServeConfig::default());
+        let g = templates::rag();
+        st.register_graph(&g);
+        for i in 0..20u64 {
+            step(&mut st, 1_000_000 * (i + 1)); // one adjust window apart
+        }
+        let c = &st.metrics.counters;
+        assert_eq!(c.sched_steps, 20);
+        assert_eq!(c.planner_runs, 0, "no temporal event ever landed");
+        assert_eq!(c.planner_skips, 20);
+        assert_eq!(
+            c.spatial_plans, 0,
+            "no spatial input ever changed"
+        );
+        assert!(c.spatial_plan_skips > 0);
+    }
+
+    #[test]
+    fn gated_ticks_account_every_step() {
+        // Gate bookkeeping: in a gated mode every scheduling step either
+        // runs or skips the temporal planner, never both, never neither.
+        let mut st = ServeState::new(ServeConfig::default());
+        let g = templates::code_writer();
+        let t = st.register_graph(&g);
+        let scales = crate::workload::SampledLengths {
+            prompt_scale: 1.0,
+            gen_scale: 1.0,
+        };
+        st.spawn_app(t, scales, 0);
+        for i in 0..50u64 {
+            step(&mut st, 1_000 * (i + 1));
+        }
+        let c = &st.metrics.counters;
+        assert_eq!(c.planner_runs + c.planner_skips, c.sched_steps);
     }
 }

@@ -134,6 +134,35 @@ pub struct MigratedApp {
     pub requests: Vec<Request>,
 }
 
+/// Per-subsystem dirty epochs — the event-driven scheduling contract.
+///
+/// Every mutation that can change a scheduling decision bumps the epoch
+/// of the subsystem whose inputs it touched; planners record the epochs
+/// they consumed ([`ServeState::planned`]) and a tick whose epochs match
+/// the watermarks skips the corresponding phase entirely. The bump map:
+///
+/// * `temporal` — FC stall (`call_start`), tool return (`call_finish`),
+///   transfer completion (`on_transfer_done`), any lifecycle reindex
+///   through the stalled/offloaded sets, a broken upload reservation
+///   (deadlock rescue), and app extract/implant (cluster migration).
+///   Plain block frees deliberately do not bump it — a budget-starved
+///   upload retries on the planner's bounded backoff instead, so
+///   preemption storms cannot re-open the gate every tick.
+/// * `spatial` — request spawn (arrival), admission grants/deferrals,
+///   preemption, request finish, app extract/implant, and every
+///   executed engine iteration (execution-time charging drifts the
+///   agent-type score's H_a input) — everything the agent-type score
+///   S_a and the reservation plan read.
+/// * `pressure` — the GPU free list crossing a policy threshold
+///   (low/offload/high/emergency watermark band), detected O(1) per
+///   tick by [`ServeState::note_pressure_band`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SchedEpochs {
+    pub spatial: u64,
+    pub temporal: u64,
+    pub pressure: u64,
+}
+
 /// Spatial Scheduler mutable state (ρ, critical set, adjustment window).
 #[derive(Debug, Clone)]
 pub struct SpatialState {
@@ -188,6 +217,16 @@ pub struct ServeState {
     pub outbox: Vec<super::Action>,
     /// Hot-path scratch buffers (admission ordering).
     pub scratch: SchedScratch,
+    /// Dirty epochs: bumped by every scheduling-relevant mutation.
+    pub epochs: SchedEpochs,
+    /// Watermarks: the epochs each planner consumed on its last run.
+    pub planned: SchedEpochs,
+    /// Next absolute time (µs) the temporal planner has deadline work
+    /// (predictive-upload lead windows); `u64::MAX` when none. Derived
+    /// state, recomputed after every planner run.
+    pub temporal_next_due_us: u64,
+    /// Last observed pressure band (see [`Self::note_pressure_band`]).
+    last_pressure_band: u8,
     next_req: u64,
     next_app: u64,
 }
@@ -227,8 +266,45 @@ impl ServeState {
             metrics: MetricsBundle::default(),
             outbox: Vec::new(),
             scratch: SchedScratch::default(),
+            epochs: SchedEpochs::default(),
+            planned: SchedEpochs::default(),
+            temporal_next_due_us: u64::MAX,
+            last_pressure_band: 0,
             next_req: 0,
             next_app: 0,
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Dirty-epoch maintenance
+    // ------------------------------------------------------------------
+
+    /// Classify GPU occupancy against the policy watermarks. A band
+    /// transition is exactly when a threshold-gated decision (ρ drift,
+    /// offload gate, emergency override) can flip.
+    fn pressure_band(&self) -> u8 {
+        let u = self.gpu.usage();
+        let p = &self.cfg.policy;
+        if u >= p.emergency_usage {
+            4
+        } else if u >= p.high_watermark {
+            3
+        } else if u >= p.offload_usage_threshold {
+            2
+        } else if u >= p.low_watermark {
+            1
+        } else {
+            0
+        }
+    }
+
+    /// O(1) snapshot delta, run once per tick: bump the pressure epoch
+    /// when the free list crossed a watermark band since the last tick.
+    pub fn note_pressure_band(&mut self) {
+        let band = self.pressure_band();
+        if band != self.last_pressure_band {
+            self.last_pressure_band = band;
+            self.epochs.pressure += 1;
         }
     }
 
@@ -263,8 +339,13 @@ impl ServeState {
         self.reindex_request(rid, to);
     }
 
-    /// Re-register `rid` under its (already written) new state.
+    /// Re-register `rid` under its (already written) new state. Every
+    /// FC-lifecycle transition lands here, so this is also the central
+    /// epoch bump for the temporal planner (and the spatial one: the
+    /// per-type GPU residency the agent-type score reads shifts too).
     pub fn reindex_request(&mut self, rid: RequestId, to: ReqState) {
+        self.epochs.temporal += 1;
+        self.epochs.spatial += 1;
         self.stalled_ids.remove(&rid);
         self.offloaded_ids.remove(&rid);
         match to {
@@ -284,6 +365,8 @@ impl ServeState {
     /// for having released or transferred any GPU/CPU blocks the requests
     /// still reference — this method only moves bookkeeping.
     pub fn extract_app(&mut self, app_id: AppId) -> MigratedApp {
+        self.epochs.temporal += 1;
+        self.epochs.spatial += 1;
         let (app, template) = self
             .apps
             .remove(&app_id)
@@ -327,6 +410,8 @@ impl ServeState {
             "implant_app: template {} not registered",
             m.template
         );
+        self.epochs.temporal += 1;
+        self.epochs.spatial += 1;
         let app_id = m.app.id;
         self.apps.insert(app_id, m.app, m.template);
         for r in m.requests {
@@ -460,6 +545,8 @@ impl ServeState {
         let type_id = self.types.intern(&spec.agent_type);
         let id = RequestId(self.next_req);
         self.next_req += 1;
+        // An arrival changes waiting demand and the active type set.
+        self.epochs.spatial += 1;
         let req = Request {
             id,
             app_id,
@@ -682,6 +769,10 @@ impl ServeState {
     // ------------------------------------------------------------------
 
     /// Release all GPU blocks a request holds (eviction or completion).
+    /// Deliberately does NOT bump the temporal epoch: preemption storms
+    /// would otherwise re-open the planner gate every tick; a
+    /// budget-starved upload instead retries on the planner's bounded
+    /// backoff (or sooner, via any real temporal event).
     pub fn release_gpu(&mut self, rid: RequestId) {
         let r = self.reqs.get_mut(&rid).unwrap();
         let blocks = r.blocks.take();

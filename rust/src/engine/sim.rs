@@ -498,6 +498,11 @@ impl SimEngine {
         self.st
             .throughput
             .record_iteration(decoded, dt.max(1));
+        // Execution time charged below drifts the agent-type score's
+        // H_a input, so an executed iteration is a spatial input change
+        // — the windowed replan stays live whenever the engine runs and
+        // skips only genuinely idle windows.
+        self.st.epochs.spatial += 1;
         self.st.metrics.counters.decode_iterations += 1;
         self.st.metrics.counters.tokens_generated += decoded as u64;
         // Charge execution time (H_a input) — in place, no list clone.
@@ -662,6 +667,9 @@ impl SimEngine {
             let charged = std::mem::take(&mut r.upload_reserved_charged);
             let t = r.type_id;
             self.st.gpu.free(blocks, charged, Some(t));
+            // The broken reservation must be rebuilt from scratch — wake
+            // the epoch-gated planner.
+            self.st.epochs.temporal += 1;
             return true;
         }
         false
@@ -680,6 +688,7 @@ impl SimEngine {
             self.st.metrics.counters.critical_inversions += 1;
         }
         self.st.types.note_preempt(v_type);
+        self.st.epochs.spatial += 1; // preempt counters feed S_a
         if victim == grower {
             // Hit the growth wall with no eligible victim: next admission
             // must be all-or-nothing.

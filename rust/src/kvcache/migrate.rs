@@ -122,6 +122,19 @@ impl MigrationLedger {
             .sum()
     }
 
+    /// Total blocks currently leaving the GPU (D2H). The batched offload
+    /// planner caps this: `cap − inflight` is the bandwidth budget a
+    /// planning event may spend on new victims, so a burst of stalls
+    /// drains as one bounded multi-victim batch instead of an unbounded
+    /// fan-out of parallel transfers.
+    pub fn inflight_offload_blocks(&self) -> u32 {
+        self.inflight
+            .values()
+            .filter(|t| t.dir == Direction::D2H)
+            .map(|t| t.blocks())
+            .sum()
+    }
+
     /// Total swap volume in blocks, both directions (§7.3's metric).
     pub fn swap_volume_blocks(&self) -> u64 {
         self.offload_blocks + self.upload_blocks
@@ -175,11 +188,13 @@ mod tests {
         assert_eq!(l.upload_count, 1);
         assert_eq!(l.swap_volume_blocks(), 2);
         assert_eq!(l.inflight_upload_blocks(), 1);
+        assert_eq!(l.inflight_offload_blocks(), 1);
         l.complete(a);
         l.complete(b);
         // Stats survive completion.
         assert_eq!(l.swap_volume_blocks(), 2);
         assert_eq!(l.inflight_upload_blocks(), 0);
+        assert_eq!(l.inflight_offload_blocks(), 0);
     }
 
     #[test]

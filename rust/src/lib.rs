@@ -55,6 +55,36 @@
 //!   [`kvcache::GpuPool`] — KV block ownership as coalesced extents,
 //!   O(extents) alloc/free instead of per-block list traffic.
 //!
+//! ## Event-driven scheduling epochs
+//!
+//! The scheduler reacts to *events*, not wall time. Every mutation that
+//! can change a scheduling decision bumps a per-subsystem dirty epoch in
+//! [`coordination::SchedEpochs`]:
+//!
+//! * `temporal` — FC stall / tool return / transfer completion /
+//!   lifecycle reindex / broken reservation / app extract+implant;
+//! * `spatial` — arrival, admission grant/deferral, preemption, finish,
+//!   executed engine iteration (exec-time drift feeds S_a);
+//! * `pressure` — the free list crossing a policy watermark band
+//!   (detected by an O(1) per-tick snapshot delta).
+//!
+//! Planners record the epochs they consumed (watermarks in
+//! `ServeState::planned`): `temporal::maybe_run_phase` skips the whole
+//! temporal phase — including building the pressure snapshot — unless an
+//! epoch moved or a predictive-upload deadline arrived, and the spatial
+//! replan is skipped at window expiry when its inputs are unchanged. A
+//! steady-state decode tick therefore does only the snapshot delta plus
+//! admission; CI asserts planner runs stay under 10% of scheduling
+//! steps and greps against direct `run_phase`/`upload_phase` calls.
+//!
+//! Migration is batched under the same event model: one planning event
+//! scores all stalled candidates once (off the id-ordered index) and
+//! issues a bandwidth-capped multi-victim batch — locally capped by
+//! in-flight D2H blocks, across workers by a per-window interconnect
+//! budget — with a partial-batch fallback when the budget runs out, so
+//! a pressure burst drains in one window instead of one victim per
+//! window.
+//!
 //! Python never runs on the request path: `make artifacts` lowers the model
 //! once; the rust binary is self-contained afterwards.
 //!

@@ -89,13 +89,14 @@ fn cmd_bench(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
-/// Machine-readable benchmark trajectory: single-worker vs a 4-shard
-/// agent-affinity cluster under the same offered load (throughput,
-/// mean/p99 latency, effective GPU utilization), plus the hot-path
-/// `sim_throughput` metric — wall-clock simulated-events/sec (scheduling
-/// steps + executed decode iterations) and ticks/sec (scheduling steps)
-/// — the number the arena/extent refactor is benchmarked on. The app mix
-/// is always the standard 2:1 code-writer:deep-research cluster workload
+/// Machine-readable benchmark trajectory: single-worker vs an N-shard
+/// agent-affinity cluster (`--shards`, default 4) under the same offered
+/// load (throughput, mean/p99 latency, effective GPU utilization), plus
+/// the hot-path `sim_throughput` metric — wall-clock simulated-events/sec
+/// (scheduling steps + executed decode iterations) and ticks/sec
+/// (scheduling steps) — and the epoch-gating/batching headlines
+/// (`planner_runs_per_1k_ticks`, `mean_migration_batch`). The app mix is
+/// always the standard 2:1 code-writer:deep-research cluster workload
 /// (independent of `--app`); dataset and noise follow the flags and are
 /// recorded in the output.
 fn write_bench_trajectory(
@@ -105,6 +106,10 @@ fn write_bench_trajectory(
 ) -> Result<(), String> {
     let qps = args.get_f64("qps", 0.5)?;
     let apps = args.get_u64("apps", 20)? as usize;
+    let shards = args.get_u64("shards", 4)? as usize;
+    if shards == 0 {
+        return Err("--shards must be >= 1".into());
+    }
     let dataset = match args.get_or("dataset", "d1") {
         "d1" | "D1" => Dataset::D1,
         "d2" | "D2" => Dataset::D2,
@@ -124,6 +129,17 @@ fn write_bench_trajectory(
         let ticks = rep.aggregate.counters.sched_steps;
         let events = ticks + rep.aggregate.counters.decode_iterations;
         let wall = wall_s.max(1e-9);
+        // Mean migration batch pools the cluster planner's windows with
+        // the per-shard temporal planners' local D2H offload batches.
+        let batches = rep.migration_batches
+            + rep.aggregate.counters.offload_batches;
+        let batch_victims = rep.migrations
+            + rep.aggregate.counters.offload_batch_victims;
+        let mean_batch = if batches == 0 {
+            0.0
+        } else {
+            batch_victims as f64 / batches as f64
+        };
         rows.push(format!(
             "    {{\"name\": \"{name}\", \"shards\": {}, \
              \"policy\": \"{}\", \"apps\": {}, \
@@ -131,7 +147,9 @@ fn write_bench_trajectory(
              \"mean_latency_s\": {:.3}, \"p99_latency_s\": {:.3}, \
              \"effective_gpu_util\": {:.4}, \"migrations\": {}, \
              \"wall_s\": {:.3}, \"sim_events_per_s\": {:.0}, \
-             \"sim_ticks_per_s\": {:.0}, \"truncated\": {}}}",
+             \"sim_ticks_per_s\": {:.0}, \
+             \"planner_runs_per_1k_ticks\": {:.2}, \
+             \"mean_migration_batch\": {:.2}, \"truncated\": {}}}",
             rep.num_shards,
             rep.policy,
             rep.aggregate.apps_completed,
@@ -143,6 +161,8 @@ fn write_bench_trajectory(
             wall_s,
             events as f64 / wall,
             ticks as f64 / wall,
+            rep.aggregate.counters.planner_runs_per_1k_ticks(),
+            mean_batch,
             rep.truncated,
         ));
     };
@@ -155,13 +175,17 @@ fn write_bench_trajectory(
     let rep = ClusterEngine::new(single).run(&workload);
     row("single-worker", &rep, t0.elapsed().as_secs_f64());
 
-    let quad = ClusterConfig::default()
+    let multi = ClusterConfig::default()
         .with_serve(cfg.clone())
-        .with_shards(4)
+        .with_shards(shards)
         .with_placement(PlacementPolicy::AgentAffinity);
     let t0 = std::time::Instant::now();
-    let rep = ClusterEngine::new(quad).run(&workload);
-    row("cluster-4-affinity", &rep, t0.elapsed().as_secs_f64());
+    let rep = ClusterEngine::new(multi).run(&workload);
+    row(
+        &format!("cluster-{shards}-affinity"),
+        &rep,
+        t0.elapsed().as_secs_f64(),
+    );
 
     let json = format!(
         "{{\n  \"benchmark\": \"tokencake_trajectory\",\n  \
@@ -244,8 +268,35 @@ fn cmd_cluster(args: &Args) -> Result<(), String> {
         println!("{line}");
     }
     println!("{}", report.summary());
+    let c = &report.aggregate.counters;
+    println!(
+        "planner: runs={} skips={} ({:.1}/1k ticks) spatial_plans={} \
+         spatial_skips={} mean_migration_batch={:.2}",
+        c.planner_runs,
+        c.planner_skips,
+        c.planner_runs_per_1k_ticks(),
+        c.spatial_plans,
+        c.spatial_plan_skips,
+        report.mean_migration_batch(),
+    );
     if report.truncated {
         eprintln!("warning: cluster run truncated before completion");
+    }
+    if args.has("assert-planner-gated") {
+        // CI perf smoke: steady-state ticks must skip the planner — the
+        // epoch gate keeps planner phase runs under 10% of sched steps.
+        let runs = c.planner_runs + c.spatial_plans;
+        if runs * 10 >= c.sched_steps {
+            return Err(format!(
+                "epoch gating ineffective: {} planner runs over {} \
+                 scheduling steps (>= 10%)",
+                runs, c.sched_steps
+            ));
+        }
+        println!(
+            "planner gating OK: {} runs / {} steps",
+            runs, c.sched_steps
+        );
     }
     Ok(())
 }
@@ -313,12 +364,16 @@ USAGE: tokencake <command> [--flag value]...
 COMMANDS:
   bench    run one workload:  --app --mode --qps --apps --frac --dataset
            --noise --seed --profile --config
-           --json FILE  also write a single-worker vs 4-shard cluster
-           trajectory (throughput, mean/p99 latency, effective GPU util)
+           --json FILE  also write a single-worker vs N-shard cluster
+           trajectory (--shards, default 4: throughput, mean/p99
+           latency, effective GPU util, planner_runs_per_1k_ticks,
+           mean_migration_batch)
   compare  run all modes on one workload (same flags, no --mode)
   cluster  sharded multi-worker serving:  --shards N
            --policy rr|least|affinity  --mix cw:2,dr:1  --qps --apps
            --frac --dataset --noise --seed --config  --no-migrate
+           --assert-planner-gated  (fail unless planner runs < 10% of
+           scheduling steps — the epoch-gate CI smoke)
   serve    start the frontend HTTP server:  --port
   graph    inspect a built-in app template:  --app
   help     this text

@@ -40,6 +40,21 @@ pub struct Counters {
     pub sched_steps: u64,
     /// Requests aborted because their demand can never fit the pool.
     pub aborted: u64,
+    /// Temporal-planner phase executions that passed the epoch gate
+    /// (TokenCake/offload run_phase, Mooncake reactive phase).
+    pub planner_runs: u64,
+    /// Ticks on which the epoch gate skipped the temporal planner.
+    pub planner_skips: u64,
+    /// Spatial reservation replans executed at window expiry.
+    pub spatial_plans: u64,
+    /// Window expiries skipped because the plan's inputs were unchanged.
+    pub spatial_plan_skips: u64,
+    /// Multi-victim *local D2H offload* batches issued by the temporal
+    /// planner (cross-worker migration batches are counted separately
+    /// on `cluster::ClusterReport`).
+    pub offload_batches: u64,
+    /// Victims across those batches (mean batch = victims / batches).
+    pub offload_batch_victims: u64,
 }
 
 impl Counters {
@@ -59,6 +74,21 @@ impl Counters {
         self.tokens_generated += o.tokens_generated;
         self.sched_steps += o.sched_steps;
         self.aborted += o.aborted;
+        self.planner_runs += o.planner_runs;
+        self.planner_skips += o.planner_skips;
+        self.spatial_plans += o.spatial_plans;
+        self.spatial_plan_skips += o.spatial_plan_skips;
+        self.offload_batches += o.offload_batches;
+        self.offload_batch_victims += o.offload_batch_victims;
+    }
+
+    /// Planner executions per 1000 scheduling steps — the epoch-gating
+    /// effectiveness headline (steady-state ticks skip the planner).
+    pub fn planner_runs_per_1k_ticks(&self) -> f64 {
+        if self.sched_steps == 0 {
+            return 0.0;
+        }
+        self.planner_runs as f64 * 1000.0 / self.sched_steps as f64
     }
 }
 
@@ -112,7 +142,8 @@ impl MetricsBundle {
             "{tag}: apps={} lat_sum={} lat_n={} req_sum={} req_n={} \
              makespan={} swap={} off={} up={} preempt={} inv={} \
              recomp={} recomp_tok={} rej={} early={} pfx_gpu={} \
-             pfx_cpu={} resv={} defer={} iters={} toks={} aborts={}\n",
+             pfx_cpu={} resv={} defer={} iters={} toks={} aborts={} \
+             plan={} pskip={} splan={} sskip={} obatch={} ovict={}\n",
             self.apps_completed,
             self.latency.total_us(),
             self.latency.len(),
@@ -135,6 +166,12 @@ impl MetricsBundle {
             self.counters.decode_iterations,
             self.counters.tokens_generated,
             self.counters.aborted,
+            self.counters.planner_runs,
+            self.counters.planner_skips,
+            self.counters.spatial_plans,
+            self.counters.spatial_plan_skips,
+            self.counters.offload_batches,
+            self.counters.offload_batch_victims,
         )
     }
 

@@ -41,9 +41,14 @@ impl Clock {
         self.now_us = t_us;
     }
 
-    /// Advance by a relative duration.
+    /// Advance by a relative duration. Panics on `u64` overflow — a
+    /// wrapped clock would silently violate monotonicity, the same bug
+    /// class [`Clock::advance_to`]'s time-travel guard catches.
     pub fn advance_by(&mut self, dt_us: u64) {
-        self.now_us += dt_us;
+        self.now_us = self
+            .now_us
+            .checked_add(dt_us)
+            .expect("clock overflow: advance_by past u64::MAX");
     }
 }
 
@@ -67,5 +72,13 @@ mod tests {
         let mut c = Clock::new();
         c.advance_to(10);
         c.advance_to(9);
+    }
+
+    #[test]
+    #[should_panic(expected = "clock overflow")]
+    fn rejects_overflow_wrap() {
+        let mut c = Clock::new();
+        c.advance_to(u64::MAX - 1);
+        c.advance_by(2);
     }
 }

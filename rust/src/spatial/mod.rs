@@ -17,14 +17,36 @@ use crate::coordination::{ReqState, Request, RequestId, ServeState};
 use crate::kvcache::{AgentTypeId, AllocOutcome, PrefixKey, PrefixLocation, Route};
 
 /// Algorithm 2: periodically re-evaluate ρ, the critical set, and the
-/// per-type quota distribution. No-op until the adjustment window expires.
+/// per-type quota distribution. No-op until the adjustment window
+/// expires, and — at expiry — *epoch-gated*: the replan is skipped when
+/// none of its inputs moved since the plan was computed (no spatial
+/// event, no pressure-band crossing) and ρ has nowhere left to drift in
+/// the current usage band.
 pub fn maybe_update_reservations(st: &mut ServeState, now_us: u64) {
     if now_us < st.spatial.last_adjust_us + st.cfg.policy.adjust_window_us
         && st.spatial.last_adjust_us != 0
     {
         return;
     }
+    // The window is consumed either way: a skipped window is the
+    // decision "the previous plan still holds".
     st.spatial.last_adjust_us = now_us.max(1);
+    let usage = st.gpu.usage();
+    let p = &st.cfg.policy;
+    let rho_drifts = (usage >= p.high_watermark
+        && st.spatial.rho < p.reserve_max - 1e-12)
+        || (usage <= p.low_watermark
+            && st.spatial.rho > p.reserve_min + 1e-12);
+    if st.planned.spatial == st.epochs.spatial
+        && st.planned.pressure == st.epochs.pressure
+        && !rho_drifts
+    {
+        st.metrics.counters.spatial_plan_skips += 1;
+        return;
+    }
+    st.planned.spatial = st.epochs.spatial;
+    st.planned.pressure = st.epochs.pressure;
+    st.metrics.counters.spatial_plans += 1;
     update_reservations(st);
 }
 
@@ -215,6 +237,7 @@ pub fn admit(st: &mut ServeState, now_us: u64) {
             st.metrics.counters.deferrals += 1;
             let t = st.reqs[&rid].type_id;
             st.types.note_wait(t);
+            st.epochs.spatial += 1; // wait counters feed S_a
             if fcfs_hol {
                 break;
             }
@@ -243,6 +266,7 @@ pub fn admit(st: &mut ServeState, now_us: u64) {
                     ReqState::Prefilling => st.prefilling.push(rid),
                     _ => st.running.push(rid),
                 }
+                st.epochs.spatial += 1; // per-type residency shifted
                 admitted.push(rid);
                 slots -= 1;
                 if needs_growth(&st.reqs[&rid], block_tokens) {
@@ -253,6 +277,7 @@ pub fn admit(st: &mut ServeState, now_us: u64) {
                 st.metrics.counters.deferrals += 1;
                 let t = st.reqs[&rid].type_id;
                 st.types.note_wait(t);
+                st.epochs.spatial += 1;
                 if fcfs_hol {
                     break;
                 }

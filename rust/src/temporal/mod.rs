@@ -18,7 +18,9 @@ pub mod upload;
 
 pub use forecast::Forecaster;
 pub use gate::{evaluate_offload, find_fit, OffloadDecision, RejectReason};
-pub use upload::{try_immediate_upload, upload_budget, upload_phase};
+pub use upload::{
+    next_upload_due_us, try_immediate_upload, upload_budget, upload_phase,
+};
 
 
 use crate::coordination::{
@@ -46,6 +48,7 @@ pub fn call_start(
     result_tokens: u32,
     now_us: u64,
 ) {
+    st.epochs.temporal += 1; // a new stall is a planning event
     let predicted =
         st.forecaster.predict_us(name, user_estimate_us);
     {
@@ -73,6 +76,7 @@ pub fn call_finish(
     rid: RequestId,
     now_us: u64,
 ) -> FinishDisposition {
+    st.epochs.temporal += 1; // a tool return is a planning event
     let (name, started, predicted_end, state) = {
         let r = st.reqs.get_mut(&rid).unwrap();
         let fc = r.fc.as_mut().expect("call_finish without call_start");
@@ -134,20 +138,60 @@ pub fn resume_from_fc(st: &mut ServeState, rid: RequestId, now_us: u64) {
     st.waiting.push_back(rid);
 }
 
+/// How long the gate backs off when urgent upload work exists but the
+/// planner could not move anything (no budget, no free blocks). A
+/// transfer completion or any FC-lifecycle event bumps the epoch and
+/// reopens the gate earlier; plain block frees deliberately do NOT
+/// (see `ServeState::release_gpu`), so a free-driven retry waits at
+/// most this backoff. It only bounds pure retry spin.
+const RETRY_BACKOFF_US: u64 = 5_000;
+
+/// Epoch/deadline-gated entry to the temporal planning phase (§3.2 phase
+/// 3). This is the only way the tick loop may reach [`run_phase`] (CI
+/// greps for direct calls): a steady-state decode tick — no stall, no
+/// tool return, no transfer, no upload deadline — skips the planner and
+/// never builds the pressure snapshot. Returns whether the planner ran.
+pub fn maybe_run_phase(st: &mut ServeState, now_us: u64) -> bool {
+    let due = st.epochs.temporal != st.planned.temporal
+        || now_us >= st.temporal_next_due_us;
+    if !due {
+        st.metrics.counters.planner_skips += 1;
+        return false;
+    }
+    st.metrics.counters.planner_runs += 1;
+    let snap = st.snapshot();
+    let progressed = run_phase(st, &snap, now_us);
+    // The plan consumed everything up to and including its own
+    // mutations; sync the watermark *after* the run.
+    st.planned.temporal = st.epochs.temporal;
+    let mut next = next_upload_due_us(st);
+    if !progressed && next <= now_us {
+        next = now_us.saturating_add(RETRY_BACKOFF_US);
+    }
+    st.temporal_next_due_us = next;
+    true
+}
+
 /// Phase 3 of the scheduling step (§3.2): uploads first (they have
-/// deadlines), then offload evaluation for newly stalled requests.
+/// deadlines), then batched offload planning for newly stalled requests.
+/// Returns whether anything moved (reservations, evaluations, offloads).
+///
+/// Offload is a *batch* decision: all pending candidates are scored once
+/// against the same snapshot, then a bandwidth-capped multi-victim batch
+/// is issued best-score-first, so a burst of stalls drains in one
+/// planning event instead of trickling one victim per window. The cap is
+/// on in-flight D2H blocks ([`crate::config::PolicyConfig::offload_inflight_cap_blocks`]);
+/// victims that no longer fit stay unevaluated and the D2H completions
+/// bump the epoch to resume the partial batch.
 pub fn run_phase(
     st: &mut ServeState,
     snap: &PressureSnapshot,
     now_us: u64,
-) {
-    upload_phase(st, snap, now_us);
+) -> bool {
+    let mut progressed = upload_phase(st, snap, now_us);
 
-    // Evaluate newly stalled requests for offload. The incremental
-    // stalled index is ordered by id, so this replaces the seed's
-    // full-table scan + per-tick sort with an O(stalled) walk whose
-    // order is identical by construction (bit-exact reproducibility is a
-    // system invariant the cluster layer also relies on).
+    // Score every pending candidate once, off the id-ordered incremental
+    // stalled index (O(stalled), order deterministic by construction).
     let newly_stalled: Vec<RequestId> = st
         .stalled_ids
         .iter()
@@ -157,39 +201,81 @@ pub fn run_phase(
             r.state == ReqState::Stalled && !r.offload_evaluated
         })
         .collect();
+    let mut accepted: Vec<(RequestId, f64, u32, RequestId)> = Vec::new();
     for rid in newly_stalled {
-        let decision = evaluate_offload(st, snap, rid, now_us);
-        st.reqs.get_mut(&rid).unwrap().offload_evaluated = true;
-        match decision {
-            OffloadDecision::Accept { beneficiary, .. } => {
-                issue_offload(st, rid, now_us);
-                // The freed blocks exist *for* this waiting request: pull
-                // it to the head of the queue so admission converts the
-                // offload into scheduled work. (This is exactly where
-                // best_fit's reordering disrupts the Spatial Scheduler's
-                // order — the §7.5 finding.)
-                if beneficiary != rid {
-                    st.waiting.retain(|&x| x != beneficiary);
-                    st.waiting.push_front(beneficiary);
-                    if let Some(b) = st.reqs.get_mut(&beneficiary) {
-                        b.pulled = true;
-                    }
-                }
+        match evaluate_offload(st, snap, rid, now_us) {
+            OffloadDecision::Accept { score, beneficiary } => {
+                let blocks = st.reqs[&rid].blocks.len();
+                accepted.push((rid, score, blocks, beneficiary));
             }
             OffloadDecision::Reject(_) => {
+                st.reqs.get_mut(&rid).unwrap().offload_evaluated = true;
                 st.metrics.counters.offloads_rejected += 1;
+                progressed = true;
             }
         }
     }
+
+    // Issue the bandwidth-capped batch, best score first (request id
+    // breaks exact-score ties so storage order never decides).
+    accepted.sort_by(|a, b| b.1.total_cmp(&a.1).then(a.0.cmp(&b.0)));
+    let cap = st.cfg.policy.offload_inflight_cap_blocks;
+    let mut budget = cap.saturating_sub(st.ledger.inflight_offload_blocks());
+    let mut victims = 0u64;
+    for (rid, _score, blocks, beneficiary) in accepted {
+        if blocks > cap {
+            // Larger than the interconnect could ever carry at once —
+            // reject instead of waiting forever for impossible budget.
+            st.reqs.get_mut(&rid).unwrap().offload_evaluated = true;
+            st.metrics.counters.offloads_rejected += 1;
+            progressed = true;
+            continue;
+        }
+        if blocks > budget {
+            // Partial-batch fallback: the interconnect budget ran out.
+            // The victim stays unevaluated; a D2H completion bumps the
+            // temporal epoch and the next planning event resumes here.
+            // Smaller later victims may still pack into the remainder.
+            continue;
+        }
+        st.reqs.get_mut(&rid).unwrap().offload_evaluated = true;
+        progressed = true;
+        if !issue_offload(st, rid, now_us) {
+            continue; // CPU full: evaluated + counted rejected
+        }
+        budget -= blocks;
+        victims += 1;
+        // The freed blocks exist *for* this waiting request: pull it to
+        // the head of the queue so admission converts the offload into
+        // scheduled work. (This is exactly where best_fit's reordering
+        // disrupts the Spatial Scheduler's order — the §7.5 finding.)
+        if beneficiary != rid {
+            st.waiting.retain(|&x| x != beneficiary);
+            st.waiting.push_front(beneficiary);
+            if let Some(b) = st.reqs.get_mut(&beneficiary) {
+                b.pulled = true;
+            }
+        }
+    }
+    if victims > 0 {
+        st.metrics.counters.offload_batches += 1;
+        st.metrics.counters.offload_batch_victims += victims;
+    }
+    progressed
 }
 
 /// Fire the D2H transfer: CPU blocks allocated, GPU blocks pending-free.
-pub fn issue_offload(st: &mut ServeState, rid: RequestId, now_us: u64) {
+/// Returns false if the CPU pool filled up between gate and issue.
+pub fn issue_offload(
+    st: &mut ServeState,
+    rid: RequestId,
+    now_us: u64,
+) -> bool {
     let n = st.reqs[&rid].blocks.len();
     let Some(cpu_blocks) = st.cpu.alloc(n) else {
         // CPU filled up between gate and issue — abandon.
         st.metrics.counters.offloads_rejected += 1;
-        return;
+        return false;
     };
     let (gpu_blocks, charged, type_id) = {
         let r = st.reqs.get_mut(&rid).unwrap();
@@ -218,6 +304,7 @@ pub fn issue_offload(st: &mut ServeState, rid: RequestId, now_us: u64) {
         xfer,
         completes_us: completes,
     });
+    true
 }
 
 /// Handle a completed transfer (engine event). Returns a request that
@@ -227,6 +314,9 @@ pub fn on_transfer_done(
     xfer: TransferId,
     now_us: u64,
 ) -> Option<RequestId> {
+    // A completed transfer frees interconnect budget (and possibly
+    // blocks) — the batched planner's partial batches resume on it.
+    st.epochs.temporal += 1;
     let t = st.ledger.complete(xfer)?;
     let rid = RequestId(t.req_id);
     match t.dir {
@@ -402,5 +492,147 @@ mod tests {
         let snap = st.snapshot();
         run_phase(&mut st, &snap, 1);
         assert_eq!(st.metrics.counters.offloads_rejected, 1);
+    }
+
+    /// Burst state: `n` stalled requests (40 blocks each, long stalls)
+    /// under real waiting pressure, so every one passes the offload gate.
+    fn burst_state(n: usize) -> (ServeState, Vec<RequestId>) {
+        let mut cfg = ServeConfig::default();
+        cfg.mode = M::TokenCake;
+        cfg.gpu_mem_frac = 0.05; // 650 blocks
+        let mut st = ServeState::new(cfg);
+        let g = crate::graph::templates::code_writer();
+        let t = st.register_graph(&g);
+        let scales = SampledLengths {
+            prompt_scale: 1.0,
+            gen_scale: 1.0,
+        };
+        // Two waiting beneficiaries keep waiting pressure above the
+        // watermark.
+        st.spawn_app(t, scales, 0);
+        st.spawn_app(t, scales, 0);
+        // Fill the pool to ~0.9 usage; carve 40 blocks per victim out of
+        // the fill so usage stays put.
+        let total = st.gpu.total();
+        let fill = (total as f64 * 0.9) as u32;
+        let AllocOutcome::Granted { mut blocks, .. } =
+            st.gpu.alloc(fill, Route::Shared)
+        else {
+            panic!()
+        };
+        let mut stalled = Vec::new();
+        for _ in 0..n {
+            let (app, _) = st.spawn_app(t, scales, 0);
+            let rid = st.apps[&app].node_req[0].unwrap();
+            st.waiting.retain(|&x| x != rid);
+            let own = blocks.take_prefix(40);
+            {
+                let r = st.reqs.get_mut(&rid).unwrap();
+                r.blocks = own;
+                r.critical_path = false;
+                r.fc = Some(crate::coordination::FcRt {
+                    name: "web_search".into(),
+                    started_us: 0,
+                    predicted_end_us: 30_000_000,
+                    tool_done: false,
+                    finished_us: 0,
+                    result_tokens: 480,
+                    user_estimate_us: None,
+                });
+            }
+            st.set_req_state(rid, ReqState::Stalled);
+            stalled.push(rid);
+        }
+        st.refresh_priorities(0);
+        (st, stalled)
+    }
+
+    #[test]
+    fn burst_drains_in_one_multi_victim_batch() {
+        // A pressure burst with 5 stalled apps drains via ONE planning
+        // event: all candidates scored once, issued as a single
+        // bandwidth-capped batch.
+        let (mut st, stalled) = burst_state(5);
+        let snap = st.snapshot();
+        run_phase(&mut st, &snap, 0);
+        for rid in &stalled {
+            assert_eq!(
+                st.reqs[rid].state,
+                ReqState::PendingOffload,
+                "{rid:?} must be in the batch"
+            );
+        }
+        assert_eq!(st.metrics.offload_count, 5);
+        assert_eq!(st.metrics.counters.offload_batches, 1);
+        assert_eq!(st.metrics.counters.offload_batch_victims, 5);
+        assert_eq!(st.ledger.inflight_offload_blocks(), 200);
+        assert!(
+            st.ledger.inflight_offload_blocks()
+                <= st.cfg.policy.offload_inflight_cap_blocks
+        );
+    }
+
+    #[test]
+    fn partial_batch_respects_bandwidth_cap_and_resumes() {
+        // Cap of 100 blocks: only 2 of 5 forty-block victims fit the
+        // first window; the rest stay unevaluated (partial-batch
+        // fallback) and go out once the in-flight transfers complete.
+        let (mut st, _stalled) = burst_state(5);
+        st.cfg.policy.offload_inflight_cap_blocks = 100;
+        let snap = st.snapshot();
+        run_phase(&mut st, &snap, 0);
+        assert_eq!(st.metrics.offload_count, 2);
+        assert_eq!(st.ledger.inflight_offload_blocks(), 80);
+        // Deferred victims keep their candidacy.
+        let pending: Vec<_> = st
+            .stalled_ids
+            .iter()
+            .filter(|rid| !st.reqs[rid].offload_evaluated)
+            .collect();
+        assert_eq!(pending.len(), 3);
+        // Complete the in-flight D2H legs → budget frees (and the epoch
+        // bumps) → the next planning event resumes the batch.
+        let xfers: Vec<_> = st
+            .outbox
+            .drain(..)
+            .map(|a| match a {
+                Action::TransferIssued { xfer, .. } => xfer,
+            })
+            .collect();
+        for x in xfers {
+            on_transfer_done(&mut st, x, 10_000);
+        }
+        assert_eq!(st.ledger.inflight_offload_blocks(), 0);
+        let snap = st.snapshot();
+        run_phase(&mut st, &snap, 10_000);
+        assert_eq!(st.metrics.offload_count, 4);
+        assert_eq!(st.metrics.counters.offload_batches, 2);
+        assert_eq!(st.metrics.counters.offload_batch_victims, 4);
+    }
+
+    #[test]
+    fn epoch_gate_skips_steady_ticks_and_wakes_on_events() {
+        // No temporal events → the gate never runs the planner.
+        let mut st = ServeState::new(ServeConfig::default());
+        let g = templates::rag();
+        st.register_graph(&g);
+        for i in 0..10u64 {
+            assert!(!maybe_run_phase(&mut st, 1_000 + i));
+        }
+        assert_eq!(st.metrics.counters.planner_runs, 0);
+        assert_eq!(st.metrics.counters.planner_skips, 10);
+
+        // A stall (call_start) bumps the temporal epoch: exactly one
+        // planning event runs, then steady ticks skip again.
+        let (mut st, rid) = running_state();
+        st.running.remove(rid);
+        call_start(&mut st, rid, "web_search", Some(30_000_000), 480, 0);
+        assert!(maybe_run_phase(&mut st, 1_000));
+        assert_eq!(st.metrics.counters.planner_runs, 1);
+        assert!(st.reqs[&rid].offload_evaluated);
+        for i in 0..10u64 {
+            assert!(!maybe_run_phase(&mut st, 2_000 + i));
+        }
+        assert_eq!(st.metrics.counters.planner_runs, 1);
     }
 }

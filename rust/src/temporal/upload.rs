@@ -60,15 +60,23 @@ pub fn upload_budget(snap: &PressureSnapshot) -> u32 {
 }
 
 /// Phase-3a: advance gradual reservations and fire ready uploads.
+/// Returns whether any reservation advanced or a transfer fired — the
+/// epoch gate uses this to back off instead of replanning every tick
+/// when urgent work exists but nothing can move.
 ///
 /// Convoy-deadlock discipline: at most one request system-wide may hold an
 /// *incomplete* reservation. Multiple half-reserved uploads would strand
 /// blocks none of them can use (each blocks the others' completion *and*
 /// all admissions) — the gradual schedule of Eq. 4 applies to the focused
 /// candidate; everyone else starts only once the pool has no partials.
-pub fn upload_phase(st: &mut ServeState, snap: &PressureSnapshot, now_us: u64) {
+pub fn upload_phase(
+    st: &mut ServeState,
+    snap: &PressureSnapshot,
+    now_us: u64,
+) -> bool {
+    let mut progressed = false;
     if st.offloaded_ids.is_empty() {
-        return; // common case: nothing CPU-resident, zero work
+        return progressed; // common case: nothing CPU-resident, zero work
     }
     // Collect candidates off the incremental offloaded index (id order):
     // CPU-resident caches whose urgency is positive, plus anyone already
@@ -155,6 +163,7 @@ pub fn upload_phase(st: &mut ServeState, snap: &PressureSnapshot, now_us: u64) {
                 let r = st.reqs.get_mut(&rid).unwrap();
                 r.upload_reserved.absorb(blocks);
                 r.upload_reserved_charged += reserved_charged;
+                progressed = true;
             }
         }
         // Fully reserved → fire the transfer.
@@ -164,6 +173,7 @@ pub fn upload_phase(st: &mut ServeState, snap: &PressureSnapshot, now_us: u64) {
         };
         if ready {
             issue_upload(st, rid, now_us);
+            progressed = true;
             if had_partial {
                 partial_outstanding -= 1;
             }
@@ -171,6 +181,38 @@ pub fn upload_phase(st: &mut ServeState, snap: &PressureSnapshot, now_us: u64) {
             partial_outstanding += 1;
         }
     }
+    progressed
+}
+
+/// Earliest absolute time the predictive-upload schedule has work: a
+/// partial reservation or an overdue tool means *now*; otherwise the
+/// soonest lead-window entry among CPU-resident caches; `u64::MAX` when
+/// nothing is offloaded. The epoch gate sleeps until this deadline —
+/// between temporal events, ticks before it skip the planner entirely.
+pub fn next_upload_due_us(st: &ServeState) -> u64 {
+    let mut due = u64::MAX;
+    for &rid in &st.offloaded_ids {
+        let r = &st.reqs[&rid];
+        if r.state != ReqState::Offloaded {
+            continue; // stale index entry (defensive)
+        }
+        if !r.upload_reserved.is_empty() {
+            return 0; // gradual reservation in progress: every tick
+        }
+        let Some(fc) = &r.fc else { continue };
+        if fc.tool_done {
+            return 0; // overdue: retry every tick until blocks appear
+        }
+        let n = r.cpu_blocks.len() as u32;
+        let lead =
+            lead_time_us(st, n, fc.predicted_end_us, fc.started_us);
+        // urgency() turns positive once remaining < lead, i.e. strictly
+        // after predicted_end − lead.
+        due = due.min(
+            fc.predicted_end_us.saturating_sub(lead).saturating_add(1),
+        );
+    }
+    due
 }
 
 /// Fire the H2D transfer for a fully reserved (or force-allocated) upload.

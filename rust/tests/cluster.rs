@@ -6,8 +6,13 @@ use tokencake::cluster::ClusterEngine;
 use tokencake::config::{
     ClusterConfig, Mode, PlacementPolicy, ServeConfig,
 };
+use tokencake::coordination::ReqState;
 use tokencake::graph::templates;
-use tokencake::workload::{ClusterWorkload, Dataset};
+use tokencake::kvcache::{AllocOutcome, Route};
+use tokencake::temporal;
+use tokencake::workload::{
+    ClusterWorkload, Dataset, SampledLengths, ToolSim,
+};
 
 fn cfg(
     shards: usize,
@@ -189,6 +194,100 @@ fn one_shard_cluster_matches_single_worker_shape() {
     assert_eq!(rep.migrations, 0, "nowhere to migrate with one shard");
     assert!(rep.aggregate.latency.percentile_s(99.0)
         >= rep.aggregate.latency.mean_s() * 0.5);
+}
+
+/// Hand-build a 2-shard cluster with `n` migratable stalled apps on
+/// shard 0 (40 GPU blocks each, 60 s predicted stalls) and shard 0's
+/// pool filled past the source threshold. Shard 1 is cold and empty.
+fn burst_cluster(n: usize, budget_blocks: u32) -> ClusterEngine {
+    let mut c = cfg(2, PlacementPolicy::RoundRobin, 0.05, 1);
+    c.migrate_src_usage = 0.50;
+    c.migrate_dst_usage = 0.60;
+    c.migrate_payback = 0.5;
+    c.migrate_batch_budget_blocks = budget_blocks;
+    let mut eng = ClusterEngine::new(c);
+    let g = templates::code_writer();
+    // Identical registration order on every shard (cluster contract).
+    for i in 0..2 {
+        eng.shard_mut(i).register_template(&g);
+    }
+    let tool_sim = ToolSim::new(0.0);
+    let scales = SampledLengths {
+        prompt_scale: 1.0,
+        gen_scale: 1.0,
+    };
+    for _ in 0..n {
+        let app = eng.shard_mut(0).inject_app(0, scales, &tool_sim);
+        let st = &mut eng.shard_mut(0).st;
+        let rid = st.apps[&app].node_req[0].unwrap();
+        st.waiting.retain(|&x| x != rid);
+        let AllocOutcome::Granted { blocks, .. } =
+            st.gpu.alloc(40, Route::Shared)
+        else {
+            panic!()
+        };
+        {
+            let r = st.reqs.get_mut(&rid).unwrap();
+            r.blocks = blocks;
+            r.state = ReqState::Running;
+        }
+        temporal::call_start(
+            st,
+            rid,
+            "web_search",
+            Some(60_000_000),
+            480,
+            0,
+        );
+        assert_eq!(st.reqs[&rid].state, ReqState::Stalled);
+    }
+    // Saturate shard 0 past the source threshold.
+    let st = &mut eng.shard_mut(0).st;
+    let total = st.gpu.total();
+    let used = total - st.gpu.free_blocks();
+    let fill = (total as f64 * 0.8) as u32 - used;
+    let AllocOutcome::Granted { .. } = st.gpu.alloc(fill, Route::Shared)
+    else {
+        panic!()
+    };
+    eng
+}
+
+/// The acceptance scenario: a pressure burst with ≥ 4 stalled apps
+/// drains via ONE bandwidth-capped multi-victim batch — a single
+/// planning event migrates the whole burst to the cold shard.
+#[test]
+fn pressure_burst_drains_in_one_multi_victim_batch() {
+    let mut eng = burst_cluster(5, 2048);
+    let moved = eng.rebalance_now();
+    assert_eq!(moved, 5, "one planning event must drain the burst");
+    let (migrations, blocks, batches, _landed, _dropped, max_window) =
+        eng.migration_stats();
+    assert_eq!(migrations, 5);
+    assert_eq!(blocks, 200);
+    assert_eq!(batches, 1, "the burst is one batch, not five windows");
+    assert_eq!(max_window, 200);
+    assert!(max_window <= 2048);
+    // The victims' blocks left through the pending-free D2H path.
+    assert_eq!(eng.shard(0).st.gpu.pending_free_blocks(), 200);
+}
+
+/// Partial-batch fallback: a tight interconnect budget bounds every
+/// window; the remainder of the burst goes out in later windows.
+#[test]
+fn migration_window_respects_interconnect_budget() {
+    let mut eng = burst_cluster(5, 100);
+    // 40-block victims against a 100-block window: two fit.
+    assert_eq!(eng.rebalance_now(), 2);
+    assert_eq!(eng.rebalance_now(), 2);
+    assert_eq!(eng.rebalance_now(), 1);
+    assert_eq!(eng.rebalance_now(), 0, "burst fully drained");
+    let (migrations, blocks, batches, _landed, _dropped, max_window) =
+        eng.migration_stats();
+    assert_eq!(migrations, 5);
+    assert_eq!(blocks, 200);
+    assert_eq!(batches, 3);
+    assert!(max_window <= 100, "window exceeded the budget");
 }
 
 /// Aggregate rollup is the sum of the shard bundles.

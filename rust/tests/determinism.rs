@@ -81,3 +81,46 @@ fn cluster_digest_depends_on_seed() {
     let b = cluster_digest(2, 43);
     assert_ne!(a, b);
 }
+
+/// The epoch gate is live on real workloads (the digest lines pin its
+/// exact run/skip counts across reruns and shard scales — see the
+/// cluster digest tests above): on a pressured mixed run, steady-state
+/// decode ticks dominate, so the planner must skip the majority of
+/// scheduling steps, and the gate must account for every step exactly
+/// once.
+#[test]
+fn epoch_gating_skips_majority_of_ticks() {
+    let serve = ServeConfig::default()
+        .with_mode(Mode::TokenCake)
+        .with_seed(42)
+        .with_gpu_mem_frac(0.05);
+    let cfg = ClusterConfig::default()
+        .with_serve(serve)
+        .with_shards(4)
+        .with_placement(PlacementPolicy::AgentAffinity);
+    let w = ClusterWorkload::mixed(
+        &[
+            (templates::code_writer(), 2.0),
+            (templates::deep_research(), 1.0),
+        ],
+        2.0,
+        16,
+    )
+    .with_dataset(Dataset::D1)
+    .with_tool_noise(0.25);
+    let rep = ClusterEngine::new(cfg).run(&w);
+    let c = &rep.aggregate.counters;
+    assert_eq!(
+        c.planner_runs + c.planner_skips,
+        c.sched_steps,
+        "every gated tick runs or skips, exactly once"
+    );
+    assert!(
+        c.planner_skips > c.planner_runs,
+        "planner ran {} of {} steps — epoch gating ineffective",
+        c.planner_runs,
+        c.sched_steps
+    );
+    // Spatial replans are window- and epoch-gated: far rarer than ticks.
+    assert!(c.spatial_plans + c.spatial_plan_skips < c.sched_steps / 10);
+}

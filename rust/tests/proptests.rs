@@ -447,6 +447,88 @@ fn prop_non_offload_modes_never_touch_cpu() {
 }
 
 // ---------------------------------------------------------------------
+// Batched multi-victim migration: conservation + bandwidth cap
+// ---------------------------------------------------------------------
+
+/// Random pressured cluster runs with an aggressive batched planner:
+/// every migrated block must either land on a destination pool or be
+/// accounted as a recompute drop, no planning window may exceed the
+/// interconnect budget, and every shard pool must conserve.
+#[test]
+fn prop_batched_migration_conserves_and_respects_budget() {
+    use tokencake::cluster::ClusterEngine;
+    use tokencake::config::{ClusterConfig, PlacementPolicy};
+    use tokencake::graph::templates;
+    use tokencake::workload::ClusterWorkload;
+
+    for seed in 0..6u64 {
+        let mut rng = Rng::new(seed + 2024);
+        let serve = ServeConfig::default()
+            .with_mode(Mode::TokenCake)
+            .with_seed(seed * 13 + 1)
+            .with_gpu_mem_frac(rng.range_f64(0.03, 0.08));
+        let shards = if seed % 2 == 0 { 2 } else { 4 };
+        let mut cfg = ClusterConfig::default()
+            .with_serve(serve)
+            .with_shards(shards)
+            .with_placement(PlacementPolicy::AgentAffinity);
+        // Overlapping bands + short windows so the planner fires often.
+        cfg.migrate_src_usage = 0.30;
+        cfg.migrate_dst_usage = 0.60;
+        cfg.migrate_payback = 0.5;
+        cfg.rebalance_interval_us = 50_000;
+        cfg.migrate_batch_budget_blocks =
+            rng.range_u64(64, 512) as u32;
+        let budget = cfg.migrate_batch_budget_blocks;
+        let w = ClusterWorkload::mixed(
+            &[
+                (templates::code_writer(), 2.0),
+                (templates::deep_research(), 1.0),
+            ],
+            2.0,
+            12,
+        )
+        .with_tool_noise(0.25);
+        let mut eng = ClusterEngine::new(cfg);
+        let rep = eng.run(&w);
+        assert!(!rep.truncated, "seed {seed}");
+        assert_eq!(rep.aggregate.apps_completed, 12, "seed {seed}");
+        // Conservation: sum of extents leaving sources == sum landing +
+        // accounted recompute drops (no transfer in flight after a
+        // completed run — a mid-flight app cannot finish).
+        assert_eq!(
+            rep.migration_blocks,
+            rep.migration_landed_blocks + rep.migration_drop_blocks,
+            "seed {seed}: migrated blocks neither landed nor dropped"
+        );
+        // The interconnect budget bounds every planning window.
+        assert!(
+            rep.max_window_migration_blocks <= budget as u64,
+            "seed {seed}: window {} exceeded budget {budget}",
+            rep.max_window_migration_blocks,
+        );
+        if rep.migrations > 0 {
+            assert!(rep.migration_batches >= 1, "seed {seed}");
+            assert!(
+                rep.migrations >= rep.migration_batches,
+                "seed {seed}"
+            );
+        }
+        // Shard pools drained completely.
+        for i in 0..rep.num_shards {
+            let st = &eng.shard(i).st;
+            assert_eq!(
+                st.gpu.free_blocks(),
+                st.gpu.total(),
+                "seed {seed} shard {i}: gpu leak"
+            );
+            assert_eq!(st.gpu.pending_free_blocks(), 0, "seed {seed}");
+            assert_eq!(st.cpu.used_blocks(), 0, "seed {seed}");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
 // Multi-GPU pool (§5 Multi-GPU Support): lockstep conservation
 // ---------------------------------------------------------------------
 
