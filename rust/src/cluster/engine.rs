@@ -30,15 +30,20 @@
 use std::collections::HashMap;
 
 use crate::config::ClusterConfig;
-use crate::coordination::{AppId, PressureSnapshot, ReqState, RequestId};
+use crate::coordination::{
+    AppId, PrefixEvent, PressureSnapshot, ReqState, RequestId,
+};
 use crate::engine::sim::{OrphanedToolFinish, SimEngine};
 use crate::graph::NodeKind;
-use crate::kvcache::{AllocOutcome, Direction, Route, TransferId};
+use crate::kvcache::{
+    AllocOutcome, Direction, PrefixKey, Route, TransferId,
+};
 use crate::metrics::MetricsBundle;
 use crate::sim::{Clock, EventQueue, Rng};
 use crate::temporal;
 use crate::workload::{ClusterWorkload, ToolSim};
 
+use super::prefix_dir::{self, PrefixDir};
 use super::router::Router;
 
 /// Shard id spacing for request/app ids: shard `i` issues ids from
@@ -55,6 +60,13 @@ enum CEv {
     IterDone { shard: usize },
     /// A cross-worker KV migration transfer lands.
     MigrationDone { id: u64 },
+    /// A prefix replica's interconnect copy lands on `shard`.
+    ReplicaDone {
+        shard: usize,
+        key: PrefixKey,
+        blocks: u32,
+        tokens: u32,
+    },
 }
 
 /// Where a migrated request currently answers tool finishes.
@@ -105,6 +117,11 @@ pub struct ClusterReport {
     /// Largest total block volume any single planning window issued —
     /// never exceeds the configured interconnect budget.
     pub max_window_migration_blocks: u64,
+    /// Prefix directory: hot remote prefixes copied into a spilled
+    /// shard's CPU tier, and the block volume those copies moved (drawn
+    /// from the same per-window interconnect budget as migration).
+    pub prefix_replications: u64,
+    pub prefix_replicated_blocks: u64,
     pub truncated: bool,
 }
 
@@ -135,7 +152,8 @@ impl ClusterReport {
         format!(
             "[cluster x{} {}] apps={} avg={:.1}s p99={:.1}s total={:.1}s \
              thpt={:.4}req/s eff_util={:.1}% migrations={} \
-             migrated_blocks={} drops={} batches={} planner={}/{}steps",
+             migrated_blocks={} drops={} batches={} pfx_remote_hits={} \
+             pfx_repl={} planner={}/{}steps",
             self.num_shards,
             self.policy,
             self.aggregate.apps_completed,
@@ -148,6 +166,8 @@ impl ClusterReport {
             self.migration_blocks,
             self.migration_drops,
             self.migration_batches,
+            self.aggregate.counters.prefix_hits_remote,
+            self.prefix_replications,
             self.aggregate.counters.planner_runs,
             self.aggregate.counters.sched_steps,
         )
@@ -184,7 +204,8 @@ impl ClusterReport {
         out.push_str(&format!(
             "policy={} shards={} truncated={} migrations={} \
              migration_blocks={} migration_drops={} batches={} \
-             landed={} dropped_blocks={} max_window={}\n",
+             landed={} dropped_blocks={} max_window={} pfx_repl={} \
+             pfx_repl_blocks={}\n",
             self.policy,
             self.num_shards,
             self.truncated,
@@ -195,6 +216,8 @@ impl ClusterReport {
             self.migration_landed_blocks,
             self.migration_drop_blocks,
             self.max_window_migration_blocks,
+            self.prefix_replications,
+            self.prefix_replicated_blocks,
         ));
         for (i, m) in self.shards.iter().enumerate() {
             out.push_str(&m.digest_line(&format!("shard{i}")));
@@ -226,6 +249,21 @@ pub struct ClusterEngine {
     migration_landed_blocks: u64,
     migration_drop_blocks: u64,
     max_window_migration_blocks: u64,
+    /// Cluster-wide prefix directory (federates the shard indexes).
+    prefix_dir: PrefixDir,
+    /// Directory active: `cfg.prefix_directory` ∧ a prefix-cache mode.
+    prefix_enabled: bool,
+    prefix_replications: u64,
+    prefix_replicated_blocks: u64,
+    /// One shared per-window interconnect ledger for *bulk* transfers:
+    /// migration batches and prefix replication draw on the same
+    /// `migrate_batch_budget_blocks`, windowed on the rebalance
+    /// interval, so their combined bulk traffic never exceeds the
+    /// budget. Per-request remote prefix *hits* are demand fetches
+    /// outside the bulk budget — each pays its own interconnect-scaled
+    /// wire time on the hitting request.
+    ic_window_start_us: u64,
+    ic_window_used: u32,
     /// Safety valve against policy livelock across the whole cluster.
     max_iterations: u64,
 }
@@ -234,6 +272,8 @@ impl ClusterEngine {
     pub fn new(cfg: ClusterConfig) -> Self {
         assert!(cfg.shards >= 1, "cluster needs at least one shard");
         let seed = cfg.serve.seed;
+        let prefix_enabled =
+            cfg.prefix_directory && cfg.serve.mode.prefix_cache();
         let shards: Vec<SimEngine> = (0..cfg.shards)
             .map(|i| {
                 let mut sc = cfg.serve.clone();
@@ -242,6 +282,9 @@ impl ClusterEngine {
                 sc.seed = Rng::new(seed).fold(0xC1A5 + i as u64).next_u64();
                 let mut e = SimEngine::new(sc);
                 e.set_id_base(i as u64 * ID_STRIDE);
+                // Shards publish their prefix lifecycle into the
+                // directory's event feed.
+                e.st.publish_prefix_events = prefix_enabled;
                 e
             })
             .collect();
@@ -269,6 +312,12 @@ impl ClusterEngine {
             migration_landed_blocks: 0,
             migration_drop_blocks: 0,
             max_window_migration_blocks: 0,
+            prefix_dir: PrefixDir::new(),
+            prefix_enabled,
+            prefix_replications: 0,
+            prefix_replicated_blocks: 0,
+            ic_window_start_us: 0,
+            ic_window_used: 0,
             max_iterations: 3_000_000 * n as u64,
             cfg,
         }
@@ -296,6 +345,10 @@ impl ClusterEngine {
     pub fn rebalance_now(&mut self) -> u64 {
         let before = self.migrations;
         let now = self.clock.now_us();
+        // Bypassing the interval also opens a fresh interconnect
+        // window, exactly as an on-schedule rebalance event would.
+        self.ic_window_start_us = now;
+        self.ic_window_used = 0;
         self.plan_migration(now);
         self.migrations - before
     }
@@ -339,6 +392,8 @@ impl ClusterEngine {
             for shard in self.shards.iter_mut() {
                 shard.register_template(&e.graph);
             }
+            self.prefix_dir
+                .register_template(&e.graph, &self.cfg.serve.profile);
         }
         self.router = Router::new(
             self.cfg.placement,
@@ -369,6 +424,7 @@ impl ClusterEngine {
                     self.forward_tool_finish(o, &tool_sim);
                 }
             }
+            self.sync_prefix_dir();
 
             // (b) Global events due now.
             while let Some(ev) = self.events.pop_due(now) {
@@ -376,7 +432,22 @@ impl ClusterEngine {
                     CEv::Arrival { seq } => {
                         let (_, template) = arrivals[seq as usize];
                         let snaps = self.snapshots();
-                        let shard = self.router.route(template, &snaps);
+                        let shard = if self.prefix_enabled {
+                            // Warm credit from actual resident prefix
+                            // blocks, not just the served-here bit.
+                            let warmth: Vec<f64> = (0..snaps.len())
+                                .map(|s| {
+                                    self.prefix_dir.warmth(template, s)
+                                })
+                                .collect();
+                            self.router.route_with_warmth(
+                                template,
+                                &snaps,
+                                Some(&warmth),
+                            )
+                        } else {
+                            self.router.route(template, &snaps)
+                        };
                         let mut rng =
                             self.rng.fold(1000 + seq as u64);
                         let scales = w.dataset.sample(&mut rng);
@@ -385,6 +456,12 @@ impl ClusterEngine {
                     }
                     CEv::IterDone { shard } => self.busy[shard] = false,
                     CEv::MigrationDone { id } => self.land_migration(id),
+                    CEv::ReplicaDone {
+                        shard,
+                        key,
+                        blocks,
+                        tokens,
+                    } => self.land_replica(shard, key, blocks, tokens),
                 }
             }
 
@@ -414,6 +491,7 @@ impl ClusterEngine {
                     self.events.push(now + dt, CEv::IterDone { shard: i });
                 }
             }
+            self.sync_prefix_dir();
 
             // (e) Advance the shared clock to the next event anywhere.
             let mut t_next = self.events.peek_time();
@@ -471,7 +549,172 @@ impl ClusterEngine {
             migration_landed_blocks: self.migration_landed_blocks,
             migration_drop_blocks: self.migration_drop_blocks,
             max_window_migration_blocks: self.max_window_migration_blocks,
+            prefix_replications: self.prefix_replications,
+            prefix_replicated_blocks: self.prefix_replicated_blocks,
             truncated,
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Cluster prefix directory
+    // ------------------------------------------------------------------
+
+    /// Drain every shard's prefix-event log into the directory, clearing
+    /// dangling remote pointers, broadcasting fresh pointers, and
+    /// applying the replication policy. Shards are drained in index
+    /// order and events replayed in publication order, so the directory
+    /// state is deterministic.
+    fn sync_prefix_dir(&mut self) {
+        if !self.prefix_enabled {
+            return;
+        }
+        for i in 0..self.shards.len() {
+            let events = self.shards[i].st.drain_prefix_events();
+            for ev in events {
+                match ev {
+                    PrefixEvent::RemoteHit { key } => {
+                        self.prefix_dir.apply_event(i, &ev);
+                        self.maybe_replicate(i, key);
+                    }
+                    PrefixEvent::Inserted {
+                        key,
+                        blocks,
+                        tokens,
+                        ..
+                    } => {
+                        self.prefix_dir.apply_event(i, &ev);
+                        // A new real copy exists: every cold shard can
+                        // now hit it remotely — seed interconnect-priced
+                        // pointers cluster-wide (free metadata).
+                        self.broadcast_pointers(key, blocks, tokens);
+                    }
+                    PrefixEvent::Removed { key } => {
+                        for s in self.prefix_dir.apply_event(i, &ev) {
+                            prefix_dir::clear_pointer(
+                                &mut self.shards[s].st,
+                                key,
+                            );
+                        }
+                    }
+                    PrefixEvent::Relocated { .. } => {
+                        self.prefix_dir.apply_event(i, &ev);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Seed a remote pointer for `key` on every shard that holds neither
+    /// a real copy nor a pointer yet.
+    fn broadcast_pointers(&mut self, key: PrefixKey, blocks: u32, tokens: u32) {
+        let now = self.clock.now_us();
+        for s in 0..self.shards.len() {
+            if self.prefix_dir.holds_local(key, s)
+                || self.prefix_dir.has_pointer(key, s)
+                || !self.prefix_dir.has_holder_other_than(key, s)
+            {
+                continue;
+            }
+            if prefix_dir::seed_pointer(
+                &mut self.shards[s].st,
+                key,
+                blocks,
+                tokens,
+                self.cfg.interconnect_factor,
+                now,
+            ) {
+                self.prefix_dir.note_pointer(s, key);
+            }
+        }
+    }
+
+    /// Open a fresh interconnect window when the current one expired.
+    fn ic_window_roll(&mut self, now: u64) {
+        if now >= self.ic_window_start_us + self.cfg.rebalance_interval_us
+        {
+            self.ic_window_start_us = now;
+            self.ic_window_used = 0;
+        }
+    }
+
+    /// Roll the shared interconnect window forward and try to take
+    /// `blocks` from it. Migration batches and prefix replication —
+    /// the *bulk* interconnect users — spend from the same per-window
+    /// budget. (Per-request remote-hit fetches are demand traffic: they
+    /// pay wire latency on the requesting app instead of drawing on the
+    /// bulk budget.)
+    fn ic_window_take(&mut self, blocks: u32, now: u64) -> bool {
+        self.ic_window_roll(now);
+        if self.ic_window_used.saturating_add(blocks)
+            > self.cfg.migrate_batch_budget_blocks
+        {
+            return false;
+        }
+        self.ic_window_used += blocks;
+        true
+    }
+
+    /// Replication policy: once a prefix's remote-hit count crosses the
+    /// threshold, schedule a copy into the hitting shard's CPU tier. The
+    /// copy pays real wire time (interconnect-scaled D2H+H2D, landing as
+    /// a [`CEv::ReplicaDone`] event) and draws on the same per-window
+    /// interconnect budget as the migration batcher, so replication can
+    /// never starve KV migration bandwidth — nor exceed it.
+    fn maybe_replicate(&mut self, shard: usize, key: PrefixKey) {
+        if self.prefix_dir.remote_hits(key)
+            < self.cfg.prefix_replicate_threshold
+            || self.prefix_dir.is_replicating(shard, key)
+        {
+            return;
+        }
+        let Some((blocks, tokens)) = self.prefix_dir.entry_size(key)
+        else {
+            return;
+        };
+        let now = self.clock.now_us();
+        if !self.ic_window_take(blocks, now) {
+            return; // window budget exhausted; retry on a later hit
+        }
+        let profile = &self.cfg.serve.profile;
+        let cost_us = ((profile.offload_us(blocks)
+            + profile.upload_us(blocks)) as f64
+            * self.cfg.interconnect_factor) as u64;
+        self.prefix_dir.set_replicating(shard, key);
+        self.events.push(
+            now + cost_us,
+            CEv::ReplicaDone {
+                shard,
+                key,
+                blocks,
+                tokens,
+            },
+        );
+    }
+
+    /// The replica's interconnect copy landed: materialize it in the
+    /// shard's CPU tier (upgrading the remote pointer). A copy that can
+    /// no longer land — the pointer was invalidated mid-flight, a real
+    /// local copy appeared, or the CPU tier has no room — is dropped
+    /// without effect; later remote hits may re-trigger.
+    fn land_replica(
+        &mut self,
+        shard: usize,
+        key: PrefixKey,
+        blocks: u32,
+        tokens: u32,
+    ) {
+        self.prefix_dir.clear_replicating(shard, key);
+        let now = self.clock.now_us();
+        if prefix_dir::seed_replica(
+            &mut self.shards[shard].st,
+            key,
+            blocks,
+            tokens,
+            now,
+        ) {
+            self.prefix_replications += 1;
+            self.prefix_replicated_blocks += blocks as u64;
+            self.prefix_dir.note_replica(shard, key);
         }
     }
 
@@ -563,7 +806,13 @@ impl ClusterEngine {
         sources.sort_by(|&a, &b| {
             usages[b].total_cmp(&usages[a]).then(a.cmp(&b))
         });
-        let mut budget = self.cfg.migrate_batch_budget_blocks;
+        // Spend what the shared interconnect window has left (prefix
+        // replication draws on the same budget between planning events).
+        self.ic_window_roll(now);
+        let mut budget = self
+            .cfg
+            .migrate_batch_budget_blocks
+            .saturating_sub(self.ic_window_used);
         let mut victims = 0u64;
         let mut window_blocks = 0u64;
         for src in sources {
@@ -610,6 +859,7 @@ impl ClusterEngine {
                 );
                 room[dst] -= blocks;
                 budget -= blocks;
+                self.ic_window_used += blocks;
                 victims += 1;
                 window_blocks += blocks as u64;
             }

@@ -21,6 +21,13 @@
 //!                        └─────────┘ cross-worker KV migration of
 //!                          stalled agents (pending-free + ledger on the
 //!                          source, re-allocation on the destination)
+//!
+//!                    ┌────────────────────────────────────────┐
+//!                    │ PrefixDir: federated prefix residency  │
+//!                    │ shard event feeds → warmth credit for  │
+//!                    │ routing, remote-pointer seeding, hot-  │
+//!                    │ prefix replication (budget-bounded)    │
+//!                    └────────────────────────────────────────┘
 //! ```
 //!
 //! Everything runs on **one shared event clock** ([`ClusterEngine`] owns
@@ -46,9 +53,11 @@
 //! [`PressureSnapshot`]: crate::coordination::PressureSnapshot
 
 mod engine;
+pub mod prefix_dir;
 mod router;
 
 pub use engine::{ClusterEngine, ClusterReport};
+pub use prefix_dir::PrefixDir;
 pub use router::Router;
 
 #[cfg(test)]
@@ -150,9 +159,19 @@ mod tests {
         assert!(!rep.truncated);
         for i in 0..2 {
             let st = &eng.shard(i).st;
-            assert_eq!(st.gpu.free_blocks(), st.gpu.total(), "shard {i}");
+            // Every block is either free or pinned by the shard's prefix
+            // index; nothing leaks to dead requests.
+            assert_eq!(
+                st.gpu.free_blocks() + st.prefix.resident_gpu_blocks(),
+                st.gpu.total(),
+                "shard {i}"
+            );
             assert_eq!(st.gpu.pending_free_blocks(), 0, "shard {i}");
-            assert_eq!(st.cpu.used_blocks(), 0, "shard {i}");
+            assert_eq!(
+                st.cpu.used_blocks(),
+                st.prefix.resident_cpu_blocks(),
+                "shard {i}"
+            );
         }
     }
 }

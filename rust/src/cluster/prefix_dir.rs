@@ -1,0 +1,456 @@
+//! Cluster prefix directory: a federation of the per-shard
+//! [`PrefixIndex`]es.
+//!
+//! Each shard's index is honest about its own residency (owned backing,
+//! see `kvcache::prefix`), but warm only for the apps its shard served.
+//! The directory lifts that knowledge to cluster scope:
+//!
+//! * **Event feed** — shards publish every index lifecycle mutation
+//!   (insert / evict / relocate / remote hit) through
+//!   [`ServeState::drain_prefix_events`]; the cluster engine drains the
+//!   logs after every shard step and replays them here, so the directory
+//!   is an eventually-exact mirror of the per-shard indexes on the
+//!   shared clock.
+//! * **Routing warmth** — `AgentAffinity` scores a shard's warmth for a
+//!   template from the *actual resident prefix blocks* the directory
+//!   tracks (GPU full weight, CPU half, remote pointer a quarter), not
+//!   just the boolean served-here bit.
+//! * **Remote hits** — when an app spills to a cold shard, the engine
+//!   seeds *remote pointers* (backing-less entries priced at the
+//!   interconnect factor) for every prefix some other shard holds. An
+//!   admission hit on a pointer charges the interconnect-scaled H2D debt
+//!   through the migration ledger instead of re-prefilling.
+//! * **Bounded replication** — once a prefix's remote-hit count crosses
+//!   [`crate::config::ClusterConfig::prefix_replicate_threshold`], the
+//!   directory copies it into the hitting shard's CPU tier (local price
+//!   afterwards), drawing on the same per-window interconnect budget as
+//!   the migration batch planner.
+//! * **Coherence** — when the last real holder of a prefix evicts it,
+//!   every outstanding pointer is invalidated at the next event-feed
+//!   sync, so a remote hit is only ever issued against a copy the
+//!   directory saw live as of the previous sync (staleness is bounded
+//!   by one drain cycle of the shared event loop). A hit that is
+//!   already in flight when the source evicts still completes: like a
+//!   migration leg, the transfer models data captured on the wire at
+//!   issue time, not a live read of the source blocks.
+//!
+//! [`PrefixIndex`]: crate::kvcache::PrefixIndex
+
+use std::collections::{BTreeMap, BTreeSet, HashMap};
+
+use crate::config::ModelProfile;
+use crate::coordination::{PrefixEvent, ServeState};
+use crate::graph::{AppGraph, NodeKind};
+use crate::kvcache::{PrefixBacking, PrefixKey, PrefixLocation};
+
+/// Residency weights for the warmth credit.
+const W_GPU: f64 = 1.0;
+const W_CPU: f64 = 0.5;
+const W_POINTER: f64 = 0.25;
+
+#[derive(Debug, Default, Clone)]
+struct DirEntry {
+    /// Shards holding a real local copy (GPU backing or CPU replica).
+    holders: BTreeMap<usize, PrefixLocation>,
+    /// Shards holding a directory-seeded remote pointer.
+    pointers: BTreeSet<usize>,
+    /// Shards with a replica copy in flight on the interconnect.
+    replicating: BTreeSet<usize>,
+    /// Remote-pointer hits since the last replication.
+    remote_hits: u32,
+    blocks: u32,
+    tokens: u32,
+}
+
+/// The directory: key → cluster-wide residency, plus the per-template
+/// key sets the router and the pointer seeder consult.
+#[derive(Debug, Default, Clone)]
+pub struct PrefixDir {
+    /// Per template: `(key, blocks, tokens)` of every shared agent
+    /// prefix, key-sorted (deterministic seeding/replication order).
+    template_keys: Vec<Vec<(PrefixKey, u32, u32)>>,
+    entries: HashMap<PrefixKey, DirEntry>,
+}
+
+impl PrefixDir {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register a template's prefix keys (same registration order as the
+    /// shards', so template indices agree cluster-wide).
+    pub fn register_template(
+        &mut self,
+        g: &AppGraph,
+        profile: &ModelProfile,
+    ) -> usize {
+        let mut keys: Vec<(PrefixKey, u32, u32)> = Vec::new();
+        for node in g.nodes() {
+            if let NodeKind::Agent(a) = &node.kind {
+                if a.shared_prefix == 0 {
+                    continue;
+                }
+                let key = PrefixKey::of_parts(
+                    &g.name,
+                    &a.agent_type,
+                    a.shared_prefix,
+                );
+                let blocks = profile.blocks_for_tokens(a.shared_prefix);
+                if !keys.iter().any(|(k, _, _)| *k == key) {
+                    keys.push((key, blocks, a.shared_prefix));
+                }
+            }
+        }
+        keys.sort_by_key(|(k, _, _)| *k);
+        self.template_keys.push(keys);
+        self.template_keys.len() - 1
+    }
+
+    pub fn template_keys(&self, template: usize) -> &[(PrefixKey, u32, u32)] {
+        &self.template_keys[template]
+    }
+
+    /// Replay one shard-published lifecycle event. Returns the shards
+    /// whose remote pointers became dangling (last real holder gone) —
+    /// the engine must clear those pointers from the shard indexes.
+    pub fn apply_event(
+        &mut self,
+        shard: usize,
+        ev: &PrefixEvent,
+    ) -> Vec<usize> {
+        match *ev {
+            PrefixEvent::Inserted {
+                key,
+                blocks,
+                tokens,
+                location,
+            } => {
+                let e = self.entries.entry(key).or_default();
+                e.blocks = blocks;
+                e.tokens = tokens;
+                e.holders.insert(shard, location);
+                e.pointers.remove(&shard);
+                Vec::new()
+            }
+            PrefixEvent::Relocated { key, location } => {
+                if let Some(e) = self.entries.get_mut(&key) {
+                    e.holders.insert(shard, location);
+                }
+                Vec::new()
+            }
+            PrefixEvent::Removed { key } => {
+                let Some(e) = self.entries.get_mut(&key) else {
+                    return Vec::new();
+                };
+                e.holders.remove(&shard);
+                if e.holders.is_empty() {
+                    // Last real copy is gone: every pointer dangles.
+                    let orphaned: Vec<usize> =
+                        std::mem::take(&mut e.pointers)
+                            .into_iter()
+                            .collect();
+                    e.remote_hits = 0;
+                    orphaned
+                } else {
+                    Vec::new()
+                }
+            }
+            PrefixEvent::RemoteHit { key } => {
+                if let Some(e) = self.entries.get_mut(&key) {
+                    e.remote_hits += 1;
+                }
+                Vec::new()
+            }
+        }
+    }
+
+    /// Warm credit of `shard` for `template`, in [0,1]: resident prefix
+    /// blocks weighted by tier over the template's total prefix blocks.
+    pub fn warmth(&self, template: usize, shard: usize) -> f64 {
+        let keys = &self.template_keys[template];
+        let total: u32 = keys.iter().map(|(_, b, _)| *b).sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let mut score = 0.0;
+        for (key, blocks, _) in keys {
+            let Some(e) = self.entries.get(key) else { continue };
+            match e.holders.get(&shard) {
+                Some(PrefixLocation::Gpu) => {
+                    score += W_GPU * *blocks as f64
+                }
+                Some(PrefixLocation::Cpu) => {
+                    score += W_CPU * *blocks as f64
+                }
+                Some(PrefixLocation::Remote) => {}
+                None => {
+                    if e.pointers.contains(&shard) {
+                        score += W_POINTER * *blocks as f64;
+                    }
+                }
+            }
+        }
+        (score / total as f64).min(1.0)
+    }
+
+    pub fn holds_local(&self, key: PrefixKey, shard: usize) -> bool {
+        self.entries
+            .get(&key)
+            .map(|e| e.holders.contains_key(&shard))
+            .unwrap_or(false)
+    }
+
+    pub fn has_pointer(&self, key: PrefixKey, shard: usize) -> bool {
+        self.entries
+            .get(&key)
+            .map(|e| e.pointers.contains(&shard))
+            .unwrap_or(false)
+    }
+
+    /// Does any *other* shard hold a real copy a pointer could read?
+    pub fn has_holder_other_than(
+        &self,
+        key: PrefixKey,
+        shard: usize,
+    ) -> bool {
+        self.entries
+            .get(&key)
+            .map(|e| e.holders.keys().any(|&s| s != shard))
+            .unwrap_or(false)
+    }
+
+    pub fn remote_hits(&self, key: PrefixKey) -> u32 {
+        self.entries.get(&key).map(|e| e.remote_hits).unwrap_or(0)
+    }
+
+    pub fn entry_size(&self, key: PrefixKey) -> Option<(u32, u32)> {
+        self.entries.get(&key).map(|e| (e.blocks, e.tokens))
+    }
+
+    /// Record a directory-seeded pointer on `shard`.
+    pub fn note_pointer(&mut self, shard: usize, key: PrefixKey) {
+        if let Some(e) = self.entries.get_mut(&key) {
+            e.pointers.insert(shard);
+        }
+    }
+
+    /// Is a replica copy already in flight toward `shard`?
+    pub fn is_replicating(&self, shard: usize, key: PrefixKey) -> bool {
+        self.entries
+            .get(&key)
+            .map(|e| e.replicating.contains(&shard))
+            .unwrap_or(false)
+    }
+
+    pub fn set_replicating(&mut self, shard: usize, key: PrefixKey) {
+        if let Some(e) = self.entries.get_mut(&key) {
+            e.replicating.insert(shard);
+        }
+    }
+
+    pub fn clear_replicating(&mut self, shard: usize, key: PrefixKey) {
+        if let Some(e) = self.entries.get_mut(&key) {
+            e.replicating.remove(&shard);
+        }
+    }
+
+    /// Record a completed replication: the shard is now a real CPU
+    /// holder and its pointer (if any) is upgraded.
+    pub fn note_replica(&mut self, shard: usize, key: PrefixKey) {
+        if let Some(e) = self.entries.get_mut(&key) {
+            e.holders.insert(shard, PrefixLocation::Cpu);
+            e.pointers.remove(&shard);
+            e.remote_hits = 0;
+        }
+    }
+}
+
+// ----------------------------------------------------------------------
+// Shard-side seeding (the only PrefixIndex::insert sites outside
+// `spatial` — CI enforces that lifecycle ownership set)
+// ----------------------------------------------------------------------
+
+/// Seed a backing-less remote pointer into a spilled shard's index so
+/// admission can hit the prefix at interconnect price. No-op when the
+/// shard already has any entry for the key.
+pub fn seed_pointer(
+    st: &mut ServeState,
+    key: PrefixKey,
+    blocks: u32,
+    tokens: u32,
+    interconnect_factor: f64,
+    now_us: u64,
+) -> bool {
+    if st.prefix.location_of(key).is_some() {
+        return false;
+    }
+    st.prefix.insert(
+        key,
+        blocks,
+        tokens,
+        PrefixBacking::Remote,
+        interconnect_factor.max(1.0),
+        now_us,
+    );
+    st.note_prefix_mutation();
+    true
+}
+
+/// Replicate a hot remote prefix into this shard's CPU tier: later hits
+/// pay the local H2D price instead of the interconnect. The replica
+/// displaces the shard's remote pointer. Fails (false) when the mode has
+/// no CPU tier, the entry is pinned, or the CPU pool cannot make room
+/// even after dropping colder cached prefixes.
+pub fn seed_replica(
+    st: &mut ServeState,
+    key: PrefixKey,
+    blocks: u32,
+    tokens: u32,
+    now_us: u64,
+) -> bool {
+    if !st.cfg.mode.prefix_cpu_tier() || st.prefix.is_pinned(key) {
+        return false;
+    }
+    // Only a remote pointer upgrades: a real local copy that appeared
+    // since the remote hit (a finishing request recorded one) is at
+    // least as good as the replica would be.
+    if st.prefix.location_of(key) != Some(PrefixLocation::Remote) {
+        return false;
+    }
+    if st.cpu.free_blocks() < blocks
+        && !crate::spatial::reclaim_prefix_cpu(st, blocks)
+    {
+        return false;
+    }
+    let Some(cpu) = st.cpu.alloc(blocks) else {
+        return false;
+    };
+    match st.prefix.insert(
+        key,
+        blocks,
+        tokens,
+        PrefixBacking::Cpu(cpu),
+        1.0,
+        now_us,
+    ) {
+        Some(PrefixBacking::Cpu(b)) => st.cpu.release(b),
+        Some(PrefixBacking::Gpu(b)) => st.gpu.free(b, 0, None),
+        _ => {}
+    }
+    st.note_prefix_mutation();
+    true
+}
+
+/// Drop a dangling remote pointer (its last real holder evicted).
+pub fn clear_pointer(st: &mut ServeState, key: PrefixKey) -> bool {
+    if st.prefix.remove_pointer(key) {
+        st.note_prefix_mutation();
+        true
+    } else {
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::templates;
+
+    fn dir_with_template() -> (PrefixDir, usize, Vec<(PrefixKey, u32, u32)>) {
+        let mut dir = PrefixDir::new();
+        let profile = ModelProfile::qwen14b_a100();
+        let t = dir.register_template(&templates::code_writer(), &profile);
+        let keys = dir.template_keys(t).to_vec();
+        (dir, t, keys)
+    }
+
+    #[test]
+    fn template_registration_collects_sorted_prefix_keys() {
+        let (_, _, keys) = dir_with_template();
+        assert!(!keys.is_empty(), "code-writer has shared prefixes");
+        for w in keys.windows(2) {
+            assert!(w[0].0 < w[1].0, "keys must be sorted and distinct");
+        }
+        for (_, blocks, tokens) in &keys {
+            assert!(*blocks > 0 && *tokens > 0);
+        }
+    }
+
+    #[test]
+    fn events_track_holders_and_orphan_pointers() {
+        let (mut dir, t, keys) = dir_with_template();
+        let (key, blocks, tokens) = keys[0];
+        let ins = PrefixEvent::Inserted {
+            key,
+            blocks,
+            tokens,
+            location: PrefixLocation::Gpu,
+        };
+        assert!(dir.apply_event(0, &ins).is_empty());
+        assert!(dir.holds_local(key, 0));
+        assert!(dir.has_holder_other_than(key, 1));
+        assert!(dir.warmth(t, 0) > 0.0);
+        assert_eq!(dir.warmth(t, 1), 0.0);
+        // A pointer on shard 1; the GPU holder evicts → pointer orphaned.
+        dir.note_pointer(1, key);
+        assert!(dir.has_pointer(key, 1));
+        let orphaned =
+            dir.apply_event(0, &PrefixEvent::Removed { key });
+        assert_eq!(orphaned, vec![1]);
+        assert!(!dir.holds_local(key, 0));
+        assert!(!dir.has_pointer(key, 1));
+    }
+
+    #[test]
+    fn warmth_orders_gpu_over_cpu_over_pointer() {
+        let (mut dir, t, keys) = dir_with_template();
+        for &(key, blocks, tokens) in &keys {
+            dir.apply_event(
+                0,
+                &PrefixEvent::Inserted {
+                    key,
+                    blocks,
+                    tokens,
+                    location: PrefixLocation::Gpu,
+                },
+            );
+            dir.apply_event(
+                1,
+                &PrefixEvent::Inserted {
+                    key,
+                    blocks,
+                    tokens,
+                    location: PrefixLocation::Cpu,
+                },
+            );
+            dir.note_pointer(2, key);
+        }
+        let (g, c, p) =
+            (dir.warmth(t, 0), dir.warmth(t, 1), dir.warmth(t, 2));
+        assert!(g > c && c > p && p > 0.0, "{g} {c} {p}");
+        assert_eq!(dir.warmth(t, 3), 0.0);
+    }
+
+    #[test]
+    fn remote_hits_accumulate_and_reset_on_replica() {
+        let (mut dir, _, keys) = dir_with_template();
+        let (key, blocks, tokens) = keys[0];
+        dir.apply_event(
+            0,
+            &PrefixEvent::Inserted {
+                key,
+                blocks,
+                tokens,
+                location: PrefixLocation::Gpu,
+            },
+        );
+        dir.note_pointer(1, key);
+        dir.apply_event(1, &PrefixEvent::RemoteHit { key });
+        dir.apply_event(1, &PrefixEvent::RemoteHit { key });
+        assert_eq!(dir.remote_hits(key), 2);
+        dir.note_replica(1, key);
+        assert_eq!(dir.remote_hits(key), 0);
+        assert!(dir.holds_local(key, 1));
+        assert!(!dir.has_pointer(key, 1));
+    }
+}

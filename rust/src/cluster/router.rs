@@ -83,11 +83,29 @@ impl Router {
 
     /// Route one application of `template`, given the current per-shard
     /// pressure snapshots. Updates the policy's internal state (cursor /
-    /// warm sets).
+    /// warm sets). Without a prefix directory, a warm bit earns the full
+    /// affinity credit.
     pub fn route(
         &mut self,
         template: usize,
         snaps: &[PressureSnapshot],
+    ) -> usize {
+        self.route_with_warmth(template, snaps, None)
+    }
+
+    /// Route with real residency warmth from the cluster prefix
+    /// directory: `warmth[i]` ∈ [0,1] is shard `i`'s resident-prefix
+    /// fraction for this template. The affinity credit blends the
+    /// boolean served-here bit (a quarter — forecaster training and
+    /// reserved-quota history are real warmth the index can't see) with
+    /// the directory's resident-block fraction (three quarters), so a
+    /// shard whose cache was since evicted no longer earns full credit
+    /// and a shard holding a replica earns some.
+    pub fn route_with_warmth(
+        &mut self,
+        template: usize,
+        snaps: &[PressureSnapshot],
+        warmth: Option<&[f64]>,
     ) -> usize {
         debug_assert_eq!(snaps.len(), self.shards);
         let pick = match self.policy {
@@ -109,12 +127,20 @@ impl Router {
                 let mut best_score = f64::INFINITY;
                 for (i, s) in snaps.iter().enumerate() {
                     let load = Self::load_score(s);
-                    let warm = self.warm[i]
+                    let warm_bit = self.warm[i]
                         .get(template)
                         .copied()
                         .unwrap_or(false);
-                    let bonus = if warm && load < self.spill_load {
-                        AFFINITY_BONUS
+                    let credit = match warmth {
+                        Some(w) => {
+                            0.25 * (warm_bit as u8 as f64)
+                                + 0.75 * w[i].clamp(0.0, 1.0)
+                        }
+                        None => warm_bit as u8 as f64,
+                    };
+                    let bonus = if credit > 0.0 && load < self.spill_load
+                    {
+                        AFFINITY_BONUS * credit
                     } else {
                         0.0
                     };
@@ -207,6 +233,25 @@ mod tests {
         r2.mark_warm(1, 0);
         let saturated = vec![snap(0.7, 0, 0), snap(0.85, 0, 0)];
         assert_eq!(r2.route(0, &saturated), 0);
+    }
+
+    #[test]
+    fn directory_warmth_scales_the_affinity_credit() {
+        // Both shards carry the warm bit, but shard 1's cache was
+        // evicted (warmth 0) while shard 0 still holds the blocks
+        // (warmth 1): real residency wins despite slightly higher load.
+        let mut r = Router::new(PlacementPolicy::AgentAffinity, 2, 1, 0.8);
+        r.mark_warm(0, 0);
+        r.mark_warm(1, 0);
+        let snaps = vec![snap(0.30, 0, 0), snap(0.22, 0, 0)];
+        let pick = r.route_with_warmth(0, &snaps, Some(&[1.0, 0.0]));
+        assert_eq!(pick, 0, "resident blocks must outweigh the stale bit");
+        // With boolean-only warmth the lower-loaded shard would win.
+        let mut r2 =
+            Router::new(PlacementPolicy::AgentAffinity, 2, 1, 0.8);
+        r2.mark_warm(0, 0);
+        r2.mark_warm(1, 0);
+        assert_eq!(r2.route(0, &snaps), 1);
     }
 
     #[test]

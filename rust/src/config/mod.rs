@@ -91,6 +91,13 @@ impl Mode {
     pub fn prefix_cache(&self) -> bool {
         matches!(self, Mode::VllmPrefix | Mode::Mooncake | Mode::TokenCake)
     }
+
+    /// Does this mode keep a CPU tier for the prefix cache? (vLLM-Prefix
+    /// has no host KV store — reclaimed prefixes are dropped, not
+    /// demoted; Mooncake and TokenCake demote to CPU blocks.)
+    pub fn prefix_cpu_tier(&self) -> bool {
+        matches!(self, Mode::Mooncake | Mode::TokenCake)
+    }
 }
 
 /// Waiting-request selection policy for the opportunistic gate (§4.2, Fig 15).
@@ -324,6 +331,16 @@ pub struct ClusterConfig {
     /// event migrates a multi-victim batch up to this large, with a
     /// partial-batch fallback when a victim no longer fits.
     pub migrate_batch_budget_blocks: u32,
+    /// Federate the per-shard prefix indexes through the cluster prefix
+    /// directory: shards publish insert/evict/relocate events, routing
+    /// reads real resident-block warmth, and spilled apps hit remote
+    /// prefixes at interconnect price instead of re-prefilling.
+    pub prefix_directory: bool,
+    /// Remote hits on one prefix before the directory replicates it to
+    /// the hitting shard's CPU tier (local price afterwards). Replica
+    /// traffic draws on the same per-window interconnect budget as
+    /// migration batches.
+    pub prefix_replicate_threshold: u32,
 }
 
 impl Default for ClusterConfig {
@@ -340,6 +357,8 @@ impl Default for ClusterConfig {
             rebalance_interval_us: 250_000,
             affinity_spill_load: 0.80,
             migrate_batch_budget_blocks: 2048,
+            prefix_directory: true,
+            prefix_replicate_threshold: 2,
         }
     }
 }
@@ -424,6 +443,17 @@ impl ClusterConfig {
             }
             "migrate_batch_budget_blocks" => {
                 self.migrate_batch_budget_blocks =
+                    value.parse().map_err(|_| bad())?
+            }
+            "prefix_directory" => {
+                self.prefix_directory = match value {
+                    "true" | "on" | "1" => true,
+                    "false" | "off" | "0" => false,
+                    _ => return Err(bad()),
+                }
+            }
+            "prefix_replicate_threshold" => {
+                self.prefix_replicate_threshold =
                     value.parse().map_err(|_| bad())?
             }
             _ => {
@@ -617,6 +647,11 @@ mod tests {
         assert!(!Mode::OffloadOnly.agent_aware());
         assert!(Mode::AgentOnly.reserves_memory());
         assert!(!Mode::AgentOnly.fc_offload());
+        // Prefix CPU tier: only the modes with a host KV store demote.
+        assert!(Mode::TokenCake.prefix_cpu_tier());
+        assert!(Mode::Mooncake.prefix_cpu_tier());
+        assert!(!Mode::VllmPrefix.prefix_cpu_tier());
+        assert!(!Mode::Vllm.prefix_cpu_tier());
     }
 
     #[test]
@@ -673,12 +708,16 @@ mod tests {
         c.apply_kv("cluster", "placement", "least-loaded").unwrap();
         c.apply_kv("cluster", "migration", "off").unwrap();
         c.apply_kv("cluster", "interconnect_factor", "3.5").unwrap();
+        c.apply_kv("cluster", "prefix_directory", "off").unwrap();
+        c.apply_kv("cluster", "prefix_replicate_threshold", "5").unwrap();
         // Non-cluster sections fall through to the per-shard config.
         c.apply_kv("serve", "mode", "vllm").unwrap();
         assert_eq!(c.shards, 4);
         assert_eq!(c.placement, PlacementPolicy::LeastLoaded);
         assert!(!c.migration);
         assert_eq!(c.interconnect_factor, 3.5);
+        assert!(!c.prefix_directory);
+        assert_eq!(c.prefix_replicate_threshold, 5);
         assert_eq!(c.serve.mode, Mode::Vllm);
         assert!(c.apply_kv("cluster", "shards", "x").is_err());
         assert!(c.apply_kv("cluster", "nope", "1").is_err());

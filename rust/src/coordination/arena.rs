@@ -409,6 +409,7 @@ mod tests {
             reserved_charged: 0,
             cpu_blocks: Vec::new(),
             remaining_prefill: 1,
+            prefix_xfer: None,
             fc: None,
             offload_evaluated: false,
             migrations: 0,

@@ -38,7 +38,7 @@ pub use request::{
     AppId, AppInst, FcRt, PhaseRt, ReqState, Request, RequestId,
 };
 pub use state::{
-    MigratedApp, SchedEpochs, SchedScratch, ServeState,
+    MigratedApp, PrefixEvent, SchedEpochs, SchedScratch, ServeState,
     ThroughputEstimator, TypeRegistry,
 };
 

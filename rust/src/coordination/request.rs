@@ -6,7 +6,7 @@
 //! tracks a DAG of such requests plus standalone function nodes.
 
 use crate::graph::{CallSpec, FuncKind, NodeId};
-use crate::kvcache::{AgentTypeId, BlockSet, CpuBlockId};
+use crate::kvcache::{AgentTypeId, BlockSet, CpuBlockId, TransferId};
 use crate::workload::SampledLengths;
 
 /// Unique request id.
@@ -146,6 +146,11 @@ pub struct Request {
     pub cpu_blocks: Vec<CpuBlockId>,
     /// Prefill tokens still owed before decode can start.
     pub remaining_prefill: u32,
+    /// In-flight H2D debt from a CPU/remote prefix hit: the saved
+    /// prefill is only real once the cached blocks land, so the engine
+    /// executes nothing for this request until the transfer completes
+    /// (cleared by `temporal::on_transfer_done`, cancelled on preempt).
+    pub prefix_xfer: Option<TransferId>,
     pub fc: Option<FcRt>,
     /// Has the opportunistic gate already ruled on this stall? (The gate
     /// evaluates *newly* stalled requests once per function call, §3.2.)
@@ -271,6 +276,7 @@ mod tests {
             reserved_charged: 0,
             cpu_blocks: Vec::new(),
             remaining_prefill: 100,
+            prefix_xfer: None,
             fc: None,
             offload_evaluated: false,
             migrations: 0,

@@ -23,7 +23,7 @@ use crate::config::ServeConfig;
 use crate::graph::{AppGraph, NodeId, NodeKind};
 use crate::kvcache::{
     AgentTypeId, BlockSet, CpuBlockPool, GpuPool, MigrationLedger,
-    PrefixIndex,
+    PrefixIndex, PrefixKey, PrefixLocation, TransferKind,
 };
 use crate::metrics::MetricsBundle;
 use crate::temporal::Forecaster;
@@ -156,11 +156,43 @@ pub struct MigratedApp {
 /// * `pressure` — the GPU free list crossing a policy threshold
 ///   (low/offload/high/emergency watermark band), detected O(1) per
 ///   tick by [`ServeState::note_pressure_band`].
+///
+/// Prefix-cache lifecycle mutations (insert at request finish, LRU
+/// eviction, Gpu↔Cpu relocation, remote-pointer seeding) bump *both*
+/// the temporal and spatial epochs via
+/// [`ServeState::note_prefix_mutation`]: they move pinned blocks the
+/// planners' snapshots count and change what the next admission's
+/// prefix lookup will see.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct SchedEpochs {
     pub spatial: u64,
     pub temporal: u64,
     pub pressure: u64,
+}
+
+/// One prefix-index lifecycle mutation, published for the cluster prefix
+/// directory (see `cluster::prefix_dir`). Recording is off by default —
+/// standalone engines pay nothing; the cluster driver flips
+/// [`ServeState::publish_prefix_events`] and drains the log after every
+/// shard step.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum PrefixEvent {
+    /// A new (or displaced-and-replaced) entry with local backing.
+    Inserted {
+        key: PrefixKey,
+        blocks: u32,
+        tokens: u32,
+        location: PrefixLocation,
+    },
+    /// Residency changed (Gpu → Cpu demotion today).
+    Relocated {
+        key: PrefixKey,
+        location: PrefixLocation,
+    },
+    /// Entry dropped; its backing returned to the pools.
+    Removed { key: PrefixKey },
+    /// An admission hit a remote pointer (replication-policy signal).
+    RemoteHit { key: PrefixKey },
 }
 
 /// Spatial Scheduler mutable state (ρ, critical set, adjustment window).
@@ -225,6 +257,11 @@ pub struct ServeState {
     /// (predictive-upload lead windows); `u64::MAX` when none. Derived
     /// state, recomputed after every planner run.
     pub temporal_next_due_us: u64,
+    /// Prefix-index lifecycle log for the cluster prefix directory
+    /// (recorded only when [`Self::publish_prefix_events`] is set).
+    pub prefix_events: Vec<PrefixEvent>,
+    /// Cluster driver flips this so prefix mutations are published.
+    pub publish_prefix_events: bool,
     /// Last observed pressure band (see [`Self::note_pressure_band`]).
     last_pressure_band: u8,
     next_req: u64,
@@ -269,6 +306,8 @@ impl ServeState {
             epochs: SchedEpochs::default(),
             planned: SchedEpochs::default(),
             temporal_next_due_us: u64::MAX,
+            prefix_events: Vec::new(),
+            publish_prefix_events: false,
             last_pressure_band: 0,
             next_req: 0,
             next_app: 0,
@@ -305,6 +344,49 @@ impl ServeState {
         if band != self.last_pressure_band {
             self.last_pressure_band = band;
             self.epochs.pressure += 1;
+        }
+    }
+
+    /// Every prefix-cache lifecycle mutation (insert/evict/relocate/
+    /// remote seed) lands here: pinned blocks shifted in or out of the
+    /// pools are planner input, so both the temporal and spatial epochs
+    /// bump (see [`SchedEpochs`]).
+    pub fn note_prefix_mutation(&mut self) {
+        self.epochs.temporal += 1;
+        self.epochs.spatial += 1;
+    }
+
+    /// Bump the prefix epochs and publish the event when a cluster
+    /// directory is listening.
+    pub fn push_prefix_event(&mut self, ev: PrefixEvent) {
+        self.note_prefix_mutation();
+        if self.publish_prefix_events {
+            self.prefix_events.push(ev);
+        }
+    }
+
+    /// Hand the accumulated prefix events to the cluster driver.
+    pub fn drain_prefix_events(&mut self) -> Vec<PrefixEvent> {
+        std::mem::take(&mut self.prefix_events)
+    }
+
+    /// Cancel a request's in-flight prefix H2D debt (preemption): the
+    /// destination blocks are about to be freed, so the ledger entry is
+    /// retired early and the source entry unpinned. The already-queued
+    /// completion event becomes a no-op (`ledger.complete` → None).
+    pub fn cancel_prefix_upload(&mut self, rid: RequestId) {
+        let Some(x) = self
+            .reqs
+            .get_mut(&rid)
+            .and_then(|r| r.prefix_xfer.take())
+        else {
+            return;
+        };
+        if let Some(t) = self.ledger.complete(x) {
+            if let TransferKind::PrefixHit { key, pinned: true } = t.kind
+            {
+                self.prefix.unpin(key);
+            }
         }
     }
 
@@ -568,6 +650,7 @@ impl ServeState {
             reserved_charged: 0,
             cpu_blocks: Vec::new(),
             remaining_prefill: prompt_tokens,
+            prefix_xfer: None,
             fc: None,
             offload_evaluated: false,
             migrations: 0,

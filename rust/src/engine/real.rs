@@ -573,7 +573,12 @@ impl RealEngine {
     }
 
     fn finish_request(&mut self, rid: RequestId, now: u64) {
-        crate::spatial::record_prefix(&mut self.st, rid, now);
+        // No prefix recording here: the prefix index pins real block
+        // extents carved from the finishing request, but this engine's
+        // one-block-per-slot layout cannot give up its slot block to the
+        // cache (the slot must recycle). Recording a backing-less entry
+        // would recreate the stale-residency bug the owned-backing index
+        // exists to prevent; a host-staged prefix copy is future work.
         // Clear the slot.
         if let Some(crate::kvcache::BlockId(s)) =
             self.st.reqs[&rid].blocks.first()

@@ -418,6 +418,11 @@ impl SimEngine {
                 continue;
             };
             let r = self.st.reqs.get_mut(&rid).unwrap();
+            if r.prefix_xfer.is_some() {
+                // A CPU/remote prefix hit's H2D debt is still in flight:
+                // the saved prefill isn't real until the blocks land.
+                continue;
+            }
             let chunk = r.remaining_prefill.min(prefill_budget);
             r.remaining_prefill -= chunk;
             prefill_budget -= chunk;
@@ -449,6 +454,9 @@ impl SimEngine {
                 != Some(ReqState::Running)
             {
                 continue;
+            }
+            if self.st.reqs[&rid].prefix_xfer.is_some() {
+                continue; // prefix upload debt gates the first decode
             }
             if !self.ensure_growth_block(rid) {
                 continue; // self-preempted
@@ -551,6 +559,12 @@ impl SimEngine {
                     return true;
                 }
                 AllocOutcome::Deferred => {
+                    // The prefix cache yields before any live request is
+                    // preempted: drop the LRU cached prefix (immediate
+                    // free) and retry the growth allocation.
+                    if spatial::drop_prefix_gpu_lru(&mut self.st) {
+                        continue;
+                    }
                     let Some(victim) = self.pick_preemption_victim(rid)
                     else {
                         // Nothing to preempt but self.
@@ -620,6 +634,11 @@ impl SimEngine {
     /// full recompute, or (2) release a partial upload reservation so the
     /// blocks can serve admission. Returns true if it made progress.
     fn rescue_deadlock(&mut self) -> bool {
+        // (0) Cached prefixes are the cheapest thing to sacrifice: a
+        // pinned prefix extent must never hold live work hostage.
+        if spatial::drop_prefix_gpu_lru(&mut self.st) {
+            return true;
+        }
         // (1) Waiting-with-KV demotion.
         let victim = self
             .st
@@ -695,6 +714,9 @@ impl SimEngine {
             self.st.reqs.get_mut(&victim).unwrap().admit_full = true;
         }
 
+        // An in-flight prefix upload into the victim's blocks is void:
+        // retire the ledger entry and unpin the source.
+        self.st.cancel_prefix_upload(victim);
         self.st.release_gpu(victim);
         let r = self.st.reqs.get_mut(&victim).unwrap();
         // Running/Prefilling → Waiting: neither end is index-tracked.
@@ -852,16 +874,26 @@ mod tests {
         let spec = WorkloadSpec::poisson(&g, 1.0, 5);
         let mut e = SimEngine::new(cfg);
         let _ = e.run_workload(&spec);
-        // After the run everything is freed — and the extent free list
-        // has coalesced back into a single run.
-        assert_eq!(e.st.gpu.free_blocks(), e.st.gpu.total());
+        // After the run every block is either free or pinned by the
+        // prefix index (TokenCake caches shared prefixes across apps);
+        // nothing is leaked to dead requests or stuck pending-free.
+        assert_eq!(
+            e.st.gpu.free_blocks() + e.st.prefix.resident_gpu_blocks(),
+            e.st.gpu.total()
+        );
         assert_eq!(e.st.gpu.pending_free_blocks(), 0);
-        assert_eq!(e.st.gpu.free_extents().len(), 1);
-        assert_eq!(e.st.cpu.used_blocks(), 0);
+        assert_eq!(
+            e.st.cpu.used_blocks(),
+            e.st.prefix.resident_cpu_blocks()
+        );
         // Lifecycle indices drained with the requests.
         assert!(e.st.stalled_ids.is_empty());
         assert!(e.st.offloaded_ids.is_empty());
         assert_eq!(e.st.reqs.live_len(), 0);
+        // Dropping the cache returns the pool to one coalesced run.
+        while crate::spatial::drop_prefix_gpu_lru(&mut e.st) {}
+        assert_eq!(e.st.gpu.free_blocks(), e.st.gpu.total());
+        assert_eq!(e.st.gpu.free_extents().len(), 1);
     }
 
     #[test]

@@ -123,6 +123,24 @@ impl BlockSet {
         out
     }
 
+    /// A copy of the first `n` blocks, without mutating this set
+    /// (n ≤ len). The read-only sibling of [`Self::take_prefix`].
+    pub fn clone_prefix(&self, n: u32) -> BlockSet {
+        debug_assert!(n <= self.total, "clone_prefix past end");
+        let mut out = BlockSet::new();
+        for e in &self.extents {
+            if out.total >= n {
+                break;
+            }
+            let need = n - out.total;
+            out.push(Extent {
+                start: e.start,
+                len: e.len.min(need),
+            });
+        }
+        out
+    }
+
     /// Iterate the individual block ids (tests, invariant checks).
     pub fn iter_blocks(&self) -> impl Iterator<Item = BlockId> + '_ {
         self.extents
@@ -176,6 +194,20 @@ mod tests {
         assert_eq!(rest.len(), 6);
         let rest_ids: Vec<u32> = rest.iter_blocks().map(|b| b.0).collect();
         assert_eq!(rest_ids, vec![2, 3, 8, 9, 10, 11]);
+    }
+
+    #[test]
+    fn clone_prefix_is_read_only() {
+        let mut s = BlockSet::new();
+        s.push(Extent { start: 0, len: 4 });
+        s.push(Extent { start: 8, len: 4 });
+        let head = s.clone_prefix(6);
+        assert_eq!(head.len(), 6);
+        let ids: Vec<u32> = head.iter_blocks().map(|b| b.0).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3, 8, 9]);
+        // The source is untouched.
+        assert_eq!(s.len(), 8);
+        assert_eq!(s.extent_count(), 2);
     }
 
     #[test]

@@ -10,7 +10,7 @@
 
 use std::collections::HashMap;
 
-use super::{BlockSet, CpuBlockId};
+use super::{BlockSet, CpuBlockId, PrefixKey};
 
 /// Transfer identifier.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -25,12 +25,29 @@ pub enum Direction {
     H2D,
 }
 
+/// What the transfer moves — the completion handler dispatches on this.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TransferKind {
+    /// A request's KV cache (the classic offload/upload path).
+    Request,
+    /// Prefix-cache demotion: index-owned GPU backing riding D2H while
+    /// the entry already answers lookups from its CPU copy.
+    PrefixEvict { key: PrefixKey },
+    /// Prefix-cache CPU/remote hit materializing into an admitted
+    /// request's own blocks (H2D debt that gates the request's start).
+    /// `pinned` records whether issuing the hit pinned the source entry
+    /// (CPU-resident sources only — remote pointers have no local
+    /// backing to pin), so completion/cancel unpins exactly once.
+    PrefixHit { key: PrefixKey, pinned: bool },
+}
+
 /// One in-flight block migration.
 #[derive(Debug, Clone)]
 pub struct Transfer {
     pub id: TransferId,
     pub req_id: u64,
     pub dir: Direction,
+    pub kind: TransferKind,
     pub gpu_blocks: BlockSet,
     pub cpu_blocks: Vec<CpuBlockId>,
     pub issued_us: u64,
@@ -60,10 +77,34 @@ impl MigrationLedger {
         Self::default()
     }
 
-    /// Register a new transfer; returns its id.
+    /// Register a new request-KV transfer; returns its id.
     #[allow(clippy::too_many_arguments)]
     pub fn issue(
         &mut self,
+        req_id: u64,
+        dir: Direction,
+        gpu_blocks: BlockSet,
+        cpu_blocks: Vec<CpuBlockId>,
+        issued_us: u64,
+        completes_us: u64,
+    ) -> TransferId {
+        self.issue_tagged(
+            TransferKind::Request,
+            req_id,
+            dir,
+            gpu_blocks,
+            cpu_blocks,
+            issued_us,
+            completes_us,
+        )
+    }
+
+    /// Register a transfer with an explicit kind (prefix-cache traffic
+    /// rides the same ledger and the same bandwidth accounting).
+    #[allow(clippy::too_many_arguments)]
+    pub fn issue_tagged(
+        &mut self,
+        kind: TransferKind,
         req_id: u64,
         dir: Direction,
         gpu_blocks: BlockSet,
@@ -90,6 +131,7 @@ impl MigrationLedger {
                 id,
                 req_id,
                 dir,
+                kind,
                 gpu_blocks,
                 cpu_blocks,
                 issued_us,
@@ -195,6 +237,26 @@ mod tests {
         assert_eq!(l.swap_volume_blocks(), 2);
         assert_eq!(l.inflight_upload_blocks(), 0);
         assert_eq!(l.inflight_offload_blocks(), 0);
+    }
+
+    #[test]
+    fn tagged_transfers_carry_kind() {
+        let mut l = MigrationLedger::new();
+        let key = PrefixKey(7);
+        let id = l.issue_tagged(
+            TransferKind::PrefixEvict { key },
+            u64::MAX,
+            Direction::D2H,
+            BlockSet::from_extent(0, 3),
+            vec![],
+            0,
+            5,
+        );
+        let t = l.complete(id).unwrap();
+        assert_eq!(t.kind, TransferKind::PrefixEvict { key });
+        // The untagged path defaults to the request kind.
+        let id = l.issue(1, Direction::H2D, BlockSet::new(), vec![], 0, 1);
+        assert_eq!(l.get(id).unwrap().kind, TransferKind::Request);
     }
 
     #[test]

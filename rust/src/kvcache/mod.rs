@@ -16,9 +16,13 @@ mod prefix;
 pub use cpu::CpuBlockPool;
 pub use extent::{BlockSet, Extent};
 pub use gpu::{AllocOutcome, GpuPool, Route};
-pub use migrate::{Direction, MigrationLedger, Transfer, TransferId};
+pub use migrate::{
+    Direction, MigrationLedger, Transfer, TransferId, TransferKind,
+};
 pub use multi::{DevicePressure, MultiGpuPool, ShardedAlloc};
-pub use prefix::{PrefixIndex, PrefixKey, PrefixLocation};
+pub use prefix::{
+    PrefixBacking, PrefixHit, PrefixIndex, PrefixKey, PrefixLocation,
+};
 
 /// Physical GPU block identifier.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]

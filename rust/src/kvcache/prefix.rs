@@ -1,16 +1,47 @@
-//! Prefix-cache index (§6.3).
+//! Prefix-cache index (§6.3) with an owned-backing lifecycle.
 //!
 //! Maps a token-prefix hash to cached KV blocks and their residency. The
-//! standard lookup path is extended with CPU entries: a CPU hit avoids
-//! recomputation but creates an H2D transfer debt that must complete
-//! before the request can run.
+//! index *owns* its backing: a GPU-resident entry holds the pinned
+//! [`BlockSet`] extents (carved out of the finishing request that
+//! recorded it), a CPU-resident entry holds its [`CpuBlockId`]s, and a
+//! remote entry is a pointer into another shard's index maintained by the
+//! cluster prefix directory. A hit therefore always references blocks
+//! that exist; nothing else may free index-held blocks.
+//!
+//! ## Lifecycle contract
+//!
+//! * **Insert** — only `spatial::record_prefix` (request finish, local
+//!   GPU backing) and `cluster::prefix_dir` (remote pointers / replicas)
+//!   create entries; a CI grep enforces the call-site set. Freshest copy
+//!   wins: inserting over an existing entry displaces the old backing,
+//!   which is returned to the caller to free — unless the entry is
+//!   pinned, in which case the *offered* backing is returned instead.
+//! * **Evict / demote** — reclaim (admission pressure, decode growth,
+//!   deadlock rescue) walks the `(last_use, key)`-ordered secondary
+//!   indices: O(log n), ties broken on the key so eviction order never
+//!   depends on `HashMap` storage order.
+//! * **Pin** — a CPU entry being read by an in-flight H2D prefix upload
+//!   is pinned (`readers > 0`): it cannot be evicted or displaced until
+//!   the transfer completes and unpins it.
+//! * **Residency** — `Gpu → Cpu` via [`PrefixIndex::demote_to_cpu`]
+//!   (the D2H ride goes through the migration ledger at the call site);
+//!   `Cpu → Gpu` by a fresh local insert displacing the CPU copy.
+//!
+//! The standard lookup path is extended with CPU and remote entries: a
+//! CPU hit creates an H2D transfer debt that must complete before the
+//! request can run, and a remote hit prices that debt at the cluster
+//! interconnect factor.
 
-use std::collections::HashMap;
+use std::collections::{BTreeSet, HashMap};
+
+use super::{BlockSet, CpuBlockId};
 
 /// Hash key of a token prefix. The engines key shared system prompts by
 /// (graph template, agent type, prefix length); a real tokenizer path would
-//  hash the token ids per block.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+/// hash the token ids per block.
+#[derive(
+    Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord,
+)]
 pub struct PrefixKey(pub u64);
 
 impl PrefixKey {
@@ -40,29 +71,64 @@ impl PrefixKey {
 pub enum PrefixLocation {
     Gpu,
     Cpu,
+    /// Held on another shard; the cluster prefix directory seeded this
+    /// pointer so admission can hit it at interconnect price.
+    Remote,
+}
+
+/// Physical backing an entry owns (or, for `Remote`, points at).
+#[derive(Debug, Clone)]
+pub enum PrefixBacking {
+    Gpu(BlockSet),
+    Cpu(Vec<CpuBlockId>),
+    Remote,
+}
+
+impl PrefixBacking {
+    pub fn location(&self) -> PrefixLocation {
+        match self {
+            PrefixBacking::Gpu(_) => PrefixLocation::Gpu,
+            PrefixBacking::Cpu(_) => PrefixLocation::Cpu,
+            PrefixBacking::Remote => PrefixLocation::Remote,
+        }
+    }
 }
 
 #[derive(Debug, Clone)]
 struct Entry {
     blocks: u32,
     tokens: u32,
-    location: PrefixLocation,
+    backing: PrefixBacking,
+    /// H2D price multiplier for CPU/remote hits (1.0 local; the cluster
+    /// interconnect factor for remote pointers).
+    upload_factor: f64,
     last_use_us: u64,
     hits: u64,
+    /// In-flight H2D prefix uploads reading this entry's CPU backing.
+    /// A pinned entry cannot be evicted, demoted, or displaced.
+    readers: u32,
 }
 
-/// The index itself: key → (blocks, residency, recency).
+/// The index itself: key → (backing, residency, recency), plus
+/// `(last_use, key)`-ordered secondary indices per residency tier so LRU
+/// eviction is O(log n) and deterministic (key breaks recency ties).
 #[derive(Debug, Clone, Default)]
 pub struct PrefixIndex {
     entries: HashMap<PrefixKey, Entry>,
+    lru_gpu: BTreeSet<(u64, PrefixKey)>,
+    lru_cpu: BTreeSet<(u64, PrefixKey)>,
+    resident_gpu: u32,
+    resident_cpu: u32,
 }
 
 /// Result of a lookup.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct PrefixHit {
     pub blocks: u32,
     pub tokens: u32,
     pub location: PrefixLocation,
+    /// H2D price multiplier a CPU/remote hit pays on the upload debt.
+    pub upload_factor: f64,
 }
 
 impl PrefixIndex {
@@ -70,61 +136,223 @@ impl PrefixIndex {
         Self::default()
     }
 
-    /// Record (or refresh) a cached prefix.
+    fn index_add(&mut self, key: PrefixKey, e: &Entry) {
+        match e.backing {
+            PrefixBacking::Gpu(_) => {
+                self.lru_gpu.insert((e.last_use_us, key));
+                self.resident_gpu += e.blocks;
+            }
+            PrefixBacking::Cpu(_) => {
+                self.lru_cpu.insert((e.last_use_us, key));
+                self.resident_cpu += e.blocks;
+            }
+            PrefixBacking::Remote => {}
+        }
+    }
+
+    fn index_remove(&mut self, key: PrefixKey, e: &Entry) {
+        match e.backing {
+            PrefixBacking::Gpu(_) => {
+                self.lru_gpu.remove(&(e.last_use_us, key));
+                self.resident_gpu -= e.blocks;
+            }
+            PrefixBacking::Cpu(_) => {
+                self.lru_cpu.remove(&(e.last_use_us, key));
+                self.resident_cpu -= e.blocks;
+            }
+            PrefixBacking::Remote => {}
+        }
+    }
+
+    /// Refresh an entry's recency in its tier's LRU index and on the
+    /// entry itself — the single place (last_use, key) pairs move.
+    fn touch(&mut self, key: PrefixKey, now_us: u64) {
+        let Some(e) = self.entries.get(&key) else { return };
+        let old = (e.last_use_us, key);
+        match e.backing.location() {
+            PrefixLocation::Gpu => {
+                self.lru_gpu.remove(&old);
+                self.lru_gpu.insert((now_us, key));
+            }
+            PrefixLocation::Cpu => {
+                self.lru_cpu.remove(&old);
+                self.lru_cpu.insert((now_us, key));
+            }
+            PrefixLocation::Remote => {}
+        }
+        self.entries.get_mut(&key).unwrap().last_use_us = now_us;
+    }
+
+    /// Record a cached prefix whose backing the index takes ownership of.
+    /// Freshest copy wins: an existing entry's backing is displaced and
+    /// returned for the caller to free; a *pinned* entry is kept and the
+    /// offered backing is handed back instead. Only `spatial` and
+    /// `cluster::prefix_dir` may call this (CI-enforced).
     pub fn insert(
         &mut self,
         key: PrefixKey,
         blocks: u32,
         tokens: u32,
-        location: PrefixLocation,
+        backing: PrefixBacking,
+        upload_factor: f64,
         now_us: u64,
-    ) {
-        let e = self.entries.entry(key).or_insert(Entry {
+    ) -> Option<PrefixBacking> {
+        debug_assert!(
+            match &backing {
+                PrefixBacking::Gpu(b) => b.len() == blocks,
+                PrefixBacking::Cpu(v) => v.len() as u32 == blocks,
+                PrefixBacking::Remote => true,
+            },
+            "insert: backing does not cover the declared block count"
+        );
+        if self.is_pinned(key) {
+            // Pinned: an in-flight upload reads the backing. Refresh
+            // recency only; reject the offered copy.
+            self.touch(key, now_us);
+            return Some(backing);
+        }
+        let displaced = self.entries.remove(&key).map(|old| {
+            self.index_remove(key, &old);
+            old.backing
+        });
+        let e = Entry {
             blocks,
             tokens,
-            location,
+            backing,
+            upload_factor,
             last_use_us: now_us,
             hits: 0,
-        });
-        e.blocks = blocks;
-        e.tokens = tokens;
-        e.location = location;
-        e.last_use_us = now_us;
+            readers: 0,
+        };
+        self.index_add(key, &e);
+        self.entries.insert(key, e);
+        displaced
     }
 
     /// Look up a prefix; refreshes recency and counts the hit.
     pub fn lookup(&mut self, key: PrefixKey, now_us: u64) -> Option<PrefixHit> {
-        let e = self.entries.get_mut(&key)?;
-        e.last_use_us = now_us;
+        self.entries.get(&key)?;
+        self.touch(key, now_us);
+        let e = self.entries.get_mut(&key).unwrap();
         e.hits += 1;
         Some(PrefixHit {
             blocks: e.blocks,
             tokens: e.tokens,
-            location: e.location,
+            location: e.backing.location(),
+            upload_factor: e.upload_factor,
         })
     }
 
-    /// Change residency after an offload/upload of the backing blocks.
-    pub fn set_location(&mut self, key: PrefixKey, location: PrefixLocation) {
+    /// Least-recently-used GPU-resident entry (key breaks recency ties).
+    pub fn peek_lru_gpu(&self) -> Option<(PrefixKey, u32)> {
+        let &(_, key) = self.lru_gpu.iter().next()?;
+        Some((key, self.entries[&key].blocks))
+    }
+
+    /// Least-recently-used *unpinned* CPU-resident entry.
+    pub fn peek_lru_cpu_unpinned(&self) -> Option<(PrefixKey, u32)> {
+        for &(_, key) in &self.lru_cpu {
+            let e = &self.entries[&key];
+            if e.readers == 0 {
+                return Some((key, e.blocks));
+            }
+        }
+        None
+    }
+
+    /// Gpu → Cpu residency transition: the index takes ownership of the
+    /// CPU blocks and hands the GPU backing to the caller (who rides it
+    /// through the pending-free + migration-ledger D2H path). The entry
+    /// reprices to local (`upload_factor` 1.0).
+    pub fn demote_to_cpu(
+        &mut self,
+        key: PrefixKey,
+        cpu_blocks: Vec<CpuBlockId>,
+    ) -> Option<BlockSet> {
+        let e = self.entries.get(&key)?;
+        let PrefixBacking::Gpu(_) = e.backing else {
+            return None;
+        };
+        let mut old = self.entries.remove(&key).unwrap();
+        self.index_remove(key, &old);
+        let PrefixBacking::Gpu(gpu) =
+            std::mem::replace(&mut old.backing, PrefixBacking::Cpu(cpu_blocks))
+        else {
+            unreachable!()
+        };
+        old.upload_factor = 1.0;
+        self.index_add(key, &old);
+        self.entries.insert(key, old);
+        Some(gpu)
+    }
+
+    /// Drop an entry, returning its backing for the caller to free.
+    /// Pinned entries refuse (returns None, entry kept).
+    pub fn remove(&mut self, key: PrefixKey) -> Option<PrefixBacking> {
+        if self.entries.get(&key)?.readers > 0 {
+            return None;
+        }
+        let e = self.entries.remove(&key).unwrap();
+        self.index_remove(key, &e);
+        Some(e.backing)
+    }
+
+    /// Drop a remote pointer (no backing to free); real copies are kept.
+    /// Used by the cluster directory when the last holder evicts.
+    pub fn remove_pointer(&mut self, key: PrefixKey) -> bool {
+        let is_pointer = matches!(
+            self.entries.get(&key),
+            Some(e) if matches!(e.backing, PrefixBacking::Remote)
+        );
+        if is_pointer {
+            self.entries.remove(&key);
+        }
+        is_pointer
+    }
+
+    /// Pin an entry against eviction/displacement (in-flight H2D read).
+    pub fn pin(&mut self, key: PrefixKey) {
         if let Some(e) = self.entries.get_mut(&key) {
-            e.location = location;
+            e.readers += 1;
         }
     }
 
-    /// Drop an entry (blocks evicted entirely).
-    pub fn remove(&mut self, key: PrefixKey) {
-        self.entries.remove(&key);
+    /// Release one pin.
+    pub fn unpin(&mut self, key: PrefixKey) {
+        if let Some(e) = self.entries.get_mut(&key) {
+            e.readers = e.readers.saturating_sub(1);
+        }
     }
 
-    /// Evict the least-recently-used entry, returning its key and size.
-    pub fn evict_lru(&mut self) -> Option<(PrefixKey, u32)> {
-        let key = self
-            .entries
-            .iter()
-            .min_by_key(|(_, e)| e.last_use_us)
-            .map(|(k, _)| *k)?;
-        let blocks = self.entries.remove(&key).map(|e| e.blocks)?;
-        Some((key, blocks))
+    /// Is the entry pinned by an in-flight read?
+    pub fn is_pinned(&self, key: PrefixKey) -> bool {
+        self.entries.get(&key).map(|e| e.readers > 0).unwrap_or(false)
+    }
+
+    /// GPU blocks the index currently pins (pool-conservation term:
+    /// `free + request-held + pending-free + prefix-resident == total`).
+    pub fn resident_gpu_blocks(&self) -> u32 {
+        self.resident_gpu
+    }
+
+    /// CPU blocks the index currently pins.
+    pub fn resident_cpu_blocks(&self) -> u32 {
+        self.resident_cpu
+    }
+
+    pub fn location_of(&self, key: PrefixKey) -> Option<PrefixLocation> {
+        self.entries.get(&key).map(|e| e.backing.location())
+    }
+
+    /// Every GPU extent the index pins (tests / invariant checks).
+    pub fn resident_gpu_extents(&self) -> Vec<super::Extent> {
+        let mut out = Vec::new();
+        for e in self.entries.values() {
+            if let PrefixBacking::Gpu(b) = &e.backing {
+                out.extend_from_slice(b.extents());
+            }
+        }
+        out
     }
 
     pub fn len(&self) -> usize {
@@ -144,6 +372,10 @@ impl PrefixIndex {
 mod tests {
     use super::*;
 
+    fn gpu(start: u32, len: u32) -> PrefixBacking {
+        PrefixBacking::Gpu(BlockSet::from_extent(start, len))
+    }
+
     #[test]
     fn key_is_stable_and_distinct() {
         let a = PrefixKey::of_parts("code-writer", "programmer", 384);
@@ -158,33 +390,89 @@ mod tests {
         let mut ix = PrefixIndex::new();
         let k = PrefixKey::of_bytes(b"hello");
         assert!(ix.lookup(k, 0).is_none());
-        ix.insert(k, 4, 64, PrefixLocation::Gpu, 10);
+        assert!(ix.insert(k, 4, 64, gpu(0, 4), 1.0, 10).is_none());
         let hit = ix.lookup(k, 20).unwrap();
         assert_eq!(hit.blocks, 4);
         assert_eq!(hit.location, PrefixLocation::Gpu);
         assert_eq!(ix.total_hits(), 1);
+        assert_eq!(ix.resident_gpu_blocks(), 4);
     }
 
     #[test]
-    fn cpu_residency_transition() {
+    fn gpu_cpu_gpu_residency_round_trip() {
         let mut ix = PrefixIndex::new();
         let k = PrefixKey::of_bytes(b"x");
-        ix.insert(k, 2, 32, PrefixLocation::Gpu, 0);
-        ix.set_location(k, PrefixLocation::Cpu);
+        ix.insert(k, 2, 32, gpu(5, 2), 1.0, 0);
+        // Gpu → Cpu: the GPU backing comes back out for the D2H ride.
+        let freed = ix
+            .demote_to_cpu(k, vec![CpuBlockId(0), CpuBlockId(1)])
+            .unwrap();
+        assert_eq!(freed.len(), 2);
         assert_eq!(ix.lookup(k, 1).unwrap().location, PrefixLocation::Cpu);
+        assert_eq!(ix.resident_gpu_blocks(), 0);
+        assert_eq!(ix.resident_cpu_blocks(), 2);
+        // Cpu → Gpu: a fresh local insert displaces the CPU copy.
+        let displaced = ix.insert(k, 2, 32, gpu(9, 2), 1.0, 2).unwrap();
+        assert!(matches!(displaced, PrefixBacking::Cpu(v) if v.len() == 2));
+        assert_eq!(ix.lookup(k, 3).unwrap().location, PrefixLocation::Gpu);
+        assert_eq!(ix.resident_cpu_blocks(), 0);
+        assert_eq!(ix.resident_gpu_blocks(), 2);
     }
 
     #[test]
-    fn lru_eviction_order() {
+    fn lru_eviction_order_and_deterministic_tie_break() {
         let mut ix = PrefixIndex::new();
-        let k1 = PrefixKey::of_bytes(b"1");
-        let k2 = PrefixKey::of_bytes(b"2");
-        ix.insert(k1, 1, 16, PrefixLocation::Cpu, 100);
-        ix.insert(k2, 2, 32, PrefixLocation::Cpu, 200);
+        let k1 = PrefixKey(1);
+        let k2 = PrefixKey(2);
+        ix.insert(k1, 1, 16, gpu(0, 1), 1.0, 100);
+        ix.insert(k2, 2, 32, gpu(1, 2), 1.0, 200);
         ix.lookup(k1, 300); // refresh k1; k2 is now LRU
-        let (evicted, blocks) = ix.evict_lru().unwrap();
-        assert_eq!(evicted, k2);
-        assert_eq!(blocks, 2);
+        assert_eq!(ix.peek_lru_gpu(), Some((k2, 2)));
+        let b = ix.remove(k2).unwrap();
+        assert!(matches!(b, PrefixBacking::Gpu(s) if s.len() == 2));
+        assert_eq!(ix.len(), 1);
+        // Exact recency tie: the smaller key evicts first, regardless of
+        // HashMap storage order.
+        let mut ix = PrefixIndex::new();
+        ix.insert(PrefixKey(9), 1, 16, gpu(0, 1), 1.0, 50);
+        ix.insert(PrefixKey(3), 1, 16, gpu(1, 1), 1.0, 50);
+        ix.insert(PrefixKey(7), 1, 16, gpu(2, 1), 1.0, 50);
+        assert_eq!(ix.peek_lru_gpu(), Some((PrefixKey(3), 1)));
+    }
+
+    #[test]
+    fn pinned_entries_refuse_eviction_and_displacement() {
+        let mut ix = PrefixIndex::new();
+        let k = PrefixKey(4);
+        let cpu = PrefixBacking::Cpu(vec![CpuBlockId(0), CpuBlockId(1)]);
+        ix.insert(k, 2, 32, cpu, 1.0, 0);
+        ix.pin(k);
+        assert!(ix.remove(k).is_none(), "pinned entry must not evict");
+        assert!(ix.peek_lru_cpu_unpinned().is_none());
+        // Displacement rejected: the offered backing bounces back.
+        let offered = ix.insert(k, 2, 32, gpu(0, 2), 1.0, 5);
+        assert!(matches!(offered, Some(PrefixBacking::Gpu(_))));
+        assert_eq!(ix.location_of(k), Some(PrefixLocation::Cpu));
+        ix.unpin(k);
+        assert!(ix.remove(k).is_some());
+        assert_eq!(ix.resident_cpu_blocks(), 0);
+    }
+
+    #[test]
+    fn remote_pointers_have_no_backing() {
+        let mut ix = PrefixIndex::new();
+        let k = PrefixKey(11);
+        ix.insert(k, 3, 48, PrefixBacking::Remote, 2.0, 0);
+        assert_eq!(ix.resident_gpu_blocks(), 0);
+        assert_eq!(ix.resident_cpu_blocks(), 0);
+        let hit = ix.lookup(k, 1).unwrap();
+        assert_eq!(hit.location, PrefixLocation::Remote);
+        assert_eq!(hit.upload_factor, 2.0);
+        assert!(ix.remove_pointer(k));
+        assert!(ix.is_empty());
+        // remove_pointer never drops a real copy.
+        ix.insert(k, 1, 16, gpu(0, 1), 1.0, 2);
+        assert!(!ix.remove_pointer(k));
         assert_eq!(ix.len(), 1);
     }
 }

@@ -28,7 +28,10 @@
 //! ```text
 //! L4  cluster layer — N worker shards on one shared event clock:
 //!     agent-affinity router, pressure-aware placement, cross-worker
-//!     KV migration of stalled agents (cluster::ClusterEngine)
+//!     KV migration of stalled agents (cluster::ClusterEngine), and a
+//!     cluster prefix directory federating the per-shard prefix
+//!     indexes (cluster::prefix_dir: residency-derived routing warmth,
+//!     remote prefix hits at interconnect price, bounded replication)
 //! L3  rust coordinator (this crate): graph API, schedulers, block pools,
 //!     engines, baselines, metrics, HTTP server — one worker = one shard
 //! L2  JAX TinyQwen model  — python/compile/model.py, AOT → artifacts/
@@ -62,9 +65,11 @@
 //! [`coordination::SchedEpochs`]:
 //!
 //! * `temporal` — FC stall / tool return / transfer completion /
-//!   lifecycle reindex / broken reservation / app extract+implant;
+//!   lifecycle reindex / broken reservation / app extract+implant /
+//!   prefix-cache lifecycle mutation;
 //! * `spatial` — arrival, admission grant/deferral, preemption, finish,
-//!   executed engine iteration (exec-time drift feeds S_a);
+//!   executed engine iteration (exec-time drift feeds S_a), prefix-cache
+//!   lifecycle mutation;
 //! * `pressure` — the free list crossing a policy watermark band
 //!   (detected by an O(1) per-tick snapshot delta).
 //!
@@ -76,6 +81,15 @@
 //! steady-state decode tick therefore does only the snapshot delta plus
 //! admission; CI asserts planner runs stay under 10% of scheduling
 //! steps and greps against direct `run_phase`/`upload_phase` calls.
+//!
+//! The prefix cache follows an owned-backing lifecycle: the index in
+//! [`kvcache::PrefixIndex`] pins real block extents (carved from the
+//! finishing request that recorded them), reclaim demotes or drops LRU
+//! entries through deterministic `(last_use, key)`-ordered secondary
+//! indices, a CPU/remote hit charges an H2D debt through the migration
+//! ledger that gates the request's start, and the cluster prefix
+//! directory ([`cluster::prefix_dir`]) federates the shard indexes —
+//! so a prefix hit can never reference blocks the pool already freed.
 //!
 //! Migration is batched under the same event model: one planning event
 //! scores all stalled candidates once (off the id-ordered index) and

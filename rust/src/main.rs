@@ -149,7 +149,11 @@ fn write_bench_trajectory(
              \"wall_s\": {:.3}, \"sim_events_per_s\": {:.0}, \
              \"sim_ticks_per_s\": {:.0}, \
              \"planner_runs_per_1k_ticks\": {:.2}, \
-             \"mean_migration_batch\": {:.2}, \"truncated\": {}}}",
+             \"mean_migration_batch\": {:.2}, \
+             \"prefix_hit_rate_local\": {:.4}, \
+             \"prefix_hit_rate_remote\": {:.4}, \
+             \"prefill_tokens_saved\": {}, \
+             \"prefix_replications\": {}, \"truncated\": {}}}",
             rep.num_shards,
             rep.policy,
             rep.aggregate.apps_completed,
@@ -163,6 +167,10 @@ fn write_bench_trajectory(
             ticks as f64 / wall,
             rep.aggregate.counters.planner_runs_per_1k_ticks(),
             mean_batch,
+            rep.aggregate.counters.prefix_hit_rate_local(),
+            rep.aggregate.counters.prefix_hit_rate_remote(),
+            rep.aggregate.counters.prefill_tokens_saved,
+            rep.prefix_replications,
             rep.truncated,
         ));
     };
@@ -279,6 +287,17 @@ fn cmd_cluster(args: &Args) -> Result<(), String> {
         c.spatial_plan_skips,
         report.mean_migration_batch(),
     );
+    println!(
+        "prefix: lookups={} hit_local={:.2} hit_remote={:.2} \
+         saved_tokens={} replications={} evict={} demote={}",
+        c.prefix_lookups,
+        c.prefix_hit_rate_local(),
+        c.prefix_hit_rate_remote(),
+        c.prefill_tokens_saved,
+        report.prefix_replications,
+        c.prefix_evictions,
+        c.prefix_demotions,
+    );
     if report.truncated {
         eprintln!("warning: cluster run truncated before completion");
     }
@@ -367,7 +386,8 @@ COMMANDS:
            --json FILE  also write a single-worker vs N-shard cluster
            trajectory (--shards, default 4: throughput, mean/p99
            latency, effective GPU util, planner_runs_per_1k_ticks,
-           mean_migration_batch)
+           mean_migration_batch, prefix_hit_rate_local/remote,
+           prefill_tokens_saved)
   compare  run all modes on one workload (same flags, no --mode)
   cluster  sharded multi-worker serving:  --shards N
            --policy rr|least|affinity  --mix cw:2,dr:1  --qps --apps

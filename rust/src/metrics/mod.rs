@@ -25,9 +25,21 @@ pub struct Counters {
     pub offloads_rejected: u64,
     /// Uploads triggered early because a tool returned before prediction.
     pub early_returns: u64,
-    /// Prefix-cache hits (GPU- and CPU-resident).
+    /// Prefix-cache hits (GPU-, CPU-, and remote-resident).
     pub prefix_hits_gpu: u64,
     pub prefix_hits_cpu: u64,
+    /// Hits on remote pointers seeded by the cluster prefix directory
+    /// (the H2D debt is priced at the interconnect factor).
+    pub prefix_hits_remote: u64,
+    /// Fresh admissions that consulted the prefix index (hit-rate
+    /// denominator).
+    pub prefix_lookups: u64,
+    /// Prefill tokens removed from admission debt by prefix hits.
+    pub prefill_tokens_saved: u64,
+    /// Prefix entries dropped outright under reclaim pressure.
+    pub prefix_evictions: u64,
+    /// Prefix entries demoted Gpu → Cpu under reclaim pressure.
+    pub prefix_demotions: u64,
     /// Requests admitted through the reserved pool.
     pub reserved_admissions: u64,
     /// Requests deferred by admission control.
@@ -68,6 +80,11 @@ impl Counters {
         self.early_returns += o.early_returns;
         self.prefix_hits_gpu += o.prefix_hits_gpu;
         self.prefix_hits_cpu += o.prefix_hits_cpu;
+        self.prefix_hits_remote += o.prefix_hits_remote;
+        self.prefix_lookups += o.prefix_lookups;
+        self.prefill_tokens_saved += o.prefill_tokens_saved;
+        self.prefix_evictions += o.prefix_evictions;
+        self.prefix_demotions += o.prefix_demotions;
         self.reserved_admissions += o.reserved_admissions;
         self.deferrals += o.deferrals;
         self.decode_iterations += o.decode_iterations;
@@ -89,6 +106,24 @@ impl Counters {
             return 0.0;
         }
         self.planner_runs as f64 * 1000.0 / self.sched_steps as f64
+    }
+
+    /// Fraction of prefix lookups answered by a *local* tier (GPU or
+    /// this shard's CPU copy).
+    pub fn prefix_hit_rate_local(&self) -> f64 {
+        if self.prefix_lookups == 0 {
+            return 0.0;
+        }
+        (self.prefix_hits_gpu + self.prefix_hits_cpu) as f64
+            / self.prefix_lookups as f64
+    }
+
+    /// Fraction of prefix lookups answered by a remote pointer.
+    pub fn prefix_hit_rate_remote(&self) -> f64 {
+        if self.prefix_lookups == 0 {
+            return 0.0;
+        }
+        self.prefix_hits_remote as f64 / self.prefix_lookups as f64
     }
 }
 
@@ -142,8 +177,10 @@ impl MetricsBundle {
             "{tag}: apps={} lat_sum={} lat_n={} req_sum={} req_n={} \
              makespan={} swap={} off={} up={} preempt={} inv={} \
              recomp={} recomp_tok={} rej={} early={} pfx_gpu={} \
-             pfx_cpu={} resv={} defer={} iters={} toks={} aborts={} \
-             plan={} pskip={} splan={} sskip={} obatch={} ovict={}\n",
+             pfx_cpu={} pfx_rem={} pfx_look={} pfx_saved={} \
+             pfx_evict={} pfx_demote={} resv={} defer={} iters={} \
+             toks={} aborts={} plan={} pskip={} splan={} sskip={} \
+             obatch={} ovict={}\n",
             self.apps_completed,
             self.latency.total_us(),
             self.latency.len(),
@@ -161,6 +198,11 @@ impl MetricsBundle {
             self.counters.early_returns,
             self.counters.prefix_hits_gpu,
             self.counters.prefix_hits_cpu,
+            self.counters.prefix_hits_remote,
+            self.counters.prefix_lookups,
+            self.counters.prefill_tokens_saved,
+            self.counters.prefix_evictions,
+            self.counters.prefix_demotions,
             self.counters.reserved_admissions,
             self.counters.deferrals,
             self.counters.decode_iterations,

@@ -13,8 +13,13 @@ mod score;
 pub use score::{agent_type_scores, TypeStats};
 
 use crate::config::Mode;
-use crate::coordination::{ReqState, Request, RequestId, ServeState};
-use crate::kvcache::{AgentTypeId, AllocOutcome, PrefixKey, PrefixLocation, Route};
+use crate::coordination::{
+    Action, PrefixEvent, ReqState, Request, RequestId, ServeState,
+};
+use crate::kvcache::{
+    AgentTypeId, AllocOutcome, Direction, PrefixBacking, PrefixKey,
+    PrefixLocation, Route, TransferKind,
+};
 
 /// Algorithm 2: periodically re-evaluate ρ, the critical set, and the
 /// per-type quota distribution. No-op until the adjustment window
@@ -226,34 +231,69 @@ pub fn admit(st: &mut ServeState, now_us: u64) {
         if slots == 0 {
             break;
         }
-        // Prefix-cache lookup for fresh admissions.
-        maybe_apply_prefix_cache(st, rid, now_us);
-
         let need = admission_alloc_blocks(st, rid);
         let route = route_for(st, rid);
         let fresh = st.reqs[&rid].blocks.is_empty();
         if fresh && st.gpu.available_for(route) < need.saturating_add(margin)
         {
-            st.metrics.counters.deferrals += 1;
-            let t = st.reqs[&rid].type_id;
-            st.types.note_wait(t);
-            st.epochs.spatial += 1; // wait counters feed S_a
-            if fcfs_hol {
-                break;
+            // The prefix cache yields before fresh work defers: demote
+            // (or drop) LRU entries to cover the shortfall. Drop-path
+            // frees land immediately (fall through and retry now);
+            // demoted blocks travel the pending-free D2H path, so those
+            // deferrals stand until the transfer completes.
+            let shortfall = need
+                .saturating_add(margin)
+                .saturating_sub(st.gpu.available_for(route))
+                .saturating_sub(st.gpu.pending_free_blocks());
+            if shortfall > 0 {
+                reclaim_prefix_gpu(st, shortfall, now_us);
             }
-            continue;
+            if st.gpu.available_for(route) < need.saturating_add(margin) {
+                st.metrics.counters.deferrals += 1;
+                let t = st.reqs[&rid].type_id;
+                st.types.note_wait(t);
+                st.epochs.spatial += 1; // wait counters feed S_a
+                if fcfs_hol {
+                    break;
+                }
+                continue;
+            }
         }
-        match st.gpu.alloc(need, route) {
+        let mut outcome = st.gpu.alloc(need, route);
+        if outcome == AllocOutcome::Deferred {
+            // Same reclaim-and-retry for resumed requests (no margin
+            // pre-check): immediate drops may cover the need this tick.
+            let shortfall = need
+                .saturating_sub(st.gpu.available_for(route))
+                .saturating_sub(st.gpu.pending_free_blocks());
+            if shortfall > 0
+                && reclaim_prefix_gpu(st, shortfall, now_us) > 0
+            {
+                outcome = st.gpu.alloc(need, route);
+            }
+        }
+        match outcome {
             AllocOutcome::Granted {
                 blocks,
                 reserved_charged,
             } => {
-                let r = st.reqs.get_mut(&rid).unwrap();
-                r.blocks.absorb(blocks);
-                r.reserved_charged += reserved_charged;
-                r.pulled = false;
-                r.wait_time_us += now_us.saturating_sub(r.queue_enter_us);
+                {
+                    let r = st.reqs.get_mut(&rid).unwrap();
+                    r.blocks.absorb(blocks);
+                    r.reserved_charged += reserved_charged;
+                    r.pulled = false;
+                    r.wait_time_us +=
+                        now_us.saturating_sub(r.queue_enter_us);
+                }
+                // Prefix-cache lookup, applied only once the blocks are
+                // granted: a CPU/remote hit issues the H2D debt into the
+                // request's own blocks, so the hit must not fire for a
+                // request that then fails admission.
+                if fresh {
+                    maybe_apply_prefix_cache(st, rid, now_us);
+                }
                 // Waiting → Prefilling/Running: unindexed transition.
+                let r = st.reqs.get_mut(&rid).unwrap();
                 r.state = if r.remaining_prefill > 0 {
                     ReqState::Prefilling
                 } else {
@@ -291,10 +331,28 @@ pub fn admit(st: &mut ServeState, now_us: u64) {
     st.scratch.admitted = admitted;
 }
 
-/// Prefix-cache reuse at admission (vLLM-Prefix / Mooncake / TokenCake):
-/// a hit on the shared system prefix removes those tokens from the prefill
-/// debt. CPU-resident hits count separately (they imply an H2D transfer
-/// that the engine charges as extra prefill-equivalent time).
+/// The prefix key of a request's shared system prompt.
+fn prefix_key_of(st: &ServeState, r: &Request) -> PrefixKey {
+    let g = st.graph_of(r.app_id);
+    PrefixKey::of_parts(
+        &g.name,
+        st.types.name(r.type_id),
+        r.shared_prefix_tokens,
+    )
+}
+
+/// Prefix-cache reuse at admission (vLLM-Prefix / Mooncake / TokenCake),
+/// applied after the grant so the hit only ever fires for a request that
+/// actually holds destination blocks:
+///
+/// * **GPU hit** — the index's pinned copy is read in place; the saved
+///   tokens leave the prefill debt immediately.
+/// * **CPU / remote hit** — the saved prefill is only real once the
+///   cached blocks are uploaded: an H2D transfer (priced by the entry's
+///   `upload_factor` — 1.0 local, the interconnect factor for remote
+///   pointers) is charged through the migration ledger, the source entry
+///   is pinned for the read, and the request's `prefix_xfer` gates its
+///   execution until the transfer completes.
 fn maybe_apply_prefix_cache(
     st: &mut ServeState,
     rid: RequestId,
@@ -303,61 +361,215 @@ fn maybe_apply_prefix_cache(
     if !st.cfg.mode.prefix_cache() {
         return;
     }
-    let (fresh, prefix_tokens, key) = {
+    let (eligible, key) = {
         let r = &st.reqs[&rid];
-        let fresh = r.remaining_prefill == r.context_tokens
+        let eligible = r.shared_prefix_tokens > 0
             && r.tokens_generated == 0
-            && r.blocks.is_empty();
-        let g = st.graph_of(r.app_id);
-        let key = PrefixKey::of_parts(
-            &g.name,
-            st.types.name(r.type_id),
-            r.shared_prefix_tokens,
-        );
-        (fresh, r.shared_prefix_tokens, key)
+            && r.remaining_prefill == r.context_tokens;
+        (eligible, prefix_key_of(st, r))
     };
-    if !fresh || prefix_tokens == 0 {
+    if !eligible {
         return;
     }
-    if let Some(hit) = st.prefix.lookup(key, now_us) {
+    st.metrics.counters.prefix_lookups += 1;
+    let Some(hit) = st.prefix.lookup(key, now_us) else {
+        return;
+    };
+    let saved = {
         let r = st.reqs.get_mut(&rid).unwrap();
         let saved = hit.tokens.min(r.remaining_prefill);
         r.remaining_prefill -= saved;
-        match hit.location {
-            PrefixLocation::Gpu => {
-                st.metrics.counters.prefix_hits_gpu += 1
+        saved
+    };
+    st.metrics.counters.prefill_tokens_saved += saved as u64;
+    match hit.location {
+        PrefixLocation::Gpu => {
+            st.metrics.counters.prefix_hits_gpu += 1;
+        }
+        PrefixLocation::Cpu | PrefixLocation::Remote => {
+            if hit.location == PrefixLocation::Cpu {
+                st.metrics.counters.prefix_hits_cpu += 1;
+            } else {
+                st.metrics.counters.prefix_hits_remote += 1;
+                st.push_prefix_event(PrefixEvent::RemoteHit { key });
             }
-            PrefixLocation::Cpu => {
-                st.metrics.counters.prefix_hits_cpu += 1
+            let nb = st
+                .cfg
+                .profile
+                .blocks_for_tokens(saved)
+                .min(st.reqs[&rid].blocks.len());
+            if nb == 0 {
+                return;
             }
+            // The upload writes into the request's own prefix-region
+            // blocks; the ledger entry carries a copy of that extent
+            // range so the debt shows up in the pressure snapshot.
+            let dst = st.reqs[&rid].blocks.clone_prefix(nb);
+            let cost = (st.cfg.profile.upload_us(nb) as f64
+                * hit.upload_factor) as u64;
+            let completes = now_us + cost;
+            // Only a CPU-resident source is pinned for the read (a
+            // remote pointer has no local backing); the flag rides the
+            // transfer so completion/cancel unpins exactly once.
+            let pinned = hit.location == PrefixLocation::Cpu;
+            let xfer = st.ledger.issue_tagged(
+                TransferKind::PrefixHit { key, pinned },
+                rid.0,
+                Direction::H2D,
+                dst,
+                Vec::new(),
+                now_us,
+                completes,
+            );
+            if pinned {
+                st.prefix.pin(key);
+            }
+            st.reqs.get_mut(&rid).unwrap().prefix_xfer = Some(xfer);
+            st.outbox.push(Action::TransferIssued {
+                xfer,
+                completes_us: completes,
+            });
         }
     }
 }
 
 /// Record a finished request's shared prefix in the index so later
-/// instances of the same agent type hit it.
+/// instances of the same agent type hit it. The index takes *ownership*
+/// of the prefix-sized head of the finishing request's block set — the
+/// entry is backed by real pinned extents, never by blocks the pool is
+/// about to free. Freshest copy wins: a displaced older backing (GPU or
+/// the CPU copy of a demoted entry — the Cpu→Gpu promotion leg) is
+/// returned to its pool here.
 pub fn record_prefix(st: &mut ServeState, rid: RequestId, now_us: u64) {
     if !st.cfg.mode.prefix_cache() {
         return;
     }
-    let r = &st.reqs[&rid];
-    if r.shared_prefix_tokens == 0 {
-        return;
+    let (key, tokens, nb) = {
+        let r = &st.reqs[&rid];
+        if r.shared_prefix_tokens == 0 {
+            return;
+        }
+        (
+            prefix_key_of(st, r),
+            r.shared_prefix_tokens,
+            st.cfg.profile.blocks_for_tokens(r.shared_prefix_tokens),
+        )
+    };
+    if nb == 0 || st.reqs[&rid].blocks.len() < nb {
+        return; // no fully resident copy to pin (defensive)
     }
-    let g = st.graph_of(r.app_id);
-    let key = PrefixKey::of_parts(
-        &g.name,
-        st.types.name(r.type_id),
-        r.shared_prefix_tokens,
-    );
-    let blocks = st.cfg.profile.blocks_for_tokens(r.shared_prefix_tokens);
-    st.prefix.insert(
+    if st.prefix.is_pinned(key) {
+        return; // an in-flight read owns the entry; keep it untouched
+    }
+    let backing = {
+        let r = st.reqs.get_mut(&rid).unwrap();
+        PrefixBacking::Gpu(r.blocks.take_prefix(nb))
+    };
+    match st.prefix.insert(key, nb, tokens, backing, 1.0, now_us) {
+        None => {}
+        Some(PrefixBacking::Gpu(b)) => st.gpu.free(b, 0, None),
+        Some(PrefixBacking::Cpu(b)) => st.cpu.release(b),
+        Some(PrefixBacking::Remote) => {}
+    }
+    st.push_prefix_event(PrefixEvent::Inserted {
         key,
-        blocks,
-        r.shared_prefix_tokens,
-        PrefixLocation::Gpu,
-        now_us,
-    );
+        blocks: nb,
+        tokens,
+        location: PrefixLocation::Gpu,
+    });
+}
+
+// ----------------------------------------------------------------------
+// Prefix-cache reclaim: the cache always yields to live work
+// ----------------------------------------------------------------------
+
+/// Reclaim GPU blocks from the prefix cache under admission pressure:
+/// LRU GPU-resident entries are demoted to the CPU tier (when the mode
+/// has one and CPU blocks are available — the D2H leg rides the
+/// pending-free + migration-ledger path) or dropped outright, until
+/// `need` blocks are freed or on their way. Returns the blocks
+/// reclaimed.
+pub fn reclaim_prefix_gpu(
+    st: &mut ServeState,
+    need: u32,
+    now_us: u64,
+) -> u32 {
+    let mut freed = 0u32;
+    while freed < need {
+        let Some((key, blocks)) = st.prefix.peek_lru_gpu() else {
+            break;
+        };
+        if st.cfg.mode.prefix_cpu_tier() {
+            if let Some(cpu_blocks) = st.cpu.alloc(blocks) {
+                let gpu = st
+                    .prefix
+                    .demote_to_cpu(key, cpu_blocks)
+                    .expect("LRU-GPU entry must demote");
+                st.gpu.mark_pending_free(&gpu, 0, None);
+                let completes =
+                    now_us + st.cfg.profile.offload_us(blocks);
+                let xfer = st.ledger.issue_tagged(
+                    TransferKind::PrefixEvict { key },
+                    u64::MAX,
+                    Direction::D2H,
+                    gpu,
+                    Vec::new(),
+                    now_us,
+                    completes,
+                );
+                st.outbox.push(Action::TransferIssued {
+                    xfer,
+                    completes_us: completes,
+                });
+                st.metrics.counters.prefix_demotions += 1;
+                st.push_prefix_event(PrefixEvent::Relocated {
+                    key,
+                    location: PrefixLocation::Cpu,
+                });
+                freed += blocks;
+                continue;
+            }
+        }
+        if !drop_prefix_gpu_lru(st) {
+            break;
+        }
+        freed += blocks;
+    }
+    freed
+}
+
+/// Drop the LRU GPU-resident prefix entry, returning its blocks to the
+/// pool *immediately* (decode growth and deadlock rescue cannot wait for
+/// a demotion transfer). Returns false when no GPU entry exists.
+pub fn drop_prefix_gpu_lru(st: &mut ServeState) -> bool {
+    let Some((key, _)) = st.prefix.peek_lru_gpu() else {
+        return false;
+    };
+    match st.prefix.remove(key) {
+        Some(PrefixBacking::Gpu(b)) => st.gpu.free(b, 0, None),
+        _ => unreachable!("LRU-GPU entry must carry GPU backing"),
+    }
+    st.metrics.counters.prefix_evictions += 1;
+    st.push_prefix_event(PrefixEvent::Removed { key });
+    true
+}
+
+/// Make room in the CPU pool for `need` blocks by dropping LRU unpinned
+/// CPU-resident prefix entries (a request offload outranks a cached
+/// prefix). Returns whether the pool can now serve the allocation.
+pub fn reclaim_prefix_cpu(st: &mut ServeState, need: u32) -> bool {
+    while st.cpu.free_blocks() < need {
+        let Some((key, _)) = st.prefix.peek_lru_cpu_unpinned() else {
+            break;
+        };
+        match st.prefix.remove(key) {
+            Some(PrefixBacking::Cpu(b)) => st.cpu.release(b),
+            _ => unreachable!("LRU-CPU entry must carry CPU backing"),
+        }
+        st.metrics.counters.prefix_evictions += 1;
+        st.push_prefix_event(PrefixEvent::Removed { key });
+    }
+    st.cpu.free_blocks() >= need
 }
 
 #[cfg(test)]
@@ -529,5 +741,87 @@ mod tests {
         let first = st.prefilling.get(0).unwrap();
         record_prefix(&mut st, first, 1000);
         assert!(st.prefix.is_empty(), "vllm mode must not populate index");
+    }
+
+    #[test]
+    fn record_prefix_pins_backing_and_conserves_pool() {
+        let mut st = state(M::TokenCake);
+        st.spawn_app(0, scales(), 0);
+        st.refresh_priorities(0);
+        admit(&mut st, 0);
+        let rid = st.prefilling.get(0).unwrap();
+        let held_before = st.reqs[&rid].blocks.len();
+        record_prefix(&mut st, rid, 1000);
+        let pinned = st.prefix.resident_gpu_blocks();
+        assert!(pinned > 0, "the index must own real backing");
+        // The backing was carved out of the request, not double-counted.
+        assert_eq!(st.reqs[&rid].blocks.len(), held_before - pinned);
+        assert_eq!(
+            st.gpu.free_blocks()
+                + st.reqs[&rid].blocks.len()
+                + pinned,
+            st.gpu.total(),
+            "free + request-held + prefix-resident must cover the pool"
+        );
+        // Releasing the request leaves only the pinned prefix behind.
+        st.release_gpu(rid);
+        assert_eq!(
+            st.gpu.free_blocks() + st.prefix.resident_gpu_blocks(),
+            st.gpu.total()
+        );
+    }
+
+    #[test]
+    fn cpu_prefix_hit_charges_h2d_debt_and_gates_start() {
+        let mut st = state(M::TokenCake);
+        st.spawn_app(0, scales(), 0);
+        st.refresh_priorities(0);
+        admit(&mut st, 0);
+        let first = st.prefilling.get(0).unwrap();
+        record_prefix(&mut st, first, 1000);
+        // Demote the cached prefix to the CPU tier.
+        let resident = st.prefix.resident_gpu_blocks();
+        let freed = reclaim_prefix_gpu(&mut st, resident, 1000);
+        assert_eq!(freed, resident);
+        assert_eq!(st.metrics.counters.prefix_demotions, 1);
+        assert_eq!(
+            st.gpu.pending_free_blocks(),
+            resident,
+            "the D2H leg must ride the pending-free path"
+        );
+        assert_eq!(st.prefix.resident_cpu_blocks(), resident);
+        // A second instance hits the CPU copy: prefill saved, but the
+        // upload debt gates its start and pins the source entry.
+        st.spawn_app(0, scales(), 2000);
+        let second = *st.waiting.front().unwrap();
+        let before = st.reqs[&second].remaining_prefill;
+        admit(&mut st, 2000);
+        let r = &st.reqs[&second];
+        assert!(before > r.remaining_prefill, "prefill must shrink");
+        assert!(r.prefix_xfer.is_some(), "H2D debt must gate the start");
+        assert_eq!(st.metrics.counters.prefix_hits_cpu, 1);
+        assert!(st.metrics.counters.prefill_tokens_saved > 0);
+        assert_eq!(st.ledger.inflight_upload_blocks(), freed);
+        // The pinned source refuses eviction until the read lands.
+        assert!(st.prefix.peek_lru_cpu_unpinned().is_none());
+    }
+
+    #[test]
+    fn reclaim_drops_outright_without_cpu_tier() {
+        // vLLM-Prefix has no host KV store: reclaim frees immediately.
+        let mut st = state(M::VllmPrefix);
+        st.spawn_app(0, scales(), 0);
+        admit(&mut st, 0);
+        let rid = st.prefilling.get(0).unwrap();
+        record_prefix(&mut st, rid, 1000);
+        let resident = st.prefix.resident_gpu_blocks();
+        let free_before = st.gpu.free_blocks();
+        let freed = reclaim_prefix_gpu(&mut st, resident, 2000);
+        assert_eq!(freed, resident);
+        assert_eq!(st.metrics.counters.prefix_evictions, 1);
+        assert_eq!(st.metrics.counters.prefix_demotions, 0);
+        assert_eq!(st.gpu.free_blocks(), free_before + resident);
+        assert_eq!(st.cpu.used_blocks(), 0);
+        assert!(st.prefix.is_empty());
     }
 }

@@ -26,7 +26,7 @@ pub use upload::{
 use crate::coordination::{
     Action, FcRt, PressureSnapshot, ReqState, RequestId, ServeState,
 };
-use crate::kvcache::{Direction, TransferId};
+use crate::kvcache::{Direction, TransferId, TransferKind};
 
 /// What the engine should do after a `call_finish` event.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -272,6 +272,11 @@ pub fn issue_offload(
     now_us: u64,
 ) -> bool {
     let n = st.reqs[&rid].blocks.len();
+    // A live request's offload outranks cached prefixes squatting in the
+    // CPU pool: drop LRU unpinned CPU prefix entries to make room first.
+    if st.cpu.free_blocks() < n {
+        crate::spatial::reclaim_prefix_cpu(st, n);
+    }
     let Some(cpu_blocks) = st.cpu.alloc(n) else {
         // CPU filled up between gate and issue — abandon.
         st.metrics.counters.offloads_rejected += 1;
@@ -318,6 +323,31 @@ pub fn on_transfer_done(
     // blocks) — the batched planner's partial batches resume on it.
     st.epochs.temporal += 1;
     let t = st.ledger.complete(xfer)?;
+    match t.kind {
+        TransferKind::Request => {}
+        TransferKind::PrefixEvict { .. } => {
+            // Prefix demotion D2H landed: the index's former GPU backing
+            // becomes reusable; the entry already answers from its CPU
+            // copy.
+            st.gpu.complete_pending(t.gpu_blocks);
+            return None;
+        }
+        TransferKind::PrefixHit { key, pinned } => {
+            // Prefix upload landed: unpin the source entry (iff this
+            // hit pinned it) and ungate the hitting request (its blocks
+            // were already its own; a preempted request cancelled the
+            // entry via `cancel_prefix_upload`, making this a no-op).
+            if pinned {
+                st.prefix.unpin(key);
+            }
+            if let Some(r) = st.reqs.get_mut(&RequestId(t.req_id)) {
+                if r.prefix_xfer == Some(xfer) {
+                    r.prefix_xfer = None;
+                }
+            }
+            return None;
+        }
+    }
     let rid = RequestId(t.req_id);
     match t.dir {
         Direction::D2H => {

@@ -67,12 +67,16 @@ fn cluster_completes_mixed_workload_across_scales() {
             for i in 0..shards {
                 let st = &eng.shard(i).st;
                 assert_eq!(
-                    st.gpu.free_blocks(),
+                    st.gpu.free_blocks()
+                        + st.prefix.resident_gpu_blocks(),
                     st.gpu.total(),
                     "{shards}/{placement:?} shard {i} leaked GPU blocks"
                 );
                 assert_eq!(st.gpu.pending_free_blocks(), 0);
-                assert_eq!(st.cpu.used_blocks(), 0);
+                assert_eq!(
+                    st.cpu.used_blocks(),
+                    st.prefix.resident_cpu_blocks()
+                );
             }
         }
     }
@@ -158,9 +162,17 @@ fn migration_triggers_and_conserves_blocks() {
     );
     for i in 0..2 {
         let st = &eng.shard(i).st;
-        assert_eq!(st.gpu.free_blocks(), st.gpu.total(), "shard {i}");
+        assert_eq!(
+            st.gpu.free_blocks() + st.prefix.resident_gpu_blocks(),
+            st.gpu.total(),
+            "shard {i}"
+        );
         assert_eq!(st.gpu.pending_free_blocks(), 0, "shard {i}");
-        assert_eq!(st.cpu.used_blocks(), 0, "shard {i}");
+        assert_eq!(
+            st.cpu.used_blocks(),
+            st.prefix.resident_cpu_blocks(),
+            "shard {i}"
+        );
     }
 }
 
@@ -288,6 +300,73 @@ fn migration_window_respects_interconnect_budget() {
     assert_eq!(blocks, 200);
     assert_eq!(batches, 3);
     assert!(max_window <= 100, "window exceeded the budget");
+}
+
+/// The prefix-directory acceptance scenario: spread one template across
+/// shards (round robin guarantees spills), and the directory must turn
+/// cold-shard admissions into remote prefix hits — saving prefill the
+/// per-shard-index baseline re-computes — while replicating hot prefixes
+/// under the interconnect budget. Same seed ⇒ byte-identical digests.
+#[test]
+fn remote_prefix_hits_beat_cold_prefill() {
+    let run = |directory: bool| {
+        let mut c = cfg(4, PlacementPolicy::RoundRobin, 0.5, 21);
+        c.prefix_directory = directory;
+        let mut eng = ClusterEngine::new(c);
+        let rep = eng.run(&mixed(1.0, 24));
+        assert!(!rep.truncated);
+        assert_eq!(rep.aggregate.apps_completed, 24);
+        rep
+    };
+    let with_dir = run(true);
+    let without = run(false);
+    // Spilled apps hit remotely instead of re-prefilling from scratch.
+    assert!(
+        with_dir.aggregate.counters.prefix_hits_remote > 0,
+        "no remote hits: {}",
+        with_dir.summary()
+    );
+    assert!(
+        with_dir.aggregate.counters.prefill_tokens_saved
+            > without.aggregate.counters.prefill_tokens_saved,
+        "directory saved {} prefill tokens vs baseline {}",
+        with_dir.aggregate.counters.prefill_tokens_saved,
+        without.aggregate.counters.prefill_tokens_saved,
+    );
+    // Per-shard-index baseline never sees a remote copy.
+    assert_eq!(without.aggregate.counters.prefix_hits_remote, 0);
+    assert_eq!(without.prefix_replications, 0);
+    // Hot prefixes replicate once remote hits cross the threshold, and
+    // replica volume respects the window budget.
+    assert!(
+        with_dir.prefix_replications > 0,
+        "threshold never triggered replication: {}",
+        with_dir.summary()
+    );
+    assert!(with_dir.prefix_replicated_blocks > 0);
+    // Deterministic: rerun is byte-identical, directory active.
+    let rerun = run(true);
+    assert_eq!(with_dir.digest(), rerun.digest());
+}
+
+/// Directory-driven runs satisfy the planner-gating contract too: the
+/// prefix event feed must not re-open the epoch gate on steady ticks.
+#[test]
+fn prefix_directory_keeps_epoch_gating_effective() {
+    let c = cfg(4, PlacementPolicy::AgentAffinity, 0.08, 17);
+    let rep = ClusterEngine::new(c).run(&mixed(1.0, 16));
+    assert!(!rep.truncated);
+    let counters = &rep.aggregate.counters;
+    assert_eq!(
+        counters.planner_runs + counters.planner_skips,
+        counters.sched_steps
+    );
+    assert!(
+        counters.planner_skips > counters.planner_runs,
+        "planner ran {} of {} steps with the directory active",
+        counters.planner_runs,
+        counters.sched_steps
+    );
 }
 
 /// Aggregate rollup is the sum of the shard bundles.

@@ -111,8 +111,15 @@ fn migration_accounting_closed() {
         let mut e = SimEngine::new(cfg);
         let rep = e.run_workload(&spec);
         assert_eq!(rep.metrics.offload_count, rep.metrics.upload_count);
-        assert_eq!(e.st.cpu.used_blocks(), 0);
-        assert_eq!(e.st.gpu.free_blocks(), e.st.gpu.total());
+        // Pools drain except for backing the prefix index still pins.
+        assert_eq!(
+            e.st.cpu.used_blocks(),
+            e.st.prefix.resident_cpu_blocks()
+        );
+        assert_eq!(
+            e.st.gpu.free_blocks() + e.st.prefix.resident_gpu_blocks(),
+            e.st.gpu.total()
+        );
         // No request left in a transfer state.
         assert!(e
             .st

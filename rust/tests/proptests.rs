@@ -10,7 +10,8 @@ use tokencake::config::{Mode, ServeConfig};
 use tokencake::engine::sim::SimEngine;
 use tokencake::graph::{CallSpec, FuncKind, GraphBuilder};
 use tokencake::kvcache::{
-    AllocOutcome, BlockSet, CpuBlockPool, GpuPool, Route,
+    AllocOutcome, BlockSet, CpuBlockPool, GpuPool, PrefixBacking,
+    PrefixIndex, PrefixKey, Route,
 };
 use tokencake::sim::Rng;
 use tokencake::workload::{Dataset, WorkloadSpec};
@@ -225,6 +226,151 @@ fn prop_shared_never_starves_reserved_headroom() {
 }
 
 // ---------------------------------------------------------------------
+// Prefix-index lifecycle: pinned backing is disjoint from every other
+// owner, and no hit can ever reference freed GPU blocks
+// ---------------------------------------------------------------------
+
+/// Random interleavings of request allocs/frees with prefix lifecycle
+/// ops (record-by-carve, demote, drop, lookup). Invariants on every
+/// step: pool conservation *including pinned prefix extents*, CPU-pool
+/// agreement with the index, and full disjoint coverage of the block
+/// space by free ∪ request-held ∪ prefix-held — which is exactly the
+/// "no prefix hit ever references freed GPU blocks" property, since a
+/// hit can only return an entry whose extents the index still owns.
+#[test]
+fn prop_prefix_backing_disjoint_and_conserved() {
+    for seed in 0..200u64 {
+        let mut rng = Rng::new(seed + 9_001);
+        let total = rng.range_u64(32, 256) as u32;
+        let mut gpu = GpuPool::new(total);
+        let mut cpu = CpuBlockPool::new(total);
+        let mut ix = PrefixIndex::new();
+        let mut live: Vec<BlockSet> = Vec::new();
+        let mut now = 0u64;
+        for _step in 0..250 {
+            now += rng.range_u64(1, 50);
+            match rng.range_u64(0, 12) {
+                0..=3 => {
+                    let n = rng.range_u64(1, 16) as u32;
+                    if let AllocOutcome::Granted { blocks, .. } =
+                        gpu.alloc(n, Route::Shared)
+                    {
+                        live.push(blocks);
+                    }
+                }
+                4..=5 => {
+                    if !live.is_empty() {
+                        let i =
+                            rng.range_u64(0, live.len() as u64) as usize;
+                        gpu.free(live.swap_remove(i), 0, None);
+                    }
+                }
+                6..=7 => {
+                    // record_prefix-style: carve backing out of a live
+                    // request and hand ownership to the index.
+                    let Some(i) = (!live.is_empty()).then(|| {
+                        rng.range_u64(0, live.len() as u64) as usize
+                    }) else {
+                        continue;
+                    };
+                    if live[i].len() < 2 {
+                        continue;
+                    }
+                    let nb =
+                        rng.range_u64(1, live[i].len() as u64) as u32;
+                    let backing =
+                        PrefixBacking::Gpu(live[i].take_prefix(nb));
+                    let key = PrefixKey(rng.range_u64(0, 8));
+                    match ix.insert(key, nb, nb * 16, backing, 1.0, now)
+                    {
+                        Some(PrefixBacking::Gpu(old)) => {
+                            gpu.free(old, 0, None)
+                        }
+                        Some(PrefixBacking::Cpu(old)) => {
+                            cpu.release(old)
+                        }
+                        _ => {}
+                    }
+                }
+                8 => {
+                    // Gpu → Cpu demotion (synchronous free stands in
+                    // for the pending-free D2H ride).
+                    if let Some((key, blocks)) = ix.peek_lru_gpu() {
+                        if let Some(cb) = cpu.alloc(blocks) {
+                            let g =
+                                ix.demote_to_cpu(key, cb).unwrap();
+                            assert_eq!(g.len(), blocks, "seed {seed}");
+                            gpu.free(g, 0, None);
+                        }
+                    }
+                }
+                9 => {
+                    if let Some((key, _)) = ix.peek_lru_gpu() {
+                        match ix.remove(key) {
+                            Some(PrefixBacking::Gpu(b)) => {
+                                gpu.free(b, 0, None)
+                            }
+                            _ => panic!("seed {seed}: bad backing"),
+                        }
+                    }
+                }
+                10 => {
+                    if let Some((key, _)) = ix.peek_lru_cpu_unpinned() {
+                        match ix.remove(key) {
+                            Some(PrefixBacking::Cpu(b)) => {
+                                cpu.release(b)
+                            }
+                            _ => panic!("seed {seed}: bad backing"),
+                        }
+                    }
+                }
+                _ => {
+                    // Lookups churn the LRU secondary indices.
+                    let key = PrefixKey(rng.range_u64(0, 8));
+                    let _ = ix.lookup(key, now);
+                }
+            }
+            // ---- Invariants, every step. ----
+            let held: u32 = live.iter().map(|b| b.len()).sum();
+            assert_eq!(
+                gpu.free_blocks() + held + ix.resident_gpu_blocks(),
+                total,
+                "seed {seed}: conservation with pinned prefixes"
+            );
+            assert_eq!(
+                cpu.used_blocks(),
+                ix.resident_cpu_blocks(),
+                "seed {seed}: cpu pool vs index disagree"
+            );
+            // Disjoint full coverage: free ∪ request-held ∪ prefix-held
+            // owns every block exactly once — a hit can therefore never
+            // reference a freed block.
+            let mut all: Vec<u32> = Vec::with_capacity(total as usize);
+            for b in &live {
+                all.extend(b.iter_blocks().map(|id| id.0));
+            }
+            for e in ix.resident_gpu_extents() {
+                all.extend(e.start..e.start + e.len);
+            }
+            all.extend(
+                gpu.free_extents()
+                    .iter()
+                    .flat_map(|e| e.start..e.start + e.len),
+            );
+            let n_all = all.len();
+            all.sort_unstable();
+            all.dedup();
+            assert_eq!(
+                all.len(),
+                n_all,
+                "seed {seed}: block owned twice (prefix overlap)"
+            );
+            assert_eq!(n_all as u32, total, "seed {seed}: block lost");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
 // CPU pool: ids never double-allocated
 // ---------------------------------------------------------------------
 
@@ -400,18 +546,23 @@ fn prop_engine_conservation_random_workloads() {
             rep.metrics.apps_completed as usize, apps,
             "seed {seed} {mode:?}"
         );
-        // All memory returned.
+        // All memory returned, except backing the prefix index pins
+        // (prefix-cache modes keep shared prefixes resident by design).
         assert_eq!(
-            engine.st.gpu.free_blocks(),
+            engine.st.gpu.free_blocks()
+                + engine.st.prefix.resident_gpu_blocks(),
             engine.st.gpu.total(),
             "seed {seed} {mode:?}: gpu leak"
         );
         assert_eq!(engine.st.gpu.pending_free_blocks(), 0);
         assert_eq!(
             engine.st.cpu.used_blocks(),
-            0,
+            engine.st.prefix.resident_cpu_blocks(),
             "seed {seed} {mode:?}: cpu leak"
         );
+        if !mode.prefix_cache() {
+            assert!(engine.st.prefix.is_empty(), "{mode:?}");
+        }
         // Offloads and uploads pair up by completion.
         assert_eq!(
             rep.metrics.offload_count, rep.metrics.upload_count,
@@ -514,16 +665,20 @@ fn prop_batched_migration_conserves_and_respects_budget() {
                 "seed {seed}"
             );
         }
-        // Shard pools drained completely.
+        // Shard pools drained completely (modulo pinned prefixes).
         for i in 0..rep.num_shards {
             let st = &eng.shard(i).st;
             assert_eq!(
-                st.gpu.free_blocks(),
+                st.gpu.free_blocks() + st.prefix.resident_gpu_blocks(),
                 st.gpu.total(),
                 "seed {seed} shard {i}: gpu leak"
             );
             assert_eq!(st.gpu.pending_free_blocks(), 0, "seed {seed}");
-            assert_eq!(st.cpu.used_blocks(), 0, "seed {seed}");
+            assert_eq!(
+                st.cpu.used_blocks(),
+                st.prefix.resident_cpu_blocks(),
+                "seed {seed}"
+            );
         }
     }
 }
