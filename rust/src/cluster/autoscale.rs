@@ -1,0 +1,1223 @@
+//! Elastic replica autoscaling: a deterministic hysteresis controller
+//! that grows and drains worker shards from the aggregate pressure
+//! signal, with Continuum-style lifetime-aware placement.
+//!
+//! The fixed fleet the rest of the cluster layer serves is here made
+//! elastic. Capacity up to `autoscale.max_shards` is *provisioned* at
+//! construction (engines built, id ranges reserved — which is what keeps
+//! whole-cluster runs byte-identical); the controller decides how much
+//! of it *serves*:
+//!
+//! ```text
+//!        grow                     warm-up elapses on the clock
+//!  Cold ───────▶ Warming ──────────────────────────▶ Active
+//!                                                      │ drain
+//!                  cancel (load returned) ◀────────────▼
+//!  Retired ◀─────────────────────────────────────── Draining
+//!            pool empty, no live apps, no in-flight
+//! ```
+//!
+//! * **Signal** — per-shard load score (GPU occupancy + waiting demand)
+//!   plus the stalled/offloaded KV fraction: cache parked for a function
+//!   call *returns as demand* when the tool finishes, so counting it
+//!   dampens the flapping a naive occupancy signal would cause (the
+//!   fleet is never drained out from under work about to resume). The
+//!   controller re-evaluates only when some serving shard's **pressure
+//!   epoch** moved (the free list crossed a watermark band — the same
+//!   O(1) gate the schedulers use), an arrival landed, or a grow/drain
+//!   is mid-flight: at steady state the control plane costs one epoch
+//!   comparison per shard.
+//! * **Hysteresis** — grow at/above `grow_watermark` immediately (under
+//!   a cooldown); drain only after `drain_confirm` consecutive
+//!   evaluations at/below `drain_watermark`. A drain is *cancelled* (the
+//!   shard simply resumes serving) if pressure returns while it is still
+//!   evacuating — the cheapest capacity is the capacity not yet gone.
+//! * **Grow** — the lowest-index cold (or previously retired) shard
+//!   warms for `warmup_cost_us` of clock time, modeling model load + KV
+//!   pool init; the router sends it nothing until the warm-up elapses.
+//!   Warm-ups are tracked beside the event queue (not on it), so a
+//!   pending warm-up caps the cluster's clock jumps without ever
+//!   masking the fully-idle deadlock-rescue path.
+//! * **Drain** — the victim is the active shard with the least
+//!   committed long-lived KV (stalled blocks weighted by predicted
+//!   remaining stall, then raw occupancy; the highest index breaks
+//!   ties). The router stops placing onto it, its stalled applications
+//!   leave through the *existing* batched cross-worker migration path
+//!   under the shared per-window interconnect budget, its running work
+//!   finishes in place, and its prefix cache evacuates: entries another
+//!   shard also holds are dropped free, sole copies are replicated into
+//!   an active shard's CPU tier (same budget) before the local copy is
+//!   freed. The shard retires only when its pools are empty and no
+//!   transfer touches it — blocks conserved end to end, which
+//!   `ClusterEngine::check_conservation` and the drain proptest pin.
+//! * **Lifetime-aware placement** — a per-template KV-lifetime
+//!   predictor (the template's static tool-call count × an EWMA of its
+//!   observed stall durations, fed by `ServeState::note_fc_lifetime` on
+//!   every FC finish) biases routing: long-lifetime applications avoid
+//!   the *youngest* active shards — exactly the ones the controller
+//!   drains first when load falls — so a drain finds mostly short-lived
+//!   work in its way. Draining shards are excluded from placement
+//!   outright.
+//!
+//! Shard **retirement is only reachable from this module** (CI greps for
+//! `ShardPhase::Retired` / `retire_shard` elsewhere): every path that
+//! returns capacity runs the quiescence check here.
+
+use crate::config::AutoscaleConfig;
+use crate::coordination::{Action, PrefixEvent, PressureSnapshot};
+use crate::graph::{AppGraph, NodeKind};
+use crate::kvcache::{Direction, PrefixBacking, Route, TransferKind};
+
+use super::engine::ClusterEngine;
+use super::router::Router;
+
+/// Additive routing-score penalty at full lifetime × full youth —
+/// deliberately smaller than the affinity warmth bonus so KV reuse
+/// still dominates placement.
+const LIFETIME_BIAS: f64 = 0.15;
+
+/// Weight of the stalled/offloaded resumption demand inside the
+/// controller's pressure signal.
+const RESUME_DEMAND_WEIGHT: f64 = 0.5;
+
+/// Where a provisioned shard is in its serving lifecycle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum ShardPhase {
+    /// Provisioned but never (or not currently) part of the fleet.
+    Cold,
+    /// Spinning up; joins the fleet when the warm-up event lands.
+    Warming,
+    Active,
+    /// Excluded from placement; evacuating apps and prefix entries.
+    Draining,
+    /// Quiesced and returned — may be re-grown later.
+    Retired,
+}
+
+/// Per-template KV-lifetime predictor (Continuum): how long will an
+/// application of this template keep KV alive across function-call
+/// stalls? Static profile (the graph's tool-call count) × an EWMA of
+/// observed stall durations for the template.
+#[derive(Debug, Clone, Default)]
+pub struct LifetimePredictor {
+    static_calls: Vec<u32>,
+    ewma_stall_us: Vec<f64>,
+    seeded: Vec<bool>,
+    ewma: f64,
+    default_stall_us: f64,
+}
+
+impl LifetimePredictor {
+    pub fn new(ewma: f64, default_stall_us: u64) -> Self {
+        Self {
+            static_calls: Vec::new(),
+            ewma_stall_us: Vec::new(),
+            seeded: Vec::new(),
+            ewma,
+            default_stall_us: default_stall_us as f64,
+        }
+    }
+
+    /// Register a template (same order as the shards register graphs,
+    /// so template indices agree). Counts the tool-call profile: agent
+    /// phases that end in a call plus standalone func nodes.
+    pub fn register_template(&mut self, g: &AppGraph) -> usize {
+        let mut calls = 0u32;
+        for node in g.nodes() {
+            match &node.kind {
+                NodeKind::Agent(a) => {
+                    calls += a
+                        .phases
+                        .iter()
+                        .filter(|p| p.call.is_some())
+                        .count() as u32;
+                }
+                NodeKind::Func(_) => calls += 1,
+            }
+        }
+        self.static_calls.push(calls);
+        self.ewma_stall_us.push(self.default_stall_us);
+        self.seeded.push(false);
+        self.static_calls.len() - 1
+    }
+
+    /// Fold one observed FC stall duration into the template's EWMA.
+    pub fn observe(&mut self, template: usize, stall_us: u64) {
+        let Some(v) = self.ewma_stall_us.get_mut(template) else {
+            return;
+        };
+        if self.seeded[template] {
+            *v = (1.0 - self.ewma) * *v + self.ewma * stall_us as f64;
+        } else {
+            *v = stall_us as f64;
+            self.seeded[template] = true;
+        }
+    }
+
+    /// Predicted KV lifetime of one application of `template` (µs):
+    /// its call count × the per-call stall estimate.
+    pub fn predicted_lifetime_us(&self, template: usize) -> f64 {
+        let calls =
+            self.static_calls.get(template).copied().unwrap_or(0);
+        let stall = self
+            .ewma_stall_us
+            .get(template)
+            .copied()
+            .unwrap_or(self.default_stall_us);
+        calls as f64 * stall
+    }
+
+    /// Lifetime normalized against the longest-lived registered
+    /// template, in [0,1].
+    pub fn lifetime_norm(&self, template: usize) -> f64 {
+        let max = (0..self.static_calls.len())
+            .map(|t| self.predicted_lifetime_us(t))
+            .fold(0.0f64, f64::max);
+        if max <= 0.0 {
+            return 0.0;
+        }
+        (self.predicted_lifetime_us(template) / max).clamp(0.0, 1.0)
+    }
+
+    pub fn observations_seeded(&self, template: usize) -> bool {
+        self.seeded.get(template).copied().unwrap_or(false)
+    }
+}
+
+/// Controller statistics — surfaced on [`super::ClusterReport`] and in
+/// every digest (scale decisions are scheduler decisions: reruns must
+/// agree byte-for-byte).
+#[derive(Debug, Clone, Default)]
+pub struct AutoscaleStats {
+    pub scale_up_events: u64,
+    pub scale_down_events: u64,
+    pub drain_cancels: u64,
+    pub shards_retired: u64,
+    /// KV blocks migrated off draining shards.
+    pub drained_app_blocks: u64,
+    /// Sole-copy prefix blocks replicated off draining shards.
+    pub drained_prefix_blocks: u64,
+    /// Prefix blocks dropped in a drain (no CPU tier / no directory).
+    pub drained_prefix_dropped_blocks: u64,
+    /// Activation→retirement lifetime of each retired shard (µs), in
+    /// retirement order — the shard-lifetime histogram.
+    pub shard_lifetimes_us: Vec<u64>,
+    /// Controller evaluations run vs. skipped by the pressure-epoch
+    /// gate (the control plane's steady-state cost headline).
+    pub evals: u64,
+    pub eval_skips: u64,
+}
+
+/// The autoscale control plane one [`ClusterEngine`] owns.
+pub(super) struct Autoscaler {
+    cfg: AutoscaleConfig,
+    phase: Vec<ShardPhase>,
+    activated_at_us: Vec<u64>,
+    /// First time the shard ever activated (None = never) — the start
+    /// of its provisioned span for utilization weighting.
+    first_activated_at_us: Vec<Option<u64>>,
+    retired_at_us: Vec<Option<u64>>,
+    ever_active: Vec<bool>,
+    /// Pressure-epoch watermarks: the controller re-evaluates only when
+    /// some serving shard's pressure epoch moved past these.
+    consumed_pressure: Vec<u64>,
+    saw_arrival: bool,
+    last_eval_us: u64,
+    evaluated_once: bool,
+    cooldown_until_us: u64,
+    /// Consecutive below-drain-watermark evaluations (hysteresis).
+    below_count: u32,
+    next_drain_window_us: u64,
+    predictor: LifetimePredictor,
+    stats: AutoscaleStats,
+}
+
+impl Autoscaler {
+    pub(super) fn new(
+        cfg: AutoscaleConfig,
+        total: usize,
+        initial: usize,
+    ) -> Self {
+        assert!(initial >= 1 && initial <= total);
+        let phase: Vec<ShardPhase> = (0..total)
+            .map(|i| {
+                if i < initial {
+                    ShardPhase::Active
+                } else {
+                    ShardPhase::Cold
+                }
+            })
+            .collect();
+        let predictor = LifetimePredictor::new(
+            cfg.lifetime_ewma,
+            // Seed the per-call stall estimate with the forecaster's
+            // conservative system default.
+            2_000_000,
+        );
+        Self {
+            phase,
+            activated_at_us: vec![0; total],
+            first_activated_at_us: (0..total)
+                .map(|i| if i < initial { Some(0) } else { None })
+                .collect(),
+            retired_at_us: vec![None; total],
+            ever_active: (0..total).map(|i| i < initial).collect(),
+            consumed_pressure: vec![0; total],
+            saw_arrival: false,
+            last_eval_us: 0,
+            evaluated_once: false,
+            cooldown_until_us: 0,
+            below_count: 0,
+            next_drain_window_us: 0,
+            predictor,
+            stats: AutoscaleStats::default(),
+            cfg,
+        }
+    }
+
+    pub(super) fn register_template(&mut self, g: &AppGraph) {
+        self.predictor.register_template(g);
+    }
+
+    pub(super) fn is_placeable(&self, i: usize) -> bool {
+        self.phase[i] == ShardPhase::Active
+    }
+
+    pub(super) fn is_steppable(&self, i: usize) -> bool {
+        matches!(
+            self.phase[i],
+            ShardPhase::Active | ShardPhase::Draining
+        )
+    }
+
+    pub(super) fn is_runnable(&self, i: usize) -> bool {
+        matches!(
+            self.phase[i],
+            ShardPhase::Active | ShardPhase::Draining | ShardPhase::Warming
+        )
+    }
+
+    pub(super) fn ever_active(&self, i: usize) -> bool {
+        self.ever_active[i]
+    }
+
+    pub(super) fn retired_at(&self, i: usize) -> Option<u64> {
+        self.retired_at_us[i]
+    }
+
+    /// Shards currently serving (active or draining).
+    pub(super) fn serving_count(&self) -> usize {
+        self.phase
+            .iter()
+            .filter(|p| {
+                matches!(p, ShardPhase::Active | ShardPhase::Draining)
+            })
+            .count()
+    }
+
+    /// Shards that count against `max_shards` (serving or warming).
+    fn provisioned_count(&self) -> usize {
+        self.phase
+            .iter()
+            .filter(|p| {
+                matches!(
+                    p,
+                    ShardPhase::Active
+                        | ShardPhase::Draining
+                        | ShardPhase::Warming
+                )
+            })
+            .count()
+    }
+
+    pub(super) fn phase_name(&self, i: usize) -> &'static str {
+        match self.phase[i] {
+            ShardPhase::Cold => "cold",
+            ShardPhase::Warming => "warming",
+            ShardPhase::Active => "active",
+            ShardPhase::Draining => "draining",
+            ShardPhase::Retired => "retired",
+        }
+    }
+
+    pub(super) fn stats(&self) -> &AutoscaleStats {
+        &self.stats
+    }
+
+    /// An arrival is a demand signal the pressure bands may not have
+    /// caught yet; wake the next evaluation.
+    pub(super) fn note_arrival(&mut self) {
+        self.saw_arrival = true;
+    }
+
+    /// A grown shard's warm-up elapsed. Returns whether it joined (a
+    /// drain-cancelled shard may have re-activated meanwhile).
+    pub(super) fn on_warm(&mut self, i: usize, now: u64) -> bool {
+        if self.phase[i] != ShardPhase::Warming {
+            return false;
+        }
+        self.phase[i] = ShardPhase::Active;
+        self.activated_at_us[i] = now;
+        if self.first_activated_at_us[i].is_none() {
+            self.first_activated_at_us[i] = Some(now);
+        }
+        self.ever_active[i] = true;
+        true
+    }
+
+    /// Clock time shard `i` was provisioned by `end_us`: first
+    /// activation → retirement (or the run end). Zero for never-grown
+    /// capacity. (A retire→regrow gap is counted — the approximation
+    /// errs toward under-reporting elastic utilization, never
+    /// inflating it.)
+    pub(super) fn provisioned_us(&self, i: usize, end_us: u64) -> u64 {
+        let Some(start) = self.first_activated_at_us[i] else {
+            return 0;
+        };
+        let end = match self.phase[i] {
+            ShardPhase::Retired => {
+                self.retired_at_us[i].unwrap_or(end_us)
+            }
+            _ => end_us,
+        };
+        end.saturating_sub(start)
+    }
+
+    /// A drain-evacuation replica was discarded at landing with no
+    /// surviving copy anywhere: those blocks were dropped, not
+    /// relocated — move them between the two counters.
+    pub(super) fn note_evacuation_dropped(&mut self, blocks: u32) {
+        self.stats.drained_prefix_blocks = self
+            .stats
+            .drained_prefix_blocks
+            .saturating_sub(blocks as u64);
+        self.stats.drained_prefix_dropped_blocks += blocks as u64;
+    }
+
+    /// Lifetime-aware placement bias for one arriving application:
+    /// penalize young active shards (the next drain victims) in
+    /// proportion to the app's predicted KV lifetime. All-zero when the
+    /// template is short-lived or ages don't differ.
+    pub(super) fn route_bias(
+        &self,
+        template: usize,
+        now: u64,
+    ) -> Vec<f64> {
+        let n = self.phase.len();
+        let mut bias = vec![0.0; n];
+        let l = self.predictor.lifetime_norm(template);
+        if l <= 0.0 {
+            return bias;
+        }
+        let ages: Vec<u64> = (0..n)
+            .map(|i| {
+                if self.is_placeable(i) {
+                    now.saturating_sub(self.activated_at_us[i])
+                } else {
+                    0
+                }
+            })
+            .collect();
+        let max_age = ages.iter().copied().max().unwrap_or(0);
+        if max_age == 0 {
+            return bias;
+        }
+        for i in 0..n {
+            if self.is_placeable(i) {
+                let youth = 1.0 - ages[i] as f64 / max_age as f64;
+                bias[i] = LIFETIME_BIAS * l * youth;
+            }
+        }
+        bias
+    }
+}
+
+/// One shard's contribution to the controller's pressure signal: the
+/// router's load score plus the stalled/offloaded KV fraction — parked
+/// cache that resumes as demand when its tool returns (predicted
+/// near-term demand, the anti-flap term).
+pub fn shard_signal(snap: &PressureSnapshot) -> f64 {
+    let total = snap.gpu_total.max(1) as f64;
+    let resume = (snap.offloadable_stalled + snap.offloaded_blocks)
+        as f64
+        / total;
+    Router::load_score(snap) + RESUME_DEMAND_WEIGHT * resume
+}
+
+/// The control-plane entry the engine calls once per loop iteration.
+pub(super) fn tick(a: &mut Autoscaler, eng: &mut ClusterEngine, now: u64) {
+    tick_inner(a, eng, now, false);
+}
+
+/// Test hook: one control step with the interval, cooldown, and
+/// confirmation gates bypassed.
+pub(super) fn step_forced(
+    a: &mut Autoscaler,
+    eng: &mut ClusterEngine,
+    now: u64,
+) {
+    a.next_drain_window_us = 0;
+    a.cooldown_until_us = 0;
+    a.last_eval_us = 0;
+    a.evaluated_once = false;
+    a.below_count = a.cfg.drain_confirm;
+    tick_inner(a, eng, now, true);
+}
+
+fn tick_inner(
+    a: &mut Autoscaler,
+    eng: &mut ClusterEngine,
+    now: u64,
+    force: bool,
+) {
+    // Fold the shards' published FC-stall observations into the
+    // lifetime predictor every tick, ahead of the evaluation gate:
+    // taking an empty Vec is free, and observations must neither pool
+    // unboundedly through a gated quiet stretch nor reach the
+    // predictor stale.
+    for i in 0..eng.shards.len() {
+        for (template, stall_us) in
+            eng.shards[i].st.drain_lifetime_obs()
+        {
+            a.predictor.observe(template, stall_us);
+        }
+    }
+    let any_draining =
+        a.phase.iter().any(|p| *p == ShardPhase::Draining);
+    if any_draining {
+        drain_windows(a, eng, now);
+    }
+    maybe_evaluate(a, eng, now, force);
+}
+
+/// Controller evaluation, behind the pressure-epoch gate and the
+/// evaluation interval: at steady state (no band crossing, no arrival,
+/// nothing warming or draining) this is a handful of integer compares.
+fn maybe_evaluate(
+    a: &mut Autoscaler,
+    eng: &mut ClusterEngine,
+    now: u64,
+    force: bool,
+) {
+    if !force
+        && a.evaluated_once
+        && now < a.last_eval_us + a.cfg.interval_us
+    {
+        return;
+    }
+    let mut moved = a.saw_arrival || !a.evaluated_once;
+    for i in 0..eng.shards.len() {
+        if !a.is_steppable(i) {
+            continue;
+        }
+        if eng.shards[i].st.epochs.pressure != a.consumed_pressure[i] {
+            moved = true;
+        }
+    }
+    let busy_phase = a.phase.iter().any(|p| {
+        matches!(p, ShardPhase::Warming | ShardPhase::Draining)
+    });
+    if !moved && !busy_phase && !force {
+        a.stats.eval_skips += 1;
+        return;
+    }
+    a.stats.evals += 1;
+    a.last_eval_us = now;
+    a.evaluated_once = true;
+    a.saw_arrival = false;
+    for i in 0..eng.shards.len() {
+        a.consumed_pressure[i] = eng.shards[i].st.epochs.pressure;
+    }
+
+    let signal = aggregate_signal(a, eng);
+    if signal >= a.cfg.grow_watermark {
+        a.below_count = 0;
+        grow_or_cancel_drain(a, eng, now, force);
+    } else if signal <= a.cfg.drain_watermark {
+        a.below_count = a.below_count.saturating_add(1);
+        if a.below_count >= a.cfg.drain_confirm {
+            maybe_drain(a, eng, now, force);
+        }
+    } else {
+        a.below_count = 0;
+    }
+}
+
+/// Mean pressure signal over the capacity that will remain: draining
+/// shards' load still counts (it must land somewhere) but their
+/// capacity does not — so a drain that concentrates load too much
+/// reads as pressure and gets cancelled.
+fn aggregate_signal(a: &Autoscaler, eng: &ClusterEngine) -> f64 {
+    let mut sum = 0.0;
+    let mut active = 0usize;
+    for i in 0..eng.shards.len() {
+        match a.phase[i] {
+            ShardPhase::Active => active += 1,
+            ShardPhase::Draining => {}
+            _ => continue,
+        }
+        sum += shard_signal(&eng.shards[i].st.snapshot());
+    }
+    if active == 0 {
+        return f64::INFINITY;
+    }
+    sum / active as f64
+}
+
+fn grow_or_cancel_drain(
+    a: &mut Autoscaler,
+    eng: &mut ClusterEngine,
+    now: u64,
+    force: bool,
+) {
+    // Cancel an in-progress drain first: the cheapest capacity is the
+    // capacity not yet gone — the shard just resumes serving (whatever
+    // already migrated away stays away).
+    if let Some(i) =
+        a.phase.iter().position(|p| *p == ShardPhase::Draining)
+    {
+        a.phase[i] = ShardPhase::Active;
+        eng.router.set_eligible(i, true);
+        a.stats.drain_cancels += 1;
+        a.cooldown_until_us = now + a.cfg.cooldown_us;
+        return;
+    }
+    if !force && now < a.cooldown_until_us {
+        return;
+    }
+    if a.provisioned_count() >= a.cfg.max_shards {
+        return;
+    }
+    let Some(i) = (0..a.phase.len()).find(|&i| {
+        matches!(a.phase[i], ShardPhase::Cold | ShardPhase::Retired)
+    }) else {
+        return;
+    };
+    a.phase[i] = ShardPhase::Warming;
+    a.retired_at_us[i] = None;
+    // Tracked outside the event queue: a pending warm-up caps the
+    // cluster's clock jumps but never masks the idle-rescue path.
+    eng.pending_warm.push((now + a.cfg.warmup_cost_us, i));
+    a.stats.scale_up_events += 1;
+    a.cooldown_until_us = now + a.cfg.cooldown_us;
+}
+
+fn maybe_drain(
+    a: &mut Autoscaler,
+    eng: &mut ClusterEngine,
+    now: u64,
+    force: bool,
+) {
+    if !force && now < a.cooldown_until_us {
+        return;
+    }
+    let active: Vec<usize> = (0..a.phase.len())
+        .filter(|&i| a.phase[i] == ShardPhase::Active)
+        .collect();
+    // Capacity after every in-progress drain completes must still meet
+    // the floor.
+    if active.len() <= a.cfg.min_shards {
+        return;
+    }
+    // Victim: least committed long-lived KV first (stalled blocks ×
+    // predicted remaining stall, in block·ms), then least raw
+    // occupancy; the highest index breaks exact ties (newest capacity
+    // drains first, matching the router's youth bias).
+    let victim = active
+        .iter()
+        .copied()
+        .min_by_key(|&i| {
+            let st = &eng.shards[i].st;
+            let mut committed: u64 = 0;
+            for rid in &st.stalled_ids {
+                let r = &st.reqs[rid];
+                let rem_ms = r
+                    .fc
+                    .as_ref()
+                    .map(|f| f.predicted_end_us.saturating_sub(now))
+                    .unwrap_or(0)
+                    / 1000;
+                committed +=
+                    r.blocks.len() as u64 * rem_ms.max(1);
+            }
+            let used =
+                st.gpu.total() - st.gpu.free_blocks();
+            (committed, used, std::cmp::Reverse(i))
+        })
+        .expect("active set checked non-empty");
+    a.phase[victim] = ShardPhase::Draining;
+    eng.router.set_eligible(victim, false);
+    a.stats.scale_down_events += 1;
+    a.below_count = 0;
+    a.cooldown_until_us = now + a.cfg.cooldown_us;
+    // Evacuate immediately — don't wait for the next window.
+    a.next_drain_window_us = 0;
+    drain_windows(a, eng, now);
+}
+
+/// One evacuation window per rebalance interval for every draining
+/// shard, plus the retirement check.
+fn drain_windows(a: &mut Autoscaler, eng: &mut ClusterEngine, now: u64) {
+    if now >= a.next_drain_window_us {
+        a.next_drain_window_us =
+            now + eng.cfg.rebalance_interval_us;
+        for src in 0..eng.shards.len() {
+            if a.phase[src] == ShardPhase::Draining {
+                drain_one_window(a, eng, src, now);
+                // Sync after EVERY shard's window, not once at the
+                // end: with two shards draining, the second must see
+                // the first's drops applied, or each could treat the
+                // other as a surviving holder and the cluster's last
+                // copy would be dropped instead of relocated.
+                eng.sync_prefix_dir();
+            }
+        }
+    }
+    for i in 0..eng.shards.len() {
+        if a.phase[i] == ShardPhase::Draining {
+            try_retire(a, eng, i, now);
+        }
+    }
+}
+
+/// One bandwidth-capped evacuation window for a draining shard: stalled
+/// applications leave through the existing cross-worker migration path,
+/// then the prefix cache evacuates — all under the shared per-window
+/// interconnect budget.
+fn drain_one_window(
+    a: &mut Autoscaler,
+    eng: &mut ClusterEngine,
+    src: usize,
+    now: u64,
+) {
+    let n = eng.shards.len();
+    let usages: Vec<f64> =
+        eng.shards.iter().map(|s| s.st.gpu.usage()).collect();
+    // Destination room, tracked logically across the batch exactly as
+    // the load-balancing planner does.
+    let mut room: Vec<u32> = (0..n)
+        .map(|i| {
+            if i != src && a.is_placeable(i) {
+                eng.shards[i].st.gpu.available_for(Route::Shared)
+            } else {
+                0
+            }
+        })
+        .collect();
+    let mut victims = 0u64;
+    let mut window_blocks = 0u64;
+    for (app_id, rid, blocks, _predicted_end) in eng.pick_candidates(src)
+    {
+        // Least-loaded active destination with room (id breaks ties).
+        let Some(dst) = (0..n)
+            .filter(|&d| room[d] >= blocks && blocks > 0)
+            .min_by(|&x, &y| {
+                usages[x].total_cmp(&usages[y]).then(x.cmp(&y))
+            })
+        else {
+            continue;
+        };
+        // Unlike the load balancer there is no payback test — the KV
+        // must leave regardless — but the wire is still budgeted.
+        // Partial-batch fallback (as in `plan_migration`): an
+        // over-budget candidate is skipped, smaller later ones may
+        // still pack into the window's remainder.
+        if !eng.ic_window_take(blocks, now) {
+            continue;
+        }
+        let cost_us = eng.wire_cost_us(blocks);
+        eng.start_migration(src, dst, app_id, rid, blocks, cost_us, now);
+        room[dst] -= blocks;
+        a.stats.drained_app_blocks += blocks as u64;
+        victims += 1;
+        window_blocks += blocks as u64;
+    }
+    if victims > 0 {
+        eng.migration_batches += 1;
+        eng.max_window_migration_blocks =
+            eng.max_window_migration_blocks.max(window_blocks);
+    }
+
+    // Prefix evacuation. Entries another shard also holds are dropped
+    // free (a pure discard — nothing travels); a sole copy is
+    // replicated into an active shard's CPU tier (interconnect-priced,
+    // same window budget) — TokenDance-style collective sharing is
+    // what makes a drain affordable. Pinned entries (in-flight reads)
+    // wait for the next window; an exhausted window budget defers only
+    // the relocations, never the free drops.
+    let entries = eng.shards[src].st.prefix.local_entries();
+    let mut budget_dry = false;
+    for (key, _loc, blocks, tokens, pinned) in entries {
+        if pinned {
+            continue;
+        }
+        if !eng.prefix_enabled {
+            // No directory: the cache is shard-local; dropping costs
+            // only future recompute. Blocks go straight back.
+            drop_local_prefix(eng, src, key);
+            a.stats.drained_prefix_dropped_blocks += blocks as u64;
+            continue;
+        }
+        if eng.prefix_dir.has_holder_other_than(key, src) {
+            // Another real copy exists cluster-wide — nothing to save.
+            drop_local_prefix(eng, src, key);
+            continue;
+        }
+        // Sole copy: relocate it if a CPU tier exists somewhere active.
+        let dst = (0..n)
+            .filter(|&d| d != src && a.is_placeable(d))
+            .min_by(|&x, &y| {
+                usages[x].total_cmp(&usages[y]).then(x.cmp(&y))
+            });
+        let can_replicate = eng.cfg.serve.mode.prefix_cpu_tier();
+        match dst {
+            Some(dst) if can_replicate => {
+                if budget_dry || eng.prefix_dir.is_replicating(dst, key)
+                {
+                    continue; // retry next window
+                }
+                // Pre-checked not-replicating, so a refusal here is
+                // the window budget running dry.
+                if !eng.issue_replica(dst, key, blocks, tokens, true, now)
+                {
+                    budget_dry = true;
+                    continue;
+                }
+                let cost_us = eng.wire_cost_us(blocks);
+                evacuate_local_prefix(eng, src, key, now, cost_us);
+                a.stats.drained_prefix_blocks += blocks as u64;
+            }
+            _ => {
+                drop_local_prefix(eng, src, key);
+                a.stats.drained_prefix_dropped_blocks +=
+                    blocks as u64;
+            }
+        }
+    }
+}
+
+/// Free one prefix entry's local backing on a draining shard and
+/// publish the removal (the directory invalidates dangling pointers on
+/// the next sync). A *discard*: nothing travels, so the blocks return
+/// immediately — exactly like `spatial::drop_prefix_gpu_lru`.
+fn drop_local_prefix(
+    eng: &mut ClusterEngine,
+    shard: usize,
+    key: crate::kvcache::PrefixKey,
+) {
+    let st = &mut eng.shards[shard].st;
+    match st.prefix.remove(key) {
+        Some(PrefixBacking::Gpu(b)) => st.gpu.free(b, 0, None),
+        Some(PrefixBacking::Cpu(b)) => st.cpu.release(b),
+        Some(PrefixBacking::Remote) | None => {}
+    }
+    st.metrics.counters.prefix_evictions += 1;
+    st.push_prefix_event(PrefixEvent::Removed { key });
+}
+
+/// Release an entry's backing *behind its relocation transfer*: GPU
+/// blocks ride the pending-free + migration-ledger D2H path for the
+/// wire duration, exactly like prefix demotion and app migration — the
+/// capacity is not reusable while the copy is on the interconnect (and
+/// `try_retire` waits on the pending-free drain). CPU backing is
+/// wire-captured at issue, matching how remote-hit reads treat a
+/// source that evicts mid-flight (the CPU pool models no transfer
+/// engine of its own).
+fn evacuate_local_prefix(
+    eng: &mut ClusterEngine,
+    shard: usize,
+    key: crate::kvcache::PrefixKey,
+    now: u64,
+    cost_us: u64,
+) {
+    let st = &mut eng.shards[shard].st;
+    match st.prefix.remove(key) {
+        Some(PrefixBacking::Gpu(b)) => {
+            st.gpu.mark_pending_free(&b, 0, None);
+            let completes = now + cost_us;
+            let xfer = st.ledger.issue_tagged(
+                TransferKind::PrefixEvict { key },
+                u64::MAX,
+                Direction::D2H,
+                b,
+                Vec::new(),
+                now,
+                completes,
+            );
+            st.outbox.push(Action::TransferIssued {
+                xfer,
+                completes_us: completes,
+            });
+        }
+        Some(PrefixBacking::Cpu(b)) => st.cpu.release(b),
+        Some(PrefixBacking::Remote) | None => {}
+    }
+    st.metrics.counters.prefix_evictions += 1;
+    st.push_prefix_event(PrefixEvent::Removed { key });
+}
+
+/// Quiescence check and the single retirement site in the codebase.
+fn try_retire(
+    a: &mut Autoscaler,
+    eng: &mut ClusterEngine,
+    i: usize,
+    now: u64,
+) {
+    debug_assert_eq!(a.phase[i], ShardPhase::Draining);
+    if eng.inflight_touches(i) {
+        return;
+    }
+    if eng.shards[i].next_local_event_us().is_some() {
+        return; // pending tool finishes / func delays / transfers
+    }
+    let st = &eng.shards[i].st;
+    let quiescent = st.reqs.live_len() == 0
+        && st.waiting.is_empty()
+        && st.gpu.free_blocks() == st.gpu.total()
+        && st.gpu.pending_free_blocks() == 0
+        && st.cpu.used_blocks() == 0
+        && st.prefix.resident_gpu_blocks() == 0
+        && st.prefix.resident_cpu_blocks() == 0;
+    if !quiescent {
+        return;
+    }
+    retire_shard(a, i, now);
+}
+
+/// The only constructor of [`ShardPhase::Retired`] (CI-enforced): the
+/// shard's pools are empty, nothing references it, its capacity
+/// returns, and its lifetime enters the histogram.
+fn retire_shard(a: &mut Autoscaler, i: usize, now: u64) {
+    a.phase[i] = ShardPhase::Retired;
+    a.retired_at_us[i] = Some(now);
+    a.stats.shards_retired += 1;
+    a.stats
+        .shard_lifetimes_us
+        .push(now.saturating_sub(a.activated_at_us[i]));
+}
+
+/// Test/ops hook behind [`ClusterEngine::request_drain`]: start a drain
+/// directly (min-shards floor still enforced; watermark, confirmation,
+/// and cooldown gates bypassed).
+pub(super) fn force_drain(
+    a: &mut Autoscaler,
+    eng: &mut ClusterEngine,
+    i: usize,
+) -> bool {
+    if a.phase[i] != ShardPhase::Active {
+        return false;
+    }
+    let active = a
+        .phase
+        .iter()
+        .filter(|p| **p == ShardPhase::Active)
+        .count();
+    if active <= a.cfg.min_shards {
+        return false;
+    }
+    a.phase[i] = ShardPhase::Draining;
+    eng.router.set_eligible(i, false);
+    a.stats.scale_down_events += 1;
+    a.next_drain_window_us = 0;
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::prefix_dir;
+    use super::*;
+    use crate::config::{
+        ClusterConfig, Mode, PlacementPolicy, ServeConfig,
+    };
+    use crate::coordination::ReqState;
+    use crate::graph::templates;
+    use crate::kvcache::{AllocOutcome, PrefixKey, PrefixLocation};
+    use crate::temporal;
+    use crate::workload::{SampledLengths, ToolSim};
+
+    fn autoscale_cfg(
+        initial: usize,
+        min: usize,
+        max: usize,
+    ) -> ClusterConfig {
+        let serve = ServeConfig::default()
+            .with_mode(Mode::TokenCake)
+            .with_seed(1)
+            .with_gpu_mem_frac(0.05);
+        let mut c = ClusterConfig::default()
+            .with_serve(serve)
+            .with_shards(initial)
+            .with_placement(PlacementPolicy::RoundRobin);
+        c.autoscale.enabled = true;
+        c.autoscale.min_shards = min;
+        c.autoscale.max_shards = max;
+        c.autoscale.warmup_cost_us = 100_000;
+        c.autoscale.cooldown_us = 0;
+        c.autoscale.drain_confirm = 1;
+        c
+    }
+
+    /// Build an engine whose shards all registered the code-writer
+    /// template (the cluster contract: identical registration order).
+    fn engine(initial: usize, min: usize, max: usize) -> ClusterEngine {
+        let mut eng = ClusterEngine::new(autoscale_cfg(initial, min, max));
+        let g = templates::code_writer();
+        for i in 0..max {
+            eng.shard_mut(i).register_template(&g);
+        }
+        eng
+    }
+
+    /// Park one migratable stalled app on `shard` holding `blocks` GPU
+    /// blocks (60 s predicted stall).
+    fn stalled_app_on(eng: &mut ClusterEngine, shard: usize, blocks: u32) {
+        let tool_sim = ToolSim::new(0.0);
+        let scales = SampledLengths {
+            prompt_scale: 1.0,
+            gen_scale: 1.0,
+        };
+        let app = eng.shard_mut(shard).inject_app(0, scales, &tool_sim);
+        let st = &mut eng.shard_mut(shard).st;
+        let rid = st.apps[&app].node_req[0].unwrap();
+        st.waiting.retain(|&x| x != rid);
+        let AllocOutcome::Granted { blocks: b, .. } =
+            st.gpu.alloc(blocks, Route::Shared)
+        else {
+            panic!()
+        };
+        {
+            let r = st.reqs.get_mut(&rid).unwrap();
+            r.blocks = b;
+            r.state = ReqState::Running;
+        }
+        temporal::call_start(
+            st,
+            rid,
+            "web_search",
+            Some(60_000_000),
+            480,
+            0,
+        );
+        assert_eq!(st.reqs[&rid].state, ReqState::Stalled);
+    }
+
+    /// The acceptance drain: every stalled app migrates off through the
+    /// batched path, the pool empties, the shard retires — and not one
+    /// block is lost anywhere.
+    #[test]
+    fn full_drain_evacuates_apps_and_retires_with_zero_loss() {
+        let mut eng = engine(2, 1, 2);
+        for _ in 0..3 {
+            stalled_app_on(&mut eng, 1, 10);
+        }
+        let total1 = eng.shard(1).st.gpu.total();
+        assert_eq!(eng.shard(1).st.gpu.free_blocks(), total1 - 30);
+        assert!(eng.request_drain(1), "drain must start");
+        assert_eq!(eng.shard_phase(1), "draining");
+        // One forced control step issues the migration batch...
+        eng.autoscale_step_now();
+        assert_eq!(
+            eng.shard(1).st.gpu.pending_free_blocks(),
+            30,
+            "victims leave through the pending-free D2H path"
+        );
+        // ...landing the transfers and one more step retires the shard.
+        while eng.pump_next_event() {}
+        eng.autoscale_step_now();
+        assert_eq!(eng.shard_phase(1), "retired");
+        let stats = eng.autoscale_stats().unwrap().clone();
+        assert_eq!(stats.shards_retired, 1);
+        assert_eq!(stats.drained_app_blocks, 30);
+        assert_eq!(stats.shard_lifetimes_us.len(), 1);
+        // Source pool fully empty; destination holds exactly the
+        // landed KV; the migration ledger balances.
+        assert_eq!(eng.shard(1).st.gpu.free_blocks(), total1);
+        assert_eq!(eng.shard(1).st.gpu.pending_free_blocks(), 0);
+        let st0 = &eng.shard(0).st;
+        assert_eq!(
+            st0.gpu.total() - st0.gpu.free_blocks(),
+            30,
+            "all drained blocks landed on the active shard"
+        );
+        let (migs, blocks, _batches, landed, dropped, max_window) =
+            eng.migration_stats();
+        assert_eq!(migs, 3);
+        assert_eq!(blocks, 30);
+        assert_eq!(landed + dropped, 30);
+        assert!(max_window <= eng.cfg.migrate_batch_budget_blocks as u64);
+        assert_eq!(eng.shard(1).st.stalled_ids.len(), 0);
+        assert_eq!(eng.shard(0).st.stalled_ids.len(), 3);
+    }
+
+    /// A sole-copy prefix entry on a draining shard relocates into an
+    /// active shard's CPU tier instead of being lost.
+    #[test]
+    fn drain_relocates_sole_prefix_copy() {
+        let mut eng = engine(2, 1, 2);
+        let key = PrefixKey(0xFEED);
+        // A CPU-backed prefix on shard 1 (via the directory's legal
+        // insert path), registered as the directory's sole holder.
+        assert!(prefix_dir::seed_replica(
+            &mut eng.shard_mut(1).st,
+            key,
+            4,
+            64,
+            0
+        ));
+        eng.prefix_dir.apply_event(
+            1,
+            &PrefixEvent::Inserted {
+                key,
+                blocks: 4,
+                tokens: 64,
+                location: PrefixLocation::Cpu,
+            },
+        );
+        assert_eq!(eng.shard(1).st.prefix.resident_cpu_blocks(), 4);
+        assert!(eng.request_drain(1));
+        eng.autoscale_step_now();
+        // Local backing freed immediately (wire-captured), replica in
+        // flight toward shard 0.
+        assert_eq!(eng.shard(1).st.prefix.resident_cpu_blocks(), 0);
+        assert_eq!(eng.shard(1).st.cpu.used_blocks(), 0);
+        while eng.pump_next_event() {}
+        assert_eq!(
+            eng.shard(0).st.prefix.resident_cpu_blocks(),
+            4,
+            "sole copy must land on the surviving shard"
+        );
+        assert_eq!(
+            eng.shard(0).st.prefix.location_of(key),
+            Some(PrefixLocation::Cpu)
+        );
+        eng.autoscale_step_now();
+        assert_eq!(eng.shard_phase(1), "retired");
+        let stats = eng.autoscale_stats().unwrap();
+        assert_eq!(stats.drained_prefix_blocks, 4);
+        assert_eq!(stats.drained_prefix_dropped_blocks, 0);
+    }
+
+    /// High pressure grows: a warming shard joins only after the
+    /// modeled warm-up elapses, and never past `max_shards`.
+    #[test]
+    fn controller_grows_under_pressure_with_warmup() {
+        let mut eng = engine(1, 1, 2);
+        // Saturate shard 0 well past the grow watermark.
+        let total = eng.shard(0).st.gpu.total();
+        let fill = (total as f64 * 0.95) as u32;
+        let AllocOutcome::Granted { .. } =
+            eng.shard_mut(0).st.gpu.alloc(fill, Route::Shared)
+        else {
+            panic!()
+        };
+        eng.autoscale_step_now();
+        assert_eq!(eng.shard_phase(1), "warming");
+        assert_eq!(
+            eng.autoscale_stats().unwrap().scale_up_events,
+            1
+        );
+        // Still warming: not placeable, and growth is capped at max.
+        eng.autoscale_step_now();
+        assert_eq!(
+            eng.autoscale_stats().unwrap().scale_up_events,
+            1,
+            "provisioned count includes the warming shard"
+        );
+        assert!(eng.pump_next_event(), "warm-up event pending");
+        assert_eq!(eng.shard_phase(1), "active");
+    }
+
+    /// Pressure returning mid-drain cancels the drain — the shard
+    /// resumes serving instead of finishing the evacuation. (An *empty*
+    /// draining shard would just retire; the stalled app keeps this one
+    /// mid-evacuation when the signal flips.)
+    #[test]
+    fn drain_cancels_when_pressure_returns() {
+        let mut eng = engine(2, 1, 2);
+        stalled_app_on(&mut eng, 1, 10);
+        // Saturate the other shard past the grow watermark.
+        let total = eng.shard(0).st.gpu.total();
+        let fill = (total as f64 * 0.95) as u32;
+        let AllocOutcome::Granted { .. } =
+            eng.shard_mut(0).st.gpu.alloc(fill, Route::Shared)
+        else {
+            panic!()
+        };
+        assert!(eng.request_drain(1));
+        assert_eq!(eng.shard_phase(1), "draining");
+        eng.autoscale_step_now();
+        assert_eq!(
+            eng.shard_phase(1),
+            "active",
+            "returning pressure must cancel the drain"
+        );
+        assert_eq!(eng.autoscale_stats().unwrap().drain_cancels, 1);
+    }
+
+    /// An empty draining shard retires on the first control step —
+    /// there is nothing to evacuate.
+    #[test]
+    fn empty_drain_retires_immediately() {
+        let mut eng = engine(2, 1, 2);
+        assert!(eng.request_drain(1));
+        eng.autoscale_step_now();
+        assert_eq!(eng.shard_phase(1), "retired");
+        assert_eq!(eng.autoscale_stats().unwrap().shards_retired, 1);
+    }
+
+    /// The min-shards floor is unconditional: the last active shard
+    /// can never drain, even through the forced hook.
+    #[test]
+    fn min_shards_floor_holds() {
+        let mut eng = engine(1, 1, 2);
+        assert!(!eng.request_drain(0));
+        assert_eq!(eng.shard_phase(0), "active");
+    }
+
+    #[test]
+    fn predictor_orders_templates_by_call_profile_and_observations() {
+        let mut p = LifetimePredictor::new(0.5, 1_000_000);
+        let cw = p.register_template(&templates::code_writer());
+        let rag = p.register_template(&templates::rag());
+        // code-writer's tool-call profile is deeper than rag's.
+        assert!(
+            p.predicted_lifetime_us(cw) > p.predicted_lifetime_us(rag),
+            "static profile must order the templates"
+        );
+        assert_eq!(p.lifetime_norm(cw), 1.0);
+        // Long observed stalls on rag flip the ordering.
+        assert!(!p.observations_seeded(rag));
+        for _ in 0..8 {
+            p.observe(rag, 60_000_000);
+        }
+        assert!(p.observations_seeded(rag));
+        assert!(
+            p.predicted_lifetime_us(rag) > p.predicted_lifetime_us(cw)
+        );
+        assert_eq!(p.lifetime_norm(rag), 1.0);
+        assert!(p.lifetime_norm(cw) < 1.0);
+    }
+
+    /// Lifetime bias: long-lived templates are steered off the
+    /// youngest active shard (the next drain victim).
+    #[test]
+    fn route_bias_penalizes_young_shards_for_long_lived_templates() {
+        let mut a = Autoscaler::new(
+            AutoscaleConfig {
+                enabled: true,
+                ..Default::default()
+            },
+            2,
+            2,
+        );
+        a.register_template(&templates::code_writer());
+        a.activated_at_us[1] = 900_000; // shard 1 is younger
+        let bias = a.route_bias(0, 1_000_000);
+        assert_eq!(bias[0], 0.0, "oldest shard carries no penalty");
+        assert!(
+            bias[1] > 0.0,
+            "young shard must be penalized for long-lived apps"
+        );
+        assert!(bias[1] <= LIFETIME_BIAS + 1e-12);
+    }
+}

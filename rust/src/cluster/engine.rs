@@ -43,6 +43,7 @@ use crate::sim::{Clock, EventQueue, Rng};
 use crate::temporal;
 use crate::workload::{ClusterWorkload, ToolSim};
 
+use super::autoscale::{self, Autoscaler};
 use super::prefix_dir::{self, PrefixDir};
 use super::router::Router;
 
@@ -53,7 +54,7 @@ const ID_STRIDE: u64 = 1 << 40;
 
 /// Cluster-level events on the shared clock.
 #[derive(Debug, Clone, PartialEq, Eq)]
-enum CEv {
+pub(super) enum CEv {
     /// The `seq`-th application of the workload arrives.
     Arrival { seq: u32 },
     /// A shard's in-flight engine iteration completes.
@@ -61,11 +62,15 @@ enum CEv {
     /// A cross-worker KV migration transfer lands.
     MigrationDone { id: u64 },
     /// A prefix replica's interconnect copy lands on `shard`.
+    /// `evacuated` marks a drain relocation (the source copy was
+    /// already freed against this transfer), whose loss must be
+    /// re-accounted if the landing is discarded.
     ReplicaDone {
         shard: usize,
         key: PrefixKey,
         blocks: u32,
         tokens: u32,
+        evacuated: bool,
     },
 }
 
@@ -79,9 +84,9 @@ enum Forward {
 }
 
 /// A migration whose transfer is still on the wire.
-struct InFlightMigration {
-    src: usize,
-    dst: usize,
+pub(super) struct InFlightMigration {
+    pub(super) src: usize,
+    pub(super) dst: usize,
     /// The D2H leg on the source shard's ledger (pending-free blocks).
     xfer: TransferId,
     app: crate::coordination::MigratedApp,
@@ -122,21 +127,66 @@ pub struct ClusterReport {
     /// from the same per-window interconnect budget as migration).
     pub prefix_replications: u64,
     pub prefix_replicated_blocks: u64,
+    /// Elastic autoscaling (all zero / trivial for a fixed fleet):
+    /// scale events, drain outcomes, and the shard-lifetime histogram.
+    pub autoscale_enabled: bool,
+    /// Shards serving (active or draining) when the run ended.
+    pub final_active_shards: usize,
+    pub scale_up_events: u64,
+    pub scale_down_events: u64,
+    pub drain_cancels: u64,
+    pub shards_retired: u64,
+    /// KV blocks migrated off draining shards (subset of
+    /// `migration_blocks`).
+    pub drained_app_blocks: u64,
+    /// Sole-copy prefix blocks replicated off draining shards, and
+    /// blocks whose entries had to be dropped instead.
+    pub drained_prefix_blocks: u64,
+    pub drained_prefix_dropped_blocks: u64,
+    /// Lifetime (µs, activation → retirement) of each retired shard, in
+    /// retirement order — the shard-lifetime histogram.
+    pub shard_lifetimes_us: Vec<u64>,
+    /// `active_mask[i]` — shard `i` ever served (always true for a
+    /// fixed fleet); utilization aggregates skip never-grown capacity.
+    pub active_mask: Vec<bool>,
+    /// `provisioned_us[i]` — clock time shard `i` was provisioned
+    /// (first activation → retirement-or-end; the full run for a fixed
+    /// fleet). The weight behind [`Self::effective_util`].
+    pub provisioned_us: Vec<u64>,
     pub truncated: bool,
 }
 
 impl ClusterReport {
-    /// Mean effective GPU utilization across shards (time-weighted per
-    /// shard, then averaged — every shard models one worker GPU).
+    /// Mean effective GPU utilization across the shards that ever
+    /// served, weighted by each shard's provisioned span (a retired
+    /// shard's bundle closes at its retirement time). For a fixed fleet
+    /// every weight is the full run, so this is the plain per-shard
+    /// mean; for an autoscaled fleet it measures utilization of the
+    /// capacity that was actually provisioned — idle never-grown shards
+    /// don't dilute it, and neither does a drained shard's cold tail.
     pub fn effective_util(&self) -> f64 {
-        if self.shards.is_empty() {
-            return 0.0;
+        let mut acc = 0.0;
+        let mut span = 0.0;
+        for (i, m) in self.shards.iter().enumerate() {
+            if !self.active_mask.get(i).copied().unwrap_or(true) {
+                continue;
+            }
+            // Provisioned span, NOT the absolute end timestamp: a
+            // shard grown late in the run must not have its cold
+            // pre-activation time counted as provisioned capacity.
+            let w = self
+                .provisioned_us
+                .get(i)
+                .copied()
+                .unwrap_or(m.makespan_us) as f64;
+            acc += m.effective_usage.time_weighted_mean() * w;
+            span += w;
         }
-        self.shards
-            .iter()
-            .map(|m| m.effective_usage.time_weighted_mean())
-            .sum::<f64>()
-            / self.shards.len() as f64
+        if span == 0.0 {
+            0.0
+        } else {
+            acc / span
+        }
     }
 
     /// Mean victims per migration planning window (0 when none fired).
@@ -149,12 +199,30 @@ impl ClusterReport {
 
     /// One-line cluster summary.
     pub fn summary(&self) -> String {
+        let scale = if self.autoscale_enabled {
+            format!(
+                " scale=+{}/-{} retired={} active={}",
+                self.scale_up_events,
+                self.scale_down_events,
+                self.shards_retired,
+                self.final_active_shards,
+            )
+        } else {
+            String::new()
+        };
+        // Elastic runs show serving/provisioned: "x2/8" is a fleet
+        // that ended with 2 of 8 provisioned shards serving.
+        let shards_str = if self.autoscale_enabled {
+            format!("{}/{}", self.final_active_shards, self.num_shards)
+        } else {
+            self.num_shards.to_string()
+        };
         format!(
             "[cluster x{} {}] apps={} avg={:.1}s p99={:.1}s total={:.1}s \
              thpt={:.4}req/s eff_util={:.1}% migrations={} \
              migrated_blocks={} drops={} batches={} pfx_remote_hits={} \
-             pfx_repl={} planner={}/{}steps",
-            self.num_shards,
+             pfx_repl={} planner={}/{}steps{scale}",
+            shards_str,
             self.policy,
             self.aggregate.apps_completed,
             self.aggregate.latency.mean_s(),
@@ -219,6 +287,29 @@ impl ClusterReport {
             self.prefix_replications,
             self.prefix_replicated_blocks,
         ));
+        // Scale decisions are scheduler decisions: byte-identical reruns
+        // must agree on every grow/drain/retire and on each retired
+        // shard's lifetime.
+        let lifetimes: Vec<String> = self
+            .shard_lifetimes_us
+            .iter()
+            .map(|l| l.to_string())
+            .collect();
+        out.push_str(&format!(
+            "autoscale={} final_active={} up={} down={} cancels={} \
+             retired={} drained_app={} drained_pfx={} \
+             drained_pfx_drop={} lifetimes=[{}]\n",
+            self.autoscale_enabled,
+            self.final_active_shards,
+            self.scale_up_events,
+            self.scale_down_events,
+            self.drain_cancels,
+            self.shards_retired,
+            self.drained_app_blocks,
+            self.drained_prefix_blocks,
+            self.drained_prefix_dropped_blocks,
+            lifetimes.join(";"),
+        ));
         for (i, m) in self.shards.iter().enumerate() {
             out.push_str(&m.digest_line(&format!("shard{i}")));
         }
@@ -228,33 +319,43 @@ impl ClusterReport {
 }
 
 /// N sharded workers behind an agent-affinity router, on one event clock.
+/// (Several fields are `pub(super)`: the autoscale control plane in
+/// `cluster::autoscale` drives drains and retirements through the same
+/// migration, budget, and directory machinery the fixed fleet uses.)
 pub struct ClusterEngine {
     pub cfg: ClusterConfig,
-    shards: Vec<SimEngine>,
+    pub(super) shards: Vec<SimEngine>,
     clock: Clock,
-    events: EventQueue<CEv>,
+    pub(super) events: EventQueue<CEv>,
     rng: Rng,
-    router: Router,
+    pub(super) router: Router,
     /// `busy[i]` — shard `i` has an IterDone event in flight.
     busy: Vec<bool>,
     /// Tool-finish forwarding table for migrated requests.
     forward: HashMap<RequestId, Forward>,
-    inflight: HashMap<u64, InFlightMigration>,
+    pub(super) inflight: HashMap<u64, InFlightMigration>,
     next_migration: u64,
     last_rebalance_us: u64,
-    migrations: u64,
+    pub(super) migrations: u64,
     migration_blocks: u64,
     migration_drops: u64,
-    migration_batches: u64,
+    pub(super) migration_batches: u64,
     migration_landed_blocks: u64,
     migration_drop_blocks: u64,
-    max_window_migration_blocks: u64,
+    pub(super) max_window_migration_blocks: u64,
     /// Cluster-wide prefix directory (federates the shard indexes).
-    prefix_dir: PrefixDir,
+    pub(super) prefix_dir: PrefixDir,
     /// Directory active: `cfg.prefix_directory` ∧ a prefix-cache mode.
-    prefix_enabled: bool,
+    pub(super) prefix_enabled: bool,
     prefix_replications: u64,
     prefix_replicated_blocks: u64,
+    /// Elastic autoscaling control plane (None = fixed fleet).
+    autoscale: Option<Autoscaler>,
+    /// Warm-ups in flight: `(ready_at_us, shard)`. Deliberately NOT on
+    /// the event queue: a pending warm-up must never mask the
+    /// fully-idle rescue path, and the clock advances to a warm-up
+    /// only when no real work event is nearer.
+    pub(super) pending_warm: Vec<(u64, usize)>,
     /// One shared per-window interconnect ledger for *bulk* transfers:
     /// migration batches and prefix replication draw on the same
     /// `migrate_batch_budget_blocks`, windowed on the rebalance
@@ -274,7 +375,25 @@ impl ClusterEngine {
         let seed = cfg.serve.seed;
         let prefix_enabled =
             cfg.prefix_directory && cfg.serve.mode.prefix_cache();
-        let shards: Vec<SimEngine> = (0..cfg.shards)
+        // With autoscaling, capacity up to `max_shards` is provisioned
+        // (engines built, ids reserved) but only the initial serving set
+        // is active — the controller grows/drains within the bounds.
+        let autoscaling = cfg.autoscale.enabled;
+        if autoscaling {
+            cfg.autoscale.validate();
+        }
+        let n_total = if autoscaling {
+            cfg.autoscale.max_shards
+        } else {
+            cfg.shards
+        };
+        let initial = if autoscaling {
+            cfg.shards
+                .clamp(cfg.autoscale.min_shards, cfg.autoscale.max_shards)
+        } else {
+            cfg.shards
+        };
+        let shards: Vec<SimEngine> = (0..n_total)
             .map(|i| {
                 let mut sc = cfg.serve.clone();
                 // Decorrelated per-shard RNG stream, derived from the
@@ -285,17 +404,32 @@ impl ClusterEngine {
                 // Shards publish their prefix lifecycle into the
                 // directory's event feed.
                 e.st.publish_prefix_events = prefix_enabled;
+                // ...and their FC stall durations into the autoscaler's
+                // KV-lifetime predictor.
+                e.st.publish_lifetime_obs = autoscaling;
                 e
             })
             .collect();
         let n = shards.len();
+        let autoscale = if autoscaling {
+            Some(Autoscaler::new(cfg.autoscale.clone(), n_total, initial))
+        } else {
+            None
+        };
+        let mut router = Router::new(
+            cfg.placement,
+            n,
+            0, // grown when templates register in `run`
+            cfg.affinity_spill_load,
+        );
+        if let Some(a) = &autoscale {
+            for i in 0..n {
+                router.set_eligible(i, a.is_placeable(i));
+            }
+        }
         Self {
-            router: Router::new(
-                cfg.placement,
-                n,
-                0, // grown when templates register in `run`
-                cfg.affinity_spill_load,
-            ),
+            router,
+            autoscale,
             shards,
             clock: Clock::new(),
             events: EventQueue::new(),
@@ -314,6 +448,7 @@ impl ClusterEngine {
             max_window_migration_blocks: 0,
             prefix_dir: PrefixDir::new(),
             prefix_enabled,
+            pending_warm: Vec::new(),
             prefix_replications: 0,
             prefix_replicated_blocks: 0,
             ic_window_start_us: 0,
@@ -326,6 +461,247 @@ impl ClusterEngine {
     /// Current simulated time (µs) on the shared clock.
     pub fn now_us(&self) -> u64 {
         self.clock.now_us()
+    }
+
+    // ------------------------------------------------------------------
+    // Shard lifecycle (trivial for a fixed fleet)
+    // ------------------------------------------------------------------
+
+    /// May the router place new applications on shard `i`?
+    pub(super) fn is_placeable(&self, i: usize) -> bool {
+        self.autoscale
+            .as_ref()
+            .map(|a| a.is_placeable(i))
+            .unwrap_or(true)
+    }
+
+    /// Does shard `i` participate in event/clock advancement? (Active,
+    /// draining, or warming; cold and retired shards are skipped.)
+    fn is_runnable(&self, i: usize) -> bool {
+        self.autoscale
+            .as_ref()
+            .map(|a| a.is_runnable(i))
+            .unwrap_or(true)
+    }
+
+    /// Does shard `i` run scheduling steps and iterations? (Active or
+    /// draining — a warming shard's clock advances but it serves
+    /// nothing until the warm-up completes.)
+    fn is_steppable(&self, i: usize) -> bool {
+        self.autoscale
+            .as_ref()
+            .map(|a| a.is_steppable(i))
+            .unwrap_or(true)
+    }
+
+    /// Is any in-flight cross-worker migration sourced from or landing
+    /// on shard `i`? (A draining shard cannot retire under one.)
+    pub(super) fn inflight_touches(&self, i: usize) -> bool {
+        self.inflight
+            .values()
+            .any(|m| m.src == i || m.dst == i)
+    }
+
+    /// Interconnect wire time for moving `blocks` between workers: the
+    /// local D2H+H2D round trip scaled by the interconnect factor. The
+    /// single pricing rule for every bulk transfer drawing on the
+    /// shared window budget (load-balancing migration, drain
+    /// evacuation, prefix replication/relocation).
+    pub(super) fn wire_cost_us(&self, blocks: u32) -> u64 {
+        let p = &self.cfg.serve.profile;
+        ((p.offload_us(blocks) + p.upload_us(blocks)) as f64
+            * self.cfg.interconnect_factor) as u64
+    }
+
+    /// The shard's lifecycle phase as a string (`"active"`,
+    /// `"draining"`, ... — `"active"` for every shard of a fixed
+    /// fleet). Tests and operators read this; the phase enum itself
+    /// stays private to the autoscale module.
+    pub fn shard_phase(&self, i: usize) -> &'static str {
+        self.autoscale
+            .as_ref()
+            .map(|a| a.phase_name(i))
+            .unwrap_or("active")
+    }
+
+    /// Autoscale statistics so far (None for a fixed fleet).
+    pub fn autoscale_stats(&self) -> Option<&autoscale::AutoscaleStats> {
+        self.autoscale.as_ref().map(|a| a.stats())
+    }
+
+    /// Test/ops hook: mark shard `i` draining immediately, bypassing the
+    /// controller's watermarks, confirmation count, and cooldown (the
+    /// min-shards floor still holds). Returns whether the drain started.
+    pub fn request_drain(&mut self, i: usize) -> bool {
+        let Some(mut a) = self.autoscale.take() else {
+            return false;
+        };
+        let ok = autoscale::force_drain(&mut a, self, i);
+        self.autoscale = Some(a);
+        ok
+    }
+
+    /// Test hook: run one autoscale control step at the current clock
+    /// time with the interval/cooldown gates bypassed and a fresh
+    /// interconnect window (mirrors [`Self::rebalance_now`]).
+    pub fn autoscale_step_now(&mut self) {
+        let now = self.clock.now_us();
+        self.ic_window_start_us = now;
+        self.ic_window_used = 0;
+        if let Some(mut a) = self.autoscale.take() {
+            autoscale::step_forced(&mut a, self, now);
+            self.autoscale = Some(a);
+        }
+    }
+
+    /// Test hook: advance the shared clock to the next pending cluster
+    /// event (or warm-up) and apply it. Returns false when nothing is
+    /// pending. Hand-built test clusters use this to land transfers
+    /// without a workload driving the loop.
+    pub fn pump_next_event(&mut self) -> bool {
+        let t = match (self.events.peek_time(), self.next_warm_due()) {
+            (None, None) => return false,
+            (Some(a), None) => a,
+            (None, Some(b)) => b,
+            (Some(a), Some(b)) => a.min(b),
+        };
+        self.clock.advance_to(t.max(self.clock.now_us()));
+        let now = self.clock.now_us();
+        self.process_warmups(now);
+        while let Some(ev) = self.events.pop_due(now) {
+            match ev.payload {
+                CEv::Arrival { .. } => {
+                    unreachable!("pump_next_event with a live workload")
+                }
+                CEv::IterDone { shard } => self.busy[shard] = false,
+                CEv::MigrationDone { id } => self.land_migration(id),
+                CEv::ReplicaDone {
+                    shard,
+                    key,
+                    blocks,
+                    tokens,
+                    evacuated,
+                } => self
+                    .land_replica(shard, key, blocks, tokens, evacuated),
+            }
+        }
+        self.sync_prefix_dir();
+        true
+    }
+
+    /// Earliest pending warm-up completion, if any.
+    fn next_warm_due(&self) -> Option<u64> {
+        self.pending_warm.iter().map(|&(t, _)| t).min()
+    }
+
+    /// End-of-run settlement (normal completion only): land every
+    /// queued replica/migration event regardless of its wire time,
+    /// then complete each serving shard's in-flight ledger transfers.
+    /// A copy mid-wire when the last application finishes is
+    /// bookkeeping to close — pending-free blocks return, evacuated
+    /// replicas land (or are re-accounted as dropped) — not a leak.
+    /// The clock stays at the completion time. Truncated runs skip
+    /// this: their queues legitimately still hold live work.
+    fn settle_in_flight(&mut self) {
+        while let Some(ev) = self.events.pop() {
+            match ev.payload {
+                // Impossible at normal completion (an undelivered
+                // arrival means an uncompleted app); harmless to drop
+                // defensively.
+                CEv::Arrival { .. } => {}
+                CEv::IterDone { shard } => self.busy[shard] = false,
+                CEv::MigrationDone { id } => self.land_migration(id),
+                CEv::ReplicaDone {
+                    shard,
+                    key,
+                    blocks,
+                    tokens,
+                    evacuated,
+                } => self
+                    .land_replica(shard, key, blocks, tokens, evacuated),
+            }
+        }
+        for i in 0..self.shards.len() {
+            if self.is_runnable(i) {
+                self.shards[i].settle_transfers();
+            }
+        }
+        self.sync_prefix_dir();
+    }
+
+    /// Activate every shard whose modeled warm-up has elapsed: it joins
+    /// the fleet and the router may place onto it. Entries activate in
+    /// grow order (deterministic — grow decisions are).
+    fn process_warmups(&mut self, now: u64) {
+        if self.pending_warm.is_empty() {
+            return;
+        }
+        let mut i = 0;
+        while i < self.pending_warm.len() {
+            if self.pending_warm[i].0 <= now {
+                let (_, shard) = self.pending_warm.remove(i);
+                if let Some(a) = self.autoscale.as_mut() {
+                    if a.on_warm(shard, now) {
+                        self.router.set_eligible(shard, true);
+                    }
+                }
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    /// End-state conservation audit (CI `--assert-autoscale` smoke and
+    /// tests): after a completed run every shard's pool must be exactly
+    /// `free + prefix-resident == total` with nothing pending, every
+    /// CPU block owned by the prefix cache, and every migrated block
+    /// either landed or dropped — across grows, drains, and
+    /// retirements, zero blocks lost.
+    pub fn check_conservation(&self) -> Result<(), String> {
+        for (i, s) in self.shards.iter().enumerate() {
+            let st = &s.st;
+            if st.gpu.free_blocks() + st.prefix.resident_gpu_blocks()
+                != st.gpu.total()
+            {
+                return Err(format!(
+                    "shard {i} ({}): gpu free {} + prefix {} != total {}",
+                    self.shard_phase(i),
+                    st.gpu.free_blocks(),
+                    st.prefix.resident_gpu_blocks(),
+                    st.gpu.total()
+                ));
+            }
+            if st.gpu.pending_free_blocks() != 0 {
+                return Err(format!(
+                    "shard {i}: {} blocks stuck pending-free",
+                    st.gpu.pending_free_blocks()
+                ));
+            }
+            if st.cpu.used_blocks() != st.prefix.resident_cpu_blocks() {
+                return Err(format!(
+                    "shard {i}: cpu used {} != prefix cpu {}",
+                    st.cpu.used_blocks(),
+                    st.prefix.resident_cpu_blocks()
+                ));
+            }
+        }
+        if !self.inflight.is_empty() {
+            return Err(format!(
+                "{} migrations still in flight",
+                self.inflight.len()
+            ));
+        }
+        if self.migration_blocks
+            != self.migration_landed_blocks + self.migration_drop_blocks
+        {
+            return Err(format!(
+                "migration blocks {} != landed {} + dropped {}",
+                self.migration_blocks,
+                self.migration_landed_blocks,
+                self.migration_drop_blocks
+            ));
+        }
+        Ok(())
     }
 
     /// Borrow one shard's engine (tests, inspection).
@@ -394,6 +770,9 @@ impl ClusterEngine {
             }
             self.prefix_dir
                 .register_template(&e.graph, &self.cfg.serve.profile);
+            if let Some(a) = self.autoscale.as_mut() {
+                a.register_template(&e.graph);
+            }
         }
         self.router = Router::new(
             self.cfg.placement,
@@ -401,6 +780,13 @@ impl ClusterEngine {
             w.entries.len(),
             self.cfg.affinity_spill_load,
         );
+        // Re-impose the lifecycle mask on the fresh router: cold
+        // (not-yet-grown) capacity receives nothing.
+        if let Some(a) = &self.autoscale {
+            for i in 0..self.shards.len() {
+                self.router.set_eligible(i, a.is_placeable(i));
+            }
+        }
 
         let mut arr_rng = self.rng.fold(1);
         let arrivals = w.arrivals(&mut arr_rng);
@@ -416,8 +802,12 @@ impl ClusterEngine {
             let now = self.clock.now_us();
 
             // (a) Per-shard local events due now; forward any tool
-            // finishes whose requests migrated away.
+            // finishes whose requests migrated away. Cold/retired
+            // capacity has no events and is skipped.
             for i in 0..self.shards.len() {
+                if !self.is_runnable(i) {
+                    continue;
+                }
                 let orphans =
                     self.shards[i].advance_shard_to(now, &tool_sim);
                 for o in orphans {
@@ -426,28 +816,48 @@ impl ClusterEngine {
             }
             self.sync_prefix_dir();
 
+            // (a') Warm-ups due now activate before same-instant
+            // arrivals route, so a just-grown shard is placeable for
+            // them (deterministic ordering rule).
+            self.process_warmups(now);
+
             // (b) Global events due now.
             while let Some(ev) = self.events.pop_due(now) {
                 match ev.payload {
                     CEv::Arrival { seq } => {
                         let (_, template) = arrivals[seq as usize];
                         let snaps = self.snapshots();
-                        let shard = if self.prefix_enabled {
-                            // Warm credit from actual resident prefix
-                            // blocks, not just the served-here bit.
-                            let warmth: Vec<f64> = (0..snaps.len())
-                                .map(|s| {
-                                    self.prefix_dir.warmth(template, s)
-                                })
-                                .collect();
-                            self.router.route_with_warmth(
-                                template,
-                                &snaps,
-                                Some(&warmth),
-                            )
-                        } else {
-                            self.router.route(template, &snaps)
-                        };
+                        // Warm credit from actual resident prefix
+                        // blocks, not just the served-here bit.
+                        let warmth: Option<Vec<f64>> =
+                            if self.prefix_enabled {
+                                Some(
+                                    (0..snaps.len())
+                                        .map(|s| {
+                                            self.prefix_dir
+                                                .warmth(template, s)
+                                        })
+                                        .collect(),
+                                )
+                            } else {
+                                None
+                            };
+                        // Lifetime-aware placement: long-lived apps
+                        // steer away from shards the controller is
+                        // likely to drain next.
+                        let bias: Option<Vec<f64>> = self
+                            .autoscale
+                            .as_mut()
+                            .map(|a| {
+                                a.note_arrival();
+                                a.route_bias(template, now)
+                            });
+                        let shard = self.router.route_biased(
+                            template,
+                            &snaps,
+                            warmth.as_deref(),
+                            bias.as_deref(),
+                        );
                         let mut rng =
                             self.rng.fold(1000 + seq as u64);
                         let scales = w.dataset.sample(&mut rng);
@@ -461,15 +871,30 @@ impl ClusterEngine {
                         key,
                         blocks,
                         tokens,
-                    } => self.land_replica(shard, key, blocks, tokens),
+                        evacuated,
+                    } => self.land_replica(
+                        shard, key, blocks, tokens, evacuated,
+                    ),
                 }
             }
 
             if self.apps_completed() >= total_apps {
+                // The workload is done, but drain evacuations / prefix
+                // replicas may still be on the wire — settle them so
+                // pools and stats close consistently.
+                self.settle_in_flight();
                 break;
             }
 
-            // (c) Migration planner (windowed).
+            // (c) Autoscale control plane: pressure-gated grow/drain
+            // decisions, drain windows, retirements.
+            if self.autoscale.is_some() {
+                let mut a = self.autoscale.take().unwrap();
+                autoscale::tick(&mut a, self, now);
+                self.autoscale = Some(a);
+            }
+
+            // (c') Migration planner (windowed).
             if self.cfg.migration
                 && self.shards.len() > 1
                 && now
@@ -480,10 +905,10 @@ impl ClusterEngine {
                 self.plan_migration(now);
             }
 
-            // (d) Kick every idle shard: scheduling step, and an
+            // (d) Kick every idle serving shard: scheduling step, and an
             // iteration if a batch formed.
             for i in 0..self.shards.len() {
-                if self.busy[i] {
+                if self.busy[i] || !self.is_steppable(i) {
                     continue;
                 }
                 if let Some(dt) = self.shards[i].step_once(&tool_sim) {
@@ -493,7 +918,11 @@ impl ClusterEngine {
             }
             self.sync_prefix_dir();
 
-            // (e) Advance the shared clock to the next event anywhere.
+            // (e) Advance the shared clock to the next *work* event
+            // anywhere. Warm-ups are tracked separately: they cap the
+            // jump, but their presence never counts as pending work —
+            // a far-future warm-up must not mask the fully-idle rescue
+            // path below.
             let mut t_next = self.events.peek_time();
             for s in &self.shards {
                 t_next = match (t_next, s.next_local_event_us()) {
@@ -503,16 +932,29 @@ impl ClusterEngine {
                 };
             }
             match t_next {
-                Some(t) => self.clock.advance_to(t.max(now)),
+                Some(t) => {
+                    let t = match self.next_warm_due() {
+                        Some(w) => t.min(w),
+                        None => t,
+                    };
+                    self.clock.advance_to(t.max(now))
+                }
                 None => {
                     // Fully idle with work left: per-shard deadlock
                     // rescue (demote a waiting-with-KV request, break a
                     // stranded upload reservation).
-                    let progressed = self
-                        .shards
-                        .iter_mut()
-                        .any(|s| s.try_rescue());
+                    let progressed = (0..self.shards.len()).any(|i| {
+                        self.is_steppable(i)
+                            && self.shards[i].try_rescue()
+                    });
                     if progressed {
+                        continue;
+                    }
+                    // Rescue can't move anything, but capacity is
+                    // warming: jump to its activation — the migration
+                    // planner may unstick the fleet through it.
+                    if let Some(w) = self.next_warm_due() {
+                        self.clock.advance_to(w.max(now));
                         continue;
                     }
                     truncated = true;
@@ -528,18 +970,70 @@ impl ClusterEngine {
         }
 
         let end = self.clock.now_us();
+        // A retired shard's bundle closes at its retirement time: its
+        // utilization measures the window it was provisioned, not the
+        // cold tail after the controller returned the capacity.
+        let ends: Vec<u64> = (0..self.shards.len())
+            .map(|i| {
+                self.autoscale
+                    .as_ref()
+                    .and_then(|a| a.retired_at(i))
+                    .unwrap_or(end)
+            })
+            .collect();
         let shard_metrics: Vec<MetricsBundle> = self
             .shards
             .iter_mut()
-            .map(|s| s.finalize_metrics(end))
+            .zip(&ends)
+            .map(|(s, &e)| s.finalize_metrics(e))
             .collect();
         let mut aggregate = MetricsBundle::default();
         for m in &shard_metrics {
             aggregate.absorb(m);
         }
+        let n = self.shards.len();
+        let provisioned_us: Vec<u64> = match &self.autoscale {
+            Some(a) => {
+                (0..n).map(|i| a.provisioned_us(i, end)).collect()
+            }
+            None => vec![end; n],
+        };
+        let (
+            autoscale_enabled,
+            final_active,
+            active_mask,
+            scale_up,
+            scale_down,
+            drain_cancels,
+            retired,
+            drained_app,
+            drained_pfx,
+            drained_pfx_drop,
+            lifetimes,
+        ) = match &self.autoscale {
+            Some(a) => {
+                let s = a.stats();
+                (
+                    true,
+                    a.serving_count(),
+                    (0..n).map(|i| a.ever_active(i)).collect(),
+                    s.scale_up_events,
+                    s.scale_down_events,
+                    s.drain_cancels,
+                    s.shards_retired,
+                    s.drained_app_blocks,
+                    s.drained_prefix_blocks,
+                    s.drained_prefix_dropped_blocks,
+                    s.shard_lifetimes_us.clone(),
+                )
+            }
+            None => {
+                (false, n, vec![true; n], 0, 0, 0, 0, 0, 0, 0, Vec::new())
+            }
+        };
         ClusterReport {
             policy: self.cfg.placement.name(),
-            num_shards: self.shards.len(),
+            num_shards: n,
             shards: shard_metrics,
             aggregate,
             migrations: self.migrations,
@@ -551,6 +1045,18 @@ impl ClusterEngine {
             max_window_migration_blocks: self.max_window_migration_blocks,
             prefix_replications: self.prefix_replications,
             prefix_replicated_blocks: self.prefix_replicated_blocks,
+            autoscale_enabled,
+            final_active_shards: final_active,
+            scale_up_events: scale_up,
+            scale_down_events: scale_down,
+            drain_cancels,
+            shards_retired: retired,
+            drained_app_blocks: drained_app,
+            drained_prefix_blocks: drained_pfx,
+            drained_prefix_dropped_blocks: drained_pfx_drop,
+            shard_lifetimes_us: lifetimes,
+            active_mask,
+            provisioned_us,
             truncated,
         }
     }
@@ -564,7 +1070,7 @@ impl ClusterEngine {
     /// applying the replication policy. Shards are drained in index
     /// order and events replayed in publication order, so the directory
     /// state is deterministic.
-    fn sync_prefix_dir(&mut self) {
+    pub(super) fn sync_prefix_dir(&mut self) {
         if !self.prefix_enabled {
             return;
         }
@@ -629,7 +1135,7 @@ impl ClusterEngine {
     }
 
     /// Open a fresh interconnect window when the current one expired.
-    fn ic_window_roll(&mut self, now: u64) {
+    pub(super) fn ic_window_roll(&mut self, now: u64) {
         if now >= self.ic_window_start_us + self.cfg.rebalance_interval_us
         {
             self.ic_window_start_us = now;
@@ -643,7 +1149,7 @@ impl ClusterEngine {
     /// budget. (Per-request remote-hit fetches are demand traffic: they
     /// pay wire latency on the requesting app instead of drawing on the
     /// bulk budget.)
-    fn ic_window_take(&mut self, blocks: u32, now: u64) -> bool {
+    pub(super) fn ic_window_take(&mut self, blocks: u32, now: u64) -> bool {
         self.ic_window_roll(now);
         if self.ic_window_used.saturating_add(blocks)
             > self.cfg.migrate_batch_budget_blocks
@@ -664,6 +1170,10 @@ impl ClusterEngine {
         if self.prefix_dir.remote_hits(key)
             < self.cfg.prefix_replicate_threshold
             || self.prefix_dir.is_replicating(shard, key)
+            // Never replicate toward a shard the controller is warming,
+            // draining, or has retired — the copy would park blocks on
+            // capacity that is leaving (or not yet serving).
+            || !self.is_placeable(shard)
         {
             return;
         }
@@ -672,23 +1182,41 @@ impl ClusterEngine {
             return;
         };
         let now = self.clock.now_us();
-        if !self.ic_window_take(blocks, now) {
-            return; // window budget exhausted; retry on a later hit
+        // Budget exhausted → retry on a later hit.
+        self.issue_replica(shard, key, blocks, tokens, false, now);
+    }
+
+    /// The one replica-issue sequence (hot-prefix replication and drain
+    /// evacuation share it): take window budget, mark the directory,
+    /// put the copy on the wire. Returns false when the budget (or an
+    /// already-in-flight copy toward `dst`) refuses.
+    pub(super) fn issue_replica(
+        &mut self,
+        dst: usize,
+        key: PrefixKey,
+        blocks: u32,
+        tokens: u32,
+        evacuated: bool,
+        now: u64,
+    ) -> bool {
+        if self.prefix_dir.is_replicating(dst, key)
+            || !self.ic_window_take(blocks, now)
+        {
+            return false;
         }
-        let profile = &self.cfg.serve.profile;
-        let cost_us = ((profile.offload_us(blocks)
-            + profile.upload_us(blocks)) as f64
-            * self.cfg.interconnect_factor) as u64;
-        self.prefix_dir.set_replicating(shard, key);
+        let cost_us = self.wire_cost_us(blocks);
+        self.prefix_dir.set_replicating(dst, key);
         self.events.push(
             now + cost_us,
             CEv::ReplicaDone {
-                shard,
+                shard: dst,
                 key,
                 blocks,
                 tokens,
+                evacuated,
             },
         );
+        true
     }
 
     /// The replica's interconnect copy landed: materialize it in the
@@ -702,19 +1230,38 @@ impl ClusterEngine {
         key: PrefixKey,
         blocks: u32,
         tokens: u32,
+        evacuated: bool,
     ) {
         self.prefix_dir.clear_replicating(shard, key);
-        let now = self.clock.now_us();
-        if prefix_dir::seed_replica(
-            &mut self.shards[shard].st,
-            key,
-            blocks,
-            tokens,
-            now,
-        ) {
-            self.prefix_replications += 1;
-            self.prefix_replicated_blocks += blocks as u64;
-            self.prefix_dir.note_replica(shard, key);
+        // A destination that started draining (or retired) while the
+        // copy was on the wire discards it, as with any stale landing.
+        if self.is_placeable(shard) {
+            let now = self.clock.now_us();
+            if prefix_dir::seed_replica(
+                &mut self.shards[shard].st,
+                key,
+                blocks,
+                tokens,
+                now,
+            ) {
+                self.prefix_replications += 1;
+                self.prefix_replicated_blocks += blocks as u64;
+                self.prefix_dir.note_replica(shard, key);
+            }
+        }
+        if evacuated {
+            // This copy carried a drain evacuation whose source backing
+            // was already freed. If the landing was discarded AND no
+            // real copy survives anywhere (a finishing request may have
+            // re-recorded one meanwhile), the blocks were dropped, not
+            // relocated — keep the drain accounting honest.
+            let survives = self.prefix_dir.holds_local(key, shard)
+                || self.prefix_dir.has_holder_other_than(key, shard);
+            if !survives {
+                if let Some(a) = self.autoscale.as_mut() {
+                    a.note_evacuation_dropped(blocks);
+                }
+            }
         }
     }
 
@@ -786,7 +1333,12 @@ impl ClusterEngine {
             .iter()
             .enumerate()
             .map(|(i, s)| {
-                if usages[i] < self.cfg.migrate_dst_usage {
+                // Only active shards receive load-balancing victims —
+                // warming/draining/retired capacity is not a
+                // destination (the drain path has its own planner).
+                if usages[i] < self.cfg.migrate_dst_usage
+                    && self.is_placeable(i)
+                {
                     s.st.gpu.available_for(Route::Shared)
                 } else {
                     0
@@ -797,7 +1349,10 @@ impl ClusterEngine {
             return;
         }
         let mut sources: Vec<usize> = (0..self.shards.len())
-            .filter(|&i| usages[i] >= self.cfg.migrate_src_usage)
+            .filter(|&i| {
+                usages[i] >= self.cfg.migrate_src_usage
+                    && self.is_placeable(i)
+            })
             .collect();
         if sources.is_empty() {
             return;
@@ -833,12 +1388,7 @@ impl ClusterEngine {
                 }
                 // The move must pay for itself: predicted remaining
                 // stall must exceed `migrate_payback ×` the transfer.
-                let profile = &self.shards[src].st.cfg.profile;
-                let cost_us = ((profile.offload_us(blocks)
-                    + profile.upload_us(blocks))
-                    as f64
-                    * self.cfg.interconnect_factor)
-                    as u64;
+                let cost_us = self.wire_cost_us(blocks);
                 let remaining = predicted_end.saturating_sub(now);
                 if (remaining as f64)
                     < self.cfg.migrate_payback * cost_us as f64
@@ -877,7 +1427,7 @@ impl ClusterEngine {
     /// on an unfinished function call with GPU-resident blocks, and no
     /// standalone func node mid-delay. The batch planner consumes the
     /// whole list; scoring happens once per planning event.
-    fn pick_candidates(
+    pub(super) fn pick_candidates(
         &self,
         shard: usize,
     ) -> Vec<(AppId, RequestId, u32, u64)> {
@@ -945,7 +1495,7 @@ impl ClusterEngine {
     }
 
     #[allow(clippy::too_many_arguments)]
-    fn start_migration(
+    pub(super) fn start_migration(
         &mut self,
         src: usize,
         dst: usize,
@@ -1098,6 +1648,7 @@ impl ClusterEngine {
             };
             st.forecaster
                 .observe_us(&name, finished.saturating_sub(started));
+            st.note_fc_lifetime(rid, finished.saturating_sub(started));
             temporal::resume_from_fc(st, rid, now);
         }
     }

@@ -28,6 +28,15 @@
 //!                    │ routing, remote-pointer seeding, hot-  │
 //!                    │ prefix replication (budget-bounded)    │
 //!                    └────────────────────────────────────────┘
+//!
+//!                    ┌────────────────────────────────────────┐
+//!                    │ autoscale: elastic fleet sizing —      │
+//!                    │ pressure-gated hysteresis controller   │
+//!                    │ grows (modeled warm-up) / drains       │
+//!                    │ (migration-path evacuation, prefix     │
+//!                    │ relocation, conserve-and-retire), with │
+//!                    │ KV-lifetime-aware placement bias       │
+//!                    └────────────────────────────────────────┘
 //! ```
 //!
 //! Everything runs on **one shared event clock** ([`ClusterEngine`] owns
@@ -52,10 +61,12 @@
 //! [`ClusterConfig`]: crate::config::ClusterConfig
 //! [`PressureSnapshot`]: crate::coordination::PressureSnapshot
 
+pub mod autoscale;
 mod engine;
 pub mod prefix_dir;
 mod router;
 
+pub use autoscale::{AutoscaleStats, LifetimePredictor};
 pub use engine::{ClusterEngine, ClusterReport};
 pub use prefix_dir::PrefixDir;
 pub use router::Router;

@@ -311,11 +311,15 @@ pub fn seed_replica(
     if !st.cfg.mode.prefix_cpu_tier() || st.prefix.is_pinned(key) {
         return false;
     }
-    // Only a remote pointer upgrades: a real local copy that appeared
-    // since the remote hit (a finishing request recorded one) is at
-    // least as good as the replica would be.
-    if st.prefix.location_of(key) != Some(PrefixLocation::Remote) {
-        return false;
+    // Only a remote pointer (or no entry at all) upgrades: a real local
+    // copy that appeared since the remote hit (a finishing request
+    // recorded one) is at least as good as the replica would be. The
+    // no-entry case is the drain path — evacuating a retiring shard's
+    // sole copy emits its `Removed` event (orphaning this shard's
+    // pointer) before the replica's wire time elapses.
+    match st.prefix.location_of(key) {
+        None | Some(PrefixLocation::Remote) => {}
+        Some(_) => return false,
     }
     if st.cpu.free_blocks() < blocks
         && !crate::spatial::reclaim_prefix_cpu(st, blocks)

@@ -37,6 +37,9 @@ pub struct Router {
     /// (indexed by template id; templates are registered identically on
     /// every shard).
     warm: Vec<Vec<bool>>,
+    /// `eligible[s]` — the autoscaler excludes warming, draining, and
+    /// retired shards from placement. All-true for a fixed fleet.
+    eligible: Vec<bool>,
 }
 
 impl Router {
@@ -53,6 +56,7 @@ impl Router {
             rr_next: 0,
             spill_load,
             warm: vec![vec![false; templates]; shards],
+            eligible: vec![true; shards],
         }
     }
 
@@ -60,25 +64,23 @@ impl Router {
         self.policy
     }
 
+    /// Include/exclude a shard from placement (autoscale lifecycle:
+    /// warming, draining, and retired shards receive nothing).
+    pub fn set_eligible(&mut self, shard: usize, on: bool) {
+        if let Some(e) = self.eligible.get_mut(shard) {
+            *e = on;
+        }
+    }
+
+    pub fn is_eligible(&self, shard: usize) -> bool {
+        self.eligible.get(shard).copied().unwrap_or(false)
+    }
+
     /// Pressure score of one shard: GPU occupancy plus waiting demand
     /// (as a fraction of the pool) plus a small per-queued-request term so
     /// back-to-back arrivals spread before occupancy reacts.
     pub fn load_score(snap: &PressureSnapshot) -> f64 {
         snap.usage + snap.waiting_pressure() + 0.02 * snap.waiting_count as f64
-    }
-
-    /// Lowest-score shard; ties break to the lowest index (determinism).
-    fn least_loaded(snaps: &[PressureSnapshot]) -> usize {
-        let mut best = 0usize;
-        let mut best_score = f64::INFINITY;
-        for (i, s) in snaps.iter().enumerate() {
-            let score = Self::load_score(s);
-            if score < best_score {
-                best_score = score;
-                best = i;
-            }
-        }
-        best
     }
 
     /// Route one application of `template`, given the current per-shard
@@ -90,31 +92,86 @@ impl Router {
         template: usize,
         snaps: &[PressureSnapshot],
     ) -> usize {
-        self.route_with_warmth(template, snaps, None)
+        self.route_biased(template, snaps, None, None)
     }
 
     /// Route with real residency warmth from the cluster prefix
-    /// directory: `warmth[i]` ∈ [0,1] is shard `i`'s resident-prefix
-    /// fraction for this template. The affinity credit blends the
-    /// boolean served-here bit (a quarter — forecaster training and
-    /// reserved-quota history are real warmth the index can't see) with
-    /// the directory's resident-block fraction (three quarters), so a
-    /// shard whose cache was since evicted no longer earns full credit
-    /// and a shard holding a replica earns some.
+    /// directory (see [`Self::route_biased`]).
     pub fn route_with_warmth(
         &mut self,
         template: usize,
         snaps: &[PressureSnapshot],
         warmth: Option<&[f64]>,
     ) -> usize {
+        self.route_biased(template, snaps, warmth, None)
+    }
+
+    /// Route with warmth and an additive per-shard score bias.
+    ///
+    /// `warmth[i]` ∈ [0,1] is shard `i`'s resident-prefix fraction for
+    /// this template (cluster prefix directory). The affinity credit
+    /// blends the boolean served-here bit (a quarter — forecaster
+    /// training and reserved-quota history are real warmth the index
+    /// can't see) with the directory's resident-block fraction (three
+    /// quarters), so a shard whose cache was since evicted no longer
+    /// earns full credit and a shard holding a replica earns some.
+    ///
+    /// `bias[i]` is added to shard `i`'s score before comparison — the
+    /// autoscaler's lifetime-aware placement penalty: a long-lifetime
+    /// application is steered away from young shards the controller is
+    /// likely to drain next, toward long-lived ones. Applied to the
+    /// pressure-scored policies only; RoundRobin stays the oblivious
+    /// baseline.
+    ///
+    /// Every scored policy breaks exact score ties on the shard id
+    /// (lowest eligible index wins) — placement never depends on float
+    /// accumulation or storage order, even when the eligibility mask
+    /// changes mid-window.
+    pub fn route_biased(
+        &mut self,
+        template: usize,
+        snaps: &[PressureSnapshot],
+        warmth: Option<&[f64]>,
+        bias: Option<&[f64]>,
+    ) -> usize {
         debug_assert_eq!(snaps.len(), self.shards);
+        debug_assert!(
+            self.eligible.iter().any(|&e| e),
+            "route with no eligible shard"
+        );
         let pick = match self.policy {
             PlacementPolicy::RoundRobin => {
-                let s = self.rr_next % self.shards;
-                self.rr_next += 1;
-                s
+                // Advance the cursor past ineligible shards (bounded by
+                // one full lap; the assert above guarantees progress).
+                let mut pick = None;
+                for _ in 0..self.shards {
+                    let s = self.rr_next % self.shards;
+                    self.rr_next += 1;
+                    if self.eligible[s] {
+                        pick = Some(s);
+                        break;
+                    }
+                }
+                pick.expect("route with no eligible shard")
             }
-            PlacementPolicy::LeastLoaded => Self::least_loaded(snaps),
+            PlacementPolicy::LeastLoaded => {
+                let mut best = usize::MAX;
+                let mut best_score = f64::INFINITY;
+                for (i, s) in snaps.iter().enumerate() {
+                    if !self.eligible[i] {
+                        continue;
+                    }
+                    let score = Self::load_score(s)
+                        + bias.map(|b| b[i]).unwrap_or(0.0);
+                    // Strict `<` + ascending index scan = exact ties
+                    // break to the lowest eligible shard id.
+                    if score < best_score {
+                        best_score = score;
+                        best = i;
+                    }
+                }
+                best
+            }
             PlacementPolicy::AgentAffinity => {
                 // Pressure-aware affinity: least-loaded scoring with a
                 // warmth bonus for shards already holding this
@@ -123,9 +180,12 @@ impl Router {
                 // never pins it to a saturated shard: the bonus is
                 // withdrawn at the spill threshold, and a sufficiently
                 // large load gap always overrides warmth.
-                let mut best = 0usize;
+                let mut best = usize::MAX;
                 let mut best_score = f64::INFINITY;
                 for (i, s) in snaps.iter().enumerate() {
+                    if !self.eligible[i] {
+                        continue;
+                    }
                     let load = Self::load_score(s);
                     let warm_bit = self.warm[i]
                         .get(template)
@@ -144,7 +204,8 @@ impl Router {
                     } else {
                         0.0
                     };
-                    let score = load - bonus;
+                    let score = load - bonus
+                        + bias.map(|b| b[i]).unwrap_or(0.0);
                     if score < best_score {
                         best_score = score;
                         best = i;
@@ -153,6 +214,7 @@ impl Router {
                 best
             }
         };
+        debug_assert!(pick < self.shards, "no eligible shard scored");
         self.mark_warm(pick, template);
         pick
     }
@@ -252,6 +314,78 @@ mod tests {
         r2.mark_warm(0, 0);
         r2.mark_warm(1, 0);
         assert_eq!(r2.route(0, &snaps), 1);
+    }
+
+    /// Tie-break audit (autoscale regression): when a draining shard is
+    /// excluded mid-window, exact score ties among the remaining shards
+    /// break on the shard id — never on storage or float order.
+    #[test]
+    fn least_loaded_ties_break_by_id_with_draining_excluded() {
+        let mut r = Router::new(PlacementPolicy::LeastLoaded, 3, 1, 0.8);
+        // Shard 0 would win the tie... until the autoscaler drains it.
+        let even =
+            vec![snap(0.4, 0, 0), snap(0.4, 0, 0), snap(0.4, 0, 0)];
+        assert_eq!(r.route(0, &even), 0);
+        r.set_eligible(0, false);
+        assert_eq!(
+            r.route(0, &even),
+            1,
+            "tie among eligible shards must break to the lowest id"
+        );
+        r.set_eligible(1, false);
+        assert_eq!(r.route(0, &even), 2);
+        r.set_eligible(1, true);
+        assert_eq!(r.route(0, &even), 1);
+    }
+
+    #[test]
+    fn affinity_warmth_ties_break_by_id_with_draining_excluded() {
+        let mut r = Router::new(PlacementPolicy::AgentAffinity, 3, 1, 0.8);
+        // All three shards equally warm and equally loaded: the warmth
+        // credit is identical, so the id decides.
+        for s in 0..3 {
+            r.mark_warm(s, 0);
+        }
+        let even =
+            vec![snap(0.3, 0, 0), snap(0.3, 0, 0), snap(0.3, 0, 0)];
+        let w = [0.5, 0.5, 0.5];
+        assert_eq!(r.route_with_warmth(0, &even, Some(&w)), 0);
+        r.set_eligible(0, false);
+        assert_eq!(
+            r.route_with_warmth(0, &even, Some(&w)),
+            1,
+            "warmth-credit tie must break to the lowest eligible id"
+        );
+    }
+
+    #[test]
+    fn round_robin_skips_ineligible_shards() {
+        let mut r = Router::new(PlacementPolicy::RoundRobin, 3, 1, 0.8);
+        let snaps =
+            vec![snap(0.0, 0, 0), snap(0.0, 0, 0), snap(0.0, 0, 0)];
+        r.set_eligible(1, false);
+        let picks: Vec<usize> =
+            (0..4).map(|_| r.route(0, &snaps)).collect();
+        assert_eq!(picks, vec![0, 2, 0, 2]);
+        r.set_eligible(1, true);
+        // The cursor keeps cycling; shard 1 rejoins the rotation.
+        assert!((0..3).any(|_| r.route(0, &snaps) == 1));
+    }
+
+    #[test]
+    fn lifetime_bias_steers_long_lived_apps_off_young_shards() {
+        // Equal load; the autoscaler marks shard 1 as the likely next
+        // drain victim (bias > 0): a long-lifetime app lands on the
+        // long-lived shard 0 instead.
+        let mut r = Router::new(PlacementPolicy::LeastLoaded, 2, 1, 0.8);
+        let even = vec![snap(0.4, 0, 0), snap(0.4, 0, 0)];
+        assert_eq!(
+            r.route_biased(0, &even, None, Some(&[0.0, 0.1])),
+            0
+        );
+        // A big enough load gap still overrides the bias.
+        let gap = vec![snap(0.8, 0, 0), snap(0.2, 0, 0)];
+        assert_eq!(r.route_biased(0, &gap, None, Some(&[0.0, 0.1])), 1);
     }
 
     #[test]

@@ -294,6 +294,74 @@ impl PlacementPolicy {
     }
 }
 
+/// Elastic replica autoscaling: the hysteresis controller that grows and
+/// drains worker shards from the aggregate pressure signal (see
+/// `cluster::autoscale`). Disabled by default — a fixed fleet behaves
+/// exactly as before.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AutoscaleConfig {
+    pub enabled: bool,
+    /// The fleet never drains below this many serving shards.
+    pub min_shards: usize,
+    /// The fleet never provisions beyond this many shards.
+    pub max_shards: usize,
+    /// Grow when the mean pressure signal (load score + stalled/offloaded
+    /// resumption demand, averaged over active shards) is at/above this.
+    pub grow_watermark: f64,
+    /// Drain when the signal stays at/below this for `drain_confirm`
+    /// consecutive evaluations (hysteresis: strictly below
+    /// `grow_watermark`).
+    pub drain_watermark: f64,
+    /// Modeled shard spin-up cost on the shared clock (model load + KV
+    /// pool init); the router sends a warming shard nothing.
+    pub warmup_cost_us: u64,
+    /// Minimum clock time between scale decisions (anti-flap).
+    pub cooldown_us: u64,
+    /// Consecutive below-watermark evaluations before a drain starts.
+    pub drain_confirm: u32,
+    /// Minimum clock time between controller evaluations (the pressure
+    /// epoch gate decides whether an evaluation happens at all).
+    pub interval_us: u64,
+    /// EWMA smoothing for the KV-lifetime predictor's observed per-
+    /// template function-call stall durations.
+    pub lifetime_ewma: f64,
+}
+
+impl Default for AutoscaleConfig {
+    fn default() -> Self {
+        Self {
+            enabled: false,
+            min_shards: 1,
+            max_shards: 8,
+            grow_watermark: 0.85,
+            drain_watermark: 0.30,
+            warmup_cost_us: 2_000_000,
+            cooldown_us: 2_000_000,
+            drain_confirm: 3,
+            interval_us: 250_000,
+            lifetime_ewma: 0.3,
+        }
+    }
+}
+
+impl AutoscaleConfig {
+    /// Panic on inconsistent bounds (called when an engine adopts the
+    /// config, so a bad file/flag set fails loudly up front).
+    pub fn validate(&self) {
+        assert!(self.min_shards >= 1, "autoscale.min_shards must be >= 1");
+        assert!(
+            self.min_shards <= self.max_shards,
+            "autoscale.min_shards must be <= max_shards"
+        );
+        assert!(
+            self.drain_watermark < self.grow_watermark,
+            "autoscale watermarks must leave a hysteresis band \
+             (drain < grow)"
+        );
+        assert!(self.lifetime_ewma > 0.0 && self.lifetime_ewma <= 1.0);
+    }
+}
+
 /// Multi-worker cluster configuration: N shards, each an independent
 /// worker with its own GPU/CPU block pools and scheduler state, fed by a
 /// placement router and (optionally) rebalanced through cross-worker KV
@@ -341,6 +409,11 @@ pub struct ClusterConfig {
     /// traffic draws on the same per-window interconnect budget as
     /// migration batches.
     pub prefix_replicate_threshold: u32,
+    /// Elastic replica autoscaling (`[cluster.autoscale]` section). When
+    /// enabled, `shards` becomes the *initial* serving count (clamped to
+    /// `[min_shards, max_shards]`) and the engine provisions capacity up
+    /// to `max_shards`.
+    pub autoscale: AutoscaleConfig,
 }
 
 impl Default for ClusterConfig {
@@ -359,6 +432,7 @@ impl Default for ClusterConfig {
             migrate_batch_budget_blocks: 2048,
             prefix_directory: true,
             prefix_replicate_threshold: 2,
+            autoscale: AutoscaleConfig::default(),
         }
     }
 }
@@ -399,6 +473,64 @@ impl ClusterConfig {
             key: key.to_string(),
             value: value.to_string(),
         };
+        let on_off = |v: &str| match v {
+            "true" | "on" | "1" => Ok(true),
+            "false" | "off" | "0" => Ok(false),
+            _ => Err(bad()),
+        };
+        if section == "cluster.autoscale" {
+            let a = &mut self.autoscale;
+            match key {
+                "enabled" => a.enabled = on_off(value)?,
+                "min_shards" => {
+                    // Reject rather than clamp: silently rewriting an
+                    // invalid floor would mask a config mistake the
+                    // CLI path reports loudly.
+                    let v =
+                        value.parse::<usize>().map_err(|_| bad())?;
+                    if v == 0 {
+                        return Err(bad());
+                    }
+                    a.min_shards = v;
+                }
+                "max_shards" => {
+                    let v =
+                        value.parse::<usize>().map_err(|_| bad())?;
+                    if v == 0 {
+                        return Err(bad());
+                    }
+                    a.max_shards = v;
+                }
+                "grow_watermark" => {
+                    a.grow_watermark = value.parse().map_err(|_| bad())?
+                }
+                "drain_watermark" => {
+                    a.drain_watermark = value.parse().map_err(|_| bad())?
+                }
+                "warmup_cost_us" => {
+                    a.warmup_cost_us = value.parse().map_err(|_| bad())?
+                }
+                "cooldown_us" => {
+                    a.cooldown_us = value.parse().map_err(|_| bad())?
+                }
+                "drain_confirm" => {
+                    a.drain_confirm = value.parse().map_err(|_| bad())?
+                }
+                "interval_us" => {
+                    a.interval_us = value.parse().map_err(|_| bad())?
+                }
+                "lifetime_ewma" => {
+                    a.lifetime_ewma = value.parse().map_err(|_| bad())?
+                }
+                _ => {
+                    return Err(ParseError::UnknownKey {
+                        section: section.to_string(),
+                        key: key.to_string(),
+                    })
+                }
+            }
+            return Ok(());
+        }
         if section != "cluster" {
             return self.serve.apply_kv(section, key, value);
         }
@@ -721,6 +853,57 @@ mod tests {
         assert_eq!(c.serve.mode, Mode::Vllm);
         assert!(c.apply_kv("cluster", "shards", "x").is_err());
         assert!(c.apply_kv("cluster", "nope", "1").is_err());
+    }
+
+    #[test]
+    fn autoscale_section_kv_overrides() {
+        let mut c = ClusterConfig::default();
+        assert!(!c.autoscale.enabled);
+        c.apply_kv("cluster.autoscale", "enabled", "on").unwrap();
+        c.apply_kv("cluster.autoscale", "min_shards", "2").unwrap();
+        c.apply_kv("cluster.autoscale", "max_shards", "6").unwrap();
+        c.apply_kv("cluster.autoscale", "grow_watermark", "0.9").unwrap();
+        c.apply_kv("cluster.autoscale", "drain_watermark", "0.2")
+            .unwrap();
+        c.apply_kv("cluster.autoscale", "warmup_cost_us", "500000")
+            .unwrap();
+        c.apply_kv("cluster.autoscale", "cooldown_us", "750000")
+            .unwrap();
+        c.apply_kv("cluster.autoscale", "drain_confirm", "5").unwrap();
+        c.apply_kv("cluster.autoscale", "interval_us", "100000")
+            .unwrap();
+        assert!(c.autoscale.enabled);
+        assert_eq!(c.autoscale.min_shards, 2);
+        assert_eq!(c.autoscale.max_shards, 6);
+        assert_eq!(c.autoscale.grow_watermark, 0.9);
+        assert_eq!(c.autoscale.drain_watermark, 0.2);
+        assert_eq!(c.autoscale.warmup_cost_us, 500_000);
+        assert_eq!(c.autoscale.cooldown_us, 750_000);
+        assert_eq!(c.autoscale.drain_confirm, 5);
+        assert_eq!(c.autoscale.interval_us, 100_000);
+        c.autoscale.validate();
+        assert!(c.apply_kv("cluster.autoscale", "nope", "1").is_err());
+        assert!(c
+            .apply_kv("cluster.autoscale", "min_shards", "x")
+            .is_err());
+        // Invalid bounds are rejected, not silently clamped.
+        assert!(c
+            .apply_kv("cluster.autoscale", "min_shards", "0")
+            .is_err());
+        assert!(c
+            .apply_kv("cluster.autoscale", "max_shards", "0")
+            .is_err());
+    }
+
+    #[test]
+    #[should_panic]
+    fn autoscale_validate_rejects_inverted_watermarks() {
+        let a = AutoscaleConfig {
+            grow_watermark: 0.2,
+            drain_watermark: 0.8,
+            ..Default::default()
+        };
+        a.validate();
     }
 
     #[test]

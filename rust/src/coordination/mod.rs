@@ -76,6 +76,11 @@ pub struct PressureSnapshot {
     pub critical_demand: u32,
     /// Blocks held by stalled (offloadable) requests.
     pub offloadable_stalled: u32,
+    /// CPU blocks held by offloaded requests — KV parked off-GPU that
+    /// will return as demand when its tool finishes. The autoscale
+    /// controller counts it as near-term resumption load so the fleet
+    /// is not drained out from under work that is about to resume.
+    pub offloaded_blocks: u32,
     /// Blocks of in-flight H2D uploads (upload debt).
     pub upload_debt: u32,
     /// Number of waiting requests.

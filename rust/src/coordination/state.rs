@@ -262,6 +262,14 @@ pub struct ServeState {
     pub prefix_events: Vec<PrefixEvent>,
     /// Cluster driver flips this so prefix mutations are published.
     pub publish_prefix_events: bool,
+    /// Observed `(template, stall µs)` pairs, one per finished function
+    /// call — the input of the cluster autoscaler's per-template
+    /// KV-lifetime predictor (Continuum-style: lifetime ≈ the
+    /// template's tool-call profile × observed stall durations).
+    /// Recorded only when [`Self::publish_lifetime_obs`] is set.
+    pub fc_lifetime_obs: Vec<(usize, u64)>,
+    /// Cluster autoscaler flips this so FC lifetimes are published.
+    pub publish_lifetime_obs: bool,
     /// Last observed pressure band (see [`Self::note_pressure_band`]).
     last_pressure_band: u8,
     next_req: u64,
@@ -308,6 +316,8 @@ impl ServeState {
             temporal_next_due_us: u64::MAX,
             prefix_events: Vec::new(),
             publish_prefix_events: false,
+            fc_lifetime_obs: Vec::new(),
+            publish_lifetime_obs: false,
             last_pressure_band: 0,
             next_req: 0,
             next_app: 0,
@@ -368,6 +378,26 @@ impl ServeState {
     /// Hand the accumulated prefix events to the cluster driver.
     pub fn drain_prefix_events(&mut self) -> Vec<PrefixEvent> {
         std::mem::take(&mut self.prefix_events)
+    }
+
+    /// Record one finished function call's observed stall duration
+    /// against the request's graph template. Every FC finish lands here
+    /// (from `temporal::call_finish` and the cluster's buffered-finish
+    /// replay); the observation itself is published only when an
+    /// autoscaler is listening — standalone engines pay one counter
+    /// bump.
+    pub fn note_fc_lifetime(&mut self, rid: RequestId, stall_us: u64) {
+        self.metrics.counters.fc_lifetime_obs += 1;
+        if self.publish_lifetime_obs {
+            let template =
+                self.apps.template_of(&self.reqs[&rid].app_id);
+            self.fc_lifetime_obs.push((template, stall_us));
+        }
+    }
+
+    /// Hand the accumulated lifetime observations to the autoscaler.
+    pub fn drain_lifetime_obs(&mut self) -> Vec<(usize, u64)> {
+        std::mem::take(&mut self.fc_lifetime_obs)
     }
 
     /// Cancel a request's in-flight prefix H2D debt (preemption): the
@@ -757,6 +787,14 @@ impl ServeState {
                 offloadable_stalled += r.blocks.len();
             }
         }
+        // Parked KV that resumes as demand — O(offloaded) via the index.
+        let mut offloaded_blocks = 0u32;
+        for rid in &self.offloaded_ids {
+            let r = &self.reqs[rid];
+            if r.state == ReqState::Offloaded {
+                offloaded_blocks += r.cpu_blocks.len() as u32;
+            }
+        }
         PressureSnapshot {
             gpu_total: self.gpu.total(),
             gpu_free: self.gpu.free_blocks(),
@@ -767,6 +805,7 @@ impl ServeState {
             waiting_demand,
             critical_demand,
             offloadable_stalled,
+            offloaded_blocks,
             upload_debt: self.ledger.inflight_upload_blocks(),
             waiting_count,
             usage: self.gpu.usage(),

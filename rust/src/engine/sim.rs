@@ -361,6 +361,25 @@ impl SimEngine {
         self.rescue_deadlock()
     }
 
+    /// End-of-run settlement: complete every in-flight block transfer
+    /// immediately. The cluster driver calls this when the workload
+    /// finishes while copies are still on the wire (e.g. a drain
+    /// evacuation's D2H leg) — mid-wire state at shutdown is
+    /// bookkeeping to close, not a leak, and pools must end consistent.
+    /// At normal completion only `TransferDone` events can remain (a
+    /// pending tool finish or node delay would imply an unfinished
+    /// app); anything else is dropped.
+    pub fn settle_transfers(&mut self) {
+        self.drain_outbox();
+        while let Some(ev) = self.events.pop() {
+            if let Ev::TransferDone { xfer } = ev.payload {
+                let now = self.clock.now_us();
+                temporal::on_transfer_done(&mut self.st, xfer, now);
+                self.drain_outbox();
+            }
+        }
+    }
+
     /// Finalize this worker's metric bundle at the end of a cluster run,
     /// *taking* it out of the engine (no clone of latency samples / time
     /// series; the engine keeps a fresh default). Swap volume comes from

@@ -344,6 +344,28 @@ impl PrefixIndex {
         self.entries.get(&key).map(|e| e.backing.location())
     }
 
+    /// Key-sorted snapshot of every entry with *local* backing (GPU or
+    /// CPU): `(key, location, blocks, tokens, pinned)`. The cluster
+    /// drain path enumerates these to evacuate a retiring shard's
+    /// cache; sorting keeps the evacuation order independent of
+    /// `HashMap` storage.
+    pub fn local_entries(
+        &self,
+    ) -> Vec<(PrefixKey, PrefixLocation, u32, u32, bool)> {
+        let mut out: Vec<_> = self
+            .entries
+            .iter()
+            .filter_map(|(k, e)| match e.backing.location() {
+                PrefixLocation::Remote => None,
+                loc => {
+                    Some((*k, loc, e.blocks, e.tokens, e.readers > 0))
+                }
+            })
+            .collect();
+        out.sort_by_key(|&(k, ..)| k);
+        out
+    }
+
     /// Every GPU extent the index pins (tests / invariant checks).
     pub fn resident_gpu_extents(&self) -> Vec<super::Extent> {
         let mut out = Vec::new();

@@ -23,9 +23,17 @@
 //!   and reserved regions, guided by a hybrid priority metric over the
 //!   application DAG and runtime state.
 //!
-//! ## Architecture (four layers)
+//! ## Architecture (five layers)
 //!
 //! ```text
+//! L5  autoscale control plane — elastic fleet sizing on the shared
+//!     clock (cluster::autoscale): a hysteresis controller grows/drains
+//!     shards from the aggregate pressure signal behind the pressure-
+//!     epoch gate, drains evacuate through the batched migration path +
+//!     prefix-directory relocation under the interconnect budget, and a
+//!     per-template KV-lifetime predictor biases placement (long-lived
+//!     apps avoid soon-to-drain shards); retirement conserves every
+//!     block and is only reachable from the autoscale module
 //! L4  cluster layer — N worker shards on one shared event clock:
 //!     agent-affinity router, pressure-aware placement, cross-worker
 //!     KV migration of stalled agents (cluster::ClusterEngine), and a
@@ -99,6 +107,19 @@
 //! a pressure burst drains in one window instead of one victim per
 //! window.
 //!
+//! The fleet itself is elastic under the same discipline
+//! ([`cluster::autoscale`]): a hysteresis controller reads the
+//! aggregate pressure signal through the pressure-epoch gate and
+//! grows (modeled warm-up; the router sends a warming shard nothing)
+//! or drains (placement stops, stalled apps leave via the batched
+//! migration path, sole-copy prefixes relocate under the interconnect
+//! budget, and the shard retires only with empty pools — blocks
+//! conserved end to end, the invariant both CI and the drain proptest
+//! assert). A per-template KV-lifetime predictor — the template's
+//! tool-call profile × an EWMA of observed stall durations — steers
+//! long-lived applications away from the shards the controller will
+//! drain next.
+//!
 //! Python never runs on the request path: `make artifacts` lowers the model
 //! once; the rust binary is self-contained afterwards.
 //!
@@ -152,11 +173,11 @@ pub mod workload;
 pub mod prelude {
     pub use crate::cluster::{ClusterEngine, ClusterReport};
     pub use crate::config::{
-        ClusterConfig, Mode, ModelProfile, PlacementPolicy, PolicyConfig,
-        ServeConfig,
+        AutoscaleConfig, ClusterConfig, Mode, ModelProfile,
+        PlacementPolicy, PolicyConfig, ServeConfig,
     };
     pub use crate::engine::sim::{RunReport, SimEngine};
     pub use crate::graph::templates;
     pub use crate::graph::{AppGraph, FuncKind, NodeKind};
-    pub use crate::workload::{ClusterWorkload, WorkloadSpec};
+    pub use crate::workload::{BurstSpec, ClusterWorkload, WorkloadSpec};
 }

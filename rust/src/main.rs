@@ -8,6 +8,8 @@
 //! tokencake cluster --shards 4 [--policy affinity|least|rr]
 //!                   [--mix cw:2,dr:1] [--qps 1.0] [--apps 40]
 //!                   [--frac 0.08] [--no-migrate] [--seed N]
+//!                   [--autoscale --min-shards 1 --max-shards 8]
+//!                   [--burst-qps 6.0 --burst-period-s 60 --burst-duty 0.25]
 //! tokencake serve   [--port 8080]
 //! tokencake graph   --app deep-research
 //! tokencake help
@@ -21,7 +23,9 @@ use tokencake::config::{
 use tokencake::engine::sim::SimEngine;
 use tokencake::graph::{templates, AppGraph};
 use tokencake::server::Server;
-use tokencake::workload::{ClusterWorkload, Dataset, WorkloadSpec};
+use tokencake::workload::{
+    BurstSpec, ClusterWorkload, Dataset, WorkloadSpec,
+};
 
 fn app_by_name(name: &str) -> Result<AppGraph, String> {
     Ok(match name {
@@ -126,53 +130,7 @@ fn write_bench_trajectory(
 
     let mut rows: Vec<String> = Vec::new();
     let mut row = |name: &str, rep: &ClusterReport, wall_s: f64| {
-        let ticks = rep.aggregate.counters.sched_steps;
-        let events = ticks + rep.aggregate.counters.decode_iterations;
-        let wall = wall_s.max(1e-9);
-        // Mean migration batch pools the cluster planner's windows with
-        // the per-shard temporal planners' local D2H offload batches.
-        let batches = rep.migration_batches
-            + rep.aggregate.counters.offload_batches;
-        let batch_victims = rep.migrations
-            + rep.aggregate.counters.offload_batch_victims;
-        let mean_batch = if batches == 0 {
-            0.0
-        } else {
-            batch_victims as f64 / batches as f64
-        };
-        rows.push(format!(
-            "    {{\"name\": \"{name}\", \"shards\": {}, \
-             \"policy\": \"{}\", \"apps\": {}, \
-             \"throughput_apps_per_s\": {:.6}, \
-             \"mean_latency_s\": {:.3}, \"p99_latency_s\": {:.3}, \
-             \"effective_gpu_util\": {:.4}, \"migrations\": {}, \
-             \"wall_s\": {:.3}, \"sim_events_per_s\": {:.0}, \
-             \"sim_ticks_per_s\": {:.0}, \
-             \"planner_runs_per_1k_ticks\": {:.2}, \
-             \"mean_migration_batch\": {:.2}, \
-             \"prefix_hit_rate_local\": {:.4}, \
-             \"prefix_hit_rate_remote\": {:.4}, \
-             \"prefill_tokens_saved\": {}, \
-             \"prefix_replications\": {}, \"truncated\": {}}}",
-            rep.num_shards,
-            rep.policy,
-            rep.aggregate.apps_completed,
-            rep.aggregate.throughput(),
-            rep.aggregate.latency.mean_s(),
-            rep.aggregate.latency.percentile_s(99.0),
-            rep.effective_util(),
-            rep.migrations,
-            wall_s,
-            events as f64 / wall,
-            ticks as f64 / wall,
-            rep.aggregate.counters.planner_runs_per_1k_ticks(),
-            mean_batch,
-            rep.aggregate.counters.prefix_hit_rate_local(),
-            rep.aggregate.counters.prefix_hit_rate_remote(),
-            rep.aggregate.counters.prefill_tokens_saved,
-            rep.prefix_replications,
-            rep.truncated,
-        ));
+        rows.push(bench_row(name, rep, wall_s));
     };
 
     let single = ClusterConfig::default()
@@ -205,6 +163,83 @@ fn write_bench_trajectory(
         rows.join(",\n")
     );
     std::fs::write(path, json).map_err(|e| e.to_string())
+}
+
+/// One machine-readable benchmark row for a cluster run. Shared by
+/// `bench --json` (trajectory) and `cluster --json` (single run): the
+/// autoscale fields are zero/fixed for a fixed fleet.
+fn bench_row(name: &str, rep: &ClusterReport, wall_s: f64) -> String {
+    let ticks = rep.aggregate.counters.sched_steps;
+    let events = ticks + rep.aggregate.counters.decode_iterations;
+    let wall = wall_s.max(1e-9);
+    // Mean migration batch pools the cluster planner's windows with
+    // the per-shard temporal planners' local D2H offload batches.
+    let batches =
+        rep.migration_batches + rep.aggregate.counters.offload_batches;
+    let batch_victims =
+        rep.migrations + rep.aggregate.counters.offload_batch_victims;
+    let mean_batch = if batches == 0 {
+        0.0
+    } else {
+        batch_victims as f64 / batches as f64
+    };
+    // For an elastic run, "shards" is the fleet that was SERVING at the
+    // end, comparable with fixed-fleet rows; provisioned capacity is
+    // implied by the autoscale fields.
+    let shards = if rep.autoscale_enabled {
+        rep.final_active_shards
+    } else {
+        rep.num_shards
+    };
+    format!(
+        "    {{\"name\": \"{name}\", \"shards\": {shards}, \
+         \"policy\": \"{}\", \"apps\": {}, \
+         \"throughput_apps_per_s\": {:.6}, \
+         \"mean_latency_s\": {:.3}, \"p99_latency_s\": {:.3}, \
+         \"effective_gpu_util\": {:.4}, \"migrations\": {}, \
+         \"wall_s\": {:.3}, \"sim_events_per_s\": {:.0}, \
+         \"sim_ticks_per_s\": {:.0}, \
+         \"planner_runs_per_1k_ticks\": {:.2}, \
+         \"mean_migration_batch\": {:.2}, \
+         \"prefix_hit_rate_local\": {:.4}, \
+         \"prefix_hit_rate_remote\": {:.4}, \
+         \"prefill_tokens_saved\": {}, \
+         \"prefix_replications\": {}, \
+         \"autoscale\": {}, \"final_shards\": {}, \
+         \"scale_up_events\": {}, \"scale_down_events\": {}, \
+         \"shards_retired\": {}, \"drained_app_blocks\": {}, \
+         \"drained_prefix_blocks\": {}, \
+         \"shard_lifetimes_s\": [{}], \"truncated\": {}}}",
+        rep.policy,
+        rep.aggregate.apps_completed,
+        rep.aggregate.throughput(),
+        rep.aggregate.latency.mean_s(),
+        rep.aggregate.latency.percentile_s(99.0),
+        rep.effective_util(),
+        rep.migrations,
+        wall_s,
+        events as f64 / wall,
+        ticks as f64 / wall,
+        rep.aggregate.counters.planner_runs_per_1k_ticks(),
+        mean_batch,
+        rep.aggregate.counters.prefix_hit_rate_local(),
+        rep.aggregate.counters.prefix_hit_rate_remote(),
+        rep.aggregate.counters.prefill_tokens_saved,
+        rep.prefix_replications,
+        rep.autoscale_enabled,
+        rep.final_active_shards,
+        rep.scale_up_events,
+        rep.scale_down_events,
+        rep.shards_retired,
+        rep.drained_app_blocks,
+        rep.drained_prefix_blocks,
+        rep.shard_lifetimes_us
+            .iter()
+            .map(|l| format!("{:.1}", *l as f64 / 1e6))
+            .collect::<Vec<_>>()
+            .join(", "),
+        rep.truncated,
+    )
 }
 
 /// Parse `--mix cw:2,dr:1` into weighted graph templates.
@@ -249,6 +284,53 @@ fn cmd_cluster(args: &Args) -> Result<(), String> {
     if args.has("no-migrate") {
         cluster.migration = false;
     }
+    // Elastic autoscaling: --autoscale flips it on; the bounds and
+    // controller constants are flag-overridable on top of the
+    // [cluster.autoscale] file section.
+    if args.has("autoscale") {
+        cluster.autoscale.enabled = true;
+    }
+    cluster.autoscale.min_shards = args
+        .get_u64("min-shards", cluster.autoscale.min_shards as u64)?
+        as usize;
+    cluster.autoscale.max_shards = args
+        .get_u64("max-shards", cluster.autoscale.max_shards as u64)?
+        as usize;
+    cluster.autoscale.grow_watermark = args
+        .get_f64("grow-watermark", cluster.autoscale.grow_watermark)?;
+    cluster.autoscale.drain_watermark = args
+        .get_f64("drain-watermark", cluster.autoscale.drain_watermark)?;
+    // Only override when the flag is present: the ms→µs round trip
+    // must not silently truncate a sub-millisecond config-file value.
+    if args.get("warmup-ms").is_some() {
+        cluster.autoscale.warmup_cost_us =
+            args.get_u64("warmup-ms", 0)? * 1000;
+    }
+    if args.get("cooldown-ms").is_some() {
+        cluster.autoscale.cooldown_us =
+            args.get_u64("cooldown-ms", 0)? * 1000;
+    }
+    // Validate here with the CLI's normal error path — the engine's
+    // own validate() is an assert meant for programmatic misuse.
+    if cluster.autoscale.enabled {
+        let a = &cluster.autoscale;
+        if a.min_shards < 1 {
+            return Err("--min-shards must be >= 1".into());
+        }
+        if a.min_shards > a.max_shards {
+            return Err(format!(
+                "--min-shards ({}) must be <= --max-shards ({})",
+                a.min_shards, a.max_shards
+            ));
+        }
+        if a.drain_watermark >= a.grow_watermark {
+            return Err(format!(
+                "--drain-watermark ({}) must be below \
+                 --grow-watermark ({}) — the hysteresis band",
+                a.drain_watermark, a.grow_watermark
+            ));
+        }
+    }
     let (shards, policy) = (cluster.shards, cluster.placement);
 
     let qps = args.get_f64("qps", 1.0)?;
@@ -260,18 +342,44 @@ fn cmd_cluster(args: &Args) -> Result<(), String> {
         other => return Err(format!("unknown dataset {other:?}")),
     };
     let noise = args.get_f64("noise", 0.0)?;
-    let workload = ClusterWorkload::mixed(&mix, qps, apps)
+    let mut workload = ClusterWorkload::mixed(&mix, qps, apps)
         .with_dataset(dataset)
         .with_tool_noise(noise);
+    // Bursty arrival phases (--burst-qps N [--burst-period-s P]
+    // [--burst-duty D]): the flash-crowd workload autoscaling exists
+    // for.
+    if let Some(bq) = args.get("burst-qps") {
+        let burst_qps: f64 = bq
+            .parse()
+            .map_err(|_| format!("--burst-qps: bad number {bq:?}"))?;
+        let period_s = args.get_f64("burst-period-s", 60.0)?;
+        let duty = args.get_f64("burst-duty", 0.25)?;
+        workload = workload.with_burst(BurstSpec {
+            burst_qps,
+            period_us: (period_s * 1e6) as u64,
+            duty,
+        });
+    }
 
+    let autoscale_on = cluster.autoscale.enabled;
+    let (min_s, max_s) =
+        (cluster.autoscale.min_shards, cluster.autoscale.max_shards);
     println!(
         "cluster: {shards} shard(s), policy={}, migration={}, \
-         qps={qps}, apps={apps}, mix={}",
+         autoscale={}, qps={qps}, apps={apps}, mix={}",
         policy.name(),
         cluster.migration,
+        if autoscale_on {
+            format!("{min_s}..{max_s}")
+        } else {
+            "off".into()
+        },
         args.get_or("mix", "cw:2,dr:1"),
     );
-    let report = ClusterEngine::new(cluster).run(&workload);
+    let mut eng = ClusterEngine::new(cluster);
+    let t0 = std::time::Instant::now();
+    let report = eng.run(&workload);
+    let wall_s = t0.elapsed().as_secs_f64();
     for line in report.shard_lines() {
         println!("{line}");
     }
@@ -298,8 +406,60 @@ fn cmd_cluster(args: &Args) -> Result<(), String> {
         c.prefix_evictions,
         c.prefix_demotions,
     );
+    if report.autoscale_enabled {
+        println!(
+            "autoscale: up={} down={} cancels={} retired={} \
+             final_active={} drained_app_blocks={} \
+             drained_prefix_blocks={} (dropped {}) lifetimes_s=[{}]",
+            report.scale_up_events,
+            report.scale_down_events,
+            report.drain_cancels,
+            report.shards_retired,
+            report.final_active_shards,
+            report.drained_app_blocks,
+            report.drained_prefix_blocks,
+            report.drained_prefix_dropped_blocks,
+            report
+                .shard_lifetimes_us
+                .iter()
+                .map(|l| format!("{:.1}", *l as f64 / 1e6))
+                .collect::<Vec<_>>()
+                .join(", "),
+        );
+    }
     if report.truncated {
         eprintln!("warning: cluster run truncated before completion");
+    }
+    if let Some(path) = args.get("json") {
+        let name = args.get_or("json-name", "cluster-run");
+        let json = format!("{}\n", bench_row(name, &report, wall_s));
+        std::fs::write(path, json).map_err(|e| e.to_string())?;
+        println!("wrote run row to {path}");
+    }
+    if args.has("assert-autoscale") {
+        // CI smoke: the elastic fleet must respect its bounds and lose
+        // nothing — every shard's pool conserved, every migrated block
+        // landed or dropped-to-recompute, nothing in flight.
+        if !autoscale_on {
+            return Err(
+                "--assert-autoscale requires --autoscale".to_string()
+            );
+        }
+        let serving = report.final_active_shards;
+        if serving < min_s || serving > max_s {
+            return Err(format!(
+                "autoscale out of bounds: {serving} serving shards \
+                 not in [{min_s}, {max_s}]"
+            ));
+        }
+        eng.check_conservation()?;
+        println!(
+            "autoscale OK: {serving} serving in [{min_s}, {max_s}], \
+             zero lost blocks ({} migrated = {} landed + dropped)",
+            report.migration_blocks,
+            report.migration_landed_blocks
+                + report.migration_drop_blocks,
+        );
     }
     if args.has("assert-planner-gated") {
         // CI perf smoke: steady-state ticks must skip the planner — the
@@ -392,6 +552,17 @@ COMMANDS:
   cluster  sharded multi-worker serving:  --shards N
            --policy rr|least|affinity  --mix cw:2,dr:1  --qps --apps
            --frac --dataset --noise --seed --config  --no-migrate
+           --autoscale [--min-shards N --max-shards N
+           --grow-watermark X --drain-watermark X --warmup-ms N
+           --cooldown-ms N]  (elastic fleet: grow/drain shards from
+           the aggregate pressure signal; --shards is the initial
+           serving count)
+           --burst-qps N [--burst-period-s P --burst-duty D]
+           (periodic traffic bursts over the base --qps)
+           --json FILE [--json-name NAME]  write the run's benchmark
+           row
+           --assert-autoscale  (fail unless min <= serving <= max and
+           zero blocks were lost — the autoscale CI smoke)
            --assert-planner-gated  (fail unless planner runs < 10% of
            scheduling steps — the epoch-gate CI smoke)
   serve    start the frontend HTTP server:  --port

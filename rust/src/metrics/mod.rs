@@ -67,6 +67,9 @@ pub struct Counters {
     pub offload_batches: u64,
     /// Victims across those batches (mean batch = victims / batches).
     pub offload_batch_victims: u64,
+    /// Function-call lifetime observations recorded (one per FC finish)
+    /// — the KV-lifetime predictor's input stream.
+    pub fc_lifetime_obs: u64,
 }
 
 impl Counters {
@@ -97,6 +100,7 @@ impl Counters {
         self.spatial_plan_skips += o.spatial_plan_skips;
         self.offload_batches += o.offload_batches;
         self.offload_batch_victims += o.offload_batch_victims;
+        self.fc_lifetime_obs += o.fc_lifetime_obs;
     }
 
     /// Planner executions per 1000 scheduling steps — the epoch-gating
@@ -180,7 +184,7 @@ impl MetricsBundle {
              pfx_cpu={} pfx_rem={} pfx_look={} pfx_saved={} \
              pfx_evict={} pfx_demote={} resv={} defer={} iters={} \
              toks={} aborts={} plan={} pskip={} splan={} sskip={} \
-             obatch={} ovict={}\n",
+             obatch={} ovict={} fclt={}\n",
             self.apps_completed,
             self.latency.total_us(),
             self.latency.len(),
@@ -214,6 +218,7 @@ impl MetricsBundle {
             self.counters.spatial_plan_skips,
             self.counters.offload_batches,
             self.counters.offload_batch_victims,
+            self.counters.fc_lifetime_obs,
         )
     }
 

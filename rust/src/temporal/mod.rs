@@ -90,6 +90,9 @@ pub fn call_finish(
         )
     };
     st.forecaster.observe_us(&name, now_us - started);
+    // Same observation, template-keyed: the autoscaler's KV-lifetime
+    // predictor learns how long this template's calls stall its cache.
+    st.note_fc_lifetime(rid, now_us - started);
 
     match state {
         ReqState::Stalled => {

@@ -10,7 +10,49 @@ pub use corpus::{Dataset, SampledLengths};
 pub use tools::ToolSim;
 
 use crate::graph::AppGraph;
-use crate::sim::{Poisson, Rng};
+use crate::sim::{Dist, Poisson, Rng};
+
+/// Periodic traffic bursts: the arrival process alternates between a
+/// burst rate and the workload's base rate on a fixed period — the
+/// flash-crowd pattern that exercises replica autoscaling (grow on the
+/// burst, drain in the lull).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BurstSpec {
+    /// Arrival rate during the burst phase (QPS, Poisson).
+    pub burst_qps: f64,
+    /// Length of one base+burst cycle (µs).
+    pub period_us: u64,
+    /// Fraction of each period (at the start) spent bursting, in (0,1].
+    pub duty: f64,
+}
+
+impl BurstSpec {
+    pub fn validate(&self) {
+        assert!(self.burst_qps > 0.0, "burst_qps must be > 0");
+        assert!(self.period_us > 0, "burst period must be > 0");
+        assert!(
+            self.duty > 0.0 && self.duty <= 1.0,
+            "burst duty must be in (0,1]"
+        );
+    }
+
+    fn in_burst(&self, t_us: f64) -> bool {
+        let period = self.period_us as f64;
+        t_us % period < self.duty * period
+    }
+
+    /// Next phase boundary strictly after `t_us`.
+    fn next_boundary_us(&self, t_us: f64) -> f64 {
+        let period = self.period_us as f64;
+        let base = (t_us / period).floor() * period;
+        let burst_end = base + self.duty * period;
+        if t_us < burst_end {
+            burst_end
+        } else {
+            base + period
+        }
+    }
+}
 
 /// A complete workload specification: which app, how often, how many, on
 /// which corpus, with how much tool-time noise.
@@ -75,10 +117,13 @@ pub struct MixEntry {
 pub struct ClusterWorkload {
     pub entries: Vec<MixEntry>,
     /// Aggregate application arrival rate across the whole cluster (QPS).
+    /// With a [`BurstSpec`], this is the *base* (lull) rate.
     pub qps: f64,
     pub num_apps: usize,
     pub dataset: Dataset,
     pub tool_noise: f64,
+    /// Optional periodic burst phases layered over the base rate.
+    pub burst: Option<BurstSpec>,
 }
 
 impl ClusterWorkload {
@@ -101,6 +146,7 @@ impl ClusterWorkload {
             num_apps,
             dataset: Dataset::D1,
             tool_noise: 0.0,
+            burst: None,
         }
     }
 
@@ -121,17 +167,61 @@ impl ClusterWorkload {
         self
     }
 
+    pub fn with_burst(mut self, b: BurstSpec) -> Self {
+        b.validate();
+        self.burst = Some(b);
+        self
+    }
+
     /// Generate the arrival schedule: `(timestamp µs, template index)`
     /// per application, template drawn by mix weight.
+    ///
+    /// With a burst spec the process is a piecewise-constant-rate
+    /// Poisson, sampled exactly: an exponential draw that would cross a
+    /// phase boundary is discarded and redrawn from the boundary at the
+    /// new phase's rate (valid by memorylessness), so burst windows see
+    /// `burst_qps` and lulls see the base `qps` with no smearing.
     pub fn arrivals(&self, rng: &mut Rng) -> Vec<(u64, usize)> {
         let weights: Vec<f64> =
             self.entries.iter().map(|e| e.weight).collect();
-        let mut p = Poisson::new(self.qps);
-        (0..self.num_apps)
-            .map(|_| {
-                (p.next_arrival_us(rng), rng.weighted_index(&weights))
-            })
-            .collect()
+        match self.burst {
+            None => {
+                let mut p = Poisson::new(self.qps);
+                (0..self.num_apps)
+                    .map(|_| {
+                        (
+                            p.next_arrival_us(rng),
+                            rng.weighted_index(&weights),
+                        )
+                    })
+                    .collect()
+            }
+            Some(b) => {
+                let mut t_us: f64 = 0.0;
+                (0..self.num_apps)
+                    .map(|_| {
+                        loop {
+                            let rate = if b.in_burst(t_us) {
+                                b.burst_qps
+                            } else {
+                                self.qps
+                            };
+                            let dt =
+                                Dist::Exp(1e6 / rate).sample(rng);
+                            let boundary = b.next_boundary_us(t_us);
+                            if t_us + dt < boundary {
+                                t_us += dt;
+                                break;
+                            }
+                            // Crossed into the next phase: restart the
+                            // exponential clock at the boundary.
+                            t_us = boundary;
+                        }
+                        (t_us as u64, rng.weighted_index(&weights))
+                    })
+                    .collect()
+            }
+        }
     }
 }
 
@@ -200,5 +290,60 @@ mod tests {
     #[should_panic]
     fn cluster_rejects_empty_mix() {
         let _ = ClusterWorkload::mixed(&[], 1.0, 1);
+    }
+
+    #[test]
+    fn burst_arrivals_concentrate_in_burst_windows() {
+        let b = BurstSpec {
+            burst_qps: 8.0,
+            period_us: 20_000_000,
+            duty: 0.25,
+        };
+        let w = ClusterWorkload::uniform(
+            &templates::code_writer(),
+            0.5,
+            2000,
+        )
+        .with_burst(b);
+        let arr = w.arrivals(&mut Rng::new(3));
+        assert_eq!(arr.len(), 2000);
+        assert!(arr.windows(2).all(|a| a[0].0 <= a[1].0));
+        // A quarter of the time carries 8 QPS, the rest 0.5 QPS: the
+        // burst windows must hold the large majority of arrivals
+        // (expected fraction 2.0 / 2.375 ≈ 84%).
+        let in_burst = arr
+            .iter()
+            .filter(|(t, _)| (t % 20_000_000) < 5_000_000)
+            .count() as f64;
+        let frac = in_burst / arr.len() as f64;
+        assert!(
+            (0.75..0.95).contains(&frac),
+            "burst fraction {frac} out of range"
+        );
+    }
+
+    #[test]
+    fn burst_arrivals_deterministic_per_seed() {
+        let b = BurstSpec {
+            burst_qps: 4.0,
+            period_us: 10_000_000,
+            duty: 0.3,
+        };
+        let w = ClusterWorkload::uniform(&templates::rag(), 0.5, 200)
+            .with_burst(b);
+        let a = w.arrivals(&mut Rng::new(11));
+        let bb = w.arrivals(&mut Rng::new(11));
+        assert_eq!(a, bb);
+    }
+
+    #[test]
+    #[should_panic]
+    fn burst_rejects_bad_duty() {
+        let _ = ClusterWorkload::uniform(&templates::rag(), 1.0, 1)
+            .with_burst(BurstSpec {
+                burst_qps: 2.0,
+                period_us: 1_000_000,
+                duty: 1.5,
+            });
     }
 }

@@ -11,7 +11,7 @@ use tokencake::graph::templates;
 use tokencake::kvcache::{AllocOutcome, Route};
 use tokencake::temporal;
 use tokencake::workload::{
-    ClusterWorkload, Dataset, SampledLengths, ToolSim,
+    BurstSpec, ClusterWorkload, Dataset, SampledLengths, ToolSim,
 };
 
 fn cfg(
@@ -367,6 +367,150 @@ fn prefix_directory_keeps_epoch_gating_effective() {
         counters.planner_runs,
         counters.sched_steps
     );
+}
+
+// ----------------------------------------------------------------------
+// Elastic replica autoscaling
+// ----------------------------------------------------------------------
+
+/// The flash-crowd workload autoscaling exists for: short intense
+/// bursts over a quiet base rate.
+fn bursty(apps: usize) -> ClusterWorkload {
+    ClusterWorkload::mixed(
+        &[
+            (templates::code_writer(), 2.0),
+            (templates::deep_research(), 1.0),
+        ],
+        0.3,
+        apps,
+    )
+    .with_dataset(Dataset::D1)
+    .with_burst(BurstSpec {
+        burst_qps: 4.0,
+        period_us: 60_000_000,
+        duty: 0.25,
+    })
+}
+
+/// An elastic 1..8 cluster with a responsive controller.
+fn autoscale_cfg(seed: u64) -> ClusterConfig {
+    let mut c = cfg(1, PlacementPolicy::AgentAffinity, 0.06, seed);
+    c.autoscale.enabled = true;
+    c.autoscale.min_shards = 1;
+    c.autoscale.max_shards = 8;
+    c.autoscale.grow_watermark = 0.85;
+    c.autoscale.drain_watermark = 0.30;
+    c.autoscale.warmup_cost_us = 1_000_000;
+    c.autoscale.cooldown_us = 1_000_000;
+    c.autoscale.drain_confirm = 2;
+    c.autoscale.interval_us = 100_000;
+    c
+}
+
+/// Under the burst workload the controller grows the fleet, stays in
+/// its bounds, completes everything, and loses zero blocks — across
+/// grows, drains, and retirements.
+#[test]
+fn autoscale_grows_under_burst_and_conserves() {
+    let mut eng = ClusterEngine::new(autoscale_cfg(5));
+    let rep = eng.run(&bursty(36));
+    assert!(!rep.truncated);
+    assert_eq!(rep.aggregate.apps_completed, 36);
+    assert!(rep.autoscale_enabled);
+    assert!(
+        rep.scale_up_events > 0,
+        "bursts at 4 QPS over one small shard must trigger growth: {}",
+        rep.summary()
+    );
+    assert!(
+        rep.final_active_shards >= 1 && rep.final_active_shards <= 8,
+        "serving count {} out of bounds",
+        rep.final_active_shards
+    );
+    // Zero lost blocks: every pool conserved, the migration ledger
+    // balanced, nothing in flight.
+    eng.check_conservation().expect("conservation after autoscale");
+    // Retired shards (if any) contributed lifetime samples.
+    assert_eq!(
+        rep.shards_retired as usize,
+        rep.shard_lifetimes_us.len()
+    );
+}
+
+/// The acceptance comparison (averaged over seeds): the elastic fleet
+/// beats the fixed *min*-size fleet on p99 latency (it grows into the
+/// bursts), while the fixed *max*-size fleet pays for its headroom
+/// with worse effective GPU utilization than the elastic fleet (which
+/// drains it away between bursts).
+#[test]
+fn autoscale_beats_fixed_min_p99_and_fixed_max_util() {
+    let seeds = [1u64, 2, 3];
+    let mut fixed1_p99 = 0.0;
+    let mut fixed8_util = 0.0;
+    let mut auto_p99 = 0.0;
+    let mut auto_util = 0.0;
+    for &seed in &seeds {
+        let w = bursty(30);
+
+        let rep = ClusterEngine::new(cfg(
+            1,
+            PlacementPolicy::AgentAffinity,
+            0.06,
+            seed,
+        ))
+        .run(&w);
+        assert!(!rep.truncated, "fixed-1 seed {seed}");
+        assert_eq!(rep.aggregate.apps_completed, 30);
+        fixed1_p99 += rep.aggregate.latency.percentile_s(99.0);
+
+        let rep = ClusterEngine::new(cfg(
+            8,
+            PlacementPolicy::AgentAffinity,
+            0.06,
+            seed,
+        ))
+        .run(&w);
+        assert!(!rep.truncated, "fixed-8 seed {seed}");
+        fixed8_util += rep.effective_util();
+
+        let rep = ClusterEngine::new(autoscale_cfg(seed)).run(&w);
+        assert!(!rep.truncated, "autoscale seed {seed}");
+        assert_eq!(rep.aggregate.apps_completed, 30);
+        auto_p99 += rep.aggregate.latency.percentile_s(99.0);
+        auto_util += rep.effective_util();
+    }
+    let n = seeds.len() as f64;
+    assert!(
+        auto_p99 / n < fixed1_p99 / n,
+        "autoscale p99 {:.1}s must beat fixed-min p99 {:.1}s",
+        auto_p99 / n,
+        fixed1_p99 / n
+    );
+    assert!(
+        fixed8_util / n < auto_util / n,
+        "fixed-max util {:.3} must be worse than autoscale util {:.3}",
+        fixed8_util / n,
+        auto_util / n
+    );
+}
+
+/// Warming shards receive nothing: every application lands on a shard
+/// that was active at its arrival, and cold capacity that never grew
+/// served zero apps.
+#[test]
+fn autoscale_cold_and_warming_shards_serve_nothing() {
+    let mut c = autoscale_cfg(7);
+    // A warm-up so long it never completes within the run: the fleet
+    // must keep serving from shard 0 alone.
+    c.autoscale.warmup_cost_us = u64::MAX / 4;
+    let rep = ClusterEngine::new(c).run(&bursty(12));
+    assert!(!rep.truncated);
+    assert_eq!(rep.aggregate.apps_completed, 12);
+    assert_eq!(rep.shards[0].apps_completed, 12);
+    for (i, m) in rep.shards.iter().enumerate().skip(1) {
+        assert_eq!(m.apps_completed, 0, "shard {i} never activated");
+    }
+    assert_eq!(rep.final_active_shards, 1);
 }
 
 /// Aggregate rollup is the sum of the shard bundles.

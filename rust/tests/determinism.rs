@@ -14,7 +14,9 @@ use tokencake::config::{
 };
 use tokencake::engine::sim::SimEngine;
 use tokencake::graph::templates;
-use tokencake::workload::{ClusterWorkload, Dataset, WorkloadSpec};
+use tokencake::workload::{
+    BurstSpec, ClusterWorkload, Dataset, WorkloadSpec,
+};
 
 fn engine_digest(seed: u64) -> String {
     let cfg = ServeConfig::default()
@@ -80,6 +82,61 @@ fn cluster_digest_depends_on_seed() {
     let a = cluster_digest(2, 42);
     let b = cluster_digest(2, 43);
     assert_ne!(a, b);
+}
+
+/// An elastic (autoscaled) run under a bursty workload: grows, drains,
+/// warm-ups, and retirements are all scheduler decisions on the shared
+/// clock, so same seed + config ⇒ byte-identical digests — including
+/// the scale-event counters and the shard-lifetime histogram, which the
+/// digest carries.
+fn autoscale_digest(seed: u64) -> String {
+    let serve = ServeConfig::default()
+        .with_mode(Mode::TokenCake)
+        .with_seed(seed)
+        .with_gpu_mem_frac(0.06);
+    let mut cfg = ClusterConfig::default()
+        .with_serve(serve)
+        .with_shards(1)
+        .with_placement(PlacementPolicy::AgentAffinity);
+    cfg.autoscale.enabled = true;
+    cfg.autoscale.min_shards = 1;
+    cfg.autoscale.max_shards = 6;
+    cfg.autoscale.warmup_cost_us = 1_000_000;
+    cfg.autoscale.cooldown_us = 1_000_000;
+    cfg.autoscale.drain_confirm = 2;
+    cfg.autoscale.interval_us = 100_000;
+    let w = ClusterWorkload::mixed(
+        &[
+            (templates::code_writer(), 2.0),
+            (templates::deep_research(), 1.0),
+        ],
+        0.3,
+        24,
+    )
+    .with_dataset(Dataset::D1)
+    .with_tool_noise(0.25)
+    .with_burst(BurstSpec {
+        burst_qps: 4.0,
+        period_us: 60_000_000,
+        duty: 0.25,
+    });
+    let rep = ClusterEngine::new(cfg).run(&w);
+    assert!(!rep.truncated);
+    assert!(rep.autoscale_enabled);
+    rep.digest()
+}
+
+#[test]
+fn autoscale_digest_byte_identical_across_runs() {
+    let a = autoscale_digest(42);
+    let b = autoscale_digest(42);
+    assert_eq!(
+        a, b,
+        "autoscaled runs must be byte-identical across reruns"
+    );
+    assert!(a.contains("autoscale=true"));
+    let c = autoscale_digest(43);
+    assert_ne!(a, c, "different seeds should diverge");
 }
 
 /// The epoch gate is live on real workloads (the digest lines pin its

@@ -684,6 +684,163 @@ fn prop_batched_migration_conserves_and_respects_budget() {
 }
 
 // ---------------------------------------------------------------------
+// Autoscale drain: blocks conserved end to end, invariant every step
+// ---------------------------------------------------------------------
+
+/// Every drained shard's blocks are exactly accounted (landed on a
+/// destination or dropped to recompute) and the per-shard
+/// `free + pending + request-held + prefix == total` invariant holds at
+/// every step of the evacuation, across random cluster shapes, victim
+/// sizes, and drain victims. The drain must converge to retirement.
+#[test]
+fn prop_drain_conserves_blocks() {
+    use tokencake::cluster::ClusterEngine;
+    use tokencake::config::{ClusterConfig, PlacementPolicy};
+    use tokencake::coordination::ReqState;
+    use tokencake::graph::templates;
+    use tokencake::temporal;
+    use tokencake::workload::{SampledLengths, ToolSim};
+
+    let check_pools = |eng: &ClusterEngine, n: usize, seed: u64| {
+        for i in 0..n {
+            let st = &eng.shard(i).st;
+            let held: u32 = st
+                .reqs
+                .values()
+                .map(|r| r.blocks.len() + r.upload_reserved.len())
+                .sum();
+            assert_eq!(
+                st.gpu.free_blocks()
+                    + st.gpu.pending_free_blocks()
+                    + held
+                    + st.prefix.resident_gpu_blocks(),
+                st.gpu.total(),
+                "seed {seed} shard {i}: gpu accounting broken"
+            );
+            let cpu_held: u32 = st
+                .reqs
+                .values()
+                .map(|r| r.cpu_blocks.len() as u32)
+                .sum();
+            assert_eq!(
+                st.cpu.used_blocks(),
+                st.prefix.resident_cpu_blocks() + cpu_held,
+                "seed {seed} shard {i}: cpu accounting broken"
+            );
+        }
+    };
+
+    for seed in 0..10u64 {
+        let mut rng = Rng::new(seed + 0xD8A1);
+        let shards = rng.range_u64(2, 5) as usize;
+        let serve = ServeConfig::default()
+            .with_mode(Mode::TokenCake)
+            .with_seed(seed * 7 + 3)
+            .with_gpu_mem_frac(0.05);
+        let mut cfg = ClusterConfig::default()
+            .with_serve(serve)
+            .with_shards(shards)
+            .with_placement(PlacementPolicy::RoundRobin);
+        cfg.autoscale.enabled = true;
+        // Floor = shards - 1: exactly one drain is permitted, so the
+        // forced control steps below can never pick a *second* victim
+        // (which would fold other shards' blocks into the accounting
+        // this property pins).
+        cfg.autoscale.min_shards = shards - 1;
+        cfg.autoscale.max_shards = shards;
+        cfg.autoscale.drain_confirm = 1;
+        cfg.autoscale.cooldown_us = 0;
+        cfg.migrate_batch_budget_blocks =
+            rng.range_u64(64, 512) as u32;
+        let mut eng = ClusterEngine::new(cfg);
+        let g = templates::code_writer();
+        for i in 0..shards {
+            eng.shard_mut(i).register_template(&g);
+        }
+        // Random stalled apps across random shards.
+        let tool_sim = ToolSim::new(0.0);
+        let scales = SampledLengths {
+            prompt_scale: 1.0,
+            gen_scale: 1.0,
+        };
+        let mut placed_blocks = 0u64;
+        let victim = rng.range_u64(0, shards as u64) as usize;
+        for _ in 0..rng.range_u64(1, 7) {
+            let shard = rng.range_u64(0, shards as u64) as usize;
+            let blocks = rng.range_u64(4, 40) as u32;
+            let app =
+                eng.shard_mut(shard).inject_app(0, scales, &tool_sim);
+            let st = &mut eng.shard_mut(shard).st;
+            let rid = st.apps[&app].node_req[0].unwrap();
+            st.waiting.retain(|&x| x != rid);
+            let AllocOutcome::Granted { blocks: b, .. } =
+                st.gpu.alloc(blocks, Route::Shared)
+            else {
+                panic!()
+            };
+            {
+                let r = st.reqs.get_mut(&rid).unwrap();
+                r.blocks = b;
+                r.state = ReqState::Running;
+            }
+            temporal::call_start(
+                st,
+                rid,
+                "web_search",
+                Some(60_000_000),
+                480,
+                0,
+            );
+            if shard == victim {
+                placed_blocks += blocks as u64;
+            }
+        }
+        check_pools(&eng, shards, seed);
+        assert!(
+            eng.request_drain(victim),
+            "seed {seed}: drain must start"
+        );
+        // Drive the evacuation to retirement, checking pools each step.
+        let mut guard = 0u32;
+        while eng.shard_phase(victim) != "retired" {
+            eng.autoscale_step_now();
+            check_pools(&eng, shards, seed);
+            if eng.shard_phase(victim) == "retired" {
+                break;
+            }
+            let progressed = eng.pump_next_event();
+            check_pools(&eng, shards, seed);
+            guard += 1;
+            assert!(
+                progressed || guard < 64,
+                "seed {seed}: drain stopped making progress"
+            );
+            assert!(guard < 10_000, "seed {seed}: drain diverged");
+        }
+        // Drained shard fully empty; every block it shipped is landed
+        // or dropped; the global ledger balances.
+        let st = &eng.shard(victim).st;
+        assert_eq!(st.gpu.free_blocks(), st.gpu.total(), "seed {seed}");
+        assert_eq!(st.gpu.pending_free_blocks(), 0, "seed {seed}");
+        assert_eq!(st.cpu.used_blocks(), 0, "seed {seed}");
+        let (_migs, blocks, _batches, landed, dropped, _maxw) =
+            eng.migration_stats();
+        assert_eq!(
+            blocks,
+            landed + dropped,
+            "seed {seed}: drained blocks neither landed nor dropped"
+        );
+        let stats = eng.autoscale_stats().unwrap();
+        assert_eq!(
+            stats.drained_app_blocks, placed_blocks,
+            "seed {seed}: drained volume must equal what was parked \
+             on the victim"
+        );
+        assert_eq!(stats.shards_retired, 1, "seed {seed}");
+    }
+}
+
+// ---------------------------------------------------------------------
 // Multi-GPU pool (§5 Multi-GPU Support): lockstep conservation
 // ---------------------------------------------------------------------
 
