@@ -67,6 +67,7 @@ use crate::config::AutoscaleConfig;
 use crate::coordination::{Action, PrefixEvent, PressureSnapshot};
 use crate::graph::{AppGraph, NodeKind};
 use crate::kvcache::{Direction, PrefixBacking, Route, TransferKind};
+use crate::obs;
 
 use super::engine::ClusterEngine;
 use super::router::Router;
@@ -580,6 +581,11 @@ fn grow_or_cancel_drain(
         eng.router.set_eligible(i, true);
         a.stats.drain_cancels += 1;
         a.cooldown_until_us = now + a.cfg.cooldown_us;
+        eng.trace.autoscale(
+            obs::scale::CANCEL,
+            i as u32,
+            a.serving_count() as u32,
+        );
         return;
     }
     if !force && now < a.cooldown_until_us {
@@ -600,6 +606,11 @@ fn grow_or_cancel_drain(
     eng.pending_warm.push((now + a.cfg.warmup_cost_us, i));
     a.stats.scale_up_events += 1;
     a.cooldown_until_us = now + a.cfg.cooldown_us;
+    eng.trace.autoscale(
+        obs::scale::GROW,
+        i as u32,
+        a.serving_count() as u32,
+    );
 }
 
 fn maybe_drain(
@@ -650,6 +661,11 @@ fn maybe_drain(
     a.stats.scale_down_events += 1;
     a.below_count = 0;
     a.cooldown_until_us = now + a.cfg.cooldown_us;
+    eng.trace.autoscale(
+        obs::scale::DRAIN,
+        victim as u32,
+        a.serving_count() as u32,
+    );
     // Evacuate immediately — don't wait for the next window.
     a.next_drain_window_us = 0;
     drain_windows(a, eng, now);
@@ -834,6 +850,7 @@ fn evacuate_local_prefix(
     match st.prefix.remove(key) {
         Some(PrefixBacking::Gpu(b)) => {
             st.gpu.mark_pending_free(&b, 0, None);
+            let nb = b.len() as u32;
             let completes = now + cost_us;
             let xfer = st.ledger.issue_tagged(
                 TransferKind::PrefixEvict { key },
@@ -848,6 +865,14 @@ fn evacuate_local_prefix(
                 xfer,
                 completes_us: completes,
             });
+            st.trace.transfer_start(
+                xfer.0,
+                u64::MAX,
+                obs::xfer::PREFIX_EVICT,
+                true,
+                nb,
+                cost_us,
+            );
         }
         Some(PrefixBacking::Cpu(b)) => st.cpu.release(b),
         Some(PrefixBacking::Remote) | None => {}
@@ -882,6 +907,11 @@ fn try_retire(
         return;
     }
     retire_shard(a, i, now);
+    eng.trace.autoscale(
+        obs::scale::RETIRE,
+        i as u32,
+        a.serving_count() as u32,
+    );
 }
 
 /// The only constructor of [`ShardPhase::Retired`] (CI-enforced): the
@@ -919,6 +949,11 @@ pub(super) fn force_drain(
     eng.router.set_eligible(i, false);
     a.stats.scale_down_events += 1;
     a.next_drain_window_us = 0;
+    eng.trace.autoscale(
+        obs::scale::DRAIN,
+        i as u32,
+        a.serving_count() as u32,
+    );
     true
 }
 

@@ -39,6 +39,7 @@ use crate::kvcache::{
     AllocOutcome, Direction, PrefixKey, Route, TransferId,
 };
 use crate::metrics::MetricsBundle;
+use crate::obs::{self, TraceSink};
 use crate::sim::{Clock, EventQueue, Rng};
 use crate::temporal;
 use crate::workload::{ClusterWorkload, ToolSim};
@@ -367,6 +368,11 @@ pub struct ClusterEngine {
     ic_window_used: u32,
     /// Safety valve against policy livelock across the whole cluster.
     max_iterations: u64,
+    /// Control-plane trace sink ([`obs::CLUSTER_SHARD`]): routing,
+    /// migration batches, autoscale decisions. Per-shard lifecycle
+    /// events live on each shard engine's own sink; `export_trace`
+    /// merges all of them into one timeline.
+    pub(super) trace: TraceSink,
 }
 
 impl ClusterEngine {
@@ -401,6 +407,9 @@ impl ClusterEngine {
                 sc.seed = Rng::new(seed).fold(0xC1A5 + i as u64).next_u64();
                 let mut e = SimEngine::new(sc);
                 e.set_id_base(i as u64 * ID_STRIDE);
+                // Trace records carry the shard index so the merged
+                // cluster timeline keeps one track per worker.
+                e.st.trace.set_shard(i as u32);
                 // Shards publish their prefix lifecycle into the
                 // directory's event feed.
                 e.st.publish_prefix_events = prefix_enabled;
@@ -454,8 +463,55 @@ impl ClusterEngine {
             ic_window_start_us: 0,
             ic_window_used: 0,
             max_iterations: 3_000_000 * n as u64,
+            trace: {
+                let mut t = TraceSink::default();
+                t.set_shard(obs::CLUSTER_SHARD);
+                t
+            },
             cfg,
         }
+    }
+
+    // ------------------------------------------------------------------
+    // Observability (see `crate::obs`)
+    // ------------------------------------------------------------------
+
+    /// Turn on full trace capture: the control-plane sink plus every
+    /// shard engine's sink.
+    pub fn enable_trace(&mut self) {
+        self.trace.enable();
+        for s in self.shards.iter_mut() {
+            s.st.trace.enable();
+        }
+    }
+
+    /// Arm only the flight recorders (`--assert-*` runs).
+    pub fn arm_flight(&mut self) {
+        self.trace.arm_flight();
+        for s in self.shards.iter_mut() {
+            s.st.trace.arm_flight();
+        }
+    }
+
+    /// Merge every sink's records into one deterministic timeline and
+    /// export it as Chrome/Perfetto `trace_event` JSON.
+    pub fn export_trace(&self) -> String {
+        let mut streams: Vec<&[obs::TraceRecord]> =
+            Vec::with_capacity(self.shards.len() + 1);
+        for s in &self.shards {
+            streams.push(s.st.trace.records());
+        }
+        streams.push(self.trace.records());
+        obs::export_chrome_trace(&obs::merge_records(&streams))
+    }
+
+    /// Flight-recorder dump across the control plane and every shard.
+    pub fn flight_dump(&self) -> String {
+        let mut out = self.trace.flight_dump();
+        for s in &self.shards {
+            out.push_str(&s.st.trace.flight_dump());
+        }
+        out
     }
 
     /// Current simulated time (µs) on the shared clock.
@@ -567,6 +623,7 @@ impl ClusterEngine {
         };
         self.clock.advance_to(t.max(self.clock.now_us()));
         let now = self.clock.now_us();
+        self.advance_trace_clocks(now);
         self.process_warmups(now);
         while let Some(ev) = self.events.pop_due(now) {
             match ev.payload {
@@ -592,6 +649,18 @@ impl ClusterEngine {
     /// Earliest pending warm-up completion, if any.
     fn next_warm_due(&self) -> Option<u64> {
         self.pending_warm.iter().map(|&(t, _)| t).min()
+    }
+
+    /// Stamp every sink with the shared clock. Shard engines advance
+    /// their own sinks inside `advance_shard_to`, but events the
+    /// *cluster* applies to a shard (migration landings, replica
+    /// seeds) can precede that — keep all stamps monotonic with the
+    /// shared clock so the merged timeline never goes backwards.
+    fn advance_trace_clocks(&mut self, now: u64) {
+        self.trace.advance(now);
+        for s in self.shards.iter_mut() {
+            s.st.trace.advance(now);
+        }
     }
 
     /// End-of-run settlement (normal completion only): land every
@@ -643,6 +712,12 @@ impl ClusterEngine {
                 if let Some(a) = self.autoscale.as_mut() {
                     if a.on_warm(shard, now) {
                         self.router.set_eligible(shard, true);
+                        let serving = a.serving_count() as u32;
+                        self.trace.autoscale(
+                            obs::scale::WARM,
+                            shard as u32,
+                            serving,
+                        );
                     }
                 }
             } else {
@@ -658,6 +733,20 @@ impl ClusterEngine {
     /// either landed or dropped — across grows, drains, and
     /// retirements, zero blocks lost.
     pub fn check_conservation(&self) -> Result<(), String> {
+        self.conservation_inner().map_err(|e| {
+            // A conservation failure is exactly what the flight
+            // recorder exists for: attach the recent-event ring so the
+            // failure ships its own context.
+            let dump = self.flight_dump();
+            if dump.is_empty() {
+                e
+            } else {
+                format!("{e}\n--- flight recorder (newest last) ---\n{dump}")
+            }
+        })
+    }
+
+    fn conservation_inner(&self) -> Result<(), String> {
         for (i, s) in self.shards.iter().enumerate() {
             let st = &s.st;
             if st.gpu.free_blocks() + st.prefix.resident_gpu_blocks()
@@ -800,6 +889,7 @@ impl ClusterEngine {
         let mut truncated = false;
         loop {
             let now = self.clock.now_us();
+            self.advance_trace_clocks(now);
 
             // (a) Per-shard local events due now; forward any tool
             // finishes whose requests migrated away. Cold/retired
@@ -857,6 +947,18 @@ impl ClusterEngine {
                             &snaps,
                             warmth.as_deref(),
                             bias.as_deref(),
+                        );
+                        // Milli fixed-point keeps the record integer
+                        // (determinism contract); -1 = term absent.
+                        self.trace.route(
+                            seq,
+                            shard as u32,
+                            warmth.as_ref().map_or(-1, |w| {
+                                (w[shard] * 1000.0) as i64
+                            }),
+                            bias.as_ref().map_or(-1, |b| {
+                                (b[shard] * 1000.0) as i64
+                            }),
                         );
                         let mut rng =
                             self.rng.fold(1000 + seq as u64);
@@ -1418,6 +1520,7 @@ impl ClusterEngine {
             self.migration_batches += 1;
             self.max_window_migration_blocks =
                 self.max_window_migration_blocks.max(window_blocks);
+            self.trace.migration_batch(victims as u32, window_blocks);
         }
     }
 
@@ -1527,6 +1630,14 @@ impl ClusterEngine {
             now,
             completes,
         );
+        shard.st.trace.transfer_start(
+            xfer.0,
+            rid.0,
+            obs::xfer::MIGRATION,
+            true,
+            blocks_n,
+            cost_us,
+        );
         let app = shard.st.extract_app(app_id);
         let template = app.template;
         let id = self.next_migration;
@@ -1564,6 +1675,16 @@ impl ClusterEngine {
         if let Some(t) = self.shards[m.src].st.ledger.complete(m.xfer) {
             self.shards[m.src].st.gpu.complete_pending(t.gpu_blocks);
             self.shards[m.src].st.epochs.temporal += 1;
+            self.shards[m.src]
+                .st
+                .metrics
+                .wire_hist
+                .record(t.completes_us.saturating_sub(t.issued_us));
+            self.shards[m.src].st.trace.transfer_end(
+                m.xfer.0,
+                t.req_id,
+                true,
+            );
         }
         // Destination side: materialize the KV. If the pool filled up
         // mid-flight the cache is dropped and the agent recomputes on
@@ -1608,6 +1729,17 @@ impl ClusterEngine {
                     now,
                 );
                 let _ = dst.st.ledger.complete(xfer);
+                // Zero-duration H2D leg: start + end at the landing
+                // instant (the wire time lived on the src D2H leg).
+                dst.st.trace.transfer_start(
+                    xfer.0,
+                    m.rid.0,
+                    obs::xfer::MIGRATION,
+                    false,
+                    m.blocks,
+                    0,
+                );
+                dst.st.trace.transfer_end(xfer.0, m.rid.0, false);
             }
         }
         if granted {

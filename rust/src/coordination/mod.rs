@@ -41,6 +41,7 @@ pub use state::{
     MigratedApp, PrefixEvent, SchedEpochs, SchedScratch, ServeState,
     ThroughputEstimator, TypeRegistry,
 };
+pub(crate) use state::state_code;
 
 use crate::kvcache::TransferId;
 

@@ -26,8 +26,25 @@ use crate::kvcache::{
     PrefixIndex, PrefixKey, PrefixLocation, TransferKind,
 };
 use crate::metrics::MetricsBundle;
+use crate::obs::{self, TraceSink};
 use crate::temporal::Forecaster;
 use crate::workload::SampledLengths;
+
+/// Trace code for a lifecycle state (see [`obs::state`] — the codes
+/// mirror [`ReqState`]'s declaration order).
+pub(crate) fn state_code(s: ReqState) -> u8 {
+    match s {
+        ReqState::Waiting => obs::state::WAITING,
+        ReqState::Prefilling => obs::state::PREFILLING,
+        ReqState::Running => obs::state::RUNNING,
+        ReqState::Stalled => obs::state::STALLED,
+        ReqState::PendingOffload => obs::state::PENDING_OFFLOAD,
+        ReqState::Offloaded => obs::state::OFFLOADED,
+        ReqState::PendingUpload => obs::state::PENDING_UPLOAD,
+        ReqState::Uploaded => obs::state::UPLOADED,
+        ReqState::Finished => obs::state::FINISHED,
+    }
+}
 
 /// Interns agent-type names and accumulates per-type counters used by the
 /// agent-type score S_a (Eq. 6): preemptions weigh KV-capacity loss,
@@ -270,6 +287,13 @@ pub struct ServeState {
     pub fc_lifetime_obs: Vec<(usize, u64)>,
     /// Cluster autoscaler flips this so FC lifetimes are published.
     pub publish_lifetime_obs: bool,
+    /// Structured trace sink (see [`crate::obs`]); one branch per emit
+    /// when disabled. The owning engine advances its clock stamp.
+    pub trace: TraceSink,
+    /// Skip-counter values at each planner's previous traced run
+    /// (index = [`obs::planner`] code) — the PlannerGate event carries
+    /// the delta, i.e. gated steps since that planner last ran.
+    traced_planner_skips: [u64; 2],
     /// Last observed pressure band (see [`Self::note_pressure_band`]).
     last_pressure_band: u8,
     next_req: u64,
@@ -318,6 +342,8 @@ impl ServeState {
             publish_prefix_events: false,
             fc_lifetime_obs: Vec::new(),
             publish_lifetime_obs: false,
+            trace: TraceSink::default(),
+            traced_planner_skips: [0; 2],
             last_pressure_band: 0,
             next_req: 0,
             next_app: 0,
@@ -354,7 +380,27 @@ impl ServeState {
         if band != self.last_pressure_band {
             self.last_pressure_band = band;
             self.epochs.pressure += 1;
+            self.trace.pressure_band(band, self.gpu.free_blocks());
         }
+    }
+
+    /// Trace an epoch-gated planner run ([`obs::planner`] code),
+    /// carrying the number of gated skips since that planner's previous
+    /// run — the epoch-gating effectiveness signal, one event per run
+    /// instead of one per skipped tick.
+    pub fn trace_planner_run(&mut self, planner: u8) {
+        if !self.trace.active() {
+            return;
+        }
+        let cur = if planner == obs::planner::TEMPORAL {
+            self.metrics.counters.planner_skips
+        } else {
+            self.metrics.counters.spatial_plan_skips
+        };
+        let idx = (planner as usize).min(1);
+        let skipped = cur - self.traced_planner_skips[idx];
+        self.traced_planner_skips[idx] = cur;
+        self.trace.planner_gate(planner, skipped);
     }
 
     /// Every prefix-cache lifecycle mutation (insert/evict/relocate/
@@ -370,6 +416,20 @@ impl ServeState {
     /// directory is listening.
     pub fn push_prefix_event(&mut self, ev: PrefixEvent) {
         self.note_prefix_mutation();
+        match ev {
+            PrefixEvent::Inserted { key, blocks, .. } => {
+                self.trace.prefix(key.0, obs::prefix::INSERT, blocks)
+            }
+            PrefixEvent::Relocated { key, .. } => {
+                self.trace.prefix(key.0, obs::prefix::DEMOTE, 0)
+            }
+            PrefixEvent::Removed { key } => {
+                self.trace.prefix(key.0, obs::prefix::EVICT, 0)
+            }
+            PrefixEvent::RemoteHit { key } => {
+                self.trace.prefix(key.0, obs::prefix::HIT_REMOTE, 0)
+            }
+        }
         if self.publish_prefix_events {
             self.prefix_events.push(ev);
         }
@@ -388,6 +448,7 @@ impl ServeState {
     /// bump.
     pub fn note_fc_lifetime(&mut self, rid: RequestId, stall_us: u64) {
         self.metrics.counters.fc_lifetime_obs += 1;
+        self.metrics.stall_hist.record(stall_us);
         if self.publish_lifetime_obs {
             let template =
                 self.apps.template_of(&self.reqs[&rid].app_id);
@@ -413,6 +474,7 @@ impl ServeState {
             return;
         };
         if let Some(t) = self.ledger.complete(x) {
+            self.trace.transfer_end(x.0, rid.0, false);
             if let TransferKind::PrefixHit { key, pinned: true } = t.kind
             {
                 self.prefix.unpin(key);
@@ -458,6 +520,7 @@ impl ServeState {
     pub fn reindex_request(&mut self, rid: RequestId, to: ReqState) {
         self.epochs.temporal += 1;
         self.epochs.spatial += 1;
+        self.trace.req_state(rid.0, state_code(to));
         self.stalled_ids.remove(&rid);
         self.offloaded_ids.remove(&rid);
         match to {
@@ -699,6 +762,7 @@ impl ServeState {
             Some(id);
         self.reqs.insert(id, req);
         self.waiting.push_back(id);
+        self.trace.req_state(id.0, obs::state::WAITING);
         id
     }
 
@@ -938,6 +1002,16 @@ impl ServeState {
 
     /// Sample the utilization time-series (engine calls periodically).
     pub fn sample_metrics(&mut self, now_us: u64) {
+        self.trace
+            .gpu_sample(self.gpu.free_blocks(), self.gpu.total());
+        self.sample_metrics_quiet(now_us);
+    }
+
+    /// Closing sample at finalize time: records the utilization series
+    /// without a trace event — a retired shard's timeline is embargoed
+    /// after its `retire` record, and the end-of-run bookkeeping sample
+    /// must not violate that.
+    pub fn sample_metrics_quiet(&mut self, now_us: u64) {
         let total = self.gpu.total().max(1) as f64;
         let used = (self.gpu.total() - self.gpu.free_blocks()) as f64;
         let stalled = self.stalled_gpu_blocks() as f64

@@ -21,6 +21,7 @@ use crate::coordination::{
 use crate::graph::{AppGraph, NodeId, NodeKind};
 use crate::kvcache::{AllocOutcome, TransferId};
 use crate::metrics::MetricsBundle;
+use crate::obs;
 use crate::sim::{Clock, EventQueue, Rng};
 use crate::spatial;
 use crate::temporal;
@@ -104,6 +105,32 @@ impl SimEngine {
         self.clock.now_us()
     }
 
+    // ------------------------------------------------------------------
+    // Observability (see `crate::obs`)
+    // ------------------------------------------------------------------
+
+    /// Turn on full structured trace capture (`--trace`).
+    pub fn enable_trace(&mut self) {
+        self.st.trace.enable();
+    }
+
+    /// Arm only the bounded flight recorder (`--assert-*` runs) so
+    /// failures dump recent context without full-capture cost.
+    pub fn arm_flight(&mut self) {
+        self.st.trace.arm_flight();
+    }
+
+    /// Export everything captured as a Chrome/Perfetto `trace_event`
+    /// JSON document (byte-identical across same-seed reruns).
+    pub fn export_trace(&self) -> String {
+        obs::export_chrome_trace(self.st.trace.records())
+    }
+
+    /// Human-readable dump of the flight recorder's ring.
+    pub fn flight_dump(&self) -> String {
+        self.st.trace.flight_dump()
+    }
+
     /// Run a complete workload to completion; returns the metric bundle.
     pub fn run_workload(&mut self, spec: &WorkloadSpec) -> RunReport {
         let template = self.st.register_graph(&spec.graph);
@@ -149,9 +176,13 @@ impl SimEngine {
             {
                 let dt = self.execute_iteration(&tool_sim);
                 self.clock.advance_by(dt);
+                self.st.trace.advance(self.clock.now_us());
             } else {
                 match self.events.peek_time() {
-                    Some(t) => self.clock.advance_to(t.max(self.clock.now_us())),
+                    Some(t) => {
+                        self.clock.advance_to(t.max(self.clock.now_us()));
+                        self.st.trace.advance(self.clock.now_us());
+                    }
                     None => {
                         // No events, no batch: either done or deadlocked
                         // (e.g. waiting-with-KV requests hold all blocks
@@ -308,6 +339,7 @@ impl SimEngine {
     ) -> Vec<OrphanedToolFinish> {
         if t_us > self.clock.now_us() {
             self.clock.advance_to(t_us);
+            self.st.trace.advance(t_us);
         }
         let mut orphans = Vec::new();
         while let Some(ev) = self.events.pop_due(self.clock.now_us()) {
@@ -390,7 +422,7 @@ impl SimEngine {
         // cluster shards sample only on executed iterations, so without
         // this a shard that went idle early would report its busy-window
         // utilization as if it held for the whole run.
-        self.st.sample_metrics(end_us);
+        self.st.sample_metrics_quiet(end_us);
         self.st.metrics.makespan_us = end_us;
         self.st.metrics.swap_volume_blocks =
             self.st.ledger.swap_volume_blocks();
@@ -456,6 +488,7 @@ impl SimEngine {
         for &rid in &promoted {
             self.st.prefilling.remove(rid);
             self.st.running.push(rid);
+            self.st.trace.req_state(rid.0, obs::state::RUNNING);
         }
         promoted.clear();
         self.scratch_promoted = promoted;
@@ -746,6 +779,8 @@ impl SimEngine {
         self.st.metrics.counters.recomputes += 1;
         self.st.metrics.counters.recompute_tokens +=
             r.context_tokens as u64;
+        self.st.trace.preempt(victim.0, grower.0);
+        self.st.trace.req_state(victim.0, obs::state::WAITING);
         self.st.running.remove(victim);
         self.st.prefilling.remove(victim);
         self.st.waiting.push_back(victim);

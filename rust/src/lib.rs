@@ -23,9 +23,17 @@
 //!   and reserved regions, guided by a hybrid priority metric over the
 //!   application DAG and runtime state.
 //!
-//! ## Architecture (five layers)
+//! ## Architecture (five layers, one observability spine)
 //!
 //! ```text
+//! OBS deterministic flight-recorder tracing (obs): a TraceSink on every
+//!     ServeState (and one on the cluster control plane) records typed
+//!     lifecycle events — request states, ledger transfers, prefix
+//!     lifecycle, planner gates, routing, migration, autoscale phases —
+//!     stamped with the shared sim clock; consumers are a Perfetto
+//!     trace_event exporter (--trace), an always-armed-in-debug flight
+//!     recorder dumped on conservation failures, and a post-hoc
+//!     invariant auditor (obs::TraceAuditor, `tokencake audit`)
 //! L5  autoscale control plane — elastic fleet sizing on the shared
 //!     clock (cluster::autoscale): a hysteresis controller grows/drains
 //!     shards from the aggregate pressure signal behind the pressure-
@@ -161,6 +169,7 @@ pub mod engine;
 pub mod graph;
 pub mod kvcache;
 pub mod metrics;
+pub mod obs;
 #[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod server;

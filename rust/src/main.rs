@@ -10,6 +10,7 @@
 //!                   [--frac 0.08] [--no-migrate] [--seed N]
 //!                   [--autoscale --min-shards 1 --max-shards 8]
 //!                   [--burst-qps 6.0 --burst-period-s 60 --burst-duty 0.25]
+//! tokencake audit   --trace out.json
 //! tokencake serve   [--port 8080]
 //! tokencake graph   --app deep-research
 //! tokencake help
@@ -81,10 +82,19 @@ fn cmd_bench(args: &Args) -> Result<(), String> {
     let graph = app_by_name(args.get_or("app", "code-writer"))?;
     let cfg = build_config(args)?;
     let spec = build_spec(args, &graph)?;
-    let report = SimEngine::new(cfg.clone()).run_workload(&spec);
+    let mut eng = SimEngine::new(cfg.clone());
+    if args.get("trace").is_some() {
+        eng.enable_trace();
+    }
+    let report = eng.run_workload(&spec);
     println!("{}", report.summary());
     if report.truncated {
         eprintln!("warning: run truncated before completion");
+    }
+    if let Some(path) = args.get("trace") {
+        std::fs::write(path, eng.export_trace())
+            .map_err(|e| e.to_string())?;
+        println!("wrote trace to {path}");
     }
     if let Some(path) = args.get("json") {
         write_bench_trajectory(path, args, &cfg)?;
@@ -191,11 +201,14 @@ fn bench_row(name: &str, rep: &ClusterReport, wall_s: f64) -> String {
     } else {
         rep.num_shards
     };
+    let [p50, p99, p999] =
+        rep.aggregate.latency.percentiles_s([50.0, 99.0, 99.9]);
     format!(
         "    {{\"name\": \"{name}\", \"shards\": {shards}, \
          \"policy\": \"{}\", \"apps\": {}, \
          \"throughput_apps_per_s\": {:.6}, \
-         \"mean_latency_s\": {:.3}, \"p99_latency_s\": {:.3}, \
+         \"mean_latency_s\": {:.3}, \"p50_latency_s\": {:.3}, \
+         \"p99_latency_s\": {:.3}, \"p999_latency_s\": {:.3}, \
          \"effective_gpu_util\": {:.4}, \"migrations\": {}, \
          \"wall_s\": {:.3}, \"sim_events_per_s\": {:.0}, \
          \"sim_ticks_per_s\": {:.0}, \
@@ -214,7 +227,9 @@ fn bench_row(name: &str, rep: &ClusterReport, wall_s: f64) -> String {
         rep.aggregate.apps_completed,
         rep.aggregate.throughput(),
         rep.aggregate.latency.mean_s(),
-        rep.aggregate.latency.percentile_s(99.0),
+        p50,
+        p99,
+        p999,
         rep.effective_util(),
         rep.migrations,
         wall_s,
@@ -377,6 +392,14 @@ fn cmd_cluster(args: &Args) -> Result<(), String> {
         args.get_or("mix", "cw:2,dr:1"),
     );
     let mut eng = ClusterEngine::new(cluster);
+    if args.get("trace").is_some() {
+        eng.enable_trace();
+    }
+    if args.has("assert-autoscale") || args.has("assert-planner-gated") {
+        // Assert runs arm the flight recorder so a failure ships its
+        // recent-event ring (full capture stays off unless --trace).
+        eng.arm_flight();
+    }
     let t0 = std::time::Instant::now();
     let report = eng.run(&workload);
     let wall_s = t0.elapsed().as_secs_f64();
@@ -430,6 +453,11 @@ fn cmd_cluster(args: &Args) -> Result<(), String> {
     if report.truncated {
         eprintln!("warning: cluster run truncated before completion");
     }
+    if let Some(path) = args.get("trace") {
+        std::fs::write(path, eng.export_trace())
+            .map_err(|e| e.to_string())?;
+        println!("wrote trace to {path}");
+    }
     if let Some(path) = args.get("json") {
         let name = args.get_or("json-name", "cluster-run");
         let json = format!("{}\n", bench_row(name, &report, wall_s));
@@ -449,7 +477,9 @@ fn cmd_cluster(args: &Args) -> Result<(), String> {
         if serving < min_s || serving > max_s {
             return Err(format!(
                 "autoscale out of bounds: {serving} serving shards \
-                 not in [{min_s}, {max_s}]"
+                 not in [{min_s}, {max_s}]\n\
+                 --- flight recorder (newest last) ---\n{}",
+                eng.flight_dump()
             ));
         }
         eng.check_conservation()?;
@@ -507,6 +537,24 @@ fn cmd_compare(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
+/// Audit an exported trace file against the obs-layer ordering
+/// invariants (transfer pairing, offload-before-upload, no decode
+/// under a pending prefix fetch, retire-is-final, clock sanity).
+fn cmd_audit(args: &Args) -> Result<(), String> {
+    let path = args
+        .get("trace")
+        .ok_or("audit requires --trace FILE (an exported trace)")?;
+    let doc =
+        std::fs::read_to_string(path).map_err(|e| e.to_string())?;
+    match tokencake::obs::TraceAuditor::audit_chrome_trace(&doc) {
+        Ok(summary) => {
+            println!("{path}: {summary}");
+            Ok(())
+        }
+        Err(e) => Err(format!("{path}: trace audit failed: {e}")),
+    }
+}
+
 fn cmd_serve(args: &Args) -> Result<(), String> {
     let port = args.get_u64("port", 8080)? as u16;
     let server = Server::start(port).map_err(|e| e.to_string())?;
@@ -543,6 +591,8 @@ USAGE: tokencake <command> [--flag value]...
 COMMANDS:
   bench    run one workload:  --app --mode --qps --apps --frac --dataset
            --noise --seed --profile --config
+           --trace FILE  export a Chrome/Perfetto trace of the run
+           (request/KV lifecycle spans; byte-identical per seed)
            --json FILE  also write a single-worker vs N-shard cluster
            trajectory (--shards, default 4: throughput, mean/p99
            latency, effective GPU util, planner_runs_per_1k_ticks,
@@ -559,12 +609,16 @@ COMMANDS:
            serving count)
            --burst-qps N [--burst-period-s P --burst-duty D]
            (periodic traffic bursts over the base --qps)
+           --trace FILE  export a merged cluster trace (one track per
+           shard plus the control plane)
            --json FILE [--json-name NAME]  write the run's benchmark
            row
            --assert-autoscale  (fail unless min <= serving <= max and
            zero blocks were lost — the autoscale CI smoke)
            --assert-planner-gated  (fail unless planner runs < 10% of
            scheduling steps — the epoch-gate CI smoke)
+  audit    check an exported trace against the obs-layer ordering
+           invariants:  --trace FILE  (exit 1 on the first violation)
   serve    start the frontend HTTP server:  --port
   graph    inspect a built-in app template:  --app
   help     this text
@@ -582,6 +636,7 @@ fn main() {
         "bench" => cmd_bench(&args),
         "compare" => cmd_compare(&args),
         "cluster" => cmd_cluster(&args),
+        "audit" => cmd_audit(&args),
         "serve" => cmd_serve(&args),
         "graph" => cmd_graph(&args),
         "help" | "--help" | "-h" => {

@@ -1,0 +1,160 @@
+//! Log-bucketed duration histogram: O(1) record, O(1) merge, integer
+//! percentiles.
+//!
+//! Buckets are powers of two over µs values: a sample lands in the
+//! bucket indexed by its bit width (`0 -> 0`, `1 -> 1`, `2..3 -> 2`,
+//! `4..7 -> 3`, ...), capped at [`BUCKETS`]` - 1`. A percentile query
+//! answers with the bucket's inclusive upper bound — an integer, so
+//! digest lines built from it stay byte-comparable across reruns — with
+//! at most 2× relative error, plenty for the stall / wire / queue-delay
+//! distributions it summarizes. Merging is bucket-wise addition, which
+//! makes it commutative and associative: shard bundles can be absorbed
+//! in any order (the metrics-merge proptest pins this).
+
+/// Number of power-of-two buckets (bit widths of a `u64`, plus zero).
+pub const BUCKETS: usize = 64;
+
+/// Fixed-size log₂ histogram of µs durations.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LogHistogram {
+    buckets: [u64; BUCKETS],
+    count: u64,
+}
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        Self {
+            buckets: [0; BUCKETS],
+            count: 0,
+        }
+    }
+}
+
+impl LogHistogram {
+    fn bucket_of(v_us: u64) -> usize {
+        ((u64::BITS - v_us.leading_zeros()) as usize).min(BUCKETS - 1)
+    }
+
+    /// Inclusive upper bound of bucket `i` (µs).
+    fn bucket_upper(i: usize) -> u64 {
+        if i == 0 {
+            0
+        } else if i >= 63 {
+            u64::MAX
+        } else {
+            (1u64 << i) - 1
+        }
+    }
+
+    #[inline]
+    pub fn record(&mut self, v_us: u64) {
+        self.buckets[Self::bucket_of(v_us)] += 1;
+        self.count += 1;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Bucket-wise merge (commutative/associative — order-insensitive).
+    pub fn merge(&mut self, other: &LogHistogram) {
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+        self.count += other.count;
+    }
+
+    /// Nearest-rank percentile, answered as the owning bucket's upper
+    /// bound (µs). 0 on an empty histogram.
+    pub fn percentile_us(&self, p: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = ((p / 100.0) * self.count as f64).ceil() as u64;
+        let rank = rank.clamp(1, self.count);
+        let mut seen = 0u64;
+        for (i, &n) in self.buckets.iter().enumerate() {
+            seen += n;
+            if seen >= rank {
+                return Self::bucket_upper(i);
+            }
+        }
+        Self::bucket_upper(BUCKETS - 1)
+    }
+
+    /// Compact integer digest fragment: `(count,p50,p999)` — stable
+    /// across reruns, used by `MetricsBundle::digest_line`.
+    pub fn digest_triplet(&self) -> (u64, u64, u64) {
+        (
+            self.count,
+            self.percentile_us(50.0),
+            self.percentile_us(99.9),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buckets_are_bit_widths() {
+        assert_eq!(LogHistogram::bucket_of(0), 0);
+        assert_eq!(LogHistogram::bucket_of(1), 1);
+        assert_eq!(LogHistogram::bucket_of(2), 2);
+        assert_eq!(LogHistogram::bucket_of(3), 2);
+        assert_eq!(LogHistogram::bucket_of(4), 3);
+        assert_eq!(LogHistogram::bucket_of(1023), 10);
+        assert_eq!(LogHistogram::bucket_of(1024), 11);
+        assert_eq!(LogHistogram::bucket_of(u64::MAX), BUCKETS - 1);
+    }
+
+    #[test]
+    fn percentile_returns_bucket_upper_bound() {
+        let mut h = LogHistogram::default();
+        for v in [1u64, 2, 3, 100, 1000, 100_000] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 6);
+        // p50 (rank 3) lands in bucket of 3 -> upper bound 3.
+        assert_eq!(h.percentile_us(50.0), 3);
+        // p100 lands in the 100_000 bucket (bit width 17 -> 131071).
+        assert_eq!(h.percentile_us(100.0), (1u64 << 17) - 1);
+        // Within 2x of the true value.
+        assert!(h.percentile_us(100.0) >= 100_000);
+        assert!(h.percentile_us(100.0) < 200_000 + 62_144);
+    }
+
+    #[test]
+    fn empty_histogram_answers_zero() {
+        let h = LogHistogram::default();
+        assert_eq!(h.percentile_us(99.0), 0);
+        assert_eq!(h.digest_triplet(), (0, 0, 0));
+    }
+
+    #[test]
+    fn merge_is_order_insensitive() {
+        let mut parts: Vec<LogHistogram> = Vec::new();
+        for k in 0..4u64 {
+            let mut h = LogHistogram::default();
+            for i in 0..50 {
+                h.record(k * 1_000 + i * 37);
+            }
+            parts.push(h);
+        }
+        let mut fwd = LogHistogram::default();
+        for p in &parts {
+            fwd.merge(p);
+        }
+        let mut rev = LogHistogram::default();
+        for p in parts.iter().rev() {
+            rev.merge(p);
+        }
+        assert_eq!(fwd, rev);
+        assert_eq!(fwd.digest_triplet(), rev.digest_triplet());
+    }
+}

@@ -1,9 +1,25 @@
 //! Latency sample recorder with percentile queries.
 
+/// Nearest-rank percentile over a pre-sorted slice, p ∈ (0, 100].
+/// The single rank implementation every percentile query routes
+/// through — mutable (cached-sort) and shared (sort-once batch) paths
+/// must never disagree on rank math.
+fn nearest_rank(sorted: &[u64], p: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let n = sorted.len();
+    let rank = ((p / 100.0) * n as f64).ceil() as usize;
+    sorted[rank.clamp(1, n) - 1]
+}
+
 /// Collects latency samples (µs) and answers mean / percentile queries.
 ///
 /// Percentiles sort lazily with a dirty flag — recording is O(1), queries
-/// amortize the sort.
+/// amortize the sort. Report paths that only hold `&self` use the batch
+/// queries ([`Self::percentiles_us`] / [`Self::percentiles_s`]), which
+/// read the cached sort when it is clean and otherwise sort one copy for
+/// *all* requested ranks — never once per percentile.
 #[derive(Debug, Clone, Default)]
 pub struct LatencyRecorder {
     samples_us: Vec<u64>,
@@ -70,26 +86,36 @@ impl LatencyRecorder {
 
     /// Nearest-rank percentile, p ∈ (0, 100].
     pub fn percentile_us(&mut self, p: f64) -> u64 {
-        if self.samples_us.is_empty() {
-            return 0;
-        }
         self.ensure_sorted();
-        let n = self.sorted.len();
-        let rank = ((p / 100.0) * n as f64).ceil() as usize;
-        self.sorted[rank.clamp(1, n) - 1]
+        nearest_rank(&self.sorted, p)
     }
 
-    /// Percentile in seconds (non-mutating convenience for reports — sorts
-    /// a copy if needed).
-    pub fn percentile_s(&self, p: f64) -> f64 {
-        if self.samples_us.is_empty() {
-            return 0.0;
+    /// Batch percentile query (µs) for `&self` report/digest paths:
+    /// answers every rank from one sorted view — the cached sort when
+    /// clean, otherwise a single freshly sorted copy shared by all `N`
+    /// ranks.
+    pub fn percentiles_us<const N: usize>(
+        &self,
+        ps: [f64; N],
+    ) -> [u64; N] {
+        if !self.dirty {
+            return ps.map(|p| nearest_rank(&self.sorted, p));
         }
         let mut sorted = self.samples_us.clone();
         sorted.sort_unstable();
-        let n = sorted.len();
-        let rank = ((p / 100.0) * n as f64).ceil() as usize;
-        sorted[rank.clamp(1, n) - 1] as f64 / 1e6
+        ps.map(|p| nearest_rank(&sorted, p))
+    }
+
+    /// Batch percentile query in seconds (see [`Self::percentiles_us`]).
+    pub fn percentiles_s<const N: usize>(&self, ps: [f64; N]) -> [f64; N] {
+        self.percentiles_us(ps).map(|us| us as f64 / 1e6)
+    }
+
+    /// Single percentile in seconds (non-mutating convenience). Callers
+    /// needing several percentiles should batch them through
+    /// [`Self::percentiles_s`] — this sorts per call when dirty.
+    pub fn percentile_s(&self, p: f64) -> f64 {
+        self.percentiles_s([p])[0]
     }
 }
 
@@ -102,6 +128,8 @@ mod tests {
         let mut r = LatencyRecorder::new();
         assert_eq!(r.mean_us(), 0.0);
         assert_eq!(r.percentile_us(99.0), 0);
+        assert_eq!(r.percentile_s(99.0), 0.0);
+        assert_eq!(r.percentiles_us([50.0, 99.0]), [0, 0]);
         assert!(r.is_empty());
     }
 
@@ -128,5 +156,27 @@ mod tests {
         r.record_us(30);
         assert_eq!(r.percentile_us(100.0), 30);
         assert!((r.percentile_s(100.0) - 30e-6).abs() < 1e-12);
+    }
+
+    /// The batch path must agree with the cached mutable path exactly,
+    /// both while dirty and after the cache is warm.
+    #[test]
+    fn batch_and_cached_paths_agree() {
+        let mut r = LatencyRecorder::new();
+        for v in [7u64, 3, 99, 14, 1, 250, 42] {
+            r.record_us(v);
+        }
+        let ps = [50.0, 90.0, 95.0, 99.0, 99.9];
+        let batch_dirty = r.percentiles_us(ps); // dirty: sorts a copy
+        let cached: Vec<u64> =
+            ps.iter().map(|&p| r.percentile_us(p)).collect();
+        assert_eq!(batch_dirty.to_vec(), cached);
+        let batch_clean = r.percentiles_us(ps); // clean: cached sort
+        assert_eq!(batch_clean, batch_dirty);
+        // Seconds variant is the same ranks scaled.
+        let secs = r.percentiles_s(ps);
+        for (s, us) in secs.iter().zip(batch_dirty) {
+            assert!((s - us as f64 / 1e6).abs() < 1e-12);
+        }
     }
 }

@@ -3,9 +3,11 @@
 //! utilization, preemption / critical-inversion / offload counts, swap
 //! volume).
 
+mod hist;
 mod latency;
 mod series;
 
+pub use hist::LogHistogram;
 pub use latency::LatencyRecorder;
 pub use series::TimeSeries;
 
@@ -145,6 +147,14 @@ pub struct MetricsBundle {
     /// Effective utilization: occupied ∧ owned by active requests (Fig 10).
     pub effective_usage: TimeSeries,
     pub counters: Counters,
+    /// Stall durations (µs) — one sample per function-call lifetime
+    /// observation (decode pause while the agent waits on its tool).
+    pub stall_hist: LogHistogram,
+    /// Transfer wire times (µs) — one sample per settled ledger
+    /// transfer, D2H and H2D alike.
+    pub wire_hist: LogHistogram,
+    /// Admission queue delays (µs) — submission → admission grant.
+    pub queue_hist: LogHistogram,
     /// Swap volume in blocks (both directions), from the ledger.
     pub swap_volume_blocks: u64,
     pub offload_count: u64,
@@ -165,6 +175,9 @@ impl MetricsBundle {
         self.latency.merge(&o.latency);
         self.request_latency.merge(&o.request_latency);
         self.counters.absorb(&o.counters);
+        self.stall_hist.merge(&o.stall_hist);
+        self.wire_hist.merge(&o.wire_hist);
+        self.queue_hist.merge(&o.queue_hist);
         self.swap_volume_blocks += o.swap_volume_blocks;
         self.offload_count += o.offload_count;
         self.upload_count += o.upload_count;
@@ -177,6 +190,11 @@ impl MetricsBundle {
     /// byte-identical lines — the determinism contract both the cluster
     /// digest and the single-engine regression tests assert.
     pub fn digest_line(&self, tag: &str) -> String {
+        let [lat_p50, lat_p999] =
+            self.latency.percentiles_us([50.0, 99.9]);
+        let (st_n, st_p50, st_p999) = self.stall_hist.digest_triplet();
+        let (wi_n, wi_p50, wi_p999) = self.wire_hist.digest_triplet();
+        let (qu_n, qu_p50, qu_p999) = self.queue_hist.digest_triplet();
         format!(
             "{tag}: apps={} lat_sum={} lat_n={} req_sum={} req_n={} \
              makespan={} swap={} off={} up={} preempt={} inv={} \
@@ -184,7 +202,10 @@ impl MetricsBundle {
              pfx_cpu={} pfx_rem={} pfx_look={} pfx_saved={} \
              pfx_evict={} pfx_demote={} resv={} defer={} iters={} \
              toks={} aborts={} plan={} pskip={} splan={} sskip={} \
-             obatch={} ovict={} fclt={}\n",
+             obatch={} ovict={} fclt={} lat_p50={lat_p50} \
+             lat_p999={lat_p999} stall={st_n}/{st_p50}/{st_p999} \
+             wire={wi_n}/{wi_p50}/{wi_p999} \
+             queue={qu_n}/{qu_p50}/{qu_p999}\n",
             self.apps_completed,
             self.latency.total_us(),
             self.latency.len(),
@@ -232,14 +253,19 @@ impl MetricsBundle {
 
     /// One-line summary used by examples and benches.
     pub fn summary(&self) -> String {
+        let [p50, p90, p95, p999] =
+            self.latency.percentiles_s([50.0, 90.0, 95.0, 99.9]);
         format!(
-            "apps={} avg={:.1}s p90={:.1}s p95={:.1}s total={:.1}s \
+            "apps={} avg={:.1}s p50={:.1}s p90={:.1}s p95={:.1}s \
+             p99.9={:.1}s total={:.1}s \
              thpt={:.4}req/s gpu_util={:.1}% eff_util={:.1}% \
              offloads={} swap_blocks={} preempt={} inversions={}",
             self.apps_completed,
             self.latency.mean_s(),
-            self.latency.percentile_s(90.0),
-            self.latency.percentile_s(95.0),
+            p50,
+            p90,
+            p95,
+            p999,
             self.makespan_us as f64 / 1e6,
             self.throughput(),
             self.gpu_usage.time_weighted_mean() * 100.0,
@@ -271,9 +297,13 @@ mod tests {
         let mut m = MetricsBundle::default();
         m.apps_completed = 3;
         m.counters.preemptions = 2;
+        m.stall_hist.record(1_500);
         let a = m.digest_line("shard0");
         assert!(a.starts_with("shard0: apps=3"));
         assert!(a.contains("preempt=2"));
+        assert!(a.contains("lat_p50="));
+        assert!(a.contains("stall=1/"));
+        assert!(a.contains("queue=0/0/0"));
         assert_eq!(a, m.digest_line("shard0"));
     }
 
@@ -299,7 +329,10 @@ mod tests {
         b.makespan_us = 9_000_000;
         b.counters.preemptions = 1;
         b.swap_volume_blocks = 5;
+        a.wire_hist.record(100);
+        b.wire_hist.record(9_000);
         a.absorb(&b);
+        assert_eq!(a.wire_hist.count(), 2);
         assert_eq!(a.apps_completed, 3);
         assert_eq!(a.makespan_us, 9_000_000);
         assert_eq!(a.counters.preemptions, 3);

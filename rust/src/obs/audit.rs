@@ -1,0 +1,423 @@
+//! Post-hoc trace auditor: replays a recorded timeline and checks the
+//! ordering invariants no grep lint can see.
+//!
+//! The lints PRs 2–5 added pin *where* certain operations may be
+//! written; this auditor pins *when* they may happen, using only the
+//! trace:
+//!
+//! 1. **Transfer pairing** — every `TransferStart` has exactly one
+//!    matching `TransferEnd` on the same shard (same direction), no end
+//!    without a start, and nothing left open at end of trace.
+//! 2. **Offload before upload** — a request's classic offload/upload
+//!    transfers never overlap: the D2H must end before the next
+//!    request-KV transfer for that rid starts. (Cross-worker migration
+//!    transfers are exempt: the destination's H2D lands at the same
+//!    shared-clock instant the source's D2H completes, on a different
+//!    shard, so same-timestamp bookkeeping is legal there.)
+//! 3. **No decode while a prefix fetch is pending** — a request never
+//!    enters `running` while a `prefix_hit` transfer for it is open.
+//! 4. **Retire is final** — after an autoscale `retire`, no event is
+//!    recorded on that shard until (if ever) it is re-grown.
+//! 5. **Clock sanity** — per shard, timestamps are non-decreasing and
+//!    sequence numbers strictly increase.
+//!
+//! Runs on in-memory records (tier-1 tests) or on an exported JSON file
+//! via [`TraceAuditor::audit_chrome_trace`] (the CI trace smoke), which
+//! doubles as schema validation of the exporter's output.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::fmt;
+
+use super::export::parse_chrome_trace;
+use super::recorder::format_record;
+use super::{scale, state, xfer, TraceEvent, TraceRecord};
+
+/// First invariant violation found, in timeline order.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct AuditError {
+    /// Index into the (sorted) record stream, when anchored to one.
+    pub index: Option<usize>,
+    pub message: String,
+}
+
+impl fmt::Display for AuditError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self.index {
+            Some(i) => write!(f, "record {}: {}", i, self.message),
+            None => write!(f, "end of trace: {}", self.message),
+        }
+    }
+}
+
+/// What a clean audit covered.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct AuditSummary {
+    pub records: usize,
+    pub shards: usize,
+    /// Transfer start/end pairs verified.
+    pub transfers: usize,
+    /// Requests whose span closed (`finished` seen).
+    pub finished_requests: usize,
+    /// Autoscale retirements verified final.
+    pub retirements: usize,
+}
+
+impl fmt::Display for AuditSummary {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "audit ok: {} records, {} shards, {} transfers paired, \
+             {} requests finished, {} retirements",
+            self.records,
+            self.shards,
+            self.transfers,
+            self.finished_requests,
+            self.retirements
+        )
+    }
+}
+
+/// Stateless auditor over recorded timelines.
+pub struct TraceAuditor;
+
+struct OpenTransfer {
+    d2h: bool,
+    kind: u8,
+    rid: u64,
+}
+
+impl TraceAuditor {
+    /// Audit a record stream (any order — sorted internally into the
+    /// canonical `(at_us, shard, seq)` timeline first).
+    pub fn audit(
+        records: &[TraceRecord],
+    ) -> Result<AuditSummary, AuditError> {
+        let mut recs: Vec<TraceRecord> = records.to_vec();
+        recs.sort_by_key(|r| (r.at_us, r.shard, r.seq));
+
+        let mut summary = AuditSummary {
+            records: recs.len(),
+            ..Default::default()
+        };
+        // Per-shard clock/seq watermarks (5).
+        let mut last: BTreeMap<u32, (u64, u64)> = BTreeMap::new();
+        // Open transfers per (shard, xfer id) (1).
+        let mut open: BTreeMap<(u32, u64), OpenTransfer> =
+            BTreeMap::new();
+        // Open *request-KV* transfer per rid (2).
+        let mut open_req: BTreeMap<u64, u64> = BTreeMap::new();
+        // Open prefix-hit fetches per rid (3).
+        let mut pending_prefix: BTreeMap<u64, u32> = BTreeMap::new();
+        // Currently retired shards (4).
+        let mut retired: BTreeSet<u32> = BTreeSet::new();
+
+        let err = |i: usize, r: &TraceRecord, msg: String| AuditError {
+            index: Some(i),
+            message: format!("{msg}\n{}", format_record(r)),
+        };
+
+        for (i, r) in recs.iter().enumerate() {
+            if retired.contains(&r.shard) {
+                return Err(err(
+                    i,
+                    r,
+                    format!(
+                        "event on shard {} after its retirement",
+                        r.shard
+                    ),
+                ));
+            }
+            match last.get(&r.shard) {
+                Some(&(at, seq)) => {
+                    if r.at_us < at {
+                        return Err(err(
+                            i,
+                            r,
+                            format!(
+                                "shard {} clock went backwards \
+                                 ({} -> {})",
+                                r.shard, at, r.at_us
+                            ),
+                        ));
+                    }
+                    if r.seq <= seq {
+                        return Err(err(
+                            i,
+                            r,
+                            format!(
+                                "shard {} sequence not increasing \
+                                 ({} -> {})",
+                                r.shard, seq, r.seq
+                            ),
+                        ));
+                    }
+                    last.insert(r.shard, (r.at_us, r.seq));
+                }
+                None => {
+                    last.insert(r.shard, (r.at_us, r.seq));
+                }
+            }
+
+            match r.ev {
+                TraceEvent::TransferStart {
+                    xfer: id,
+                    rid,
+                    kind,
+                    d2h,
+                    ..
+                } => {
+                    if open
+                        .insert(
+                            (r.shard, id),
+                            OpenTransfer { d2h, kind, rid },
+                        )
+                        .is_some()
+                    {
+                        return Err(err(
+                            i,
+                            r,
+                            format!(
+                                "transfer {id} started twice on \
+                                 shard {}",
+                                r.shard
+                            ),
+                        ));
+                    }
+                    if kind == xfer::REQUEST {
+                        if let Some(prev) = open_req.insert(rid, id) {
+                            return Err(err(
+                                i,
+                                r,
+                                format!(
+                                    "request {rid} KV transfer {id} \
+                                     starts while transfer {prev} is \
+                                     still in flight (offload must \
+                                     complete before upload)"
+                                ),
+                            ));
+                        }
+                    }
+                    if kind == xfer::PREFIX_HIT {
+                        *pending_prefix.entry(rid).or_insert(0) += 1;
+                    }
+                }
+                TraceEvent::TransferEnd { xfer: id, rid, d2h } => {
+                    let Some(t) = open.remove(&(r.shard, id)) else {
+                        return Err(err(
+                            i,
+                            r,
+                            format!(
+                                "transfer {id} ended on shard {} \
+                                 without a start",
+                                r.shard
+                            ),
+                        ));
+                    };
+                    if t.d2h != d2h || t.rid != rid {
+                        return Err(err(
+                            i,
+                            r,
+                            format!(
+                                "transfer {id} end does not match its \
+                                 start (rid {} vs {rid})",
+                                t.rid
+                            ),
+                        ));
+                    }
+                    if t.kind == xfer::REQUEST {
+                        open_req.remove(&rid);
+                    }
+                    if t.kind == xfer::PREFIX_HIT {
+                        if let Some(n) = pending_prefix.get_mut(&rid) {
+                            *n = n.saturating_sub(1);
+                            if *n == 0 {
+                                pending_prefix.remove(&rid);
+                            }
+                        }
+                    }
+                    summary.transfers += 1;
+                }
+                TraceEvent::ReqState { rid, state: st } => {
+                    if st == state::RUNNING
+                        && pending_prefix
+                            .get(&rid)
+                            .copied()
+                            .unwrap_or(0)
+                            > 0
+                    {
+                        return Err(err(
+                            i,
+                            r,
+                            format!(
+                                "request {rid} decodes while its \
+                                 prefix fetch is still pending"
+                            ),
+                        ));
+                    }
+                    if st == state::FINISHED {
+                        summary.finished_requests += 1;
+                    }
+                }
+                TraceEvent::Autoscale { action, shard, .. } => {
+                    if action == scale::RETIRE {
+                        retired.insert(shard);
+                        summary.retirements += 1;
+                    } else if action == scale::GROW
+                        || action == scale::WARM
+                    {
+                        retired.remove(&shard);
+                    }
+                }
+                _ => {}
+            }
+        }
+
+        if let Some(((shard, id), t)) = open.into_iter().next() {
+            return Err(AuditError {
+                index: None,
+                message: format!(
+                    "transfer {id} (rid {}, shard {shard}) never \
+                     completed",
+                    t.rid
+                ),
+            });
+        }
+        summary.shards = last
+            .keys()
+            .filter(|&&s| s != super::CLUSTER_SHARD)
+            .count();
+        Ok(summary)
+    }
+
+    /// Parse an exported Chrome trace document (schema validation) and
+    /// audit the records it carries.
+    pub fn audit_chrome_trace(
+        doc: &str,
+    ) -> Result<AuditSummary, AuditError> {
+        let records = parse_chrome_trace(doc).map_err(|e| AuditError {
+            index: None,
+            message: format!("schema: {e}"),
+        })?;
+        Self::audit(&records)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{xfer, TraceSink};
+    use super::*;
+
+    fn clean_timeline() -> Vec<TraceRecord> {
+        let mut s = TraceSink::default();
+        s.enable();
+        s.advance(10);
+        s.req_state(1, state::WAITING);
+        s.req_state(1, state::PREFILLING);
+        s.advance(20);
+        s.req_state(1, state::RUNNING);
+        s.transfer_start(0, 1, xfer::REQUEST, true, 8, 100);
+        s.advance(120);
+        s.transfer_end(0, 1, true);
+        s.transfer_start(1, 1, xfer::REQUEST, false, 8, 100);
+        s.advance(220);
+        s.transfer_end(1, 1, false);
+        s.req_state(1, state::FINISHED);
+        s.records().to_vec()
+    }
+
+    #[test]
+    fn clean_trace_passes_with_counts() {
+        let sum = TraceAuditor::audit(&clean_timeline()).unwrap();
+        assert_eq!(sum.transfers, 2);
+        assert_eq!(sum.finished_requests, 1);
+        assert_eq!(sum.shards, 1);
+    }
+
+    #[test]
+    fn unpaired_transfer_fails() {
+        let mut recs = clean_timeline();
+        // Drop the last TransferEnd.
+        let idx = recs
+            .iter()
+            .rposition(|r| {
+                matches!(r.ev, TraceEvent::TransferEnd { .. })
+            })
+            .unwrap();
+        recs.remove(idx);
+        let e = TraceAuditor::audit(&recs).unwrap_err();
+        assert!(e.message.contains("never completed"), "{e}");
+    }
+
+    #[test]
+    fn upload_overlapping_offload_fails() {
+        let mut s = TraceSink::default();
+        s.enable();
+        s.advance(10);
+        s.transfer_start(0, 7, xfer::REQUEST, true, 4, 100);
+        s.advance(50); // D2H still in flight
+        s.transfer_start(1, 7, xfer::REQUEST, false, 4, 100);
+        let e = TraceAuditor::audit(s.records()).unwrap_err();
+        assert!(e.message.contains("still in flight"), "{e}");
+    }
+
+    #[test]
+    fn decode_during_prefix_fetch_fails() {
+        let mut s = TraceSink::default();
+        s.enable();
+        s.advance(10);
+        s.transfer_start(0, 7, xfer::PREFIX_HIT, false, 4, 100);
+        s.advance(50);
+        s.req_state(7, state::RUNNING);
+        let e = TraceAuditor::audit(s.records()).unwrap_err();
+        assert!(e.message.contains("prefix fetch"), "{e}");
+    }
+
+    #[test]
+    fn event_after_retirement_fails_and_regrow_clears_it() {
+        let mut c = TraceSink::default();
+        c.enable();
+        c.set_shard(super::super::CLUSTER_SHARD);
+        let mut s1 = TraceSink::default();
+        s1.enable();
+        s1.set_shard(1);
+        c.advance(10);
+        c.autoscale(scale::RETIRE, 1, 1);
+        s1.advance(20);
+        s1.gpu_sample(10, 10);
+        let bad = super::super::merge_records(&[
+            c.records(),
+            s1.records(),
+        ]);
+        let e = TraceAuditor::audit(&bad).unwrap_err();
+        assert!(e.message.contains("after its retirement"), "{e}");
+
+        // A re-grow lifts the embargo.
+        c.advance(15);
+        c.autoscale(scale::GROW, 1, 2);
+        let ok = super::super::merge_records(&[
+            c.records(),
+            s1.records(),
+        ]);
+        TraceAuditor::audit(&ok).unwrap();
+    }
+
+    #[test]
+    fn clock_regression_fails() {
+        let recs = vec![
+            TraceRecord {
+                at_us: 100,
+                seq: 0,
+                shard: 0,
+                ev: TraceEvent::GpuSample { free: 1, total: 2 },
+            },
+            TraceRecord {
+                at_us: 100,
+                seq: 0, // duplicate seq on the same shard
+                shard: 0,
+                ev: TraceEvent::GpuSample { free: 1, total: 2 },
+            },
+        ];
+        let e = TraceAuditor::audit(&recs).unwrap_err();
+        assert!(e.message.contains("sequence"), "{e}");
+    }
+}

@@ -1,0 +1,410 @@
+//! Perfetto/Chrome `trace_event` JSON exporter.
+//!
+//! Emits the merged, deterministically ordered record stream as a JSON
+//! array with **one event object per line**:
+//!
+//! * one process track per shard (`process_name` metadata), plus a
+//!   dedicated track for the cluster control plane;
+//! * per-request async spans (`cat:"req"`, id = request id): `b` on the
+//!   request's first lifecycle event, `n` instants for intermediate
+//!   states, `e` on `finished`;
+//! * per-transfer async spans (`cat:"xfer"`, id = `s<shard>x<xfer>`);
+//! * counter tracks (`ph:"C"`) for free blocks, pressure band, and the
+//!   serving-shard count;
+//! * everything else as thread-scoped instants (`ph:"i"`).
+//!
+//! Every non-metadata line carries `args.rec` — the record's compact
+//! integer encoding ([`TraceRecord::to_compact`]) — so the auditor can
+//! re-load the exporter's own output losslessly without a JSON object
+//! model. Timestamps are already µs, Chrome's native unit. All values
+//! are integers: the byte-identical-trace determinism contract holds
+//! end to end.
+
+use std::collections::BTreeSet;
+
+use super::{
+    planner, prefix, scale, state, xfer, TraceEvent, TraceRecord,
+    CLUSTER_SHARD,
+};
+
+fn track_name(shard: u32) -> String {
+    if shard == CLUSTER_SHARD {
+        "cluster".to_string()
+    } else {
+        format!("shard {shard}")
+    }
+}
+
+/// One JSON event line (no trailing comma; the caller joins).
+fn line(
+    name: &str,
+    cat: Option<&str>,
+    ph: &str,
+    rec: &TraceRecord,
+    id: Option<String>,
+    args: &[(&str, i64)],
+) -> String {
+    let mut s = format!(r#"{{"name":"{name}","#);
+    if let Some(c) = cat {
+        s.push_str(&format!(r#""cat":"{c}","#));
+    }
+    s.push_str(&format!(
+        r#""ph":"{ph}","ts":{},"pid":{},"tid":0,"#,
+        rec.at_us, rec.shard
+    ));
+    if let Some(id) = id {
+        s.push_str(&format!(r#""id":"{id}","#));
+    }
+    if ph == "i" {
+        s.push_str(r#""s":"t","#);
+    }
+    s.push_str(r#""args":{"#);
+    for (k, v) in args {
+        s.push_str(&format!(r#""{k}":{v},"#));
+    }
+    s.push_str(&format!(r#""rec":"{}"}}}}"#, rec.to_compact()));
+    s
+}
+
+/// Render one merged record stream (see [`super::merge_records`]) as a
+/// Chrome `trace_event` JSON document.
+pub fn export_chrome_trace(records: &[TraceRecord]) -> String {
+    let mut lines: Vec<String> = Vec::with_capacity(records.len() + 8);
+
+    // Process-name metadata for every track present, in shard order.
+    let shards: BTreeSet<u32> =
+        records.iter().map(|r| r.shard).collect();
+    for s in &shards {
+        lines.push(format!(
+            r#"{{"name":"process_name","ph":"M","pid":{s},"tid":0,"args":{{"name":"{}"}}}}"#,
+            track_name(*s)
+        ));
+    }
+
+    // Request spans open with `b` on the rid's first event.
+    let mut span_open: BTreeSet<u64> = BTreeSet::new();
+
+    for rec in records {
+        let l = match rec.ev {
+            TraceEvent::ReqState { rid, state: st } => {
+                let nm = state::NAMES
+                    .get(st as usize)
+                    .copied()
+                    .unwrap_or("?");
+                let ph = if st == state::FINISHED {
+                    span_open.remove(&rid);
+                    "e"
+                } else if span_open.insert(rid) {
+                    "b"
+                } else {
+                    "n"
+                };
+                line(
+                    if ph == "n" { nm } else { "req" },
+                    Some("req"),
+                    ph,
+                    rec,
+                    Some(format!("{rid:#x}")),
+                    &[("state", st as i64)],
+                )
+            }
+            TraceEvent::TransferStart {
+                xfer: id,
+                rid,
+                kind,
+                d2h,
+                blocks,
+                wire_us,
+            } => line(
+                "xfer",
+                Some("xfer"),
+                "b",
+                rec,
+                Some(format!("s{}x{id}", rec.shard)),
+                &[
+                    ("kind", kind as i64),
+                    ("rid", rid as i64),
+                    ("d2h", d2h as i64),
+                    ("blocks", blocks as i64),
+                    ("wire_us", wire_us as i64),
+                ],
+            ),
+            TraceEvent::TransferEnd { xfer: id, rid, d2h } => line(
+                "xfer",
+                Some("xfer"),
+                "e",
+                rec,
+                Some(format!("s{}x{id}", rec.shard)),
+                &[("rid", rid as i64), ("d2h", d2h as i64)],
+            ),
+            TraceEvent::Prefix {
+                key,
+                action,
+                blocks,
+            } => line(
+                &format!(
+                    "prefix_{}",
+                    prefix::NAMES
+                        .get(action as usize)
+                        .copied()
+                        .unwrap_or("?")
+                ),
+                Some("prefix"),
+                "i",
+                rec,
+                None,
+                &[("key", key as i64), ("blocks", blocks as i64)],
+            ),
+            TraceEvent::SpatialPlan {
+                types,
+                reserved_blocks,
+            } => line(
+                "spatial_plan",
+                Some("plan"),
+                "i",
+                rec,
+                None,
+                &[
+                    ("types", types as i64),
+                    ("reserved_blocks", reserved_blocks as i64),
+                ],
+            ),
+            TraceEvent::Preempt { victim, grower } => line(
+                "preempt",
+                Some("sched"),
+                "i",
+                rec,
+                None,
+                &[("victim", victim as i64), ("grower", grower as i64)],
+            ),
+            TraceEvent::PlannerGate {
+                planner: p,
+                skipped,
+            } => line(
+                &format!(
+                    "{}_plan",
+                    planner::NAMES
+                        .get(p as usize)
+                        .copied()
+                        .unwrap_or("?")
+                ),
+                Some("plan"),
+                "i",
+                rec,
+                None,
+                &[("skipped", skipped as i64)],
+            ),
+            TraceEvent::PressureBand { band, free } => line(
+                "pressure_band",
+                None,
+                "C",
+                rec,
+                None,
+                &[("band", band as i64), ("free", free as i64)],
+            ),
+            TraceEvent::GpuSample { free, total } => line(
+                "free_blocks",
+                None,
+                "C",
+                rec,
+                None,
+                &[("free", free as i64), ("total", total as i64)],
+            ),
+            TraceEvent::RouteDecision {
+                app_seq,
+                dst,
+                warmth_milli,
+                bias_milli,
+            } => line(
+                "route",
+                Some("cluster"),
+                "i",
+                rec,
+                None,
+                &[
+                    ("app_seq", app_seq as i64),
+                    ("dst", dst as i64),
+                    ("warmth_milli", warmth_milli),
+                    ("bias_milli", bias_milli),
+                ],
+            ),
+            TraceEvent::MigrationBatch { victims, blocks } => line(
+                "migration_batch",
+                Some("cluster"),
+                "i",
+                rec,
+                None,
+                &[
+                    ("victims", victims as i64),
+                    ("blocks", blocks as i64),
+                ],
+            ),
+            TraceEvent::Autoscale {
+                action,
+                shard,
+                serving,
+            } => line(
+                &format!(
+                    "scale_{}",
+                    scale::NAMES
+                        .get(action as usize)
+                        .copied()
+                        .unwrap_or("?")
+                ),
+                Some("cluster"),
+                "i",
+                rec,
+                None,
+                &[
+                    ("action", action as i64),
+                    ("shard", shard as i64),
+                    ("serving", serving as i64),
+                ],
+            ),
+        };
+        lines.push(l);
+
+        // The serving count doubles as a counter track; emit it as a
+        // sibling counter line (derived, carries no `rec` — the record
+        // above is the canonical one).
+        if let TraceEvent::Autoscale { serving, .. } = rec.ev {
+            lines.push(format!(
+                r#"{{"name":"active_shards","ph":"C","ts":{},"pid":{},"tid":0,"args":{{"serving":{serving}}}}}"#,
+                rec.at_us, rec.shard
+            ));
+        }
+    }
+
+    let mut out = String::from("[\n");
+    out.push_str(&lines.join(",\n"));
+    out.push_str("\n]\n");
+    out
+}
+
+/// Parse a document produced by [`export_chrome_trace`] back into
+/// records, validating the exporter's line schema as it goes. This *is*
+/// the schema check the CI trace smoke runs: array brackets, one object
+/// per line, required keys per event, and a lossless `args.rec` on
+/// every canonical line.
+pub fn parse_chrome_trace(doc: &str) -> Result<Vec<TraceRecord>, String> {
+    let mut lines = doc.lines().map(str::trim).filter(|l| !l.is_empty());
+    if lines.next() != Some("[") {
+        return Err("trace must open with a '[' line".to_string());
+    }
+    let mut records = Vec::new();
+    let mut closed = false;
+    for (i, raw) in lines.enumerate() {
+        if raw == "]" {
+            closed = true;
+            continue;
+        }
+        if closed {
+            return Err(format!("line {i}: content after closing ']'"));
+        }
+        let l = raw.strip_suffix(',').unwrap_or(raw);
+        if !(l.starts_with('{') && l.ends_with('}')) {
+            return Err(format!("line {i}: not a JSON object: {l}"));
+        }
+        for key in [r#""name":"#, r#""ph":"#, r#""pid":"#] {
+            if !l.contains(key) {
+                return Err(format!("line {i}: missing {key}"));
+            }
+        }
+        if l.contains(r#""ph":"M""#) {
+            continue; // metadata carries no record
+        }
+        if !l.contains(r#""ts":"#) {
+            return Err(format!("line {i}: event missing \"ts\""));
+        }
+        let Some(start) = l.find(r#""rec":""#) else {
+            // Derived counter lines (no `rec`) are allowed; the
+            // canonical record line precedes them.
+            if l.contains(r#""ph":"C""#) {
+                continue;
+            }
+            return Err(format!("line {i}: event missing args.rec"));
+        };
+        let rest = &l[start + r#""rec":""#.len()..];
+        let Some(end) = rest.find('"') else {
+            return Err(format!("line {i}: unterminated rec string"));
+        };
+        let compact = &rest[..end];
+        let Some(rec) = TraceRecord::from_compact(compact) else {
+            return Err(format!(
+                "line {i}: malformed rec encoding: {compact}"
+            ));
+        };
+        records.push(rec);
+    }
+    if !closed {
+        return Err("trace must close with a ']' line".to_string());
+    }
+    Ok(records)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{merge_records, TraceSink};
+    use super::*;
+
+    fn sample_records() -> Vec<TraceRecord> {
+        let mut s = TraceSink::default();
+        s.enable();
+        s.set_shard(0);
+        s.advance(100);
+        s.req_state(1, state::WAITING);
+        s.req_state(1, state::PREFILLING);
+        s.advance(200);
+        s.transfer_start(0, 1, xfer::REQUEST, true, 8, 4_000);
+        s.gpu_sample(90, 128);
+        s.advance(4_200);
+        s.transfer_end(0, 1, true);
+        s.req_state(1, state::FINISHED);
+        let mut c = TraceSink::default();
+        c.enable();
+        c.set_shard(CLUSTER_SHARD);
+        c.advance(150);
+        c.route(0, 0, 500, -10);
+        c.autoscale(scale::GROW, 1, 2);
+        merge_records(&[s.records(), c.records()])
+    }
+
+    #[test]
+    fn export_parse_round_trips_the_records() {
+        let recs = sample_records();
+        let doc = export_chrome_trace(&recs);
+        let back = parse_chrome_trace(&doc).expect("valid trace");
+        assert_eq!(back, recs);
+    }
+
+    #[test]
+    fn export_emits_spans_counters_and_metadata() {
+        let doc = export_chrome_trace(&sample_records());
+        assert!(doc.contains(r#""name":"process_name""#));
+        assert!(doc.contains(r#""name":"req","cat":"req","ph":"b""#));
+        assert!(doc.contains(r#""ph":"e""#));
+        assert!(doc.contains(r#""name":"free_blocks","ph":"C""#));
+        assert!(doc.contains(r#""name":"active_shards","ph":"C""#));
+        assert!(doc.contains(r#""name":"route""#));
+        // One event per line between the brackets.
+        let body: Vec<&str> = doc
+            .lines()
+            .filter(|l| l.starts_with('{'))
+            .collect();
+        assert!(body.len() >= 10);
+    }
+
+    #[test]
+    fn parse_rejects_malformed_documents() {
+        assert!(parse_chrome_trace("").is_err());
+        assert!(parse_chrome_trace("[\n{\"ph\":\"i\"}\n]").is_err());
+        let doc = export_chrome_trace(&sample_records());
+        // Corrupt one rec encoding.
+        let bad = doc.replacen(r#""rec":"0:"#, r#""rec":"99:"#, 1);
+        assert!(parse_chrome_trace(&bad).is_err());
+        // Drop the closing bracket.
+        let unterminated =
+            doc.trim_end().trim_end_matches(']').to_string();
+        assert!(parse_chrome_trace(&unterminated).is_err());
+    }
+}

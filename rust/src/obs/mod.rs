@@ -1,0 +1,739 @@
+//! Observability: deterministic structured tracing of the serving
+//! timeline.
+//!
+//! Tokencake's whole argument is a *timeline* claim — KV caches idle
+//! during function-call stalls, offload/upload windows overlap wire time
+//! with compute — and end-of-run aggregates can't show it. This layer
+//! records the timeline itself: a [`TraceSink`] threaded through
+//! `ServeState` / `SimEngine` / `ClusterEngine` captures a typed
+//! [`TraceEvent`] at every lifecycle transition the schedulers already
+//! centralize (request state changes, ledger transfers, prefix-cache
+//! lifecycle, planner gates, routing, migration, autoscale phases), each
+//! stamped with the shared sim clock and a per-sink sequence number.
+//!
+//! Three consumers sit on the stream:
+//!
+//! * [`export::export_chrome_trace`] — a Perfetto/Chrome `trace_event`
+//!   JSON exporter (`--trace out.json`): one process track per shard,
+//!   per-request async spans, per-transfer async spans, counter tracks
+//!   for free blocks / pressure band / active shards.
+//! * [`recorder::FlightRecorder`] — a bounded ring buffer of the last N
+//!   events, always armed in debug/test builds (and whenever tracing or
+//!   an `--assert-*` CLI check is on), dumped automatically when a
+//!   conservation check fails so failures come with context attached.
+//! * [`audit::TraceAuditor`] — a post-hoc replay checking ordering
+//!   invariants no grep lint can: every transfer start has exactly one
+//!   end, a request's offload completes before its upload starts, no
+//!   decode tick while a prefix-hit transfer is pending, no events on a
+//!   shard after it retires.
+//!
+//! **Determinism contract**: events carry only integers (floats are
+//! stored as milli fixed-point), sinks are advanced from the same clock
+//! the schedulers read, and the exporter stable-sorts the merged stream
+//! by `(at_us, shard, seq)` — so the same seed and config produce a
+//! byte-identical trace file (`tests/determinism.rs` pins this).
+//!
+//! **Zero overhead when off**: in release builds with tracing disabled
+//! every emit method is a single load-and-branch on [`TraceSink::active`]
+//! — no event is constructed, nothing allocates on the hot path.
+//!
+//! `TraceEvent` values are constructed **only in this module** (CI greps
+//! for `TraceEvent::` outside `rust/src/obs/`): instrumentation sites
+//! call the named emit methods on [`TraceSink`], which keeps the event
+//! vocabulary — and the compact encoding the auditor round-trips —
+//! in one place.
+
+pub mod audit;
+pub mod export;
+pub mod recorder;
+
+pub use audit::{AuditError, AuditSummary, TraceAuditor};
+pub use export::export_chrome_trace;
+pub use recorder::FlightRecorder;
+
+/// Sink shard index used by the cluster control plane (router,
+/// migration planner, autoscaler) — sorts after every real shard.
+pub const CLUSTER_SHARD: u32 = u32::MAX;
+
+// ---------------------------------------------------------------------
+// Code tables (single source of truth for sinks, exporter, and auditor)
+// ---------------------------------------------------------------------
+
+/// Request lifecycle state codes (mirror `coordination::ReqState`).
+pub mod state {
+    pub const WAITING: u8 = 0;
+    pub const PREFILLING: u8 = 1;
+    pub const RUNNING: u8 = 2;
+    pub const STALLED: u8 = 3;
+    pub const PENDING_OFFLOAD: u8 = 4;
+    pub const OFFLOADED: u8 = 5;
+    pub const PENDING_UPLOAD: u8 = 6;
+    pub const UPLOADED: u8 = 7;
+    pub const FINISHED: u8 = 8;
+
+    pub const NAMES: [&str; 9] = [
+        "waiting",
+        "prefilling",
+        "running",
+        "stalled",
+        "pending_offload",
+        "offloaded",
+        "pending_upload",
+        "uploaded",
+        "finished",
+    ];
+}
+
+/// Transfer payload codes (mirror `kvcache::TransferKind`, plus the
+/// cluster's cross-worker migration which rides the same ledger).
+pub mod xfer {
+    pub const REQUEST: u8 = 0;
+    pub const PREFIX_EVICT: u8 = 1;
+    pub const PREFIX_HIT: u8 = 2;
+    pub const MIGRATION: u8 = 3;
+
+    pub const NAMES: [&str; 4] =
+        ["request", "prefix_evict", "prefix_hit", "migration"];
+}
+
+/// Prefix-cache lifecycle action codes.
+pub mod prefix {
+    pub const INSERT: u8 = 0;
+    pub const HIT_GPU: u8 = 1;
+    pub const HIT_CPU: u8 = 2;
+    pub const HIT_REMOTE: u8 = 3;
+    pub const DEMOTE: u8 = 4;
+    pub const EVICT: u8 = 5;
+    pub const REPLICATE: u8 = 6;
+
+    pub const NAMES: [&str; 7] = [
+        "insert",
+        "hit_gpu",
+        "hit_cpu",
+        "hit_remote",
+        "demote",
+        "evict",
+        "replicate",
+    ];
+}
+
+/// Epoch-gated planner codes.
+pub mod planner {
+    pub const TEMPORAL: u8 = 0;
+    pub const SPATIAL: u8 = 1;
+
+    pub const NAMES: [&str; 2] = ["temporal", "spatial"];
+}
+
+/// Autoscale lifecycle action codes.
+pub mod scale {
+    pub const GROW: u8 = 0;
+    pub const WARM: u8 = 1;
+    pub const DRAIN: u8 = 2;
+    pub const CANCEL: u8 = 3;
+    pub const RETIRE: u8 = 4;
+
+    pub const NAMES: [&str; 5] =
+        ["grow", "warm", "drain", "cancel", "retire"];
+}
+
+// ---------------------------------------------------------------------
+// Event alphabet
+// ---------------------------------------------------------------------
+
+/// One typed lifecycle event. Integer-only (`Copy + Eq`): float terms
+/// are carried as milli fixed-point so traces compare bytewise.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TraceEvent {
+    /// A request entered lifecycle state `state` (see [`state`]).
+    ReqState { rid: u64, state: u8 },
+    /// A block transfer went on the wire (ledger issue).
+    TransferStart {
+        xfer: u64,
+        rid: u64,
+        kind: u8,
+        d2h: bool,
+        blocks: u32,
+        wire_us: u64,
+    },
+    /// A transfer left the ledger (landing or cancellation).
+    TransferEnd { xfer: u64, rid: u64, d2h: bool },
+    /// Prefix-cache lifecycle action (see [`prefix`]).
+    Prefix { key: u64, action: u8, blocks: u32 },
+    /// The spatial planner installed a reservation plan.
+    SpatialPlan { types: u32, reserved_blocks: u64 },
+    /// `victim` was preempted so `grower` could take its blocks.
+    Preempt { victim: u64, grower: u64 },
+    /// An epoch-gated planner actually ran, after `skipped` gated
+    /// steps since its previous run (see [`planner`]).
+    PlannerGate { planner: u8, skipped: u64 },
+    /// The free-list watermark band moved.
+    PressureBand { band: u8, free: u32 },
+    /// Periodic pool sample (counter track).
+    GpuSample { free: u32, total: u32 },
+    /// The router placed arrival `app_seq` on `dst` (warmth/bias terms
+    /// in milli fixed-point; -1 when the policy supplied none).
+    RouteDecision {
+        app_seq: u32,
+        dst: u32,
+        warmth_milli: i64,
+        bias_milli: i64,
+    },
+    /// One migration planning window issued a victim batch.
+    MigrationBatch { victims: u32, blocks: u64 },
+    /// Autoscale lifecycle action on `shard` (see [`scale`]);
+    /// `serving` is the post-action serving count.
+    Autoscale { action: u8, shard: u32, serving: u32 },
+}
+
+impl TraceEvent {
+    /// Stable numeric code (first field of the compact encoding).
+    pub fn code(&self) -> u8 {
+        match self {
+            TraceEvent::ReqState { .. } => 0,
+            TraceEvent::TransferStart { .. } => 1,
+            TraceEvent::TransferEnd { .. } => 2,
+            TraceEvent::Prefix { .. } => 3,
+            TraceEvent::SpatialPlan { .. } => 4,
+            TraceEvent::Preempt { .. } => 5,
+            TraceEvent::PlannerGate { .. } => 6,
+            TraceEvent::PressureBand { .. } => 7,
+            TraceEvent::GpuSample { .. } => 8,
+            TraceEvent::RouteDecision { .. } => 9,
+            TraceEvent::MigrationBatch { .. } => 10,
+            TraceEvent::Autoscale { .. } => 11,
+        }
+    }
+}
+
+/// One recorded event: clock stamp, per-sink sequence, owning shard.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceRecord {
+    pub at_us: u64,
+    pub seq: u64,
+    pub shard: u32,
+    pub ev: TraceEvent,
+}
+
+impl TraceRecord {
+    /// Lossless colon-separated integer encoding, embedded by the
+    /// exporter as `args.rec` on every line so the auditor can
+    /// round-trip its own output without a JSON object model:
+    /// `code:at_us:seq:shard:field...` (fields in declaration order;
+    /// bools as 0/1).
+    pub fn to_compact(&self) -> String {
+        let head = format!(
+            "{}:{}:{}:{}",
+            self.ev.code(),
+            self.at_us,
+            self.seq,
+            self.shard
+        );
+        let tail = match self.ev {
+            TraceEvent::ReqState { rid, state } => {
+                format!("{rid}:{state}")
+            }
+            TraceEvent::TransferStart {
+                xfer,
+                rid,
+                kind,
+                d2h,
+                blocks,
+                wire_us,
+            } => format!(
+                "{xfer}:{rid}:{kind}:{}:{blocks}:{wire_us}",
+                d2h as u8
+            ),
+            TraceEvent::TransferEnd { xfer, rid, d2h } => {
+                format!("{xfer}:{rid}:{}", d2h as u8)
+            }
+            TraceEvent::Prefix {
+                key,
+                action,
+                blocks,
+            } => format!("{key}:{action}:{blocks}"),
+            TraceEvent::SpatialPlan {
+                types,
+                reserved_blocks,
+            } => format!("{types}:{reserved_blocks}"),
+            TraceEvent::Preempt { victim, grower } => {
+                format!("{victim}:{grower}")
+            }
+            TraceEvent::PlannerGate { planner, skipped } => {
+                format!("{planner}:{skipped}")
+            }
+            TraceEvent::PressureBand { band, free } => {
+                format!("{band}:{free}")
+            }
+            TraceEvent::GpuSample { free, total } => {
+                format!("{free}:{total}")
+            }
+            TraceEvent::RouteDecision {
+                app_seq,
+                dst,
+                warmth_milli,
+                bias_milli,
+            } => format!("{app_seq}:{dst}:{warmth_milli}:{bias_milli}"),
+            TraceEvent::MigrationBatch { victims, blocks } => {
+                format!("{victims}:{blocks}")
+            }
+            TraceEvent::Autoscale {
+                action,
+                shard,
+                serving,
+            } => format!("{action}:{shard}:{serving}"),
+        };
+        format!("{head}:{tail}")
+    }
+
+    /// Inverse of [`Self::to_compact`]. `None` on any malformed field.
+    pub fn from_compact(s: &str) -> Option<TraceRecord> {
+        let mut it = s.split(':');
+        let mut next_u64 =
+            |it: &mut std::str::Split<'_, char>| -> Option<u64> {
+                it.next()?.parse().ok()
+            };
+        let code = next_u64(&mut it)?;
+        let at_us = next_u64(&mut it)?;
+        let seq = next_u64(&mut it)?;
+        let shard = u32::try_from(next_u64(&mut it)?).ok()?;
+        let ev = match code {
+            0 => TraceEvent::ReqState {
+                rid: next_u64(&mut it)?,
+                state: u8::try_from(next_u64(&mut it)?).ok()?,
+            },
+            1 => TraceEvent::TransferStart {
+                xfer: next_u64(&mut it)?,
+                rid: next_u64(&mut it)?,
+                kind: u8::try_from(next_u64(&mut it)?).ok()?,
+                d2h: next_u64(&mut it)? != 0,
+                blocks: u32::try_from(next_u64(&mut it)?).ok()?,
+                wire_us: next_u64(&mut it)?,
+            },
+            2 => TraceEvent::TransferEnd {
+                xfer: next_u64(&mut it)?,
+                rid: next_u64(&mut it)?,
+                d2h: next_u64(&mut it)? != 0,
+            },
+            3 => TraceEvent::Prefix {
+                key: next_u64(&mut it)?,
+                action: u8::try_from(next_u64(&mut it)?).ok()?,
+                blocks: u32::try_from(next_u64(&mut it)?).ok()?,
+            },
+            4 => TraceEvent::SpatialPlan {
+                types: u32::try_from(next_u64(&mut it)?).ok()?,
+                reserved_blocks: next_u64(&mut it)?,
+            },
+            5 => TraceEvent::Preempt {
+                victim: next_u64(&mut it)?,
+                grower: next_u64(&mut it)?,
+            },
+            6 => TraceEvent::PlannerGate {
+                planner: u8::try_from(next_u64(&mut it)?).ok()?,
+                skipped: next_u64(&mut it)?,
+            },
+            7 => TraceEvent::PressureBand {
+                band: u8::try_from(next_u64(&mut it)?).ok()?,
+                free: u32::try_from(next_u64(&mut it)?).ok()?,
+            },
+            8 => TraceEvent::GpuSample {
+                free: u32::try_from(next_u64(&mut it)?).ok()?,
+                total: u32::try_from(next_u64(&mut it)?).ok()?,
+            },
+            9 => TraceEvent::RouteDecision {
+                app_seq: u32::try_from(next_u64(&mut it)?).ok()?,
+                dst: u32::try_from(next_u64(&mut it)?).ok()?,
+                warmth_milli: it.next()?.parse().ok()?,
+                bias_milli: it.next()?.parse().ok()?,
+            },
+            10 => TraceEvent::MigrationBatch {
+                victims: u32::try_from(next_u64(&mut it)?).ok()?,
+                blocks: next_u64(&mut it)?,
+            },
+            11 => TraceEvent::Autoscale {
+                action: u8::try_from(next_u64(&mut it)?).ok()?,
+                shard: u32::try_from(next_u64(&mut it)?).ok()?,
+                serving: u32::try_from(next_u64(&mut it)?).ok()?,
+            },
+            _ => return None,
+        };
+        if it.next().is_some() {
+            return None; // trailing garbage
+        }
+        Some(TraceRecord {
+            at_us,
+            seq,
+            shard,
+            ev,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------
+// The sink
+// ---------------------------------------------------------------------
+
+/// Per-shard (or cluster control-plane) event sink. Lives on
+/// `ServeState` so every scheduler layer can emit without extra
+/// plumbing; the engine advances its clock stamp alongside the sim
+/// clock. Disabled sinks cost one branch per emit call.
+#[derive(Debug, Default)]
+pub struct TraceSink {
+    /// Full event capture on (`--trace` / `enable_trace`).
+    enabled: bool,
+    /// Flight recorder armed without full capture (`--assert-*` runs).
+    flight_armed: bool,
+    shard: u32,
+    now_us: u64,
+    next_seq: u64,
+    events: Vec<TraceRecord>,
+    flight: FlightRecorder,
+}
+
+impl TraceSink {
+    /// Turn on full event capture (implies the flight recorder).
+    pub fn enable(&mut self) {
+        self.enabled = true;
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Arm only the bounded flight recorder (cheap: fixed ring, no
+    /// growing event vec). Debug builds are always armed.
+    pub fn arm_flight(&mut self) {
+        self.flight_armed = true;
+    }
+
+    /// Which shard's timeline this sink records.
+    pub fn set_shard(&mut self, shard: u32) {
+        self.shard = shard;
+    }
+
+    /// Move the sink's clock stamp forward (engine loop, after every
+    /// sim-clock advance). Monotonic: stale calls are ignored.
+    #[inline]
+    pub fn advance(&mut self, now_us: u64) {
+        if now_us > self.now_us {
+            self.now_us = now_us;
+        }
+    }
+
+    /// Is any consumer listening? In release builds with tracing off
+    /// and the recorder unarmed this is one `bool` read — the whole
+    /// per-emit cost of the subsystem.
+    #[inline]
+    pub fn active(&self) -> bool {
+        self.enabled || self.flight_armed || cfg!(debug_assertions)
+    }
+
+    /// Everything captured so far, in emission order.
+    pub fn records(&self) -> &[TraceRecord] {
+        &self.events
+    }
+
+    /// Human-readable dump of the flight recorder's ring (newest-last).
+    pub fn flight_dump(&self) -> String {
+        self.flight.dump()
+    }
+
+    #[inline]
+    fn push(&mut self, ev: TraceEvent) {
+        let rec = TraceRecord {
+            at_us: self.now_us,
+            seq: self.next_seq,
+            shard: self.shard,
+            ev,
+        };
+        self.next_seq += 1;
+        self.flight.push(rec);
+        if self.enabled {
+            self.events.push(rec);
+        }
+    }
+
+    // -- named emit methods (the only construction sites) --------------
+
+    #[inline]
+    pub fn req_state(&mut self, rid: u64, state: u8) {
+        if !self.active() {
+            return;
+        }
+        self.push(TraceEvent::ReqState { rid, state });
+    }
+
+    #[inline]
+    pub fn transfer_start(
+        &mut self,
+        xfer: u64,
+        rid: u64,
+        kind: u8,
+        d2h: bool,
+        blocks: u32,
+        wire_us: u64,
+    ) {
+        if !self.active() {
+            return;
+        }
+        self.push(TraceEvent::TransferStart {
+            xfer,
+            rid,
+            kind,
+            d2h,
+            blocks,
+            wire_us,
+        });
+    }
+
+    #[inline]
+    pub fn transfer_end(&mut self, xfer: u64, rid: u64, d2h: bool) {
+        if !self.active() {
+            return;
+        }
+        self.push(TraceEvent::TransferEnd { xfer, rid, d2h });
+    }
+
+    #[inline]
+    pub fn prefix(&mut self, key: u64, action: u8, blocks: u32) {
+        if !self.active() {
+            return;
+        }
+        self.push(TraceEvent::Prefix {
+            key,
+            action,
+            blocks,
+        });
+    }
+
+    #[inline]
+    pub fn spatial_plan(&mut self, types: u32, reserved_blocks: u64) {
+        if !self.active() {
+            return;
+        }
+        self.push(TraceEvent::SpatialPlan {
+            types,
+            reserved_blocks,
+        });
+    }
+
+    #[inline]
+    pub fn preempt(&mut self, victim: u64, grower: u64) {
+        if !self.active() {
+            return;
+        }
+        self.push(TraceEvent::Preempt { victim, grower });
+    }
+
+    #[inline]
+    pub fn planner_gate(&mut self, planner: u8, skipped: u64) {
+        if !self.active() {
+            return;
+        }
+        self.push(TraceEvent::PlannerGate { planner, skipped });
+    }
+
+    #[inline]
+    pub fn pressure_band(&mut self, band: u8, free: u32) {
+        if !self.active() {
+            return;
+        }
+        self.push(TraceEvent::PressureBand { band, free });
+    }
+
+    #[inline]
+    pub fn gpu_sample(&mut self, free: u32, total: u32) {
+        if !self.active() {
+            return;
+        }
+        self.push(TraceEvent::GpuSample { free, total });
+    }
+
+    #[inline]
+    pub fn route(
+        &mut self,
+        app_seq: u32,
+        dst: u32,
+        warmth_milli: i64,
+        bias_milli: i64,
+    ) {
+        if !self.active() {
+            return;
+        }
+        self.push(TraceEvent::RouteDecision {
+            app_seq,
+            dst,
+            warmth_milli,
+            bias_milli,
+        });
+    }
+
+    #[inline]
+    pub fn migration_batch(&mut self, victims: u32, blocks: u64) {
+        if !self.active() {
+            return;
+        }
+        self.push(TraceEvent::MigrationBatch { victims, blocks });
+    }
+
+    #[inline]
+    pub fn autoscale(&mut self, action: u8, shard: u32, serving: u32) {
+        if !self.active() {
+            return;
+        }
+        self.push(TraceEvent::Autoscale {
+            action,
+            shard,
+            serving,
+        });
+    }
+}
+
+/// Merge per-sink streams into one deterministic timeline, stable-sorted
+/// by `(at_us, shard, seq)`. Within a sink `seq` orders same-instant
+/// events; across sinks the shard index breaks clock ties (the cluster
+/// control plane, [`CLUSTER_SHARD`], sorts last).
+pub fn merge_records(streams: &[&[TraceRecord]]) -> Vec<TraceRecord> {
+    let total = streams.iter().map(|s| s.len()).sum();
+    let mut all = Vec::with_capacity(total);
+    for s in streams {
+        all.extend_from_slice(s);
+    }
+    all.sort_by_key(|r| (r.at_us, r.shard, r.seq));
+    all
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn compact_encoding_round_trips_every_variant() {
+        let evs = [
+            TraceEvent::ReqState { rid: 7, state: state::RUNNING },
+            TraceEvent::TransferStart {
+                xfer: 3,
+                rid: 7,
+                kind: xfer::REQUEST,
+                d2h: true,
+                blocks: 12,
+                wire_us: 4_000,
+            },
+            TraceEvent::TransferEnd { xfer: 3, rid: 7, d2h: true },
+            TraceEvent::Prefix {
+                key: 0xFEED,
+                action: prefix::HIT_CPU,
+                blocks: 4,
+            },
+            TraceEvent::SpatialPlan { types: 3, reserved_blocks: 120 },
+            TraceEvent::Preempt { victim: 9, grower: 11 },
+            TraceEvent::PlannerGate {
+                planner: planner::TEMPORAL,
+                skipped: 41,
+            },
+            TraceEvent::PressureBand { band: 2, free: 55 },
+            TraceEvent::GpuSample { free: 100, total: 256 },
+            TraceEvent::RouteDecision {
+                app_seq: 5,
+                dst: 2,
+                warmth_milli: 750,
+                bias_milli: -150,
+            },
+            TraceEvent::MigrationBatch { victims: 3, blocks: 30 },
+            TraceEvent::Autoscale {
+                action: scale::RETIRE,
+                shard: 4,
+                serving: 2,
+            },
+        ];
+        for (i, ev) in evs.iter().enumerate() {
+            let rec = TraceRecord {
+                at_us: 1_000 + i as u64,
+                seq: i as u64,
+                shard: if i % 2 == 0 { 0 } else { CLUSTER_SHARD },
+                ev: *ev,
+            };
+            let back = TraceRecord::from_compact(&rec.to_compact())
+                .expect("round trip");
+            assert_eq!(back, rec, "variant {i} must round-trip");
+        }
+    }
+
+    #[test]
+    fn from_compact_rejects_malformed() {
+        assert!(TraceRecord::from_compact("").is_none());
+        assert!(TraceRecord::from_compact("99:0:0:0:1").is_none());
+        assert!(TraceRecord::from_compact("0:1:2:3:4:5:6").is_none());
+        assert!(TraceRecord::from_compact("0:x:2:3:4:5").is_none());
+    }
+
+    #[test]
+    fn disabled_sink_records_nothing_via_events() {
+        let mut s = TraceSink::default();
+        s.advance(10);
+        s.req_state(1, state::WAITING);
+        assert!(s.records().is_empty());
+    }
+
+    #[test]
+    fn enabled_sink_stamps_clock_and_seq() {
+        let mut s = TraceSink::default();
+        s.enable();
+        s.set_shard(3);
+        s.advance(100);
+        s.req_state(1, state::WAITING);
+        s.advance(250);
+        s.req_state(1, state::PREFILLING);
+        let r = s.records();
+        assert_eq!(r.len(), 2);
+        assert_eq!((r[0].at_us, r[0].seq, r[0].shard), (100, 0, 3));
+        assert_eq!((r[1].at_us, r[1].seq, r[1].shard), (250, 1, 3));
+    }
+
+    #[test]
+    fn merge_orders_by_time_then_shard_then_seq() {
+        let a = [
+            TraceRecord {
+                at_us: 10,
+                seq: 0,
+                shard: 1,
+                ev: TraceEvent::GpuSample { free: 1, total: 2 },
+            },
+            TraceRecord {
+                at_us: 20,
+                seq: 1,
+                shard: 1,
+                ev: TraceEvent::GpuSample { free: 1, total: 2 },
+            },
+        ];
+        let b = [
+            TraceRecord {
+                at_us: 10,
+                seq: 5,
+                shard: 0,
+                ev: TraceEvent::GpuSample { free: 3, total: 4 },
+            },
+            TraceRecord {
+                at_us: 10,
+                seq: 9,
+                shard: CLUSTER_SHARD,
+                ev: TraceEvent::MigrationBatch {
+                    victims: 1,
+                    blocks: 2,
+                },
+            },
+        ];
+        let m = merge_records(&[&a, &b]);
+        let order: Vec<(u64, u32, u64)> =
+            m.iter().map(|r| (r.at_us, r.shard, r.seq)).collect();
+        assert_eq!(
+            order,
+            vec![
+                (10, 0, 5),
+                (10, 1, 0),
+                (10, CLUSTER_SHARD, 9),
+                (20, 1, 1)
+            ]
+        );
+    }
+}

@@ -1,0 +1,200 @@
+//! Bounded flight recorder: the last N trace records, kept in a fixed
+//! ring so crash/assert paths always have recent context to dump.
+//!
+//! Armed whenever its sink is ([`super::TraceSink::active`]) — always in
+//! debug/test builds, and in release builds when tracing or an
+//! `--assert-*` CLI check is on. The ring never grows after its first
+//! fill, so arming it adds no steady-state allocation.
+
+use super::{planner, prefix, scale, state, xfer, TraceEvent, TraceRecord};
+
+/// Ring capacity: enough to cover several scheduling windows of context
+/// without mattering for memory (a record is a few dozen bytes).
+pub const FLIGHT_CAPACITY: usize = 256;
+
+/// Fixed-capacity ring of the most recent [`TraceRecord`]s.
+#[derive(Debug, Default)]
+pub struct FlightRecorder {
+    buf: Vec<TraceRecord>,
+    /// Next write slot once the ring is full.
+    head: usize,
+}
+
+impl FlightRecorder {
+    #[inline]
+    pub fn push(&mut self, rec: TraceRecord) {
+        if self.buf.len() < FLIGHT_CAPACITY {
+            // Fill phase: reserve the whole ring on first use so the
+            // steady state never reallocates.
+            if self.buf.is_empty() {
+                self.buf.reserve_exact(FLIGHT_CAPACITY);
+            }
+            self.buf.push(rec);
+        } else {
+            self.buf[self.head] = rec;
+            self.head = (self.head + 1) % FLIGHT_CAPACITY;
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Records oldest-first (the ring unrolled).
+    pub fn iter(&self) -> impl Iterator<Item = &TraceRecord> {
+        let (wrapped, fill) = self.buf.split_at(self.head);
+        fill.iter().chain(wrapped.iter())
+    }
+
+    /// Human-readable dump, oldest-first, one event per line — appended
+    /// to conservation-check failures and `--assert-*` CLI errors.
+    pub fn dump(&self) -> String {
+        if self.buf.is_empty() {
+            return "flight recorder: empty\n".to_string();
+        }
+        let mut out = format!(
+            "flight recorder: last {} events (oldest first)\n",
+            self.buf.len()
+        );
+        for r in self.iter() {
+            out.push_str(&format_record(r));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// One-line human rendering of a record (flight dumps; the exporter has
+/// its own JSON rendering).
+pub fn format_record(r: &TraceRecord) -> String {
+    let shard = if r.shard == super::CLUSTER_SHARD {
+        "cluster".to_string()
+    } else {
+        format!("shard{}", r.shard)
+    };
+    let body = match r.ev {
+        TraceEvent::ReqState { rid, state: s } => format!(
+            "req {rid} -> {}",
+            state::NAMES.get(s as usize).copied().unwrap_or("?")
+        ),
+        TraceEvent::TransferStart {
+            xfer: id,
+            rid,
+            kind,
+            d2h,
+            blocks,
+            wire_us,
+        } => format!(
+            "xfer {id} start {} req={rid} kind={} blocks={blocks} \
+             wire={wire_us}us",
+            if d2h { "D2H" } else { "H2D" },
+            xfer::NAMES.get(kind as usize).copied().unwrap_or("?"),
+        ),
+        TraceEvent::TransferEnd { xfer: id, rid, d2h } => format!(
+            "xfer {id} end {} req={rid}",
+            if d2h { "D2H" } else { "H2D" }
+        ),
+        TraceEvent::Prefix {
+            key,
+            action,
+            blocks,
+        } => format!(
+            "prefix {key:#x} {} blocks={blocks}",
+            prefix::NAMES.get(action as usize).copied().unwrap_or("?")
+        ),
+        TraceEvent::SpatialPlan {
+            types,
+            reserved_blocks,
+        } => format!(
+            "spatial plan types={types} reserved={reserved_blocks}"
+        ),
+        TraceEvent::Preempt { victim, grower } => {
+            format!("preempt victim={victim} grower={grower}")
+        }
+        TraceEvent::PlannerGate { planner: p, skipped } => format!(
+            "{} planner ran (skipped {skipped})",
+            planner::NAMES.get(p as usize).copied().unwrap_or("?")
+        ),
+        TraceEvent::PressureBand { band, free } => {
+            format!("pressure band={band} free={free}")
+        }
+        TraceEvent::GpuSample { free, total } => {
+            format!("gpu free={free}/{total}")
+        }
+        TraceEvent::RouteDecision {
+            app_seq,
+            dst,
+            warmth_milli,
+            bias_milli,
+        } => format!(
+            "route app#{app_seq} -> shard{dst} \
+             warmth={warmth_milli}m bias={bias_milli}m"
+        ),
+        TraceEvent::MigrationBatch { victims, blocks } => {
+            format!("migration batch victims={victims} blocks={blocks}")
+        }
+        TraceEvent::Autoscale {
+            action,
+            shard: s,
+            serving,
+        } => format!(
+            "autoscale {} shard{s} serving={serving}",
+            scale::NAMES.get(action as usize).copied().unwrap_or("?")
+        ),
+    };
+    format!("  [{:>12}us {shard} #{}] {body}", r.at_us, r.seq)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(seq: u64) -> TraceRecord {
+        TraceRecord {
+            at_us: seq * 10,
+            seq,
+            shard: 0,
+            ev: TraceEvent::GpuSample {
+                free: seq as u32,
+                total: 100,
+            },
+        }
+    }
+
+    #[test]
+    fn ring_keeps_only_the_newest_capacity_records() {
+        let mut f = FlightRecorder::default();
+        let n = FLIGHT_CAPACITY as u64 + 17;
+        for i in 0..n {
+            f.push(rec(i));
+        }
+        assert_eq!(f.len(), FLIGHT_CAPACITY);
+        let seqs: Vec<u64> = f.iter().map(|r| r.seq).collect();
+        // Oldest-first, contiguous, ending at the last pushed seq.
+        assert_eq!(seqs[0], n - FLIGHT_CAPACITY as u64);
+        assert_eq!(*seqs.last().unwrap(), n - 1);
+        assert!(seqs.windows(2).all(|w| w[1] == w[0] + 1));
+    }
+
+    #[test]
+    fn dump_is_oldest_first_and_mentions_every_event() {
+        let mut f = FlightRecorder::default();
+        for i in 0..3 {
+            f.push(rec(i));
+        }
+        let d = f.dump();
+        assert!(d.contains("last 3 events"));
+        let p0 = d.find("#0").unwrap();
+        let p2 = d.find("#2").unwrap();
+        assert!(p0 < p2);
+    }
+
+    #[test]
+    fn empty_dump_says_so() {
+        assert!(FlightRecorder::default().dump().contains("empty"));
+    }
+}

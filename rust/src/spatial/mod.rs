@@ -20,6 +20,7 @@ use crate::kvcache::{
     AgentTypeId, AllocOutcome, Direction, PrefixBacking, PrefixKey,
     PrefixLocation, Route, TransferKind,
 };
+use crate::obs;
 
 /// Algorithm 2: periodically re-evaluate ρ, the critical set, and the
 /// per-type quota distribution. No-op until the adjustment window
@@ -52,6 +53,7 @@ pub fn maybe_update_reservations(st: &mut ServeState, now_us: u64) {
     st.planned.spatial = st.epochs.spatial;
     st.planned.pressure = st.epochs.pressure;
     st.metrics.counters.spatial_plans += 1;
+    st.trace_planner_run(obs::planner::SPATIAL);
     update_reservations(st);
 }
 
@@ -76,6 +78,7 @@ pub fn update_reservations(st: &mut ServeState) {
     if scores.is_empty() {
         st.spatial.critical_types.clear();
         st.gpu.set_quotas(&[]);
+        st.trace.spatial_plan(0, 0);
         return;
     }
     let mut ranked: Vec<(AgentTypeId, f64, u32)> = scores
@@ -106,6 +109,10 @@ pub fn update_reservations(st: &mut ServeState) {
         }
     }
     st.gpu.set_quotas(&plan);
+    st.trace.spatial_plan(
+        plan.len() as u32,
+        plan.iter().map(|&(_, q)| q as u64).sum(),
+    );
 }
 
 /// Admission route for a request under the current mode + critical set.
@@ -282,8 +289,10 @@ pub fn admit(st: &mut ServeState, now_us: u64) {
                     r.blocks.absorb(blocks);
                     r.reserved_charged += reserved_charged;
                     r.pulled = false;
-                    r.wait_time_us +=
+                    let waited =
                         now_us.saturating_sub(r.queue_enter_us);
+                    r.wait_time_us += waited;
+                    st.metrics.queue_hist.record(waited);
                 }
                 // Prefix-cache lookup, applied only once the blocks are
                 // granted: a CPU/remote hit issues the H2D debt into the
@@ -306,6 +315,21 @@ pub fn admit(st: &mut ServeState, now_us: u64) {
                     ReqState::Prefilling => st.prefilling.push(rid),
                     _ => st.running.push(rid),
                 }
+                // Trace the granted state. A request admitted with a
+                // pending prefix fetch is not decoding yet (the engine
+                // gates on `prefix_xfer`), so it traces as prefilling
+                // even when its prefill debt is already zero — the
+                // auditor's "no decode while a prefix fetch is pending"
+                // invariant reads this event literally.
+                let granted = st.reqs[&rid].state;
+                let code = if granted == ReqState::Running
+                    && st.reqs[&rid].prefix_xfer.is_some()
+                {
+                    obs::state::PREFILLING
+                } else {
+                    crate::coordination::state_code(granted)
+                };
+                st.trace.req_state(rid.0, code);
                 st.epochs.spatial += 1; // per-type residency shifted
                 admitted.push(rid);
                 slots -= 1;
@@ -385,10 +409,16 @@ fn maybe_apply_prefix_cache(
     match hit.location {
         PrefixLocation::Gpu => {
             st.metrics.counters.prefix_hits_gpu += 1;
+            st.trace.prefix(
+                key.0,
+                obs::prefix::HIT_GPU,
+                st.cfg.profile.blocks_for_tokens(saved),
+            );
         }
         PrefixLocation::Cpu | PrefixLocation::Remote => {
             if hit.location == PrefixLocation::Cpu {
                 st.metrics.counters.prefix_hits_cpu += 1;
+                st.trace.prefix(key.0, obs::prefix::HIT_CPU, 0);
             } else {
                 st.metrics.counters.prefix_hits_remote += 1;
                 st.push_prefix_event(PrefixEvent::RemoteHit { key });
@@ -420,6 +450,14 @@ fn maybe_apply_prefix_cache(
                 Vec::new(),
                 now_us,
                 completes,
+            );
+            st.trace.transfer_start(
+                xfer.0,
+                rid.0,
+                obs::xfer::PREFIX_HIT,
+                false,
+                nb,
+                cost,
             );
             if pinned {
                 st.prefix.pin(key);
@@ -516,6 +554,14 @@ pub fn reclaim_prefix_gpu(
                     Vec::new(),
                     now_us,
                     completes,
+                );
+                st.trace.transfer_start(
+                    xfer.0,
+                    u64::MAX,
+                    obs::xfer::PREFIX_EVICT,
+                    true,
+                    blocks,
+                    completes - now_us,
                 );
                 st.outbox.push(Action::TransferIssued {
                     xfer,

@@ -27,6 +27,7 @@ use crate::coordination::{
     Action, FcRt, PressureSnapshot, ReqState, RequestId, ServeState,
 };
 use crate::kvcache::{Direction, TransferId, TransferKind};
+use crate::obs;
 
 /// What the engine should do after a `call_finish` event.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -162,6 +163,7 @@ pub fn maybe_run_phase(st: &mut ServeState, now_us: u64) -> bool {
         return false;
     }
     st.metrics.counters.planner_runs += 1;
+    st.trace_planner_run(obs::planner::TEMPORAL);
     let snap = st.snapshot();
     let progressed = run_phase(st, &snap, now_us);
     // The plan consumed everything up to and including its own
@@ -307,6 +309,14 @@ pub fn issue_offload(
         now_us,
         completes,
     );
+    st.trace.transfer_start(
+        xfer.0,
+        rid.0,
+        obs::xfer::REQUEST,
+        true,
+        n,
+        completes - now_us,
+    );
     st.metrics.offload_count += 1;
     st.outbox.push(Action::TransferIssued {
         xfer,
@@ -326,6 +336,14 @@ pub fn on_transfer_done(
     // blocks) — the batched planner's partial batches resume on it.
     st.epochs.temporal += 1;
     let t = st.ledger.complete(xfer)?;
+    st.metrics
+        .wire_hist
+        .record(t.completes_us.saturating_sub(t.issued_us));
+    st.trace.transfer_end(
+        xfer.0,
+        t.req_id,
+        matches!(t.dir, Direction::D2H),
+    );
     match t.kind {
         TransferKind::Request => {}
         TransferKind::PrefixEvict { .. } => {

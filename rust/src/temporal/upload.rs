@@ -236,6 +236,14 @@ pub fn issue_upload(st: &mut ServeState, rid: RequestId, now_us: u64) {
         now_us,
         completes,
     );
+    st.trace.transfer_start(
+        xfer.0,
+        rid.0,
+        crate::obs::xfer::REQUEST,
+        false,
+        n,
+        completes - now_us,
+    );
     st.metrics.upload_count += 1;
     st.outbox.push(Action::TransferIssued {
         xfer,

@@ -139,6 +139,72 @@ fn autoscale_digest_byte_identical_across_runs() {
     assert_ne!(a, c, "different seeds should diverge");
 }
 
+// ---------------------------------------------------------------------
+// Trace determinism (the obs-layer contract)
+// ---------------------------------------------------------------------
+
+fn engine_trace(seed: u64) -> String {
+    let cfg = ServeConfig::default()
+        .with_mode(Mode::TokenCake)
+        .with_seed(seed)
+        .with_gpu_mem_frac(0.05);
+    let g = templates::code_writer();
+    let spec = WorkloadSpec::poisson(&g, 1.0, 10)
+        .with_dataset(Dataset::D1)
+        .with_tool_noise(0.25);
+    let mut eng = SimEngine::new(cfg);
+    eng.enable_trace();
+    eng.run_workload(&spec);
+    eng.export_trace()
+}
+
+fn cluster_trace(shards: usize, seed: u64) -> String {
+    let serve = ServeConfig::default()
+        .with_mode(Mode::TokenCake)
+        .with_seed(seed)
+        .with_gpu_mem_frac(0.05);
+    let cfg = ClusterConfig::default()
+        .with_serve(serve)
+        .with_shards(shards)
+        .with_placement(PlacementPolicy::AgentAffinity);
+    let w = ClusterWorkload::mixed(
+        &[
+            (templates::code_writer(), 2.0),
+            (templates::deep_research(), 1.0),
+        ],
+        2.0,
+        16,
+    )
+    .with_dataset(Dataset::D1)
+    .with_tool_noise(0.25);
+    let mut eng = ClusterEngine::new(cfg);
+    eng.enable_trace();
+    eng.run(&w);
+    eng.export_trace()
+}
+
+/// The exported trace document is part of the determinism contract:
+/// same seed + config ⇒ byte-identical JSON, single-worker and at every
+/// cluster shard scale. (Records are integer-only and the merge is a
+/// total order on `(at_us, shard, seq)`, so nothing float- or
+/// hash-ordered can leak in.)
+#[test]
+fn trace_export_byte_identical_across_runs() {
+    let a = engine_trace(41);
+    let b = engine_trace(41);
+    assert_eq!(a, b, "engine trace must be byte-identical");
+    assert_ne!(a, engine_trace(42), "different seeds should diverge");
+
+    for shards in [1usize, 2, 4] {
+        let a = cluster_trace(shards, 42);
+        let b = cluster_trace(shards, 42);
+        assert_eq!(
+            a, b,
+            "{shards}-shard cluster trace must be byte-identical"
+        );
+    }
+}
+
 /// The epoch gate is live on real workloads (the digest lines pin its
 /// exact run/skip counts across reruns and shard scales — see the
 /// cluster digest tests above): on a pressured mixed run, steady-state

@@ -1,0 +1,131 @@
+//! Obs-layer integration tests: the trace auditor must pass on real
+//! engine and cluster runs (1/2/4 shards), fail on a corrupted
+//! timeline, and the Chrome export must round-trip losslessly through
+//! its own parser.
+
+use tokencake::cluster::ClusterEngine;
+use tokencake::config::{
+    ClusterConfig, Mode, PlacementPolicy, ServeConfig,
+};
+use tokencake::engine::sim::SimEngine;
+use tokencake::graph::templates;
+use tokencake::obs::export::parse_chrome_trace;
+use tokencake::obs::{export_chrome_trace, TraceAuditor};
+use tokencake::workload::{ClusterWorkload, Dataset, WorkloadSpec};
+
+/// Tight memory so offloads, preemptions, and prefix traffic all fire.
+fn engine_run_trace(seed: u64) -> String {
+    let cfg = ServeConfig::default()
+        .with_mode(Mode::TokenCake)
+        .with_seed(seed)
+        .with_gpu_mem_frac(0.05);
+    let g = templates::code_writer();
+    let spec = WorkloadSpec::poisson(&g, 1.0, 10)
+        .with_dataset(Dataset::D1)
+        .with_tool_noise(0.25);
+    let mut eng = SimEngine::new(cfg);
+    eng.enable_trace();
+    let rep = eng.run_workload(&spec);
+    assert!(!rep.truncated);
+    eng.export_trace()
+}
+
+fn cluster_run_trace(shards: usize, seed: u64) -> String {
+    let serve = ServeConfig::default()
+        .with_mode(Mode::TokenCake)
+        .with_seed(seed)
+        .with_gpu_mem_frac(0.05);
+    let cfg = ClusterConfig::default()
+        .with_serve(serve)
+        .with_shards(shards)
+        .with_placement(PlacementPolicy::AgentAffinity);
+    let w = ClusterWorkload::mixed(
+        &[
+            (templates::code_writer(), 2.0),
+            (templates::deep_research(), 1.0),
+        ],
+        2.0,
+        16,
+    )
+    .with_dataset(Dataset::D1)
+    .with_tool_noise(0.25);
+    let mut eng = ClusterEngine::new(cfg);
+    eng.enable_trace();
+    let rep = eng.run(&w);
+    assert!(!rep.truncated);
+    eng.export_trace()
+}
+
+/// A real single-worker run satisfies every ordering invariant, and the
+/// audit actually covered work (requests finished, transfers paired).
+#[test]
+fn auditor_passes_single_worker_run() {
+    let doc = engine_run_trace(41);
+    let s = TraceAuditor::audit_chrome_trace(&doc)
+        .expect("clean run must audit clean");
+    assert!(s.records > 0);
+    assert_eq!(s.shards, 1);
+    assert!(s.finished_requests > 0, "no request span ever closed");
+    assert!(s.transfers > 0, "tight memory should force transfers");
+}
+
+/// Cluster runs at 1/2/4 shards (migration + prefix directory in play)
+/// audit clean too — the CI trace smoke in test form.
+#[test]
+fn auditor_passes_cluster_runs() {
+    for shards in [1usize, 2, 4] {
+        let doc = cluster_run_trace(shards, 42);
+        let s = TraceAuditor::audit_chrome_trace(&doc)
+            .unwrap_or_else(|e| {
+                panic!("{shards}-shard trace failed audit: {e}")
+            });
+        assert!(s.records > 0, "{shards}-shard trace is empty");
+        assert!(s.finished_requests > 0);
+    }
+}
+
+/// Negative test: the auditor must actually reject a bad timeline. A
+/// duplicated record re-uses a sequence number on its shard, violating
+/// the strictly-increasing-seq clock invariant.
+#[test]
+fn auditor_rejects_corrupted_trace() {
+    let doc = cluster_run_trace(2, 42);
+    let mut records =
+        parse_chrome_trace(&doc).expect("export must parse");
+    assert!(!records.is_empty());
+    records.push(records[0]);
+    let err = TraceAuditor::audit(&records)
+        .expect_err("duplicate seq must fail the audit");
+    assert!(
+        err.message.contains("seq"),
+        "unexpected failure mode: {err}"
+    );
+}
+
+/// The exporter and its parser are inverses on real traces: parse the
+/// document back to records, re-export, and the bytes match. (Derived
+/// lines — process metadata, counter tracks — are regenerated, which
+/// only works if nothing lossy hides in the embedded records.)
+#[test]
+fn chrome_export_round_trips_losslessly() {
+    let doc = cluster_run_trace(2, 42);
+    let records = parse_chrome_trace(&doc).expect("export must parse");
+    assert_eq!(export_chrome_trace(&records), doc);
+}
+
+/// With tracing never enabled, a run records nothing: the export holds
+/// no events (zero-capture is the default, not a filtered view).
+#[test]
+fn disabled_sink_records_nothing() {
+    let cfg = ServeConfig::default()
+        .with_mode(Mode::TokenCake)
+        .with_seed(41)
+        .with_gpu_mem_frac(0.05);
+    let g = templates::code_writer();
+    let spec = WorkloadSpec::poisson(&g, 1.0, 5).with_dataset(Dataset::D1);
+    let mut eng = SimEngine::new(cfg);
+    eng.run_workload(&spec);
+    let records = parse_chrome_trace(&eng.export_trace())
+        .expect("empty export must still parse");
+    assert!(records.is_empty());
+}

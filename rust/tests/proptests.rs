@@ -13,6 +13,7 @@ use tokencake::kvcache::{
     AllocOutcome, BlockSet, CpuBlockPool, GpuPool, PrefixBacking,
     PrefixIndex, PrefixKey, Route,
 };
+use tokencake::metrics::{LatencyRecorder, MetricsBundle};
 use tokencake::sim::Rng;
 use tokencake::workload::{Dataset, WorkloadSpec};
 
@@ -893,5 +894,117 @@ fn prop_multi_gpu_lockstep_conservation() {
             let held: u32 = live.iter().map(|a| a.len()).sum();
             assert_eq!(f0 + held, per_dev, "conservation seed {seed}");
         }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Metric aggregation is order-insensitive (cluster rollup contract)
+// ---------------------------------------------------------------------
+
+/// Shards report in whatever order the reducer visits them; the
+/// aggregate digest must not depend on it. These build random per-shard
+/// bundles and absorb them under different permutations.
+fn random_bundle(rng: &mut Rng) -> MetricsBundle {
+    let mut m = MetricsBundle::default();
+    for _ in 0..rng.range_u64(0, 40) {
+        m.latency.record_us(rng.range_u64(0, 5_000_000));
+    }
+    for _ in 0..rng.range_u64(0, 40) {
+        m.request_latency.record_us(rng.range_u64(0, 2_000_000));
+    }
+    for _ in 0..rng.range_u64(0, 60) {
+        m.stall_hist.record(rng.range_u64(0, 10_000_000));
+    }
+    for _ in 0..rng.range_u64(0, 60) {
+        m.wire_hist.record(rng.range_u64(0, 500_000));
+    }
+    for _ in 0..rng.range_u64(0, 60) {
+        m.queue_hist.record(rng.range_u64(0, 1_000_000));
+    }
+    m.counters.preemptions = rng.range_u64(0, 100);
+    m.counters.recomputes = rng.range_u64(0, 100);
+    m.counters.prefix_hits_gpu = rng.range_u64(0, 1000);
+    m.counters.prefix_lookups = rng.range_u64(0, 2000);
+    m.counters.planner_runs = rng.range_u64(0, 500);
+    m.counters.planner_skips = rng.range_u64(0, 5000);
+    m.swap_volume_blocks = rng.range_u64(0, 10_000);
+    m.offload_count = rng.range_u64(0, 200);
+    m.upload_count = rng.range_u64(0, 200);
+    m.apps_completed = rng.range_u64(0, 50);
+    m.makespan_us = rng.range_u64(0, 600_000_000);
+    m
+}
+
+#[test]
+fn prop_metrics_absorb_is_order_insensitive() {
+    for seed in 0..200u64 {
+        let mut rng = Rng::new(seed + 901);
+        let n = rng.range_u64(2, 7) as usize;
+        let bundles: Vec<MetricsBundle> =
+            (0..n).map(|_| random_bundle(&mut rng)).collect();
+
+        // Identity order vs a Fisher–Yates shuffle of the same bundles.
+        let mut perm: Vec<usize> = (0..n).collect();
+        for i in (1..n).rev() {
+            let j = rng.range_u64(0, i as u64 + 1) as usize;
+            perm.swap(i, j);
+        }
+        let mut fwd = MetricsBundle::default();
+        for b in &bundles {
+            fwd.absorb(b);
+        }
+        let mut shuf = MetricsBundle::default();
+        for &i in &perm {
+            shuf.absorb(&bundles[i]);
+        }
+        // digest_line covers counters, volumes, latency sums and
+        // percentiles, and all three histogram triplets.
+        assert_eq!(
+            fwd.digest_line("agg"),
+            shuf.digest_line("agg"),
+            "absorb order changed the aggregate at seed {seed} \
+             (perm {perm:?})"
+        );
+        assert!(
+            (fwd.throughput() - shuf.throughput()).abs() < 1e-12,
+            "seed {seed}"
+        );
+    }
+}
+
+/// The latency recorder specifically: merge order must not leak into
+/// any query — percentiles answer from a sorted view, sums and counts
+/// are permutation-invariant by construction.
+#[test]
+fn prop_latency_merge_is_order_insensitive() {
+    for seed in 0..200u64 {
+        let mut rng = Rng::new(seed + 1201);
+        let n = rng.range_u64(2, 6) as usize;
+        let parts: Vec<LatencyRecorder> = (0..n)
+            .map(|_| {
+                let mut r = LatencyRecorder::new();
+                for _ in 0..rng.range_u64(0, 50) {
+                    r.record_us(rng.range_u64(0, 3_000_000));
+                }
+                r
+            })
+            .collect();
+        let mut fwd = LatencyRecorder::new();
+        for p in &parts {
+            fwd.merge(p);
+        }
+        let mut rev = LatencyRecorder::new();
+        for p in parts.iter().rev() {
+            rev.merge(p);
+        }
+        let ps = [50.0, 90.0, 99.0, 99.9];
+        assert_eq!(
+            fwd.percentiles_us(ps),
+            rev.percentiles_us(ps),
+            "seed {seed}"
+        );
+        assert_eq!(fwd.total_us(), rev.total_us(), "seed {seed}");
+        assert_eq!(fwd.len(), rev.len(), "seed {seed}");
+        assert_eq!(fwd.max_us(), rev.max_us(), "seed {seed}");
     }
 }
