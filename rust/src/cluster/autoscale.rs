@@ -395,6 +395,25 @@ impl Autoscaler {
         self.stats.drained_prefix_dropped_blocks += blocks as u64;
     }
 
+    /// A shard crashed out from under the controller (see
+    /// `super::faults`). The capacity hole is *un-drained*: no
+    /// quiescence check applies — the lost blocks are the crash-loss
+    /// ledger's to account — so the shard returns to `Cold`, and the
+    /// normal grow path can regrow it through warm-up. Deliberately
+    /// not `Retired`: retirement asserts conservation, a crash asserts
+    /// loss. The anti-flap cooldown is cleared (a crash is not a
+    /// controller decision) and the next evaluation is woken so the
+    /// concentrated survivor load is seen immediately.
+    pub(super) fn note_crash(&mut self, i: usize, now: u64) {
+        if self.phase[i] == ShardPhase::Cold {
+            return;
+        }
+        self.phase[i] = ShardPhase::Cold;
+        self.retired_at_us[i] = None;
+        self.saw_arrival = true;
+        self.cooldown_until_us = now;
+    }
+
     /// Lifetime-aware placement bias for one arriving application:
     /// penalize young active shards (the next drain victims) in
     /// proportion to the app's predicted KV lifetime. All-zero when the

@@ -36,7 +36,7 @@ use crate::coordination::{
 use crate::engine::sim::{OrphanedToolFinish, SimEngine};
 use crate::graph::NodeKind;
 use crate::kvcache::{
-    AllocOutcome, Direction, PrefixKey, Route, TransferId,
+    AllocOutcome, Direction, PrefixBacking, PrefixKey, Route, TransferId,
 };
 use crate::metrics::MetricsBundle;
 use crate::obs::{self, TraceSink};
@@ -45,6 +45,7 @@ use crate::temporal;
 use crate::workload::{ClusterWorkload, ToolSim};
 
 use super::autoscale::{self, Autoscaler};
+use super::faults::{self, FaultPlan, FaultState};
 use super::prefix_dir::{self, PrefixDir};
 use super::router::Router;
 
@@ -128,6 +129,31 @@ pub struct ClusterReport {
     /// from the same per-window interconnect budget as migration).
     pub prefix_replications: u64,
     pub prefix_replicated_blocks: u64,
+    /// Fault injection (`cluster::faults`): crash count and the
+    /// accounted-loss ledger. All zero for a fault-free run.
+    pub faults_enabled: bool,
+    pub crashes: u64,
+    /// Request KV blocks wiped at crash instants (GPU + CPU tiers).
+    pub crash_lost_app_blocks: u64,
+    /// Prefix blocks purged from dead shards, and the subset whose
+    /// last copy died with the shard (no surviving replica).
+    pub crash_lost_prefix_blocks: u64,
+    pub crash_sole_prefix_blocks: u64,
+    /// Mid-wire migration payloads dropped by a destination crash —
+    /// the crash-loss term of the migration conservation equation.
+    pub crash_lost_wire_blocks: u64,
+    /// Prefix replicas discarded because their destination crashed
+    /// while the copy was on the wire.
+    pub crash_replica_drop_blocks: u64,
+    /// Applications re-queued through the router by crash recovery,
+    /// and the re-prefill tokens that charged on their new homes.
+    pub crash_requeued_apps: u64,
+    pub crash_requeued_tokens: u64,
+    /// End-of-run settlement accounting: queued transfers that landed
+    /// vs. were re-accounted as dropped when the workload completed
+    /// with copies still on the wire.
+    pub settle_landed_transfers: u64,
+    pub settle_dropped_transfers: u64,
     /// Elastic autoscaling (all zero / trivial for a fixed fleet):
     /// scale events, drain outcomes, and the shard-lifetime histogram.
     pub autoscale_enabled: bool,
@@ -211,6 +237,14 @@ impl ClusterReport {
         } else {
             String::new()
         };
+        let fault = if self.faults_enabled {
+            format!(
+                " crashes={} requeued={}",
+                self.crashes, self.crash_requeued_apps,
+            )
+        } else {
+            String::new()
+        };
         // Elastic runs show serving/provisioned: "x2/8" is a fleet
         // that ended with 2 of 8 provisioned shards serving.
         let shards_str = if self.autoscale_enabled {
@@ -222,7 +256,7 @@ impl ClusterReport {
             "[cluster x{} {}] apps={} avg={:.1}s p99={:.1}s total={:.1}s \
              thpt={:.4}req/s eff_util={:.1}% migrations={} \
              migrated_blocks={} drops={} batches={} pfx_remote_hits={} \
-             pfx_repl={} planner={}/{}steps{scale}",
+             pfx_repl={} planner={}/{}steps{scale}{fault}",
             shards_str,
             self.policy,
             self.aggregate.apps_completed,
@@ -311,6 +345,24 @@ impl ClusterReport {
             self.drained_prefix_dropped_blocks,
             lifetimes.join(";"),
         ));
+        // Crash losses and settle accounting are scheduler decisions
+        // too: seeded fault plans must replay byte-identically.
+        out.push_str(&format!(
+            "faults={} crashes={} crash_app={} crash_pfx={} \
+             crash_sole={} crash_wire={} crash_repl={} requeued={} \
+             requeue_tokens={} settle_landed={} settle_dropped={}\n",
+            self.faults_enabled,
+            self.crashes,
+            self.crash_lost_app_blocks,
+            self.crash_lost_prefix_blocks,
+            self.crash_sole_prefix_blocks,
+            self.crash_lost_wire_blocks,
+            self.crash_replica_drop_blocks,
+            self.crash_requeued_apps,
+            self.crash_requeued_tokens,
+            self.settle_landed_transfers,
+            self.settle_dropped_transfers,
+        ));
         for (i, m) in self.shards.iter().enumerate() {
             out.push_str(&m.digest_line(&format!("shard{i}")));
         }
@@ -352,6 +404,18 @@ pub struct ClusterEngine {
     prefix_replicated_blocks: u64,
     /// Elastic autoscaling control plane (None = fixed fleet).
     autoscale: Option<Autoscaler>,
+    /// Fault-injection control plane (None = fault-free run).
+    faults: Option<FaultState>,
+    /// `crashed[i]` — shard `i` is down: crash applied, capacity not
+    /// yet regrown through warm-up. Lives directly on the engine (not
+    /// in [`FaultState`]) so the lifecycle predicates stay correct
+    /// while the fault state is temporarily taken out during a tick.
+    pub(super) crashed: Vec<bool>,
+    /// End-of-run settlement pass in progress (gates the landed vs.
+    /// re-accounted transfer counters the report surfaces).
+    settling: bool,
+    settle_landed_transfers: u64,
+    settle_dropped_transfers: u64,
     /// Warm-ups in flight: `(ready_at_us, shard)`. Deliberately NOT on
     /// the event queue: a pending warm-up must never mask the
     /// fully-idle rescue path, and the clock advances to a warm-up
@@ -425,6 +489,16 @@ impl ClusterEngine {
         } else {
             None
         };
+        let faults = if cfg.faults.enabled {
+            cfg.faults.validate();
+            Some(FaultState::new(FaultPlan::build(
+                &cfg.faults,
+                n,
+                seed,
+            )))
+        } else {
+            None
+        };
         let mut router = Router::new(
             cfg.placement,
             n,
@@ -439,6 +513,11 @@ impl ClusterEngine {
         Self {
             router,
             autoscale,
+            faults,
+            crashed: vec![false; n],
+            settling: false,
+            settle_landed_transfers: 0,
+            settle_dropped_transfers: 0,
             shards,
             clock: Clock::new(),
             events: EventQueue::new(),
@@ -523,31 +602,43 @@ impl ClusterEngine {
     // Shard lifecycle (trivial for a fixed fleet)
     // ------------------------------------------------------------------
 
-    /// May the router place new applications on shard `i`?
+    /// May the router place new applications on shard `i`? Never a
+    /// crashed shard — until its capacity regrows through warm-up it
+    /// receives neither arrivals nor replicas nor migration victims.
     pub(super) fn is_placeable(&self, i: usize) -> bool {
-        self.autoscale
-            .as_ref()
-            .map(|a| a.is_placeable(i))
-            .unwrap_or(true)
+        !self.crashed[i]
+            && self
+                .autoscale
+                .as_ref()
+                .map(|a| a.is_placeable(i))
+                .unwrap_or(true)
     }
 
     /// Does shard `i` participate in event/clock advancement? (Active,
-    /// draining, or warming; cold and retired shards are skipped.)
+    /// draining, or warming; cold and retired shards are skipped.) A
+    /// crashed shard stays runnable: tool finishes for its re-queued
+    /// apps still fire from its local queue and must orphan-forward
+    /// to their new homes.
     fn is_runnable(&self, i: usize) -> bool {
-        self.autoscale
-            .as_ref()
-            .map(|a| a.is_runnable(i))
-            .unwrap_or(true)
+        self.crashed[i]
+            || self
+                .autoscale
+                .as_ref()
+                .map(|a| a.is_runnable(i))
+                .unwrap_or(true)
     }
 
     /// Does shard `i` run scheduling steps and iterations? (Active or
     /// draining — a warming shard's clock advances but it serves
-    /// nothing until the warm-up completes.)
-    fn is_steppable(&self, i: usize) -> bool {
-        self.autoscale
-            .as_ref()
-            .map(|a| a.is_steppable(i))
-            .unwrap_or(true)
+    /// nothing until the warm-up completes, and a crashed shard serves
+    /// nothing until regrown.)
+    pub(super) fn is_steppable(&self, i: usize) -> bool {
+        !self.crashed[i]
+            && self
+                .autoscale
+                .as_ref()
+                .map(|a| a.is_steppable(i))
+                .unwrap_or(true)
     }
 
     /// Is any in-flight cross-worker migration sourced from or landing
@@ -672,6 +763,10 @@ impl ClusterEngine {
     /// The clock stays at the completion time. Truncated runs skip
     /// this: their queues legitimately still hold live work.
     fn settle_in_flight(&mut self) {
+        // Landings during this pass are settle accounting: the report
+        // separates transfers that landed at settle from those
+        // re-accounted as dropped.
+        self.settling = true;
         while let Some(ev) = self.events.pop() {
             match ev.payload {
                 // Impossible at normal completion (an undelivered
@@ -696,6 +791,7 @@ impl ClusterEngine {
             }
         }
         self.sync_prefix_dir();
+        self.settling = false;
     }
 
     /// Activate every shard whose modeled warm-up has elapsed: it joins
@@ -718,6 +814,18 @@ impl ClusterEngine {
                             shard as u32,
                             serving,
                         );
+                        // A crashed shard regrows through this same
+                        // warm-up path: warm capacity on that index
+                        // means the crash hole is filled.
+                        if self.crashed[shard] {
+                            self.crashed[shard] = false;
+                            self.trace.fault(
+                                obs::fault::RECOVER,
+                                shard as u32,
+                                u32::MAX,
+                                0,
+                            );
+                        }
                     }
                 }
             } else {
@@ -773,6 +881,22 @@ impl ClusterEngine {
                     st.prefix.resident_cpu_blocks()
                 ));
             }
+            // A crashed, not-yet-regrown shard must be completely
+            // quiesced: every block free, nothing prefix-resident —
+            // everything it held is in the crash-loss ledger, not
+            // lingering on the dead pool.
+            if self.crashed[i]
+                && (st.gpu.free_blocks() != st.gpu.total()
+                    || st.cpu.used_blocks() != 0)
+            {
+                return Err(format!(
+                    "crashed shard {i} still holds blocks: \
+                     gpu free {}/{}, cpu used {}",
+                    st.gpu.free_blocks(),
+                    st.gpu.total(),
+                    st.cpu.used_blocks()
+                ));
+            }
         }
         if !self.inflight.is_empty() {
             return Err(format!(
@@ -780,14 +904,27 @@ impl ClusterEngine {
                 self.inflight.len()
             ));
         }
+        // Accounted loss closes the migration equation: every block
+        // that left a source pool landed, dropped to recompute, or
+        // died mid-wire with a crashed destination — never silently
+        // vanished.
+        let crash_wire = self
+            .faults
+            .as_ref()
+            .map(|f| f.ledger().wire_blocks())
+            .unwrap_or(0);
         if self.migration_blocks
-            != self.migration_landed_blocks + self.migration_drop_blocks
+            != self.migration_landed_blocks
+                + self.migration_drop_blocks
+                + crash_wire
         {
             return Err(format!(
-                "migration blocks {} != landed {} + dropped {}",
+                "migration blocks {} != landed {} + dropped {} \
+                 + crash-lost {}",
                 self.migration_blocks,
                 self.migration_landed_blocks,
-                self.migration_drop_blocks
+                self.migration_drop_blocks,
+                crash_wire
             ));
         }
         Ok(())
@@ -910,6 +1047,16 @@ impl ClusterEngine {
             // arrivals route, so a just-grown shard is placeable for
             // them (deterministic ordering rule).
             self.process_warmups(now);
+
+            // (a'') Planned faults due now fire after warm-ups and
+            // before same-instant arrivals route: a crash at `t` is
+            // fully recovered — router mask updated, apps re-queued —
+            // before any arrival at `t` is placed.
+            if self.faults.is_some() {
+                let mut f = self.faults.take().unwrap();
+                faults::tick(&mut f, self, now);
+                self.faults = Some(f);
+            }
 
             // (b) Global events due now.
             while let Some(ev) = self.events.pop_due(now) {
@@ -1039,6 +1186,13 @@ impl ClusterEngine {
                         Some(w) => t.min(w),
                         None => t,
                     };
+                    // Planned faults cap the jump too: a crash or
+                    // partition edge must fire at its own instant,
+                    // never be overshot.
+                    let t = match self.next_fault_due() {
+                        Some(f) => t.min(f),
+                        None => t,
+                    };
                     self.clock.advance_to(t.max(now))
                 }
                 None => {
@@ -1057,6 +1211,13 @@ impl ClusterEngine {
                     // planner may unstick the fleet through it.
                     if let Some(w) = self.next_warm_due() {
                         self.clock.advance_to(w.max(now));
+                        continue;
+                    }
+                    // Likewise a pending fault: a partition window
+                    // closing (or a crash re-queueing stalled apps)
+                    // can unstick a fleet the rescue path cannot.
+                    if let Some(f) = self.next_fault_due() {
+                        self.clock.advance_to(f.max(now));
                         continue;
                     }
                     truncated = true;
@@ -1133,6 +1294,10 @@ impl ClusterEngine {
                 (false, n, vec![true; n], 0, 0, 0, 0, 0, 0, 0, Vec::new())
             }
         };
+        let (faults_enabled, ledger) = match &self.faults {
+            Some(f) => (true, *f.ledger()),
+            None => (false, faults::CrashLossLedger::default()),
+        };
         ClusterReport {
             policy: self.cfg.placement.name(),
             num_shards: n,
@@ -1147,6 +1312,17 @@ impl ClusterEngine {
             max_window_migration_blocks: self.max_window_migration_blocks,
             prefix_replications: self.prefix_replications,
             prefix_replicated_blocks: self.prefix_replicated_blocks,
+            faults_enabled,
+            crashes: ledger.crashes(),
+            crash_lost_app_blocks: ledger.app_blocks(),
+            crash_lost_prefix_blocks: ledger.prefix_blocks(),
+            crash_sole_prefix_blocks: ledger.sole_prefix_blocks(),
+            crash_lost_wire_blocks: ledger.wire_blocks(),
+            crash_replica_drop_blocks: ledger.replica_drop_blocks(),
+            crash_requeued_apps: ledger.requeued_apps(),
+            crash_requeued_tokens: ledger.requeued_tokens(),
+            settle_landed_transfers: self.settle_landed_transfers,
+            settle_dropped_transfers: self.settle_dropped_transfers,
             autoscale_enabled,
             final_active_shards: final_active,
             scale_up_events: scale_up,
@@ -1335,6 +1511,20 @@ impl ClusterEngine {
         evacuated: bool,
     ) {
         self.prefix_dir.clear_replicating(shard, key);
+        // A destination that crashed while the copy was on the wire
+        // drops it — account the loss against the crash (the auditor
+        // pairs every DROP with a preceding CRASH on that shard).
+        if self.crashed[shard] {
+            if let Some(f) = self.faults.as_mut() {
+                f.record_replica_loss(blocks);
+            }
+            self.trace.fault(
+                obs::fault::DROP,
+                shard as u32,
+                u32::MAX,
+                blocks as u64,
+            );
+        }
         // A destination that started draining (or retired) while the
         // copy was on the wire discards it, as with any stale landing.
         if self.is_placeable(shard) {
@@ -1349,6 +1539,9 @@ impl ClusterEngine {
                 self.prefix_replications += 1;
                 self.prefix_replicated_blocks += blocks as u64;
                 self.prefix_dir.note_replica(shard, key);
+                if self.settling {
+                    self.settle_landed_transfers += 1;
+                }
             }
         }
         if evacuated {
@@ -1363,8 +1556,356 @@ impl ClusterEngine {
                 if let Some(a) = self.autoscale.as_mut() {
                     a.note_evacuation_dropped(blocks);
                 }
+                if self.settling {
+                    self.settle_dropped_transfers += 1;
+                }
             }
         }
+    }
+
+    // ------------------------------------------------------------------
+    // Crash recovery (driven by `cluster::faults`)
+    // ------------------------------------------------------------------
+
+    /// Earliest unexecuted planned fault, if any — caps clock jumps.
+    fn next_fault_due(&self) -> Option<u64> {
+        self.faults.as_ref().and_then(|f| f.next_due_us())
+    }
+
+    /// [`Self::wire_cost_us`] for a specific link, partition-aware: an
+    /// open window multiplies the base cost (milli fixed-point) and
+    /// adds its delivery hold.
+    fn fault_wire_cost_us(&self, a: usize, b: usize, base: u64) -> u64 {
+        match self.faults.as_ref().and_then(|f| f.wire_penalty(a, b)) {
+            Some((factor_milli, hold_us)) => {
+                base * factor_milli / 1000 + hold_us
+            }
+            None => base,
+        }
+    }
+
+    /// Is the `a`↔`b` link inside an open hard-partition window?
+    fn fault_drops_wire(&self, a: usize, b: usize) -> bool {
+        self.faults
+            .as_ref()
+            .map(|f| f.drops_wire(a, b))
+            .unwrap_or(false)
+    }
+
+    /// Apply one shard crash at `now` and recover the cluster around
+    /// it: every live application on the dead shard loses its KV and
+    /// re-queues through the router onto survivors (re-prefill charged
+    /// on the destination, lifetime EWMAs retained), the prefix
+    /// directory invalidates the dead holder and promotes surviving
+    /// replicas, mid-wire migrations into the shard are re-accounted
+    /// as dropped, and the capacity hole is left for the autoscale
+    /// controller to regrow through the normal warm-up path. Returns
+    /// the loss counts; `cluster::faults` records them in the ledger
+    /// (the only module allowed to — CI-enforced).
+    pub(super) fn crash_shard(
+        &mut self,
+        dead: usize,
+        now: u64,
+    ) -> faults::CrashOutcome {
+        let mut out = faults::CrashOutcome::default();
+        // Isolate: nothing routes, replicates, or migrates toward the
+        // dead shard, a pending warm-up for it is void, and the
+        // controller sees the capacity hole (Cold, cooldown cleared).
+        self.router.set_eligible(dead, false);
+        self.pending_warm.retain(|&(_, s)| s != dead);
+        if let Some(a) = self.autoscale.as_mut() {
+            a.note_crash(dead, now);
+        }
+        // Local in-flight transfers settle at the crash instant (the
+        // wire is gone); pending tool finishes survive at their
+        // original times to orphan-forward to the apps' new homes.
+        self.shards[dead].crash_settle_transfers();
+        // What remains on the ledger afterwards is exactly the D2H
+        // legs of *outgoing* migrations (their completion event is
+        // cluster-level). The payload is wire-captured — it still
+        // lands on its destination — so the legs close here and
+        // `land_migration` tolerates the already-drained entry.
+        let drained = self.shards[dead].st.ledger.drain_inflight();
+        for t in drained {
+            let d2h = t.dir == Direction::D2H;
+            let (id, rid) = (t.id.0, t.req_id);
+            if d2h {
+                self.shards[dead].st.gpu.complete_pending(t.gpu_blocks);
+            }
+            self.shards[dead].st.trace.transfer_end(id, rid, d2h);
+        }
+        // Settlement may have published prefix lifecycle events; fold
+        // them into the directory before purging the dead holder.
+        self.sync_prefix_dir();
+        // Quiesce every unfinished application: all KV on the shard is
+        // gone — cancel prefix reads, free every block, charge a full
+        // re-prefill — then lift the app out for re-routing. Requests
+        // whose function call is still running stay Stalled (the tool
+        // will orphan-forward here and resume them on the new home);
+        // a call that already returned resumes into Waiting now.
+        let mut extracted: Vec<(
+            crate::coordination::MigratedApp,
+            u64,
+            u64,
+        )> = Vec::new();
+        {
+            let st = &mut self.shards[dead].st;
+            let mut app_ids: Vec<AppId> = st
+                .apps
+                .ids()
+                .filter(|id| st.apps[id].finished_us.is_none())
+                .collect();
+            app_ids.sort_unstable();
+            for app_id in app_ids {
+                let rids: Vec<RequestId> = st.apps[&app_id]
+                    .node_req
+                    .iter()
+                    .flatten()
+                    .copied()
+                    .collect();
+                let mut recomputes = 0u64;
+                let mut tokens = 0u64;
+                for rid in rids {
+                    let (finished, lost, had_progress, fc_waiting) = {
+                        let Some(r) = st.reqs.get(&rid) else {
+                            continue;
+                        };
+                        (
+                            r.state == ReqState::Finished,
+                            r.blocks.len() as u64
+                                + r.cpu_blocks.len() as u64,
+                            r.remaining_prefill < r.context_tokens
+                                || !r.blocks.is_empty()
+                                || !r.cpu_blocks.is_empty(),
+                            r.fc
+                                .as_ref()
+                                .map(|f| !f.tool_done)
+                                .unwrap_or(false),
+                        )
+                    };
+                    if finished {
+                        continue;
+                    }
+                    out.lost_app_blocks += lost;
+                    st.cancel_prefix_upload(rid);
+                    st.running.remove(rid);
+                    st.prefilling.remove(rid);
+                    st.release_gpu(rid);
+                    st.release_cpu(rid);
+                    if fc_waiting {
+                        st.set_req_state(rid, ReqState::Stalled);
+                    } else if st.reqs[&rid].fc.is_some() {
+                        // Tool already returned (its `call_finish`
+                        // credited the forecaster); finish the resume
+                        // here so the request re-queues instead of
+                        // waiting on an event that already fired.
+                        temporal::resume_from_fc(st, rid, now);
+                    } else {
+                        st.set_req_state(rid, ReqState::Waiting);
+                    }
+                    let r = st
+                        .reqs
+                        .get_mut(&rid)
+                        .expect("quiesced request exists");
+                    r.remaining_prefill = r.context_tokens;
+                    r.queue_enter_us = now;
+                    if had_progress {
+                        recomputes += 1;
+                        tokens += r.context_tokens as u64;
+                    }
+                }
+                extracted.push((
+                    st.extract_app(app_id),
+                    recomputes,
+                    tokens,
+                ));
+                out.requeued_apps += 1;
+                out.requeued_tokens += tokens;
+            }
+        }
+        // Purge the dead prefix holder: free every backing block (the
+        // pool must end exactly free == total) and drop every entry,
+        // pinned or not.
+        {
+            let st = &mut self.shards[dead].st;
+            for (_, backing) in st.prefix.drain_all() {
+                match backing {
+                    PrefixBacking::Gpu(b) => {
+                        out.lost_prefix_blocks += b.len() as u64;
+                        st.gpu.free(b, 0, None);
+                    }
+                    PrefixBacking::Cpu(v) => {
+                        out.lost_prefix_blocks += v.len() as u64;
+                        st.cpu.release(v);
+                    }
+                    PrefixBacking::Remote => {}
+                }
+            }
+        }
+        // Directory: drop the dead holder. Surviving replicas are
+        // promoted (remote hits keep working); keys whose only copy
+        // died surface as sole losses, and pointers orphaned by them
+        // clear on the survivors.
+        let purge = self.prefix_dir.purge_shard(dead);
+        for &(s, key) in &purge.orphaned_pointers {
+            prefix_dir::clear_pointer(&mut self.shards[s].st, key);
+        }
+        for &(_, blocks) in &purge.sole_losses {
+            out.sole_prefix_blocks += blocks as u64;
+        }
+        // CRASH first on the cluster sink, then its detail events —
+        // the auditor pairs every later DROP with this record and
+        // embargoes the dead shard's sink until regrow.
+        self.trace.fault(
+            obs::fault::CRASH,
+            dead as u32,
+            u32::MAX,
+            out.lost_app_blocks + out.lost_prefix_blocks,
+        );
+        for &(_, blocks) in &purge.sole_losses {
+            self.trace.fault(
+                obs::fault::PREFIX_LOST,
+                dead as u32,
+                u32::MAX,
+                blocks as u64,
+            );
+        }
+        // Re-queue every extracted app through the router — the same
+        // warmth and lifetime-bias terms an arrival sees — and charge
+        // the re-prefill on the destination (the shard that pays it).
+        for (m, recomputes, tokens) in extracted {
+            let template = m.template;
+            let dst = self.route_requeue(template, now);
+            for r in &m.requests {
+                self.forward.insert(r.id, Forward::Landed(dst));
+            }
+            self.trace.requeue(
+                m.app.id.0,
+                dead as u32,
+                dst as u32,
+                tokens,
+            );
+            let st = &mut self.shards[dst].st;
+            st.metrics.counters.recomputes += recomputes;
+            st.metrics.counters.recompute_tokens += tokens;
+            st.implant_app(m);
+            self.router.mark_warm(dst, template);
+        }
+        // Mid-wire migrations headed *into* the dead shard: the
+        // payload died on the wire with its destination.
+        out.lost_wire_blocks = self.crash_reroute_inflight(dead, now);
+        out
+    }
+
+    /// Route one recovering application exactly like an arrival (same
+    /// snapshot, warmth, and lifetime-bias inputs) — but with no
+    /// arrival-rate note and no `RouteDecision` record: recovery
+    /// re-queues are traced as `Requeue` events instead, so the
+    /// auditor's no-routing-to-crashed-shards rule stays a statement
+    /// about real arrivals.
+    fn route_requeue(&mut self, template: usize, now: u64) -> usize {
+        let snaps = self.snapshots();
+        let warmth: Option<Vec<f64>> = if self.prefix_enabled {
+            Some(
+                (0..snaps.len())
+                    .map(|s| self.prefix_dir.warmth(template, s))
+                    .collect(),
+            )
+        } else {
+            None
+        };
+        let bias: Option<Vec<f64>> = self
+            .autoscale
+            .as_mut()
+            .map(|a| a.route_bias(template, now));
+        self.router.route_biased(
+            template,
+            &snaps,
+            warmth.as_deref(),
+            bias.as_deref(),
+        )
+    }
+
+    /// Every in-flight migration whose destination just crashed: the
+    /// payload is dropped on the wire (crash-lost), the source D2H leg
+    /// completes normally (its blocks were already wire-captured), and
+    /// the app lands Deferred-style — re-routed to a survivor with a
+    /// full recompute, buffered tool finishes replayed. Returns the
+    /// payload blocks lost.
+    fn crash_reroute_inflight(&mut self, dead: usize, now: u64) -> u64 {
+        let mut ids: Vec<u64> = self
+            .inflight
+            .iter()
+            .filter(|(_, m)| m.dst == dead)
+            .map(|(&id, _)| id)
+            .collect();
+        ids.sort_unstable();
+        let mut lost = 0u64;
+        for id in ids {
+            let mut m = self
+                .inflight
+                .remove(&id)
+                .expect("id collected from inflight above");
+            // Source leg: identical to a normal landing's source side.
+            if let Some(t) =
+                self.shards[m.src].st.ledger.complete(m.xfer)
+            {
+                self.shards[m.src].st.gpu.complete_pending(t.gpu_blocks);
+                self.shards[m.src].st.epochs.temporal += 1;
+                self.shards[m.src].st.metrics.wire_hist.record(
+                    t.completes_us.saturating_sub(t.issued_us),
+                );
+                self.shards[m.src].st.trace.transfer_end(
+                    m.xfer.0,
+                    t.req_id,
+                    true,
+                );
+            }
+            lost += m.blocks as u64;
+            self.trace.fault(
+                obs::fault::DROP,
+                dead as u32,
+                m.src as u32,
+                m.blocks as u64,
+            );
+            let (tool_done, context_tokens) = {
+                let r = m
+                    .app
+                    .requests
+                    .iter_mut()
+                    .find(|r| r.id == m.rid)
+                    .expect("migrated request missing from payload");
+                r.remaining_prefill = r.context_tokens;
+                (
+                    r.fc.as_ref().map(|f| f.tool_done).unwrap_or(false),
+                    r.context_tokens,
+                )
+            };
+            let template = m.app.template;
+            let dst = self.route_requeue(template, now);
+            for r in &m.app.requests {
+                self.forward.insert(r.id, Forward::Landed(dst));
+            }
+            self.trace.requeue(
+                m.app.app.id.0,
+                dead as u32,
+                dst as u32,
+                context_tokens as u64,
+            );
+            let rid = m.rid;
+            {
+                let st = &mut self.shards[dst].st;
+                st.metrics.counters.recomputes += 1;
+                st.metrics.counters.recompute_tokens +=
+                    context_tokens as u64;
+                st.implant_app(m.app);
+            }
+            self.router.mark_warm(dst, template);
+            if tool_done {
+                self.replay_buffered_finish(dst, rid, now);
+            }
+        }
+        lost
     }
 
     // ------------------------------------------------------------------
@@ -1490,6 +2031,9 @@ impl ClusterEngine {
                 }
                 // The move must pay for itself: predicted remaining
                 // stall must exceed `migrate_payback ×` the transfer.
+                // Payback is judged at the BASE wire cost — a move
+                // worth making at base price still drains the source
+                // under a straggling link, it just arrives late.
                 let cost_us = self.wire_cost_us(blocks);
                 let remaining = predicted_end.saturating_sub(now);
                 if (remaining as f64)
@@ -1497,15 +2041,23 @@ impl ClusterEngine {
                 {
                     continue;
                 }
-                // Least-loaded destination with room (never the source).
+                // Least-loaded destination with room (never the
+                // source, never across a hard-partitioned link).
                 let dst = (0..room.len())
-                    .filter(|&d| d != src && room[d] >= blocks)
+                    .filter(|&d| {
+                        d != src
+                            && room[d] >= blocks
+                            && !self.fault_drops_wire(src, d)
+                    })
                     .min_by(|&a, &b| {
                         usages[a].total_cmp(&usages[b]).then(a.cmp(&b))
                     });
                 let Some(dst) = dst else {
                     continue;
                 };
+                // An open partition window prices the chosen link up
+                // (straggler): factor × base plus a delivery hold.
+                let cost_us = self.fault_wire_cost_us(src, dst, cost_us);
                 self.start_migration(
                     src, dst, app_id, rid, blocks, cost_us, now,
                 );
@@ -1744,9 +2296,15 @@ impl ClusterEngine {
         }
         if granted {
             self.migration_landed_blocks += m.blocks as u64;
+            if self.settling {
+                self.settle_landed_transfers += 1;
+            }
         } else {
             self.migration_drops += 1;
             self.migration_drop_blocks += m.blocks as u64;
+            if self.settling {
+                self.settle_dropped_transfers += 1;
+            }
         }
         let tool_done = m
             .app
@@ -1762,26 +2320,35 @@ impl ClusterEngine {
         let rid = m.rid;
         self.shards[dst_idx].st.implant_app(m.app);
         if tool_done {
-            // The tool returned mid-flight (buffered by
-            // `forward_tool_finish`). Replay what `call_finish` would
-            // have done for a GPU-resident (Stalled-path) request — feed
-            // the forecaster on the request's new home, then resume.
-            // No `early_returns` bump: the local Stalled arm of
-            // `call_finish` never counts one (that counter tracks
-            // uploads forced early on *offloaded* caches), so migrated
-            // requests must not inflate it either.
-            let st = &mut self.shards[dst_idx].st;
-            let (name, started, finished) = {
-                let fc = st.reqs[&rid]
-                    .fc
-                    .as_ref()
-                    .expect("buffered finish without fc");
-                (fc.name.clone(), fc.started_us, fc.finished_us)
-            };
-            st.forecaster
-                .observe_us(&name, finished.saturating_sub(started));
-            st.note_fc_lifetime(rid, finished.saturating_sub(started));
-            temporal::resume_from_fc(st, rid, now);
+            self.replay_buffered_finish(dst_idx, rid, now);
         }
+    }
+
+    /// The tool returned while the request's KV was on the wire
+    /// (buffered by `forward_tool_finish`). Replay what `call_finish`
+    /// would have done for a GPU-resident (Stalled-path) request —
+    /// feed the forecaster on the request's new home, then resume.
+    /// No `early_returns` bump: the local Stalled arm of `call_finish`
+    /// never counts one (that counter tracks uploads forced early on
+    /// *offloaded* caches), so migrated requests must not inflate it
+    /// either.
+    fn replay_buffered_finish(
+        &mut self,
+        dst: usize,
+        rid: RequestId,
+        now: u64,
+    ) {
+        let st = &mut self.shards[dst].st;
+        let (name, started, finished) = {
+            let fc = st.reqs[&rid]
+                .fc
+                .as_ref()
+                .expect("buffered finish without fc");
+            (fc.name.clone(), fc.started_us, fc.finished_us)
+        };
+        st.forecaster
+            .observe_us(&name, finished.saturating_sub(started));
+        st.note_fc_lifetime(rid, finished.saturating_sub(started));
+        temporal::resume_from_fc(st, rid, now);
     }
 }

@@ -1,0 +1,529 @@
+//! Deterministic fault injection and crash recovery.
+//!
+//! A seeded [`FaultPlan`] schedules shard crashes and interconnect
+//! partition windows at fixed simulated times; the cluster engine
+//! executes them on the shared clock, so the same seed and config
+//! produce byte-identical digests with or without faults enabled.
+//!
+//! * **Crash** — the shard loses every KV block instantly. Its live and
+//!   stalled applications re-queue through the router onto survivors
+//!   (re-prefill charged on the destination, lifetime EWMAs retained —
+//!   the predictor is cluster-level), the prefix directory invalidates
+//!   the dead holder and promotes surviving replicas, mid-wire
+//!   transfers *into* the shard are re-accounted as dropped, and the
+//!   autoscale controller sees an un-drained capacity hole it regrows
+//!   through the normal warm-up path.
+//! * **Partition** — a straggling link between one shard pair: bulk
+//!   transfers planned across it while the window is open pay
+//!   `factor ×` wire cost plus a fixed delivery hold, or (hard
+//!   partition) are skipped at planning time.
+//!
+//! Every block a crash destroys lands in the [`CrashLossLedger`], which
+//! extends the conservation invariant: a block is free, held,
+//! prefix-resident, wire-accounted, or *explicitly crash-lost* — never
+//! silently gone. The ledger is only ever mutated here (CI-enforced):
+//! the engine's crash mechanics return loss counts, and this module
+//! records them.
+
+use crate::config::FaultConfig;
+use crate::obs;
+use crate::sim::Rng;
+
+use super::engine::ClusterEngine;
+
+/// One planned fault on the shared clock.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Shard `shard` loses its entire GPU/CPU KV state instantly.
+    Crash { shard: usize },
+    /// The `a`↔`b` link degrades until the matching [`Self::PartitionEnd`]:
+    /// bulk transfers planned across it pay `factor_milli / 1000 ×`
+    /// wire cost plus `hold_us`; with `drop_wire` the planner skips the
+    /// pair entirely (hard partition).
+    PartitionStart {
+        a: usize,
+        b: usize,
+        factor_milli: u64,
+        hold_us: u64,
+        drop_wire: bool,
+    },
+    /// The `a`↔`b` link heals.
+    PartitionEnd { a: usize, b: usize },
+}
+
+/// A fault and the simulated instant it fires.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultEvent {
+    pub at_us: u64,
+    pub kind: FaultKind,
+}
+
+/// The full, deterministic fault schedule for one run.
+#[derive(Debug, Clone, Default)]
+pub struct FaultPlan {
+    /// Time-sorted (ties broken by kind then shard indices).
+    pub events: Vec<FaultEvent>,
+}
+
+/// Stable tie-break rank so plan order never depends on build order.
+fn sort_key(e: &FaultEvent) -> (u64, u8, usize, usize) {
+    match e.kind {
+        FaultKind::Crash { shard } => (e.at_us, 0, shard, 0),
+        FaultKind::PartitionStart { a, b, .. } => (e.at_us, 1, a, b),
+        FaultKind::PartitionEnd { a, b } => (e.at_us, 2, a, b),
+    }
+}
+
+impl FaultPlan {
+    /// Expand config into a concrete schedule. The explicit
+    /// `crash_schedule` entries come first; `crashes` / `partitions`
+    /// random faults land uniformly in the configured window, drawn
+    /// from decorrelated sub-streams of the fault seed (seed 0 derives
+    /// from the workload seed, so a seed sweep also sweeps placement).
+    pub fn build(
+        cfg: &FaultConfig,
+        shards: usize,
+        workload_seed: u64,
+    ) -> FaultPlan {
+        let mut events: Vec<FaultEvent> = Vec::new();
+        for part in
+            cfg.crash_schedule.split(';').filter(|s| !s.is_empty())
+        {
+            let (s, ms) = part
+                .split_once('@')
+                .expect("crash_schedule entry must be shard@ms");
+            let shard: usize = s
+                .trim()
+                .parse()
+                .expect("crash_schedule shard must be an integer");
+            assert!(
+                shard < shards,
+                "crash_schedule names shard {shard} but the fleet \
+                 provisions {shards}"
+            );
+            let at_ms: u64 = ms
+                .trim()
+                .parse()
+                .expect("crash_schedule time must be integer ms");
+            events.push(FaultEvent {
+                at_us: at_ms * 1000,
+                kind: FaultKind::Crash { shard },
+            });
+        }
+        let seed = if cfg.seed == 0 { workload_seed } else { cfg.seed };
+        let base = Rng::new(seed).fold(0xFA_17);
+        for k in 0..cfg.crashes {
+            let mut r = base.fold(10 + k as u64);
+            let shard = r.range_u64(0, shards as u64) as usize;
+            let at_us = cfg.window_start_us
+                + r.range_u64(0, cfg.window_len_us);
+            events.push(FaultEvent {
+                at_us,
+                kind: FaultKind::Crash { shard },
+            });
+        }
+        if shards >= 2 {
+            let factor_milli = (cfg.partition_factor * 1000.0) as u64;
+            for k in 0..cfg.partitions {
+                let mut r = base.fold(1000 + k as u64);
+                let a = r.range_u64(0, shards as u64) as usize;
+                let mut b = r.range_u64(0, shards as u64) as usize;
+                while b == a {
+                    b = r.range_u64(0, shards as u64) as usize;
+                }
+                let start = cfg.window_start_us
+                    + r.range_u64(0, cfg.window_len_us);
+                events.push(FaultEvent {
+                    at_us: start,
+                    kind: FaultKind::PartitionStart {
+                        a,
+                        b,
+                        factor_milli,
+                        hold_us: cfg.partition_hold_us,
+                        drop_wire: cfg.drop_wire,
+                    },
+                });
+                events.push(FaultEvent {
+                    at_us: start + cfg.partition_len_us,
+                    kind: FaultKind::PartitionEnd { a, b },
+                });
+            }
+        }
+        events.sort_by_key(sort_key);
+        FaultPlan { events }
+    }
+}
+
+/// Everything a crash destroyed and what recovery did about it — built
+/// by `ClusterEngine::crash_shard`, recorded into the ledger here.
+#[derive(Debug, Clone, Copy, Default)]
+pub(super) struct CrashOutcome {
+    /// Request KV blocks wiped (GPU-resident plus offloaded CPU tier).
+    pub(super) lost_app_blocks: u64,
+    /// Prefix-cache blocks purged from the dead shard (all copies).
+    pub(super) lost_prefix_blocks: u64,
+    /// Subset of the purged prefix blocks with no surviving replica.
+    pub(super) sole_prefix_blocks: u64,
+    /// Mid-wire migration payloads headed *into* the dead shard.
+    pub(super) lost_wire_blocks: u64,
+    pub(super) requeued_apps: u64,
+    /// Re-prefill tokens recovery charged on the destinations.
+    pub(super) requeued_tokens: u64,
+}
+
+/// Accounted loss: every block a crash destroys is recorded in exactly
+/// one bucket, closing the conservation invariant (free | held |
+/// prefix-resident | wire-accounted | crash-lost). Mutated only inside
+/// this module — a CI grep confines `note_lost` call sites here.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CrashLossLedger {
+    crashes: u64,
+    app_blocks: u64,
+    prefix_blocks: u64,
+    sole_prefix_blocks: u64,
+    wire_blocks: u64,
+    replica_drop_blocks: u64,
+    requeued_apps: u64,
+    requeued_tokens: u64,
+}
+
+impl CrashLossLedger {
+    fn note_lost_crash(&mut self, o: &CrashOutcome) {
+        self.crashes += 1;
+        self.app_blocks += o.lost_app_blocks;
+        self.prefix_blocks += o.lost_prefix_blocks;
+        self.sole_prefix_blocks += o.sole_prefix_blocks;
+        self.wire_blocks += o.lost_wire_blocks;
+        self.requeued_apps += o.requeued_apps;
+        self.requeued_tokens += o.requeued_tokens;
+    }
+
+    fn note_lost_replica(&mut self, blocks: u32) {
+        self.replica_drop_blocks += blocks as u64;
+    }
+
+    pub fn crashes(&self) -> u64 {
+        self.crashes
+    }
+
+    /// Request KV blocks wiped at crash instants.
+    pub fn app_blocks(&self) -> u64 {
+        self.app_blocks
+    }
+
+    /// Prefix blocks purged from dead shards.
+    pub fn prefix_blocks(&self) -> u64 {
+        self.prefix_blocks
+    }
+
+    /// Purged prefix blocks whose last copy died with the shard.
+    pub fn sole_prefix_blocks(&self) -> u64 {
+        self.sole_prefix_blocks
+    }
+
+    /// Migration payloads dropped mid-wire by a destination crash —
+    /// the crash-loss term of the migration conservation equation.
+    pub fn wire_blocks(&self) -> u64 {
+        self.wire_blocks
+    }
+
+    /// Prefix-replica copies discarded because their destination
+    /// crashed while they were on the wire.
+    pub fn replica_drop_blocks(&self) -> u64 {
+        self.replica_drop_blocks
+    }
+
+    pub fn requeued_apps(&self) -> u64 {
+        self.requeued_apps
+    }
+
+    pub fn requeued_tokens(&self) -> u64 {
+        self.requeued_tokens
+    }
+}
+
+/// An open partition window (unordered shard pair).
+#[derive(Debug, Clone, Copy)]
+struct OpenWindow {
+    a: usize,
+    b: usize,
+    factor_milli: u64,
+    hold_us: u64,
+    drop_wire: bool,
+}
+
+impl OpenWindow {
+    fn covers(&self, x: usize, y: usize) -> bool {
+        (self.a == x && self.b == y) || (self.a == y && self.b == x)
+    }
+}
+
+/// Live fault-injection state the cluster engine carries through a run.
+#[derive(Debug, Default)]
+pub struct FaultState {
+    plan: FaultPlan,
+    /// Next unexecuted plan entry.
+    next: usize,
+    open: Vec<OpenWindow>,
+    ledger: CrashLossLedger,
+}
+
+impl FaultState {
+    pub fn new(plan: FaultPlan) -> Self {
+        Self {
+            plan,
+            next: 0,
+            open: Vec::new(),
+            ledger: CrashLossLedger::default(),
+        }
+    }
+
+    /// Simulated time of the next unexecuted fault, if any — the
+    /// engine's clock jumps never overshoot it.
+    pub fn next_due_us(&self) -> Option<u64> {
+        self.plan.events.get(self.next).map(|e| e.at_us)
+    }
+
+    pub fn ledger(&self) -> &CrashLossLedger {
+        &self.ledger
+    }
+
+    /// Wire-cost penalty for the `x`↔`y` link right now:
+    /// `(factor_milli, hold_us)` while a partition window is open.
+    pub(super) fn wire_penalty(
+        &self,
+        x: usize,
+        y: usize,
+    ) -> Option<(u64, u64)> {
+        self.open
+            .iter()
+            .find(|w| w.covers(x, y))
+            .map(|w| (w.factor_milli, w.hold_us))
+    }
+
+    /// Hard partition: is the `x`↔`y` link dropping bulk transfers?
+    pub(super) fn drops_wire(&self, x: usize, y: usize) -> bool {
+        self.open
+            .iter()
+            .any(|w| w.covers(x, y) && w.drop_wire)
+    }
+
+    /// A prefix replica died on the wire with its crashed destination.
+    pub(super) fn record_replica_loss(&mut self, blocks: u32) {
+        self.ledger.note_lost_replica(blocks);
+    }
+}
+
+/// Execute every fault due at `now`. Runs after warm-ups activate and
+/// before same-instant arrivals route, so a crash at `t` is fully
+/// recovered — router mask updated, apps re-queued — before any
+/// arrival at `t` is placed (the trace auditor's embargo rule).
+pub(super) fn tick(
+    fs: &mut FaultState,
+    eng: &mut ClusterEngine,
+    now: u64,
+) {
+    while fs
+        .next_due_us()
+        .map(|t| t <= now)
+        .unwrap_or(false)
+    {
+        let ev = fs.plan.events[fs.next];
+        fs.next += 1;
+        match ev.kind {
+            FaultKind::Crash { shard } => crash(fs, eng, shard, now),
+            FaultKind::PartitionStart {
+                a,
+                b,
+                factor_milli,
+                hold_us,
+                drop_wire,
+            } => {
+                eng.trace.fault(
+                    obs::fault::PARTITION,
+                    a as u32,
+                    b as u32,
+                    factor_milli,
+                );
+                fs.open.push(OpenWindow {
+                    a,
+                    b,
+                    factor_milli,
+                    hold_us,
+                    drop_wire,
+                });
+            }
+            FaultKind::PartitionEnd { a, b } => {
+                if let Some(i) =
+                    fs.open.iter().position(|w| w.covers(a, b))
+                {
+                    fs.open.remove(i);
+                    eng.trace.fault(
+                        obs::fault::HEAL,
+                        a as u32,
+                        b as u32,
+                        0,
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// One shard crash: guard, then hand the mechanics to the engine and
+/// record what it lost. Skipped (deterministically) when the target is
+/// already down, not serving, or the last router-eligible shard —
+/// killing the whole fleet would leave arrivals unroutable.
+fn crash(
+    fs: &mut FaultState,
+    eng: &mut ClusterEngine,
+    shard: usize,
+    now: u64,
+) {
+    if shard >= eng.shards.len()
+        || eng.crashed[shard]
+        || !eng.is_steppable(shard)
+    {
+        return;
+    }
+    let survivors = (0..eng.shards.len())
+        .filter(|&s| s != shard && eng.router.is_eligible(s))
+        .count();
+    if survivors == 0 {
+        return;
+    }
+    eng.crashed[shard] = true;
+    let outcome = eng.crash_shard(shard, now);
+    fs.ledger.note_lost_crash(&outcome);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> FaultConfig {
+        FaultConfig {
+            enabled: true,
+            ..FaultConfig::default()
+        }
+    }
+
+    #[test]
+    fn explicit_schedule_parses_and_sorts() {
+        let mut c = cfg();
+        c.crash_schedule = "3@6000;1@2500".to_string();
+        let plan = FaultPlan::build(&c, 4, 42);
+        assert_eq!(plan.events.len(), 2);
+        assert_eq!(plan.events[0].at_us, 2_500_000);
+        assert_eq!(
+            plan.events[0].kind,
+            FaultKind::Crash { shard: 1 }
+        );
+        assert_eq!(plan.events[1].at_us, 6_000_000);
+        assert_eq!(
+            plan.events[1].kind,
+            FaultKind::Crash { shard: 3 }
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "names shard 7")]
+    fn explicit_schedule_rejects_out_of_range_shard() {
+        let mut c = cfg();
+        c.crash_schedule = "7@1000".to_string();
+        FaultPlan::build(&c, 4, 42);
+    }
+
+    #[test]
+    fn random_plan_is_seed_deterministic() {
+        let mut c = cfg();
+        c.crashes = 3;
+        c.partitions = 2;
+        c.seed = 99;
+        let a = FaultPlan::build(&c, 4, 1);
+        let b = FaultPlan::build(&c, 4, 2);
+        // Explicit fault seed: the workload seed must not matter.
+        assert_eq!(a.events, b.events);
+        c.seed = 0;
+        let d1 = FaultPlan::build(&c, 4, 1);
+        let d2 = FaultPlan::build(&c, 4, 1);
+        let d3 = FaultPlan::build(&c, 4, 2);
+        // Seed 0 derives from the workload seed instead.
+        assert_eq!(d1.events, d2.events);
+        assert_ne!(d1.events, d3.events);
+    }
+
+    #[test]
+    fn random_faults_land_inside_the_window() {
+        let mut c = cfg();
+        c.crashes = 8;
+        c.partitions = 4;
+        c.window_start_us = 500_000;
+        c.window_len_us = 1_000_000;
+        let plan = FaultPlan::build(&c, 4, 7);
+        for e in &plan.events {
+            match e.kind {
+                FaultKind::Crash { shard } => {
+                    assert!(shard < 4);
+                    assert!(
+                        (500_000..1_500_000).contains(&e.at_us)
+                    );
+                }
+                FaultKind::PartitionStart { a, b, .. } => {
+                    assert_ne!(a, b);
+                    assert!(
+                        (500_000..1_500_000).contains(&e.at_us)
+                    );
+                }
+                FaultKind::PartitionEnd { .. } => {}
+            }
+        }
+        assert!(plan
+            .events
+            .windows(2)
+            .all(|w| w[0].at_us <= w[1].at_us));
+    }
+
+    #[test]
+    fn open_windows_price_both_orders_and_heal() {
+        let mut fs = FaultState::new(FaultPlan::default());
+        fs.open.push(OpenWindow {
+            a: 0,
+            b: 2,
+            factor_milli: 4_000,
+            hold_us: 50_000,
+            drop_wire: false,
+        });
+        assert_eq!(fs.wire_penalty(0, 2), Some((4_000, 50_000)));
+        assert_eq!(fs.wire_penalty(2, 0), Some((4_000, 50_000)));
+        assert_eq!(fs.wire_penalty(0, 1), None);
+        assert!(!fs.drops_wire(0, 2));
+        fs.open[0].drop_wire = true;
+        assert!(fs.drops_wire(2, 0));
+        fs.open.clear();
+        assert_eq!(fs.wire_penalty(0, 2), None);
+    }
+
+    #[test]
+    fn ledger_accumulates_losses() {
+        let mut fs = FaultState::new(FaultPlan::default());
+        fs.ledger.note_lost_crash(&CrashOutcome {
+            lost_app_blocks: 10,
+            lost_prefix_blocks: 6,
+            sole_prefix_blocks: 2,
+            lost_wire_blocks: 4,
+            requeued_apps: 3,
+            requeued_tokens: 900,
+        });
+        fs.record_replica_loss(5);
+        let l = fs.ledger();
+        assert_eq!(l.crashes(), 1);
+        assert_eq!(l.app_blocks(), 10);
+        assert_eq!(l.prefix_blocks(), 6);
+        assert_eq!(l.sole_prefix_blocks(), 2);
+        assert_eq!(l.wire_blocks(), 4);
+        assert_eq!(l.replica_drop_blocks(), 5);
+        assert_eq!(l.requeued_apps(), 3);
+        assert_eq!(l.requeued_tokens(), 900);
+    }
+}

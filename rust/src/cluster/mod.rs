@@ -37,6 +37,15 @@
 //!                    │ relocation, conserve-and-retire), with │
 //!                    │ KV-lifetime-aware placement bias       │
 //!                    └────────────────────────────────────────┘
+//!
+//!                    ┌────────────────────────────────────────┐
+//!                    │ faults: seeded deterministic crash /   │
+//!                    │ partition plan — crashed shards lose   │
+//!                    │ KV into a crash-loss ledger, apps      │
+//!                    │ re-queue through the Router, the       │
+//!                    │ prefix directory promotes surviving    │
+//!                    │ replicas, autoscale regrows the hole   │
+//!                    └────────────────────────────────────────┘
 //! ```
 //!
 //! Everything runs on **one shared event clock** ([`ClusterEngine`] owns
@@ -63,11 +72,13 @@
 
 pub mod autoscale;
 mod engine;
+pub mod faults;
 pub mod prefix_dir;
 mod router;
 
 pub use autoscale::{AutoscaleStats, LifetimePredictor};
 pub use engine::{ClusterEngine, ClusterReport};
+pub use faults::{FaultKind, FaultPlan};
 pub use prefix_dir::PrefixDir;
 pub use router::Router;
 

@@ -263,6 +263,50 @@ impl PrefixDir {
             e.remote_hits = 0;
         }
     }
+
+    /// Invalidate every residency record of a crashed shard at once.
+    /// Surviving holders keep serving their keys (replica promotion is
+    /// implicit — the directory simply stops naming the dead shard);
+    /// keys whose *only* real copy died are reported as sole-copy
+    /// losses, and pointers that dangled on survivors are returned so
+    /// the engine can clear them from the shard indexes. Keys are
+    /// visited in sorted order, so the outcome is deterministic.
+    pub fn purge_shard(&mut self, shard: usize) -> PurgeOutcome {
+        let mut keys: Vec<PrefixKey> =
+            self.entries.keys().copied().collect();
+        keys.sort();
+        let mut out = PurgeOutcome::default();
+        for key in keys {
+            let e = self.entries.get_mut(&key).expect("key just listed");
+            let held = e.holders.remove(&shard).is_some();
+            e.pointers.remove(&shard);
+            e.replicating.remove(&shard);
+            if !held {
+                continue;
+            }
+            if e.holders.is_empty() {
+                out.sole_losses.push((key, e.blocks));
+                for s in std::mem::take(&mut e.pointers) {
+                    out.orphaned_pointers.push((s, key));
+                }
+                e.remote_hits = 0;
+            } else {
+                out.survived.push((key, e.blocks));
+            }
+        }
+        out
+    }
+}
+
+/// What [`PrefixDir::purge_shard`] found when a shard crashed.
+#[derive(Debug, Default, Clone)]
+pub struct PurgeOutcome {
+    /// Keys whose only real copy died with the shard (`(key, blocks)`).
+    pub sole_losses: Vec<(PrefixKey, u32)>,
+    /// `(survivor shard, key)` pointers orphaned by a sole-copy loss.
+    pub orphaned_pointers: Vec<(usize, PrefixKey)>,
+    /// Keys that keep at least one surviving real holder.
+    pub survived: Vec<(PrefixKey, u32)>,
 }
 
 // ----------------------------------------------------------------------
@@ -433,6 +477,53 @@ mod tests {
             (dir.warmth(t, 0), dir.warmth(t, 1), dir.warmth(t, 2));
         assert!(g > c && c > p && p > 0.0, "{g} {c} {p}");
         assert_eq!(dir.warmth(t, 3), 0.0);
+    }
+
+    #[test]
+    fn purge_separates_sole_losses_from_survivors() {
+        let (mut dir, _, keys) = dir_with_template();
+        let (key, blocks, tokens) = keys[0];
+        // Shard 0 is the only holder; shard 1 has a pointer to it.
+        dir.apply_event(
+            0,
+            &PrefixEvent::Inserted {
+                key,
+                blocks,
+                tokens,
+                location: PrefixLocation::Gpu,
+            },
+        );
+        dir.note_pointer(1, key);
+        let out = dir.purge_shard(0);
+        assert_eq!(out.sole_losses, vec![(key, blocks)]);
+        assert_eq!(out.orphaned_pointers, vec![(1, key)]);
+        assert!(out.survived.is_empty());
+        assert!(!dir.holds_local(key, 0));
+        assert!(!dir.has_pointer(key, 1));
+
+        // With a surviving CPU replica the key survives the crash.
+        dir.apply_event(
+            0,
+            &PrefixEvent::Inserted {
+                key,
+                blocks,
+                tokens,
+                location: PrefixLocation::Gpu,
+            },
+        );
+        dir.apply_event(
+            2,
+            &PrefixEvent::Inserted {
+                key,
+                blocks,
+                tokens,
+                location: PrefixLocation::Cpu,
+            },
+        );
+        let out = dir.purge_shard(0);
+        assert!(out.sole_losses.is_empty());
+        assert_eq!(out.survived, vec![(key, blocks)]);
+        assert!(dir.holds_local(key, 2));
     }
 
     #[test]

@@ -362,6 +362,78 @@ impl AutoscaleConfig {
     }
 }
 
+/// Deterministic fault injection: seeded shard crashes and interconnect
+/// partition windows executed on the shared cluster clock (see
+/// `cluster::faults`). Disabled by default — a fault-free fleet behaves
+/// exactly as before.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultConfig {
+    pub enabled: bool,
+    /// Fault-plan RNG seed; 0 derives the plan seed from `serve.seed`,
+    /// so a workload seed sweep also sweeps the fault placement.
+    pub seed: u64,
+    /// Explicit crash schedule: `shard@ms` entries joined with `;`
+    /// (e.g. `"1@2500;3@6000"`). Applied before any random crashes.
+    pub crash_schedule: String,
+    /// Number of additional randomly placed shard crashes.
+    pub crashes: u32,
+    /// Number of randomly placed interconnect partition windows.
+    pub partitions: u32,
+    /// Wire-cost multiplier on transfers priced while a partition
+    /// window between their shard pair is open (a straggling link).
+    pub partition_factor: f64,
+    /// Extra fixed delivery hold on transfers crossing an open window
+    /// (µs).
+    pub partition_hold_us: u64,
+    /// Duration of each partition window (µs).
+    pub partition_len_us: u64,
+    /// Random faults land uniformly in
+    /// `[window_start_us, window_start_us + window_len_us)`.
+    pub window_start_us: u64,
+    pub window_len_us: u64,
+    /// Hard partition: a migration that would cross an open window is
+    /// dropped at planning time instead of priced up.
+    pub drop_wire: bool,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        Self {
+            enabled: false,
+            seed: 0,
+            crash_schedule: String::new(),
+            crashes: 0,
+            partitions: 0,
+            partition_factor: 4.0,
+            partition_hold_us: 50_000,
+            partition_len_us: 2_000_000,
+            window_start_us: 1_000_000,
+            window_len_us: 10_000_000,
+            drop_wire: false,
+        }
+    }
+}
+
+impl FaultConfig {
+    /// Panic on inconsistent knobs (called when an engine adopts the
+    /// config, so a bad file/flag set fails loudly up front).
+    pub fn validate(&self) {
+        assert!(
+            self.partition_factor >= 1.0,
+            "faults.partition_factor must be >= 1.0 (a straggler \
+             never speeds the wire up)"
+        );
+        assert!(
+            self.window_len_us >= 1,
+            "faults.window_len_us must be >= 1"
+        );
+        assert!(
+            self.partition_len_us >= 1,
+            "faults.partition_len_us must be >= 1"
+        );
+    }
+}
+
 /// Multi-worker cluster configuration: N shards, each an independent
 /// worker with its own GPU/CPU block pools and scheduler state, fed by a
 /// placement router and (optionally) rebalanced through cross-worker KV
@@ -414,6 +486,10 @@ pub struct ClusterConfig {
     /// `[min_shards, max_shards]`) and the engine provisions capacity up
     /// to `max_shards`.
     pub autoscale: AutoscaleConfig,
+    /// Deterministic fault injection (`[cluster.faults]` section): shard
+    /// crashes with full recovery accounting, plus interconnect
+    /// partition/straggler windows.
+    pub faults: FaultConfig,
 }
 
 impl Default for ClusterConfig {
@@ -433,6 +509,7 @@ impl Default for ClusterConfig {
             prefix_directory: true,
             prefix_replicate_threshold: 2,
             autoscale: AutoscaleConfig::default(),
+            faults: FaultConfig::default(),
         }
     }
 }
@@ -522,6 +599,60 @@ impl ClusterConfig {
                 "lifetime_ewma" => {
                     a.lifetime_ewma = value.parse().map_err(|_| bad())?
                 }
+                _ => {
+                    return Err(ParseError::UnknownKey {
+                        section: section.to_string(),
+                        key: key.to_string(),
+                    })
+                }
+            }
+            return Ok(());
+        }
+        if section == "cluster.faults" {
+            let fc = &mut self.faults;
+            match key {
+                "enabled" => fc.enabled = on_off(value)?,
+                "seed" => fc.seed = value.parse().map_err(|_| bad())?,
+                "crash_schedule" => {
+                    // Syntax is checked here; shard indices are range-
+                    // checked against the fleet when the plan builds.
+                    for part in
+                        value.split(';').filter(|s| !s.is_empty())
+                    {
+                        let Some((s, ms)) = part.split_once('@') else {
+                            return Err(bad());
+                        };
+                        s.parse::<usize>().map_err(|_| bad())?;
+                        ms.parse::<u64>().map_err(|_| bad())?;
+                    }
+                    fc.crash_schedule = value.to_string();
+                }
+                "crashes" => {
+                    fc.crashes = value.parse().map_err(|_| bad())?
+                }
+                "partitions" => {
+                    fc.partitions = value.parse().map_err(|_| bad())?
+                }
+                "partition_factor" => {
+                    fc.partition_factor =
+                        value.parse().map_err(|_| bad())?
+                }
+                "partition_hold_us" => {
+                    fc.partition_hold_us =
+                        value.parse().map_err(|_| bad())?
+                }
+                "partition_len_us" => {
+                    fc.partition_len_us =
+                        value.parse().map_err(|_| bad())?
+                }
+                "window_start_us" => {
+                    fc.window_start_us =
+                        value.parse().map_err(|_| bad())?
+                }
+                "window_len_us" => {
+                    fc.window_len_us = value.parse().map_err(|_| bad())?
+                }
+                "drop_wire" => fc.drop_wire = on_off(value)?,
                 _ => {
                     return Err(ParseError::UnknownKey {
                         section: section.to_string(),
@@ -893,6 +1024,60 @@ mod tests {
         assert!(c
             .apply_kv("cluster.autoscale", "max_shards", "0")
             .is_err());
+    }
+
+    #[test]
+    fn faults_section_kv_overrides() {
+        let mut c = ClusterConfig::default();
+        assert!(!c.faults.enabled);
+        c.apply_kv("cluster.faults", "enabled", "on").unwrap();
+        c.apply_kv("cluster.faults", "seed", "42").unwrap();
+        c.apply_kv("cluster.faults", "crash_schedule", "1@2500;3@6000")
+            .unwrap();
+        c.apply_kv("cluster.faults", "crashes", "2").unwrap();
+        c.apply_kv("cluster.faults", "partitions", "1").unwrap();
+        c.apply_kv("cluster.faults", "partition_factor", "3.0")
+            .unwrap();
+        c.apply_kv("cluster.faults", "partition_hold_us", "25000")
+            .unwrap();
+        c.apply_kv("cluster.faults", "partition_len_us", "500000")
+            .unwrap();
+        c.apply_kv("cluster.faults", "window_start_us", "2000000")
+            .unwrap();
+        c.apply_kv("cluster.faults", "window_len_us", "8000000")
+            .unwrap();
+        c.apply_kv("cluster.faults", "drop_wire", "on").unwrap();
+        assert!(c.faults.enabled);
+        assert_eq!(c.faults.seed, 42);
+        assert_eq!(c.faults.crash_schedule, "1@2500;3@6000");
+        assert_eq!(c.faults.crashes, 2);
+        assert_eq!(c.faults.partitions, 1);
+        assert_eq!(c.faults.partition_factor, 3.0);
+        assert_eq!(c.faults.partition_hold_us, 25_000);
+        assert_eq!(c.faults.partition_len_us, 500_000);
+        assert_eq!(c.faults.window_start_us, 2_000_000);
+        assert_eq!(c.faults.window_len_us, 8_000_000);
+        assert!(c.faults.drop_wire);
+        c.faults.validate();
+        assert!(c.apply_kv("cluster.faults", "nope", "1").is_err());
+        // Malformed schedules are rejected at parse time, not at plan
+        // build.
+        assert!(c
+            .apply_kv("cluster.faults", "crash_schedule", "1-2500")
+            .is_err());
+        assert!(c
+            .apply_kv("cluster.faults", "crash_schedule", "x@9")
+            .is_err());
+    }
+
+    #[test]
+    #[should_panic]
+    fn faults_validate_rejects_speedup_factor() {
+        let fc = FaultConfig {
+            partition_factor: 0.5,
+            ..Default::default()
+        };
+        fc.validate();
     }
 
     #[test]

@@ -22,7 +22,7 @@ use crate::graph::{AppGraph, NodeId, NodeKind};
 use crate::kvcache::{AllocOutcome, TransferId};
 use crate::metrics::MetricsBundle;
 use crate::obs;
-use crate::sim::{Clock, EventQueue, Rng};
+use crate::sim::{Clock, Event, EventQueue, Rng};
 use crate::spatial;
 use crate::temporal;
 use crate::workload::{SampledLengths, ToolSim, WorkloadSpec};
@@ -409,6 +409,35 @@ impl SimEngine {
                 temporal::on_transfer_done(&mut self.st, xfer, now);
                 self.drain_outbox();
             }
+        }
+    }
+
+    /// Crash-time settlement (see `cluster::faults`): complete every
+    /// in-flight block transfer at the current instant — the wire no
+    /// longer exists, so mid-flight ledger entries close now and the
+    /// per-request quiesce that follows reclaims whatever they landed —
+    /// while *keeping* every pending tool finish and func-node delay at
+    /// its original time. Unlike [`Self::settle_transfers`], dropping
+    /// those events here would strangle re-queued apps: their tools are
+    /// still running and must orphan-forward to the new home shard.
+    pub fn crash_settle_transfers(&mut self) {
+        self.drain_outbox();
+        let mut keep: Vec<Event<Ev>> = Vec::new();
+        while let Some(ev) = self.events.pop() {
+            match ev.payload {
+                Ev::TransferDone { xfer } => {
+                    let now = self.clock.now_us();
+                    temporal::on_transfer_done(&mut self.st, xfer, now);
+                    self.drain_outbox();
+                }
+                _ => keep.push(ev),
+            }
+        }
+        // Re-queue survivors in their original (time, seq) order so
+        // FIFO tie-breaks replay identically.
+        keep.sort_by_key(|e| (e.at_us, e.seq));
+        for e in keep {
+            self.events.push(e.at_us, e.payload);
         }
     }
 

@@ -181,6 +181,17 @@ impl MigrationLedger {
     pub fn swap_volume_blocks(&self) -> u64 {
         self.offload_blocks + self.upload_blocks
     }
+
+    /// Take every in-flight transfer out of the ledger at once, sorted
+    /// by id (issue order) so callers iterate deterministically. Crash
+    /// recovery uses this: a dead shard's wire traffic must be closed
+    /// in one sweep, not completed one event at a time.
+    pub fn drain_inflight(&mut self) -> Vec<Transfer> {
+        let mut out: Vec<Transfer> =
+            self.inflight.drain().map(|(_, t)| t).collect();
+        out.sort_by_key(|t| t.id.0);
+        out
+    }
 }
 
 #[cfg(test)]
@@ -257,6 +268,27 @@ mod tests {
         // The untagged path defaults to the request kind.
         let id = l.issue(1, Direction::H2D, BlockSet::new(), vec![], 0, 1);
         assert_eq!(l.get(id).unwrap().kind, TransferKind::Request);
+    }
+
+    #[test]
+    fn drain_inflight_sorted_and_empties() {
+        let mut l = MigrationLedger::new();
+        for i in 0..5u64 {
+            l.issue(
+                i,
+                Direction::D2H,
+                BlockSet::from_extent(i as u32, 1),
+                vec![],
+                0,
+                10,
+            );
+        }
+        let drained = l.drain_inflight();
+        assert_eq!(drained.len(), 5);
+        assert!(drained.windows(2).all(|w| w[0].id.0 < w[1].id.0));
+        assert_eq!(l.inflight_count(), 0);
+        // Lifetime stats survive the drain.
+        assert_eq!(l.offload_blocks, 5);
     }
 
     #[test]

@@ -180,7 +180,10 @@ impl PrefixIndex {
             }
             PrefixLocation::Remote => {}
         }
-        self.entries.get_mut(&key).unwrap().last_use_us = now_us;
+        self.entries
+            .get_mut(&key)
+            .expect("touch: entry vanished between recency probe and write")
+            .last_use_us = now_us;
     }
 
     /// Record a cached prefix whose backing the index takes ownership of.
@@ -233,7 +236,10 @@ impl PrefixIndex {
     pub fn lookup(&mut self, key: PrefixKey, now_us: u64) -> Option<PrefixHit> {
         self.entries.get(&key)?;
         self.touch(key, now_us);
-        let e = self.entries.get_mut(&key).unwrap();
+        let e = self
+            .entries
+            .get_mut(&key)
+            .expect("lookup: recency touch must never remove the entry");
         e.hits += 1;
         Some(PrefixHit {
             blocks: e.blocks,
@@ -273,7 +279,10 @@ impl PrefixIndex {
         let PrefixBacking::Gpu(_) = e.backing else {
             return None;
         };
-        let mut old = self.entries.remove(&key).unwrap();
+        let mut old = self
+            .entries
+            .remove(&key)
+            .expect("demote_to_cpu: entry vanished after residency probe");
         self.index_remove(key, &old);
         let PrefixBacking::Gpu(gpu) =
             std::mem::replace(&mut old.backing, PrefixBacking::Cpu(cpu_blocks))
@@ -292,7 +301,10 @@ impl PrefixIndex {
         if self.entries.get(&key)?.readers > 0 {
             return None;
         }
-        let e = self.entries.remove(&key).unwrap();
+        let e = self
+            .entries
+            .remove(&key)
+            .expect("remove: entry vanished after the pin check");
         self.index_remove(key, &e);
         Some(e.backing)
     }
@@ -308,6 +320,24 @@ impl PrefixIndex {
             self.entries.remove(&key);
         }
         is_pointer
+    }
+
+    /// Crash purge: remove *every* entry — real copies and pointers,
+    /// pinned or not (a shard crash outlives any in-flight read) — and
+    /// return the key-sorted backings for the caller to free. The LRU
+    /// indices and residency counters reset to empty.
+    pub fn drain_all(&mut self) -> Vec<(PrefixKey, PrefixBacking)> {
+        let mut out: Vec<(PrefixKey, PrefixBacking)> = self
+            .entries
+            .drain()
+            .map(|(k, e)| (k, e.backing))
+            .collect();
+        out.sort_by_key(|&(k, _)| k);
+        self.lru_gpu.clear();
+        self.lru_cpu.clear();
+        self.resident_gpu = 0;
+        self.resident_cpu = 0;
+        out
     }
 
     /// Pin an entry against eviction/displacement (in-flight H2D read).
@@ -478,6 +508,30 @@ mod tests {
         ix.unpin(k);
         assert!(ix.remove(k).is_some());
         assert_eq!(ix.resident_cpu_blocks(), 0);
+    }
+
+    #[test]
+    fn drain_all_empties_even_pinned_entries_in_key_order() {
+        let mut ix = PrefixIndex::new();
+        ix.insert(PrefixKey(9), 1, 16, gpu(0, 1), 1.0, 10);
+        ix.insert(
+            PrefixKey(2),
+            2,
+            32,
+            PrefixBacking::Cpu(vec![CpuBlockId(0), CpuBlockId(1)]),
+            1.0,
+            20,
+        );
+        ix.insert(PrefixKey(5), 3, 48, PrefixBacking::Remote, 2.0, 30);
+        ix.pin(PrefixKey(2));
+        let drained = ix.drain_all();
+        let keys: Vec<u64> = drained.iter().map(|(k, _)| k.0).collect();
+        assert_eq!(keys, vec![2, 5, 9]);
+        assert!(ix.is_empty());
+        assert_eq!(ix.resident_gpu_blocks(), 0);
+        assert_eq!(ix.resident_cpu_blocks(), 0);
+        assert!(ix.peek_lru_gpu().is_none());
+        assert!(ix.peek_lru_cpu_unpinned().is_none());
     }
 
     #[test]

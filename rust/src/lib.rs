@@ -47,7 +47,12 @@
 //!     KV migration of stalled agents (cluster::ClusterEngine), and a
 //!     cluster prefix directory federating the per-shard prefix
 //!     indexes (cluster::prefix_dir: residency-derived routing warmth,
-//!     remote prefix hits at interconnect price, bounded replication)
+//!     remote prefix hits at interconnect price, bounded replication);
+//!     seeded deterministic fault injection (cluster::faults): planned
+//!     shard crashes and interconnect partition windows with full
+//!     recovery — apps re-queue through the router, the directory
+//!     promotes surviving replicas, and every destroyed block lands in
+//!     an accounted-loss ledger so conservation extends to crash loss
 //! L3  rust coordinator (this crate): graph API, schedulers, block pools,
 //!     engines, baselines, metrics, HTTP server — one worker = one shard
 //! L2  JAX TinyQwen model  — python/compile/model.py, AOT → artifacts/

@@ -10,6 +10,8 @@
 //!                   [--frac 0.08] [--no-migrate] [--seed N]
 //!                   [--autoscale --min-shards 1 --max-shards 8]
 //!                   [--burst-qps 6.0 --burst-period-s 60 --burst-duty 0.25]
+//!                   [--crash "1@2500;3@6000" --crashes 1 --partitions 1
+//!                    --fault-seed 7 --assert-recovery]
 //! tokencake audit   --trace out.json
 //! tokencake serve   [--port 8080]
 //! tokencake graph   --app deep-research
@@ -218,6 +220,8 @@ fn bench_row(name: &str, rep: &ClusterReport, wall_s: f64) -> String {
          \"prefix_hit_rate_remote\": {:.4}, \
          \"prefill_tokens_saved\": {}, \
          \"prefix_replications\": {}, \
+         \"crashes\": {}, \"crash_requeued_apps\": {}, \
+         \"crash_requeue_tokens\": {}, \"crash_lost_blocks\": {}, \
          \"autoscale\": {}, \"final_shards\": {}, \
          \"scale_up_events\": {}, \"scale_down_events\": {}, \
          \"shards_retired\": {}, \"drained_app_blocks\": {}, \
@@ -241,6 +245,12 @@ fn bench_row(name: &str, rep: &ClusterReport, wall_s: f64) -> String {
         rep.aggregate.counters.prefix_hit_rate_remote(),
         rep.aggregate.counters.prefill_tokens_saved,
         rep.prefix_replications,
+        rep.crashes,
+        rep.crash_requeued_apps,
+        rep.crash_requeued_tokens,
+        rep.crash_lost_app_blocks
+            + rep.crash_lost_prefix_blocks
+            + rep.crash_lost_wire_blocks,
         rep.autoscale_enabled,
         rep.final_active_shards,
         rep.scale_up_events,
@@ -325,6 +335,40 @@ fn cmd_cluster(args: &Args) -> Result<(), String> {
         cluster.autoscale.cooldown_us =
             args.get_u64("cooldown-ms", 0)? * 1000;
     }
+    // Deterministic fault injection: an explicit --crash schedule
+    // and/or randomly placed --crashes/--partitions, all derived from
+    // the fault seed (0 = derive from the workload seed). Any fault
+    // flag flips injection on.
+    if args.has("faults") {
+        cluster.faults.enabled = true;
+    }
+    if let Some(s) = args.get("crash") {
+        cluster.faults.enabled = true;
+        cluster.faults.crash_schedule = s.to_string();
+    }
+    if args.get("crashes").is_some() {
+        cluster.faults.enabled = true;
+        cluster.faults.crashes = args.get_u64("crashes", 0)? as u32;
+    }
+    if args.get("partitions").is_some() {
+        cluster.faults.enabled = true;
+        cluster.faults.partitions =
+            args.get_u64("partitions", 0)? as u32;
+    }
+    cluster.faults.seed =
+        args.get_u64("fault-seed", cluster.faults.seed)?;
+    cluster.faults.partition_factor = args
+        .get_f64("partition-factor", cluster.faults.partition_factor)?;
+    if args.has("drop-wire") {
+        cluster.faults.drop_wire = true;
+    }
+    if cluster.faults.enabled && cluster.faults.partition_factor < 1.0 {
+        return Err(
+            "--partition-factor must be >= 1.0 (a straggler never \
+             speeds the wire up)"
+                .into(),
+        );
+    }
     // Validate here with the CLI's normal error path — the engine's
     // own validate() is an assert meant for programmatic misuse.
     if cluster.autoscale.enabled {
@@ -347,6 +391,7 @@ fn cmd_cluster(args: &Args) -> Result<(), String> {
         }
     }
     let (shards, policy) = (cluster.shards, cluster.placement);
+    let faults_on = cluster.faults.enabled;
 
     let qps = args.get_f64("qps", 1.0)?;
     let apps = args.get_u64("apps", 40)? as usize;
@@ -395,7 +440,10 @@ fn cmd_cluster(args: &Args) -> Result<(), String> {
     if args.get("trace").is_some() {
         eng.enable_trace();
     }
-    if args.has("assert-autoscale") || args.has("assert-planner-gated") {
+    if args.has("assert-autoscale")
+        || args.has("assert-planner-gated")
+        || args.has("assert-recovery")
+    {
         // Assert runs arm the flight recorder so a failure ships its
         // recent-event ring (full capture stays off unless --trace).
         eng.arm_flight();
@@ -450,6 +498,23 @@ fn cmd_cluster(args: &Args) -> Result<(), String> {
                 .join(", "),
         );
     }
+    if report.faults_enabled {
+        println!(
+            "faults: crashes={} requeued_apps={} requeue_tokens={} \
+             lost_app={} lost_prefix={} (sole {}) lost_wire={} \
+             replica_drops={} settled={}+{}",
+            report.crashes,
+            report.crash_requeued_apps,
+            report.crash_requeued_tokens,
+            report.crash_lost_app_blocks,
+            report.crash_lost_prefix_blocks,
+            report.crash_sole_prefix_blocks,
+            report.crash_lost_wire_blocks,
+            report.crash_replica_drop_blocks,
+            report.settle_landed_transfers,
+            report.settle_dropped_transfers,
+        );
+    }
     if report.truncated {
         eprintln!("warning: cluster run truncated before completion");
     }
@@ -489,6 +554,54 @@ fn cmd_cluster(args: &Args) -> Result<(), String> {
             report.migration_blocks,
             report.migration_landed_blocks
                 + report.migration_drop_blocks,
+        );
+    }
+    if args.has("assert-recovery") {
+        // CI fault smoke: a crash must lose nothing silently — every
+        // planned crash executed, every application still completed
+        // (re-queued ones included), and block conservation holds with
+        // the crash-loss ledger folded in.
+        if !faults_on {
+            return Err("--assert-recovery requires fault injection \
+                        (--crash / --crashes / --faults)"
+                .to_string());
+        }
+        if report.crashes == 0 {
+            return Err(format!(
+                "no crash executed — schedule outside the run window \
+                 or no survivor to crash into?\n\
+                 --- flight recorder (newest last) ---\n{}",
+                eng.flight_dump()
+            ));
+        }
+        if report.truncated {
+            return Err(format!(
+                "recovery run truncated before completion\n\
+                 --- flight recorder (newest last) ---\n{}",
+                eng.flight_dump()
+            ));
+        }
+        let done = report.aggregate.apps_completed;
+        if done != apps as u64 {
+            return Err(format!(
+                "recovery incomplete: {done}/{apps} apps finished \
+                 after {} crash(es)\n\
+                 --- flight recorder (newest last) ---\n{}",
+                report.crashes,
+                eng.flight_dump()
+            ));
+        }
+        eng.check_conservation()?;
+        println!(
+            "recovery OK: {done}/{apps} apps finished across {} \
+             crash(es); {} apps re-queued ({} re-prefill tokens), \
+             losses accounted (app={} prefix={} wire={})",
+            report.crashes,
+            report.crash_requeued_apps,
+            report.crash_requeued_tokens,
+            report.crash_lost_app_blocks,
+            report.crash_lost_prefix_blocks,
+            report.crash_lost_wire_blocks,
         );
     }
     if args.has("assert-planner-gated") {
@@ -613,6 +726,14 @@ COMMANDS:
            shard plus the control plane)
            --json FILE [--json-name NAME]  write the run's benchmark
            row
+           --crash \"1@2500;3@6000\"  (crash shard@ms schedule)
+           --crashes N --partitions N [--fault-seed N
+           --partition-factor X --drop-wire]  (randomly placed
+           seeded faults; same seed => byte-identical digests)
+           --assert-recovery  (fail unless every planned crash
+           executed, all apps completed after re-queueing, and block
+           conservation holds with crash losses accounted — the
+           fault-injection CI smoke)
            --assert-autoscale  (fail unless min <= serving <= max and
            zero blocks were lost — the autoscale CI smoke)
            --assert-planner-gated  (fail unless planner runs < 10% of

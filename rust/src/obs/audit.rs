@@ -20,6 +20,12 @@
 //!    recorded on that shard until (if ever) it is re-grown.
 //! 5. **Clock sanity** — per shard, timestamps are non-decreasing and
 //!    sequence numbers strictly increase.
+//! 6. **Crash embargo** — after a `fault_crash`, the dead shard records
+//!    nothing and the router sends it nothing until a regrow
+//!    (`scale_grow`/`scale_warm`) or `fault_recover` lifts the embargo.
+//! 7. **Drops pair with crashes** — every `fault_drop` names a shard
+//!    that is crashed at that instant; a dropped transfer without a
+//!    preceding crash is a leak, not a fault.
 //!
 //! Runs on in-memory records (tier-1 tests) or on an exported JSON file
 //! via [`TraceAuditor::audit_chrome_trace`] (the CI trace smoke), which
@@ -30,7 +36,7 @@ use std::fmt;
 
 use super::export::parse_chrome_trace;
 use super::recorder::format_record;
-use super::{scale, state, xfer, TraceEvent, TraceRecord};
+use super::{fault, scale, state, xfer, TraceEvent, TraceRecord};
 
 /// First invariant violation found, in timeline order.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -60,6 +66,8 @@ pub struct AuditSummary {
     pub finished_requests: usize,
     /// Autoscale retirements verified final.
     pub retirements: usize,
+    /// Shard crashes verified embargoed until regrow.
+    pub crashes: usize,
 }
 
 impl fmt::Display for AuditSummary {
@@ -67,12 +75,13 @@ impl fmt::Display for AuditSummary {
         write!(
             f,
             "audit ok: {} records, {} shards, {} transfers paired, \
-             {} requests finished, {} retirements",
+             {} requests finished, {} retirements, {} crashes",
             self.records,
             self.shards,
             self.transfers,
             self.finished_requests,
-            self.retirements
+            self.retirements,
+            self.crashes
         )
     }
 }
@@ -110,6 +119,8 @@ impl TraceAuditor {
         let mut pending_prefix: BTreeMap<u64, u32> = BTreeMap::new();
         // Currently retired shards (4).
         let mut retired: BTreeSet<u32> = BTreeSet::new();
+        // Currently crashed shards (6, 7).
+        let mut crashed: BTreeSet<u32> = BTreeSet::new();
 
         let err = |i: usize, r: &TraceRecord, msg: String| AuditError {
             index: Some(i),
@@ -123,6 +134,17 @@ impl TraceAuditor {
                     r,
                     format!(
                         "event on shard {} after its retirement",
+                        r.shard
+                    ),
+                ));
+            }
+            if crashed.contains(&r.shard) {
+                return Err(err(
+                    i,
+                    r,
+                    format!(
+                        "event on shard {} after its crash (before \
+                         regrow)",
                         r.shard
                     ),
                 ));
@@ -266,6 +288,38 @@ impl TraceAuditor {
                         || action == scale::WARM
                     {
                         retired.remove(&shard);
+                        crashed.remove(&shard);
+                    }
+                }
+                TraceEvent::Fault { kind, shard, .. } => {
+                    if kind == fault::CRASH {
+                        crashed.insert(shard);
+                        summary.crashes += 1;
+                    } else if kind == fault::RECOVER {
+                        crashed.remove(&shard);
+                    } else if kind == fault::DROP
+                        && !crashed.contains(&shard)
+                    {
+                        return Err(err(
+                            i,
+                            r,
+                            format!(
+                                "transfer dropped on shard {shard} \
+                                 with no crash to pair it with"
+                            ),
+                        ));
+                    }
+                }
+                TraceEvent::RouteDecision { dst, .. } => {
+                    if crashed.contains(&dst) {
+                        return Err(err(
+                            i,
+                            r,
+                            format!(
+                                "arrival routed to crashed shard \
+                                 {dst} before regrow"
+                            ),
+                        ));
                     }
                 }
                 _ => {}
@@ -399,6 +453,69 @@ mod tests {
             s1.records(),
         ]);
         TraceAuditor::audit(&ok).unwrap();
+    }
+
+    #[test]
+    fn event_after_crash_fails_and_regrow_clears_it() {
+        let mut c = TraceSink::default();
+        c.enable();
+        c.set_shard(super::super::CLUSTER_SHARD);
+        let mut s2 = TraceSink::default();
+        s2.enable();
+        s2.set_shard(2);
+        c.advance(10);
+        c.fault(fault::CRASH, 2, u32::MAX, 64);
+        s2.advance(20);
+        s2.gpu_sample(10, 10);
+        let bad = super::super::merge_records(&[
+            c.records(),
+            s2.records(),
+        ]);
+        let e = TraceAuditor::audit(&bad).unwrap_err();
+        assert!(e.message.contains("after its crash"), "{e}");
+
+        // Regrowing through the normal warm-up path lifts the embargo.
+        c.advance(15);
+        c.autoscale(scale::GROW, 2, 2);
+        let ok = super::super::merge_records(&[
+            c.records(),
+            s2.records(),
+        ]);
+        let sum = TraceAuditor::audit(&ok).unwrap();
+        assert_eq!(sum.crashes, 1);
+    }
+
+    #[test]
+    fn routing_to_crashed_shard_fails() {
+        let mut c = TraceSink::default();
+        c.enable();
+        c.set_shard(super::super::CLUSTER_SHARD);
+        c.advance(10);
+        c.fault(fault::CRASH, 1, u32::MAX, 0);
+        c.advance(20);
+        c.route(3, 1, 0, 0);
+        let e = TraceAuditor::audit(c.records()).unwrap_err();
+        assert!(e.message.contains("routed to crashed shard"), "{e}");
+    }
+
+    #[test]
+    fn drop_without_crash_fails() {
+        let mut c = TraceSink::default();
+        c.enable();
+        c.set_shard(super::super::CLUSTER_SHARD);
+        c.advance(10);
+        c.fault(fault::DROP, 1, 0, 16);
+        let e = TraceAuditor::audit(c.records()).unwrap_err();
+        assert!(e.message.contains("no crash to pair"), "{e}");
+
+        // Paired with a preceding crash the drop is legal.
+        let mut ok = TraceSink::default();
+        ok.enable();
+        ok.set_shard(super::super::CLUSTER_SHARD);
+        ok.advance(10);
+        ok.fault(fault::CRASH, 1, u32::MAX, 0);
+        ok.fault(fault::DROP, 1, 0, 16);
+        TraceAuditor::audit(ok.records()).unwrap();
     }
 
     #[test]

@@ -23,7 +23,7 @@
 use std::collections::BTreeSet;
 
 use super::{
-    planner, prefix, scale, state, xfer, TraceEvent, TraceRecord,
+    fault, planner, prefix, scale, state, xfer, TraceEvent, TraceRecord,
     CLUSTER_SHARD,
 };
 
@@ -259,6 +259,48 @@ pub fn export_chrome_trace(records: &[TraceRecord]) -> String {
                     ("action", action as i64),
                     ("shard", shard as i64),
                     ("serving", serving as i64),
+                ],
+            ),
+            TraceEvent::Fault {
+                kind,
+                shard,
+                peer,
+                data,
+            } => line(
+                &format!(
+                    "fault_{}",
+                    fault::NAMES
+                        .get(kind as usize)
+                        .copied()
+                        .unwrap_or("?")
+                ),
+                Some("fault"),
+                "i",
+                rec,
+                None,
+                &[
+                    ("kind", kind as i64),
+                    ("shard", shard as i64),
+                    ("peer", peer as i64),
+                    ("data", data as i64),
+                ],
+            ),
+            TraceEvent::Requeue {
+                app,
+                from,
+                to,
+                tokens,
+            } => line(
+                "requeue",
+                Some("fault"),
+                "i",
+                rec,
+                None,
+                &[
+                    ("app", app as i64),
+                    ("from", from as i64),
+                    ("to", to as i64),
+                    ("tokens", tokens as i64),
                 ],
             ),
         };

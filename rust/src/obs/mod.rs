@@ -137,6 +137,32 @@ pub mod scale {
         ["grow", "warm", "drain", "cancel", "retire"];
 }
 
+/// Fault-injection lifecycle action codes (see `cluster::faults`).
+pub mod fault {
+    /// A shard crashed; `data` carries the blocks lost on it.
+    pub const CRASH: u8 = 0;
+    /// A crashed shard finished regrowing through warm-up.
+    pub const RECOVER: u8 = 1;
+    /// An interconnect partition window opened between `shard`/`peer`;
+    /// `data` carries the wire-cost factor (milli fixed-point).
+    pub const PARTITION: u8 = 2;
+    /// A partition window closed.
+    pub const HEAL: u8 = 3;
+    /// A mid-wire transfer was dropped by a crash (`data` = blocks).
+    pub const DROP: u8 = 4;
+    /// A prefix key lost its only copy in a crash (`data` = blocks).
+    pub const PREFIX_LOST: u8 = 5;
+
+    pub const NAMES: [&str; 6] = [
+        "crash",
+        "recover",
+        "partition",
+        "heal",
+        "drop",
+        "prefix_lost",
+    ];
+}
+
 // ---------------------------------------------------------------------
 // Event alphabet
 // ---------------------------------------------------------------------
@@ -184,6 +210,23 @@ pub enum TraceEvent {
     /// Autoscale lifecycle action on `shard` (see [`scale`]);
     /// `serving` is the post-action serving count.
     Autoscale { action: u8, shard: u32, serving: u32 },
+    /// Fault-injection lifecycle action (see [`fault`]). `peer` is the
+    /// far side of a partition window (`u32::MAX` when unpaired);
+    /// `data` is kind-specific (blocks lost, factor in milli).
+    Fault {
+        kind: u8,
+        shard: u32,
+        peer: u32,
+        data: u64,
+    },
+    /// Crash recovery re-queued app `app` from the dead shard `from`
+    /// onto `to`, charging `tokens` re-prefill tokens.
+    Requeue {
+        app: u64,
+        from: u32,
+        to: u32,
+        tokens: u64,
+    },
 }
 
 impl TraceEvent {
@@ -202,6 +245,8 @@ impl TraceEvent {
             TraceEvent::RouteDecision { .. } => 9,
             TraceEvent::MigrationBatch { .. } => 10,
             TraceEvent::Autoscale { .. } => 11,
+            TraceEvent::Fault { .. } => 12,
+            TraceEvent::Requeue { .. } => 13,
         }
     }
 }
@@ -282,6 +327,18 @@ impl TraceRecord {
                 shard,
                 serving,
             } => format!("{action}:{shard}:{serving}"),
+            TraceEvent::Fault {
+                kind,
+                shard,
+                peer,
+                data,
+            } => format!("{kind}:{shard}:{peer}:{data}"),
+            TraceEvent::Requeue {
+                app,
+                from,
+                to,
+                tokens,
+            } => format!("{app}:{from}:{to}:{tokens}"),
         };
         format!("{head}:{tail}")
     }
@@ -354,6 +411,18 @@ impl TraceRecord {
                 action: u8::try_from(next_u64(&mut it)?).ok()?,
                 shard: u32::try_from(next_u64(&mut it)?).ok()?,
                 serving: u32::try_from(next_u64(&mut it)?).ok()?,
+            },
+            12 => TraceEvent::Fault {
+                kind: u8::try_from(next_u64(&mut it)?).ok()?,
+                shard: u32::try_from(next_u64(&mut it)?).ok()?,
+                peer: u32::try_from(next_u64(&mut it)?).ok()?,
+                data: next_u64(&mut it)?,
+            },
+            13 => TraceEvent::Requeue {
+                app: next_u64(&mut it)?,
+                from: u32::try_from(next_u64(&mut it)?).ok()?,
+                to: u32::try_from(next_u64(&mut it)?).ok()?,
+                tokens: next_u64(&mut it)?,
             },
             _ => return None,
         };
@@ -587,6 +656,32 @@ impl TraceSink {
             serving,
         });
     }
+
+    #[inline]
+    pub fn fault(&mut self, kind: u8, shard: u32, peer: u32, data: u64) {
+        if !self.active() {
+            return;
+        }
+        self.push(TraceEvent::Fault {
+            kind,
+            shard,
+            peer,
+            data,
+        });
+    }
+
+    #[inline]
+    pub fn requeue(&mut self, app: u64, from: u32, to: u32, tokens: u64) {
+        if !self.active() {
+            return;
+        }
+        self.push(TraceEvent::Requeue {
+            app,
+            from,
+            to,
+            tokens,
+        });
+    }
 }
 
 /// Merge per-sink streams into one deterministic timeline, stable-sorted
@@ -644,6 +739,18 @@ mod tests {
                 action: scale::RETIRE,
                 shard: 4,
                 serving: 2,
+            },
+            TraceEvent::Fault {
+                kind: fault::CRASH,
+                shard: 2,
+                peer: u32::MAX,
+                data: 96,
+            },
+            TraceEvent::Requeue {
+                app: 17,
+                from: 2,
+                to: 0,
+                tokens: 2_048,
             },
         ];
         for (i, ev) in evs.iter().enumerate() {

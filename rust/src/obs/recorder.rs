@@ -6,7 +6,9 @@
 //! `--assert-*` CLI check is on. The ring never grows after its first
 //! fill, so arming it adds no steady-state allocation.
 
-use super::{planner, prefix, scale, state, xfer, TraceEvent, TraceRecord};
+use super::{
+    fault, planner, prefix, scale, state, xfer, TraceEvent, TraceRecord,
+};
 
 /// Ring capacity: enough to cover several scheduling windows of context
 /// without mattering for memory (a record is a few dozen bytes).
@@ -144,6 +146,29 @@ pub fn format_record(r: &TraceRecord) -> String {
         } => format!(
             "autoscale {} shard{s} serving={serving}",
             scale::NAMES.get(action as usize).copied().unwrap_or("?")
+        ),
+        TraceEvent::Fault {
+            kind,
+            shard: s,
+            peer,
+            data,
+        } => format!(
+            "fault {} shard{s} peer={} data={data}",
+            fault::NAMES.get(kind as usize).copied().unwrap_or("?"),
+            if peer == u32::MAX {
+                "-".to_string()
+            } else {
+                format!("shard{peer}")
+            },
+        ),
+        TraceEvent::Requeue {
+            app,
+            from,
+            to,
+            tokens,
+        } => format!(
+            "requeue app={app} shard{from} -> shard{to} \
+             tokens={tokens}"
         ),
     };
     format!("  [{:>12}us {shard} #{}] {body}", r.at_us, r.seq)

@@ -513,6 +513,67 @@ fn autoscale_cold_and_warming_shards_serve_nothing() {
     assert_eq!(rep.final_active_shards, 1);
 }
 
+// ---------------------------------------------------------------------
+// Fault injection and crash recovery
+// ---------------------------------------------------------------------
+
+fn crash_cfg(seed: u64, directory: bool) -> ClusterConfig {
+    let mut c = cfg(4, PlacementPolicy::AgentAffinity, 0.06, seed);
+    c.faults.enabled = true;
+    c.faults.crash_schedule = "1@3000".into();
+    c.prefix_directory = directory;
+    if directory {
+        // Replicate on the first remote hit so survivors hold warm
+        // copies of the shared prefixes before the crash lands.
+        c.prefix_replicate_threshold = 1;
+    }
+    c
+}
+
+/// A mid-run shard crash is survivable: the scheduled crash executes,
+/// every application still completes (the dead shard's apps re-queue
+/// through the router onto survivors), and block conservation holds
+/// with the crash-loss ledger folded in.
+#[test]
+fn crash_recovery_completes_all_apps_and_conserves() {
+    let mut eng = ClusterEngine::new(crash_cfg(11, true));
+    let rep = eng.run(&mixed(2.0, 16).with_tool_noise(0.2));
+    assert!(!rep.truncated);
+    assert_eq!(rep.crashes, 1, "scheduled crash must execute");
+    assert_eq!(rep.aggregate.apps_completed, 16);
+    eng.check_conservation().expect("conservation after crash");
+}
+
+/// The replica-warmed recovery claim: with the prefix directory
+/// replicating hot prefixes onto survivors before the crash, the dead
+/// shard's re-queued applications find warm copies at their new homes
+/// and save more re-prefill tokens than the identical crash with the
+/// directory off (no replicas anywhere), averaged over seeds.
+#[test]
+fn replica_warmed_recovery_saves_reprefill_tokens() {
+    let seeds = [1u64, 2, 3];
+    let mut warmed = 0u64;
+    let mut cold = 0u64;
+    for &seed in &seeds {
+        let w = mixed(2.0, 20).with_tool_noise(0.2);
+        let rep = ClusterEngine::new(crash_cfg(seed, true)).run(&w);
+        assert!(!rep.truncated, "warmed seed {seed}");
+        assert_eq!(rep.aggregate.apps_completed, 20);
+        assert_eq!(rep.crashes, 1, "warmed seed {seed}");
+        warmed += rep.aggregate.counters.prefill_tokens_saved;
+        let rep = ClusterEngine::new(crash_cfg(seed, false)).run(&w);
+        assert!(!rep.truncated, "cold seed {seed}");
+        assert_eq!(rep.aggregate.apps_completed, 20);
+        assert_eq!(rep.crashes, 1, "cold seed {seed}");
+        cold += rep.aggregate.counters.prefill_tokens_saved;
+    }
+    assert!(
+        warmed > cold,
+        "replica-warmed recovery must save more re-prefill tokens \
+         than no-replica recovery ({warmed} vs {cold})"
+    );
+}
+
 /// Aggregate rollup is the sum of the shard bundles.
 #[test]
 fn aggregate_is_sum_of_shards() {

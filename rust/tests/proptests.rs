@@ -1008,3 +1008,69 @@ fn prop_latency_merge_is_order_insensitive() {
         assert_eq!(fwd.max_us(), rev.max_us(), "seed {seed}");
     }
 }
+
+// ---------------------------------------------------------------------
+// Fault injection: seeded replay determinism + accounted-loss
+// conservation
+// ---------------------------------------------------------------------
+
+/// A seeded fault plan (random crashes + partition windows) replayed
+/// twice produces byte-identical report digests, every application
+/// still completes, and the conservation invariant extended with the
+/// crash-loss ledger holds: migrated blocks settle into landed +
+/// dropped + crash-wire-lost, and the engine's own pool check passes.
+#[test]
+fn prop_fault_replay_is_deterministic_and_conserving() {
+    use tokencake::cluster::ClusterEngine;
+    use tokencake::config::{ClusterConfig, PlacementPolicy};
+    use tokencake::graph::templates;
+    use tokencake::workload::ClusterWorkload;
+
+    for seed in 0..6u64 {
+        let mut rng = Rng::new(seed + 0xFA17);
+        let shards = rng.range_u64(3, 6) as usize;
+        let serve = ServeConfig::default()
+            .with_mode(Mode::TokenCake)
+            .with_seed(seed * 11 + 5)
+            .with_gpu_mem_frac(0.06);
+        let mut cfg = ClusterConfig::default()
+            .with_serve(serve)
+            .with_shards(shards)
+            .with_placement(PlacementPolicy::AgentAffinity);
+        cfg.faults.enabled = true;
+        cfg.faults.seed = seed + 1;
+        cfg.faults.crashes = rng.range_u64(1, 3) as u32;
+        cfg.faults.partitions = rng.range_u64(0, 3) as u32;
+        cfg.faults.window_start_us = 500_000;
+        cfg.faults.window_len_us = 8_000_000;
+        let w = ClusterWorkload::mixed(
+            &[
+                (templates::code_writer(), 2.0),
+                (templates::deep_research(), 1.0),
+            ],
+            2.0,
+            10,
+        )
+        .with_tool_noise(0.2);
+        let mut eng_a = ClusterEngine::new(cfg.clone());
+        let rep_a = eng_a.run(&w);
+        let rep_b = ClusterEngine::new(cfg).run(&w);
+        assert_eq!(
+            rep_a.digest(),
+            rep_b.digest(),
+            "seed {seed}: fault replay diverged"
+        );
+        assert!(!rep_a.truncated, "seed {seed}");
+        assert_eq!(rep_a.aggregate.apps_completed, 10, "seed {seed}");
+        assert_eq!(
+            rep_a.migration_blocks,
+            rep_a.migration_landed_blocks
+                + rep_a.migration_drop_blocks
+                + rep_a.crash_lost_wire_blocks,
+            "seed {seed}: migrated blocks unaccounted under faults"
+        );
+        eng_a
+            .check_conservation()
+            .unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+    }
+}

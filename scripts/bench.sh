@@ -7,7 +7,7 @@
 # commands, exactly, in one place: run it on a machine with cargo and
 # the projected files are replaced by measured ones.
 #
-#   scripts/bench.sh            # writes BENCH_2..BENCH_5.json in repo root
+#   scripts/bench.sh            # writes BENCH_2..BENCH_5 and BENCH_7
 #   OUT=/tmp scripts/bench.sh   # writes elsewhere
 #
 # BENCH_2 (hot-path throughput), BENCH_3 (epoch gating / batched
@@ -72,5 +72,39 @@ $RUN cluster --shards 1 $BURST --autoscale --min-shards 1 --max-shards 8 \
   printf '  ]\n}\n'
 } > "$OUT/BENCH_5.json"
 
+# ---- BENCH_7: crash recovery cost vs replica aggressiveness ----------
+# Fixed crash schedule (shard 1 dies at t=3s) over the same pressured
+# workload; the replica knob sweeps no-replicas (prefix directory off)
+# vs default (replicate after 2 remote hits) vs aggressive (replicate
+# on the first). Compare crash_requeue_tokens, prefill_tokens_saved,
+# and mean/p99 latency across the rows — warm survivor replicas should
+# cut the re-prefill bill. Every run must pass --assert-recovery.
+CRASH="--shards 4 --policy affinity --qps 2.0 --apps 48 --frac 0.06 \
+  --seed 1 --crash 1@3000 --assert-recovery"
+cat > /tmp/tokencake_no_replicas.toml <<'EOF'
+[cluster]
+prefix_directory = false
+EOF
+cat > /tmp/tokencake_aggressive_replicas.toml <<'EOF'
+[cluster]
+prefix_replicate_threshold = 1
+EOF
+$RUN cluster $CRASH --config /tmp/tokencake_no_replicas.toml \
+  --json /tmp/bench7_none.json --json-name crash-no-replicas
+$RUN cluster $CRASH \
+  --json /tmp/bench7_default.json --json-name crash-replicas-thresh2
+$RUN cluster $CRASH --config /tmp/tokencake_aggressive_replicas.toml \
+  --json /tmp/bench7_aggr.json --json-name crash-replicas-thresh1
+{
+  printf '{\n  "benchmark": "tokencake_crash_recovery",\n'
+  printf '  "workload": "mix cw:2,dr:1, 2.0 qps, 48 apps, frac 0.06, seed 1, crash shard 1 at t=3s",\n'
+  printf '  "metric": "crash_requeue_tokens + prefill_tokens_saved + latency vs replica aggressiveness (directory off / threshold 2 / threshold 1)",\n'
+  printf '  "runs": [\n'
+  sed -e 's/[[:space:]]*$//' /tmp/bench7_none.json | sed -e '$ s/$/,/'
+  sed -e 's/[[:space:]]*$//' /tmp/bench7_default.json | sed -e '$ s/$/,/'
+  cat /tmp/bench7_aggr.json
+  printf '  ]\n}\n'
+} > "$OUT/BENCH_7.json"
+
 echo "wrote $OUT/BENCH_2.json $OUT/BENCH_3.json $OUT/BENCH_4.json" \
-     "$OUT/BENCH_4_baseline.json $OUT/BENCH_5.json"
+     "$OUT/BENCH_4_baseline.json $OUT/BENCH_5.json $OUT/BENCH_7.json"
