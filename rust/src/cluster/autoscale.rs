@@ -780,7 +780,15 @@ fn drain_one_window(
     // what makes a drain affordable. Pinned entries (in-flight reads)
     // wait for the next window; an exhausted window budget defers only
     // the relocations, never the free drops.
-    let entries = eng.shards[src].st.prefix.local_entries();
+    let mut entries = eng.shards[src].st.prefix.local_entries();
+    if eng.shards[src].st.qos.enabled {
+        // Tier-ordered evacuation: Interactive sole copies relocate
+        // first, so a window budget that runs dry defers Batch-tier
+        // entries — never the latency-critical ones. Stable sort keeps
+        // the key order within a tier, preserving determinism.
+        let prefix = &eng.shards[src].st.prefix;
+        entries.sort_by_key(|&(key, ..)| prefix.tier_of(key));
+    }
     let mut budget_dry = false;
     for (key, _loc, blocks, tokens, pinned) in entries {
         if pinned {

@@ -40,6 +40,7 @@ use crate::kvcache::{
 };
 use crate::metrics::MetricsBundle;
 use crate::obs::{self, TraceSink};
+use crate::qos;
 use crate::sim::{Clock, EventQueue, Rng};
 use crate::temporal;
 use crate::workload::{ClusterWorkload, ToolSim};
@@ -180,6 +181,23 @@ pub struct ClusterReport {
     /// (first activation → retirement-or-end; the full run for a fixed
     /// fleet). The weight behind [`Self::effective_util`].
     pub provisioned_us: Vec<u64>,
+    /// Multi-tenant QoS (`[cluster.qos]`): admission-gate outcome
+    /// counters per tier (Interactive/Standard/Batch). All zero for a
+    /// QoS-off run.
+    pub qos_enabled: bool,
+    pub qos_arrivals: [u64; qos::TIERS],
+    pub qos_admitted: [u64; qos::TIERS],
+    pub qos_deferred: [u64; qos::TIERS],
+    pub qos_shed: [u64; qos::TIERS],
+    pub qos_aged: [u64; qos::TIERS],
+    /// Deferred arrivals still parked in the gate when the run ended —
+    /// the no-starvation invariant (`--assert-qos`, auditor rule 8)
+    /// says this is always zero for a completed run.
+    pub qos_starved: u64,
+    /// Configured per-tier SLO targets (µs; zeros when QoS off).
+    pub qos_slo_us: [u64; qos::TIERS],
+    /// Observed per-tier app-latency p99 (µs; zero for empty tiers).
+    pub tier_p99_us: [u64; qos::TIERS],
     pub truncated: bool,
 }
 
@@ -245,6 +263,17 @@ impl ClusterReport {
         } else {
             String::new()
         };
+        let qos = if self.qos_enabled {
+            format!(
+                " qos shed={} starved={} int_p99={:.1}s/slo{:.0}s",
+                self.qos_shed.iter().sum::<u64>(),
+                self.qos_starved,
+                self.tier_p99_us[0] as f64 / 1e6,
+                self.qos_slo_us[0] as f64 / 1e6,
+            )
+        } else {
+            String::new()
+        };
         // Elastic runs show serving/provisioned: "x2/8" is a fleet
         // that ended with 2 of 8 provisioned shards serving.
         let shards_str = if self.autoscale_enabled {
@@ -256,7 +285,7 @@ impl ClusterReport {
             "[cluster x{} {}] apps={} avg={:.1}s p99={:.1}s total={:.1}s \
              thpt={:.4}req/s eff_util={:.1}% migrations={} \
              migrated_blocks={} drops={} batches={} pfx_remote_hits={} \
-             pfx_repl={} planner={}/{}steps{scale}{fault}",
+             pfx_repl={} planner={}/{}steps{scale}{fault}{qos}",
             shards_str,
             self.policy,
             self.aggregate.apps_completed,
@@ -363,6 +392,23 @@ impl ClusterReport {
             self.settle_landed_transfers,
             self.settle_dropped_transfers,
         ));
+        // QoS admissions are scheduler decisions: same-seed reruns with
+        // the gate on must admit, defer, age, and shed identically.
+        let j = |a: &[u64; qos::TIERS]| {
+            a.map(|v| v.to_string()).join(";")
+        };
+        out.push_str(&format!(
+            "qos={} arrivals=[{}] admitted=[{}] deferred=[{}] \
+             shed=[{}] aged=[{}] starved={} tier_p99=[{}]\n",
+            self.qos_enabled,
+            j(&self.qos_arrivals),
+            j(&self.qos_admitted),
+            j(&self.qos_deferred),
+            j(&self.qos_shed),
+            j(&self.qos_aged),
+            self.qos_starved,
+            j(&self.tier_p99_us),
+        ));
         for (i, m) in self.shards.iter().enumerate() {
             out.push_str(&m.digest_line(&format!("shard{i}")));
         }
@@ -404,6 +450,12 @@ pub struct ClusterEngine {
     prefix_replicated_blocks: u64,
     /// Elastic autoscaling control plane (None = fixed fleet).
     autoscale: Option<Autoscaler>,
+    /// Multi-tenant QoS admission gate (None = QoS disabled). Sits in
+    /// front of the router: every arrival passes `offer` before it may
+    /// route, and deferred arrivals release through `poll`.
+    qos: Option<qos::QosGate>,
+    /// Template → tier for the running workload (empty when QoS off).
+    qos_tiers: Vec<qos::Tier>,
     /// Fault-injection control plane (None = fault-free run).
     faults: Option<FaultState>,
     /// `crashed[i]` — shard `i` is down: crash applied, capacity not
@@ -510,9 +562,16 @@ impl ClusterEngine {
                 router.set_eligible(i, a.is_placeable(i));
             }
         }
+        let qos_gate = if cfg.qos.enabled {
+            Some(qos::QosGate::new(&cfg.qos, 0))
+        } else {
+            None
+        };
         Self {
             router,
             autoscale,
+            qos: qos_gate,
+            qos_tiers: Vec::new(),
             faults,
             crashed: vec![false; n],
             settling: false,
@@ -980,6 +1039,99 @@ impl ClusterEngine {
         self.shards.iter().map(|s| s.st.snapshot()).collect()
     }
 
+    /// Highest pressure band across serving shards, classified from
+    /// GPU occupancy against the shared policy watermarks (same bands
+    /// as [`crate::coordination::ServeState`]) — the deterministic
+    /// fleet-overload half of the QoS shed signal.
+    fn max_pressure_band(&self) -> u8 {
+        let p = &self.cfg.serve.policy;
+        let mut band = 0u8;
+        for i in 0..self.shards.len() {
+            if !self.is_steppable(i) {
+                continue;
+            }
+            let u = self.shards[i].st.gpu.usage();
+            let b = if u >= p.emergency_usage {
+                4
+            } else if u >= p.high_watermark {
+                3
+            } else if u >= p.offload_usage_threshold {
+                2
+            } else if u >= p.low_watermark {
+                1
+            } else {
+                0
+            };
+            band = band.max(b);
+        }
+        band
+    }
+
+    /// Route one admitted arrival and inject it on the chosen shard.
+    /// The per-app RNG keys off the arrival `seq`, so sampling and
+    /// placement inputs are identical whether the app admitted
+    /// immediately or was released from the QoS deferred queue later.
+    fn route_arrival(
+        &mut self,
+        seq: u32,
+        template: usize,
+        now: u64,
+        w: &ClusterWorkload,
+        tool_sim: &ToolSim,
+    ) {
+        let snaps = self.snapshots();
+        // Warm credit from actual resident prefix blocks, not just
+        // the served-here bit.
+        let warmth: Option<Vec<f64>> = if self.prefix_enabled {
+            Some(
+                (0..snaps.len())
+                    .map(|s| self.prefix_dir.warmth(template, s))
+                    .collect(),
+            )
+        } else {
+            None
+        };
+        // Lifetime-aware placement: long-lived apps steer away from
+        // shards the controller is likely to drain next.
+        let bias: Option<Vec<f64>> = self.autoscale.as_mut().map(|a| {
+            a.note_arrival();
+            a.route_bias(template, now)
+        });
+        // Tier weight scales the drain/lifetime bias: Interactive
+        // steers furthest off next-to-drain shards, Batch barely
+        // reacts (it is evacuated first anyway).
+        let tier_weight = if self.qos.is_some() {
+            qos::router_tier_weight(
+                self.qos_tiers
+                    .get(template)
+                    .copied()
+                    .unwrap_or_default(),
+            )
+        } else {
+            1.0
+        };
+        let shard = self.router.route_tiered(
+            template,
+            &snaps,
+            warmth.as_deref(),
+            bias.as_deref(),
+            tier_weight,
+        );
+        // Milli fixed-point keeps the record integer (determinism
+        // contract); -1 = term absent.
+        self.trace.route(
+            seq,
+            shard as u32,
+            warmth
+                .as_ref()
+                .map_or(-1, |w| (w[shard] * 1000.0) as i64),
+            bias.as_ref().map_or(-1, |b| (b[shard] * 1000.0) as i64),
+        );
+        let mut rng = self.rng.fold(1000 + seq as u64);
+        let scales = w.dataset.sample(&mut rng);
+        self.shards[shard].inject_app(template, scales, tool_sim);
+    }
+
     /// Run a heterogeneous workload across the cluster to completion.
     /// One run per engine: the clock, ledgers, and router state are not
     /// reset — build a fresh `ClusterEngine` for each experiment.
@@ -1014,6 +1166,21 @@ impl ClusterEngine {
             }
         }
 
+        // Tier wiring: the gate keys arrivals by template tier, and
+        // every shard gets a read-only [`qos::ShardQos`]. Attribution
+        // (per-tier latency in the report) follows the workload's tier
+        // labels even for ungated runs — that is what makes a QoS
+        // on/off A-B comparison measurable — while SLO-aware victim
+        // ordering stays behind `enabled`. With all-Standard labels
+        // this is exactly the legacy single-bucket behavior.
+        self.qos_tiers = w.tiers();
+        for shard in self.shards.iter_mut() {
+            shard.st.qos = qos::ShardQos::configure(
+                &self.cfg.qos,
+                self.qos_tiers.clone(),
+            );
+        }
+
         let mut arr_rng = self.rng.fold(1);
         let arrivals = w.arrivals(&mut arr_rng);
         for (i, (t, _)) in arrivals.iter().enumerate() {
@@ -1021,6 +1188,9 @@ impl ClusterEngine {
         }
         let tool_sim = ToolSim::new(w.tool_noise);
         let total_apps = w.num_apps as u64;
+        // Scratch for gate polls (reused, no steady-state allocation).
+        let mut qos_admits: Vec<qos::QosRelease> = Vec::new();
+        let mut qos_ages: Vec<qos::QosRelease> = Vec::new();
 
         let mut iters: u64 = 0;
         let mut truncated = false;
@@ -1063,55 +1233,46 @@ impl ClusterEngine {
                 match ev.payload {
                     CEv::Arrival { seq } => {
                         let (_, template) = arrivals[seq as usize];
-                        let snaps = self.snapshots();
-                        // Warm credit from actual resident prefix
-                        // blocks, not just the served-here bit.
-                        let warmth: Option<Vec<f64>> =
-                            if self.prefix_enabled {
-                                Some(
-                                    (0..snaps.len())
-                                        .map(|s| {
-                                            self.prefix_dir
-                                                .warmth(template, s)
-                                        })
-                                        .collect(),
-                                )
-                            } else {
-                                None
+                        // QoS admission gate in front of the router:
+                        // shed/defer before any routing work happens.
+                        // The overload signal is a pure function of
+                        // shard state, so verdicts replay identically.
+                        let verdict = if self.qos.is_some() {
+                            let tier = self
+                                .qos_tiers
+                                .get(template)
+                                .copied()
+                                .unwrap_or_default();
+                            let band = self.max_pressure_band();
+                            let v = self
+                                .qos
+                                .as_mut()
+                                .unwrap()
+                                .offer(seq, tier, now, band);
+                            let what = match v {
+                                qos::Admission::Admit => {
+                                    obs::qos::ADMIT
+                                }
+                                qos::Admission::Defer => {
+                                    obs::qos::DEFER
+                                }
+                                qos::Admission::Shed => obs::qos::SHED,
                             };
-                        // Lifetime-aware placement: long-lived apps
-                        // steer away from shards the controller is
-                        // likely to drain next.
-                        let bias: Option<Vec<f64>> = self
-                            .autoscale
-                            .as_mut()
-                            .map(|a| {
-                                a.note_arrival();
-                                a.route_bias(template, now)
-                            });
-                        let shard = self.router.route_biased(
-                            template,
-                            &snaps,
-                            warmth.as_deref(),
-                            bias.as_deref(),
-                        );
-                        // Milli fixed-point keeps the record integer
-                        // (determinism contract); -1 = term absent.
-                        self.trace.route(
-                            seq,
-                            shard as u32,
-                            warmth.as_ref().map_or(-1, |w| {
-                                (w[shard] * 1000.0) as i64
-                            }),
-                            bias.as_ref().map_or(-1, |b| {
-                                (b[shard] * 1000.0) as i64
-                            }),
-                        );
-                        let mut rng =
-                            self.rng.fold(1000 + seq as u64);
-                        let scales = w.dataset.sample(&mut rng);
-                        self.shards[shard]
-                            .inject_app(template, scales, &tool_sim);
+                            self.trace.qos(
+                                seq,
+                                tier.index() as u8,
+                                what,
+                                0,
+                            );
+                            v
+                        } else {
+                            qos::Admission::Admit
+                        };
+                        if verdict == qos::Admission::Admit {
+                            self.route_arrival(
+                                seq, template, now, w, &tool_sim,
+                            );
+                        }
                     }
                     CEv::IterDone { shard } => self.busy[shard] = false,
                     CEv::MigrationDone { id } => self.land_migration(id),
@@ -1127,7 +1288,45 @@ impl ClusterEngine {
                 }
             }
 
-            if self.apps_completed() >= total_apps {
+            // (b') QoS gate: release deferred arrivals whose token
+            // refills or age-out promotions are due now. Released
+            // arrivals route exactly like fresh ones (the per-app RNG
+            // keys off the arrival seq, not the admission instant).
+            if let Some(mut gate) = self.qos.take() {
+                gate.poll(now, &mut qos_admits, &mut qos_ages);
+                self.qos = Some(gate);
+                for r in &qos_ages {
+                    self.trace.qos(
+                        r.seq,
+                        r.tier.index() as u8,
+                        obs::qos::AGE,
+                        r.wait_us,
+                    );
+                }
+                for i in 0..qos_admits.len() {
+                    let r = qos_admits[i];
+                    self.trace.qos(
+                        r.seq,
+                        r.tier.index() as u8,
+                        obs::qos::ADMIT,
+                        r.wait_us,
+                    );
+                    let (_, template) = arrivals[r.seq as usize];
+                    self.route_arrival(
+                        r.seq, template, now, w, &tool_sim,
+                    );
+                }
+            }
+
+            // Shed arrivals never inject, so they can never complete:
+            // the completion target shrinks by exactly the shed count
+            // (explicit, accounted degradation — not lost work).
+            let shed = self
+                .qos
+                .as_ref()
+                .map(|g| g.stats.shed_total())
+                .unwrap_or(0);
+            if self.apps_completed() + shed >= total_apps {
                 // The workload is done, but drain evacuations / prefix
                 // replicas may still be on the wire — settle them so
                 // pools and stats close consistently.
@@ -1193,6 +1392,17 @@ impl ClusterEngine {
                         Some(f) => t.min(f),
                         None => t,
                     };
+                    // A deferred arrival's release time caps the jump
+                    // as well: the gate polls at its due instant, so
+                    // no queued request is ever skipped over.
+                    let t = match self
+                        .qos
+                        .as_ref()
+                        .and_then(|g| g.next_due_us(now))
+                    {
+                        Some(q) => t.min(q),
+                        None => t,
+                    };
                     self.clock.advance_to(t.max(now))
                 }
                 None => {
@@ -1218,6 +1428,17 @@ impl ClusterEngine {
                     // can unstick a fleet the rescue path cannot.
                     if let Some(f) = self.next_fault_due() {
                         self.clock.advance_to(f.max(now));
+                        continue;
+                    }
+                    // Deferred arrivals with no other work pending:
+                    // jump to the gate's next release (token refill or
+                    // age-out) — the no-starvation guarantee in motion.
+                    if let Some(q) = self
+                        .qos
+                        .as_ref()
+                        .and_then(|g| g.next_due_us(now))
+                    {
+                        self.clock.advance_to(q.max(now));
                         continue;
                     }
                     truncated = true;
@@ -1298,6 +1519,16 @@ impl ClusterEngine {
             Some(f) => (true, *f.ledger()),
             None => (false, faults::CrashLossLedger::default()),
         };
+        let (qos_enabled, qos_stats, qos_starved) = match &self.qos {
+            Some(g) => (true, g.stats, g.queued() as u64),
+            None => (false, qos::QosStats::default(), 0),
+        };
+        let tier_p99_us: [u64; qos::TIERS] =
+            std::array::from_fn(|i| {
+                let [p] =
+                    aggregate.tier_latency[i].percentiles_us([99.0]);
+                p
+            });
         ClusterReport {
             policy: self.cfg.placement.name(),
             num_shards: n,
@@ -1335,6 +1566,19 @@ impl ClusterEngine {
             shard_lifetimes_us: lifetimes,
             active_mask,
             provisioned_us,
+            qos_enabled,
+            qos_arrivals: qos_stats.arrivals,
+            qos_admitted: qos_stats.admitted,
+            qos_deferred: qos_stats.deferred,
+            qos_shed: qos_stats.shed,
+            qos_aged: qos_stats.aged,
+            qos_starved,
+            qos_slo_us: if qos_enabled {
+                self.cfg.qos.slo_us
+            } else {
+                [0; qos::TIERS]
+            },
+            tier_p99_us,
             truncated,
         }
     }
@@ -2144,7 +2388,34 @@ impl ClusterEngine {
             }
         }
         // Longest remaining stall first (most payback headroom); app id
-        // breaks exact ties so order never depends on storage.
+        // breaks exact ties so order never depends on storage. With
+        // QoS on, SLO headroom leads: the app furthest from violating
+        // its tier's SLO is the safest to move (milli fixed-point —
+        // the order stays integer-deterministic).
+        if st.qos.enabled {
+            let now = self.clock.now_us();
+            let mut decorated: Vec<(
+                i64,
+                (AppId, RequestId, u32, u64),
+            )> = found
+                .into_iter()
+                .map(|c| {
+                    let age = now
+                        .saturating_sub(st.apps[&c.0].arrival_us);
+                    let h = st.qos.headroom_milli(
+                        st.apps.template_of(&c.0),
+                        age,
+                    );
+                    (h, c)
+                })
+                .collect();
+            decorated.sort_by(|a, b| {
+                b.0.cmp(&a.0)
+                    .then(b.1 .3.cmp(&a.1 .3))
+                    .then(a.1 .0.cmp(&b.1 .0))
+            });
+            return decorated.into_iter().map(|(_, c)| c).collect();
+        }
         found.sort_by(|a, b| b.3.cmp(&a.3).then(a.0.cmp(&b.0)));
         found
     }

@@ -8,8 +8,15 @@
 //!
 //! ```text
 //!                 ┌────────────────────────────────────────┐
-//!   apps ───────▶ │ Router: RoundRobin | LeastLoaded |     │
-//!   (Poisson mix) │         AgentAffinity (KV-aware)       │
+//!   apps ───────▶ │ QosGate: per-tier token buckets,       │
+//!   (Poisson mix, │ aging queues (no starvation), Batch    │
+//!    tiered)      │ load-shedding under overload           │
+//!                 └──────────────────┬─────────────────────┘
+//!                                    ▼ admitted
+//!                 ┌────────────────────────────────────────┐
+//!                 │ Router: RoundRobin | LeastLoaded |     │
+//!                 │         AgentAffinity (KV-aware,       │
+//!                 │         tier-weighted drain bias)      │
 //!                 └───────┬──────────┬──────────┬──────────┘
 //!                         ▼          ▼          ▼
 //!                    ┌────────┐ ┌────────┐ ┌────────┐

@@ -134,6 +134,23 @@ impl Router {
         warmth: Option<&[f64]>,
         bias: Option<&[f64]>,
     ) -> usize {
+        self.route_tiered(template, snaps, warmth, bias, 1.0)
+    }
+
+    /// [`Self::route_biased`] with a QoS tier weight scaling the bias
+    /// term ([`crate::qos::router_tier_weight`]): Interactive apps
+    /// (weight > 1) feel the drain/lifetime penalty hardest and steer
+    /// furthest off next-to-drain shards; Batch (weight < 1) barely
+    /// reacts, since it is the first evacuated anyway. Weight 1.0 is
+    /// exactly the un-tiered behaviour.
+    pub fn route_tiered(
+        &mut self,
+        template: usize,
+        snaps: &[PressureSnapshot],
+        warmth: Option<&[f64]>,
+        bias: Option<&[f64]>,
+        tier_weight: f64,
+    ) -> usize {
         debug_assert_eq!(snaps.len(), self.shards);
         debug_assert!(
             self.eligible.iter().any(|&e| e),
@@ -162,7 +179,8 @@ impl Router {
                         continue;
                     }
                     let score = Self::load_score(s)
-                        + bias.map(|b| b[i]).unwrap_or(0.0);
+                        + tier_weight
+                            * bias.map(|b| b[i]).unwrap_or(0.0);
                     // Strict `<` + ascending index scan = exact ties
                     // break to the lowest eligible shard id.
                     if score < best_score {
@@ -205,7 +223,8 @@ impl Router {
                         0.0
                     };
                     let score = load - bonus
-                        + bias.map(|b| b[i]).unwrap_or(0.0);
+                        + tier_weight
+                            * bias.map(|b| b[i]).unwrap_or(0.0);
                     if score < best_score {
                         best_score = score;
                         best = i;
@@ -386,6 +405,32 @@ mod tests {
         // A big enough load gap still overrides the bias.
         let gap = vec![snap(0.8, 0, 0), snap(0.2, 0, 0)];
         assert_eq!(r.route_biased(0, &gap, None, Some(&[0.0, 0.1])), 1);
+    }
+
+    #[test]
+    fn tier_weight_scales_the_drain_bias() {
+        // Shard 1 is slightly less loaded but carries a drain penalty
+        // that only outweighs the load gap once tier-amplified: an
+        // Interactive app (weight 1.5) avoids the next-to-drain shard
+        // while a Batch app (weight 0.5) still takes the lower load.
+        let mut r = Router::new(PlacementPolicy::LeastLoaded, 2, 1, 0.8);
+        let snaps = vec![snap(0.40, 0, 0), snap(0.35, 0, 0)];
+        let bias = [0.0, 0.06];
+        assert_eq!(
+            r.route_tiered(0, &snaps, None, Some(&bias), 1.5),
+            0,
+            "interactive: amplified drain penalty wins"
+        );
+        assert_eq!(
+            r.route_tiered(0, &snaps, None, Some(&bias), 0.5),
+            1,
+            "batch: damped penalty loses to the load gap"
+        );
+        // Weight 1.0 is exactly route_biased.
+        assert_eq!(
+            r.route_tiered(0, &snaps, None, Some(&bias), 1.0),
+            r.route_biased(0, &snaps, None, Some(&bias)),
+        );
     }
 
     #[test]

@@ -490,6 +490,10 @@ pub struct ClusterConfig {
     /// crashes with full recovery accounting, plus interconnect
     /// partition/straggler windows.
     pub faults: FaultConfig,
+    /// Multi-tenant QoS (`[cluster.qos]` section): per-tier token-bucket
+    /// admission in front of the router, load shedding under overload,
+    /// and SLO-aware victim selection inside the shards.
+    pub qos: crate::qos::QosConfig,
 }
 
 impl Default for ClusterConfig {
@@ -510,6 +514,7 @@ impl Default for ClusterConfig {
             prefix_replicate_threshold: 2,
             autoscale: AutoscaleConfig::default(),
             faults: FaultConfig::default(),
+            qos: crate::qos::QosConfig::default(),
         }
     }
 }
@@ -653,6 +658,55 @@ impl ClusterConfig {
                     fc.window_len_us = value.parse().map_err(|_| bad())?
                 }
                 "drop_wire" => fc.drop_wire = on_off(value)?,
+                _ => {
+                    return Err(ParseError::UnknownKey {
+                        section: section.to_string(),
+                        key: key.to_string(),
+                    })
+                }
+            }
+            return Ok(());
+        }
+        if section == "cluster.qos" {
+            let q = &mut self.qos;
+            // Per-tier keys use the `_interactive/_standard/_batch`
+            // suffix; `*_ms` keys convert to µs here so the struct
+            // stays single-unit.
+            let tier_ix = |k: &str| match k {
+                k if k.ends_with("_interactive") => Some(0usize),
+                k if k.ends_with("_standard") => Some(1),
+                k if k.ends_with("_batch") => Some(2),
+                _ => None,
+            };
+            match key {
+                "enabled" => q.enabled = on_off(value)?,
+                "age_promote_ms" => {
+                    q.age_promote_us = value
+                        .parse::<u64>()
+                        .map_err(|_| bad())?
+                        .saturating_mul(1000)
+                }
+                "shed_band" => {
+                    q.shed_band = value.parse().map_err(|_| bad())?
+                }
+                "shed_queue_depth" => {
+                    q.shed_queue_depth =
+                        value.parse().map_err(|_| bad())?
+                }
+                k if k.starts_with("rate_") && tier_ix(k).is_some() => {
+                    q.rate_per_s[tier_ix(k).unwrap()] =
+                        value.parse().map_err(|_| bad())?
+                }
+                k if k.starts_with("burst_") && tier_ix(k).is_some() => {
+                    q.burst[tier_ix(k).unwrap()] =
+                        value.parse().map_err(|_| bad())?
+                }
+                k if k.starts_with("slo_ms_") && tier_ix(k).is_some() => {
+                    q.slo_us[tier_ix(k).unwrap()] = value
+                        .parse::<u64>()
+                        .map_err(|_| bad())?
+                        .saturating_mul(1000)
+                }
                 _ => {
                     return Err(ParseError::UnknownKey {
                         section: section.to_string(),
@@ -1068,6 +1122,51 @@ mod tests {
         assert!(c
             .apply_kv("cluster.faults", "crash_schedule", "x@9")
             .is_err());
+    }
+
+    #[test]
+    fn qos_section_kv_overrides() {
+        let mut c = ClusterConfig::default();
+        assert!(!c.qos.enabled);
+        c.apply_kv("cluster.qos", "enabled", "on").unwrap();
+        c.apply_kv("cluster.qos", "rate_interactive", "6.0").unwrap();
+        c.apply_kv("cluster.qos", "rate_standard", "3.0").unwrap();
+        c.apply_kv("cluster.qos", "rate_batch", "1.5").unwrap();
+        c.apply_kv("cluster.qos", "burst_interactive", "10").unwrap();
+        c.apply_kv("cluster.qos", "burst_batch", "3").unwrap();
+        c.apply_kv("cluster.qos", "slo_ms_interactive", "1500")
+            .unwrap();
+        c.apply_kv("cluster.qos", "slo_ms_standard", "6000").unwrap();
+        c.apply_kv("cluster.qos", "slo_ms_batch", "45000").unwrap();
+        c.apply_kv("cluster.qos", "age_promote_ms", "3000").unwrap();
+        c.apply_kv("cluster.qos", "shed_band", "4").unwrap();
+        c.apply_kv("cluster.qos", "shed_queue_depth", "12").unwrap();
+        assert!(c.qos.enabled);
+        assert_eq!(c.qos.rate_per_s, [6.0, 3.0, 1.5]);
+        assert_eq!(c.qos.burst[0], 10);
+        assert_eq!(c.qos.burst[2], 3);
+        assert_eq!(
+            c.qos.slo_us,
+            [1_500_000, 6_000_000, 45_000_000]
+        );
+        assert_eq!(c.qos.age_promote_us, 3_000_000);
+        assert_eq!(c.qos.shed_band, 4);
+        assert_eq!(c.qos.shed_queue_depth, 12);
+        c.qos.validate();
+        assert!(c.apply_kv("cluster.qos", "nope", "1").is_err());
+        assert!(c
+            .apply_kv("cluster.qos", "rate_interactive", "x")
+            .is_err());
+    }
+
+    #[test]
+    #[should_panic]
+    fn qos_validate_rejects_zero_rate() {
+        let q = crate::qos::QosConfig {
+            rate_per_s: [0.0, 1.0, 1.0],
+            ..Default::default()
+        };
+        q.validate();
     }
 
     #[test]

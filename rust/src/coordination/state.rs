@@ -262,6 +262,11 @@ pub struct ServeState {
     pub throughput: ThroughputEstimator,
     pub spatial: SpatialState,
     pub metrics: MetricsBundle,
+    /// Per-shard QoS view: template → [`crate::qos::Tier`] plus SLO
+    /// targets, used for SLO-headroom victim biasing and per-tier
+    /// latency recording. Disabled ([`crate::qos::ShardQos::off`]) by
+    /// default so legacy single-tenant runs are bit-identical.
+    pub qos: crate::qos::ShardQos,
     /// Scheduler-emitted side effects the engine drains each step.
     pub outbox: Vec<super::Action>,
     /// Hot-path scratch buffers (admission ordering).
@@ -333,6 +338,7 @@ impl ServeState {
                 critical_types: Vec::new(),
             },
             metrics: MetricsBundle::default(),
+            qos: crate::qos::ShardQos::off(),
             outbox: Vec::new(),
             scratch: SchedScratch::default(),
             epochs: SchedEpochs::default(),
@@ -803,9 +809,10 @@ impl ServeState {
         if done {
             app.finished_us = Some(now_us);
             self.metrics.apps_completed += 1;
-            self.metrics
-                .latency
-                .record_us(now_us - app.arrival_us);
+            let e2e_us = now_us - app.arrival_us;
+            self.metrics.latency.record_us(e2e_us);
+            let tier = self.qos.tier_of(template);
+            self.metrics.tier_latency[tier.index()].record_us(e2e_us);
         }
         (ready_funcs, done)
     }

@@ -685,14 +685,30 @@ impl SimEngine {
                     *rid != grower && self.st.reqs[rid].priority < g_prio
                 })
                 .collect();
+            // With QoS on, SLO distance leads: the victim whose app has
+            // the *most* SLO headroom is the safest to evict (milli
+            // fixed-point; neutral zero when disabled).
+            let now_us = self.clock.now_us();
+            let headroom = |rid: &RequestId| -> i64 {
+                if !self.st.qos.enabled {
+                    return 0;
+                }
+                let app_id = self.st.reqs[rid].app_id;
+                let age = now_us
+                    .saturating_sub(self.st.apps[&app_id].arrival_us);
+                self.st
+                    .qos
+                    .headroom_milli(self.st.apps.template_of(&app_id), age)
+            };
             let pick = |pool: &[RequestId]| {
                 pool.iter()
                     .copied()
                     .min_by(|a, b| {
                         let ra = &self.st.reqs[a];
                         let rb = &self.st.reqs[b];
-                        ra.priority
-                            .total_cmp(&rb.priority)
+                        headroom(b)
+                            .cmp(&headroom(a))
+                            .then(ra.priority.total_cmp(&rb.priority))
                             .then(ra.context_tokens.cmp(&rb.context_tokens))
                     })
             };

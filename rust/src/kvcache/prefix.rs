@@ -107,6 +107,11 @@ struct Entry {
     /// In-flight H2D prefix uploads reading this entry's CPU backing.
     /// A pinned entry cannot be evicted, demoted, or displaced.
     readers: u32,
+    /// QoS tier index of the template that produced the prefix
+    /// ([`crate::qos::Tier`]; 1 = Standard when unknown). Reclaim
+    /// under pressure prefers the highest tier index — Batch prefixes
+    /// yield before Interactive ones.
+    tier: u8,
 }
 
 /// The index itself: key → (backing, residency, recency), plus
@@ -200,6 +205,30 @@ impl PrefixIndex {
         upload_factor: f64,
         now_us: u64,
     ) -> Option<PrefixBacking> {
+        self.insert_tiered(
+            key,
+            blocks,
+            tokens,
+            backing,
+            upload_factor,
+            now_us,
+            1, // Standard: tier-neutral callers (directory replicas)
+        )
+    }
+
+    /// [`Self::insert`] carrying the producing template's QoS tier
+    /// index, so reclaim under pressure can prefer Batch-tier victims.
+    #[allow(clippy::too_many_arguments)]
+    pub fn insert_tiered(
+        &mut self,
+        key: PrefixKey,
+        blocks: u32,
+        tokens: u32,
+        backing: PrefixBacking,
+        upload_factor: f64,
+        now_us: u64,
+        tier: u8,
+    ) -> Option<PrefixBacking> {
         debug_assert!(
             match &backing {
                 PrefixBacking::Gpu(b) => b.len() == blocks,
@@ -226,6 +255,7 @@ impl PrefixIndex {
             last_use_us: now_us,
             hits: 0,
             readers: 0,
+            tier,
         };
         self.index_add(key, &e);
         self.entries.insert(key, e);
@@ -253,6 +283,31 @@ impl PrefixIndex {
     pub fn peek_lru_gpu(&self) -> Option<(PrefixKey, u32)> {
         let &(_, key) = self.lru_gpu.iter().next()?;
         Some((key, self.entries[&key].blocks))
+    }
+
+    /// Tier-aware reclaim victim: the LRU entry of the *highest* tier
+    /// index present (Batch yields before Standard before
+    /// Interactive), LRU within a tier. The LRU index iterates in
+    /// ascending `(last_use, key)` order, so the first entry seen per
+    /// tier is that tier's LRU — fully deterministic. Degenerates to
+    /// [`Self::peek_lru_gpu`] when every entry shares one tier.
+    pub fn peek_lru_gpu_tiered(&self) -> Option<(PrefixKey, u32)> {
+        let mut best: Option<(u8, PrefixKey, u32)> = None;
+        for &(_, key) in &self.lru_gpu {
+            let e = &self.entries[&key];
+            if best.map(|(t, _, _)| e.tier > t).unwrap_or(true) {
+                best = Some((e.tier, key, e.blocks));
+            }
+        }
+        best.map(|(_, key, blocks)| (key, blocks))
+    }
+
+    /// QoS tier index of an entry (1 = Standard when the key is
+    /// unknown), for tier-aware orderings outside the index — e.g. the
+    /// autoscaler's drain evacuation relocating Interactive sole
+    /// copies before Batch ones.
+    pub fn tier_of(&self, key: PrefixKey) -> u8 {
+        self.entries.get(&key).map(|e| e.tier).unwrap_or(1)
     }
 
     /// Least-recently-used *unpinned* CPU-resident entry.
@@ -490,6 +545,27 @@ mod tests {
         ix.insert(PrefixKey(3), 1, 16, gpu(1, 1), 1.0, 50);
         ix.insert(PrefixKey(7), 1, 16, gpu(2, 1), 1.0, 50);
         assert_eq!(ix.peek_lru_gpu(), Some((PrefixKey(3), 1)));
+    }
+
+    #[test]
+    fn tiered_reclaim_prefers_batch_then_lru_within_tier() {
+        let mut ix = PrefixIndex::new();
+        // Interactive (0) is the oldest entry — plain LRU would take
+        // it — but tier-aware reclaim prefers the Batch (2) entries,
+        // LRU-first among themselves.
+        ix.insert_tiered(PrefixKey(1), 1, 16, gpu(0, 1), 1.0, 10, 0);
+        ix.insert_tiered(PrefixKey(2), 2, 32, gpu(1, 2), 1.0, 20, 2);
+        ix.insert_tiered(PrefixKey(3), 1, 16, gpu(3, 1), 1.0, 30, 2);
+        assert_eq!(ix.peek_lru_gpu(), Some((PrefixKey(1), 1)));
+        assert_eq!(ix.peek_lru_gpu_tiered(), Some((PrefixKey(2), 2)));
+        ix.remove(PrefixKey(2)).unwrap();
+        assert_eq!(ix.peek_lru_gpu_tiered(), Some((PrefixKey(3), 1)));
+        ix.remove(PrefixKey(3)).unwrap();
+        // Only the Interactive entry left: it is the victim of last
+        // resort, and the untiered `insert` defaults to Standard.
+        assert_eq!(ix.peek_lru_gpu_tiered(), Some((PrefixKey(1), 1)));
+        ix.insert(PrefixKey(4), 1, 16, gpu(5, 1), 1.0, 40);
+        assert_eq!(ix.peek_lru_gpu_tiered(), Some((PrefixKey(4), 1)));
     }
 
     #[test]

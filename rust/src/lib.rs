@@ -34,6 +34,14 @@
 //!     trace_event exporter (--trace), an always-armed-in-debug flight
 //!     recorder dumped on conservation failures, and a post-hoc
 //!     invariant auditor (obs::TraceAuditor, `tokencake audit`)
+//! QOS multi-tenant admission & SLO spine (qos): every app carries a
+//!     Tier (Interactive/Standard/Batch); a deterministic per-tier
+//!     token-bucket gate in front of the router defers over-budget
+//!     arrivals in an aging priority queue (Batch can never starve)
+//!     and sheds Batch with a trace event under a pressure-band +
+//!     queue-depth overload watermark; per-tier slo_target_us yields
+//!     an SLO-distance term every victim choice (spatial admission,
+//!     offload batching, prefix reclaim, drain evacuation) folds in
 //! L5  autoscale control plane — elastic fleet sizing on the shared
 //!     clock (cluster::autoscale): a hysteresis controller grows/drains
 //!     shards from the aggregate pressure signal behind the pressure-
@@ -175,6 +183,7 @@ pub mod graph;
 pub mod kvcache;
 pub mod metrics;
 pub mod obs;
+pub mod qos;
 #[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod server;
@@ -193,5 +202,6 @@ pub mod prelude {
     pub use crate::engine::sim::{RunReport, SimEngine};
     pub use crate::graph::templates;
     pub use crate::graph::{AppGraph, FuncKind, NodeKind};
+    pub use crate::qos::{QosConfig, Tier};
     pub use crate::workload::{BurstSpec, ClusterWorkload, WorkloadSpec};
 }

@@ -12,6 +12,10 @@
 //!                   [--burst-qps 6.0 --burst-period-s 60 --burst-duty 0.25]
 //!                   [--crash "1@2500;3@6000" --crashes 1 --partitions 1
 //!                    --fault-seed 7 --assert-recovery]
+//!                   [--qos --tiers interactive,batch
+//!                    --qos-rates 4,2,1 --slo-ms 2000,8000,30000
+//!                    --qos-shed-band 3 --qos-shed-depth 4
+//!                    --qos-age-ms 2000 --assert-qos]
 //! tokencake audit   --trace out.json
 //! tokencake serve   [--port 8080]
 //! tokencake graph   --app deep-research
@@ -222,6 +226,8 @@ fn bench_row(name: &str, rep: &ClusterReport, wall_s: f64) -> String {
          \"prefix_replications\": {}, \
          \"crashes\": {}, \"crash_requeued_apps\": {}, \
          \"crash_requeue_tokens\": {}, \"crash_lost_blocks\": {}, \
+         \"qos\": {}, \"qos_shed\": [{}], \"qos_starved\": {}, \
+         \"tier_p99_s\": [{}], \
          \"autoscale\": {}, \"final_shards\": {}, \
          \"scale_up_events\": {}, \"scale_down_events\": {}, \
          \"shards_retired\": {}, \"drained_app_blocks\": {}, \
@@ -251,6 +257,14 @@ fn bench_row(name: &str, rep: &ClusterReport, wall_s: f64) -> String {
         rep.crash_lost_app_blocks
             + rep.crash_lost_prefix_blocks
             + rep.crash_lost_wire_blocks,
+        rep.qos_enabled,
+        rep.qos_shed
+            .map(|v| v.to_string())
+            .join(", "),
+        rep.qos_starved,
+        rep.tier_p99_us
+            .map(|v| format!("{:.3}", v as f64 / 1e6))
+            .join(", "),
         rep.autoscale_enabled,
         rep.final_active_shards,
         rep.scale_up_events,
@@ -265,6 +279,30 @@ fn bench_row(name: &str, rep: &ClusterReport, wall_s: f64) -> String {
             .join(", "),
         rep.truncated,
     )
+}
+
+/// Parse a `--flag a,b,c` per-tier triplet, ordered
+/// interactive,standard,batch.
+fn parse_tier_triplet(
+    flag: &str,
+    s: &str,
+) -> Result<[f64; tokencake::qos::TIERS], String> {
+    let parts: Vec<f64> = s
+        .split(',')
+        .map(|p| {
+            p.trim()
+                .parse::<f64>()
+                .map_err(|_| format!("--{flag}: bad number {p:?}"))
+        })
+        .collect::<Result<_, _>>()?;
+    match <[f64; tokencake::qos::TIERS]>::try_from(parts) {
+        Ok(t) => Ok(t),
+        Err(_) => Err(format!(
+            "--{flag} needs {} comma-separated values \
+             (interactive,standard,batch)",
+            tokencake::qos::TIERS
+        )),
+    }
 }
 
 /// Parse `--mix cw:2,dr:1` into weighted graph templates.
@@ -369,6 +407,51 @@ fn cmd_cluster(args: &Args) -> Result<(), String> {
                 .into(),
         );
     }
+    // Multi-tenant QoS: --qos flips the admission gate on; the per-tier
+    // knobs are flag-overridable on top of the [cluster.qos] file
+    // section (any QoS flag also flips the gate on).
+    if args.has("qos") {
+        cluster.qos.enabled = true;
+    }
+    if let Some(s) = args.get("qos-rates") {
+        cluster.qos.enabled = true;
+        cluster.qos.rate_per_s = parse_tier_triplet("qos-rates", s)?;
+    }
+    if let Some(s) = args.get("slo-ms") {
+        cluster.qos.enabled = true;
+        let ms = parse_tier_triplet("slo-ms", s)?;
+        cluster.qos.slo_us = ms.map(|m| (m * 1000.0) as u64);
+    }
+    if args.get("qos-shed-band").is_some() {
+        cluster.qos.shed_band =
+            args.get_u64("qos-shed-band", 0)? as u8;
+    }
+    if args.get("qos-shed-depth").is_some() {
+        cluster.qos.shed_queue_depth =
+            args.get_u64("qos-shed-depth", 0)? as usize;
+    }
+    if args.get("qos-age-ms").is_some() {
+        cluster.qos.age_promote_us =
+            args.get_u64("qos-age-ms", 0)? * 1000;
+    }
+    // Validate with the CLI's normal error path, mirroring autoscale.
+    if cluster.qos.enabled {
+        if cluster.qos.rate_per_s.iter().any(|&r| r <= 0.0) {
+            return Err(
+                "--qos-rates: every tier rate must be > 0".into()
+            );
+        }
+        if cluster.qos.slo_us.iter().any(|&s| s == 0) {
+            return Err("--slo-ms: every tier SLO must be > 0".into());
+        }
+        if cluster.qos.shed_band > 4 {
+            return Err(
+                "--qos-shed-band must be <= 4 (pressure bands are \
+                 0..=4)"
+                    .into(),
+            );
+        }
+    }
     // Validate here with the CLI's normal error path — the engine's
     // own validate() is an assert meant for programmatic misuse.
     if cluster.autoscale.enabled {
@@ -405,6 +488,19 @@ fn cmd_cluster(args: &Args) -> Result<(), String> {
     let mut workload = ClusterWorkload::mixed(&mix, qps, apps)
         .with_dataset(dataset)
         .with_tool_noise(noise);
+    // Per-template QoS tiers: --tiers interactive,batch labels the
+    // --mix entries in order (unlisted entries stay Standard).
+    if let Some(s) = args.get("tiers") {
+        let tiers = tokencake::qos::parse_tier_list(s)?;
+        if tiers.len() > mix.len() {
+            return Err(format!(
+                "--tiers lists {} tiers for {} mix entries",
+                tiers.len(),
+                mix.len()
+            ));
+        }
+        workload = workload.with_tiers(&tiers);
+    }
     // Bursty arrival phases (--burst-qps N [--burst-period-s P]
     // [--burst-duty D]): the flash-crowd workload autoscaling exists
     // for.
@@ -443,6 +539,7 @@ fn cmd_cluster(args: &Args) -> Result<(), String> {
     if args.has("assert-autoscale")
         || args.has("assert-planner-gated")
         || args.has("assert-recovery")
+        || args.has("assert-qos")
     {
         // Assert runs arm the flight recorder so a failure ships its
         // recent-event ring (full capture stays off unless --trace).
@@ -513,6 +610,30 @@ fn cmd_cluster(args: &Args) -> Result<(), String> {
             report.crash_replica_drop_blocks,
             report.settle_landed_transfers,
             report.settle_dropped_transfers,
+        );
+    }
+    if report.qos_enabled {
+        let j = |a: &[u64; tokencake::qos::TIERS]| {
+            a.map(|v| v.to_string()).join(",")
+        };
+        println!(
+            "qos: arrivals=[{}] admitted=[{}] deferred=[{}] \
+             shed=[{}] aged=[{}] starved={} tier_p99_s=[{}] \
+             slo_s=[{}]",
+            j(&report.qos_arrivals),
+            j(&report.qos_admitted),
+            j(&report.qos_deferred),
+            j(&report.qos_shed),
+            j(&report.qos_aged),
+            report.qos_starved,
+            report
+                .tier_p99_us
+                .map(|v| format!("{:.1}", v as f64 / 1e6))
+                .join(","),
+            report
+                .qos_slo_us
+                .map(|v| format!("{:.0}", v as f64 / 1e6))
+                .join(","),
         );
     }
     if report.truncated {
@@ -602,6 +723,66 @@ fn cmd_cluster(args: &Args) -> Result<(), String> {
             report.crash_lost_app_blocks,
             report.crash_lost_prefix_blocks,
             report.crash_lost_wire_blocks,
+        );
+    }
+    if args.has("assert-qos") {
+        // CI QoS smoke: under a Batch flood the gate must keep the
+        // no-starvation invariant (every deferred arrival eventually
+        // admitted or shed), hold Interactive p99 inside its SLO, and
+        // lose nothing — conservation with sheds accounted.
+        if !report.qos_enabled {
+            return Err(
+                "--assert-qos requires --qos (or another QoS flag)"
+                    .to_string(),
+            );
+        }
+        if report.qos_starved != 0 {
+            return Err(format!(
+                "{} request(s) still queued at end of run — \
+                 starvation\n\
+                 --- flight recorder (newest last) ---\n{}",
+                report.qos_starved,
+                eng.flight_dump()
+            ));
+        }
+        for i in 0..tokencake::qos::TIERS {
+            let (a, ad, sh) = (
+                report.qos_arrivals[i],
+                report.qos_admitted[i],
+                report.qos_shed[i],
+            );
+            if a != ad + sh {
+                return Err(format!(
+                    "tier {} accounting broken: {} arrivals != {} \
+                     admitted + {} shed\n\
+                     --- flight recorder (newest last) ---\n{}",
+                    tokencake::qos::Tier::from_index(i).name(),
+                    a,
+                    ad,
+                    sh,
+                    eng.flight_dump()
+                ));
+            }
+        }
+        let (int_p99, int_slo) =
+            (report.tier_p99_us[0], report.qos_slo_us[0]);
+        if int_p99 > int_slo {
+            return Err(format!(
+                "Interactive p99 {:.1}s exceeds its SLO {:.0}s under \
+                 QoS\n\
+                 --- flight recorder (newest last) ---\n{}",
+                int_p99 as f64 / 1e6,
+                int_slo as f64 / 1e6,
+                eng.flight_dump()
+            ));
+        }
+        eng.check_conservation()?;
+        println!(
+            "qos OK: starved=0, per-tier arrivals balance, \
+             Interactive p99 {:.1}s <= SLO {:.0}s ({} shed)",
+            int_p99 as f64 / 1e6,
+            int_slo as f64 / 1e6,
+            report.qos_shed.iter().sum::<u64>(),
         );
     }
     if args.has("assert-planner-gated") {
@@ -738,6 +919,20 @@ COMMANDS:
            zero blocks were lost — the autoscale CI smoke)
            --assert-planner-gated  (fail unless planner runs < 10% of
            scheduling steps — the epoch-gate CI smoke)
+           --qos  per-tier token-bucket admission in front of the
+           Router, with aging (no starvation) and Batch load-shedding
+           under overload; SLO-headroom biases every victim choice
+           (preemption, offload, prefix reclaim, drain order)
+           --tiers LIST  (interactive|standard|batch per --mix entry,
+           in order; unlisted entries stay standard)
+           --qos-rates I,S,B  (admissions/s per tier)
+           --slo-ms I,S,B  (per-tier app-latency SLO targets)
+           --qos-shed-band N --qos-shed-depth N  (overload signal:
+           shed new Batch arrivals at/above pressure band N with >= N
+           deferred)  --qos-age-ms N  (priority-aging step)
+           --assert-qos  (fail unless zero starved requests, per-tier
+           arrivals == admitted + shed, Interactive p99 <= its SLO,
+           and block conservation holds — the QoS CI smoke)
   audit    check an exported trace against the obs-layer ordering
            invariants:  --trace FILE  (exit 1 on the first violation)
   serve    start the frontend HTTP server:  --port

@@ -140,6 +140,11 @@ pub struct MetricsBundle {
     pub latency: LatencyRecorder,
     /// Per-request latency (for tail analysis).
     pub request_latency: LatencyRecorder,
+    /// App latency split by QoS tier (Interactive/Standard/Batch,
+    /// index-aligned with `qos::Tier`). Always recorded — templates
+    /// without an assigned tier land in Standard — so per-tier p99 is
+    /// available whether or not the admission gate is on.
+    pub tier_latency: [LatencyRecorder; crate::qos::TIERS],
     /// GPU KV pool occupancy over time ∈ [0,1].
     pub gpu_usage: TimeSeries,
     /// Fraction of occupied blocks belonging to *stalled* agents (Fig 2a).
@@ -174,6 +179,11 @@ impl MetricsBundle {
     pub fn absorb(&mut self, o: &MetricsBundle) {
         self.latency.merge(&o.latency);
         self.request_latency.merge(&o.request_latency);
+        for (mine, theirs) in
+            self.tier_latency.iter_mut().zip(&o.tier_latency)
+        {
+            mine.merge(theirs);
+        }
         self.counters.absorb(&o.counters);
         self.stall_hist.merge(&o.stall_hist);
         self.wire_hist.merge(&o.wire_hist);
@@ -195,6 +205,12 @@ impl MetricsBundle {
         let (st_n, st_p50, st_p999) = self.stall_hist.digest_triplet();
         let (wi_n, wi_p50, wi_p999) = self.wire_hist.digest_triplet();
         let (qu_n, qu_p50, qu_p999) = self.queue_hist.digest_triplet();
+        let tier = |i: usize| {
+            let r = &self.tier_latency[i];
+            let [p50, p99] = r.percentiles_us([50.0, 99.0]);
+            format!("{}/{}/{p50}/{p99}", r.len(), r.total_us())
+        };
+        let (t0, t1, t2) = (tier(0), tier(1), tier(2));
         format!(
             "{tag}: apps={} lat_sum={} lat_n={} req_sum={} req_n={} \
              makespan={} swap={} off={} up={} preempt={} inv={} \
@@ -205,7 +221,8 @@ impl MetricsBundle {
              obatch={} ovict={} fclt={} lat_p50={lat_p50} \
              lat_p999={lat_p999} stall={st_n}/{st_p50}/{st_p999} \
              wire={wi_n}/{wi_p50}/{wi_p999} \
-             queue={qu_n}/{qu_p50}/{qu_p999}\n",
+             queue={qu_n}/{qu_p50}/{qu_p999} \
+             tierI={t0} tierS={t1} tierB={t2}\n",
             self.apps_completed,
             self.latency.total_us(),
             self.latency.len(),
@@ -305,6 +322,23 @@ mod tests {
         assert!(a.contains("stall=1/"));
         assert!(a.contains("queue=0/0/0"));
         assert_eq!(a, m.digest_line("shard0"));
+    }
+
+    #[test]
+    fn digest_line_carries_per_tier_latency() {
+        let mut m = MetricsBundle::default();
+        m.tier_latency[0].record_us(1_000);
+        m.tier_latency[2].record_us(9_000);
+        let d = m.digest_line("run");
+        assert!(d.contains("tierI=1/1000/1000/1000"), "{d}");
+        assert!(d.contains("tierS=0/0/0/0"), "{d}");
+        assert!(d.contains("tierB=1/9000/9000/9000"), "{d}");
+
+        let mut agg = MetricsBundle::default();
+        agg.absorb(&m);
+        agg.absorb(&m);
+        assert_eq!(agg.tier_latency[0].len(), 2);
+        assert_eq!(agg.tier_latency[2].len(), 2);
     }
 
     #[test]

@@ -26,6 +26,10 @@
 //! 7. **Drops pair with crashes** — every `fault_drop` names a shard
 //!    that is crashed at that instant; a dropped transfer without a
 //!    preceding crash is a leak, not a fault.
+//! 8. **No silent starvation** — every `qos_defer` is eventually
+//!    followed by a `qos_admit` or `qos_shed` for the same arrival
+//!    (nothing left parked at end of trace), and a shed is terminal
+//!    (no admit after it).
 //!
 //! Runs on in-memory records (tier-1 tests) or on an exported JSON file
 //! via [`TraceAuditor::audit_chrome_trace`] (the CI trace smoke), which
@@ -36,7 +40,7 @@ use std::fmt;
 
 use super::export::parse_chrome_trace;
 use super::recorder::format_record;
-use super::{fault, scale, state, xfer, TraceEvent, TraceRecord};
+use super::{fault, qos, scale, state, xfer, TraceEvent, TraceRecord};
 
 /// First invariant violation found, in timeline order.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -68,6 +72,8 @@ pub struct AuditSummary {
     pub retirements: usize,
     /// Shard crashes verified embargoed until regrow.
     pub crashes: usize,
+    /// QoS deferrals verified to resolve (admit or shed).
+    pub qos_deferred_resolved: usize,
 }
 
 impl fmt::Display for AuditSummary {
@@ -75,13 +81,15 @@ impl fmt::Display for AuditSummary {
         write!(
             f,
             "audit ok: {} records, {} shards, {} transfers paired, \
-             {} requests finished, {} retirements, {} crashes",
+             {} requests finished, {} retirements, {} crashes, \
+             {} qos deferrals resolved",
             self.records,
             self.shards,
             self.transfers,
             self.finished_requests,
             self.retirements,
-            self.crashes
+            self.crashes,
+            self.qos_deferred_resolved
         )
     }
 }
@@ -121,6 +129,9 @@ impl TraceAuditor {
         let mut retired: BTreeSet<u32> = BTreeSet::new();
         // Currently crashed shards (6, 7).
         let mut crashed: BTreeSet<u32> = BTreeSet::new();
+        // QoS: arrivals parked in the gate, and terminal sheds (8).
+        let mut qos_open: BTreeMap<u32, u64> = BTreeMap::new();
+        let mut qos_shed_seqs: BTreeSet<u32> = BTreeSet::new();
 
         let err = |i: usize, r: &TraceRecord, msg: String| AuditError {
             index: Some(i),
@@ -322,6 +333,41 @@ impl TraceAuditor {
                         ));
                     }
                 }
+                TraceEvent::Qos { app_seq, what, .. } => match what {
+                    qos::DEFER => {
+                        if qos_open.insert(app_seq, r.at_us).is_some()
+                        {
+                            return Err(err(
+                                i,
+                                r,
+                                format!(
+                                    "arrival {app_seq} deferred twice \
+                                     without resolving"
+                                ),
+                            ));
+                        }
+                    }
+                    qos::ADMIT | qos::SHED => {
+                        if qos_shed_seqs.contains(&app_seq) {
+                            return Err(err(
+                                i,
+                                r,
+                                format!(
+                                    "arrival {app_seq} resurfaced \
+                                     after being shed (shed is \
+                                     terminal)"
+                                ),
+                            ));
+                        }
+                        if qos_open.remove(&app_seq).is_some() {
+                            summary.qos_deferred_resolved += 1;
+                        }
+                        if what == qos::SHED {
+                            qos_shed_seqs.insert(app_seq);
+                        }
+                    }
+                    _ => {} // AGE: informational
+                },
                 _ => {}
             }
         }
@@ -333,6 +379,15 @@ impl TraceAuditor {
                     "transfer {id} (rid {}, shard {shard}) never \
                      completed",
                     t.rid
+                ),
+            });
+        }
+        if let Some((seq, at)) = qos_open.into_iter().next() {
+            return Err(AuditError {
+                index: None,
+                message: format!(
+                    "arrival {seq} deferred at {at}us never admitted \
+                     or shed (silent starvation)"
                 ),
             });
         }
@@ -516,6 +571,49 @@ mod tests {
         ok.fault(fault::CRASH, 1, u32::MAX, 0);
         ok.fault(fault::DROP, 1, 0, 16);
         TraceAuditor::audit(ok.records()).unwrap();
+    }
+
+    #[test]
+    fn deferred_arrival_must_admit_or_shed() {
+        let mut c = TraceSink::default();
+        c.enable();
+        c.set_shard(super::super::CLUSTER_SHARD);
+        c.advance(10);
+        c.qos(5, 2, qos::DEFER, 0);
+        let e = TraceAuditor::audit(c.records()).unwrap_err();
+        assert!(e.message.contains("silent starvation"), "{e}");
+
+        // Aging then admitting resolves it.
+        c.advance(1_000_000);
+        c.qos(5, 2, qos::AGE, 999_990);
+        c.advance(2_000_000);
+        c.qos(5, 2, qos::ADMIT, 1_999_990);
+        let sum = TraceAuditor::audit(c.records()).unwrap();
+        assert_eq!(sum.qos_deferred_resolved, 1);
+
+        // Shedding resolves it too.
+        let mut s = TraceSink::default();
+        s.enable();
+        s.set_shard(super::super::CLUSTER_SHARD);
+        s.advance(10);
+        s.qos(7, 2, qos::DEFER, 0);
+        s.advance(20);
+        s.qos(7, 2, qos::SHED, 10);
+        let sum = TraceAuditor::audit(s.records()).unwrap();
+        assert_eq!(sum.qos_deferred_resolved, 1);
+    }
+
+    #[test]
+    fn admit_after_shed_fails() {
+        let mut c = TraceSink::default();
+        c.enable();
+        c.set_shard(super::super::CLUSTER_SHARD);
+        c.advance(10);
+        c.qos(9, 2, qos::SHED, 0);
+        c.advance(20);
+        c.qos(9, 2, qos::ADMIT, 10);
+        let e = TraceAuditor::audit(c.records()).unwrap_err();
+        assert!(e.message.contains("shed is terminal"), "{e}");
     }
 
     #[test]

@@ -23,8 +23,8 @@
 use std::collections::BTreeSet;
 
 use super::{
-    fault, planner, prefix, scale, state, xfer, TraceEvent, TraceRecord,
-    CLUSTER_SHARD,
+    fault, planner, prefix, qos, scale, state, xfer, TraceEvent,
+    TraceRecord, CLUSTER_SHARD,
 };
 
 fn track_name(shard: u32) -> String {
@@ -301,6 +301,30 @@ pub fn export_chrome_trace(records: &[TraceRecord]) -> String {
                     ("from", from as i64),
                     ("to", to as i64),
                     ("tokens", tokens as i64),
+                ],
+            ),
+            TraceEvent::Qos {
+                app_seq,
+                tier,
+                what,
+                wait_us,
+            } => line(
+                &format!(
+                    "qos_{}",
+                    qos::NAMES
+                        .get(what as usize)
+                        .copied()
+                        .unwrap_or("?")
+                ),
+                Some("qos"),
+                "i",
+                rec,
+                None,
+                &[
+                    ("app_seq", app_seq as i64),
+                    ("tier", tier as i64),
+                    ("what", what as i64),
+                    ("wait_us", wait_us as i64),
                 ],
             ),
         };

@@ -163,6 +163,22 @@ pub mod fault {
     ];
 }
 
+/// QoS admission-gate action codes (see `crate::qos`).
+pub mod qos {
+    /// An arrival (immediate or previously deferred) was admitted to
+    /// the router; `wait_us` carries its time in the gate.
+    pub const ADMIT: u8 = 0;
+    /// An over-budget arrival parked in the deferred queue.
+    pub const DEFER: u8 = 1;
+    /// A Batch arrival was rejected under the overload watermark.
+    /// Terminal: a shed seq never admits.
+    pub const SHED: u8 = 2;
+    /// Aging promoted a deferred arrival one priority level.
+    pub const AGE: u8 = 3;
+
+    pub const NAMES: [&str; 4] = ["admit", "defer", "shed", "age"];
+}
+
 // ---------------------------------------------------------------------
 // Event alphabet
 // ---------------------------------------------------------------------
@@ -227,6 +243,15 @@ pub enum TraceEvent {
         to: u32,
         tokens: u64,
     },
+    /// QoS admission-gate action on arrival `app_seq` (see [`qos`]);
+    /// `tier` is the arrival's tier index, `wait_us` its time parked
+    /// in the gate (0 for immediate admits and sheds).
+    Qos {
+        app_seq: u32,
+        tier: u8,
+        what: u8,
+        wait_us: u64,
+    },
 }
 
 impl TraceEvent {
@@ -247,6 +272,7 @@ impl TraceEvent {
             TraceEvent::Autoscale { .. } => 11,
             TraceEvent::Fault { .. } => 12,
             TraceEvent::Requeue { .. } => 13,
+            TraceEvent::Qos { .. } => 14,
         }
     }
 }
@@ -339,6 +365,12 @@ impl TraceRecord {
                 to,
                 tokens,
             } => format!("{app}:{from}:{to}:{tokens}"),
+            TraceEvent::Qos {
+                app_seq,
+                tier,
+                what,
+                wait_us,
+            } => format!("{app_seq}:{tier}:{what}:{wait_us}"),
         };
         format!("{head}:{tail}")
     }
@@ -423,6 +455,12 @@ impl TraceRecord {
                 from: u32::try_from(next_u64(&mut it)?).ok()?,
                 to: u32::try_from(next_u64(&mut it)?).ok()?,
                 tokens: next_u64(&mut it)?,
+            },
+            14 => TraceEvent::Qos {
+                app_seq: u32::try_from(next_u64(&mut it)?).ok()?,
+                tier: u8::try_from(next_u64(&mut it)?).ok()?,
+                what: u8::try_from(next_u64(&mut it)?).ok()?,
+                wait_us: next_u64(&mut it)?,
             },
             _ => return None,
         };
@@ -682,6 +720,19 @@ impl TraceSink {
             tokens,
         });
     }
+
+    #[inline]
+    pub fn qos(&mut self, app_seq: u32, tier: u8, what: u8, wait_us: u64) {
+        if !self.active() {
+            return;
+        }
+        self.push(TraceEvent::Qos {
+            app_seq,
+            tier,
+            what,
+            wait_us,
+        });
+    }
 }
 
 /// Merge per-sink streams into one deterministic timeline, stable-sorted
@@ -751,6 +802,12 @@ mod tests {
                 from: 2,
                 to: 0,
                 tokens: 2_048,
+            },
+            TraceEvent::Qos {
+                app_seq: 23,
+                tier: 2,
+                what: qos::AGE,
+                wait_us: 1_500_000,
             },
         ];
         for (i, ev) in evs.iter().enumerate() {

@@ -7,7 +7,8 @@
 //! fill, so arming it adds no steady-state allocation.
 
 use super::{
-    fault, planner, prefix, scale, state, xfer, TraceEvent, TraceRecord,
+    fault, planner, prefix, qos, scale, state, xfer, TraceEvent,
+    TraceRecord,
 };
 
 /// Ring capacity: enough to cover several scheduling windows of context
@@ -169,6 +170,15 @@ pub fn format_record(r: &TraceRecord) -> String {
         } => format!(
             "requeue app={app} shard{from} -> shard{to} \
              tokens={tokens}"
+        ),
+        TraceEvent::Qos {
+            app_seq,
+            tier,
+            what,
+            wait_us,
+        } => format!(
+            "qos {} app#{app_seq} tier={tier} wait={wait_us}us",
+            qos::NAMES.get(what as usize).copied().unwrap_or("?")
         ),
     };
     format!("  [{:>12}us {shard} #{}] {body}", r.at_us, r.seq)

@@ -1,0 +1,711 @@
+//! Multi-tenant QoS: priority tiers, token-bucket admission, and
+//! SLO-aware victim selection.
+//!
+//! The paper's Space Scheduler shields *critical agents* from KV
+//! contention inside one engine; this layer extends the same idea to
+//! the arrival stream. Every app carries a [`Tier`]
+//! (Interactive/Standard/Batch) from workload generation onwards. In
+//! front of the `Router`, the [`QosGate`] runs a deterministic
+//! per-tier token bucket on the shared sim clock: over-budget arrivals
+//! park in a per-tier deferred queue with aging (a Batch arrival gains
+//! one priority level per `age_promote_us` waited, and an entry aged
+//! to the top level admits unconditionally — Batch can never starve),
+//! and when a deterministic overload signal (pressure band + deferred
+//! queue depth) crosses the configured watermark, *new* Batch arrivals
+//! are shed-with-trace instead of admitted-to-thrash.
+//!
+//! Inside the shards, [`ShardQos`] exposes each tier's `slo_target_us`
+//! as an **SLO-distance** term (milli fixed-point, deterministic) that
+//! victim choices — spatial admission order, temporal offload scoring,
+//! prefix reclaim, drain evacuation — fold in so victims with the most
+//! SLO headroom are preferred.
+//!
+//! Confinement contract (CI grep lint): the token bucket and every
+//! tier-mutation path (`TokenBucket`, `try_take`, gate/shard-qos
+//! construction) live only in this module. Other layers *read* tiers
+//! and headroom; they never mint or mutate them.
+
+use std::collections::VecDeque;
+
+/// Service tier carried on every app. Lower index = stricter SLO.
+#[derive(
+    Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default,
+)]
+pub enum Tier {
+    Interactive,
+    #[default]
+    Standard,
+    Batch,
+}
+
+/// Number of tiers (array dimension for per-tier stats).
+pub const TIERS: usize = 3;
+
+impl Tier {
+    pub const ALL: [Tier; TIERS] =
+        [Tier::Interactive, Tier::Standard, Tier::Batch];
+
+    /// Stable index (0 = Interactive .. 2 = Batch).
+    pub fn index(self) -> usize {
+        match self {
+            Tier::Interactive => 0,
+            Tier::Standard => 1,
+            Tier::Batch => 2,
+        }
+    }
+
+    pub fn from_index(i: usize) -> Tier {
+        Tier::ALL[i.min(TIERS - 1)]
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Tier::Interactive => "interactive",
+            Tier::Standard => "standard",
+            Tier::Batch => "batch",
+        }
+    }
+
+    /// Parse a tier name (CLI `--tiers` lists; case-insensitive,
+    /// one-letter abbreviations accepted).
+    pub fn parse(s: &str) -> Option<Tier> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "interactive" | "i" => Some(Tier::Interactive),
+            "standard" | "s" => Some(Tier::Standard),
+            "batch" | "b" => Some(Tier::Batch),
+            _ => None,
+        }
+    }
+}
+
+/// Parse a comma-separated tier list (`"i,b"` / `"interactive,batch"`).
+pub fn parse_tier_list(s: &str) -> Result<Vec<Tier>, String> {
+    s.split(',')
+        .map(|t| {
+            Tier::parse(t)
+                .ok_or_else(|| format!("unknown tier name: {t:?}"))
+        })
+        .collect()
+}
+
+/// Router bias weight per tier: Interactive feels the autoscale
+/// drain/lifetime bias hardest (steered furthest off next-to-drain
+/// shards), Batch barely reacts (it is the first evacuated anyway).
+pub fn router_tier_weight(t: Tier) -> f64 {
+    match t {
+        Tier::Interactive => 1.5,
+        Tier::Standard => 1.0,
+        Tier::Batch => 0.5,
+    }
+}
+
+// ----------------------------------------------------------------------
+// Config
+// ----------------------------------------------------------------------
+
+/// `[cluster.qos]` section. Disabled by default so every existing
+/// digest stays byte-identical.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QosConfig {
+    pub enabled: bool,
+    /// Token-bucket refill rate per tier (admissions per second).
+    pub rate_per_s: [f64; TIERS],
+    /// Bucket capacity per tier (burst tolerance, whole tokens).
+    pub burst: [u32; TIERS],
+    /// Per-tier app-latency SLO target (µs).
+    pub slo_us: [u64; TIERS],
+    /// A deferred arrival gains one priority level per this much
+    /// waiting; aged to the top level it admits unconditionally.
+    pub age_promote_us: u64,
+    /// Overload signal: shed new Batch arrivals only when the max
+    /// shard pressure band is at/above this…
+    pub shed_band: u8,
+    /// …and the deferred queue is at least this deep.
+    pub shed_queue_depth: usize,
+}
+
+impl Default for QosConfig {
+    fn default() -> Self {
+        Self {
+            enabled: false,
+            rate_per_s: [4.0, 2.0, 1.0],
+            burst: [8, 4, 2],
+            slo_us: [2_000_000, 8_000_000, 30_000_000],
+            age_promote_us: 2_000_000,
+            shed_band: 3,
+            shed_queue_depth: 4,
+        }
+    }
+}
+
+impl QosConfig {
+    pub fn validate(&self) {
+        for (i, &r) in self.rate_per_s.iter().enumerate() {
+            assert!(
+                r > 0.0,
+                "qos rate_per_s[{i}] must be positive (got {r})"
+            );
+        }
+        for (i, &b) in self.burst.iter().enumerate() {
+            assert!(b >= 1, "qos burst[{i}] must be at least 1 token");
+        }
+        for (i, &s) in self.slo_us.iter().enumerate() {
+            assert!(s > 0, "qos slo_us[{i}] must be positive");
+        }
+        assert!(
+            self.age_promote_us > 0,
+            "qos age_promote_us must be positive"
+        );
+        assert!(
+            self.shed_band <= 4,
+            "qos shed_band is a pressure band (0..=4), got {}",
+            self.shed_band
+        );
+    }
+}
+
+// ----------------------------------------------------------------------
+// Token bucket (integer milli-tokens; deterministic on the sim clock)
+// ----------------------------------------------------------------------
+
+/// Deterministic token bucket. Levels are milli-tokens; the refill
+/// carries the sub-milli remainder so no fraction of the configured
+/// rate is ever truncated away.
+#[derive(Debug, Clone)]
+struct TokenBucket {
+    rate_milli_per_s: u64,
+    cap_milli: u64,
+    level_milli: u64,
+    /// Remainder of `elapsed_us * rate` not yet worth a milli-token.
+    carry: u64,
+    last_us: u64,
+}
+
+impl TokenBucket {
+    fn new(rate_per_s: f64, burst: u32, now_us: u64) -> Self {
+        // Float→int happens exactly once, at construction: everything
+        // after runs on integers.
+        let rate_milli_per_s = (rate_per_s * 1000.0) as u64;
+        let cap_milli = burst as u64 * 1000;
+        Self {
+            rate_milli_per_s: rate_milli_per_s.max(1),
+            cap_milli,
+            level_milli: cap_milli, // start full: bursts at t=0 admit
+            carry: 0,
+            last_us: now_us,
+        }
+    }
+
+    fn refill(&mut self, now_us: u64) {
+        let dt = now_us.saturating_sub(self.last_us);
+        self.last_us = now_us;
+        let num = dt * self.rate_milli_per_s + self.carry;
+        self.level_milli =
+            (self.level_milli + num / 1_000_000).min(self.cap_milli);
+        self.carry = if self.level_milli == self.cap_milli {
+            0 // a full bucket forgets its remainder (classic semantics)
+        } else {
+            num % 1_000_000
+        };
+    }
+
+    fn try_take(&mut self, now_us: u64) -> bool {
+        self.refill(now_us);
+        if self.level_milli >= 1000 {
+            self.level_milli -= 1000;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Earliest time a whole token will be available (== `now_us` if
+    /// one already is). Pure: does not refill.
+    fn next_token_at(&self, now_us: u64) -> u64 {
+        let dt = now_us.saturating_sub(self.last_us);
+        let num = dt * self.rate_milli_per_s + self.carry;
+        let level =
+            (self.level_milli + num / 1_000_000).min(self.cap_milli);
+        if level >= 1000 {
+            return now_us;
+        }
+        let deficit_micro =
+            (1000 - level) * 1_000_000 - (num % 1_000_000);
+        let wait = deficit_micro.div_ceil(self.rate_milli_per_s);
+        now_us + wait.max(1)
+    }
+}
+
+// ----------------------------------------------------------------------
+// Admission gate
+// ----------------------------------------------------------------------
+
+/// What the gate decided for one arrival.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Admission {
+    /// Route it now.
+    Admit,
+    /// Parked in the deferred queue; will admit (or age out) later.
+    Defer,
+    /// Rejected-with-trace under overload (Batch only). Terminal.
+    Shed,
+}
+
+/// A deferred arrival parked in the gate.
+#[derive(Debug, Clone, Copy)]
+struct Deferred {
+    seq: u32,
+    enq_us: u64,
+    /// Aging levels already granted (each one traced once).
+    aged: u8,
+}
+
+/// An arrival released from the deferred queue this poll.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct QosRelease {
+    pub seq: u32,
+    pub tier: Tier,
+    pub wait_us: u64,
+}
+
+/// Per-tier admission counters. `arrivals == admitted + shed + queued`
+/// at every instant; at end of run `queued` must be zero (the
+/// no-starvation invariant the auditor and `--assert-qos` check).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct QosStats {
+    pub arrivals: [u64; TIERS],
+    pub admitted: [u64; TIERS],
+    pub deferred: [u64; TIERS],
+    pub shed: [u64; TIERS],
+    pub aged: [u64; TIERS],
+}
+
+impl QosStats {
+    pub fn shed_total(&self) -> u64 {
+        self.shed.iter().sum()
+    }
+
+    pub fn arrivals_total(&self) -> u64 {
+        self.arrivals.iter().sum()
+    }
+}
+
+/// The cluster-level admission gate in front of the router.
+#[derive(Debug, Clone)]
+pub struct QosGate {
+    cfg: QosConfig,
+    buckets: [TokenBucket; TIERS],
+    queues: [VecDeque<Deferred>; TIERS],
+    pub stats: QosStats,
+}
+
+impl QosGate {
+    pub fn new(cfg: &QosConfig, now_us: u64) -> Self {
+        cfg.validate();
+        let mk = |i: usize| {
+            TokenBucket::new(cfg.rate_per_s[i], cfg.burst[i], now_us)
+        };
+        Self {
+            cfg: cfg.clone(),
+            buckets: [mk(0), mk(1), mk(2)],
+            queues: [VecDeque::new(), VecDeque::new(), VecDeque::new()],
+            stats: QosStats::default(),
+        }
+    }
+
+    /// Total deferred arrivals currently parked.
+    pub fn queued(&self) -> usize {
+        self.queues.iter().map(VecDeque::len).sum()
+    }
+
+    pub fn queued_by_tier(&self) -> [u64; TIERS] {
+        [
+            self.queues[0].len() as u64,
+            self.queues[1].len() as u64,
+            self.queues[2].len() as u64,
+        ]
+    }
+
+    /// Overload signal: sheds only when the fleet is genuinely hot
+    /// (max pressure band at the watermark) *and* the gate is backed
+    /// up. Both inputs are deterministic functions of sim state.
+    pub fn overloaded(&self, max_band: u8) -> bool {
+        max_band >= self.cfg.shed_band
+            && self.queued() >= self.cfg.shed_queue_depth
+    }
+
+    /// One arrival hits the gate. Shed beats admit for Batch under
+    /// overload: an over-capacity fleet degrades explicitly instead of
+    /// thrashing.
+    pub fn offer(
+        &mut self,
+        seq: u32,
+        tier: Tier,
+        now_us: u64,
+        max_band: u8,
+    ) -> Admission {
+        let i = tier.index();
+        self.stats.arrivals[i] += 1;
+        if tier == Tier::Batch && self.overloaded(max_band) {
+            self.stats.shed[i] += 1;
+            return Admission::Shed;
+        }
+        if self.buckets[i].try_take(now_us) {
+            self.stats.admitted[i] += 1;
+            return Admission::Admit;
+        }
+        self.stats.deferred[i] += 1;
+        self.queues[i].push_back(Deferred {
+            seq,
+            enq_us: now_us,
+            aged: 0,
+        });
+        Admission::Defer
+    }
+
+    /// Aging levels an entry of `tier` has earned after waiting.
+    fn age_levels(&self, tier: Tier, waited_us: u64) -> u8 {
+        let lvl = (waited_us / self.cfg.age_promote_us) as usize;
+        lvl.min(tier.index()) as u8
+    }
+
+    /// Release every deferred arrival that can admit at `now_us`.
+    /// Scan order is (effective priority, enqueue time, seq) — fully
+    /// deterministic. An entry admits when its own tier's bucket has a
+    /// token, or unconditionally once aging promotes it to the top
+    /// level (the no-starvation guarantee). Newly crossed aging levels
+    /// are reported once each in `ages` so the trace shows promotion.
+    pub fn poll(
+        &mut self,
+        now_us: u64,
+        admits: &mut Vec<QosRelease>,
+        ages: &mut Vec<QosRelease>,
+    ) {
+        admits.clear();
+        ages.clear();
+        // Collect (effective, enq_us, seq, tier) sorted scan order.
+        let mut order: Vec<(u8, u64, u32, usize)> = Vec::new();
+        for (ti, q) in self.queues.iter().enumerate() {
+            let tier = Tier::from_index(ti);
+            for d in q {
+                let waited = now_us.saturating_sub(d.enq_us);
+                let eff =
+                    ti as u8 - self.age_levels(tier, waited);
+                order.push((eff, d.enq_us, d.seq, ti));
+            }
+        }
+        order.sort_unstable();
+        for (eff, _, seq, ti) in order {
+            let tier = Tier::from_index(ti);
+            let pos = self.queues[ti]
+                .iter()
+                .position(|d| d.seq == seq)
+                .expect("deferred entry vanished mid-poll");
+            let d = self.queues[ti][pos];
+            let waited = now_us.saturating_sub(d.enq_us);
+            let lvl = self.age_levels(tier, waited);
+            if lvl > d.aged {
+                // Trace each newly crossed level exactly once.
+                self.stats.aged[ti] += (lvl - d.aged) as u64;
+                self.queues[ti][pos].aged = lvl;
+                ages.push(QosRelease {
+                    seq,
+                    tier,
+                    wait_us: waited,
+                });
+            }
+            let aged_out = eff == 0 && ti != 0;
+            if aged_out || self.buckets[ti].try_take(now_us) {
+                self.queues[ti].remove(pos);
+                self.stats.admitted[ti] += 1;
+                admits.push(QosRelease {
+                    seq,
+                    tier,
+                    wait_us: waited,
+                });
+            }
+        }
+    }
+
+    /// Earliest future time a deferred arrival could be released —
+    /// token refill or aging promotion, whichever comes first. Caps
+    /// the cluster clock jump so a deferred arrival can never be
+    /// skipped over (and unsticks an otherwise fully idle fleet).
+    pub fn next_due_us(&self, now_us: u64) -> Option<u64> {
+        let mut due: Option<u64> = None;
+        let mut fold = |t: u64| {
+            due = Some(due.map_or(t, |d| d.min(t)));
+        };
+        for (ti, q) in self.queues.iter().enumerate() {
+            if q.is_empty() {
+                continue;
+            }
+            fold(self.buckets[ti].next_token_at(now_us).max(now_us + 1));
+            if ti != 0 {
+                // Aging: the oldest entry ages out at
+                // enq + tier_index * age_promote_us.
+                for d in q {
+                    let out = d.enq_us
+                        + ti as u64 * self.cfg.age_promote_us;
+                    fold(out.max(now_us + 1));
+                }
+            }
+        }
+        due
+    }
+}
+
+// ----------------------------------------------------------------------
+// Per-shard read-only tier context (SLO-distance for victim choices)
+// ----------------------------------------------------------------------
+
+/// Read-only QoS context a shard consults when ordering victims. Built
+/// only here (lint-confined); shards read `tier_of` / headroom, never
+/// mutate.
+#[derive(Debug, Clone, Default)]
+pub struct ShardQos {
+    pub enabled: bool,
+    /// Tier per registered template (index-aligned).
+    tiers: Vec<Tier>,
+    slo_us: [u64; TIERS],
+}
+
+impl ShardQos {
+    /// Disabled context: every hook degrades to its pre-QoS behaviour
+    /// (digest-identical to runs before this layer existed).
+    pub fn off() -> Self {
+        Self::default()
+    }
+
+    pub fn configure(cfg: &QosConfig, tiers: Vec<Tier>) -> Self {
+        Self {
+            enabled: cfg.enabled,
+            tiers,
+            slo_us: cfg.slo_us,
+        }
+    }
+
+    pub fn tier_of(&self, template: usize) -> Tier {
+        self.tiers.get(template).copied().unwrap_or_default()
+    }
+
+    pub fn slo_of(&self, tier: Tier) -> u64 {
+        if self.slo_us == [0; TIERS] {
+            QosConfig::default().slo_us[tier.index()]
+        } else {
+            self.slo_us[tier.index()]
+        }
+    }
+
+    /// SLO-distance: fraction of the tier's SLO still unspent, milli
+    /// fixed-point, clamped to [-1000, 1000]. 1000 = a whole SLO of
+    /// headroom (safest victim), negative = already past its SLO
+    /// (worst victim). Integer arithmetic throughout.
+    pub fn headroom_milli(&self, template: usize, age_us: u64) -> i64 {
+        if !self.enabled {
+            return 0;
+        }
+        let slo = self.slo_of(self.tier_of(template)) as i64;
+        let rem = slo - age_us as i64;
+        (rem.saturating_mul(1000) / slo.max(1)).clamp(-1000, 1000)
+    }
+
+    /// Headroom as a score bonus in [-1.0, 1.0] for the float-scored
+    /// paths (temporal offload gate). Derived from the milli value so
+    /// the fixed-point representation stays the single source of
+    /// truth.
+    pub fn headroom_frac(&self, template: usize, age_us: u64) -> f64 {
+        self.headroom_milli(template, age_us) as f64 / 1000.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tier_roundtrip_and_parse() {
+        for t in Tier::ALL {
+            assert_eq!(Tier::from_index(t.index()), t);
+            assert_eq!(Tier::parse(t.name()), Some(t));
+        }
+        assert_eq!(Tier::parse("I"), Some(Tier::Interactive));
+        assert_eq!(Tier::parse("nope"), None);
+        assert_eq!(
+            parse_tier_list("i, batch,s").unwrap(),
+            vec![Tier::Interactive, Tier::Batch, Tier::Standard]
+        );
+        assert!(parse_tier_list("i,x").is_err());
+    }
+
+    #[test]
+    fn bucket_refills_deterministically_without_loss() {
+        let mut b = TokenBucket::new(2.0, 1, 0);
+        assert!(b.try_take(0)); // starts full
+        assert!(!b.try_take(0));
+        // 2 tokens/s → one token every 500ms; remainder carry means
+        // two 250ms refills equal one 500ms refill exactly.
+        assert!(!b.try_take(250_000));
+        assert!(b.try_take(500_000));
+        assert_eq!(b.next_token_at(500_000), 1_000_000);
+    }
+
+    #[test]
+    fn gate_admits_within_burst_then_defers() {
+        let cfg = QosConfig {
+            enabled: true,
+            burst: [2, 2, 2],
+            ..QosConfig::default()
+        };
+        let mut g = QosGate::new(&cfg, 0);
+        assert_eq!(
+            g.offer(0, Tier::Interactive, 0, 0),
+            Admission::Admit
+        );
+        assert_eq!(
+            g.offer(1, Tier::Interactive, 0, 0),
+            Admission::Admit
+        );
+        assert_eq!(
+            g.offer(2, Tier::Interactive, 0, 0),
+            Admission::Defer
+        );
+        assert_eq!(g.queued(), 1);
+        let due = g.next_due_us(0).expect("deferred entry pending");
+        assert!(due > 0);
+        let (mut adm, mut ages) = (Vec::new(), Vec::new());
+        g.poll(due, &mut adm, &mut ages);
+        assert_eq!(adm.len(), 1);
+        assert_eq!(adm[0].seq, 2);
+        assert_eq!(g.queued(), 0);
+        assert_eq!(
+            g.stats.arrivals[0],
+            g.stats.admitted[0] + g.stats.shed[0]
+        );
+    }
+
+    #[test]
+    fn gate_sheds_batch_only_under_overload() {
+        let cfg = QosConfig {
+            enabled: true,
+            burst: [1, 1, 1],
+            shed_band: 3,
+            shed_queue_depth: 1,
+            ..QosConfig::default()
+        };
+        let mut g = QosGate::new(&cfg, 0);
+        // Fill the queue so the depth half of the signal trips.
+        assert_eq!(g.offer(0, Tier::Batch, 0, 0), Admission::Admit);
+        assert_eq!(g.offer(1, Tier::Batch, 0, 0), Admission::Defer);
+        // Band below watermark: still deferred, not shed.
+        assert_eq!(g.offer(2, Tier::Batch, 0, 2), Admission::Defer);
+        // Band at watermark: Batch sheds, Interactive never does.
+        assert_eq!(g.offer(3, Tier::Batch, 0, 3), Admission::Shed);
+        assert_eq!(
+            g.offer(4, Tier::Interactive, 0, 4),
+            Admission::Admit
+        );
+        assert_eq!(g.stats.shed, [0, 0, 1]);
+    }
+
+    #[test]
+    fn aged_out_batch_admits_without_tokens() {
+        let cfg = QosConfig {
+            enabled: true,
+            // Rate so slow the bucket never refills inside the test.
+            rate_per_s: [0.001, 0.001, 0.001],
+            burst: [1, 1, 1],
+            age_promote_us: 1_000_000,
+            ..QosConfig::default()
+        };
+        let mut g = QosGate::new(&cfg, 0);
+        assert_eq!(g.offer(0, Tier::Batch, 0, 0), Admission::Admit);
+        assert_eq!(g.offer(1, Tier::Batch, 0, 0), Admission::Defer);
+        let (mut adm, mut ages) = (Vec::new(), Vec::new());
+        // One level aged: traced but still queued (no tokens).
+        g.poll(1_000_000, &mut adm, &mut ages);
+        assert!(adm.is_empty());
+        assert_eq!(ages.len(), 1);
+        assert_eq!(g.stats.aged[2], 1);
+        // Two levels: Batch reaches the top level and force-admits.
+        g.poll(2_000_000, &mut adm, &mut ages);
+        assert_eq!(adm.len(), 1);
+        assert_eq!(adm[0].wait_us, 2_000_000);
+        assert_eq!(g.queued(), 0);
+        // next_due_us reflected the age-out bound, not just refill.
+        let mut g2 = QosGate::new(&cfg, 0);
+        g2.offer(0, Tier::Batch, 0, 0);
+        g2.offer(1, Tier::Batch, 0, 0);
+        assert!(g2.next_due_us(0).unwrap() <= 2_000_000);
+    }
+
+    #[test]
+    fn poll_releases_in_priority_then_fifo_order() {
+        let cfg = QosConfig {
+            enabled: true,
+            rate_per_s: [100.0, 100.0, 100.0],
+            burst: [1, 1, 1],
+            ..QosConfig::default()
+        };
+        let mut g = QosGate::new(&cfg, 0);
+        for (seq, tier) in [
+            (0, Tier::Batch),
+            (1, Tier::Batch),
+            (2, Tier::Interactive),
+            (3, Tier::Interactive),
+            (4, Tier::Standard),
+        ] {
+            g.offer(seq, tier, 0, 0);
+        }
+        // Bursts consumed the first token of each tier; 3 deferred:
+        // seq 1 (Batch), seq 3 (Interactive), seq 4 (Standard).
+        assert_eq!(g.queued(), 2 + 1);
+        let (mut adm, mut ages) = (Vec::new(), Vec::new());
+        g.poll(1_000_000, &mut adm, &mut ages); // plenty of refill
+        let order: Vec<u32> = adm.iter().map(|r| r.seq).collect();
+        assert_eq!(order, vec![3, 4, 1]);
+    }
+
+    #[test]
+    fn shard_qos_headroom_is_clamped_milli_fixed_point() {
+        let cfg = QosConfig {
+            enabled: true,
+            slo_us: [1_000_000, 2_000_000, 4_000_000],
+            ..QosConfig::default()
+        };
+        let q = ShardQos::configure(
+            &cfg,
+            vec![Tier::Interactive, Tier::Batch],
+        );
+        assert_eq!(q.headroom_milli(0, 0), 1000);
+        assert_eq!(q.headroom_milli(0, 500_000), 500);
+        assert_eq!(q.headroom_milli(0, 2_000_000), -1000);
+        assert_eq!(q.headroom_milli(1, 1_000_000), 750);
+        // Unknown template defaults to Standard.
+        assert_eq!(q.tier_of(99), Tier::Standard);
+        // Disabled context is exactly neutral.
+        assert_eq!(ShardQos::off().headroom_milli(0, 123), 0);
+    }
+
+    #[test]
+    fn stats_conserve_arrivals() {
+        let cfg = QosConfig {
+            enabled: true,
+            burst: [1, 1, 1],
+            shed_band: 0,
+            shed_queue_depth: 0,
+            ..QosConfig::default()
+        };
+        let mut g = QosGate::new(&cfg, 0);
+        for seq in 0..10u32 {
+            g.offer(seq, Tier::Batch, 0, 4);
+        }
+        let queued = g.queued_by_tier();
+        for i in 0..TIERS {
+            assert_eq!(
+                g.stats.arrivals[i],
+                g.stats.admitted[i] + g.stats.shed[i] + queued[i]
+            );
+        }
+    }
+}

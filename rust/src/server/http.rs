@@ -41,6 +41,13 @@ impl Response {
         }
     }
 
+    pub fn internal_error(body: &str) -> Self {
+        Self {
+            status: 500,
+            body: body.to_string(),
+        }
+    }
+
     fn reason(&self) -> &'static str {
         match self.status {
             200 => "OK",

@@ -207,9 +207,28 @@ fn serve_conn(
 ) -> std::io::Result<()> {
     stream.set_read_timeout(Some(std::time::Duration::from_secs(5)))?;
     let req = http::read_request(&mut stream)?;
-    let resp = core.lock().unwrap().handle(&req);
+    let resp = handle_locked(&core, &req);
     stream.write_all(resp.to_bytes().as_slice())?;
     Ok(())
+}
+
+/// Dispatch under the core mutex. A connection thread that panicked
+/// mid-`handle` poisons the lock; unwrapping here would then crash
+/// *every* later connection's thread and silently drop their sockets.
+/// The core carries no half-applied cross-field invariants worth that:
+/// recover the guard and answer 500 so the client can retry, keeping
+/// the process serving.
+fn handle_locked(
+    core: &Arc<Mutex<ServerCore>>,
+    req: &Request,
+) -> Response {
+    match core.lock() {
+        Ok(mut guard) => guard.handle(req),
+        Err(poisoned) => {
+            drop(poisoned.into_inner());
+            Response::internal_error("error=server state poisoned\n")
+        }
+    }
 }
 
 #[cfg(test)]
@@ -276,6 +295,24 @@ edge retriever generator
         });
         assert!(r.body.contains("running=0"));
         assert!(r.body.contains("stalled=1"), "{}", r.body);
+    }
+
+    /// A handler thread that panics while holding the core poisons the
+    /// mutex. Later connections must get a 500, not a thread crash
+    /// that silently drops their socket.
+    #[test]
+    fn poisoned_core_answers_500_not_panic() {
+        let core = Arc::new(Mutex::new(ServerCore::new()));
+        let poisoner = core.clone();
+        let _ = std::thread::spawn(move || {
+            let _guard = poisoner.lock().unwrap();
+            panic!("simulated handler panic");
+        })
+        .join();
+        assert!(core.lock().is_err(), "mutex should be poisoned");
+        let r = handle_locked(&core, &post("/apps", "graph=0"));
+        assert_eq!(r.status, 500);
+        assert!(r.body.contains("poisoned"), "{}", r.body);
     }
 
     #[test]

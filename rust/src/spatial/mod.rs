@@ -192,12 +192,26 @@ pub fn admit(st: &mut ServeState, now_us: u64) {
         // Offload beneficiaries jump the line (the freed blocks were
         // justified by their admission); otherwise priority order. Both
         // segments use the same stable comparator, so the order matches
-        // the seed's separate resumed/fresh sorts exactly.
+        // the seed's separate resumed/fresh sorts exactly. With QoS on,
+        // SLO distance slots between: the request whose app has the
+        // *least* SLO headroom admits first (milli fixed-point — the
+        // comparison never touches floats).
+        let headroom = |rid: &RequestId| -> i64 {
+            if !st.qos.enabled {
+                return 0;
+            }
+            let app_id = st.reqs[rid].app_id;
+            let age = now_us
+                .saturating_sub(st.apps[&app_id].arrival_us);
+            st.qos
+                .headroom_milli(st.apps.template_of(&app_id), age)
+        };
         let mut by_prio = |a: &RequestId, b: &RequestId| {
             let ra = &st.reqs[a];
             let rb = &st.reqs[b];
             rb.pulled
                 .cmp(&ra.pulled)
+                .then(headroom(a).cmp(&headroom(b)))
                 .then(rb.priority.total_cmp(&ra.priority))
         };
         order[..n_resumed].sort_by(&mut by_prio);
@@ -503,7 +517,16 @@ pub fn record_prefix(st: &mut ServeState, rid: RequestId, now_us: u64) {
         let r = st.reqs.get_mut(&rid).unwrap();
         PrefixBacking::Gpu(r.blocks.take_prefix(nb))
     };
-    match st.prefix.insert(key, nb, tokens, backing, 1.0, now_us) {
+    // Carry the producing template's QoS tier so reclaim under
+    // pressure can evict Batch prefixes before Interactive ones.
+    let tier = {
+        let app_id = st.reqs[&rid].app_id;
+        st.qos.tier_of(st.apps.template_of(&app_id)).index() as u8
+    };
+    match st
+        .prefix
+        .insert_tiered(key, nb, tokens, backing, 1.0, now_us, tier)
+    {
         None => {}
         Some(PrefixBacking::Gpu(b)) => st.gpu.free(b, 0, None),
         Some(PrefixBacking::Cpu(b)) => st.cpu.release(b),
@@ -534,7 +557,10 @@ pub fn reclaim_prefix_gpu(
 ) -> u32 {
     let mut freed = 0u32;
     while freed < need {
-        let Some((key, blocks)) = st.prefix.peek_lru_gpu() else {
+        // With QoS on the victim order is tier-aware (Batch prefixes
+        // yield first); otherwise plain LRU — bit-identical to the
+        // pre-QoS behaviour.
+        let Some((key, blocks)) = reclaim_victim(st) else {
             break;
         };
         if st.cfg.mode.prefix_cpu_tier() {
@@ -576,28 +602,41 @@ pub fn reclaim_prefix_gpu(
                 continue;
             }
         }
-        if !drop_prefix_gpu_lru(st) {
-            break;
-        }
+        drop_prefix_gpu_entry(st, key);
         freed += blocks;
     }
     freed
 }
 
-/// Drop the LRU GPU-resident prefix entry, returning its blocks to the
-/// pool *immediately* (decode growth and deadlock rescue cannot wait for
-/// a demotion transfer). Returns false when no GPU entry exists.
+/// GPU reclaim victim: tier-aware (Batch first, LRU within tier) when
+/// QoS is enabled, plain LRU otherwise.
+fn reclaim_victim(st: &ServeState) -> Option<(PrefixKey, u32)> {
+    if st.qos.enabled {
+        st.prefix.peek_lru_gpu_tiered()
+    } else {
+        st.prefix.peek_lru_gpu()
+    }
+}
+
+/// Drop the reclaim-victim GPU-resident prefix entry, returning its
+/// blocks to the pool *immediately* (decode growth and deadlock rescue
+/// cannot wait for a demotion transfer). Returns false when no GPU
+/// entry exists.
 pub fn drop_prefix_gpu_lru(st: &mut ServeState) -> bool {
-    let Some((key, _)) = st.prefix.peek_lru_gpu() else {
+    let Some((key, _)) = reclaim_victim(st) else {
         return false;
     };
+    drop_prefix_gpu_entry(st, key);
+    true
+}
+
+fn drop_prefix_gpu_entry(st: &mut ServeState, key: PrefixKey) {
     match st.prefix.remove(key) {
         Some(PrefixBacking::Gpu(b)) => st.gpu.free(b, 0, None),
-        _ => unreachable!("LRU-GPU entry must carry GPU backing"),
+        _ => unreachable!("GPU reclaim victim must carry GPU backing"),
     }
     st.metrics.counters.prefix_evictions += 1;
     st.push_prefix_event(PrefixEvent::Removed { key });
-    true
 }
 
 /// Make room in the CPU pool for `need` blocks by dropping LRU unpinned

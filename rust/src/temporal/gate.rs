@@ -173,6 +173,20 @@ pub fn evaluate_offload(
         + 0.20 * fit_quality
         + 0.10 * cpu_term;
 
+    // Multi-tenant QoS: SLO distance nudges the batching score — an
+    // app with a whole SLO of headroom gains up to +0.10 (safest
+    // victim), one already past its SLO loses the same. Exactly zero
+    // when QoS is off (`ShardQos::off` returns neutral headroom).
+    if st.qos.enabled {
+        let age_us =
+            now_us.saturating_sub(st.apps[&r.app_id].arrival_us);
+        score += 0.10
+            * st.qos.headroom_frac(
+                st.apps.template_of(&r.app_id),
+                age_us,
+            );
+    }
+
     // Penalties — only when the mode is agent-aware (the §7.3 "offload"
     // ablation runs the temporal scheduler *without* agent context).
     if st.cfg.mode.agent_aware() {
@@ -366,6 +380,51 @@ mod tests {
             .predicted_end_us = 10_000; // even short stalls
         let snap = st.snapshot();
         assert!(evaluate_offload(&st, &snap, rid, 0).accepted());
+    }
+
+    #[test]
+    fn slo_headroom_biases_the_offload_score() {
+        use crate::qos::{QosConfig, ShardQos, Tier};
+        let (mut st, rid) = setup(0.9);
+        st.reqs.get_mut(&rid).unwrap().critical_path = false;
+        let snap = st.snapshot();
+        let now = 1_000_000; // app age: 1 s
+        let OffloadDecision::Accept {
+            score: score_off, ..
+        } = evaluate_offload(&st, &snap, rid, now)
+        else {
+            panic!("baseline offload must be accepted");
+        };
+        // A whole SLO of headroom (100 s SLO, 1 s age → 0.990 frac)
+        // adds exactly +0.10 × 0.990 — the fixed-point term is
+        // deterministic, so the delta is exact.
+        let qcfg = QosConfig {
+            enabled: true,
+            slo_us: [100_000_000; 3],
+            ..QosConfig::default()
+        };
+        st.qos = ShardQos::configure(&qcfg, vec![Tier::Interactive]);
+        let OffloadDecision::Accept { score: score_hi, .. } =
+            evaluate_offload(&st, &snap, rid, now)
+        else {
+            panic!("headroom must not reject an accepted offload");
+        };
+        assert!((score_hi - score_off - 0.099).abs() < 1e-9);
+        // Past its SLO the same app scores strictly lower (or drops
+        // under the threshold entirely).
+        let qcfg = QosConfig {
+            enabled: true,
+            slo_us: [500_000; 3],
+            ..QosConfig::default()
+        };
+        st.qos = ShardQos::configure(&qcfg, vec![Tier::Interactive]);
+        match evaluate_offload(&st, &snap, rid, now) {
+            OffloadDecision::Accept { score, .. } => {
+                assert!(score < score_off)
+            }
+            OffloadDecision::Reject(RejectReason::ScoreTooLow) => {}
+            d => panic!("unexpected verdict: {d:?}"),
+        }
     }
 
     #[test]

@@ -107,6 +107,10 @@ pub struct MixEntry {
     pub graph: AppGraph,
     /// Relative arrival weight (unnormalized, > 0).
     pub weight: f64,
+    /// QoS tier every app of this template carries from generation
+    /// through routing, admission, and victim selection (read by the
+    /// cluster layer only when `[cluster.qos]` is enabled).
+    pub tier: crate::qos::Tier,
 }
 
 /// A heterogeneous cluster workload: Poisson application arrivals whose
@@ -140,6 +144,7 @@ impl ClusterWorkload {
                 .map(|(g, w)| MixEntry {
                     graph: g.clone(),
                     weight: *w,
+                    tier: crate::qos::Tier::default(),
                 })
                 .collect(),
             qps,
@@ -171,6 +176,27 @@ impl ClusterWorkload {
         b.validate();
         self.burst = Some(b);
         self
+    }
+
+    /// Assign QoS tiers to the mix entries, index-aligned. Shorter
+    /// lists leave the remaining entries at the default (Standard).
+    pub fn with_tiers(mut self, tiers: &[crate::qos::Tier]) -> Self {
+        assert!(
+            tiers.len() <= self.entries.len(),
+            "more tiers ({}) than mix entries ({})",
+            tiers.len(),
+            self.entries.len()
+        );
+        for (e, &t) in self.entries.iter_mut().zip(tiers) {
+            e.tier = t;
+        }
+        self
+    }
+
+    /// Tier per template, index-aligned with `entries` (what the
+    /// cluster engine registers on its shards).
+    pub fn tiers(&self) -> Vec<crate::qos::Tier> {
+        self.entries.iter().map(|e| e.tier).collect()
     }
 
     /// Generate the arrival schedule: `(timestamp µs, template index)`

@@ -247,3 +247,56 @@ fn epoch_gating_skips_majority_of_ticks() {
     // Spatial replans are window- and epoch-gated: far rarer than ticks.
     assert!(c.spatial_plans + c.spatial_plan_skips < c.sched_steps / 10);
 }
+
+// ---------------------------------------------------------------------
+// QoS determinism (the admission gate on the shared clock)
+// ---------------------------------------------------------------------
+
+/// A QoS-gated run under a tiered Batch-heavy mix: token-bucket refills,
+/// aging promotions, and sheds are all decisions on the shared event
+/// clock, so same seed + config ⇒ byte-identical digests — including
+/// the per-tier admission counters and latency triplets the digest
+/// carries.
+fn qos_digest(seed: u64) -> String {
+    use tokencake::qos::Tier;
+    let serve = ServeConfig::default()
+        .with_mode(Mode::TokenCake)
+        .with_seed(seed)
+        .with_gpu_mem_frac(0.06);
+    let mut cfg = ClusterConfig::default()
+        .with_serve(serve)
+        .with_shards(2)
+        .with_placement(PlacementPolicy::AgentAffinity);
+    cfg.qos.enabled = true;
+    cfg.qos.rate_per_s = [8.0, 4.0, 0.5];
+    cfg.qos.burst = [4, 2, 1];
+    cfg.qos.age_promote_us = 1_000_000;
+    let w = ClusterWorkload::mixed(
+        &[
+            (templates::code_writer(), 1.0),
+            (templates::deep_research(), 2.0),
+        ],
+        3.0,
+        12,
+    )
+    .with_dataset(Dataset::D1)
+    .with_tool_noise(0.25)
+    .with_tiers(&[Tier::Interactive, Tier::Batch]);
+    let rep = ClusterEngine::new(cfg).run(&w);
+    assert!(!rep.truncated);
+    assert!(rep.qos_enabled);
+    rep.digest()
+}
+
+#[test]
+fn qos_digest_byte_identical_across_runs() {
+    let a = qos_digest(42);
+    let b = qos_digest(42);
+    assert_eq!(
+        a, b,
+        "QoS-gated runs must be byte-identical across reruns"
+    );
+    assert!(a.contains("qos=true"));
+    let c = qos_digest(43);
+    assert_ne!(a, c, "different seeds should diverge");
+}

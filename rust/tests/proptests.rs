@@ -1074,3 +1074,84 @@ fn prop_fault_replay_is_deterministic_and_conserving() {
             .unwrap_or_else(|e| panic!("seed {seed}: {e}"));
     }
 }
+
+// ---------------------------------------------------------------------
+// QoS admission gate: no starvation under Batch floods
+// ---------------------------------------------------------------------
+
+/// Seeded Batch-flood workloads through the QoS gate: every deferred
+/// arrival eventually admits or sheds (nothing left queued at end of
+/// run), per-tier arrivals == admitted + shed, every admitted app
+/// completes, block conservation holds, and a same-seed rerun is
+/// byte-identical — the gate's aging queues are part of the
+/// deterministic event clock, not a side channel.
+#[test]
+fn prop_no_starvation_under_flood() {
+    use tokencake::cluster::ClusterEngine;
+    use tokencake::config::{ClusterConfig, PlacementPolicy};
+    use tokencake::graph::templates;
+    use tokencake::qos::Tier;
+    use tokencake::workload::ClusterWorkload;
+
+    for seed in 0..5u64 {
+        let mut rng = Rng::new(seed + 0x0905);
+        let shards = rng.range_u64(2, 4) as usize;
+        let apps = rng.range_u64(8, 14) as usize;
+        let serve = ServeConfig::default()
+            .with_mode(Mode::TokenCake)
+            .with_seed(seed * 13 + 3)
+            .with_gpu_mem_frac(0.08);
+        let mut cfg = ClusterConfig::default()
+            .with_serve(serve)
+            .with_shards(shards)
+            .with_placement(PlacementPolicy::AgentAffinity);
+        cfg.qos.enabled = true;
+        // A tight Batch bucket so the flood defers hard, with aging
+        // fast enough that deferred arrivals reach the top level well
+        // inside the run — the no-starvation path must carry them.
+        cfg.qos.rate_per_s = [8.0, 4.0, 0.5];
+        cfg.qos.burst = [4, 2, 1];
+        cfg.qos.age_promote_us = 1_000_000;
+        let w = ClusterWorkload::mixed(
+            &[
+                (templates::code_writer(), 1.0),
+                (templates::deep_research(), 3.0),
+            ],
+            4.0,
+            apps,
+        )
+        .with_tiers(&[Tier::Interactive, Tier::Batch]);
+        let mut eng_a = ClusterEngine::new(cfg.clone());
+        let rep_a = eng_a.run(&w);
+        let rep_b = ClusterEngine::new(cfg).run(&w);
+        assert_eq!(
+            rep_a.digest(),
+            rep_b.digest(),
+            "seed {seed}: QoS rerun diverged"
+        );
+        assert!(!rep_a.truncated, "seed {seed}");
+        assert_eq!(
+            rep_a.qos_starved, 0,
+            "seed {seed}: requests starved in the gate"
+        );
+        let mut admitted_total = 0u64;
+        let mut arrivals_total = 0u64;
+        for i in 0..tokencake::qos::TIERS {
+            assert_eq!(
+                rep_a.qos_arrivals[i],
+                rep_a.qos_admitted[i] + rep_a.qos_shed[i],
+                "seed {seed}: tier {i} accounting broken"
+            );
+            admitted_total += rep_a.qos_admitted[i];
+            arrivals_total += rep_a.qos_arrivals[i];
+        }
+        assert_eq!(arrivals_total, apps as u64, "seed {seed}");
+        assert_eq!(
+            rep_a.aggregate.apps_completed, admitted_total,
+            "seed {seed}: an admitted app did not complete"
+        );
+        eng_a
+            .check_conservation()
+            .unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+    }
+}

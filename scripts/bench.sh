@@ -106,5 +106,37 @@ $RUN cluster $CRASH --config /tmp/tokencake_aggressive_replicas.toml \
   printf '  ]\n}\n'
 } > "$OUT/BENCH_7.json"
 
+# ---- BENCH_8: QoS on/off x Batch-flood intensity ---------------------
+# Tiered mix (code-writer = interactive, deep-research = batch flood)
+# at two flood intensities; each intensity runs ungated and gated.
+# Compare tier_p99_s[0] (Interactive) across the on/off pairs — the
+# gate must hold it inside the 60 s SLO while the ungated run lets the
+# flood push it up — plus qos_shed (explicit, accounted degradation)
+# and effective_gpu_util (must not drop by more than the shed
+# fraction). Gated runs must pass --assert-qos.
+QOSW="--shards 2 --policy affinity --apps 48 --frac 0.05 --seed 17"
+QOSON="--qos --tiers interactive,batch --qos-rates 50,4,0.25 \
+  --slo-ms 60000,120000,600000 --qos-age-ms 4000"
+$RUN cluster $QOSW --qps 3.0 --mix cw:1,dr:3 \
+  --json /tmp/bench8_off_mild.json --json-name flood-mild-qos-off
+$RUN cluster $QOSW --qps 3.0 --mix cw:1,dr:3 $QOSON --assert-qos \
+  --json /tmp/bench8_on_mild.json --json-name flood-mild-qos-on
+$RUN cluster $QOSW --qps 6.0 --mix cw:1,dr:5 \
+  --json /tmp/bench8_off_heavy.json --json-name flood-heavy-qos-off
+$RUN cluster $QOSW --qps 6.0 --mix cw:1,dr:5 $QOSON --assert-qos \
+  --json /tmp/bench8_on_heavy.json --json-name flood-heavy-qos-on
+{
+  printf '{\n  "benchmark": "tokencake_qos",\n'
+  printf '  "workload": "cw=interactive : dr=batch tiered mix, 48 apps, frac 0.05, seed 17; mild flood (3 qps, cw:1,dr:3) and heavy flood (6 qps, cw:1,dr:5), each QoS off/on (rates 50/4/0.25, SLO 60/120/600 s)",\n'
+  printf '  "metric": "tier_p99_s[0] (Interactive: gated must stay <= 60 s SLO, ungated degrades with flood), qos_shed + qos_starved (starved always 0), effective_gpu_util (drop bounded by shed fraction)",\n'
+  printf '  "runs": [\n'
+  sed -e 's/[[:space:]]*$//' /tmp/bench8_off_mild.json | sed -e '$ s/$/,/'
+  sed -e 's/[[:space:]]*$//' /tmp/bench8_on_mild.json | sed -e '$ s/$/,/'
+  sed -e 's/[[:space:]]*$//' /tmp/bench8_off_heavy.json | sed -e '$ s/$/,/'
+  cat /tmp/bench8_on_heavy.json
+  printf '  ]\n}\n'
+} > "$OUT/BENCH_8.json"
+
 echo "wrote $OUT/BENCH_2.json $OUT/BENCH_3.json $OUT/BENCH_4.json" \
-     "$OUT/BENCH_4_baseline.json $OUT/BENCH_5.json $OUT/BENCH_7.json"
+     "$OUT/BENCH_4_baseline.json $OUT/BENCH_5.json $OUT/BENCH_7.json" \
+     "$OUT/BENCH_8.json"
