@@ -25,6 +25,30 @@
 //!   that fire on the old home after the move are forwarded to the new
 //!   one.
 //!
+//! # Concurrency contract (`--parallel` vs the `--serial` oracle)
+//!
+//! Each engine iteration is split into *parallel phases* and *serial
+//! barriers*. Only shard-local work runs in a parallel phase —
+//! [`SimEngine::advance_shard_to`] and [`SimEngine::step_once`], each
+//! touching exactly one shard's own state via a disjoint `&mut`
+//! borrow on a scoped thread (`std::thread::scope`; no locks, no
+//! shared mutable state, `Send` by construction). Every outbound
+//! effect a shard produces during a phase lands in a per-shard
+//! outbox: orphaned tool finishes (the phase's return value), prefix
+//! lifecycle events and fc-lifetime observations
+//! (`ServeState::prefix_events` / `fc_lifetime_obs`), migration D2H
+//! completions (the shard's own ledger), and trace records (the
+//! shard's own `TraceSink`). At the barrier the outboxes drain in
+//! canonical `(time, shard-id, seq)` order — exactly the order a
+//! serial index-order sweep observes them, and the same total order
+//! `obs::merge_records` gives the trace — into the router, prefix
+//! directory, autoscale controller, fault executor, and QoS gate,
+//! all of which are barrier-only. In `--serial` mode (the default)
+//! the identical code path runs on one thread in shard index order,
+//! so the two modes are byte-identical per seed: digests and
+//! exported traces, pinned by `serial_parallel_digest_parity` and
+//! the CI `--assert-parity` smoke.
+//!
 //! [`MigrationLedger`]: crate::kvcache::MigrationLedger
 
 use std::collections::HashMap;
@@ -457,7 +481,10 @@ pub struct ClusterEngine {
     /// Template → tier for the running workload (empty when QoS off).
     qos_tiers: Vec<qos::Tier>,
     /// Fault-injection control plane (None = fault-free run).
-    faults: Option<FaultState>,
+    /// `pub(super)` so `faults::tick` can borrow-split it against the
+    /// rest of the engine — the plan never leaves this field, even
+    /// mid-tick.
+    pub(super) faults: Option<FaultState>,
     /// `crashed[i]` — shard `i` is down: crash applied, capacity not
     /// yet regrown through warm-up. Lives directly on the engine (not
     /// in [`FaultState`]) so the lifecycle predicates stay correct
@@ -1132,25 +1159,189 @@ impl ClusterEngine {
         self.shards[shard].inject_app(template, scales, tool_sim);
     }
 
-    /// Run a heterogeneous workload across the cluster to completion.
-    /// One run per engine: the clock, ledgers, and router state are not
-    /// reset — build a fresh `ClusterEngine` for each experiment.
-    // Index loops are deliberate: the bodies re-borrow `self` (forwarding,
-    // event pushes), which an iterator over `self.shards` would forbid.
-    #[allow(clippy::needless_range_loop)]
-    pub fn run(&mut self, w: &ClusterWorkload) -> ClusterReport {
-        // Identical template registration on every shard: template
-        // indices and interned agent-type ids agree cluster-wide, which
-        // is what makes `MigratedApp` portable.
-        for e in &w.entries {
-            for shard in self.shards.iter_mut() {
-                shard.register_template(&e.graph);
+    // ------------------------------------------------------------------
+    // Parallel shard phases (the concurrency contract)
+    //
+    // Only shard-local work — `SimEngine::advance_shard_to` and
+    // `SimEngine::step_once` — ever runs off the main thread, and only
+    // between deterministic interaction points. Everything a shard
+    // wants to tell the rest of the cluster (orphaned tool finishes,
+    // prefix events, migration D2H completions, trace records,
+    // fc-lifetime observations) accumulates in per-shard outboxes
+    // during the phase and drains at the serial barrier in canonical
+    // `(time, shard-id, seq)` order — the exact order a serial
+    // index-order sweep produces, so `--parallel` and `--serial` runs
+    // are byte-identical per seed. Router, prefix directory, autoscale
+    // controller, fault executor, and QoS gate are barrier-only.
+    // ------------------------------------------------------------------
+
+    /// Compile-time proof of the Send-by-construction claim: shard
+    /// engines (and everything they own — `ServeState`, `TraceSink`,
+    /// pools, ledgers) cross the scoped-thread boundary by `&mut`;
+    /// the tool simulator is shared read-only.
+    #[allow(dead_code)]
+    fn assert_parallel_bounds() {
+        fn send<T: Send>() {}
+        fn sync<T: Sync>() {}
+        send::<SimEngine>();
+        send::<crate::coordination::ServeState>();
+        send::<TraceSink>();
+        sync::<ToolSim>();
+    }
+
+    /// Worker-thread count for the parallel phases: 1 in `--serial`
+    /// oracle mode (and for a one-shard fleet), otherwise the host
+    /// parallelism capped by the shard count. The chunking over
+    /// threads cannot change results — phase work is shard-local by
+    /// construction — so the host's core count never leaks into the
+    /// digest.
+    fn parallel_threads(&self) -> usize {
+        if !self.cfg.parallel || self.shards.len() <= 1 {
+            return 1;
+        }
+        std::thread::available_parallelism()
+            .map(|p| p.get())
+            .unwrap_or(1)
+            .min(self.shards.len())
+    }
+
+    /// Apply `f` to every shard selected by `mask`, returning one
+    /// result slot per shard (`None` = masked out). Serial mode runs
+    /// in shard index order on the calling thread; parallel mode
+    /// splits the shard slice into contiguous chunks across scoped
+    /// threads — disjoint `&mut` borrows, no locks, no shared state.
+    /// `f` must be shard-local: it gets exactly one `&mut SimEngine`
+    /// and nothing else.
+    fn for_each_shard<T, F>(
+        &mut self,
+        mask: &[bool],
+        f: F,
+    ) -> Vec<Option<T>>
+    where
+        T: Send,
+        F: Fn(&mut SimEngine) -> T + Sync,
+    {
+        let n = self.shards.len();
+        debug_assert_eq!(mask.len(), n);
+        let threads = self.parallel_threads();
+        if threads <= 1 {
+            return self
+                .shards
+                .iter_mut()
+                .zip(mask)
+                .map(|(s, &m)| if m { Some(f(s)) } else { None })
+                .collect();
+        }
+        let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+        let chunk = n.div_ceil(threads);
+        std::thread::scope(|scope| {
+            let mut shards: &mut [SimEngine] = &mut self.shards;
+            let mut outs: &mut [Option<T>] = &mut out;
+            let mut masks: &[bool] = mask;
+            let f = &f;
+            while !shards.is_empty() {
+                let take = chunk.min(shards.len());
+                let (s_head, s_rest) =
+                    std::mem::take(&mut shards).split_at_mut(take);
+                let (o_head, o_rest) =
+                    std::mem::take(&mut outs).split_at_mut(take);
+                let (m_head, m_rest) = masks.split_at(take);
+                shards = s_rest;
+                outs = o_rest;
+                masks = m_rest;
+                scope.spawn(move || {
+                    for ((s, o), &m) in
+                        s_head.iter_mut().zip(o_head).zip(m_head)
+                    {
+                        if m {
+                            *o = Some(f(s));
+                        }
+                    }
+                });
             }
+        });
+        out
+    }
+
+    /// Phase (a): advance every runnable shard's local clock and event
+    /// queue to `now` (the parallel phase), then drain the per-shard
+    /// orphan outboxes at the barrier. Within one shard the outbox is
+    /// already time-ordered (its local queue pops in FIFO time order),
+    /// so sorting the merged stream by `(at_us, shard, seq-in-shard)`
+    /// is a total order independent of thread interleaving — the same
+    /// order `obs::merge_records` gives trace records.
+    fn advance_shards_to(&mut self, now: u64, tool_sim: &ToolSim) {
+        let runnable: Vec<bool> = (0..self.shards.len())
+            .map(|i| self.is_runnable(i))
+            .collect();
+        let outboxes = self.for_each_shard(&runnable, |s| {
+            s.advance_shard_to(now, tool_sim)
+        });
+        let mut merged: Vec<(usize, usize, OrphanedToolFinish)> =
+            Vec::new();
+        for (shard, ob) in outboxes.into_iter().enumerate() {
+            let Some(ob) = ob else { continue };
+            for (seq, o) in ob.into_iter().enumerate() {
+                merged.push((shard, seq, o));
+            }
+        }
+        merged.sort_by_key(|e| (e.2.at_us, e.0, e.1));
+        for (_, _, o) in merged {
+            self.forward_tool_finish(o, tool_sim);
+        }
+    }
+
+    /// Phase (d): run one scheduling step (and an iteration, if a
+    /// batch formed) on every idle serving shard — the parallel phase
+    /// — then push the resulting `IterDone` completions onto the
+    /// shared event queue at the barrier, in shard index order. That
+    /// matches the FIFO tie-break a serial index-order sweep produces
+    /// for same-instant completions.
+    fn step_shards(&mut self, now: u64, tool_sim: &ToolSim) {
+        let kick: Vec<bool> = (0..self.shards.len())
+            .map(|i| !self.busy[i] && self.is_steppable(i))
+            .collect();
+        let dts =
+            self.for_each_shard(&kick, |s| s.step_once(tool_sim));
+        for (i, dt) in dts.into_iter().enumerate() {
+            if let Some(Some(dt)) = dt {
+                self.busy[i] = true;
+                self.events.push(now + dt, CEv::IterDone { shard: i });
+            }
+        }
+    }
+
+    /// One-pass run initialization — the single seam both execution
+    /// modes start from: identical template registration on every
+    /// shard (template indices and interned agent-type ids agree
+    /// cluster-wide, which is what makes `MigratedApp` portable),
+    /// directory and autoscaler registration, router reconstruction
+    /// with the lifecycle mask re-imposed, and QoS tier wiring.
+    ///
+    /// Tier wiring: the gate keys arrivals by template tier, and
+    /// every shard gets a read-only [`qos::ShardQos`]. Attribution
+    /// (per-tier latency in the report) follows the workload's tier
+    /// labels even for ungated runs — that is what makes a QoS
+    /// on/off A-B comparison measurable — while SLO-aware victim
+    /// ordering stays behind `enabled`. With all-Standard labels
+    /// this is exactly the legacy single-bucket behavior.
+    fn setup_run(&mut self, w: &ClusterWorkload) {
+        self.qos_tiers = w.tiers();
+        for e in &w.entries {
             self.prefix_dir
                 .register_template(&e.graph, &self.cfg.serve.profile);
             if let Some(a) = self.autoscale.as_mut() {
                 a.register_template(&e.graph);
             }
+        }
+        for shard in self.shards.iter_mut() {
+            for e in &w.entries {
+                shard.register_template(&e.graph);
+            }
+            shard.st.qos = qos::ShardQos::configure(
+                &self.cfg.qos,
+                self.qos_tiers.clone(),
+            );
         }
         self.router = Router::new(
             self.cfg.placement,
@@ -1165,21 +1356,16 @@ impl ClusterEngine {
                 self.router.set_eligible(i, a.is_placeable(i));
             }
         }
+    }
 
-        // Tier wiring: the gate keys arrivals by template tier, and
-        // every shard gets a read-only [`qos::ShardQos`]. Attribution
-        // (per-tier latency in the report) follows the workload's tier
-        // labels even for ungated runs — that is what makes a QoS
-        // on/off A-B comparison measurable — while SLO-aware victim
-        // ordering stays behind `enabled`. With all-Standard labels
-        // this is exactly the legacy single-bucket behavior.
-        self.qos_tiers = w.tiers();
-        for shard in self.shards.iter_mut() {
-            shard.st.qos = qos::ShardQos::configure(
-                &self.cfg.qos,
-                self.qos_tiers.clone(),
-            );
-        }
+    /// Run a heterogeneous workload across the cluster to completion.
+    /// One run per engine: the clock, ledgers, and router state are not
+    /// reset — build a fresh `ClusterEngine` for each experiment.
+    // Index loops are deliberate: the bodies re-borrow `self` (forwarding,
+    // event pushes), which an iterator over `self.shards` would forbid.
+    #[allow(clippy::needless_range_loop)]
+    pub fn run(&mut self, w: &ClusterWorkload) -> ClusterReport {
+        self.setup_run(w);
 
         let mut arr_rng = self.rng.fold(1);
         let arrivals = w.arrivals(&mut arr_rng);
@@ -1198,19 +1384,14 @@ impl ClusterEngine {
             let now = self.clock.now_us();
             self.advance_trace_clocks(now);
 
-            // (a) Per-shard local events due now; forward any tool
-            // finishes whose requests migrated away. Cold/retired
-            // capacity has no events and is skipped.
-            for i in 0..self.shards.len() {
-                if !self.is_runnable(i) {
-                    continue;
-                }
-                let orphans =
-                    self.shards[i].advance_shard_to(now, &tool_sim);
-                for o in orphans {
-                    self.forward_tool_finish(o, &tool_sim);
-                }
-            }
+            // (a) Parallel phase: per-shard local events due now,
+            // executed concurrently in `--parallel` mode (in shard
+            // index order on one thread otherwise — same code path,
+            // same results by construction). Each shard accumulates
+            // outbound effects in its own outbox; the barrier inside
+            // drains them in canonical `(time, shard, seq)` order.
+            // Cold/retired capacity has no events and is skipped.
+            self.advance_shards_to(now, &tool_sim);
             self.sync_prefix_dir();
 
             // (a') Warm-ups due now activate before same-instant
@@ -1221,12 +1402,12 @@ impl ClusterEngine {
             // (a'') Planned faults due now fire after warm-ups and
             // before same-instant arrivals route: a crash at `t` is
             // fully recovered — router mask updated, apps re-queued —
-            // before any arrival at `t` is placed.
-            if self.faults.is_some() {
-                let mut f = self.faults.take().unwrap();
-                faults::tick(&mut f, self, now);
-                self.faults = Some(f);
-            }
+            // before any arrival at `t` is placed. Borrow-split: the
+            // plan stays on `self.faults` throughout (no take/put
+            // dance to lose on a panic), and it runs at the barrier
+            // only — the fault executor mutates router and shard
+            // state freely.
+            faults::tick(self, now);
 
             // (b) Global events due now.
             while let Some(ev) = self.events.pop_due(now) {
@@ -1353,17 +1534,12 @@ impl ClusterEngine {
                 self.plan_migration(now);
             }
 
-            // (d) Kick every idle serving shard: scheduling step, and an
-            // iteration if a batch formed.
-            for i in 0..self.shards.len() {
-                if self.busy[i] || !self.is_steppable(i) {
-                    continue;
-                }
-                if let Some(dt) = self.shards[i].step_once(&tool_sim) {
-                    self.busy[i] = true;
-                    self.events.push(now + dt, CEv::IterDone { shard: i });
-                }
-            }
+            // (d) Parallel phase: kick every idle serving shard —
+            // scheduling step, and an iteration if a batch formed.
+            // Iteration completions land on the shared queue at the
+            // barrier inside, in shard index order (the serial FIFO
+            // tie-break).
+            self.step_shards(now, &tool_sim);
             self.sync_prefix_dir();
 
             // (e) Advance the shared clock to the next *work* event

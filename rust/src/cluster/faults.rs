@@ -312,26 +312,39 @@ impl FaultState {
     pub(super) fn record_replica_loss(&mut self, blocks: u32) {
         self.ledger.note_lost_replica(blocks);
     }
+
+    /// Pop the next plan entry due at or before `now`. The cursor
+    /// advances before the entry executes, and the borrow ends before
+    /// [`tick`] touches the engine — the plan stays on the engine the
+    /// whole time, so a panic mid-execution can neither lose it (the
+    /// old take/put-back dance dropped it on unwind) nor replay the
+    /// entry on a recovered run.
+    fn pop_due(&mut self, now: u64) -> Option<FaultEvent> {
+        let ev = *self.plan.events.get(self.next)?;
+        if ev.at_us > now {
+            return None;
+        }
+        self.next += 1;
+        Some(ev)
+    }
 }
 
 /// Execute every fault due at `now`. Runs after warm-ups activate and
 /// before same-instant arrivals route, so a crash at `t` is fully
 /// recovered — router mask updated, apps re-queued — before any
 /// arrival at `t` is placed (the trace auditor's embargo rule).
-pub(super) fn tick(
-    fs: &mut FaultState,
-    eng: &mut ClusterEngine,
-    now: u64,
-) {
-    while fs
-        .next_due_us()
-        .map(|t| t <= now)
-        .unwrap_or(false)
+///
+/// Borrow-split with `eng.faults`: each due entry is popped through
+/// [`FaultState::pop_due`] (a short `&mut` borrow of the state alone),
+/// then executed against the full engine — `wire_penalty`,
+/// `record_replica_loss`, and the lifecycle predicates all stay live
+/// mid-tick because the state is never taken out of the engine.
+pub(super) fn tick(eng: &mut ClusterEngine, now: u64) {
+    while let Some(ev) =
+        eng.faults.as_mut().and_then(|fs| fs.pop_due(now))
     {
-        let ev = fs.plan.events[fs.next];
-        fs.next += 1;
         match ev.kind {
-            FaultKind::Crash { shard } => crash(fs, eng, shard, now),
+            FaultKind::Crash { shard } => crash(eng, shard, now),
             FaultKind::PartitionStart {
                 a,
                 b,
@@ -345,19 +358,30 @@ pub(super) fn tick(
                     b as u32,
                     factor_milli,
                 );
-                fs.open.push(OpenWindow {
-                    a,
-                    b,
-                    factor_milli,
-                    hold_us,
-                    drop_wire,
-                });
+                if let Some(fs) = eng.faults.as_mut() {
+                    fs.open.push(OpenWindow {
+                        a,
+                        b,
+                        factor_milli,
+                        hold_us,
+                        drop_wire,
+                    });
+                }
             }
             FaultKind::PartitionEnd { a, b } => {
-                if let Some(i) =
-                    fs.open.iter().position(|w| w.covers(a, b))
-                {
-                    fs.open.remove(i);
+                let healed = eng
+                    .faults
+                    .as_mut()
+                    .and_then(|fs| {
+                        let i = fs
+                            .open
+                            .iter()
+                            .position(|w| w.covers(a, b))?;
+                        fs.open.remove(i);
+                        Some(())
+                    })
+                    .is_some();
+                if healed {
                     eng.trace.fault(
                         obs::fault::HEAL,
                         a as u32,
@@ -374,12 +398,7 @@ pub(super) fn tick(
 /// record what it lost. Skipped (deterministically) when the target is
 /// already down, not serving, or the last router-eligible shard —
 /// killing the whole fleet would leave arrivals unroutable.
-fn crash(
-    fs: &mut FaultState,
-    eng: &mut ClusterEngine,
-    shard: usize,
-    now: u64,
-) {
+fn crash(eng: &mut ClusterEngine, shard: usize, now: u64) {
     if shard >= eng.shards.len()
         || eng.crashed[shard]
         || !eng.is_steppable(shard)
@@ -394,7 +413,9 @@ fn crash(
     }
     eng.crashed[shard] = true;
     let outcome = eng.crash_shard(shard, now);
-    fs.ledger.note_lost_crash(&outcome);
+    if let Some(fs) = eng.faults.as_mut() {
+        fs.ledger.note_lost_crash(&outcome);
+    }
 }
 
 #[cfg(test)]

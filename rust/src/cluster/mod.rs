@@ -62,6 +62,22 @@
 //! same seed and [`ClusterConfig`] ⇒ byte-identical [`ClusterReport`]
 //! digests.
 //!
+//! **Determinism survives parallelism.** With `ClusterConfig::parallel`
+//! (CLI `--parallel`) the shard-local phases of each iteration —
+//! advancing a shard's local events to `now`, and its scheduling
+//! step/iteration kick — execute on scoped threads over disjoint
+//! `&mut` shard borrows. Anything a shard wants to tell the rest of
+//! the cluster accumulates in per-shard outboxes (orphaned tool
+//! finishes, prefix events, lifetime observations, trace records) and
+//! drains at a serial barrier in canonical `(time, shard-id, seq)`
+//! order, exactly as the serial sweep would have observed it. The
+//! router, prefix directory, autoscale controller, fault executor,
+//! and QoS gate only ever run at barriers. `--serial` (the default)
+//! is the oracle mode: same code path, one thread, shard index order
+//! — and the two modes are byte-identical per seed, digests and
+//! traces both (`serial_parallel_digest_parity`, CI
+//! `--assert-parity`).
+//!
 //! The headline policy is **agent affinity**: an application is routed to
 //! the shard that already serves its agent types (warm shared-prefix
 //! cache, trained tool forecaster), falling back to a pressure-aware

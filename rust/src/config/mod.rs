@@ -494,6 +494,13 @@ pub struct ClusterConfig {
     /// admission in front of the router, load shedding under overload,
     /// and SLO-aware victim selection inside the shards.
     pub qos: crate::qos::QosConfig,
+    /// Execute the shard-local phases of each engine iteration on
+    /// scoped worker threads (`--parallel`). Off = the serial oracle
+    /// mode: same code path in shard index order on one thread. The
+    /// two modes are byte-identical per seed (digests and traces) —
+    /// pinned by `serial_parallel_digest_parity` and the CI
+    /// `--assert-parity` smoke.
+    pub parallel: bool,
 }
 
 impl Default for ClusterConfig {
@@ -515,6 +522,7 @@ impl Default for ClusterConfig {
             autoscale: AutoscaleConfig::default(),
             faults: FaultConfig::default(),
             qos: crate::qos::QosConfig::default(),
+            parallel: false,
         }
     }
 }
@@ -538,6 +546,11 @@ impl ClusterConfig {
 
     pub fn with_serve(mut self, serve: ServeConfig) -> Self {
         self.serve = serve;
+        self
+    }
+
+    pub fn with_parallel(mut self, on: bool) -> Self {
+        self.parallel = on;
         self
     }
 
@@ -773,6 +786,7 @@ impl ClusterConfig {
                 self.prefix_replicate_threshold =
                     value.parse().map_err(|_| bad())?
             }
+            "parallel" => self.parallel = on_off(value)?,
             _ => {
                 return Err(ParseError::UnknownKey {
                     section: section.to_string(),
@@ -1027,6 +1041,7 @@ mod tests {
         c.apply_kv("cluster", "interconnect_factor", "3.5").unwrap();
         c.apply_kv("cluster", "prefix_directory", "off").unwrap();
         c.apply_kv("cluster", "prefix_replicate_threshold", "5").unwrap();
+        c.apply_kv("cluster", "parallel", "on").unwrap();
         // Non-cluster sections fall through to the per-shard config.
         c.apply_kv("serve", "mode", "vllm").unwrap();
         assert_eq!(c.shards, 4);
@@ -1035,6 +1050,7 @@ mod tests {
         assert_eq!(c.interconnect_factor, 3.5);
         assert!(!c.prefix_directory);
         assert_eq!(c.prefix_replicate_threshold, 5);
+        assert!(c.parallel);
         assert_eq!(c.serve.mode, Mode::Vllm);
         assert!(c.apply_kv("cluster", "shards", "x").is_err());
         assert!(c.apply_kv("cluster", "nope", "1").is_err());

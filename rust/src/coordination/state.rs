@@ -281,6 +281,11 @@ pub struct ServeState {
     pub temporal_next_due_us: u64,
     /// Prefix-index lifecycle log for the cluster prefix directory
     /// (recorded only when [`Self::publish_prefix_events`] is set).
+    /// One of the per-shard *outboxes* of the cluster concurrency
+    /// contract: appended freely during the shard-local (possibly
+    /// parallel) phase, drained by the cluster driver only at a
+    /// serial barrier in shard order — never read cross-shard
+    /// mid-phase.
     pub prefix_events: Vec<PrefixEvent>,
     /// Cluster driver flips this so prefix mutations are published.
     pub publish_prefix_events: bool,
@@ -289,6 +294,8 @@ pub struct ServeState {
     /// KV-lifetime predictor (Continuum-style: lifetime ≈ the
     /// template's tool-call profile × observed stall durations).
     /// Recorded only when [`Self::publish_lifetime_obs`] is set.
+    /// Like [`Self::prefix_events`], a per-shard outbox: the
+    /// autoscale controller drains it at the barrier, in shard order.
     pub fc_lifetime_obs: Vec<(usize, u64)>,
     /// Cluster autoscaler flips this so FC lifetimes are published.
     pub publish_lifetime_obs: bool,

@@ -332,6 +332,13 @@ impl SimEngine {
     /// Advance this worker's clock to the (global) time `t_us` and apply
     /// every local event that came due. Returns tool finishes addressed to
     /// requests that migrated away — the caller forwards them.
+    ///
+    /// Shard-local by construction — this method touches only this
+    /// worker's own state, so the cluster driver may run it for many
+    /// shards concurrently (the parallel phase of the concurrency
+    /// contract). The returned orphans are this phase's outbox: the
+    /// driver merges them across shards at the barrier in
+    /// `(time, shard, seq)` order before forwarding.
     pub fn advance_shard_to(
         &mut self,
         t_us: u64,
@@ -376,6 +383,11 @@ impl SimEngine {
     /// §3.2 scheduling step, then — if a batch formed — execute one
     /// iteration and return its duration (µs). The caller advances the
     /// shared clock and re-enters when the iteration completes.
+    ///
+    /// Shard-local like [`Self::advance_shard_to`]: safe to run
+    /// concurrently across shards; the returned duration is pushed
+    /// onto the shared event queue by the driver at the barrier, in
+    /// shard index order.
     pub fn step_once(&mut self, tool_sim: &ToolSim) -> Option<u64> {
         coordination::step(&mut self.st, self.clock.now_us());
         self.drain_outbox();

@@ -128,6 +128,26 @@
 //! a pressure burst drains in one window instead of one victim per
 //! window.
 //!
+//! ## Concurrency contract (deterministic parallel shard execution)
+//!
+//! The cluster hot loop runs its shard-local phases — advancing each
+//! shard's local events to `now`, and each idle shard's scheduling
+//! step — on scoped threads when `ClusterConfig::parallel` is set
+//! (CLI `--parallel`), over disjoint `&mut` borrows of the shard
+//! engines (no locks, `Send` by construction). Cross-shard effects
+//! never happen inside a parallel phase: each shard accumulates its
+//! outbound effects (orphaned tool finishes, prefix events,
+//! fc-lifetime observations, trace records, ledger completions) in
+//! per-shard outboxes that drain at a serial barrier in canonical
+//! `(time, shard-id, seq)` order — the same total order the serial
+//! sweep produces and [`obs::merge_records`] gives the trace. The
+//! router, prefix directory, autoscale controller, fault executor,
+//! and QoS gate run only at barriers. `--serial` keeps the
+//! single-thread oracle on the identical code path, and the two
+//! modes are byte-identical per seed (digests and exported traces) —
+//! pinned by the `serial_parallel_digest_parity` determinism test
+//! and the CI `--assert-parity` smoke.
+//!
 //! The fleet itself is elastic under the same discipline
 //! ([`cluster::autoscale`]): a hysteresis controller reads the
 //! aggregate pressure signal through the pressure-epoch gate and

@@ -347,6 +347,16 @@ fn cmd_cluster(args: &Args) -> Result<(), String> {
     if args.has("no-migrate") {
         cluster.migration = false;
     }
+    // Execution mode: --parallel runs the shard-local phases on scoped
+    // worker threads; --serial forces the single-thread oracle (the
+    // default). Both modes are byte-identical per seed — enforceable
+    // in-run with --assert-parity.
+    if args.has("parallel") {
+        cluster.parallel = true;
+    }
+    if args.has("serial") {
+        cluster.parallel = false;
+    }
     // Elastic autoscaling: --autoscale flips it on; the bounds and
     // controller constants are flag-overridable on top of the
     // [cluster.autoscale] file section.
@@ -522,7 +532,7 @@ fn cmd_cluster(args: &Args) -> Result<(), String> {
         (cluster.autoscale.min_shards, cluster.autoscale.max_shards);
     println!(
         "cluster: {shards} shard(s), policy={}, migration={}, \
-         autoscale={}, qps={qps}, apps={apps}, mix={}",
+         autoscale={}, mode={}, qps={qps}, apps={apps}, mix={}",
         policy.name(),
         cluster.migration,
         if autoscale_on {
@@ -530,8 +540,18 @@ fn cmd_cluster(args: &Args) -> Result<(), String> {
         } else {
             "off".into()
         },
+        if cluster.parallel { "parallel" } else { "serial" },
         args.get_or("mix", "cw:2,dr:1"),
     );
+    // The parity oracle re-runs the identical workload in the opposite
+    // execution mode; snapshot the config before the engine takes it.
+    let parity_cfg = if args.has("assert-parity") {
+        let mut c = cluster.clone();
+        c.parallel = !c.parallel;
+        Some(c)
+    } else {
+        None
+    };
     let mut eng = ClusterEngine::new(cluster);
     if args.get("trace").is_some() {
         eng.enable_trace();
@@ -540,6 +560,7 @@ fn cmd_cluster(args: &Args) -> Result<(), String> {
         || args.has("assert-planner-gated")
         || args.has("assert-recovery")
         || args.has("assert-qos")
+        || args.has("assert-parity")
     {
         // Assert runs arm the flight recorder so a failure ships its
         // recent-event ring (full capture stays off unless --trace).
@@ -801,6 +822,46 @@ fn cmd_cluster(args: &Args) -> Result<(), String> {
             runs, c.sched_steps
         );
     }
+    if let Some(cfg2) = parity_cfg {
+        // CI parity smoke: the serial oracle and the parallel engine
+        // must be indistinguishable — byte-identical digest (and
+        // trace, when captured) for the same seed and workload.
+        let mode_a =
+            if eng.cfg.parallel { "parallel" } else { "serial" };
+        let mode_b = if cfg2.parallel { "parallel" } else { "serial" };
+        let trace_a =
+            args.get("trace").is_some().then(|| eng.export_trace());
+        let mut oracle = ClusterEngine::new(cfg2);
+        if trace_a.is_some() {
+            oracle.enable_trace();
+        }
+        let rep2 = oracle.run(&workload);
+        if report.digest() != rep2.digest() {
+            return Err(format!(
+                "parity violation: {mode_a} and {mode_b} digests \
+                 differ for the same seed/workload\n\
+                 --- {mode_a} ---\n{}\n--- {mode_b} ---\n{}",
+                report.digest(),
+                rep2.digest()
+            ));
+        }
+        if let Some(ta) = trace_a {
+            let tb = oracle.export_trace();
+            if ta != tb {
+                return Err(format!(
+                    "parity violation: {mode_a} and {mode_b} traces \
+                     differ ({} vs {} bytes)",
+                    ta.len(),
+                    tb.len()
+                ));
+            }
+        }
+        println!(
+            "parity OK: {mode_a} == {mode_b} digest across {} \
+             shard(s)",
+            report.num_shards
+        );
+    }
     Ok(())
 }
 
@@ -933,6 +994,13 @@ COMMANDS:
            --assert-qos  (fail unless zero starved requests, per-tier
            arrivals == admitted + shed, Interactive p99 <= its SLO,
            and block conservation holds — the QoS CI smoke)
+           --parallel | --serial  (execute the shard-local phases on
+           scoped worker threads, or force the single-thread oracle —
+           the default; both modes are byte-identical per seed)
+           --assert-parity  (re-run the identical workload in the
+           opposite execution mode and fail unless digests — and
+           traces, with --trace — match byte-for-byte: the
+           parallel-determinism CI smoke)
   audit    check an exported trace against the obs-layer ordering
            invariants:  --trace FILE  (exit 1 on the first violation)
   serve    start the frontend HTTP server:  --port

@@ -739,6 +739,12 @@ impl TraceSink {
 /// by `(at_us, shard, seq)`. Within a sink `seq` orders same-instant
 /// events; across sinks the shard index breaks clock ties (the cluster
 /// control plane, [`CLUSTER_SHARD`], sorts last).
+///
+/// This `(time, shard, seq)` total order is the canonical barrier
+/// drain order of the cluster concurrency contract: each shard's sink
+/// is written only by that shard (the parallel phase appends locally),
+/// and because the merge key is independent of thread interleaving,
+/// `--parallel` and `--serial` runs export byte-identical traces.
 pub fn merge_records(streams: &[&[TraceRecord]]) -> Vec<TraceRecord> {
     let total = streams.iter().map(|s| s.len()).sum();
     let mut all = Vec::with_capacity(total);

@@ -300,3 +300,115 @@ fn qos_digest_byte_identical_across_runs() {
     let c = qos_digest(43);
     assert_ne!(a, c, "different seeds should diverge");
 }
+
+// ---------------------------------------------------------------------
+// Serial/parallel execution parity (the concurrency contract)
+// ---------------------------------------------------------------------
+
+#[derive(Clone, Copy, Debug)]
+enum Variant {
+    Plain,
+    Autoscale,
+    Faulted,
+    Qos,
+}
+
+/// One cluster run in the requested execution mode, returning the two
+/// byte-level artifacts the parity contract covers: the report digest
+/// and the exported trace document.
+fn parity_run(
+    variant: Variant,
+    shards: usize,
+    parallel: bool,
+) -> (String, String) {
+    use tokencake::qos::Tier;
+    let serve = ServeConfig::default()
+        .with_mode(Mode::TokenCake)
+        .with_seed(42)
+        .with_gpu_mem_frac(0.05);
+    let mut cfg = ClusterConfig::default()
+        .with_serve(serve)
+        .with_shards(shards)
+        .with_placement(PlacementPolicy::AgentAffinity)
+        .with_parallel(parallel);
+    let mut w = ClusterWorkload::mixed(
+        &[
+            (templates::code_writer(), 2.0),
+            (templates::deep_research(), 1.0),
+        ],
+        2.0,
+        12,
+    )
+    .with_dataset(Dataset::D1)
+    .with_tool_noise(0.25);
+    match variant {
+        Variant::Plain => {}
+        Variant::Autoscale => {
+            cfg.autoscale.enabled = true;
+            cfg.autoscale.min_shards = 1;
+            cfg.autoscale.max_shards = shards + 2;
+            cfg.autoscale.warmup_cost_us = 1_000_000;
+            cfg.autoscale.cooldown_us = 1_000_000;
+            cfg.autoscale.drain_confirm = 2;
+            cfg.autoscale.interval_us = 100_000;
+        }
+        Variant::Faulted => {
+            cfg.faults.enabled = true;
+            cfg.faults.crash_schedule = "1@3000".to_string();
+        }
+        Variant::Qos => {
+            cfg.qos.enabled = true;
+            cfg.qos.rate_per_s = [8.0, 4.0, 0.5];
+            cfg.qos.burst = [4, 2, 1];
+            cfg.qos.age_promote_us = 1_000_000;
+            w = w.with_tiers(&[Tier::Interactive, Tier::Batch]);
+        }
+    }
+    let mut eng = ClusterEngine::new(cfg);
+    eng.enable_trace();
+    let rep = eng.run(&w);
+    (rep.digest(), eng.export_trace())
+}
+
+/// The `--parallel` engine and the `--serial` oracle are
+/// indistinguishable: byte-identical digests AND byte-identical
+/// exported traces per seed, at every shard scale, with the autoscale,
+/// fault, and QoS control planes in play. This is the invariant that
+/// lets the scoped-thread phases exist at all — any scheduling
+/// decision leaking thread interleaving into observable state breaks
+/// this test.
+#[test]
+fn serial_parallel_digest_parity() {
+    for shards in [1usize, 2, 4, 8] {
+        for variant in
+            [Variant::Plain, Variant::Autoscale, Variant::Qos]
+        {
+            let (ds, ts) = parity_run(variant, shards, false);
+            let (dp, tp) = parity_run(variant, shards, true);
+            assert_eq!(
+                ds, dp,
+                "{variant:?} @ {shards} shards: digest parity broken"
+            );
+            assert_eq!(
+                ts, tp,
+                "{variant:?} @ {shards} shards: trace parity broken"
+            );
+        }
+    }
+    // Faulted runs need a survivor: the crash executor skips a crash
+    // that would kill the last router-eligible shard, so a one-shard
+    // faulted run is degenerate (and the explicit schedule names
+    // shard 1). Parity still must hold at every multi-shard scale.
+    for shards in [2usize, 4, 8] {
+        let (ds, ts) = parity_run(Variant::Faulted, shards, false);
+        let (dp, tp) = parity_run(Variant::Faulted, shards, true);
+        assert_eq!(
+            ds, dp,
+            "Faulted @ {shards} shards: digest parity broken"
+        );
+        assert_eq!(
+            ts, tp,
+            "Faulted @ {shards} shards: trace parity broken"
+        );
+    }
+}

@@ -1155,3 +1155,55 @@ fn prop_no_starvation_under_flood() {
             .unwrap_or_else(|e| panic!("seed {seed}: {e}"));
     }
 }
+
+// ---------------------------------------------------------------------
+// Parallel execution: conservation + serial parity under load
+// ---------------------------------------------------------------------
+
+/// Seeded mixed workloads through the parallel engine: the
+/// scoped-thread phases must conserve blocks exactly like the serial
+/// oracle (pool ∪ requests ∪ prefix ∪ wire all accounted) and produce
+/// the byte-identical digest a serial run of the same seed produces —
+/// the concurrency contract under migration, offload, and tool noise.
+#[test]
+fn prop_parallel_conserves_blocks() {
+    use tokencake::cluster::ClusterEngine;
+    use tokencake::config::{ClusterConfig, PlacementPolicy};
+    use tokencake::graph::templates;
+    use tokencake::workload::ClusterWorkload;
+
+    for seed in 0..6u64 {
+        let mut rng = Rng::new(seed + 0x9A11);
+        let shards = rng.range_u64(2, 8) as usize;
+        let apps = rng.range_u64(8, 14) as usize;
+        let serve = ServeConfig::default()
+            .with_mode(Mode::TokenCake)
+            .with_seed(seed * 7 + 1)
+            .with_gpu_mem_frac(0.06);
+        let cfg = ClusterConfig::default()
+            .with_serve(serve)
+            .with_shards(shards)
+            .with_placement(PlacementPolicy::AgentAffinity);
+        let w = ClusterWorkload::mixed(
+            &[
+                (templates::code_writer(), 2.0),
+                (templates::deep_research(), 1.0),
+            ],
+            2.0,
+            apps,
+        )
+        .with_tool_noise(0.2);
+        let mut par =
+            ClusterEngine::new(cfg.clone().with_parallel(true));
+        let rep_par = par.run(&w);
+        let rep_ser = ClusterEngine::new(cfg).run(&w);
+        assert_eq!(
+            rep_par.digest(),
+            rep_ser.digest(),
+            "seed {seed}: parallel diverged from the serial oracle"
+        );
+        assert!(!rep_par.truncated, "seed {seed}");
+        par.check_conservation()
+            .unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+    }
+}

@@ -137,6 +137,37 @@ $RUN cluster $QOSW --qps 6.0 --mix cw:1,dr:5 $QOSON --assert-qos \
   printf '  ]\n}\n'
 } > "$OUT/BENCH_8.json"
 
+# ---- BENCH_9: serial oracle vs parallel shard execution --------------
+# The same pressured mixed workload at 4 / 16 / 64 shards, each run
+# twice: --serial (single-thread oracle) and --parallel (scoped worker
+# threads) with --assert-parity, so every parallel row is only written
+# if its digest matched the serial oracle byte for byte. Compare
+# wall_s and sim_events_per_s across each pair — the parallel multiplier
+# should grow with the shard count (4-shard runs are barrier-dominated;
+# 64-shard runs are where the scoped threads pay).
+PAR="--policy affinity --qps 2.0 --apps 48 --frac 0.05 --seed 1"
+for n in 4 16 64; do
+  $RUN cluster --shards "$n" $PAR --serial \
+    --json "/tmp/bench9_serial_$n.json" --json-name "serial-$n-shards"
+  $RUN cluster --shards "$n" $PAR --parallel --assert-parity \
+    --json "/tmp/bench9_parallel_$n.json" --json-name "parallel-$n-shards"
+done
+{
+  printf '{\n  "benchmark": "tokencake_parallel_execution",\n'
+  printf '  "workload": "mix cw:2,dr:1, 2.0 qps, 48 apps, frac 0.05, seed 1, affinity routing; 4/16/64 shards, each serial vs parallel (--assert-parity on every parallel run)",\n'
+  printf '  "metric": "wall_s + sim_events_per_s per serial/parallel pair (identical digests enforced in-run; the parallel multiplier must grow with shard count)",\n'
+  printf '  "runs": [\n'
+  for n in 4 16 64; do
+    sed -e 's/[[:space:]]*$//' "/tmp/bench9_serial_$n.json" | sed -e '$ s/$/,/'
+    if [ "$n" = 64 ]; then
+      cat "/tmp/bench9_parallel_$n.json"
+    else
+      sed -e 's/[[:space:]]*$//' "/tmp/bench9_parallel_$n.json" | sed -e '$ s/$/,/'
+    fi
+  done
+  printf '  ]\n}\n'
+} > "$OUT/BENCH_9.json"
+
 echo "wrote $OUT/BENCH_2.json $OUT/BENCH_3.json $OUT/BENCH_4.json" \
      "$OUT/BENCH_4_baseline.json $OUT/BENCH_5.json $OUT/BENCH_7.json" \
-     "$OUT/BENCH_8.json"
+     "$OUT/BENCH_8.json $OUT/BENCH_9.json"
