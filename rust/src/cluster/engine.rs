@@ -309,7 +309,8 @@ impl ClusterReport {
             "[cluster x{} {}] apps={} avg={:.1}s p99={:.1}s total={:.1}s \
              thpt={:.4}req/s eff_util={:.1}% migrations={} \
              migrated_blocks={} drops={} batches={} pfx_remote_hits={} \
-             pfx_repl={} planner={}/{}steps{scale}{fault}{qos}",
+             pfx_repl={} planner={}/{}steps \
+             stall_hidden={:.3}{scale}{fault}{qos}",
             shards_str,
             self.policy,
             self.aggregate.apps_completed,
@@ -326,7 +327,72 @@ impl ClusterReport {
             self.prefix_replications,
             self.aggregate.counters.planner_runs,
             self.aggregate.counters.sched_steps,
+            self.aggregate.stall_hidden_frac(),
         )
+    }
+
+    /// Prometheus text-format dump of the end-of-run attribution and
+    /// latency aggregates (`--metrics-out FILE`). Values are integers
+    /// (µs / counts / milli fixed-point), so same-seed runs write
+    /// byte-identical files — the dump participates in the determinism
+    /// contract like every other rendered artifact.
+    pub fn prometheus_text(&self) -> String {
+        use crate::obs::attrib::NAMES;
+        let m = &self.aggregate;
+        let mut s = String::new();
+        s.push_str(
+            "# HELP tokencake_phase_us total microseconds attributed \
+             to each request phase\n# TYPE tokencake_phase_us counter\n",
+        );
+        for (i, name) in NAMES.iter().enumerate() {
+            s.push_str(&format!(
+                "tokencake_phase_us{{phase=\"{name}\"}} {}\n",
+                m.phase_us[i]
+            ));
+        }
+        s.push_str(
+            "# HELP tokencake_phase_p99_us per-request p99 of per-phase \
+             time\n# TYPE tokencake_phase_p99_us gauge\n",
+        );
+        for (i, name) in NAMES.iter().enumerate() {
+            s.push_str(&format!(
+                "tokencake_phase_p99_us{{phase=\"{name}\"}} {}\n",
+                m.phase_hist[i].percentile_us(99.0)
+            ));
+        }
+        s.push_str(
+            "# HELP tokencake_tier_phase_us total microseconds per QoS \
+             tier and phase\n# TYPE tokencake_tier_phase_us counter\n",
+        );
+        for (t, tp) in m.tier_phase_us.iter().enumerate() {
+            for (i, name) in NAMES.iter().enumerate() {
+                if tp[i] != 0 {
+                    s.push_str(&format!(
+                        "tokencake_tier_phase_us{{tier=\"{t}\",\
+                         phase=\"{name}\"}} {}\n",
+                        tp[i]
+                    ));
+                }
+            }
+        }
+        s.push_str(&format!(
+            "# TYPE tokencake_stall_hidden_frac_milli gauge\n\
+             tokencake_stall_hidden_frac_milli {}\n\
+             # TYPE tokencake_exposed_upload_us_p99 gauge\n\
+             tokencake_exposed_upload_us_p99 {}\n\
+             # TYPE tokencake_queue_wait_us_p99 gauge\n\
+             tokencake_queue_wait_us_p99 {}\n\
+             # TYPE tokencake_apps_completed counter\n\
+             tokencake_apps_completed {}\n\
+             # TYPE tokencake_makespan_us gauge\n\
+             tokencake_makespan_us {}\n",
+            (m.stall_hidden_frac() * 1000.0).round() as u64,
+            m.exposed_upload_us_p99(),
+            m.queue_wait_us_p99(),
+            m.apps_completed,
+            m.makespan_us,
+        ));
+        s
     }
 
     /// One line per shard (index, apps, mean latency, utilization, swap).
@@ -679,6 +745,130 @@ impl ClusterEngine {
         out
     }
 
+    /// Finished-request phase ledgers across every shard, keyed by rid.
+    /// Each rid lives on exactly one shard (migration moves the whole
+    /// request, ledger riding along), so the union is disjoint.
+    fn gather_ledgers(
+        &self,
+    ) -> std::collections::BTreeMap<u64, obs::PhaseLedger> {
+        let mut out = std::collections::BTreeMap::new();
+        for s in &self.shards {
+            for r in s.st.reqs.values() {
+                if r.attrib.is_finished() {
+                    out.insert(r.id.0, r.attrib.clone());
+                }
+            }
+        }
+        out
+    }
+
+    /// Live per-request attribution table (finished requests, rid
+    /// order) — the byte-comparison target for `tokencake analyze
+    /// --trace`, rendered through the same
+    /// [`obs::attrib::render_ledgers`] the trace replay uses.
+    pub fn render_ledgers(&self) -> String {
+        obs::attrib::render_ledgers(&self.gather_ledgers())
+    }
+
+    /// Phase snapshot of every *unfinished* request: current phase and
+    /// time in it at the shared clock. Appended to conservation and
+    /// attribution failures so a dump shows where each live request
+    /// was stuck, not just what the scheduler last did.
+    pub fn attrib_snapshot(&self) -> String {
+        let now = self.clock.now_us();
+        let mut lines: Vec<(u64, String)> = Vec::new();
+        for (i, s) in self.shards.iter().enumerate() {
+            for r in s.st.reqs.values() {
+                if r.attrib.is_finished() {
+                    continue;
+                }
+                lines.push((
+                    r.id.0,
+                    format!(
+                        "  rid={} shard{} phase={} in_phase_us={}",
+                        r.id.0,
+                        i,
+                        obs::attrib::NAMES[r.attrib.current_phase()],
+                        r.attrib.in_phase_us(now),
+                    ),
+                ));
+            }
+        }
+        if lines.is_empty() {
+            return String::new();
+        }
+        lines.sort_unstable();
+        let mut out = format!(
+            "--- live phase ledgers at {now}us ({} requests) ---\n",
+            lines.len()
+        );
+        for (_, l) in lines {
+            out.push_str(&l);
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Attribution audit (`--assert-attrib` and tests): every finished
+    /// request's phase ledger conserves exactly (Σ phases == end −
+    /// start, integer µs), and — when tracing is on — the attribution
+    /// reconstructed from the exported trace alone renders
+    /// byte-identically to the live ledger. Failures ship the live
+    /// phase snapshot and the flight-recorder ring.
+    pub fn check_attrib(&self) -> Result<(), String> {
+        self.attrib_inner().map_err(|e| {
+            let mut msg = e;
+            let snap = self.attrib_snapshot();
+            if !snap.is_empty() {
+                msg.push('\n');
+                msg.push_str(&snap);
+            }
+            let dump = self.flight_dump();
+            if !dump.is_empty() {
+                msg.push_str(
+                    "\n--- flight recorder (newest last) ---\n",
+                );
+                msg.push_str(&dump);
+            }
+            msg
+        })
+    }
+
+    fn attrib_inner(&self) -> Result<(), String> {
+        let live = self.gather_ledgers();
+        for (rid, l) in &live {
+            if !l.conserves() {
+                return Err(format!(
+                    "rid {rid}: phase sum {} != e2e {} (span {}..{})",
+                    l.total_us(),
+                    l.end_us().saturating_sub(l.start_us()),
+                    l.start_us(),
+                    l.end_us()
+                ));
+            }
+        }
+        // Byte-for-byte replay check needs the full trace; with sinks
+        // disabled the conservation half above is all there is.
+        let doc = self.export_trace();
+        let recs = obs::parse_chrome_trace(&doc)
+            .map_err(|e| format!("trace reparse failed: {e}"))?;
+        if recs.is_empty() {
+            return Ok(());
+        }
+        let recon = obs::attrib::reconstruct(&recs);
+        let from_trace =
+            obs::attrib::render_ledgers(&recon.finished());
+        let from_live = obs::attrib::render_ledgers(&live);
+        if from_trace != from_live {
+            return Err(format!(
+                "trace-derived attribution diverges from live \
+                 ledger\n--- live ---\n{from_live}--- trace ---\n\
+                 {from_trace}"
+            ));
+        }
+        Ok(())
+    }
+
     /// Current simulated time (µs) on the shared clock.
     pub fn now_us(&self) -> u64 {
         self.clock.now_us()
@@ -929,14 +1119,23 @@ impl ClusterEngine {
     pub fn check_conservation(&self) -> Result<(), String> {
         self.conservation_inner().map_err(|e| {
             // A conservation failure is exactly what the flight
-            // recorder exists for: attach the recent-event ring so the
-            // failure ships its own context.
-            let dump = self.flight_dump();
-            if dump.is_empty() {
-                e
-            } else {
-                format!("{e}\n--- flight recorder (newest last) ---\n{dump}")
+            // recorder exists for: attach the phase snapshot of every
+            // live request plus the recent-event ring so the failure
+            // ships its own context.
+            let mut msg = e;
+            let snap = self.attrib_snapshot();
+            if !snap.is_empty() {
+                msg.push('\n');
+                msg.push_str(&snap);
             }
+            let dump = self.flight_dump();
+            if !dump.is_empty() {
+                msg.push_str(
+                    "\n--- flight recorder (newest last) ---\n",
+                );
+                msg.push_str(&dump);
+            }
+            msg
         })
     }
 
@@ -1098,11 +1297,15 @@ impl ClusterEngine {
     /// The per-app RNG keys off the arrival `seq`, so sampling and
     /// placement inputs are identical whether the app admitted
     /// immediately or was released from the QoS deferred queue later.
+    /// `wait_us` is the time the arrival spent in the QoS deferred
+    /// queue (0 for immediate admits) — staged into the shard so the
+    /// spawned requests' phase ledgers open with a qos-deferred span.
     fn route_arrival(
         &mut self,
         seq: u32,
         template: usize,
         now: u64,
+        wait_us: u64,
         w: &ClusterWorkload,
         tool_sim: &ToolSim,
     ) {
@@ -1156,6 +1359,7 @@ impl ClusterEngine {
         );
         let mut rng = self.rng.fold(1000 + seq as u64);
         let scales = w.dataset.sample(&mut rng);
+        self.shards[shard].st.stage_qos_wait(wait_us);
         self.shards[shard].inject_app(template, scales, tool_sim);
     }
 
@@ -1451,7 +1655,7 @@ impl ClusterEngine {
                         };
                         if verdict == qos::Admission::Admit {
                             self.route_arrival(
-                                seq, template, now, w, &tool_sim,
+                                seq, template, now, 0, w, &tool_sim,
                             );
                         }
                     }
@@ -1494,7 +1698,7 @@ impl ClusterEngine {
                     );
                     let (_, template) = arrivals[r.seq as usize];
                     self.route_arrival(
-                        r.seq, template, now, w, &tool_sim,
+                        r.seq, template, now, r.wait_us, w, &tool_sim,
                     );
                 }
             }
@@ -2120,8 +2324,10 @@ impl ClusterEngine {
                         // here so the request re-queues instead of
                         // waiting on an event that already fired.
                         temporal::resume_from_fc(st, rid, now);
+                        st.note_crash_requeue(rid);
                     } else {
                         st.set_req_state(rid, ReqState::Waiting);
+                        st.note_crash_requeue(rid);
                     }
                     let r = st
                         .reqs
@@ -2323,6 +2529,10 @@ impl ClusterEngine {
             self.router.mark_warm(dst, template);
             if tool_done {
                 self.replay_buffered_finish(dst, rid, now);
+                // The replay leaves the request Waiting on a survivor
+                // with a full recompute ahead of it — that queue time
+                // is crash-requeue, not ordinary queueing.
+                self.shards[dst].st.note_crash_requeue(rid);
             }
         }
         lost
@@ -2796,6 +3006,10 @@ impl ClusterEngine {
         st.forecaster
             .observe_us(&name, finished.saturating_sub(started));
         st.note_fc_lifetime(rid, finished.saturating_sub(started));
+        // Attribution: the stall stopped being hideable at the buffered
+        // return instant, not at landing — split the ledger there so
+        // the wire tail after the return counts as exposed.
+        st.note_tool_return(rid, finished);
         temporal::resume_from_fc(st, rid, now);
     }
 }

@@ -423,6 +423,7 @@ mod tests {
             tokens_generated: 0,
             wait_time_us: 0,
             exec_time_us: 0,
+            attrib: Default::default(),
         }
     }
 

@@ -7,6 +7,7 @@
 
 use crate::graph::{CallSpec, FuncKind, NodeId};
 use crate::kvcache::{AgentTypeId, BlockSet, CpuBlockId, TransferId};
+use crate::obs::attrib::PhaseLedger;
 use crate::workload::SampledLengths;
 
 /// Unique request id.
@@ -176,6 +177,10 @@ pub struct Request {
     pub wait_time_us: u64,
     /// Total execution time spent running/prefilling (µs) — H_a input.
     pub exec_time_us: u64,
+    /// Latency-attribution phase ledger (`obs::attrib`). Lives on the
+    /// request so migration and crash requeue carry it along; mutated
+    /// only through `ServeState` hooks (CI grep lint).
+    pub attrib: PhaseLedger,
 }
 
 impl Request {
@@ -290,6 +295,7 @@ mod tests {
             tokens_generated: 0,
             wait_time_us: 0,
             exec_time_us: 0,
+            attrib: PhaseLedger::default(),
         }
     }
 

@@ -308,9 +308,17 @@ pub struct ServeState {
     traced_planner_skips: [u64; 2],
     /// Last observed pressure band (see [`Self::note_pressure_band`]).
     last_pressure_band: u8,
+    /// QoS gate wait staged for the next `spawn_app`'s root requests
+    /// (see [`Self::stage_qos_wait`]).
+    qos_wait_pending_us: u64,
+    /// Next gauge-sample boundary (see [`Self::maybe_sample_gauges`]).
+    next_gauge_us: u64,
     next_req: u64,
     next_app: u64,
 }
+
+/// Fixed sim-clock cadence of the scheduler gauge sampler (µs).
+pub const GAUGE_CADENCE_US: u64 = 50_000;
 
 impl ServeState {
     pub fn new(cfg: ServeConfig) -> Self {
@@ -358,6 +366,8 @@ impl ServeState {
             trace: TraceSink::default(),
             traced_planner_skips: [0; 2],
             last_pressure_band: 0,
+            qos_wait_pending_us: 0,
+            next_gauge_us: 0,
             next_req: 0,
             next_app: 0,
         }
@@ -529,11 +539,15 @@ impl ServeState {
     /// Re-register `rid` under its (already written) new state. Every
     /// FC-lifecycle transition lands here, so this is also the central
     /// epoch bump for the temporal planner (and the spatial one: the
-    /// per-type GPU residency the agent-type score reads shifts too).
+    /// per-type GPU residency the agent-type score reads shifts too) —
+    /// and the central phase-ledger driver: the attribution transition
+    /// runs in lockstep with the trace emit, on the same clock stamp.
     pub fn reindex_request(&mut self, rid: RequestId, to: ReqState) {
         self.epochs.temporal += 1;
         self.epochs.spatial += 1;
-        self.trace.req_state(rid.0, state_code(to));
+        let code = state_code(to);
+        self.ledger_transition(rid, code);
+        self.trace.req_state(rid.0, code);
         self.stalled_ids.remove(&rid);
         self.offloaded_ids.remove(&rid);
         match to {
@@ -546,6 +560,80 @@ impl ServeState {
             ReqState::Finished => self.reqs.mark_finished(rid),
             _ => {}
         }
+    }
+
+    // ------------------------------------------------------------------
+    // Latency-attribution hooks (the only PhaseLedger mutation sites
+    // outside `obs/attrib.rs` — CI grep lint)
+    // ------------------------------------------------------------------
+
+    /// Drive the request's phase ledger from a traced state code, on
+    /// the trace sink's clock stamp — the same instant the matching
+    /// `ReqState` record carries, so `analyze --trace` reconstructs
+    /// attribution byte-for-byte.
+    fn ledger_transition(&mut self, rid: RequestId, code: u8) {
+        let now = self.trace.now_us();
+        let Some(r) = self.reqs.get_mut(&rid) else { return };
+        let already_finished = r.attrib.is_finished();
+        let pending = r.prefix_xfer.is_some();
+        r.attrib.on_state_code(code, pending, now);
+        if code == obs::state::FINISHED && !already_finished {
+            let accum = *r.attrib.accum();
+            let app_id = r.app_id;
+            let template = self.apps.template_of(&app_id);
+            let tier = self.qos.tier_of(template).index();
+            self.metrics.fold_phase_ledger(&accum, template, tier);
+        }
+    }
+
+    /// Trace + attribute a transition written directly to the state
+    /// field (engine promotion, preemption, spatial admission) — the
+    /// sites that historically called `trace.req_state` by hand. Takes
+    /// the *traced* code, which may differ from the stored state (a
+    /// prefix-gated admission traces `PREFILLING` while the field says
+    /// `Running`), so live attribution and trace replay agree.
+    pub fn note_direct_transition(&mut self, rid: RequestId, code: u8) {
+        self.ledger_transition(rid, code);
+        self.trace.req_state(rid.0, code);
+    }
+
+    /// The request's pending tool call returned at `at_us` — the
+    /// hidden/exposed split point of its stall window. `at_us` may
+    /// precede the sink clock when the finish was buffered behind a
+    /// mid-wire migration; the mark record carries it so trace replay
+    /// splits at the same instant.
+    pub fn note_tool_return(&mut self, rid: RequestId, at_us: u64) {
+        if let Some(r) = self.reqs.get_mut(&rid) {
+            r.attrib.on_tool_return(at_us);
+        }
+        self.trace.mark(rid.0, obs::mark::FC_RETURN, at_us, 0);
+    }
+
+    /// Crash recovery re-queued this request onto a new shard: retag
+    /// its just-opened Waiting interval as recompute-after-crash.
+    pub fn note_crash_requeue(&mut self, rid: RequestId) {
+        let now = self.trace.now_us();
+        if let Some(r) = self.reqs.get_mut(&rid) {
+            r.attrib.on_crash_requeue(now);
+        }
+        self.trace.mark(rid.0, obs::mark::CRASH_REQUEUE, 0, 0);
+    }
+
+    /// The prefix-hit H2D fetch gating this request landed: an open
+    /// `prefix_fetch` interval becomes `prefill`. No trace record —
+    /// the `TransferEnd` already in the stream carries the instant.
+    pub fn note_prefix_ready(&mut self, rid: RequestId) {
+        let now = self.trace.now_us();
+        if let Some(r) = self.reqs.get_mut(&rid) {
+            r.attrib.on_prefix_ready(now);
+        }
+    }
+
+    /// Stage the QoS gate wait of the next `spawn_app` call: its root
+    /// requests seed the wait into their ledgers' `qos_deferred` phase
+    /// (cleared when the spawn completes).
+    pub fn stage_qos_wait(&mut self, wait_us: u64) {
+        self.qos_wait_pending_us = wait_us;
     }
 
     /// Lift an application (DAG progress + all of its requests) out of
@@ -679,6 +767,10 @@ impl ServeState {
                 NodeKind::Func(_) => func_nodes.push(node),
             }
         }
+        // The staged QoS gate wait applies only to this app's roots —
+        // children spawned later (complete_node) never waited in the
+        // gate.
+        self.qos_wait_pending_us = 0;
         (id, func_nodes)
     }
 
@@ -770,11 +862,27 @@ impl ServeState {
             tokens_generated: 0,
             wait_time_us: 0,
             exec_time_us: 0,
+            attrib: crate::obs::attrib::PhaseLedger::open_at(
+                self.trace.now_us(),
+                self.qos_wait_pending_us,
+            ),
         };
         self.apps.get_mut(&app_id).unwrap().node_req[node.0 as usize] =
             Some(id);
         self.reqs.insert(id, req);
         self.waiting.push_back(id);
+        // Spawn mark (app/node mapping for critical-path analysis),
+        // then the QoS wait if any, then the state record — trace
+        // replay re-seeds the ledger in the same order.
+        self.trace.mark(id.0, obs::mark::SPAWN, app_id.0, node.0 as u64);
+        if self.qos_wait_pending_us > 0 {
+            self.trace.mark(
+                id.0,
+                obs::mark::QOS_WAIT,
+                self.qos_wait_pending_us,
+                0,
+            );
+        }
         self.trace.req_state(id.0, obs::state::WAITING);
         id
     }
@@ -1019,6 +1127,40 @@ impl ServeState {
         self.trace
             .gpu_sample(self.gpu.free_blocks(), self.gpu.total());
         self.sample_metrics_quiet(now_us);
+        self.maybe_sample_gauges(now_us);
+    }
+
+    /// Fixed-cadence scheduler gauge sampler: batch occupancy by
+    /// lifecycle class plus per-tier queue depth, recorded into the
+    /// metrics time-series and (when tracing) as a Gauge counter
+    /// record. At most one sample per [`GAUGE_CADENCE_US`] boundary —
+    /// driven from the same call sites in serial and parallel cluster
+    /// modes, so the series and trace stay byte-identical per seed.
+    pub fn maybe_sample_gauges(&mut self, now_us: u64) {
+        if now_us < self.next_gauge_us {
+            return;
+        }
+        self.next_gauge_us =
+            (now_us / GAUGE_CADENCE_US + 1) * GAUGE_CADENCE_US;
+        let running = self.running.len() as u32;
+        let stalled = self.stalled_ids.len() as u32;
+        let offloaded = self.offloaded_ids.len() as u32;
+        let mut q = [0u32; crate::qos::TIERS];
+        for &rid in &self.waiting {
+            let template =
+                self.apps.template_of(&self.reqs[&rid].app_id);
+            q[self.qos.tier_of(template).index()] += 1;
+        }
+        self.trace
+            .gauge(running, stalled, offloaded, q[0], q[1], q[2]);
+        self.metrics.sched_running.record(now_us, running as f64);
+        self.metrics.sched_stalled.record(now_us, stalled as f64);
+        self.metrics
+            .sched_offloaded
+            .record(now_us, offloaded as f64);
+        for (i, depth) in q.iter().enumerate() {
+            self.metrics.queue_depth[i].record(now_us, *depth as f64);
+        }
     }
 
     /// Closing sample at finalize time: records the utilization series

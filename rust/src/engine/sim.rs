@@ -529,7 +529,7 @@ impl SimEngine {
         for &rid in &promoted {
             self.st.prefilling.remove(rid);
             self.st.running.push(rid);
-            self.st.trace.req_state(rid.0, obs::state::RUNNING);
+            self.st.note_direct_transition(rid, obs::state::RUNNING);
         }
         promoted.clear();
         self.scratch_promoted = promoted;
@@ -837,7 +837,7 @@ impl SimEngine {
         self.st.metrics.counters.recompute_tokens +=
             r.context_tokens as u64;
         self.st.trace.preempt(victim.0, grower.0);
-        self.st.trace.req_state(victim.0, obs::state::WAITING);
+        self.st.note_direct_transition(victim, obs::state::WAITING);
         self.st.running.remove(victim);
         self.st.prefilling.remove(victim);
         self.st.waiting.push_back(victim);

@@ -33,7 +33,21 @@
 //!     stamped with the shared sim clock; consumers are a Perfetto
 //!     trace_event exporter (--trace), an always-armed-in-debug flight
 //!     recorder dumped on conservation failures, and a post-hoc
-//!     invariant auditor (obs::TraceAuditor, `tokencake audit`)
+//!     invariant auditor (obs::TraceAuditor, `tokencake audit`);
+//!     latency attribution (obs::attrib) partitions every request's
+//!     wall time *exactly* into scheduling phases (queued, qos-
+//!     deferred, prefix-fetch-gated, prefill, decode, fc-stall
+//!     held/hidden/exposed, offload-wire, crash-requeue) on a
+//!     per-request PhaseLedger driven from the same centralized
+//!     transitions the trace records — so the identical ledger is
+//!     rebuildable from an exported trace alone (`tokencake analyze`,
+//!     per-app critical paths included) and `--assert-attrib`
+//!     enforces conservation plus live-vs-trace byte equality;
+//!     aggregates feed per-phase/per-tier/per-template metrics, the
+//!     digest line, bench rows (stall_hidden_frac,
+//!     exposed_upload_us_p99, queue_wait_us_p99), fixed-cadence
+//!     scheduler gauges exported as trace counter tracks, and a
+//!     Prometheus text dump (`--metrics-out`)
 //! QOS multi-tenant admission & SLO spine (qos): every app carries a
 //!     Tier (Interactive/Standard/Batch); a deterministic per-tier
 //!     token-bucket gate in front of the router defers over-budget

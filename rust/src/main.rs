@@ -16,7 +16,9 @@
 //!                    --qos-rates 4,2,1 --slo-ms 2000,8000,30000
 //!                    --qos-shed-band 3 --qos-shed-depth 4
 //!                    --qos-age-ms 2000 --assert-qos]
-//! tokencake audit   --trace out.json
+//!                   [--metrics-out metrics.prom] [--assert-attrib]
+//! tokencake audit   --trace out.json [--summary]
+//! tokencake analyze --trace out.json
 //! tokencake serve   [--port 8080]
 //! tokencake graph   --app deep-research
 //! tokencake help
@@ -115,7 +117,9 @@ fn cmd_bench(args: &Args) -> Result<(), String> {
 /// the hot-path `sim_throughput` metric — wall-clock simulated-events/sec
 /// (scheduling steps + executed decode iterations) and ticks/sec
 /// (scheduling steps) — and the epoch-gating/batching headlines
-/// (`planner_runs_per_1k_ticks`, `mean_migration_batch`). The app mix is
+/// (`planner_runs_per_1k_ticks`, `mean_migration_batch`) and the
+/// latency-attribution headlines (`stall_hidden_frac`,
+/// `exposed_upload_us_p99`, `queue_wait_us_p99`). The app mix is
 /// always the standard 2:1 code-writer:deep-research cluster workload
 /// (independent of `--app`); dataset and noise follow the flags and are
 /// recorded in the output.
@@ -220,6 +224,9 @@ fn bench_row(name: &str, rep: &ClusterReport, wall_s: f64) -> String {
          \"sim_ticks_per_s\": {:.0}, \
          \"planner_runs_per_1k_ticks\": {:.2}, \
          \"mean_migration_batch\": {:.2}, \
+         \"stall_hidden_frac\": {:.4}, \
+         \"exposed_upload_us_p99\": {}, \
+         \"queue_wait_us_p99\": {}, \
          \"prefix_hit_rate_local\": {:.4}, \
          \"prefix_hit_rate_remote\": {:.4}, \
          \"prefill_tokens_saved\": {}, \
@@ -247,6 +254,9 @@ fn bench_row(name: &str, rep: &ClusterReport, wall_s: f64) -> String {
         ticks as f64 / wall,
         rep.aggregate.counters.planner_runs_per_1k_ticks(),
         mean_batch,
+        rep.aggregate.stall_hidden_frac(),
+        rep.aggregate.exposed_upload_us_p99(),
+        rep.aggregate.queue_wait_us_p99(),
         rep.aggregate.counters.prefix_hit_rate_local(),
         rep.aggregate.counters.prefix_hit_rate_remote(),
         rep.aggregate.counters.prefill_tokens_saved,
@@ -553,7 +563,10 @@ fn cmd_cluster(args: &Args) -> Result<(), String> {
         None
     };
     let mut eng = ClusterEngine::new(cluster);
-    if args.get("trace").is_some() {
+    // --assert-attrib needs full capture: its second half re-derives
+    // the phase ledgers from the exported trace and byte-compares them
+    // against the live ones.
+    if args.get("trace").is_some() || args.has("assert-attrib") {
         eng.enable_trace();
     }
     if args.has("assert-autoscale")
@@ -561,6 +574,7 @@ fn cmd_cluster(args: &Args) -> Result<(), String> {
         || args.has("assert-recovery")
         || args.has("assert-qos")
         || args.has("assert-parity")
+        || args.has("assert-attrib")
     {
         // Assert runs arm the flight recorder so a failure ships its
         // recent-event ring (full capture stays off unless --trace).
@@ -670,6 +684,25 @@ fn cmd_cluster(args: &Args) -> Result<(), String> {
         let json = format!("{}\n", bench_row(name, &report, wall_s));
         std::fs::write(path, json).map_err(|e| e.to_string())?;
         println!("wrote run row to {path}");
+    }
+    if let Some(path) = args.get("metrics-out") {
+        std::fs::write(path, report.prometheus_text())
+            .map_err(|e| e.to_string())?;
+        println!("wrote Prometheus metrics to {path}");
+    }
+    if args.has("assert-attrib") {
+        // CI attribution smoke: every finished request's phase ledger
+        // must tile its wall time exactly (Σ phases == end-to-end
+        // latency, no gaps or overlaps), and rebuilding the ledgers
+        // from the exported trace alone must reproduce the live ones
+        // byte-for-byte.
+        eng.check_attrib()?;
+        let n = eng.render_ledgers().lines().count();
+        println!(
+            "attrib OK: {n} request ledger(s) conserve and match the \
+             trace-derived reconstruction (stall_hidden_frac={:.3})",
+            report.aggregate.stall_hidden_frac(),
+        );
     }
     if args.has("assert-autoscale") {
         // CI smoke: the elastic fleet must respect its bounds and lose
@@ -894,13 +927,20 @@ fn cmd_compare(args: &Args) -> Result<(), String> {
 
 /// Audit an exported trace file against the obs-layer ordering
 /// invariants (transfer pairing, offload-before-upload, no decode
-/// under a pending prefix fetch, retire-is-final, clock sanity).
+/// under a pending prefix fetch, retire-is-final, phase-ledger
+/// conservation, clock sanity). `--summary` additionally prints
+/// per-event-type counts and span-duration stats per transfer kind.
 fn cmd_audit(args: &Args) -> Result<(), String> {
     let path = args
         .get("trace")
         .ok_or("audit requires --trace FILE (an exported trace)")?;
     let doc =
         std::fs::read_to_string(path).map_err(|e| e.to_string())?;
+    if args.has("summary") {
+        let recs = tokencake::obs::parse_chrome_trace(&doc)
+            .map_err(|e| format!("{path}: {e}"))?;
+        print!("{}", tokencake::obs::TraceAuditor::deep_summary(&recs));
+    }
     match tokencake::obs::TraceAuditor::audit_chrome_trace(&doc) {
         Ok(summary) => {
             println!("{path}: {summary}");
@@ -908,6 +948,35 @@ fn cmd_audit(args: &Args) -> Result<(), String> {
         }
         Err(e) => Err(format!("{path}: trace audit failed: {e}")),
     }
+}
+
+/// Reconstruct the per-request phase ledgers — and the per-app
+/// critical paths over the workflow DAG — from an exported trace
+/// alone, no live engine needed. The ledger table is byte-identical
+/// to the live engine's rendering for the same run (`--assert-attrib`
+/// enforces exactly that in CI).
+fn cmd_analyze(args: &Args) -> Result<(), String> {
+    use tokencake::obs::attrib;
+    let path = args
+        .get("trace")
+        .ok_or("analyze requires --trace FILE (an exported trace)")?;
+    let doc =
+        std::fs::read_to_string(path).map_err(|e| e.to_string())?;
+    let recs = tokencake::obs::parse_chrome_trace(&doc)
+        .map_err(|e| format!("{path}: {e}"))?;
+    let recon = attrib::reconstruct(&recs);
+    let finished = recon.finished();
+    if finished.is_empty() {
+        println!(
+            "{path}: no finished requests with spawn marks (trace \
+             predates attribution or run produced none)"
+        );
+        return Ok(());
+    }
+    print!("{}", attrib::render_ledgers(&finished));
+    let paths = attrib::critical_paths(&recon);
+    print!("{}", attrib::render_critical_paths(&paths));
+    Ok(())
 }
 
 fn cmd_serve(args: &Args) -> Result<(), String> {
@@ -1001,8 +1070,25 @@ COMMANDS:
            opposite execution mode and fail unless digests — and
            traces, with --trace — match byte-for-byte: the
            parallel-determinism CI smoke)
+           --metrics-out FILE  write the run's aggregate metrics in
+           Prometheus text format (per-phase attribution counters and
+           p99s, per-tier breakdowns, stall_hidden_frac,
+           exposed_upload_us_p99, queue_wait_us_p99)
+           --assert-attrib  (fail unless every finished request's
+           phase ledger tiles its wall time exactly — queued,
+           qos-deferred, prefix-fetch, prefill, decode, fc-stall,
+           offload-wire, exposed, crash-requeue phases sum to its
+           end-to-end latency — AND re-deriving the ledgers from the
+           exported trace alone matches the live ones byte-for-byte:
+           the latency-attribution CI smoke; implies tracing)
   audit    check an exported trace against the obs-layer ordering
            invariants:  --trace FILE  (exit 1 on the first violation)
+           --summary  also print per-event-type counts and transfer
+           span-duration stats (min/p50/p99 per kind)
+  analyze  reconstruct per-request phase ledgers and per-app critical
+           paths from an exported trace alone:  --trace FILE
+           (output is byte-identical to the live engine's ledger for
+           the same run)
   serve    start the frontend HTTP server:  --port
   graph    inspect a built-in app template:  --app
   help     this text
@@ -1021,6 +1107,7 @@ fn main() {
         "compare" => cmd_compare(&args),
         "cluster" => cmd_cluster(&args),
         "audit" => cmd_audit(&args),
+        "analyze" => cmd_analyze(&args),
         "serve" => cmd_serve(&args),
         "graph" => cmd_graph(&args),
         "help" | "--help" | "-h" => {

@@ -11,6 +11,8 @@ pub use hist::LogHistogram;
 pub use latency::LatencyRecorder;
 pub use series::TimeSeries;
 
+use crate::obs::attrib::{self, Phase, NPHASES};
+
 /// Event counters accumulated over a run.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct Counters {
@@ -168,6 +170,24 @@ pub struct MetricsBundle {
     pub apps_completed: u64,
     /// Wall-clock span of the run (µs, simulated).
     pub makespan_us: u64,
+    /// Σ phase time across finished requests (`obs::attrib` order) —
+    /// the latency-attribution headline. Folded at request finish.
+    pub phase_us: [u64; NPHASES],
+    /// Per-phase distribution over finished requests (one sample per
+    /// request per phase, zeros included so percentiles rank the whole
+    /// population).
+    pub phase_hist: [LogHistogram; NPHASES],
+    /// Phase sums split by QoS tier (Interactive/Standard/Batch).
+    pub tier_phase_us: [[u64; NPHASES]; crate::qos::TIERS],
+    /// Phase sums split by graph template (index = registration order).
+    pub tpl_phase_us: Vec<[u64; NPHASES]>,
+    /// Gauge sampler series (fixed sim-clock cadence, per-shard only —
+    /// not merged by [`Self::absorb`], like the utilization series).
+    pub sched_running: TimeSeries,
+    pub sched_stalled: TimeSeries,
+    pub sched_offloaded: TimeSeries,
+    /// Waiting-queue depth per QoS tier.
+    pub queue_depth: [TimeSeries; crate::qos::TIERS],
 }
 
 impl MetricsBundle {
@@ -193,6 +213,79 @@ impl MetricsBundle {
         self.upload_count += o.upload_count;
         self.apps_completed += o.apps_completed;
         self.makespan_us = self.makespan_us.max(o.makespan_us);
+        for (a, b) in self.phase_us.iter_mut().zip(&o.phase_us) {
+            *a += b;
+        }
+        for (a, b) in self.phase_hist.iter_mut().zip(&o.phase_hist) {
+            a.merge(b);
+        }
+        for (at, bt) in
+            self.tier_phase_us.iter_mut().zip(&o.tier_phase_us)
+        {
+            for (a, b) in at.iter_mut().zip(bt) {
+                *a += b;
+            }
+        }
+        if self.tpl_phase_us.len() < o.tpl_phase_us.len() {
+            self.tpl_phase_us
+                .resize(o.tpl_phase_us.len(), [0u64; NPHASES]);
+        }
+        for (at, bt) in self.tpl_phase_us.iter_mut().zip(&o.tpl_phase_us)
+        {
+            for (a, b) in at.iter_mut().zip(bt) {
+                *a += b;
+            }
+        }
+    }
+
+    /// Fold one finished request's phase ledger into the per-run,
+    /// per-tier, and per-template attribution aggregates. Called from
+    /// `ServeState`'s finish transition, once per request.
+    pub fn fold_phase_ledger(
+        &mut self,
+        accum: &[u64; NPHASES],
+        template: usize,
+        tier: usize,
+    ) {
+        if self.tpl_phase_us.len() <= template {
+            self.tpl_phase_us.resize(template + 1, [0u64; NPHASES]);
+        }
+        for (i, &v) in accum.iter().enumerate() {
+            self.phase_us[i] += v;
+            self.phase_hist[i].record(v);
+            self.tier_phase_us[tier][i] += v;
+            self.tpl_phase_us[template][i] += v;
+        }
+    }
+
+    /// Fraction of total function-call stall time hidden behind the
+    /// tool (offload wire + off-GPU residency before the tool
+    /// returned). 0 with temporal scheduling off — every stall µs is
+    /// `fc_stall_held` — and > 0 when offload/predictive-upload
+    /// overlap wire time with the call.
+    pub fn stall_hidden_frac(&self) -> f64 {
+        let hidden = self.phase_us[Phase::OffloadWire as usize]
+            + self.phase_us[Phase::FcStallHidden as usize];
+        let total = hidden
+            + self.phase_us[Phase::FcStallHeld as usize]
+            + self.phase_us[Phase::FcStallExposed as usize];
+        if total == 0 {
+            0.0
+        } else {
+            hidden as f64 / total as f64
+        }
+    }
+
+    /// p99 of per-request exposed stall time (tool returned, request
+    /// still waiting on upload wire / resume).
+    pub fn exposed_upload_us_p99(&self) -> u64 {
+        self.phase_hist[Phase::FcStallExposed as usize]
+            .percentile_us(99.0)
+    }
+
+    /// p99 of per-request queue wait (admission gating).
+    pub fn queue_wait_us_p99(&self) -> u64 {
+        self.phase_hist[Phase::Queued as usize].percentile_us(99.0)
     }
 
     /// Canonical integer-only serialization of everything the scheduler
@@ -211,6 +304,26 @@ impl MetricsBundle {
             format!("{}/{}/{p50}/{p99}", r.len(), r.total_us())
         };
         let (t0, t1, t2) = (tier(0), tier(1), tier(2));
+        let join = |a: &[u64]| {
+            a.iter()
+                .map(|v| v.to_string())
+                .collect::<Vec<_>>()
+                .join(",")
+        };
+        let ph = join(&self.phase_us);
+        let pht = self
+            .tier_phase_us
+            .iter()
+            .map(|t| join(t))
+            .collect::<Vec<_>>()
+            .join("|");
+        let tpl = self
+            .tpl_phase_us
+            .iter()
+            .map(|t| join(t))
+            .collect::<Vec<_>>()
+            .join("|");
+        let hidm = attrib::stall_hidden_frac_milli(&self.phase_us);
         format!(
             "{tag}: apps={} lat_sum={} lat_n={} req_sum={} req_n={} \
              makespan={} swap={} off={} up={} preempt={} inv={} \
@@ -222,7 +335,9 @@ impl MetricsBundle {
              lat_p999={lat_p999} stall={st_n}/{st_p50}/{st_p999} \
              wire={wi_n}/{wi_p50}/{wi_p999} \
              queue={qu_n}/{qu_p50}/{qu_p999} \
-             tierI={t0} tierS={t1} tierB={t2}\n",
+             tierI={t0} tierS={t1} tierB={t2} \
+             ph=[{ph}] phT=[{pht}] phTpl=[{tpl}] hidm={hidm} \
+             expp99={} qwp99={}\n",
             self.apps_completed,
             self.latency.total_us(),
             self.latency.len(),
@@ -257,6 +372,8 @@ impl MetricsBundle {
             self.counters.offload_batches,
             self.counters.offload_batch_victims,
             self.counters.fc_lifetime_obs,
+            self.exposed_upload_us_p99(),
+            self.queue_wait_us_p99(),
         )
     }
 
@@ -276,7 +393,8 @@ impl MetricsBundle {
             "apps={} avg={:.1}s p50={:.1}s p90={:.1}s p95={:.1}s \
              p99.9={:.1}s total={:.1}s \
              thpt={:.4}req/s gpu_util={:.1}% eff_util={:.1}% \
-             offloads={} swap_blocks={} preempt={} inversions={}",
+             offloads={} swap_blocks={} preempt={} inversions={} \
+             stall_hidden={:.3} exposed_p99={:.3}s queue_p99={:.3}s",
             self.apps_completed,
             self.latency.mean_s(),
             p50,
@@ -291,6 +409,9 @@ impl MetricsBundle {
             self.swap_volume_blocks,
             self.counters.preemptions,
             self.counters.critical_inversions,
+            self.stall_hidden_frac(),
+            self.exposed_upload_us_p99() as f64 / 1e6,
+            self.queue_wait_us_p99() as f64 / 1e6,
         )
     }
 }
@@ -339,6 +460,32 @@ mod tests {
         agg.absorb(&m);
         assert_eq!(agg.tier_latency[0].len(), 2);
         assert_eq!(agg.tier_latency[2].len(), 2);
+    }
+
+    #[test]
+    fn phase_attribution_folds_and_digests() {
+        let mut m = MetricsBundle::default();
+        let mut accum = [0u64; NPHASES];
+        accum[Phase::Queued as usize] = 100;
+        accum[Phase::Decode as usize] = 900;
+        accum[Phase::FcStallHeld as usize] = 100;
+        accum[Phase::FcStallHidden as usize] = 300;
+        m.fold_phase_ledger(&accum, 1, 0);
+        assert_eq!(m.phase_us[Phase::Decode as usize], 900);
+        assert_eq!(m.tpl_phase_us.len(), 2);
+        assert_eq!(m.tier_phase_us[0][Phase::Queued as usize], 100);
+        assert!((m.stall_hidden_frac() - 0.75).abs() < 1e-9);
+        let d = m.digest_line("x");
+        assert!(d.contains("hidm=750"), "{d}");
+        assert!(d.contains("ph=[100,0,0,0,900,100,0,300,0,0]"), "{d}");
+        assert_eq!(d, m.digest_line("x"));
+        // Aggregation is field-wise and order-insensitive.
+        let mut agg = MetricsBundle::default();
+        agg.absorb(&m);
+        agg.absorb(&m);
+        assert_eq!(agg.phase_us[Phase::Decode as usize], 1800);
+        assert_eq!(agg.phase_hist[Phase::Queued as usize].count(), 2);
+        assert_eq!(agg.tpl_phase_us[1][Phase::Decode as usize], 1800);
     }
 
     #[test]

@@ -1,0 +1,778 @@
+//! Latency attribution: the per-request phase ledger.
+//!
+//! Tokencake's headline number is *where latency goes* — stalls
+//! repurposed by proactive offload, uploads hidden behind decode — and
+//! aggregate percentiles can't show it. This module partitions every
+//! request's wall time **exactly** into phases on the shared integer
+//! clock: the phase durations of a finished request sum to its
+//! end-to-end latency (plus QoS gate wait) with no gaps and no
+//! overlaps, in integer µs. That conservation law is enforced three
+//! ways (proptest, trace-auditor rule 9, and the `--assert-attrib` CI
+//! smoke), so "did this PR hide more stall time than the last one" has
+//! a run-to-run answer.
+//!
+//! ## Phase taxonomy
+//!
+//! The ledger refines the request lifecycle into ten phases. The
+//! function-call stall window is split by *what the KV cache was doing*
+//! and *whether the request was actually waiting*:
+//!
+//! | phase | meaning |
+//! |---|---|
+//! | `queued` | waiting for admission (spatial gate / batch slot) |
+//! | `qos_deferred` | parked in the QoS token-bucket gate pre-spawn |
+//! | `prefix_fetch` | admitted but gated on a prefix-cache H2D fetch |
+//! | `prefill` | prompt prefill on the GPU |
+//! | `decode` | autoregressive decode |
+//! | `fc_stall_held` | stalled on a tool, KV parked on the GPU (the vLLM-baseline failure mode) |
+//! | `offload_wire` | D2H offload wire time, tool not yet returned (hidden behind the tool) |
+//! | `fc_stall_hidden` | KV off the GPU (or re-uploading) while the tool still runs — stall repurposed |
+//! | `fc_stall_exposed` | tool has returned; the request is genuinely waiting (upload wire, resume) |
+//! | `crash_requeue` | re-queued after a shard crash, waiting to re-prefill |
+//!
+//! `stall_hidden_frac` = (`offload_wire` + `fc_stall_hidden`) / total
+//! stall time: 0 when temporal scheduling is off (every stall µs is
+//! `fc_stall_held`), > 0 when offload/predictive-upload overlap wire
+//! time with the tool call.
+//!
+//! ## One ledger, two drivers
+//!
+//! [`PhaseLedger`] transitions are driven by the **traced state codes**
+//! (`obs::state`) plus three facts the state stream alone can't carry,
+//! emitted as [`super::TraceEvent::Mark`] records: the tool-return
+//! instant (`FC_RETURN` — the hidden/exposed split point), crash
+//! requeue, and the QoS gate wait. Because the live ledger (updated by
+//! `ServeState` hooks in lockstep with each trace emit) and
+//! [`reconstruct`] (replaying an exported trace) execute the *same*
+//! transition methods on the *same* instants, `tokencake analyze
+//! --trace` reproduces the live ledger byte-for-byte — a completeness
+//! audit of the whole trace spine.
+//!
+//! Ledger mutation is confined by a CI grep lint to this module's
+//! methods and their call sites in `coordination/state.rs` (plus the
+//! trace replay here): no scheduler may hand-edit attribution.
+
+use std::collections::{BTreeMap, HashMap};
+
+use super::{mark, state, xfer, TraceEvent, TraceRecord};
+
+/// Number of attribution phases.
+pub const NPHASES: usize = 10;
+
+/// Phase indices (digest/bench/Prometheus order).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum Phase {
+    Queued = 0,
+    QosDeferred = 1,
+    PrefixFetch = 2,
+    Prefill = 3,
+    Decode = 4,
+    FcStallHeld = 5,
+    OffloadWire = 6,
+    FcStallHidden = 7,
+    FcStallExposed = 8,
+    CrashRequeue = 9,
+}
+
+/// Phase names, indexed by [`Phase`] discriminant.
+pub const NAMES: [&str; NPHASES] = [
+    "queued",
+    "qos_deferred",
+    "prefix_fetch",
+    "prefill",
+    "decode",
+    "fc_stall_held",
+    "offload_wire",
+    "fc_stall_hidden",
+    "fc_stall_exposed",
+    "crash_requeue",
+];
+
+/// Per-request phase ledger: integer-µs accumulation on the shared
+/// clock, open phase + entry instant, exact conservation on finish.
+///
+/// Rides on `coordination::Request` so cross-shard migration and crash
+/// requeue carry attribution with the request for free.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PhaseLedger {
+    /// Attribution starts here: spawn minus any QoS gate wait.
+    start_us: u64,
+    /// QoS gate wait seeded into `qos_deferred` at spawn.
+    qos_wait_us: u64,
+    /// Currently open phase (index into [`NAMES`]).
+    cur: u8,
+    /// Instant the open phase was entered.
+    since_us: u64,
+    /// Closed time per phase.
+    accum: [u64; NPHASES],
+    /// The pending tool call has returned (splits hidden/exposed).
+    tool_done: bool,
+    /// Next Waiting interval is crash recompute, not ordinary queueing.
+    crash_mark: bool,
+    /// Terminal: `FINISHED` observed; `end_us` is valid.
+    finished: bool,
+    end_us: u64,
+}
+
+impl Default for PhaseLedger {
+    fn default() -> Self {
+        Self::open_at(0, 0)
+    }
+}
+
+impl PhaseLedger {
+    /// Open a ledger at spawn time `now_us`, seeding `qos_wait_us`
+    /// spent in the admission gate before the request existed.
+    pub fn open_at(now_us: u64, qos_wait_us: u64) -> Self {
+        let mut accum = [0u64; NPHASES];
+        accum[Phase::QosDeferred as usize] = qos_wait_us;
+        PhaseLedger {
+            start_us: now_us.saturating_sub(qos_wait_us),
+            qos_wait_us,
+            cur: Phase::Queued as u8,
+            since_us: now_us,
+            accum,
+            tool_done: false,
+            crash_mark: false,
+            finished: false,
+            end_us: 0,
+        }
+    }
+
+    /// Grow the seeded QoS wait after the fact (trace replay sees the
+    /// `QOS_WAIT` mark as a separate record after `SPAWN`).
+    pub fn seed_qos_wait(&mut self, wait_us: u64) {
+        self.start_us = self.start_us.saturating_sub(wait_us);
+        self.qos_wait_us += wait_us;
+        self.accum[Phase::QosDeferred as usize] += wait_us;
+    }
+
+    fn close_open(&mut self, now_us: u64) {
+        debug_assert!(
+            now_us >= self.since_us,
+            "phase clock went backwards: {} < {}",
+            now_us,
+            self.since_us
+        );
+        self.accum[self.cur as usize] +=
+            now_us.saturating_sub(self.since_us);
+        self.since_us = now_us;
+    }
+
+    fn classify(&self, code: u8, prefix_pending: bool) -> u8 {
+        let p = match code {
+            state::WAITING => {
+                if self.crash_mark {
+                    Phase::CrashRequeue
+                } else {
+                    Phase::Queued
+                }
+            }
+            state::PREFILLING => {
+                if prefix_pending {
+                    Phase::PrefixFetch
+                } else {
+                    Phase::Prefill
+                }
+            }
+            state::RUNNING => Phase::Decode,
+            state::STALLED => Phase::FcStallHeld,
+            state::PENDING_OFFLOAD => {
+                if self.tool_done {
+                    Phase::FcStallExposed
+                } else {
+                    Phase::OffloadWire
+                }
+            }
+            state::OFFLOADED | state::PENDING_UPLOAD | state::UPLOADED => {
+                if self.tool_done {
+                    Phase::FcStallExposed
+                } else {
+                    Phase::FcStallHidden
+                }
+            }
+            // FINISHED handled by the caller; unknown codes park in
+            // Queued (unreachable on well-formed streams).
+            _ => Phase::Queued,
+        };
+        p as u8
+    }
+
+    /// Drive the ledger from a traced state code. `prefix_pending` is
+    /// whether a prefix-hit fetch is on the wire for this request at
+    /// this instant (live: `prefix_xfer.is_some()`; replay: an open
+    /// `PREFIX_HIT` transfer).
+    pub fn on_state_code(
+        &mut self,
+        code: u8,
+        prefix_pending: bool,
+        now_us: u64,
+    ) {
+        if self.finished {
+            return;
+        }
+        self.close_open(now_us);
+        if code == state::FINISHED {
+            self.finished = true;
+            self.end_us = now_us;
+            return;
+        }
+        self.cur = self.classify(code, prefix_pending);
+        // A fresh GPU grant or queue re-entry ends any tool episode;
+        // leaving Waiting ends the crash-recompute marker.
+        match code {
+            state::WAITING | state::PREFILLING | state::RUNNING
+            | state::STALLED => self.tool_done = false,
+            _ => {}
+        }
+        if code != state::WAITING {
+            self.crash_mark = false;
+        }
+    }
+
+    /// The pending tool call returned at `at_us` (≤ the record stamp
+    /// when the finish was buffered behind a migration). Splits the
+    /// open stall phase: time before `at_us` stays hidden/held, time
+    /// after is exposed.
+    pub fn on_tool_return(&mut self, at_us: u64) {
+        if self.finished {
+            return;
+        }
+        self.tool_done = true;
+        let cur = self.cur;
+        if cur == Phase::FcStallHeld as u8
+            || cur == Phase::FcStallHidden as u8
+            || cur == Phase::OffloadWire as u8
+        {
+            let at = at_us.max(self.since_us);
+            self.close_open(at);
+            self.cur = Phase::FcStallExposed as u8;
+        }
+    }
+
+    /// Crash recovery re-queued this request: retag its just-opened
+    /// Waiting interval as recompute-after-crash.
+    pub fn on_crash_requeue(&mut self, now_us: u64) {
+        if self.finished {
+            return;
+        }
+        self.crash_mark = true;
+        if self.cur == Phase::Queued as u8 {
+            self.close_open(now_us);
+            self.cur = Phase::CrashRequeue as u8;
+        }
+    }
+
+    /// The gating prefix fetch landed: an open `prefix_fetch` interval
+    /// becomes `prefill` from here on.
+    pub fn on_prefix_ready(&mut self, now_us: u64) {
+        if self.finished {
+            return;
+        }
+        if self.cur == Phase::PrefixFetch as u8 {
+            self.close_open(now_us);
+            self.cur = Phase::Prefill as u8;
+        }
+    }
+
+    // -- read-only views (unrestricted by the mutation lint) -----------
+
+    /// Closed per-phase durations (open phase excluded).
+    pub fn accum(&self) -> &[u64; NPHASES] {
+        &self.accum
+    }
+
+    /// Index of the currently open phase.
+    pub fn current_phase(&self) -> usize {
+        self.cur as usize
+    }
+
+    /// Time spent in the open phase as of `now_us`.
+    pub fn in_phase_us(&self, now_us: u64) -> u64 {
+        now_us.saturating_sub(self.since_us)
+    }
+
+    pub fn is_finished(&self) -> bool {
+        self.finished
+    }
+
+    /// Attribution window start (spawn − QoS wait).
+    pub fn start_us(&self) -> u64 {
+        self.start_us
+    }
+
+    /// Spawn instant (first Waiting).
+    pub fn spawn_us(&self) -> u64 {
+        self.start_us + self.qos_wait_us
+    }
+
+    pub fn qos_wait_us(&self) -> u64 {
+        self.qos_wait_us
+    }
+
+    /// Finish instant (valid once [`Self::is_finished`]).
+    pub fn end_us(&self) -> u64 {
+        self.end_us
+    }
+
+    /// Σ phase durations.
+    pub fn total_us(&self) -> u64 {
+        self.accum.iter().sum()
+    }
+
+    /// Exact conservation: finished and Σ phases == end − start.
+    pub fn conserves(&self) -> bool {
+        self.finished
+            && self.total_us() == self.end_us.saturating_sub(self.start_us)
+    }
+}
+
+/// Fraction of total stall time hidden behind the tool call, in milli
+/// fixed-point (integer — digest-safe). 0 when there was no stall.
+pub fn stall_hidden_frac_milli(accum: &[u64; NPHASES]) -> u64 {
+    let hidden = accum[Phase::OffloadWire as usize]
+        + accum[Phase::FcStallHidden as usize];
+    let total = hidden
+        + accum[Phase::FcStallHeld as usize]
+        + accum[Phase::FcStallExposed as usize];
+    if total == 0 {
+        0
+    } else {
+        hidden * 1000 / total
+    }
+}
+
+// ---------------------------------------------------------------------
+// Trace replay: rebuild the ledger from an exported trace alone
+// ---------------------------------------------------------------------
+
+/// Per-request attribution recovered from a trace.
+#[derive(Debug, Clone)]
+pub struct ReqAttrib {
+    pub ledger: PhaseLedger,
+    /// Owning app id (`SPAWN` mark), `u64::MAX` if never seen.
+    pub app: u64,
+    /// Workflow DAG node id (`SPAWN` mark).
+    pub node: u64,
+}
+
+/// Everything [`reconstruct`] recovers: rid → attribution, in rid
+/// order (deterministic iteration for rendering).
+#[derive(Debug, Default)]
+pub struct Reconstruction {
+    pub reqs: BTreeMap<u64, ReqAttrib>,
+}
+
+impl Reconstruction {
+    /// Ledgers of finished requests only (the byte-comparable set).
+    pub fn finished(&self) -> BTreeMap<u64, PhaseLedger> {
+        self.reqs
+            .iter()
+            .filter(|(_, a)| a.ledger.is_finished())
+            .map(|(rid, a)| (*rid, a.ledger.clone()))
+            .collect()
+    }
+}
+
+/// Replay a merged record stream (`merge_records` order) through the
+/// same [`PhaseLedger`] transitions the live engine drives, so the
+/// result is byte-identical to the live ledger for the same run.
+pub fn reconstruct(records: &[TraceRecord]) -> Reconstruction {
+    let mut out = Reconstruction::default();
+    // Open transfers: xfer id -> (rid, kind).
+    let mut open_xfer: HashMap<u64, (u64, u8)> = HashMap::new();
+    // Open PREFIX_HIT fetch count per rid.
+    let mut prefix_pending: HashMap<u64, u32> = HashMap::new();
+    for rec in records {
+        let now = rec.at_us;
+        match rec.ev {
+            TraceEvent::Mark { rid, what, a, b } => match what {
+                mark::SPAWN => {
+                    out.reqs.entry(rid).or_insert_with(|| ReqAttrib {
+                        ledger: PhaseLedger::open_at(now, 0),
+                        app: a,
+                        node: b,
+                    });
+                }
+                mark::QOS_WAIT => {
+                    if let Some(r) = out.reqs.get_mut(&rid) {
+                        r.ledger.seed_qos_wait(a);
+                    }
+                }
+                mark::FC_RETURN => {
+                    if let Some(r) = out.reqs.get_mut(&rid) {
+                        r.ledger.on_tool_return(a);
+                    }
+                }
+                mark::CRASH_REQUEUE => {
+                    if let Some(r) = out.reqs.get_mut(&rid) {
+                        r.ledger.on_crash_requeue(now);
+                    }
+                }
+                _ => {}
+            },
+            TraceEvent::ReqState { rid, state: code } => {
+                let pending = prefix_pending
+                    .get(&rid)
+                    .copied()
+                    .unwrap_or(0)
+                    > 0;
+                if let Some(r) = out.reqs.get_mut(&rid) {
+                    r.ledger.on_state_code(code, pending, now);
+                }
+            }
+            TraceEvent::TransferStart {
+                xfer: id,
+                rid,
+                kind,
+                ..
+            } => {
+                open_xfer.insert(id, (rid, kind));
+                if kind == xfer::PREFIX_HIT {
+                    *prefix_pending.entry(rid).or_insert(0) += 1;
+                }
+            }
+            TraceEvent::TransferEnd { xfer: id, .. } => {
+                if let Some((rid, kind)) = open_xfer.remove(&id) {
+                    if kind == xfer::PREFIX_HIT {
+                        if let Some(n) = prefix_pending.get_mut(&rid) {
+                            *n = n.saturating_sub(1);
+                        }
+                        if let Some(r) = out.reqs.get_mut(&rid) {
+                            r.ledger.on_prefix_ready(now);
+                        }
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
+// Rendering (shared by the live engine and `analyze --trace`)
+// ---------------------------------------------------------------------
+
+/// Canonical per-request attribution table: one line per finished
+/// request in rid order. Both the live engine and trace replay render
+/// through here, so `analyze --trace` output can be compared
+/// byte-for-byte against the live ledger.
+pub fn render_ledgers(ledgers: &BTreeMap<u64, PhaseLedger>) -> String {
+    let mut s = String::new();
+    for (rid, l) in ledgers {
+        s.push_str(&format!(
+            "rid={rid} span={}..{} e2e_us={}",
+            l.start_us(),
+            l.end_us(),
+            l.end_us().saturating_sub(l.start_us())
+        ));
+        for (i, name) in NAMES.iter().enumerate() {
+            s.push_str(&format!(" {}={}", name, l.accum()[i]));
+        }
+        s.push('\n');
+    }
+    s
+}
+
+// ---------------------------------------------------------------------
+// Critical-path analysis over the workflow DAG
+// ---------------------------------------------------------------------
+
+/// One app's critical path: the time-respecting chain of requests that
+/// determined its makespan, with the chain's phase breakdown.
+#[derive(Debug, Clone)]
+pub struct AppPath {
+    pub app: u64,
+    pub makespan_us: u64,
+    /// rids on the chain, last-finisher first (walked backwards).
+    pub chain: Vec<u64>,
+    /// DAG node ids matching `chain`.
+    pub nodes: Vec<u64>,
+    /// Σ phase time along the chain.
+    pub phase_us: [u64; NPHASES],
+    /// argmax of `phase_us` (ties → lower index).
+    pub dominant_phase: usize,
+    /// Chain rid contributing the most total time (ties → lower rid).
+    pub dominant_rid: u64,
+}
+
+/// Compute every app's critical path from a reconstruction: start at
+/// the app's last-finishing request and repeatedly jump to the
+/// latest-finishing earlier request whose finish precedes the current
+/// one's spawn (workflow edges are spawn-on-parent-finish, so this
+/// recovers the dependency chain that gated the makespan). Apps sorted
+/// by id; all tie-breaks on rid — deterministic.
+pub fn critical_paths(recon: &Reconstruction) -> Vec<AppPath> {
+    // app -> [(rid, node, ledger)] for finished requests, rid order.
+    let mut by_app: BTreeMap<u64, Vec<(u64, u64, &PhaseLedger)>> =
+        BTreeMap::new();
+    for (rid, a) in &recon.reqs {
+        if a.ledger.is_finished() {
+            by_app
+                .entry(a.app)
+                .or_default()
+                .push((*rid, a.node, &a.ledger));
+        }
+    }
+    let mut out = Vec::new();
+    for (app, reqs) in &by_app {
+        // Last finisher (max end; tie → lower rid because reqs is in
+        // rid order and we require strictly-greater to replace).
+        let mut cur = &reqs[0];
+        for r in &reqs[1..] {
+            if r.2.end_us() > cur.2.end_us() {
+                cur = r;
+            }
+        }
+        let app_end = cur.2.end_us();
+        let mut chain = Vec::new();
+        let mut nodes = Vec::new();
+        let mut phase_us = [0u64; NPHASES];
+        let mut app_start = cur.2.start_us();
+        loop {
+            chain.push(cur.0);
+            nodes.push(cur.1);
+            for i in 0..NPHASES {
+                phase_us[i] += cur.2.accum()[i];
+            }
+            app_start = cur.2.start_us();
+            let spawn = cur.2.spawn_us();
+            let mut prev: Option<&(u64, u64, &PhaseLedger)> = None;
+            for r in reqs {
+                if r.0 != cur.0 && r.2.end_us() <= spawn {
+                    match prev {
+                        Some(p) if r.2.end_us() <= p.2.end_us() => {}
+                        _ => prev = Some(r),
+                    }
+                }
+            }
+            match prev {
+                Some(p) => cur = p,
+                None => break,
+            }
+        }
+        let mut dominant_phase = 0;
+        for i in 1..NPHASES {
+            if phase_us[i] > phase_us[dominant_phase] {
+                dominant_phase = i;
+            }
+        }
+        let mut dominant_rid = chain[0];
+        let mut dominant_total = 0u64;
+        for rid in &chain {
+            let l = &recon.reqs[rid].ledger;
+            let t = l.total_us();
+            if t > dominant_total
+                || (t == dominant_total && *rid < dominant_rid)
+            {
+                dominant_total = t;
+                dominant_rid = *rid;
+            }
+        }
+        out.push(AppPath {
+            app: *app,
+            makespan_us: app_end.saturating_sub(app_start),
+            chain,
+            nodes,
+            phase_us,
+            dominant_phase,
+            dominant_rid,
+        });
+    }
+    out
+}
+
+/// Human/CI-readable critical-path report (deterministic).
+pub fn render_critical_paths(paths: &[AppPath]) -> String {
+    let mut s = String::new();
+    for p in paths {
+        s.push_str(&format!(
+            "app={} makespan_us={} chain_len={} dominant_phase={} \
+             dominant_rid={} chain_phase_us=[",
+            p.app,
+            p.makespan_us,
+            p.chain.len(),
+            NAMES[p.dominant_phase],
+            p.dominant_rid,
+        ));
+        for (i, v) in p.phase_us.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            s.push_str(&v.to_string());
+        }
+        s.push_str("]\n");
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(at_us: u64, seq: u64, ev: TraceEvent) -> TraceRecord {
+        TraceRecord {
+            at_us,
+            seq,
+            shard: 0,
+            ev,
+        }
+    }
+
+    #[test]
+    fn plain_lifecycle_conserves() {
+        let mut l = PhaseLedger::open_at(100, 0);
+        l.on_state_code(state::PREFILLING, false, 150);
+        l.on_state_code(state::RUNNING, false, 400);
+        l.on_state_code(state::FINISHED, false, 1_000);
+        assert!(l.conserves());
+        assert_eq!(l.accum()[Phase::Queued as usize], 50);
+        assert_eq!(l.accum()[Phase::Prefill as usize], 250);
+        assert_eq!(l.accum()[Phase::Decode as usize], 600);
+        assert_eq!(l.total_us(), 900);
+    }
+
+    #[test]
+    fn qos_wait_seeds_deferred_phase() {
+        let l = PhaseLedger::open_at(500, 300);
+        assert_eq!(l.start_us(), 200);
+        assert_eq!(l.spawn_us(), 500);
+        assert_eq!(l.accum()[Phase::QosDeferred as usize], 300);
+    }
+
+    #[test]
+    fn tool_return_splits_hidden_and_exposed() {
+        let mut l = PhaseLedger::open_at(0, 0);
+        l.on_state_code(state::PREFILLING, false, 0);
+        l.on_state_code(state::RUNNING, false, 100);
+        // Tool call starts: stall held on GPU.
+        l.on_state_code(state::STALLED, false, 200);
+        // Proactive offload goes on the wire.
+        l.on_state_code(state::PENDING_OFFLOAD, false, 250);
+        // D2H lands: KV repurposed, still hidden behind the tool.
+        l.on_state_code(state::OFFLOADED, false, 300);
+        // Tool returns at t=400: everything after is exposed.
+        l.on_tool_return(400);
+        l.on_state_code(state::PENDING_UPLOAD, false, 450);
+        l.on_state_code(state::UPLOADED, false, 500);
+        l.on_state_code(state::WAITING, false, 520);
+        l.on_state_code(state::RUNNING, false, 540);
+        l.on_state_code(state::FINISHED, false, 600);
+        assert!(l.conserves());
+        let a = l.accum();
+        assert_eq!(a[Phase::FcStallHeld as usize], 50);
+        assert_eq!(a[Phase::OffloadWire as usize], 50);
+        assert_eq!(a[Phase::FcStallHidden as usize], 100);
+        assert_eq!(a[Phase::FcStallExposed as usize], 120);
+        assert_eq!(a[Phase::Queued as usize], 20);
+        assert!(stall_hidden_frac_milli(a) > 0);
+    }
+
+    #[test]
+    fn baseline_stall_is_all_held() {
+        let mut l = PhaseLedger::open_at(0, 0);
+        l.on_state_code(state::PREFILLING, false, 0);
+        l.on_state_code(state::RUNNING, false, 10);
+        l.on_state_code(state::STALLED, false, 20);
+        l.on_tool_return(80); // resumes immediately from Stalled
+        l.on_state_code(state::WAITING, false, 80);
+        l.on_state_code(state::RUNNING, false, 90);
+        l.on_state_code(state::FINISHED, false, 120);
+        assert!(l.conserves());
+        assert_eq!(l.accum()[Phase::FcStallHeld as usize], 60);
+        assert_eq!(stall_hidden_frac_milli(l.accum()), 0);
+    }
+
+    #[test]
+    fn crash_requeue_retags_waiting() {
+        let mut l = PhaseLedger::open_at(0, 0);
+        l.on_state_code(state::PREFILLING, false, 5);
+        l.on_state_code(state::WAITING, false, 50); // crash quiesce
+        l.on_crash_requeue(50);
+        l.on_state_code(state::PREFILLING, false, 200);
+        l.on_state_code(state::RUNNING, false, 300);
+        l.on_state_code(state::FINISHED, false, 350);
+        assert!(l.conserves());
+        assert_eq!(l.accum()[Phase::CrashRequeue as usize], 150);
+        assert_eq!(l.accum()[Phase::Queued as usize], 5);
+    }
+
+    #[test]
+    fn prefix_fetch_gates_until_ready() {
+        let mut l = PhaseLedger::open_at(0, 0);
+        l.on_state_code(state::PREFILLING, true, 40);
+        l.on_prefix_ready(100);
+        l.on_state_code(state::RUNNING, false, 160);
+        l.on_state_code(state::FINISHED, false, 200);
+        assert!(l.conserves());
+        assert_eq!(l.accum()[Phase::PrefixFetch as usize], 60);
+        assert_eq!(l.accum()[Phase::Prefill as usize], 60);
+    }
+
+    #[test]
+    fn reconstruction_matches_direct_ledger() {
+        // Drive a ledger directly...
+        let mut live = PhaseLedger::open_at(10, 10);
+        live.on_state_code(state::PREFILLING, false, 30);
+        live.on_state_code(state::RUNNING, false, 90);
+        live.on_state_code(state::STALLED, false, 120);
+        live.on_state_code(state::PENDING_OFFLOAD, false, 130);
+        live.on_state_code(state::OFFLOADED, false, 170);
+        live.on_tool_return(200);
+        live.on_state_code(state::PENDING_UPLOAD, false, 210);
+        live.on_state_code(state::UPLOADED, false, 260);
+        live.on_state_code(state::WAITING, false, 261);
+        live.on_state_code(state::RUNNING, false, 262);
+        live.on_state_code(state::FINISHED, false, 400);
+        // ...and replay the equivalent trace.
+        let recs = vec![
+            rec(10, 0, TraceEvent::Mark { rid: 1, what: mark::SPAWN, a: 7, b: 0 }),
+            rec(10, 1, TraceEvent::Mark { rid: 1, what: mark::QOS_WAIT, a: 10, b: 0 }),
+            rec(10, 2, TraceEvent::ReqState { rid: 1, state: state::WAITING }),
+            rec(30, 3, TraceEvent::ReqState { rid: 1, state: state::PREFILLING }),
+            rec(90, 4, TraceEvent::ReqState { rid: 1, state: state::RUNNING }),
+            rec(120, 5, TraceEvent::ReqState { rid: 1, state: state::STALLED }),
+            rec(130, 6, TraceEvent::ReqState { rid: 1, state: state::PENDING_OFFLOAD }),
+            rec(170, 7, TraceEvent::ReqState { rid: 1, state: state::OFFLOADED }),
+            rec(200, 8, TraceEvent::Mark { rid: 1, what: mark::FC_RETURN, a: 200, b: 0 }),
+            rec(210, 9, TraceEvent::ReqState { rid: 1, state: state::PENDING_UPLOAD }),
+            rec(260, 10, TraceEvent::ReqState { rid: 1, state: state::UPLOADED }),
+            rec(261, 11, TraceEvent::ReqState { rid: 1, state: state::WAITING }),
+            rec(262, 12, TraceEvent::ReqState { rid: 1, state: state::RUNNING }),
+            rec(400, 13, TraceEvent::ReqState { rid: 1, state: state::FINISHED }),
+        ];
+        let recon = reconstruct(&recs);
+        let got = &recon.reqs[&1];
+        assert_eq!(got.app, 7);
+        assert_eq!(got.ledger, live);
+        assert!(got.ledger.conserves());
+        // And the rendering round-trips byte-for-byte.
+        let mut m = BTreeMap::new();
+        m.insert(1u64, live);
+        assert_eq!(render_ledgers(&m), render_ledgers(&recon.finished()));
+    }
+
+    #[test]
+    fn critical_path_chains_through_spawn_edges() {
+        // app 5: rid 1 [0..100], spawns rid 2 [100..250] and rid 3
+        // [100..180] — chain must be 2 <- 1, not include 3.
+        let mk = |start: u64, end: u64| {
+            let mut l = PhaseLedger::open_at(start, 0);
+            l.on_state_code(state::RUNNING, false, start);
+            l.on_state_code(state::FINISHED, false, end);
+            l
+        };
+        let mut recon = Reconstruction::default();
+        recon.reqs.insert(1, ReqAttrib { ledger: mk(0, 100), app: 5, node: 0 });
+        recon.reqs.insert(2, ReqAttrib { ledger: mk(100, 250), app: 5, node: 1 });
+        recon.reqs.insert(3, ReqAttrib { ledger: mk(100, 180), app: 5, node: 2 });
+        let paths = critical_paths(&recon);
+        assert_eq!(paths.len(), 1);
+        assert_eq!(paths[0].app, 5);
+        assert_eq!(paths[0].chain, vec![2, 1]);
+        assert_eq!(paths[0].makespan_us, 250);
+        assert_eq!(paths[0].dominant_phase, Phase::Decode as usize);
+    }
+}

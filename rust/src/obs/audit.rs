@@ -30,6 +30,14 @@
 //!    followed by a `qos_admit` or `qos_shed` for the same arrival
 //!    (nothing left parked at end of trace), and a shed is terminal
 //!    (no admit after it).
+//! 9. **Phase conservation** — for every request with a `spawn` mark,
+//!    the traced state intervals tile `[spawn, finish]` exactly: the
+//!    first state event is `waiting` at the spawn instant, no state
+//!    event follows `finished`, a `qos_wait` mark lands only at spawn,
+//!    a prefix fetch starts only while the request is queued or
+//!    prefilling, and the [`super::attrib::PhaseLedger`] replayed from
+//!    the stream conserves (Σ phase durations == end-to-end latency,
+//!    integer µs, no gap, no overlap).
 //!
 //! Runs on in-memory records (tier-1 tests) or on an exported JSON file
 //! via [`TraceAuditor::audit_chrome_trace`] (the CI trace smoke), which
@@ -40,7 +48,10 @@ use std::fmt;
 
 use super::export::parse_chrome_trace;
 use super::recorder::format_record;
-use super::{fault, qos, scale, state, xfer, TraceEvent, TraceRecord};
+use super::{
+    attrib, fault, mark, qos, scale, state, xfer, TraceEvent,
+    TraceRecord,
+};
 
 /// First invariant violation found, in timeline order.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -74,6 +85,8 @@ pub struct AuditSummary {
     pub crashes: usize,
     /// QoS deferrals verified to resolve (admit or shed).
     pub qos_deferred_resolved: usize,
+    /// Requests whose replayed phase ledger conserved exactly (9).
+    pub phase_conserved: usize,
 }
 
 impl fmt::Display for AuditSummary {
@@ -82,14 +95,15 @@ impl fmt::Display for AuditSummary {
             f,
             "audit ok: {} records, {} shards, {} transfers paired, \
              {} requests finished, {} retirements, {} crashes, \
-             {} qos deferrals resolved",
+             {} qos deferrals resolved, {} phase ledgers conserved",
             self.records,
             self.shards,
             self.transfers,
             self.finished_requests,
             self.retirements,
             self.crashes,
-            self.qos_deferred_resolved
+            self.qos_deferred_resolved,
+            self.phase_conserved
         )
     }
 }
@@ -132,6 +146,11 @@ impl TraceAuditor {
         // QoS: arrivals parked in the gate, and terminal sheds (8).
         let mut qos_open: BTreeMap<u32, u64> = BTreeMap::new();
         let mut qos_shed_seqs: BTreeSet<u32> = BTreeSet::new();
+        // Phase conservation (9): spawn instants and the latest state
+        // per rid. Structural checks run inline; the ledger replay
+        // itself runs once at end of trace.
+        let mut spawn_at: BTreeMap<u64, u64> = BTreeMap::new();
+        let mut rid_last_state: BTreeMap<u64, u8> = BTreeMap::new();
 
         let err = |i: usize, r: &TraceRecord, msg: String| AuditError {
             index: Some(i),
@@ -231,6 +250,31 @@ impl TraceAuditor {
                         }
                     }
                     if kind == xfer::PREFIX_HIT {
+                        // (9) A gating fetch belongs to admission: it
+                        // may start only while the request is queued
+                        // or prefilling, never mid-decode or
+                        // mid-stall.
+                        match rid_last_state.get(&rid) {
+                            None
+                            | Some(&state::WAITING)
+                            | Some(&state::PREFILLING) => {}
+                            Some(&s) => {
+                                return Err(err(
+                                    i,
+                                    r,
+                                    format!(
+                                        "request {rid} prefix fetch \
+                                         starts while {} (fetch \
+                                         gating must precede \
+                                         prefill)",
+                                        state::NAMES
+                                            .get(s as usize)
+                                            .copied()
+                                            .unwrap_or("?")
+                                    ),
+                                ));
+                            }
+                        }
                         *pending_prefix.entry(rid).or_insert(0) += 1;
                     }
                 }
@@ -287,10 +331,78 @@ impl TraceAuditor {
                             ),
                         ));
                     }
+                    // (9) The state stream tiles [spawn, finish]:
+                    // nothing after finished, and for spawn-marked
+                    // requests the first interval opens as `waiting`
+                    // at the spawn instant (no gap before spawn).
+                    if rid_last_state.get(&rid)
+                        == Some(&state::FINISHED)
+                    {
+                        return Err(err(
+                            i,
+                            r,
+                            format!(
+                                "request {rid} has a state event \
+                                 after finished (tiling must end at \
+                                 finish)"
+                            ),
+                        ));
+                    }
+                    if let Some(&at) = spawn_at.get(&rid) {
+                        if !rid_last_state.contains_key(&rid)
+                            && (st != state::WAITING
+                                || r.at_us != at)
+                        {
+                            return Err(err(
+                                i,
+                                r,
+                                format!(
+                                    "request {rid} first state must \
+                                     be waiting at its spawn \
+                                     instant ({at}us)"
+                                ),
+                            ));
+                        }
+                    }
+                    rid_last_state.insert(rid, st);
                     if st == state::FINISHED {
                         summary.finished_requests += 1;
                     }
                 }
+                TraceEvent::Mark { rid, what, .. } => match what {
+                    mark::SPAWN => {
+                        if rid_last_state.contains_key(&rid) {
+                            return Err(err(
+                                i,
+                                r,
+                                format!(
+                                    "request {rid} has state events \
+                                     before its spawn mark"
+                                ),
+                            ));
+                        }
+                        spawn_at.insert(rid, r.at_us);
+                    }
+                    mark::QOS_WAIT => {
+                        // The gate wait happened pre-spawn, so its
+                        // mark may only land at the spawn instant,
+                        // before the request's first state event —
+                        // well before any prefilling.
+                        if spawn_at.get(&rid) != Some(&r.at_us)
+                            || rid_last_state.contains_key(&rid)
+                        {
+                            return Err(err(
+                                i,
+                                r,
+                                format!(
+                                    "request {rid} qos_wait mark is \
+                                     not at its spawn instant"
+                                ),
+                            ));
+                        }
+                    }
+                    _ => {}
+                },
                 TraceEvent::Autoscale { action, shard, .. } => {
                     if action == scale::RETIRE {
                         retired.insert(shard);
@@ -391,11 +503,92 @@ impl TraceAuditor {
                 ),
             });
         }
+        // (9) Replay the phase ledger of every spawn-marked request
+        // through the same transitions the live engine drives and
+        // require exact conservation on the finished ones: Σ phase
+        // durations == end − start, integer µs — the state intervals
+        // tiled [spawn, finish] with no gap and no overlap.
+        let recon = attrib::reconstruct(&recs);
+        for (rid, a) in &recon.reqs {
+            if !a.ledger.is_finished() {
+                continue;
+            }
+            if !a.ledger.conserves() {
+                return Err(AuditError {
+                    index: None,
+                    message: format!(
+                        "request {rid} phase ledger does not \
+                         conserve: sum {} != e2e {} (span {}..{})",
+                        a.ledger.total_us(),
+                        a.ledger
+                            .end_us()
+                            .saturating_sub(a.ledger.start_us()),
+                        a.ledger.start_us(),
+                        a.ledger.end_us()
+                    ),
+                });
+            }
+            summary.phase_conserved += 1;
+        }
         summary.shards = last
             .keys()
             .filter(|&&s| s != super::CLUSTER_SHARD)
             .count();
         Ok(summary)
+    }
+
+    /// Per-event-type counts plus transfer span-duration statistics
+    /// (min/p50/p99 µs per transfer kind) — the `tokencake audit
+    /// --trace FILE --summary` report. Deterministic: BTreeMap
+    /// ordering, integer µs.
+    pub fn deep_summary(records: &[TraceRecord]) -> String {
+        let mut recs: Vec<TraceRecord> = records.to_vec();
+        recs.sort_by_key(|r| (r.at_us, r.shard, r.seq));
+        let mut counts: BTreeMap<&'static str, usize> =
+            BTreeMap::new();
+        let mut open: BTreeMap<(u32, u64), (u64, u8)> =
+            BTreeMap::new();
+        let mut durs: BTreeMap<u8, Vec<u64>> = BTreeMap::new();
+        for r in &recs {
+            *counts.entry(event_label(&r.ev)).or_insert(0) += 1;
+            match r.ev {
+                TraceEvent::TransferStart { xfer: id, kind, .. } => {
+                    open.insert((r.shard, id), (r.at_us, kind));
+                }
+                TraceEvent::TransferEnd { xfer: id, .. } => {
+                    if let Some((start, kind)) =
+                        open.remove(&(r.shard, id))
+                    {
+                        durs.entry(kind)
+                            .or_default()
+                            .push(r.at_us.saturating_sub(start));
+                    }
+                }
+                _ => {}
+            }
+        }
+        let mut out = format!("records={}\nevent counts:\n", recs.len());
+        for (k, v) in &counts {
+            out.push_str(&format!("  {k:<16} {v}\n"));
+        }
+        out.push_str("transfer spans (us):\n");
+        for (kind, mut d) in durs {
+            d.sort_unstable();
+            let pick = |d: &[u64], p: f64| -> u64 {
+                let idx = ((d.len() - 1) as f64 * p / 100.0).round()
+                    as usize;
+                d[idx]
+            };
+            out.push_str(&format!(
+                "  {:<16} n={} min={} p50={} p99={}\n",
+                xfer::NAMES.get(kind as usize).copied().unwrap_or("?"),
+                d.len(),
+                d[0],
+                pick(&d, 50.0),
+                pick(&d, 99.0),
+            ));
+        }
+        out
     }
 
     /// Parse an exported Chrome trace document (schema validation) and
@@ -408,6 +601,29 @@ impl TraceAuditor {
             message: format!("schema: {e}"),
         })?;
         Self::audit(&records)
+    }
+}
+
+/// Stable per-variant label for the `--summary` counts.
+fn event_label(ev: &TraceEvent) -> &'static str {
+    match ev {
+        TraceEvent::ReqState { .. } => "req_state",
+        TraceEvent::TransferStart { .. } => "transfer_start",
+        TraceEvent::TransferEnd { .. } => "transfer_end",
+        TraceEvent::Prefix { .. } => "prefix",
+        TraceEvent::SpatialPlan { .. } => "spatial_plan",
+        TraceEvent::Preempt { .. } => "preempt",
+        TraceEvent::PlannerGate { .. } => "planner_gate",
+        TraceEvent::PressureBand { .. } => "pressure_band",
+        TraceEvent::GpuSample { .. } => "gpu_sample",
+        TraceEvent::RouteDecision { .. } => "route",
+        TraceEvent::MigrationBatch { .. } => "migration_batch",
+        TraceEvent::Autoscale { .. } => "autoscale",
+        TraceEvent::Fault { .. } => "fault",
+        TraceEvent::Requeue { .. } => "requeue",
+        TraceEvent::Qos { .. } => "qos",
+        TraceEvent::Mark { .. } => "mark",
+        TraceEvent::Gauge { .. } => "gauge",
     }
 }
 
@@ -614,6 +830,92 @@ mod tests {
         c.qos(9, 2, qos::ADMIT, 10);
         let e = TraceAuditor::audit(c.records()).unwrap_err();
         assert!(e.message.contains("shed is terminal"), "{e}");
+    }
+
+    #[test]
+    fn phase_conservation_passes_for_marked_request() {
+        let mut s = TraceSink::default();
+        s.enable();
+        s.advance(10);
+        s.mark(1, super::super::mark::SPAWN, 7, 0);
+        s.mark(1, super::super::mark::QOS_WAIT, 5, 0);
+        s.req_state(1, state::WAITING);
+        s.advance(40);
+        s.req_state(1, state::PREFILLING);
+        s.advance(90);
+        s.req_state(1, state::RUNNING);
+        s.advance(200);
+        s.req_state(1, state::FINISHED);
+        let sum = TraceAuditor::audit(s.records()).unwrap();
+        assert_eq!(sum.phase_conserved, 1);
+        assert_eq!(sum.finished_requests, 1);
+    }
+
+    #[test]
+    fn state_after_finished_fails() {
+        let mut s = TraceSink::default();
+        s.enable();
+        s.advance(10);
+        s.req_state(3, state::WAITING);
+        s.advance(20);
+        s.req_state(3, state::FINISHED);
+        s.advance(30);
+        s.req_state(3, state::RUNNING);
+        let e = TraceAuditor::audit(s.records()).unwrap_err();
+        assert!(e.message.contains("after finished"), "{e}");
+    }
+
+    #[test]
+    fn gap_before_spawn_fails() {
+        // First state event later than the spawn mark = a gap the
+        // ledger could never account for.
+        let mut s = TraceSink::default();
+        s.enable();
+        s.advance(10);
+        s.mark(4, super::super::mark::SPAWN, 1, 0);
+        s.advance(25);
+        s.req_state(4, state::WAITING);
+        let e = TraceAuditor::audit(s.records()).unwrap_err();
+        assert!(e.message.contains("spawn instant"), "{e}");
+    }
+
+    #[test]
+    fn qos_wait_mark_away_from_spawn_fails() {
+        let mut s = TraceSink::default();
+        s.enable();
+        s.advance(10);
+        s.mark(5, super::super::mark::SPAWN, 1, 0);
+        s.req_state(5, state::WAITING);
+        s.advance(50);
+        s.mark(5, super::super::mark::QOS_WAIT, 40, 0);
+        let e = TraceAuditor::audit(s.records()).unwrap_err();
+        assert!(e.message.contains("qos_wait"), "{e}");
+    }
+
+    #[test]
+    fn prefix_fetch_mid_decode_fails() {
+        let mut s = TraceSink::default();
+        s.enable();
+        s.advance(10);
+        s.req_state(6, state::WAITING);
+        s.req_state(6, state::PREFILLING);
+        s.advance(20);
+        s.req_state(6, state::RUNNING);
+        s.advance(30);
+        s.transfer_start(0, 6, xfer::PREFIX_HIT, false, 4, 100);
+        let e = TraceAuditor::audit(s.records()).unwrap_err();
+        assert!(e.message.contains("fetch gating"), "{e}");
+    }
+
+    #[test]
+    fn deep_summary_counts_events_and_spans() {
+        let recs = clean_timeline();
+        let s = TraceAuditor::deep_summary(&recs);
+        assert!(s.contains("req_state"), "{s}");
+        assert!(s.contains("transfer_start"), "{s}");
+        assert!(s.contains("request "), "{s}");
+        assert!(s.contains("n=2"), "{s}");
+        assert!(s.contains("p99="), "{s}");
     }
 
     #[test]

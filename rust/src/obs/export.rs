@@ -23,7 +23,7 @@
 use std::collections::BTreeSet;
 
 use super::{
-    fault, planner, prefix, qos, scale, state, xfer, TraceEvent,
+    fault, mark, planner, prefix, qos, scale, state, xfer, TraceEvent,
     TraceRecord, CLUSTER_SHARD,
 };
 
@@ -325,6 +325,49 @@ pub fn export_chrome_trace(records: &[TraceRecord]) -> String {
                     ("tier", tier as i64),
                     ("what", what as i64),
                     ("wait_us", wait_us as i64),
+                ],
+            ),
+            TraceEvent::Mark { rid, what, a, b } => line(
+                &format!(
+                    "mark_{}",
+                    mark::NAMES
+                        .get(what as usize)
+                        .copied()
+                        .unwrap_or("?")
+                ),
+                Some("mark"),
+                "i",
+                rec,
+                None,
+                &[
+                    ("rid", rid as i64),
+                    ("what", what as i64),
+                    ("a", a as i64),
+                    ("b", b as i64),
+                ],
+            ),
+            // Scheduler gauges render as one counter track per shard;
+            // the line still carries `rec`, so parsing stays lossless.
+            TraceEvent::Gauge {
+                running,
+                stalled,
+                offloaded,
+                q_int,
+                q_std,
+                q_batch,
+            } => line(
+                "sched_gauge",
+                None,
+                "C",
+                rec,
+                None,
+                &[
+                    ("running", running as i64),
+                    ("stalled", stalled as i64),
+                    ("offloaded", offloaded as i64),
+                    ("q_int", q_int as i64),
+                    ("q_std", q_std as i64),
+                    ("q_batch", q_batch as i64),
                 ],
             ),
         };

@@ -43,12 +43,14 @@
 //! vocabulary — and the compact encoding the auditor round-trips —
 //! in one place.
 
+pub mod attrib;
 pub mod audit;
 pub mod export;
 pub mod recorder;
 
+pub use attrib::{Phase, PhaseLedger, NPHASES};
 pub use audit::{AuditError, AuditSummary, TraceAuditor};
-pub use export::export_chrome_trace;
+pub use export::{export_chrome_trace, parse_chrome_trace};
 pub use recorder::FlightRecorder;
 
 /// Sink shard index used by the cluster control plane (router,
@@ -179,6 +181,29 @@ pub mod qos {
     pub const NAMES: [&str; 4] = ["admit", "defer", "shed", "age"];
 }
 
+/// Attribution mark codes (see [`TraceEvent::Mark`] and `obs::attrib`).
+/// Marks carry the per-request facts the phase ledger needs that state
+/// transitions alone can't encode — so `analyze --trace` can rebuild
+/// the ledger from the exported trace byte-for-byte.
+pub mod mark {
+    /// The request's pending tool call returned. `a` = the return
+    /// instant in µs (the record itself may be stamped later when the
+    /// finish was buffered behind a mid-wire migration); `b` unused.
+    pub const FC_RETURN: u8 = 0;
+    /// Crash recovery re-queued this request: its next Waiting interval
+    /// is recompute-after-crash, not ordinary queueing. `a`/`b` unused.
+    pub const CRASH_REQUEUE: u8 = 1;
+    /// Request spawned. `a` = owning app id, `b` = workflow node id —
+    /// the app→request→DAG-node mapping critical-path analysis needs.
+    pub const SPAWN: u8 = 2;
+    /// The app carrying this request waited `a` µs in the QoS gate
+    /// before its root requests spawned (emitted only when `a` > 0).
+    pub const QOS_WAIT: u8 = 3;
+
+    pub const NAMES: [&str; 4] =
+        ["fc_return", "crash_requeue", "spawn", "qos_wait"];
+}
+
 // ---------------------------------------------------------------------
 // Event alphabet
 // ---------------------------------------------------------------------
@@ -252,6 +277,19 @@ pub enum TraceEvent {
         what: u8,
         wait_us: u64,
     },
+    /// Attribution mark on request `rid` (see [`mark`]): a per-request
+    /// fact the phase ledger needs beyond the state-transition stream.
+    Mark { rid: u64, what: u8, a: u64, b: u64 },
+    /// Periodic scheduler gauge sample (counter tracks): batch
+    /// occupancy split by lifecycle class plus per-tier queue depth.
+    Gauge {
+        running: u32,
+        stalled: u32,
+        offloaded: u32,
+        q_int: u32,
+        q_std: u32,
+        q_batch: u32,
+    },
 }
 
 impl TraceEvent {
@@ -273,6 +311,8 @@ impl TraceEvent {
             TraceEvent::Fault { .. } => 12,
             TraceEvent::Requeue { .. } => 13,
             TraceEvent::Qos { .. } => 14,
+            TraceEvent::Mark { .. } => 15,
+            TraceEvent::Gauge { .. } => 16,
         }
     }
 }
@@ -371,6 +411,19 @@ impl TraceRecord {
                 what,
                 wait_us,
             } => format!("{app_seq}:{tier}:{what}:{wait_us}"),
+            TraceEvent::Mark { rid, what, a, b } => {
+                format!("{rid}:{what}:{a}:{b}")
+            }
+            TraceEvent::Gauge {
+                running,
+                stalled,
+                offloaded,
+                q_int,
+                q_std,
+                q_batch,
+            } => format!(
+                "{running}:{stalled}:{offloaded}:{q_int}:{q_std}:{q_batch}"
+            ),
         };
         format!("{head}:{tail}")
     }
@@ -462,6 +515,20 @@ impl TraceRecord {
                 what: u8::try_from(next_u64(&mut it)?).ok()?,
                 wait_us: next_u64(&mut it)?,
             },
+            15 => TraceEvent::Mark {
+                rid: next_u64(&mut it)?,
+                what: u8::try_from(next_u64(&mut it)?).ok()?,
+                a: next_u64(&mut it)?,
+                b: next_u64(&mut it)?,
+            },
+            16 => TraceEvent::Gauge {
+                running: u32::try_from(next_u64(&mut it)?).ok()?,
+                stalled: u32::try_from(next_u64(&mut it)?).ok()?,
+                offloaded: u32::try_from(next_u64(&mut it)?).ok()?,
+                q_int: u32::try_from(next_u64(&mut it)?).ok()?,
+                q_std: u32::try_from(next_u64(&mut it)?).ok()?,
+                q_batch: u32::try_from(next_u64(&mut it)?).ok()?,
+            },
             _ => return None,
         };
         if it.next().is_some() {
@@ -533,6 +600,15 @@ impl TraceSink {
     #[inline]
     pub fn active(&self) -> bool {
         self.enabled || self.flight_armed || cfg!(debug_assertions)
+    }
+
+    /// The sink's current clock stamp. The phase ledger timestamps its
+    /// transitions from this (not a separately plumbed `now`) so live
+    /// attribution and trace-reconstructed attribution see the exact
+    /// same instants.
+    #[inline]
+    pub fn now_us(&self) -> u64 {
+        self.now_us
     }
 
     /// Everything captured so far, in emission order.
@@ -733,6 +809,37 @@ impl TraceSink {
             wait_us,
         });
     }
+
+    #[inline]
+    pub fn mark(&mut self, rid: u64, what: u8, a: u64, b: u64) {
+        if !self.active() {
+            return;
+        }
+        self.push(TraceEvent::Mark { rid, what, a, b });
+    }
+
+    #[inline]
+    pub fn gauge(
+        &mut self,
+        running: u32,
+        stalled: u32,
+        offloaded: u32,
+        q_int: u32,
+        q_std: u32,
+        q_batch: u32,
+    ) {
+        if !self.active() {
+            return;
+        }
+        self.push(TraceEvent::Gauge {
+            running,
+            stalled,
+            offloaded,
+            q_int,
+            q_std,
+            q_batch,
+        });
+    }
 }
 
 /// Merge per-sink streams into one deterministic timeline, stable-sorted
@@ -814,6 +921,20 @@ mod tests {
                 tier: 2,
                 what: qos::AGE,
                 wait_us: 1_500_000,
+            },
+            TraceEvent::Mark {
+                rid: 7,
+                what: mark::FC_RETURN,
+                a: 42_000,
+                b: 0,
+            },
+            TraceEvent::Gauge {
+                running: 8,
+                stalled: 2,
+                offloaded: 1,
+                q_int: 0,
+                q_std: 3,
+                q_batch: 5,
             },
         ];
         for (i, ev) in evs.iter().enumerate() {

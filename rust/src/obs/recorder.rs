@@ -7,7 +7,7 @@
 //! fill, so arming it adds no steady-state allocation.
 
 use super::{
-    fault, planner, prefix, qos, scale, state, xfer, TraceEvent,
+    fault, mark, planner, prefix, qos, scale, state, xfer, TraceEvent,
     TraceRecord,
 };
 
@@ -179,6 +179,21 @@ pub fn format_record(r: &TraceRecord) -> String {
         } => format!(
             "qos {} app#{app_seq} tier={tier} wait={wait_us}us",
             qos::NAMES.get(what as usize).copied().unwrap_or("?")
+        ),
+        TraceEvent::Mark { rid, what, a, b } => format!(
+            "mark {} req={rid} a={a} b={b}",
+            mark::NAMES.get(what as usize).copied().unwrap_or("?")
+        ),
+        TraceEvent::Gauge {
+            running,
+            stalled,
+            offloaded,
+            q_int,
+            q_std,
+            q_batch,
+        } => format!(
+            "gauge running={running} stalled={stalled} \
+             offloaded={offloaded} q=[{q_int},{q_std},{q_batch}]"
         ),
     };
     format!("  [{:>12}us {shard} #{}] {body}", r.at_us, r.seq)

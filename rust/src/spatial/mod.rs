@@ -343,7 +343,7 @@ pub fn admit(st: &mut ServeState, now_us: u64) {
                 } else {
                     crate::coordination::state_code(granted)
                 };
-                st.trace.req_state(rid.0, code);
+                st.note_direct_transition(rid, code);
                 st.epochs.spatial += 1; // per-type residency shifted
                 admitted.push(rid);
                 slots -= 1;

@@ -94,6 +94,9 @@ pub fn call_finish(
     // Same observation, template-keyed: the autoscaler's KV-lifetime
     // predictor learns how long this template's calls stall its cache.
     st.note_fc_lifetime(rid, now_us - started);
+    // Attribution: the stall stops being hideable at the return instant —
+    // any residual absence-from-GPU after this point is *exposed*.
+    st.note_tool_return(rid, now_us);
 
     match state {
         ReqState::Stalled => {
@@ -361,10 +364,17 @@ pub fn on_transfer_done(
             if pinned {
                 st.prefix.unpin(key);
             }
+            let mut ungated = false;
             if let Some(r) = st.reqs.get_mut(&RequestId(t.req_id)) {
                 if r.prefix_xfer == Some(xfer) {
                     r.prefix_xfer = None;
+                    ungated = true;
                 }
+            }
+            if ungated {
+                // Attribution: prefix-fetch gating ends; prefill proper
+                // starts at the landing instant.
+                st.note_prefix_ready(RequestId(t.req_id));
             }
             return None;
         }

@@ -129,6 +129,37 @@ fn migration_accounting_closed() {
     }
 }
 
+/// Latency attribution pins the temporal scheduler's effect: with the
+/// offload path on, part of the function-call stall time is hidden
+/// behind the D2H/H2D wire (`stall_hidden_frac > 0`); with no offload
+/// path the same FC-heavy workload holds every stall on-GPU, so the
+/// hidden fraction is exactly zero.
+#[test]
+fn stall_hidden_fraction_tracks_temporal_scheduling() {
+    let tc = run(Mode::TokenCake, 1.0, 10, 0.05, 9);
+    assert!(!tc.truncated);
+    assert!(tc.metrics.offload_count > 0, "pressure must force offloads");
+    let f = tc.metrics.stall_hidden_frac();
+    assert!(
+        f > 0.0,
+        "temporal offload must hide some stall time (frac={f})"
+    );
+    let vl = run(Mode::Vllm, 1.0, 10, 0.05, 9);
+    assert!(!vl.truncated);
+    assert_eq!(
+        vl.metrics.stall_hidden_frac(),
+        0.0,
+        "no offload path, no hidden stall time"
+    );
+    // Both runs stall on function calls, so the denominator is real:
+    // held stall time accrues even when nothing is hidden.
+    assert!(
+        vl.metrics.phase_us[tokencake::obs::Phase::FcStallHeld as usize]
+            > 0,
+        "vLLM run never held a stalled cache?"
+    );
+}
+
 /// Forecaster learns through the engine: after a run, per-function-type
 /// observations exist for every tool the workload used.
 #[test]

@@ -113,6 +113,75 @@ fn chrome_export_round_trips_losslessly() {
     assert_eq!(export_chrome_trace(&records), doc);
 }
 
+/// End-to-end attribution parity under the hard cases — QoS deferral
+/// and a planned mid-run crash: every finished request's phase ledger
+/// conserves (Σ phases == end-to-end latency, exactly), and replaying
+/// the exported trace through `obs::attrib::reconstruct` reproduces
+/// the live ledgers byte-for-byte. This is `--assert-attrib` in test
+/// form.
+#[test]
+fn analyze_from_trace_matches_live_ledger() {
+    use tokencake::obs::attrib;
+    use tokencake::qos::Tier;
+
+    let serve = ServeConfig::default()
+        .with_mode(Mode::TokenCake)
+        .with_seed(43)
+        .with_gpu_mem_frac(0.05);
+    let mut cfg = ClusterConfig::default()
+        .with_serve(serve)
+        .with_shards(4)
+        .with_placement(PlacementPolicy::AgentAffinity);
+    cfg.faults.enabled = true;
+    cfg.faults.crash_schedule = "1@3000".into();
+    cfg.qos.enabled = true;
+    let w = ClusterWorkload::mixed(
+        &[
+            (templates::code_writer(), 2.0),
+            (templates::deep_research(), 1.0),
+        ],
+        2.0,
+        16,
+    )
+    .with_dataset(Dataset::D1)
+    .with_tool_noise(0.25)
+    .with_tiers(&[Tier::Interactive, Tier::Batch]);
+
+    let mut eng = ClusterEngine::new(cfg);
+    eng.enable_trace();
+    let rep = eng.run(&w);
+    assert!(!rep.truncated);
+    assert!(rep.crashes > 0, "planned crash must have executed");
+
+    // Conservation + live-vs-trace byte equality, engine-checked.
+    eng.check_attrib().expect("attribution check must pass");
+
+    // And verified independently through the public pipeline.
+    let live = eng.render_ledgers();
+    assert!(!live.is_empty(), "no finished ledgers to compare");
+    let records = parse_chrome_trace(&eng.export_trace())
+        .expect("export must parse");
+    let recon = attrib::reconstruct(&records);
+    let from_trace = attrib::render_ledgers(&recon.finished());
+    assert_eq!(live, from_trace, "trace replay diverged from live");
+
+    // The same trace satisfies auditor rule 9 (phase conservation),
+    // and critical paths come out deterministic and non-empty.
+    let s = TraceAuditor::audit(&records)
+        .expect("attribution trace must audit clean");
+    assert!(s.phase_conserved > 0, "rule 9 audited no ledgers");
+    let paths = attrib::critical_paths(&recon);
+    assert!(!paths.is_empty());
+    assert!(paths.iter().all(|p| p.makespan_us > 0));
+
+    // Aggregates derived from the ledger flow into the report.
+    assert!(rep.aggregate.stall_hidden_frac() >= 0.0);
+    assert!(rep.aggregate.queue_wait_us_p99() > 0 || rep.qos_enabled);
+    let prom = rep.prometheus_text();
+    assert!(prom.contains("tokencake_phase_us{phase=\"decode\"}"));
+    assert!(prom.contains("tokencake_stall_hidden_frac_milli"));
+}
+
 /// With tracing never enabled, a run records nothing: the export holds
 /// no events (zero-capture is the default, not a filtered view).
 #[test]

@@ -168,6 +168,38 @@ done
   printf '  ]\n}\n'
 } > "$OUT/BENCH_9.json"
 
+# ---- BENCH_10: latency attribution (phase ledger headlines) ----------
+# The same pressured 4-shard workload three ways, every row carrying
+# the attribution headlines (stall_hidden_frac, exposed_upload_us_p99,
+# queue_wait_us_p99) and each traced run passing --assert-attrib (exact
+# per-request phase conservation + byte-identical trace replay):
+#   - tokencake: temporal offload on — part of the FC stall hides
+#     behind the wire, stall_hidden_frac > 0;
+#   - agent-only: no offload path — the same stalls are all held
+#     on-GPU, stall_hidden_frac == 0 (the attribution control);
+#   - tokencake + QoS flood: queue_wait_us_p99 picks up the deferred
+#     admission wait the gate imposes on the Batch tier.
+ATTR="--shards 4 --policy affinity --qps 2.0 --apps 48 --frac 0.05 --seed 1"
+$RUN cluster $ATTR --mode tokencake --assert-attrib \
+  --json /tmp/bench10_tc.json --json-name attrib-tokencake \
+  --metrics-out "$OUT/BENCH_10.prom"
+$RUN cluster $ATTR --mode agent \
+  --json /tmp/bench10_agent.json --json-name attrib-agent-only
+$RUN cluster $ATTR --mode tokencake --qps 6.0 --mix cw:1,dr:5 \
+  --qos --tiers interactive,batch --qos-rates 50,4,0.25 \
+  --slo-ms 60000,120000,600000 --qos-age-ms 4000 --assert-attrib \
+  --json /tmp/bench10_qos.json --json-name attrib-qos-flood
+{
+  printf '{\n  "benchmark": "tokencake_latency_attribution",\n'
+  printf '  "workload": "mix cw:2,dr:1, 2.0 qps, 48 apps, frac 0.05, seed 1, 4 shards affinity; tokencake vs agent-only (offload path off), plus a QoS Batch flood (6 qps, cw:1,dr:5, tiered); traced runs pass --assert-attrib (exact phase conservation, trace replay == live ledger)",\n'
+  printf '  "metric": "stall_hidden_frac (tokencake > 0, agent-only == 0), exposed_upload_us_p99 (the un-hidden wire tail), queue_wait_us_p99 (grows under the QoS flood)",\n'
+  printf '  "runs": [\n'
+  sed -e 's/[[:space:]]*$//' /tmp/bench10_tc.json | sed -e '$ s/$/,/'
+  sed -e 's/[[:space:]]*$//' /tmp/bench10_agent.json | sed -e '$ s/$/,/'
+  cat /tmp/bench10_qos.json
+  printf '  ]\n}\n'
+} > "$OUT/BENCH_10.json"
+
 echo "wrote $OUT/BENCH_2.json $OUT/BENCH_3.json $OUT/BENCH_4.json" \
      "$OUT/BENCH_4_baseline.json $OUT/BENCH_5.json $OUT/BENCH_7.json" \
-     "$OUT/BENCH_8.json $OUT/BENCH_9.json"
+     "$OUT/BENCH_8.json $OUT/BENCH_9.json $OUT/BENCH_10.json"
